@@ -1,0 +1,73 @@
+//! Fig. 5 harness: weak-scaling series for every Table IV benchmark,
+//! Deinsum (compute + comm split) vs the CTF-like baseline.
+//!
+//! Prints one sub-table per benchmark with P = 1..=max_nodes (powers of
+//! two), i.e. the same series the paper plots, plus the §VI-B headline
+//! numbers (per-benchmark speedup at the largest P and the geometric
+//! mean over all points).
+//!
+//! ```bash
+//! cargo run --release --example weak_scaling -- [--nodes 64] [--size-factor 16] [--filter MTTKRP]
+//! ```
+
+use deinsum::bench_support::{self, geomean, header, row};
+use deinsum::runtime::KernelEngine;
+use deinsum::sim::NetworkModel;
+
+fn flag(args: &[String], name: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+}
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let max_nodes: usize =
+        flag(&args, "--nodes").and_then(|v| v.parse().ok()).unwrap_or(64);
+    let sf: usize =
+        flag(&args, "--size-factor").and_then(|v| v.parse().ok()).unwrap_or(16);
+    let filter = flag(&args, "--filter").unwrap_or_default();
+
+    let engine = match flag(&args, "--artifacts") {
+        Some(dir) => KernelEngine::pjrt(&dir).unwrap_or_else(|_| KernelEngine::native()),
+        None => KernelEngine::native(),
+    };
+    let net = NetworkModel::aries();
+
+    println!(
+        "Fig. 5 reproduction (size-factor {sf}; paper sizes = 1): weak scaling to {max_nodes} simulated nodes\n"
+    );
+    let mut all_points = Vec::new();
+    let mut final_speedups = Vec::new();
+    for def in bench_support::suite(sf) {
+        if !filter.is_empty() && !def.name.contains(&filter) {
+            continue;
+        }
+        println!("== {} ({}) ==", def.name, def.expr);
+        println!("{}", header());
+        let mut p = 1usize;
+        let mut last = None;
+        while p <= max_nodes {
+            let (pt, _, _) = bench_support::run_point(&def, p, &engine, net)?;
+            println!("{}", row(&pt));
+            last = Some(pt.speedup);
+            all_points.push(pt);
+            p *= 2;
+        }
+        if let Some(s) = last {
+            final_speedups.push((def.name.clone(), s));
+        }
+        println!();
+    }
+
+    println!("== headline (paper §VI-B analogue) ==");
+    for (name, s) in &final_speedups {
+        println!("  {name:<14} speedup at P={max_nodes}: {s:.2}x");
+    }
+    println!(
+        "  geometric mean over all points: {:.2}x (paper: 4.18x on Piz Daint)",
+        geomean(&all_points)
+    );
+    Ok(())
+}

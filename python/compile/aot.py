@@ -1,0 +1,157 @@
+"""AOT compiler: lower every local-tile kernel variant to HLO text.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs:
+    artifacts/<name>.hlo.txt     one module per (op, shape, dtype) variant
+    artifacts/manifest.json      variant metadata the Rust runtime indexes
+
+The Rust runtime buckets ragged tile shapes up to the nearest variant by
+zero-padding (safe for all multiply-add contractions) and falls back to
+native Rust kernels when no bucket fits.
+
+Usage: python -m compile.aot [--out-dir ../artifacts] [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+DTYPES = {"f32": jnp.float32}
+# Paper Table V: rank R = 24 for all MTTKRP/TTMc benchmarks.
+RANK = 24
+
+
+def to_hlo_text(lowered) -> str:
+    """jax lowering -> XlaComputation -> HLO text (aot_recipe)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def variant_list(quick: bool = False):
+    """The AOT variant set.
+
+    GEMM buckets cover the MM-chain local tiles and the folded TTM stages;
+    MTTKRP buckets cover the fused-kernel local tiles at the weak-scaling
+    sizes of Table V (per-rank blocks of the initial 1024^3 / 1024^5 and
+    60^5 problems across power-of-two grids).
+    """
+    v: list[dict] = []
+
+    gemm_buckets = [64, 128, 256] if quick else [64, 128, 256, 512, 1024]
+    for b in gemm_buckets:
+        v.append({"op": "gemm", "m": b, "k": b, "n": b})
+    # Skinny GEMMs: (tile, fold) x (fold, R) shapes from MTTKRP/TTMc folds
+    # and the MM term of the worked example.
+    for m in ([128, 256] if quick else [128, 256, 512, 1024]):
+        v.append({"op": "gemm", "m": m, "k": m, "n": RANK})
+        v.append({"op": "gemm", "m": m, "k": RANK, "n": RANK})
+
+    mtt3 = [(64, 64, 64), (128, 128, 128)] if quick else [
+        (64, 64, 64),
+        (128, 128, 128),
+        (256, 256, 256),
+        (512, 256, 256),
+        (512, 512, 512),
+    ]
+    for dims in mtt3:
+        v.append({"op": "mttkrp", "dims": list(dims), "r": RANK})
+
+    mtt5 = [(16,) * 5] if quick else [(16,) * 5, (32,) * 5, (32, 16, 16, 16, 16)]
+    for dims in mtt5:
+        v.append({"op": "mttkrp", "dims": list(dims), "r": RANK})
+
+    krps = [(128, 128)] if quick else [(128, 128), (256, 256), (512, 512)]
+    for i0, i1 in krps:
+        v.append({"op": "krp", "i0": i0, "i1": i1, "r": RANK})
+
+    ttmc5 = [(16,) * 5] if quick else [(16,) * 5, (32,) * 5, (60, 30, 30, 30, 30)]
+    for dims in ttmc5:
+        v.append({"op": "ttmc", "dims": list(dims), "rs": [RANK] * 5, "mode": 0})
+
+    return v
+
+
+def variant_name(spec: dict, dtype: str) -> str:
+    op = spec["op"]
+    if op == "gemm":
+        core = f"{spec['m']}x{spec['k']}x{spec['n']}"
+    elif op == "mttkrp":
+        core = "x".join(map(str, spec["dims"])) + f"_r{spec['r']}"
+    elif op == "krp":
+        core = f"{spec['i0']}x{spec['i1']}_r{spec['r']}"
+    elif op == "ttmc":
+        core = "x".join(map(str, spec["dims"])) + "_m" + str(spec["mode"])
+    else:
+        raise ValueError(op)
+    return f"{op}_{core}_{dtype}"
+
+
+def build(spec: dict, dtype):
+    op = spec["op"]
+    if op == "gemm":
+        return model.build_gemm(spec["m"], spec["k"], spec["n"], dtype)
+    if op == "mttkrp":
+        return model.build_mttkrp(tuple(spec["dims"]), spec["r"], dtype)
+    if op == "krp":
+        return model.build_krp(spec["i0"], spec["i1"], spec["r"], dtype)
+    if op == "ttmc":
+        return model.build_ttmc(
+            tuple(spec["dims"]), tuple(spec["rs"]), spec["mode"], dtype
+        )
+    raise ValueError(op)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--quick", action="store_true", help="small variant set")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"format": "hlo-text-v1", "variants": []}
+    for spec in variant_list(args.quick):
+        for dname, dtype in DTYPES.items():
+            name = variant_name(spec, dname)
+            fn, arg_specs = build(spec, dtype)
+            lowered = fn.lower(*arg_specs)
+            text = to_hlo_text(lowered)
+            fname = f"{name}.hlo.txt"
+            path = os.path.join(args.out_dir, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            (out_spec,) = jax.eval_shape(fn, *arg_specs)
+            entry = dict(spec)
+            entry.update(
+                name=name,
+                dtype=dname,
+                file=fname,
+                sha256=hashlib.sha256(text.encode()).hexdigest()[:16],
+                inputs=[list(s.shape) for s in arg_specs],
+                output=list(out_spec.shape),
+            )
+            manifest["variants"].append(entry)
+            print(f"lowered {name}: {len(text)} chars")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest['variants'])} variants to {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""L1 Pallas kernels for Deinsum's local-tile hot spots.
+
+Three kernels cover every local computation the Rust coordinator schedules:
+
+- ``mttkrp``  — the paper's headline fused kernel (KRP + TDOT in one pass,
+  Sec. II-B / IV-E), tiled with the I/O-optimal block sizes.
+- ``gemm``    — tiled matmul; TTM / TTMc / MM-chain local work folds to it.
+- ``krp``     — explicit Khatri-Rao materialization, used only by the
+  CTF-like two-step baseline.
+
+All kernels are lowered with ``interpret=True`` (CPU PJRT cannot execute
+Mosaic custom-calls); the BlockSpecs still express the HBM<->VMEM schedule
+a real TPU lowering would use.
+"""
+
+from .gemm import gemm_pallas, make_gemm
+from .krp import krp_pallas, make_krp
+from .mttkrp import make_mttkrp, mttkrp_pallas, optimal_mttkrp_tiles
+
+__all__ = [
+    "gemm_pallas",
+    "krp_pallas",
+    "mttkrp_pallas",
+    "make_gemm",
+    "make_krp",
+    "make_mttkrp",
+    "optimal_mttkrp_tiles",
+]

@@ -1,0 +1,94 @@
+"""Tiled GEMM Pallas kernel.
+
+The local work of every binary contraction that is *not* a fused MTTKRP
+(TTM, TTMc stages, MM-chain stages, TDOT) folds to a matmul after a
+mode permutation (paper Sec. III-B), so this single kernel is the MXU
+workhorse.  Block sizes follow the classical I/O-optimal square tiling
+(rho = sqrt(S)/2, Sec. IV-A): Bm = Bn = Bk = sqrt(S/3) rounded to the MXU
+lane multiple.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-friendly rounding: real TPU tiles are multiples of (8, 128); under
+# interpret=True any size works, but we keep the discipline so the
+# BlockSpecs describe a realizable VMEM schedule.
+_LANE = 8
+
+
+def _round_block(b: int, n: int) -> int:
+    """Round block size to a multiple of _LANE, clamped to [1, n]."""
+    b = max(_LANE, (b // _LANE) * _LANE)
+    return min(b, n)
+
+
+def optimal_gemm_tiles(s: int, m: int, k: int, n: int) -> tuple[int, int, int]:
+    """Square I/O-optimal GEMM tiles: three equal blocks filling fast
+    memory S (classical sqrt(S/3) tiling)."""
+    b = max(1, int((s / 3) ** 0.5))
+    return (_round_block(b, m), _round_block(b, k), _round_block(b, n))
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def gemm_pallas(a, b, *, blocks=None, vmem=1 << 17):
+    """C[m,n] = A[m,k] @ B[k,n] as a tiled Pallas kernel.
+
+    blocks: optional (Bm, Bk, Bn); defaults to the I/O-optimal square tile
+    for a fast memory of `vmem` elements.  Dimensions must divide evenly
+    (the Rust coordinator pads tiles to bucket shapes before dispatch).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction mismatch {k} != {k2}"
+    if blocks is None:
+        blocks = optimal_gemm_tiles(vmem, m, k, n)
+    bm, bk, bn = (min(blocks[0], m), min(blocks[1], k), min(blocks[2], n))
+    # Fall back to full extent when the block does not divide the dim;
+    # keeps the kernel exact for ragged sizes (interpret mode).
+    if m % bm:
+        bm = m
+    if k % bk:
+        bk = k
+    if n % bn:
+        bn = n
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _gemm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=True,
+    )(a, b)
+
+
+def make_gemm(m: int, k: int, n: int, dtype=jnp.float32):
+    """Shape-specialized jittable GEMM for AOT lowering."""
+
+    @functools.partial(jax.jit, static_argnums=())
+    def fn(a, b):
+        return (gemm_pallas(a, b),)
+
+    specs = (
+        jax.ShapeDtypeStruct((m, k), dtype),
+        jax.ShapeDtypeStruct((k, n), dtype),
+    )
+    return fn, specs

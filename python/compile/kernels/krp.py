@@ -1,0 +1,61 @@
+"""Khatri-Rao product Pallas kernel (explicit materialization).
+
+Only the CTF-like two-step baseline materializes the KRP (paper Sec. IV-E
+shows this is communication-suboptimal); Deinsum's own schedule fuses it
+into the MTTKRP kernel.  We still ship it as a first-class kernel because
+the baseline must be a faithful comparator.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _krp_kernel(u0_ref, u1_ref, o_ref):
+    o_ref[...] = u0_ref[...][:, None, :] * u1_ref[...][None, :, :]
+
+
+def krp_pallas(u0, u1, *, blocks=None):
+    """out[i0, i1, r] = u0[i0, r] * u1[i1, r] (unflattened KRP).
+
+    VPU-only elementwise work; blocked over both row dims so each grid step
+    holds (B0 + B1 + B0*B1) * R elements in VMEM.
+    """
+    i0, r = u0.shape
+    i1, r2 = u1.shape
+    assert r == r2, f"rank mismatch {r} != {r2}"
+    if blocks is None:
+        blocks = (min(128, i0), min(128, i1))
+    b0, b1 = (min(blocks[0], i0), min(blocks[1], i1))
+    if i0 % b0:
+        b0 = i0
+    if i1 % b1:
+        b1 = i1
+    grid = (i0 // b0, i1 // b1)
+    return pl.pallas_call(
+        _krp_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b0, r), lambda i, j: (i, 0)),
+            pl.BlockSpec((b1, r), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((b0, b1, r), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((i0, i1, r), u0.dtype),
+        interpret=True,
+    )(u0, u1)
+
+
+def make_krp(i0: int, i1: int, r: int, dtype=jnp.float32):
+    """Shape-specialized jittable KRP for AOT lowering (flattened output,
+    matching the baseline's matricized use)."""
+
+    def fn(u0, u1):
+        return (krp_pallas(u0, u1).reshape(i0 * i1, r),)
+
+    specs = (
+        jax.ShapeDtypeStruct((i0, r), dtype),
+        jax.ShapeDtypeStruct((i1, r), dtype),
+    )
+    return jax.jit(fn), specs

@@ -1,0 +1,162 @@
+"""Fused MTTKRP Pallas kernel — the paper's compute hot-spot.
+
+Implements the mode-0, order-N Matricized Tensor Times Khatri-Rao Product
+
+    i0 i1 ... i_{N-1}, i1 r, ..., i_{N-1} r  ->  i0 r
+
+as a *single fused* kernel: the Khatri-Rao product of the factor tiles is
+formed in VMEM and immediately contracted against the matricized X tile on
+the MXU, never materializing the KRP in HBM.  This is exactly the fusion
+the paper's SOAP analysis proves I/O-optimal (Sec. IV-E): the two-step
+KRP-then-GEMM formulation used by CTF-like libraries moves an extra
+S^{1/6} factor of data.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's
+I/O-optimal tiling I = J = K = S^{1/3}, L = S^{2/3}/2 becomes the BlockSpec
+HBM<->VMEM schedule.  Each grid step loads one (Bi, B1, ..., B_{N-1})
+X-block plus skinny (Bm, R) factor blocks; the KRP is VPU elementwise work
+and the contraction is a (Bi, prod Bm) x (prod Bm, R) MXU matmul
+accumulating into a VMEM-resident (Bi, R) output block.
+
+Other modes are handled at L2 by a mode permutation of X (the paper does
+the same with HPTT transpositions).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_LANE = 8
+
+
+def optimal_mttkrp_tiles(s: int, dims: tuple[int, ...], r: int) -> tuple[int, ...]:
+    """Paper Sec. IV-E tiling, generalized to order N.
+
+    Order-3 closed form: I = J = K = S^{1/3} (the rank dim L = S^{2/3}/2 is
+    in practice >> R = 24, so R is never tiled).  For order N we give each
+    tensor dim an equal share S^{1/N} of the X-tile budget, which recovers
+    the closed form at N = 3 and keeps the X tile (the dominant access set)
+    at exactly S elements.
+    """
+    n = len(dims)
+    b = max(1, int(round(s ** (1.0 / n))))
+    b = max(_LANE, (b // _LANE) * _LANE)
+    return tuple(min(b, d) for d in dims)
+
+
+def _make_kernel(n_red: int):
+    """Kernel body for an order-(n_red + 1) MTTKRP (n_red factor inputs)."""
+
+    def kernel(*refs):
+        x_ref = refs[0]
+        f_refs = refs[1 : 1 + n_red]
+        o_ref = refs[1 + n_red]
+
+        first = pl.program_id(1) == 0
+        for ax in range(2, 1 + n_red):
+            first = jnp.logical_and(first, pl.program_id(ax) == 0)
+
+        @pl.when(first)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        # KRP of the factor tiles, formed in VMEM (VPU elementwise).
+        k = f_refs[0][...]
+        for f in f_refs[1:]:
+            k = k[..., None, :] * f[...][(None,) * (k.ndim - 1) + (slice(None), slice(None))]
+        r = k.shape[-1]
+        k_mat = k.reshape(-1, r)
+        # Matricized X tile against the KRP tile on the MXU.
+        bi = x_ref.shape[0]
+        x_mat = x_ref[...].reshape(bi, -1)
+        o_ref[...] += jnp.dot(x_mat, k_mat, preferred_element_type=o_ref.dtype)
+
+    return kernel
+
+
+def mttkrp_pallas(x, factors, *, blocks=None, vmem=1 << 17):
+    """out[i0, r] = sum over i1..i_{N-1} of X[i0,...,i_{N-1}] * prod_m U_m[i_m, r].
+
+    x: order-N tensor; factors: list of N-1 matrices (I_m, R) for modes
+    1..N-1 (mode-0 MTTKRP; permute X at L2 for other modes).
+    blocks: optional per-mode tile sizes; defaults to the paper-optimal
+    tiling for a fast memory of `vmem` elements.
+    """
+    order = x.ndim
+    n_red = order - 1
+    assert len(factors) == n_red, f"need {n_red} factors, got {len(factors)}"
+    r = factors[0].shape[1]
+    for m, f in enumerate(factors):
+        assert f.shape == (x.shape[m + 1], r), (
+            f"factor {m} shape {f.shape} != {(x.shape[m + 1], r)}"
+        )
+    if blocks is None:
+        blocks = optimal_mttkrp_tiles(vmem, x.shape, r)
+    blocks = list(blocks)
+    for ax in range(order):
+        blocks[ax] = min(blocks[ax], x.shape[ax])
+        if x.shape[ax] % blocks[ax]:
+            blocks[ax] = x.shape[ax]
+    grid = tuple(x.shape[ax] // blocks[ax] for ax in range(order))
+
+    def x_map(*ids):
+        return ids
+
+    def factor_map(m):
+        # factor m (0-based over reduction modes) is indexed by grid axis m+1.
+        return lambda *ids: (ids[m + 1], 0)
+
+    in_specs = [pl.BlockSpec(tuple(blocks), x_map)]
+    for m in range(n_red):
+        in_specs.append(pl.BlockSpec((blocks[m + 1], r), factor_map(m)))
+
+    return pl.pallas_call(
+        _make_kernel(n_red),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec(
+            (blocks[0], r), lambda *ids: (ids[0],) + (0,)
+        ),
+        out_shape=jax.ShapeDtypeStruct((x.shape[0], r), x.dtype),
+        interpret=True,
+    )(x, *factors)
+
+
+def vmem_footprint(blocks: tuple[int, ...], r: int, itemsize: int = 4) -> dict:
+    """Bytes resident in VMEM per grid step — the TPU perf estimate input
+    recorded in EXPERIMENTS.md (interpret=True gives no hardware timing)."""
+    x_tile = 1
+    for b in blocks:
+        x_tile *= b
+    red = blocks[1:]
+    krp = 1
+    for b in red:
+        krp *= b
+    factors = sum(b * r for b in red)
+    out = blocks[0] * r
+    total = (x_tile + factors + krp * r + out) * itemsize
+    # MXU work per step: (Bi x prod(red)) @ (prod(red) x R)
+    flops = 2 * blocks[0] * krp * r
+    return {
+        "x_tile_bytes": x_tile * itemsize,
+        "factor_bytes": factors * itemsize,
+        "krp_scratch_bytes": krp * r * itemsize,
+        "out_bytes": out * itemsize,
+        "total_bytes": total,
+        "mxu_flops_per_step": flops,
+        "arithmetic_intensity": flops / max(1, total),
+    }
+
+
+def make_mttkrp(dims: tuple[int, ...], r: int, dtype=jnp.float32):
+    """Shape-specialized jittable fused MTTKRP for AOT lowering."""
+
+    def fn(x, *factors):
+        return (mttkrp_pallas(x, list(factors)),)
+
+    specs = (jax.ShapeDtypeStruct(tuple(dims), dtype),) + tuple(
+        jax.ShapeDtypeStruct((d, r), dtype) for d in dims[1:]
+    )
+    return jax.jit(fn), specs

@@ -1,0 +1,101 @@
+"""Pure-jnp oracles for every L1 kernel.
+
+These are the correctness references: the Pallas kernels (and, through the
+AOT path, the HLO artifacts the Rust runtime executes) are asserted
+allclose against these in python/tests/.  Each function mirrors a tensor
+operation defined in the paper's Sec. III-B.
+"""
+
+from __future__ import annotations
+
+import string
+
+import jax.numpy as jnp
+
+# Index alphabet used when synthesizing einsum strings for order-n ops.
+_IDX = string.ascii_lowercase
+
+
+def gemm(a, b):
+    """Matrix-matrix product, ij,jk->ik."""
+    return jnp.matmul(a, b)
+
+
+def krp(u0, u1):
+    """Khatri-Rao product (column-wise Kronecker), i0r,i1r->(i0 i1)r.
+
+    Returns the *unflattened* order-3 form i0,i1,r; callers that need the
+    matricized (I0*I1, R) form reshape it themselves (paper Sec. III-B).
+    """
+    return u0[:, None, :] * u1[None, :, :]
+
+
+def krp_chain(factors):
+    """KRP of N matrices, kept unflattened: (I0, ..., I_{N-1}, R)."""
+    out = factors[0]
+    for f in factors[1:]:
+        out = out[..., None, :] * f[(None,) * (out.ndim - 1) + (slice(None), slice(None))]
+    return out
+
+
+def ttm(x, u, mode):
+    """Tensor-times-matrix in `mode`: contracts X's mode-`mode` fiber with
+    U[I_mode, R] and places R in that mode."""
+    order = x.ndim
+    x_idx = _IDX[:order]
+    r = _IDX[order]
+    out_idx = x_idx[:mode] + r + x_idx[mode + 1 :]
+    return jnp.einsum(f"{x_idx},{x_idx[mode]}{r}->{out_idx}", x, u)
+
+
+def ttmc(x, factors, mode):
+    """Mode-`mode` TTM chain: apply every factor except `mode`'s.
+
+    factors: list of length order, factors[mode] is ignored (may be None).
+    Output has shape (R_0, ..., I_mode, ..., R_{N-1}).
+    """
+    out = x
+    for m in range(x.ndim):
+        if m == mode:
+            continue
+        out = ttm(out, factors[m], m)
+    return out
+
+
+def mttkrp(x, factors, mode):
+    """Mode-`mode` matricized tensor times Khatri-Rao product.
+
+    factors: list of length order; factors[mode] ignored (may be None).
+    Output: (I_mode, R).  Paper einsum (order-3 mode-0): ijk,ja,ka->ia.
+    """
+    order = x.ndim
+    x_idx = _IDX[:order]
+    r = _IDX[order]
+    ins = [x_idx]
+    ops = [x]
+    for m in range(order):
+        if m == mode:
+            continue
+        ins.append(x_idx[m] + r)
+        ops.append(factors[m])
+    return jnp.einsum(",".join(ins) + f"->{x_idx[mode]}{r}", *ops)
+
+
+def mttkrp_two_step(x, factors, mode):
+    """The communication-suboptimal two-step MTTKRP (explicit KRP
+    materialization + GEMM) the paper argues against (Sec. IV-E).  Used as a
+    semantics check for the baseline scheduler."""
+    order = x.ndim
+    rest = [m for m in range(order) if m != mode]
+    k = krp_chain([factors[m] for m in rest])  # (I_r0, ..., R)
+    r_dim = k.shape[-1]
+    k_mat = k.reshape(-1, r_dim)
+    # mode-n matricization of x: mode first, rest in order.
+    perm = [mode] + rest
+    x_mat = jnp.transpose(x, perm).reshape(x.shape[mode], -1)
+    return x_mat @ k_mat
+
+
+def tdot(x, y, axes):
+    """Tensor dot product over the given axes pairs."""
+    return jnp.tensordot(x, y, axes=axes)

@@ -1,0 +1,141 @@
+"""L2 JAX compute graphs: the local-tile operations Deinsum schedules.
+
+Each function here is the *per-rank* computation for one term of a
+distributed plan (paper Sec. II-D): the Rust coordinator assigns every MPI
+rank a block of the iteration space, and the rank's local work is one of
+these ops on its tiles.  They call the L1 Pallas kernels so that the AOT
+lowering produces a single HLO module containing the whole local pipeline
+(permute -> fold -> kernel -> fold back), i.e. the cross-statement fusion
+the paper performs at the IR level.
+
+Build-time only: `aot.py` lowers shape-specialized instances of these to
+HLO text; Python never runs on the request path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.gemm import gemm_pallas
+from .kernels.krp import krp_pallas
+from .kernels.mttkrp import mttkrp_pallas
+
+
+def local_gemm(a, b):
+    """Local tile GEMM (MM chains, and the MM term of fused programs)."""
+    return gemm_pallas(a, b)
+
+
+def local_mttkrp(x, factors, mode=0):
+    """Local fused MTTKRP in any mode.
+
+    Permutes X so `mode` leads (the paper's HPTT transposition), then runs
+    the fused mode-0 Pallas kernel.  The permutation lowers into the same
+    HLO module, so the artifact is one self-contained local pipeline.
+    """
+    order = x.ndim
+    if mode != 0:
+        perm = [mode] + [m for m in range(order) if m != mode]
+        x = jnp.transpose(x, perm)
+    return mttkrp_pallas(x, list(factors))
+
+
+def local_krp_flat(u0, u1):
+    """Baseline-only: materialized KRP, matricized to (I0*I1, R)."""
+    i0, r = u0.shape
+    i1, _ = u1.shape
+    return krp_pallas(u0, u1).reshape(i0 * i1, r)
+
+
+def local_ttm(x, u, mode):
+    """Local TTM: fold X so `mode` is last, GEMM against U, fold back.
+
+    This is the fold-to-BLAS lowering of Sec. III-B; the GEMM is the
+    Pallas kernel, the transposes lower to HLO transpose ops (HPTT's role).
+    """
+    order = x.ndim
+    perm = [m for m in range(order) if m != mode] + [mode]
+    xt = jnp.transpose(x, perm)
+    lead = xt.shape[:-1]
+    folded = xt.reshape(-1, x.shape[mode])
+    out = gemm_pallas(folded, u)  # (prod lead, R)
+    r = u.shape[1]
+    out = out.reshape(lead + (r,))
+    inv = [0] * order
+    for pos, m in enumerate(perm):
+        inv[m] = pos
+    return jnp.transpose(out, inv)
+
+
+def local_ttmc(x, factors, mode):
+    """Local TTM chain: apply every factor except `mode`'s, in order.
+
+    Contracting the largest dims first minimizes intermediate sizes for the
+    paper's benchmark shapes (all I equal, all R equal, R < I), matching
+    the FLOP-optimal binary decomposition opt_einsum finds.
+    """
+    out = x
+    for m in range(x.ndim):
+        if m == mode:
+            continue
+        out = local_ttm(out, factors[m], m)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Shape-specialized builders for AOT lowering (consumed by aot.py).
+# Each returns (jitted_fn, arg_specs); fn returns a 1-tuple (the Rust side
+# unwraps with to_tuple1, see /opt/xla-example).
+# ---------------------------------------------------------------------------
+
+
+def build_gemm(m: int, k: int, n: int, dtype=jnp.float32):
+    def fn(a, b):
+        return (local_gemm(a, b),)
+
+    specs = (
+        jax.ShapeDtypeStruct((m, k), dtype),
+        jax.ShapeDtypeStruct((k, n), dtype),
+    )
+    return jax.jit(fn), specs
+
+
+def build_mttkrp(dims: tuple[int, ...], r: int, dtype=jnp.float32):
+    """Mode-0 fused MTTKRP over `dims` with rank `r` (Rust permutes for
+    other modes before dispatch, mirroring local_mttkrp)."""
+
+    def fn(x, *factors):
+        return (local_mttkrp(x, factors, mode=0),)
+
+    specs = (jax.ShapeDtypeStruct(tuple(dims), dtype),) + tuple(
+        jax.ShapeDtypeStruct((d, r), dtype) for d in dims[1:]
+    )
+    return jax.jit(fn), specs
+
+
+def build_krp(i0: int, i1: int, r: int, dtype=jnp.float32):
+    def fn(u0, u1):
+        return (local_krp_flat(u0, u1),)
+
+    specs = (
+        jax.ShapeDtypeStruct((i0, r), dtype),
+        jax.ShapeDtypeStruct((i1, r), dtype),
+    )
+    return jax.jit(fn), specs
+
+
+def build_ttmc(dims: tuple[int, ...], rs: tuple[int, ...], mode: int, dtype=jnp.float32):
+    """TTMc over `dims`, ranks `rs` (rs[mode] ignored)."""
+
+    def fn(x, *factors):
+        fs = list(factors)
+        fs.insert(mode, None)
+        return (local_ttmc(x, fs, mode),)
+
+    specs = (jax.ShapeDtypeStruct(tuple(dims), dtype),) + tuple(
+        jax.ShapeDtypeStruct((dims[m], rs[m]), dtype)
+        for m in range(len(dims))
+        if m != mode
+    )
+    return jax.jit(fn), specs

@@ -1,0 +1,120 @@
+"""L2 correctness: local-tile pipelines (permute/fold + kernels) vs oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+RNG = np.random.default_rng(99)
+
+
+def randn(*shape):
+    return jnp.asarray(RNG.standard_normal(shape).astype(np.float32))
+
+
+class TestLocalMttkrpModes:
+    @pytest.mark.parametrize("mode", [0, 1, 2])
+    def test_order3_all_modes(self, mode):
+        x = randn(10, 12, 14)
+        fs = [randn(d, 6) for d in x.shape]
+        inputs = [fs[m] for m in range(3) if m != mode]
+        got = model.local_mttkrp(x, inputs, mode=mode)
+        want = ref.mttkrp(x, fs, mode)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+    @pytest.mark.parametrize("mode", [0, 2, 4])
+    def test_order5_paper_modes(self, mode):
+        x = randn(6, 5, 4, 5, 6)
+        fs = [randn(d, 4) for d in x.shape]
+        inputs = [fs[m] for m in range(5) if m != mode]
+        got = model.local_mttkrp(x, inputs, mode=mode)
+        want = ref.mttkrp(x, fs, mode)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+class TestLocalTtm:
+    @pytest.mark.parametrize("mode", [0, 1, 2])
+    def test_order3(self, mode):
+        x = randn(9, 10, 11)
+        u = randn(x.shape[mode], 5)
+        got = model.local_ttm(x, u, mode)
+        want = ref.ttm(x, u, mode)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        dims=st.tuples(st.integers(2, 10), st.integers(2, 10), st.integers(2, 10)),
+        mode=st.integers(0, 2),
+        r=st.integers(1, 6),
+    )
+    def test_hypothesis(self, dims, mode, r):
+        x = randn(*dims)
+        u = randn(dims[mode], r)
+        np.testing.assert_allclose(
+            model.local_ttm(x, u, mode), ref.ttm(x, u, mode), rtol=1e-3, atol=1e-4
+        )
+
+
+class TestLocalTtmc:
+    def test_order5_mode0(self):
+        # TTMc-05-M0 from Table IV (scaled down).
+        x = randn(6, 5, 4, 5, 6)
+        fs = [randn(d, 3) for d in x.shape]
+        got = model.local_ttmc(x, fs, mode=0)
+        want = ref.ttmc(x, fs, mode=0)
+        assert got.shape == (6, 3, 3, 3, 3)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+    @pytest.mark.parametrize("mode", [0, 1, 2])
+    def test_order3_modes(self, mode):
+        x = randn(7, 8, 9)
+        fs = [randn(d, 4) for d in x.shape]
+        got = model.local_ttmc(x, fs, mode=mode)
+        np.testing.assert_allclose(
+            got, ref.ttmc(x, fs, mode=mode), rtol=1e-3, atol=1e-4
+        )
+
+
+class TestKrpFlat:
+    def test_matches_two_step_pipeline(self):
+        u0, u1 = randn(6, 4), randn(7, 4)
+        x = randn(5, 6, 7)
+        flat = model.local_krp_flat(u0, u1)
+        xmat = np.asarray(x).reshape(5, 42)
+        out = xmat @ np.asarray(flat)
+        want = ref.mttkrp(x, [None, u0, u1], 0)
+        np.testing.assert_allclose(out, want, rtol=1e-3, atol=1e-4)
+
+
+class TestBuilders:
+    def test_build_gemm_runs(self):
+        fn, specs = model.build_gemm(16, 8, 12)
+        a, b = randn(16, 8), randn(8, 12)
+        (out,) = fn(a, b)
+        np.testing.assert_allclose(out, ref.gemm(a, b), rtol=1e-4)
+
+    def test_build_mttkrp_runs(self):
+        fn, specs = model.build_mttkrp((8, 8, 8), 4)
+        x = randn(8, 8, 8)
+        fs = [randn(8, 4), randn(8, 4)]
+        (out,) = fn(x, *fs)
+        np.testing.assert_allclose(
+            out, ref.mttkrp(x, [None] + fs, 0), rtol=1e-3, atol=1e-4
+        )
+
+    def test_build_ttmc_runs(self):
+        fn, specs = model.build_ttmc((5, 6, 7), (3, 3, 3), mode=1)
+        x = randn(5, 6, 7)
+        fs = [randn(5, 3), randn(7, 3)]
+        (out,) = fn(x, *fs)
+        all_fs = [fs[0], None, fs[1]]
+        np.testing.assert_allclose(
+            out, ref.ttmc(x, all_fs, mode=1), rtol=1e-3, atol=1e-4
+        )
+
+    def test_specs_match_inputs(self):
+        fn, specs = model.build_mttkrp((8, 6, 4), 5)
+        assert [tuple(s.shape) for s in specs] == [(8, 6, 4), (6, 5), (4, 5)]

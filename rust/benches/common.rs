@@ -1,0 +1,41 @@
+//! Shared mini-harness for the paper-reproduction benches (criterion is
+//! unavailable in the offline vendored registry; this provides the same
+//! essentials: warmup, repetitions, median + spread).
+
+use std::time::Instant;
+
+#[allow(dead_code)]
+/// Run `f` `reps` times after one warmup; returns (median, min, max) in
+/// seconds.
+pub fn time_median<F: FnMut()>(reps: usize, mut f: F) -> (f64, f64, f64) {
+    f(); // warmup
+    let mut samples: Vec<f64> = (0..reps)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = samples[samples.len() / 2];
+    (med, samples[0], *samples.last().unwrap())
+}
+
+#[allow(dead_code)]
+/// Environment-variable override with default (bench knobs without CLI
+/// plumbing: `DEINSUM_BENCH_NODES=512 cargo bench`).
+pub fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+#[allow(dead_code)]
+/// Pretty time with units.
+pub fn fmt_s(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.3}us", s * 1e6)
+    }
+}

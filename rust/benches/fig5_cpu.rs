@@ -1,0 +1,82 @@
+//! Fig. 5 reproduction: CPU weak-scaling series, Deinsum (compute + comm
+//! split) vs the CTF-like baseline, for all ten Table IV benchmarks.
+//!
+//! Knobs (env): DEINSUM_BENCH_NODES (default 64, paper: 512),
+//! DEINSUM_BENCH_SIZE_FACTOR (default 16; 1 = paper sizes),
+//! DEINSUM_BENCH_REPS (default 3).
+//!
+//! The absolute numbers are this testbed's, not Piz Daint's; the *shape*
+//! — who wins, roughly by how much, and where comm fractions step up —
+//! is the reproduction target (EXPERIMENTS.md).
+
+#[path = "common.rs"]
+mod common;
+
+use deinsum::bench_support::{geomean, run_point, suite, BenchPoint};
+use deinsum::runtime::KernelEngine;
+use deinsum::sim::NetworkModel;
+
+fn main() {
+    let max_nodes = common::env_usize("DEINSUM_BENCH_NODES", 64);
+    let sf = common::env_usize("DEINSUM_BENCH_SIZE_FACTOR", 16);
+    let reps = common::env_usize("DEINSUM_BENCH_REPS", 2);
+    let engine = KernelEngine::native();
+    let net = NetworkModel::aries();
+
+    println!("# Fig. 5 (CPU weak scaling) — size-factor {sf}, reps {reps}, up to {max_nodes} nodes");
+    println!(
+        "{:<14} {:>5} {:>12} {:>12} {:>12} {:>12} {:>9}",
+        "benchmark", "P", "dein comp", "dein comm", "dein total", "ctf-like", "speedup"
+    );
+
+    let mut all: Vec<BenchPoint> = Vec::new();
+    for def in suite(sf) {
+        let mut p = 1usize;
+        while p <= max_nodes {
+            // One unmeasured warmup (first-touch/page-fault effects hit
+            // whichever scheduler runs first), then best-of-reps on each
+            // side independently.
+            let _ = run_point(&def, p, &engine, net).expect("warmup");
+            let mut pts: Vec<BenchPoint> = (0..reps)
+                .map(|_| run_point(&def, p, &engine, net).expect("bench point").0)
+                .collect();
+            pts.sort_by(|a, b| {
+                a.deinsum.total().partial_cmp(&b.deinsum.total()).unwrap()
+            });
+            let mut pt = pts[0].clone();
+            let best_base = pts
+                .iter()
+                .map(|q| q.baseline.total())
+                .fold(f64::INFINITY, f64::min);
+            pt.baseline.compute = best_base - pt.baseline.comm;
+            pt.speedup = best_base / pt.deinsum.total().max(1e-12);
+            println!(
+                "{:<14} {:>5} {:>12} {:>12} {:>12} {:>12} {:>8.2}x",
+                pt.name,
+                pt.p,
+                common::fmt_s(pt.deinsum.compute),
+                common::fmt_s(pt.deinsum.comm),
+                common::fmt_s(pt.deinsum.total()),
+                common::fmt_s(pt.baseline.total()),
+                pt.speedup
+            );
+            all.push(pt);
+            p *= 2;
+        }
+        println!();
+    }
+
+    // §VI-B headline block.
+    println!("# headline");
+    for def in suite(sf) {
+        let at_max: Vec<&BenchPoint> =
+            all.iter().filter(|pt| pt.name == def.name).collect();
+        if let Some(pt) = at_max.last() {
+            println!(
+                "{:<14} speedup at P={:<4}: {:>6.2}x   comm bytes dein/ctf: {}/{}",
+                pt.name, pt.p, pt.speedup, pt.deinsum_comm_bytes, pt.baseline_comm_bytes
+            );
+        }
+    }
+    println!("geomean speedup over all points: {:.2}x  (paper: 4.18x)", geomean(&all));
+}

@@ -1,0 +1,56 @@
+//! Fig. 6 reproduction: GPU runs under the accelerator model — Deinsum
+//! GPU-resident vs Deinsum accelerator-mode (H2D/D2H copies charged) vs
+//! the CTF-like baseline (accelerator-mode only, like CTF).
+//!
+//! Same schedules as Fig. 5; only the time model changes (DESIGN.md
+//! §Substitutions): device compute = measured CPU kernel time / speedup,
+//! copies at PCIe bandwidth.  The reproduction target is the *structure*:
+//! copy overhead dominates small-P points and GPU-resident execution
+//! strictly beats accelerator mode.
+
+#[path = "common.rs"]
+mod common;
+
+use deinsum::bench_support::{run_point, suite};
+use deinsum::runtime::KernelEngine;
+use deinsum::sim::{AccelModel, NetworkModel};
+
+fn main() {
+    let max_nodes = common::env_usize("DEINSUM_BENCH_NODES", 32);
+    let sf = common::env_usize("DEINSUM_BENCH_SIZE_FACTOR", 16);
+    let engine = KernelEngine::native();
+    let net = NetworkModel::aries();
+    let accel = AccelModel::p100();
+
+    println!("# Fig. 6 (GPU model: P100-class, {:.0}x kernels, {:.0} GB/s PCIe)",
+        accel.speedup, accel.pcie_bw / 1e9);
+    println!(
+        "{:<14} {:>5} {:>14} {:>14} {:>14} {:>9}",
+        "benchmark", "P", "dein resident", "dein accel", "ctf-like accel", "speedup"
+    );
+
+    for def in suite(sf) {
+        let mut p = 1usize;
+        while p <= max_nodes {
+            let (_, drep, brep) = run_point(&def, p, &engine, net).expect("bench point");
+            let resident = drep.gpu_time(&accel, true);
+            let offload = drep.gpu_time(&accel, false);
+            let base = brep.gpu_time(&accel, false);
+            println!(
+                "{:<14} {:>5} {:>14} {:>14} {:>14} {:>8.2}x",
+                def.name,
+                p,
+                common::fmt_s(resident.total()),
+                common::fmt_s(offload.total()),
+                common::fmt_s(base.total()),
+                base.total() / offload.total().max(1e-12)
+            );
+            assert!(
+                resident.total() <= offload.total() + 1e-12,
+                "GPU-resident must not exceed accelerator mode"
+            );
+            p *= 2;
+        }
+        println!();
+    }
+}

@@ -1,0 +1,123 @@
+//! Hot-path microbenches for the §Perf pass (EXPERIMENTS.md): the pieces
+//! on the coordinator's critical path, timed in isolation so regressions
+//! are attributable.
+//!
+//! - native GEMM microkernel (local compute floor)
+//! - fused MTTKRP kernel vs two-step (local)
+//! - HPTT-lite transposition
+//! - redistribution *planning* (must be O(messages), never O(elements))
+//! - redistribution *execution* (memcpy-bound)
+//! - end-to-end plan construction (SOAP solve + grid search)
+
+#[path = "common.rs"]
+mod common;
+
+use deinsum::dist::TensorDist;
+use deinsum::einsum::EinsumSpec;
+use deinsum::grid::ProcessGrid;
+use deinsum::planner::{plan, PlannerConfig};
+use deinsum::redist;
+use deinsum::tensor::{contract, Tensor};
+
+fn main() {
+    let reps = common::env_usize("DEINSUM_BENCH_REPS", 5);
+
+    // --- GEMM microkernel ---------------------------------------------------
+    for n in [128usize, 256, 512] {
+        let a = Tensor::random(&[n, n], 1);
+        let b = Tensor::random(&[n, n], 2);
+        let (med, _, _) = common::time_median(reps, || {
+            let _ = contract::gemm(&a, &b).unwrap();
+        });
+        let gflops = 2.0 * (n as f64).powi(3) / med / 1e9;
+        println!("gemm {n}x{n}x{n}: {} ({gflops:.2} GFLOP/s)", common::fmt_s(med));
+    }
+
+    // --- fused MTTKRP vs two-step (local kernels) ----------------------------
+    for n in [64usize, 128] {
+        let x = Tensor::random(&[n, n, n], 3);
+        let f1 = Tensor::random(&[n, 24], 4);
+        let f2 = Tensor::random(&[n, 24], 5);
+        let slots = [&x, &f1, &f2];
+        let (fused, _, _) = common::time_median(reps, || {
+            let _ = contract::mttkrp(&x, &slots, 0).unwrap();
+        });
+        let (two, _, _) = common::time_median(reps, || {
+            let _ = contract::mttkrp_two_step(&x, &slots, 0).unwrap();
+        });
+        let flops = 2.0 * (n as f64).powi(3) * 24.0;
+        println!(
+            "mttkrp {n}^3 r24: fused {} ({:.2} GFLOP/s) vs two-step {} ({:.2}x)",
+            common::fmt_s(fused),
+            flops / fused / 1e9,
+            common::fmt_s(two),
+            two / fused
+        );
+    }
+
+    // --- transposition --------------------------------------------------------
+    for dims in [[256usize, 256, 16], [64, 64, 64]] {
+        let t = Tensor::random(&dims, 6);
+        let (med, _, _) = common::time_median(reps, || {
+            let _ = t.permute(&[2, 1, 0]);
+        });
+        let gbs = (t.len() * 8) as f64 / med / 1e9; // read + write
+        println!(
+            "permute {:?} [2,1,0]: {} ({gbs:.2} GB/s)",
+            dims,
+            common::fmt_s(med)
+        );
+    }
+
+    // --- redistribution planning: must not scale with element count ----------
+    for n in [1usize << 12, 1 << 16, 1 << 20] {
+        let ga = ProcessGrid::new(&[8, 8]).unwrap();
+        let gb = ProcessGrid::new(&[16, 4]).unwrap();
+        let src = TensorDist::new(&[n, 64], &ga, &[0, 1]).unwrap();
+        let dst = TensorDist::new(&[n, 64], &gb, &[0, 1]).unwrap();
+        let (med, _, _) = common::time_median(reps, || {
+            let _ = redist::plan(&src, &dst).unwrap();
+        });
+        let msgs = redist::plan(&src, &dst).unwrap().messages.len();
+        println!(
+            "redist plan rows={n} (64 ranks, {msgs} msgs): {}",
+            common::fmt_s(med)
+        );
+    }
+
+    // --- redistribution execution (data movement) -----------------------------
+    {
+        let n = 1usize << 20;
+        let ga = ProcessGrid::new(&[8]).unwrap();
+        let gb = ProcessGrid::new(&[4]).unwrap();
+        let src = TensorDist::new(&[n], &ga, &[0]).unwrap();
+        let dst = TensorDist::new(&[n], &gb, &[0]).unwrap();
+        let rp = redist::plan(&src, &dst).unwrap();
+        let global = Tensor::random(&[n], 7);
+        let bufs: Vec<Tensor> = (0..8)
+            .map(|r| {
+                let (off, _) = src.block_for_rank(r);
+                global.block(&off, &src.local_dims())
+            })
+            .collect();
+        let (med, _, _) = common::time_median(reps, || {
+            let _ = redist::execute(&rp, &src, &dst, &bufs).unwrap();
+        });
+        let gbs = (n * 4) as f64 / med / 1e9;
+        println!("redist execute {n} f32 over 8->4 ranks: {} ({gbs:.2} GB/s)", common::fmt_s(med));
+    }
+
+    // --- plan construction (SOAP + grids + moves) ------------------------------
+    {
+        let n = 1usize << 12;
+        let spec = EinsumSpec::parse(
+            "ijk,ja,ka,al->il",
+            &[vec![n, n, n], vec![n, 24], vec![n, 24], vec![24, n]],
+        )
+        .unwrap();
+        let (med, _, _) = common::time_median(reps, || {
+            let _ = plan(&spec, 64, &PlannerConfig::default()).unwrap();
+        });
+        println!("plan(worked example, P=64): {}", common::fmt_s(med));
+    }
+}

@@ -1,0 +1,76 @@
+//! CTF-like comparator (paper §VI: the "state of the art" baseline).
+//!
+//! Models the behaviours the paper attributes to Cyclops/folding
+//! libraries:
+//!
+//! - **no cross-statement fusion**: every binary contraction is its own
+//!   distributed term — in particular MTTKRP runs as the two-step
+//!   KRP-materialize + GEMM pipeline the paper proves communication-
+//!   suboptimal (§IV-E);
+//! - **extent-balanced grids** rather than SOAP-tile-proportioned ones
+//!   (CTF picks grids from tensor shapes, not from a data-movement
+//!   model);
+//! - local work still uses the same fold-to-GEMM kernels, so the
+//!   comparison isolates *schedule* quality, exactly like the paper's
+//!   CTF runs linking the same BLAS/HPTT.
+
+use crate::einsum::EinsumSpec;
+use crate::error::Result;
+use crate::planner::{plan, Plan, PlannerConfig};
+
+/// Baseline planner configuration.
+pub fn baseline_config(s_elements: f64) -> PlannerConfig {
+    PlannerConfig { s_elements, fuse: false, soap_grids: false }
+}
+
+/// Plan `spec` with the CTF-like baseline scheduler.
+pub fn plan_baseline(spec: &EinsumSpec, p: usize) -> Result<Plan> {
+    plan(spec, p, &baseline_config(PlannerConfig::default().s_elements))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::LocalKernel;
+
+    #[test]
+    fn baseline_mttkrp_is_two_step() {
+        let spec = EinsumSpec::parse(
+            "ijk,ja,ka->ia",
+            &[vec![64, 64, 64], vec![64, 24], vec![64, 24]],
+        )
+        .unwrap();
+        let p = plan_baseline(&spec, 8).unwrap();
+        assert_eq!(p.terms.len(), 2, "KRP materialization + TDOT");
+        // No fused MTTKRP kernel anywhere.
+        assert!(p.terms.iter().all(|t| matches!(t.kernel, LocalKernel::Seq)));
+        // The materialized KRP (jka) must flow through a redistribution.
+        assert_eq!(p.moves.len(), 1);
+        // The KRP term's output is the full jka tensor — the §IV-E
+        // communication blow-up.
+        let krp_term = &p.terms[0];
+        let out_elems: usize = krp_term
+            .output_dist
+            .extents
+            .iter()
+            .product();
+        assert_eq!(out_elems, 64 * 64 * 24);
+    }
+
+    #[test]
+    fn baseline_q_bound_worse_than_deinsum() {
+        let spec = EinsumSpec::parse(
+            "ijk,ja,ka->ia",
+            &[vec![1 << 12, 1 << 12, 1 << 12], vec![1 << 12, 24], vec![1 << 12, 24]],
+        )
+        .unwrap();
+        let deinsum = plan(&spec, 8, &PlannerConfig::default()).unwrap();
+        let base = plan_baseline(&spec, 8).unwrap();
+        assert!(
+            base.total_q > deinsum.total_q,
+            "baseline Q {} must exceed fused Q {}",
+            base.total_q,
+            deinsum.total_q
+        );
+    }
+}

@@ -1,0 +1,362 @@
+//! The paper's benchmark suite: Table IV (kernels) and Table V
+//! (weak-scaling sizes), plus the harness that produces the Fig. 5/6
+//! rows.
+//!
+//! Base problem sizes are scaled down from the paper's (Piz Daint had 64
+//! GB/node; all our simulated ranks share one address space), controlled
+//! by `size_factor` — the *shape* of every comparison (who wins, where
+//! the crossovers are) is size-stable; EXPERIMENTS.md records the
+//! mapping.
+
+use std::collections::BTreeMap;
+
+use crate::baseline::plan_baseline;
+use crate::coordinator::{Coordinator, RunReport};
+use crate::einsum::EinsumSpec;
+use crate::error::Result;
+use crate::planner::{plan, PlannerConfig};
+use crate::runtime::KernelEngine;
+use crate::sim::{NetworkModel, TimeBreakdown};
+use crate::tensor::Tensor;
+
+/// One Table IV benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchDef {
+    /// Paper name, e.g. `MTTKRP-03-M1`.
+    pub name: String,
+    /// Einsum string (Table IV column 4).
+    pub expr: String,
+    /// Base extent of every index at P = 1 (Table V column 2).
+    pub base: BTreeMap<char, usize>,
+    /// Indices that weak-scale with P (the `I^n`; ranks stay fixed).
+    pub scaled: Vec<char>,
+    /// Scaling exponent root: extent × P^(1/root) (Table V column 3).
+    pub root: u32,
+}
+
+impl BenchDef {
+    fn new(
+        name: &str,
+        expr: &str,
+        base: &[(char, usize)],
+        scaled: &[char],
+        root: u32,
+    ) -> Self {
+        BenchDef {
+            name: name.to_string(),
+            expr: expr.to_string(),
+            base: base.iter().copied().collect(),
+            scaled: scaled.to_vec(),
+            root,
+        }
+    }
+
+    /// Index extents at `p` ranks (weak scaling, Table V).
+    pub fn extents_at(&self, p: usize) -> BTreeMap<char, usize> {
+        let f = (p as f64).powf(1.0 / self.root as f64);
+        self.base
+            .iter()
+            .map(|(&c, &n)| {
+                let n = if self.scaled.contains(&c) {
+                    ((n as f64) * f).round() as usize
+                } else {
+                    n
+                };
+                (c, n.max(1))
+            })
+            .collect()
+    }
+
+    /// Operand shapes at `p` ranks.
+    pub fn shapes_at(&self, p: usize) -> Vec<Vec<usize>> {
+        let ext = self.extents_at(p);
+        let lhs = self.expr.split("->").next().unwrap();
+        lhs.split(',')
+            .map(|ops| ops.chars().map(|c| ext[&c]).collect())
+            .collect()
+    }
+
+    /// Parsed spec at `p` ranks.
+    pub fn spec_at(&self, p: usize) -> Result<EinsumSpec> {
+        EinsumSpec::parse(&self.expr, &self.shapes_at(p))
+    }
+
+    /// Total input elements at `p` (memory sanity checks in harnesses).
+    pub fn input_elements(&self, p: usize) -> usize {
+        self.shapes_at(p).iter().map(|s| s.iter().product::<usize>()).sum()
+    }
+}
+
+/// The full Table IV suite, with base sizes divided by `size_factor`
+/// (1 = paper sizes; the default harness uses 8–16).
+pub fn suite(size_factor: usize) -> Vec<BenchDef> {
+    let sf = size_factor.max(1);
+    let mm = (4096 / sf).max(8);
+    let m3 = (1024 / sf).max(8);
+    let m5 = (1024 / (sf * sf)).max(4); // order-5 tensors grow fast
+    let t5 = (60 / sf.min(4)).max(8);
+    let r = 24;
+    vec![
+        BenchDef::new(
+            "1MM",
+            "ij,jk->ik",
+            &[('i', mm), ('j', mm), ('k', mm)],
+            &['i', 'j', 'k'],
+            3,
+        ),
+        BenchDef::new(
+            "2MM",
+            "ij,jk,kl->il",
+            &[('i', mm), ('j', mm), ('k', mm), ('l', mm)],
+            &['i', 'j', 'k', 'l'],
+            3,
+        ),
+        BenchDef::new(
+            "3MM",
+            "ij,jk,kl,lm->im",
+            &[('i', mm), ('j', mm), ('k', mm), ('l', mm), ('m', mm)],
+            &['i', 'j', 'k', 'l', 'm'],
+            3,
+        ),
+        BenchDef::new(
+            "MTTKRP-03-M0",
+            "ijk,ja,ka->ia",
+            &[('i', m3), ('j', m3), ('k', m3), ('a', r)],
+            &['i', 'j', 'k'],
+            4,
+        ),
+        BenchDef::new(
+            "MTTKRP-03-M1",
+            "ijk,ia,ka->ja",
+            &[('i', m3), ('j', m3), ('k', m3), ('a', r)],
+            &['i', 'j', 'k'],
+            4,
+        ),
+        BenchDef::new(
+            "MTTKRP-03-M2",
+            "ijk,ia,ja->ka",
+            &[('i', m3), ('j', m3), ('k', m3), ('a', r)],
+            &['i', 'j', 'k'],
+            4,
+        ),
+        BenchDef::new(
+            "MTTKRP-05-M0",
+            "ijklm,ja,ka,la,ma->ia",
+            &[('i', m5), ('j', m5), ('k', m5), ('l', m5), ('m', m5), ('a', r)],
+            &['i', 'j', 'k', 'l', 'm'],
+            6,
+        ),
+        BenchDef::new(
+            "MTTKRP-05-M2",
+            "ijklm,ia,ja,la,ma->ka",
+            &[('i', m5), ('j', m5), ('k', m5), ('l', m5), ('m', m5), ('a', r)],
+            &['i', 'j', 'k', 'l', 'm'],
+            6,
+        ),
+        BenchDef::new(
+            "MTTKRP-05-M4",
+            "ijklm,ia,ja,ka,la->ma",
+            &[('i', m5), ('j', m5), ('k', m5), ('l', m5), ('m', m5), ('a', r)],
+            &['i', 'j', 'k', 'l', 'm'],
+            6,
+        ),
+        BenchDef::new(
+            "TTMc-05-M0",
+            "ijklm,jb,kc,ld,me->ibcde",
+            &[
+                ('i', t5),
+                ('j', t5),
+                ('k', t5),
+                ('l', t5),
+                ('m', t5),
+                ('b', r),
+                ('c', r),
+                ('d', r),
+                ('e', r),
+            ],
+            &['i', 'j', 'k', 'l', 'm'],
+            6,
+        ),
+    ]
+}
+
+/// Deinsum-vs-baseline measurement at one (benchmark, P) point.
+#[derive(Debug, Clone)]
+pub struct BenchPoint {
+    pub name: String,
+    pub p: usize,
+    pub deinsum: TimeBreakdown,
+    pub baseline: TimeBreakdown,
+    /// Exact communication volumes (bytes) for both schedulers.
+    pub deinsum_comm_bytes: u128,
+    pub baseline_comm_bytes: u128,
+    pub speedup: f64,
+}
+
+/// Run one benchmark point: both schedulers, same inputs, numerics
+/// cross-checked.  Returns the reports too (for Fig. 6 GPU modeling).
+pub fn run_point(
+    def: &BenchDef,
+    p: usize,
+    engine: &KernelEngine,
+    net: NetworkModel,
+) -> Result<(BenchPoint, RunReport, RunReport)> {
+    let spec = def.spec_at(p)?;
+    let shapes = def.shapes_at(p);
+    let inputs: Vec<Tensor> = shapes
+        .iter()
+        .enumerate()
+        .map(|(i, s)| Tensor::random(s, 42 + i as u64))
+        .collect();
+    let coord = Coordinator::new(engine, net);
+
+    let dplan = plan(&spec, p, &PlannerConfig::default())?;
+    let drep = coord.run(&dplan, &inputs)?;
+
+    let bplan = plan_baseline(&spec, p)?;
+    let brep = coord.run(&bplan, &inputs)?;
+
+    // Cross-check: two independent schedules must agree.
+    debug_assert!(
+        drep.output.rel_error(&brep.output) < 1e-3,
+        "{}@P={p}: schedulers disagree ({})",
+        def.name,
+        drep.output.rel_error(&brep.output)
+    );
+
+    let point = BenchPoint {
+        name: def.name.clone(),
+        p,
+        deinsum: drep.time,
+        baseline: brep.time,
+        deinsum_comm_bytes: drep.comm.p2p_bytes + drep.comm.allreduce_bytes,
+        baseline_comm_bytes: brep.comm.p2p_bytes + brep.comm.allreduce_bytes,
+        speedup: brep.time.total() / drep.time.total().max(1e-12),
+    };
+    Ok((point, drep, brep))
+}
+
+/// Format a Fig. 5-style table header.
+pub fn header() -> String {
+    format!(
+        "{:<14} {:>5} {:>12} {:>12} {:>12} {:>12} {:>9}",
+        "benchmark", "P", "dein comp s", "dein comm s", "dein total", "ctf-like s", "speedup"
+    )
+}
+
+/// Format one row.
+pub fn row(pt: &BenchPoint) -> String {
+    format!(
+        "{:<14} {:>5} {:>12.5} {:>12.5} {:>12.5} {:>12.5} {:>8.2}x",
+        pt.name,
+        pt.p,
+        pt.deinsum.compute,
+        pt.deinsum.comm,
+        pt.deinsum.total(),
+        pt.baseline.total(),
+        pt.speedup
+    )
+}
+
+/// Geometric mean of speedups (the paper's closing 4.18× figure).
+pub fn geomean(points: &[BenchPoint]) -> f64 {
+    if points.is_empty() {
+        return 1.0;
+    }
+    let s: f64 = points.iter().map(|p| p.speedup.max(1e-12).ln()).sum();
+    (s / points.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_matches_table_iv() {
+        let s = suite(1);
+        assert_eq!(s.len(), 10);
+        let names: Vec<&str> = s.iter().map(|b| b.name.as_str()).collect();
+        assert!(names.contains(&"1MM"));
+        assert!(names.contains(&"MTTKRP-05-M4"));
+        assert!(names.contains(&"TTMc-05-M0"));
+        // Table V base sizes at size_factor 1.
+        assert_eq!(s[0].base[&'i'], 4096);
+        assert_eq!(s[3].base[&'i'], 1024);
+        assert_eq!(s[3].base[&'a'], 24);
+        assert_eq!(s[9].base[&'i'], 60);
+    }
+
+    #[test]
+    fn weak_scaling_follows_table_v() {
+        let s = suite(1);
+        // 1MM: ∛P — at P=8 extents double.
+        let mm = &s[0];
+        assert_eq!(mm.extents_at(8)[&'i'], 8192);
+        // MTTKRP-03: ⁴√P — at P=16 extents double, rank stays 24.
+        let m3 = &s[3];
+        assert_eq!(m3.extents_at(16)[&'i'], 2048);
+        assert_eq!(m3.extents_at(16)[&'a'], 24);
+        // MTTKRP-05: ⁶√P — at P=64 extents double.
+        let m5 = &s[6];
+        assert_eq!(m5.extents_at(64)[&'j'], 2048);
+    }
+
+    #[test]
+    fn shapes_match_expr() {
+        let s = suite(8);
+        for b in &s {
+            let spec = b.spec_at(1).unwrap();
+            assert_eq!(spec.inputs.len(), b.shapes_at(1).len(), "{}", b.name);
+            for p in [1, 2, 4] {
+                assert!(b.spec_at(p).is_ok(), "{} P={p}", b.name);
+            }
+        }
+    }
+
+    #[test]
+    fn run_point_small() {
+        let defs = suite(64);
+        let m0 = defs.iter().find(|d| d.name == "MTTKRP-03-M0").unwrap();
+        let engine = KernelEngine::native();
+        let (pt, drep, brep) = run_point(m0, 4, &engine, NetworkModel::aries()).unwrap();
+        assert!(pt.speedup > 0.0);
+        assert!(drep.output.rel_error(&brep.output) < 1e-3);
+    }
+
+    #[test]
+    fn deinsum_moves_fewer_bytes_at_scale() {
+        // The §IV-E claim (fused MTTKRP communicates less than the
+        // two-step KRP+GEMM) holds at meaningful problem sizes — at toy
+        // extents both schedules fit everywhere and the comparison is
+        // noise, so this check uses the 64-base suite at P=8.
+        let defs = suite(16);
+        let m0 = defs.iter().find(|d| d.name == "MTTKRP-03-M0").unwrap();
+        let engine = KernelEngine::native();
+        let (pt, _, _) = run_point(m0, 8, &engine, NetworkModel::aries()).unwrap();
+        // Communication volume is deterministic — the §IV-E claim.
+        assert!(
+            pt.deinsum_comm_bytes < pt.baseline_comm_bytes,
+            "deinsum {} vs baseline {}",
+            pt.deinsum_comm_bytes,
+            pt.baseline_comm_bytes
+        );
+        // Wall-clock speedup is asserted loosely here (single cold run in
+        // a test environment); the bench harness measures it properly.
+        assert!(pt.speedup > 0.5, "speedup {}", pt.speedup);
+    }
+
+    #[test]
+    fn geomean_sane() {
+        let mk = |s: f64| BenchPoint {
+            name: "x".into(),
+            p: 1,
+            deinsum: TimeBreakdown::default(),
+            baseline: TimeBreakdown::default(),
+            deinsum_comm_bytes: 0,
+            baseline_comm_bytes: 0,
+            speedup: s,
+        };
+        let g = geomean(&[mk(2.0), mk(8.0)]);
+        assert!((g - 4.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,297 @@
+//! Einsum parsing and program specification (paper §II, §III-A).
+//!
+//! An einsum string like `ijk,ja,ka,al->il` describes a multilinear
+//! program: one loop per distinct index, one input tensor per index
+//! string before the arrow, implicit summation over indices absent from
+//! the output.  [`EinsumSpec`] carries the parsed structure plus the
+//! extent of every index, which is all downstream analysis needs.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// A parsed, shape-bound einsum program.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EinsumSpec {
+    /// Index string per input operand (e.g. `['i','j','k']`).
+    pub inputs: Vec<Vec<char>>,
+    /// Output index string.
+    pub output: Vec<char>,
+    /// Extent of every index, keyed by its character.
+    pub extents: BTreeMap<char, usize>,
+}
+
+impl EinsumSpec {
+    /// Parse an einsum string and bind it to operand shapes.
+    ///
+    /// Rules enforced (paper §III-A):
+    /// - explicit output (`->`) required;
+    /// - every output index must appear in some input;
+    /// - repeated indices must agree on extent across operands;
+    /// - no index repetition *within* one operand (no traces) — the SOAP
+    ///   model assumes simple overlap access (§IV-B).
+    pub fn parse(expr: &str, shapes: &[Vec<usize>]) -> Result<Self> {
+        let expr: String = expr.chars().filter(|c| !c.is_whitespace()).collect();
+        let (lhs, rhs) = expr
+            .split_once("->")
+            .ok_or_else(|| Error::parse("missing '->' (implicit output unsupported)"))?;
+        let inputs: Vec<Vec<char>> = lhs.split(',').map(|s| s.chars().collect()).collect();
+        let output: Vec<char> = rhs.chars().collect();
+
+        if inputs.len() != shapes.len() {
+            return Err(Error::parse(format!(
+                "{} operands in string but {} shapes given",
+                inputs.len(),
+                shapes.len()
+            )));
+        }
+        let mut extents = BTreeMap::new();
+        for (ops, shape) in inputs.iter().zip(shapes) {
+            if ops.len() != shape.len() {
+                return Err(Error::parse(format!(
+                    "operand '{}' has {} indices but shape {:?}",
+                    ops.iter().collect::<String>(),
+                    ops.len(),
+                    shape
+                )));
+            }
+            let mut seen = Vec::new();
+            for (&c, &ext) in ops.iter().zip(shape) {
+                if !c.is_ascii_alphabetic() {
+                    return Err(Error::parse(format!("invalid index char '{c}'")));
+                }
+                if seen.contains(&c) {
+                    return Err(Error::parse(format!(
+                        "repeated index '{c}' within one operand (traces unsupported)"
+                    )));
+                }
+                seen.push(c);
+                match extents.insert(c, ext) {
+                    Some(prev) if prev != ext => {
+                        return Err(Error::parse(format!(
+                            "index '{c}' bound to both {prev} and {ext}"
+                        )));
+                    }
+                    _ => {}
+                }
+            }
+        }
+        let mut out_seen = Vec::new();
+        for &c in &output {
+            if !extents.contains_key(&c) {
+                return Err(Error::parse(format!("output index '{c}' not in any input")));
+            }
+            if out_seen.contains(&c) {
+                return Err(Error::parse(format!("repeated output index '{c}'")));
+            }
+            out_seen.push(c);
+        }
+        Ok(EinsumSpec { inputs, output, extents })
+    }
+
+    /// All distinct indices, sorted (the program's loop nest, §II).
+    pub fn indices(&self) -> Vec<char> {
+        self.extents.keys().copied().collect()
+    }
+
+    /// Indices summed over (present in inputs, absent from output).
+    pub fn contracted(&self) -> Vec<char> {
+        self.extents.keys().copied().filter(|c| !self.output.contains(c)).collect()
+    }
+
+    /// Size of the full iteration space `|I| = prod extents` (§II).
+    pub fn iteration_space(&self) -> u128 {
+        self.extents.values().map(|&e| e as u128).product()
+    }
+
+    /// Shape of operand `op`.
+    pub fn input_shape(&self, op: usize) -> Vec<usize> {
+        self.inputs[op].iter().map(|c| self.extents[c]).collect()
+    }
+
+    /// Shape of the output.
+    pub fn output_shape(&self) -> Vec<usize> {
+        self.output.iter().map(|c| self.extents[c]).collect()
+    }
+
+    /// FLOPs of the naive (un-decomposed) evaluation: one multiply-add
+    /// chain of length `inputs` per iteration-space point (§II-A).
+    pub fn naive_flops(&self) -> u128 {
+        self.iteration_space() * (self.inputs.len() as u128)
+    }
+}
+
+/// A single *binary* (or unary) tensor operation produced by the
+/// contraction-path decomposition — the unit the SOAP model analyzes and
+/// the planner distributes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BinaryOp {
+    /// Operand index strings (1 or 2 entries).
+    pub inputs: Vec<Vec<char>>,
+    /// IDs of the operands in the program's tensor table.
+    pub input_ids: Vec<usize>,
+    /// Output index string.
+    pub output: Vec<char>,
+    /// Output tensor id.
+    pub output_id: usize,
+}
+
+impl BinaryOp {
+    /// Indices contracted away by this op.
+    pub fn contracted(&self) -> Vec<char> {
+        let mut c: Vec<char> = self
+            .inputs
+            .iter()
+            .flatten()
+            .copied()
+            .filter(|i| !self.output.contains(i))
+            .collect();
+        c.sort_unstable();
+        c.dedup();
+        c
+    }
+
+    /// All distinct indices touched by this op.
+    pub fn all_indices(&self) -> Vec<char> {
+        let mut c: Vec<char> = self.inputs.iter().flatten().copied().collect();
+        c.extend(self.output.iter().copied());
+        c.sort_unstable();
+        c.dedup();
+        c
+    }
+
+    /// Multiply-add FLOPs given index extents: 2 * prod over all indices.
+    pub fn flops(&self, extents: &BTreeMap<char, usize>) -> u128 {
+        2 * self.all_indices().iter().map(|c| extents[c] as u128).product::<u128>()
+    }
+
+    /// Render as an einsum fragment, e.g. `ja,ka->jka`.
+    pub fn einsum(&self) -> String {
+        let ins: Vec<String> =
+            self.inputs.iter().map(|v| v.iter().collect::<String>()).collect();
+        format!("{}->{}", ins.join(","), self.output.iter().collect::<String>())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_example() -> EinsumSpec {
+        // §II worked example: ijk,ja,ka,al->il
+        EinsumSpec::parse(
+            "ijk,ja,ka,al->il",
+            &[vec![10, 11, 12], vec![11, 13], vec![12, 13], vec![13, 14]],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_paper_example() {
+        let s = paper_example();
+        assert_eq!(s.inputs.len(), 4);
+        assert_eq!(s.output, vec!['i', 'l']);
+        assert_eq!(s.extents[&'i'], 10);
+        assert_eq!(s.extents[&'a'], 13);
+        assert_eq!(s.indices(), vec!['a', 'i', 'j', 'k', 'l']);
+        assert_eq!(s.contracted(), vec!['a', 'j', 'k']);
+    }
+
+    #[test]
+    fn iteration_space_and_flops() {
+        let s = paper_example();
+        assert_eq!(s.iteration_space(), 10 * 11 * 12 * 13 * 14);
+        // §II-A: naive cost is 4 * |I| multiply ops (4 operands).
+        assert_eq!(s.naive_flops(), 4 * s.iteration_space());
+    }
+
+    #[test]
+    fn shapes() {
+        let s = paper_example();
+        assert_eq!(s.input_shape(0), vec![10, 11, 12]);
+        assert_eq!(s.input_shape(3), vec![13, 14]);
+        assert_eq!(s.output_shape(), vec![10, 14]);
+    }
+
+    #[test]
+    fn whitespace_tolerated() {
+        let s = EinsumSpec::parse("ij, jk -> ik", &[vec![2, 3], vec![3, 4]]).unwrap();
+        assert_eq!(s.output, vec!['i', 'k']);
+    }
+
+    #[test]
+    fn rejects_missing_arrow() {
+        assert!(EinsumSpec::parse("ij,jk", &[vec![2, 3], vec![3, 4]]).is_err());
+    }
+
+    #[test]
+    fn rejects_extent_mismatch() {
+        assert!(EinsumSpec::parse("ij,jk->ik", &[vec![2, 3], vec![4, 5]]).is_err());
+    }
+
+    #[test]
+    fn rejects_rank_mismatch() {
+        assert!(EinsumSpec::parse("ij,jk->ik", &[vec![2, 3, 7], vec![3, 4]]).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_output_index() {
+        assert!(EinsumSpec::parse("ij,jk->iz", &[vec![2, 3], vec![3, 4]]).is_err());
+    }
+
+    #[test]
+    fn rejects_trace() {
+        assert!(EinsumSpec::parse("ii->i", &[vec![3, 3]]).is_err());
+    }
+
+    #[test]
+    fn rejects_operand_count_mismatch() {
+        assert!(EinsumSpec::parse("ij,jk->ik", &[vec![2, 3]]).is_err());
+    }
+
+    #[test]
+    fn mttkrp_benchmarks_parse() {
+        // Table IV einsum strings.
+        for (expr, nshapes) in [
+            ("ijk,ja,ka->ia", 3),
+            ("ijk,ia,ka->ja", 3),
+            ("ijk,ia,ja->ka", 3),
+            ("ijklm,ja,ka,la,ma->ia", 5),
+            ("ijklm,ia,ja,la,ma->ka", 5),
+            ("ijklm,ia,ja,ka,la->ma", 5),
+            ("ijklm,jb,kc,ld,me->ibcde", 5),
+        ] {
+            let mut extents = BTreeMap::new();
+            let (lhs, _) = expr.split_once("->").unwrap();
+            let inputs: Vec<&str> = lhs.split(',').collect();
+            for c in expr.chars().filter(|c| c.is_ascii_alphabetic()) {
+                let e = 4 + (c as usize % 5);
+                extents.entry(c).or_insert(e);
+            }
+            let shapes: Vec<Vec<usize>> = inputs
+                .iter()
+                .map(|s| s.chars().map(|c| extents[&c]).collect())
+                .collect();
+            assert_eq!(shapes.len(), nshapes);
+            assert!(EinsumSpec::parse(expr, &shapes).is_ok(), "{expr}");
+        }
+    }
+
+    #[test]
+    fn binary_op_helpers() {
+        let op = BinaryOp {
+            inputs: vec![vec!['j', 'a'], vec!['k', 'a']],
+            input_ids: vec![1, 2],
+            output: vec!['j', 'k', 'a'],
+            output_id: 4,
+        };
+        assert_eq!(op.contracted(), Vec::<char>::new());
+        assert_eq!(op.all_indices(), vec!['a', 'j', 'k']);
+        assert_eq!(op.einsum(), "ja,ka->jka");
+        let mut ext = BTreeMap::new();
+        ext.insert('j', 3);
+        ext.insert('k', 4);
+        ext.insert('a', 5);
+        assert_eq!(op.flops(&ext), 2 * 60);
+    }
+}

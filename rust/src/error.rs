@@ -1,0 +1,57 @@
+//! Library-wide error type.
+
+use std::fmt;
+
+/// Errors surfaced by the Deinsum library.
+#[derive(Debug)]
+pub enum Error {
+    /// Malformed einsum string or inconsistent operand shapes.
+    Parse(String),
+    /// Shape/extent mismatch in a tensor operation.
+    Shape(String),
+    /// Planning failure (no valid grid, unsupported program, ...).
+    Plan(String),
+    /// PJRT runtime failure (artifact missing, compile/execute error).
+    Runtime(String),
+    /// I/O failure loading artifacts.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Parse(m) => write!(f, "einsum parse error: {m}"),
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Plan(m) => write!(f, "planning error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+/// Library-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Shorthand constructors used across modules.
+impl Error {
+    pub fn parse(m: impl Into<String>) -> Self {
+        Error::Parse(m.into())
+    }
+    pub fn shape(m: impl Into<String>) -> Self {
+        Error::Shape(m.into())
+    }
+    pub fn plan(m: impl Into<String>) -> Self {
+        Error::Plan(m.into())
+    }
+    pub fn runtime(m: impl Into<String>) -> Self {
+        Error::Runtime(m.into())
+    }
+}

@@ -1,0 +1,290 @@
+//! Cartesian process grids with MPI `Cart_create` / `Cart_sub` semantics
+//! (paper §II-C/D, Fig. 3) and the grid-dimension optimizer that matches
+//! grid shape to the SOAP-optimal tile proportions.
+//!
+//! Ranks are numbered row-major over grid coordinates (MPI's default
+//! ordering): the **last** dimension varies fastest.
+
+use crate::error::{Error, Result};
+
+/// An N-dimensional Cartesian process grid.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ProcessGrid {
+    dims: Vec<usize>,
+}
+
+impl ProcessGrid {
+    /// Create a grid with the given per-dimension sizes (all ≥ 1).
+    pub fn new(dims: &[usize]) -> Result<Self> {
+        if dims.is_empty() || dims.iter().any(|&d| d == 0) {
+            return Err(Error::plan(format!("invalid grid dims {dims:?}")));
+        }
+        Ok(ProcessGrid { dims: dims.to_vec() })
+    }
+
+    /// Per-dimension sizes.
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// Grid dimensionality.
+    pub fn ndim(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Total process count `P = Π P_j`.
+    pub fn size(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Coordinates of `rank` (row-major, last dim fastest).
+    pub fn coords(&self, rank: usize) -> Vec<usize> {
+        debug_assert!(rank < self.size());
+        let mut c = vec![0usize; self.dims.len()];
+        let mut rem = rank;
+        for d in (0..self.dims.len()).rev() {
+            c[d] = rem % self.dims[d];
+            rem /= self.dims[d];
+        }
+        c
+    }
+
+    /// Rank of `coords` (inverse of [`coords`](Self::coords)).
+    pub fn rank(&self, coords: &[usize]) -> usize {
+        debug_assert_eq!(coords.len(), self.dims.len());
+        let mut r = 0usize;
+        for (d, &c) in coords.iter().enumerate() {
+            debug_assert!(c < self.dims[d]);
+            r = r * self.dims[d] + c;
+        }
+        r
+    }
+
+    /// `MPI_Cart_sub`: drop the dimensions where `remain[d]` is false.
+    ///
+    /// Produces `Π_{!remain} P_d` disjoint sub-grids, each containing
+    /// `Π_{remain} P_d` processes (paper Listing 2 / Fig. 3).  The
+    /// returned [`SubgridSet`] maps every rank to its group.
+    pub fn cart_sub(&self, remain: &[bool]) -> Result<SubgridSet> {
+        if remain.len() != self.dims.len() {
+            return Err(Error::plan("remain length != grid ndim"));
+        }
+        let mut groups: Vec<Vec<usize>> = Vec::new();
+        let mut key_of_rank = vec![0usize; self.size()];
+        // Group key: coordinates over the DROPPED dims, flattened.
+        let dropped: Vec<usize> =
+            (0..self.dims.len()).filter(|&d| !remain[d]).collect();
+        let mut key_index: std::collections::HashMap<Vec<usize>, usize> =
+            std::collections::HashMap::new();
+        for r in 0..self.size() {
+            let c = self.coords(r);
+            let key: Vec<usize> = dropped.iter().map(|&d| c[d]).collect();
+            let gid = *key_index.entry(key).or_insert_with(|| {
+                groups.push(Vec::new());
+                groups.len() - 1
+            });
+            groups[gid].push(r);
+            key_of_rank[r] = gid;
+        }
+        Ok(SubgridSet { remain: remain.to_vec(), groups, group_of_rank: key_of_rank })
+    }
+}
+
+/// The result of a `Cart_sub`: disjoint rank groups, one per combination
+/// of dropped-dimension coordinates.
+#[derive(Debug, Clone)]
+pub struct SubgridSet {
+    /// Which parent dims the sub-grids keep.
+    pub remain: Vec<bool>,
+    /// Rank groups (each sorted ascending; index = group id).
+    pub groups: Vec<Vec<usize>>,
+    /// Group id of every parent rank.
+    pub group_of_rank: Vec<usize>,
+}
+
+impl SubgridSet {
+    /// Number of sub-grids.
+    pub fn n_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// The group containing `rank`.
+    pub fn group(&self, rank: usize) -> &[usize] {
+        &self.groups[self.group_of_rank[rank]]
+    }
+
+    /// Root (lowest rank) of the group containing `rank`.
+    pub fn root(&self, rank: usize) -> usize {
+        self.group(rank)[0]
+    }
+}
+
+/// Choose grid dimensions for `p` processes over `n` iteration-space
+/// dimensions, matching the per-dimension *tile counts* `N_d / t_d` the
+/// SOAP analysis produced (§II-C: grid shape follows the optimal tiling).
+///
+/// Enumerates every ordered factorization of `p` (divisor recursion; `p`
+/// ≤ thousands in practice) and picks the one minimizing the squared
+/// log-distance to the ideal proportions, subject to `P_d ≤ N_d`.
+pub fn optimize_grid_dims(p: usize, extents: &[usize], weights: &[f64]) -> Vec<usize> {
+    let n = extents.len();
+    assert_eq!(weights.len(), n);
+    if n == 0 {
+        return vec![];
+    }
+    // Ideal (real-valued) grid: P_d ∝ weights, normalized to product = p,
+    // in log space.
+    let logsum: f64 = weights.iter().map(|w| w.max(1e-12).ln()).sum();
+    let shift = ((p as f64).ln() - logsum) / n as f64;
+    let ideal: Vec<f64> = weights.iter().map(|w| w.max(1e-12).ln() + shift).collect();
+
+    let mut best: Option<(Vec<usize>, f64)> = None;
+    let mut current = vec![1usize; n];
+    factorize_rec(p, 0, n, extents, &ideal, &mut current, &mut best);
+    best.map(|(dims, _)| dims).unwrap_or_else(|| {
+        // p has a prime factor exceeding every extent: fall back to
+        // putting everything in the largest dim.
+        let mut dims = vec![1usize; n];
+        let dmax = (0..n).max_by_key(|&d| extents[d]).unwrap_or(0);
+        dims[dmax] = p;
+        dims
+    })
+}
+
+fn factorize_rec(
+    p_left: usize,
+    d: usize,
+    n: usize,
+    extents: &[usize],
+    ideal: &[f64],
+    current: &mut Vec<usize>,
+    best: &mut Option<(Vec<usize>, f64)>,
+) {
+    if d == n - 1 {
+        if p_left > extents[d] {
+            return;
+        }
+        current[d] = p_left;
+        let score: f64 = current
+            .iter()
+            .zip(ideal)
+            .map(|(&pd, &id)| {
+                let diff = (pd as f64).ln() - id;
+                diff * diff
+            })
+            .sum();
+        if best.as_ref().map(|(_, s)| score < *s).unwrap_or(true) {
+            *best = Some((current.clone(), score));
+        }
+        return;
+    }
+    let mut f = 1usize;
+    while f <= p_left && f <= extents[d] {
+        if p_left % f == 0 {
+            current[d] = f;
+            factorize_rec(p_left / f, d + 1, n, extents, ideal, current, best);
+        }
+        f += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coords_rank_roundtrip() {
+        let g = ProcessGrid::new(&[2, 3, 4]).unwrap();
+        assert_eq!(g.size(), 24);
+        for r in 0..24 {
+            assert_eq!(g.rank(&g.coords(r)), r);
+        }
+        // row-major, last fastest (MPI order)
+        assert_eq!(g.coords(0), vec![0, 0, 0]);
+        assert_eq!(g.coords(1), vec![0, 0, 1]);
+        assert_eq!(g.coords(4), vec![0, 1, 0]);
+        assert_eq!(g.coords(12), vec![1, 0, 0]);
+    }
+
+    #[test]
+    fn rejects_zero_dims() {
+        assert!(ProcessGrid::new(&[2, 0]).is_err());
+        assert!(ProcessGrid::new(&[]).is_err());
+    }
+
+    #[test]
+    fn paper_fig3_subgrid_for_matrix_a() {
+        // §II-D Listing 2 / Fig. 3: grid (2,2,2,1) over (i,j,k,a).  The
+        // processes replicating one A[j,a]-block differ in their (i,k)
+        // coords, so the replication sub-grids keep i and k:
+        // remain = {true, false, true, false}.
+        let g = ProcessGrid::new(&[2, 2, 2, 1]).unwrap();
+        let sub = g.cart_sub(&[true, false, true, false]).unwrap();
+        // P_j * P_a = 2 sub-grids, each with P_i * P_k = 4 processes.
+        assert_eq!(sub.n_groups(), 2);
+        for grp in &sub.groups {
+            assert_eq!(grp.len(), 4);
+        }
+        // Table II: ranks {0,1,4,5} share A[:5,:], ranks {2,3,6,7} share
+        // A[5:,:]. Grid (2,2,2,1) coords: rank = i*4 + j*2 + k.
+        assert_eq!(sub.group(0).to_vec(), vec![0, 1, 4, 5]);
+        assert_eq!(sub.group(2).to_vec(), vec![2, 3, 6, 7]);
+    }
+
+    #[test]
+    fn cart_sub_all_remain_is_identity() {
+        let g = ProcessGrid::new(&[2, 2]).unwrap();
+        let sub = g.cart_sub(&[true, true]).unwrap();
+        assert_eq!(sub.n_groups(), 1);
+        assert_eq!(sub.groups[0], vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn cart_sub_none_remain_is_singletons() {
+        let g = ProcessGrid::new(&[2, 2]).unwrap();
+        let sub = g.cart_sub(&[false, false]).unwrap();
+        assert_eq!(sub.n_groups(), 4);
+        for (r, grp) in sub.groups.iter().enumerate() {
+            assert_eq!(grp, &vec![r]);
+        }
+    }
+
+    #[test]
+    fn subgrid_root_is_min_rank() {
+        let g = ProcessGrid::new(&[2, 3]).unwrap();
+        let sub = g.cart_sub(&[false, true]).unwrap();
+        assert_eq!(sub.n_groups(), 2);
+        assert_eq!(sub.root(4), 3); // ranks 3,4,5 form the i=1 row
+    }
+
+    #[test]
+    fn grid_optimizer_balanced_cube() {
+        // 8 processes over 3 equal dims -> (2,2,2).
+        let dims = optimize_grid_dims(8, &[4096, 4096, 4096], &[1.0, 1.0, 1.0]);
+        assert_eq!(dims, vec![2, 2, 2]);
+    }
+
+    #[test]
+    fn grid_optimizer_respects_weights() {
+        // §II-C worked example: MTTKRP term on P=8 with a rank dim whose
+        // tile covers the whole extent (weight 1) -> grid (2,2,2,1).
+        let dims = optimize_grid_dims(8, &[10, 10, 10, 10], &[2.0, 2.0, 2.0, 1.0]);
+        assert_eq!(dims, vec![2, 2, 2, 1]);
+    }
+
+    #[test]
+    fn grid_optimizer_respects_extent_caps() {
+        // A dim of extent 1 can never be split.
+        let dims = optimize_grid_dims(16, &[1, 64, 64], &[1.0, 4.0, 4.0]);
+        assert_eq!(dims[0], 1);
+        assert_eq!(dims.iter().product::<usize>(), 16);
+    }
+
+    #[test]
+    fn grid_optimizer_total_is_p() {
+        for p in [1usize, 2, 4, 6, 8, 12, 32, 512] {
+            let dims = optimize_grid_dims(p, &[4096, 4096, 4096], &[1.0, 1.0, 1.0]);
+            assert_eq!(dims.iter().product::<usize>(), p, "p={p}");
+        }
+    }
+}

@@ -1,0 +1,41 @@
+//! # Deinsum — practically I/O optimal multilinear algebra
+//!
+//! Reproduction of *Deinsum: Practically I/O Optimal Multilinear Algebra*
+//! (Ziogas et al., 2022) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! Given an arbitrary einsum over dense tensors, the library:
+//!
+//! 1. decomposes the n-ary contraction into FLOP-minimizing binary
+//!    operations ([`contraction`], paper §II-A);
+//! 2. derives tight I/O lower bounds and the matching tile sizes with the
+//!    SOAP combinatorial model ([`soap`], §IV), including the paper's
+//!    headline MTTKRP bound `rho = S^(2/3)/3`;
+//! 3. block-distributes iteration spaces onto Cartesian process grids with
+//!    input replication over sub-grids ([`grid`], [`dist`], §II-D, §V-B);
+//! 4. infers the communication to redistribute intermediates between grids
+//!    ([`redist`], §V-C);
+//! 5. plans ([`planner`]) and executes ([`coordinator`]) the distributed
+//!    program on a simulated multi-rank machine ([`sim`]) whose local tile
+//!    kernels are AOT-compiled JAX/Pallas artifacts run through PJRT
+//!    ([`runtime`]) with native fallbacks ([`tensor`]).
+//!
+//! The CTF-like comparator the paper evaluates against lives in
+//! [`baseline`]; the Table IV/V benchmark suite in [`bench_support`].
+
+pub mod baseline;
+pub mod bench_support;
+pub mod contraction;
+pub mod coordinator;
+pub mod dist;
+pub mod einsum;
+pub mod error;
+pub mod grid;
+pub mod planner;
+pub mod redist;
+pub mod runtime;
+pub mod sim;
+pub mod soap;
+pub mod tensor;
+
+pub use error::{Error, Result};
+pub use tensor::Tensor;

@@ -1,0 +1,598 @@
+//! End-to-end planning: einsum string → distributed schedule (paper Fig. 2).
+//!
+//! The pipeline (§II): decompose into FLOP-minimal binary ops
+//! ([`crate::contraction`]), find the I/O-minimal kernel fusion
+//! ([`crate::soap::sdg`]), then for each fused **term**:
+//!
+//! 1. derive the SOAP-optimal tile proportions and factorize `P` into a
+//!    Cartesian grid matching them (§II-C);
+//! 2. block-distribute every operand onto the term grid with replication
+//!    over the unmapped dims (§II-D);
+//! 3. mark the reduction sub-grids (partial-result Allreduce);
+//! 4. infer redistribution plans for intermediates flowing between terms
+//!    with different distributions (§V-C).
+//!
+//! The resulting [`Plan`] is the paper's "intermediate program" (§II-E):
+//! [`Plan::render`] prints the same grid/sub-grid/compute/Allreduce/
+//! Redistribute structure the paper's generated Python shows.
+
+use std::collections::BTreeMap;
+
+use crate::contraction::{optimize, Path};
+use crate::dist::TensorDist;
+use crate::einsum::{BinaryOp, EinsumSpec};
+use crate::error::{Error, Result};
+use crate::grid::{optimize_grid_dims, ProcessGrid};
+use crate::redist::{self, RedistPlan};
+use crate::soap::bound::Statement;
+use crate::soap::sdg::{best_fusion, FusedGroup};
+use crate::soap::{self, IoBound};
+
+/// Planner knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct PlannerConfig {
+    /// Fast-memory size in elements for the SOAP analysis (per-process).
+    pub s_elements: f64,
+    /// Enable cross-statement fusion (§IV-C). The CTF-like baseline
+    /// disables it.
+    pub fuse: bool,
+    /// Use SOAP tile proportions for grid shapes.  When false, grids are
+    /// balanced by raw extents (the baseline's heuristic).
+    pub soap_grids: bool,
+}
+
+impl Default for PlannerConfig {
+    fn default() -> Self {
+        PlannerConfig { s_elements: (1u64 << 26) as f64, fuse: true, soap_grids: true }
+    }
+}
+
+/// How a term's local tiles are computed on each rank.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum LocalKernel {
+    /// Fused MTTKRP: term input `x_input` is the big tensor, the rest are
+    /// rank-R factors; `mode` is the kept mode of X.  Served by the L1
+    /// Pallas artifact through the PJRT engine.
+    Mttkrp { x_input: usize, mode: usize, factor_inputs: Vec<usize> },
+    /// Generic: execute the term's constituent binary ops in order on the
+    /// local tiles (each op via the folded-GEMM einsum2 path).
+    Seq,
+}
+
+/// One input operand of a term.
+#[derive(Debug, Clone)]
+pub struct TermInput {
+    /// Tensor-table id.
+    pub id: usize,
+    /// Index string.
+    pub indices: Vec<char>,
+    /// Distribution on the term grid.
+    pub dist: TensorDist,
+}
+
+/// A fused group scheduled on its own Cartesian grid.
+#[derive(Debug, Clone)]
+pub struct TermPlan {
+    /// Display name (`term0`, `term1`, ...).
+    pub name: String,
+    /// Term iteration indices (sorted) and extents.
+    pub indices: Vec<char>,
+    pub extents: Vec<usize>,
+    /// The Cartesian process grid over `indices`.
+    pub grid: ProcessGrid,
+    /// Per-index nominal block size `ceil(N_d / P_d)`.
+    pub block: Vec<usize>,
+    /// Term inputs with their distributions.
+    pub inputs: Vec<TermInput>,
+    /// Output tensor id, index string, distribution.
+    pub output_id: usize,
+    pub output_indices: Vec<char>,
+    pub output_dist: TensorDist,
+    /// Grid dims over contracted indices (P_d > 1 ⇒ Allreduce needed).
+    pub reduced_grid_dims: Vec<usize>,
+    /// Local kernel selection.
+    pub kernel: LocalKernel,
+    /// Constituent binary ops (for `Seq` execution and rendering).
+    pub ops: Vec<BinaryOp>,
+    /// The term's SOAP bound at the analysis S.
+    pub bound: IoBound,
+}
+
+impl TermPlan {
+    /// Grid dim handling iteration index `c`.
+    pub fn grid_dim_of(&self, c: char) -> usize {
+        self.indices.iter().position(|&i| i == c).expect("index in term")
+    }
+
+    /// Block size of index `c`.
+    pub fn block_of(&self, c: char) -> usize {
+        self.block[self.grid_dim_of(c)]
+    }
+}
+
+/// A redistribution edge between terms.
+#[derive(Debug, Clone)]
+pub struct Move {
+    /// Tensor flowing between the terms.
+    pub tensor_id: usize,
+    /// Producing term index (in `Plan::terms`).
+    pub from_term: usize,
+    /// Consuming term index.
+    pub to_term: usize,
+    /// Input slot in the consuming term.
+    pub to_slot: usize,
+    /// Message-matched plan (§V-C).
+    pub plan: RedistPlan,
+    pub src: TensorDist,
+    pub dst: TensorDist,
+}
+
+/// A complete distributed schedule.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub spec: EinsumSpec,
+    pub path: Path,
+    pub terms: Vec<TermPlan>,
+    pub moves: Vec<Move>,
+    /// Rank count.
+    pub p: usize,
+    /// Total modeled I/O lower bound (the SOAP Q at the analysis S).
+    pub total_q: f64,
+}
+
+/// Detect the fused-MTTKRP pattern in a group (one order-≥3 tensor, all
+/// other inputs rank-R matrices sharing index `r`, output = (mode, r)).
+fn detect_mttkrp(group: &FusedGroup) -> Option<LocalKernel> {
+    if group.outputs.len() != 1 || group.inputs.len() < 3 {
+        return None;
+    }
+    let out = &group.outputs[0].1;
+    if out.len() != 2 {
+        return None;
+    }
+    // X = unique input with order >= 3.
+    let big: Vec<usize> = group
+        .inputs
+        .iter()
+        .enumerate()
+        .filter(|(_, (_, idx))| idx.len() >= 3)
+        .map(|(slot, _)| slot)
+        .collect();
+    if big.len() != 1 {
+        return None;
+    }
+    let x_slot = big[0];
+    let x_idx = &group.inputs[x_slot].1;
+    // All other inputs are matrices (m_c, r) with m_c ∈ X, sharing r.
+    let mut r_char: Option<char> = None;
+    let mut factor_slots = Vec::new();
+    let mut covered: Vec<char> = Vec::new();
+    for (slot, (_, idx)) in group.inputs.iter().enumerate() {
+        if slot == x_slot {
+            continue;
+        }
+        if idx.len() != 2 {
+            return None;
+        }
+        let (a, b) = (idx[0], idx[1]);
+        let (m, r) = if x_idx.contains(&a) && !x_idx.contains(&b) {
+            (a, b)
+        } else if x_idx.contains(&b) && !x_idx.contains(&a) {
+            (b, a)
+        } else {
+            return None;
+        };
+        match r_char {
+            None => r_char = Some(r),
+            Some(rc) if rc == r => {}
+            _ => return None,
+        }
+        covered.push(m);
+        factor_slots.push(slot);
+    }
+    let r = r_char?;
+    // Output must be (mode, r) with mode the one X index not covered.
+    let mode_char = out.iter().copied().find(|&c| c != r)?;
+    if !out.contains(&r) || !x_idx.contains(&mode_char) {
+        return None;
+    }
+    // Every X index except mode must be covered by exactly one factor.
+    let mut rest: Vec<char> =
+        x_idx.iter().copied().filter(|&c| c != mode_char).collect();
+    rest.sort_unstable();
+    let mut cov = covered.clone();
+    cov.sort_unstable();
+    if rest != cov {
+        return None;
+    }
+    let mode = x_idx.iter().position(|&c| c == mode_char).unwrap();
+    // Order factor slots by X's mode order (the engine's convention).
+    let mut ordered = Vec::new();
+    for &c in x_idx.iter() {
+        if c == mode_char {
+            continue;
+        }
+        let slot = group
+            .inputs
+            .iter()
+            .enumerate()
+            .position(|(s, (_, idx))| {
+                s != x_slot && idx.contains(&c) && factor_slots.contains(&s)
+            })
+            .unwrap();
+        ordered.push(slot);
+    }
+    Some(LocalKernel::Mttkrp { x_input: x_slot, mode, factor_inputs: ordered })
+}
+
+/// Plan a distributed schedule for `spec` on `p` ranks.
+pub fn plan(spec: &EinsumSpec, p: usize, cfg: &PlannerConfig) -> Result<Plan> {
+    let path = optimize(spec)?;
+    let fusion = if cfg.fuse {
+        best_fusion(&path, spec, cfg.s_elements)?
+    } else {
+        // Baseline: one group per op (no cross-statement fusion).
+        let mut groups = Vec::new();
+        for q in 0..path.ops.len() {
+            groups.push(single_group(&path, spec, q, cfg.s_elements)?);
+        }
+        crate::soap::Fusion {
+            total_q: groups.iter().map(|g| g.bound.q).sum(),
+            candidates: 1,
+            groups,
+        }
+    };
+
+    // Track where each tensor id lives: (term index, dist, index string).
+    let mut locations: BTreeMap<usize, (usize, TensorDist, Vec<char>)> = BTreeMap::new();
+    let mut terms: Vec<TermPlan> = Vec::new();
+    let mut moves: Vec<Move> = Vec::new();
+
+    for (ti, group) in fusion.groups.iter().enumerate() {
+        if group.outputs.len() != 1 {
+            return Err(Error::plan(format!(
+                "term {ti}: {} outputs unsupported",
+                group.outputs.len()
+            )));
+        }
+        let indices: Vec<char> = group.indices.clone();
+        let extents: Vec<usize> =
+            indices.iter().map(|c| spec.extents[c]).collect();
+
+        // Grid shape: SOAP tile proportions (unclamped extents give clean
+        // asymptotic ratios; see DESIGN.md) or raw-extent balance.
+        let out_idx_chars = &group.outputs[0].1;
+        // Weight_d = N_d / t_d: how many SOAP-optimal tiles span dim d.
+        // Values < 1 mean the optimal tile already covers the extent —
+        // prefer NOT splitting that dim (e.g. the rank dim R=24 whose
+        // optimal tile is S^{2/3}/2, §IV-E / Table I's P_a = 1).
+        let mut weights: Vec<f64> = if cfg.soap_grids {
+            let unclamped = unclamped_bound(group, spec, cfg.s_elements)?;
+            indices
+                .iter()
+                .zip(&extents)
+                .map(|(c, &n)| n as f64 / unclamped.tiles[c])
+                .collect()
+        } else {
+            extents.iter().map(|&n| n as f64).collect()
+        };
+        // Tie-bias: among equal-weight dims prefer splitting *output*
+        // indices — they never need an Allreduce (§II-D).
+        if cfg.soap_grids {
+            for (w, c) in weights.iter_mut().zip(&indices) {
+                if out_idx_chars.contains(c) {
+                    *w *= 1.2;
+                }
+            }
+        }
+        let gdims = optimize_grid_dims(p, &extents, &weights);
+        let grid = ProcessGrid::new(&gdims)?;
+        let block: Vec<usize> =
+            extents.iter().zip(&gdims).map(|(&n, &g)| n.div_ceil(g)).collect();
+
+        // Distributions.
+        let mk_dist = |idx: &[char]| -> Result<TensorDist> {
+            let ext: Vec<usize> = idx.iter().map(|c| spec.extents[c]).collect();
+            let gd: Vec<usize> = idx
+                .iter()
+                .map(|c| indices.iter().position(|i| i == c).unwrap())
+                .collect();
+            TensorDist::new(&ext, &grid, &gd)
+        };
+        let mut term_inputs = Vec::new();
+        for (slot, (id, idx)) in group.inputs.iter().enumerate() {
+            let dist = mk_dist(idx)?;
+            // Intermediates flowing in need a redistribution edge.
+            if let Some((from_term, src, _)) = locations.get(id) {
+                let rp = redist::plan(src, &dist)?;
+                moves.push(Move {
+                    tensor_id: *id,
+                    from_term: *from_term,
+                    to_term: ti,
+                    to_slot: slot,
+                    plan: rp,
+                    src: src.clone(),
+                    dst: dist.clone(),
+                });
+            }
+            term_inputs.push(TermInput { id: *id, indices: idx.clone(), dist });
+        }
+        let (out_id, out_idx) = group.outputs[0].clone();
+        let output_dist = mk_dist(&out_idx)?;
+        locations.insert(out_id, (ti, output_dist.clone(), out_idx.clone()));
+
+        let reduced_grid_dims: Vec<usize> = indices
+            .iter()
+            .enumerate()
+            .filter(|&(d, c)| !out_idx.contains(c) && gdims[d] > 1)
+            .map(|(d, _)| d)
+            .collect();
+
+        let kernel = detect_mttkrp(group).unwrap_or(LocalKernel::Seq);
+        let ops: Vec<BinaryOp> =
+            group.op_indices.iter().map(|&q| path.ops[q].clone()).collect();
+
+        terms.push(TermPlan {
+            name: format!("term{ti}"),
+            indices,
+            extents,
+            grid,
+            block,
+            inputs: term_inputs,
+            output_id: out_id,
+            output_indices: out_idx,
+            output_dist,
+            reduced_grid_dims,
+            kernel,
+            ops,
+            bound: group.bound.clone(),
+        });
+    }
+
+    Ok(Plan { spec: spec.clone(), path, terms, moves, p, total_q: fusion.total_q })
+}
+
+/// Bound a single-op group (baseline helper: the op `q` of `path` as its
+/// own unfused term).
+fn single_group(
+    path: &Path,
+    spec: &EinsumSpec,
+    q: usize,
+    s: f64,
+) -> Result<FusedGroup> {
+    let sub = Path { ops: vec![path.ops[q].clone()], flops: 0, n_inputs: path.n_inputs };
+    let groups = crate::soap::sdg::best_fusion(&sub, spec, s)?;
+    let mut g = groups.groups.into_iter().next().unwrap();
+    g.op_indices = vec![q]; // renumber into the original path
+    Ok(g)
+}
+
+/// The group's SOAP bound with extents unclamped (for grid proportions).
+fn unclamped_bound(group: &FusedGroup, spec: &EinsumSpec, s: f64) -> Result<IoBound> {
+    let extents: BTreeMap<char, f64> =
+        group.indices.iter().map(|&c| (c, 1e15)).collect();
+    let accesses: Vec<soap::bound::AccessSet> = group
+        .inputs
+        .iter()
+        .chain(group.outputs.iter())
+        .map(|(id, idx)| soap::bound::AccessSet {
+            name: format!("t{id}"),
+            indices: idx.clone(),
+        })
+        .collect();
+    let st = Statement::new(extents, accesses)?;
+    let _ = spec;
+    Ok(st.io_bound(s))
+}
+
+impl Plan {
+    /// Render as the paper's §II-E intermediate program.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "# plan for P={} ranks, {} term(s), Q_lower={:.3e} elems\n",
+            self.p,
+            self.terms.len(),
+            self.total_q
+        ));
+        for (ti, t) in self.terms.iter().enumerate() {
+            let idx: String = t.indices.iter().collect();
+            s.push_str(&format!(
+                "grid{ti} = mpi.Cart_create(dims={:?})  # over ({idx})\n",
+                t.grid.dims()
+            ));
+            for mv in self.moves.iter().filter(|m| m.to_term == ti) {
+                s.push_str(&format!(
+                    "t{} = deinsum.Redistribute(t{}, comm1=grid{}, comm2=grid{})  # {} msgs, {} elems remote\n",
+                    mv.tensor_id,
+                    mv.tensor_id,
+                    mv.from_term,
+                    ti,
+                    mv.plan.messages.len(),
+                    mv.plan.remote_volume
+                ));
+            }
+            for op in &t.ops {
+                s.push_str(&format!("# {}\n", op.einsum()));
+            }
+            let kern = match &t.kernel {
+                LocalKernel::Mttkrp { mode, .. } => format!("fused MTTKRP (mode {mode})"),
+                LocalKernel::Seq => "local binary-op sequence".to_string(),
+            };
+            let out_idx: String = t.output_indices.iter().collect();
+            s.push_str(&format!(
+                "t{} = {}  # -> {out_idx}, block {:?}\n",
+                t.output_id, kern, t.block
+            ));
+            if !t.reduced_grid_dims.is_empty() {
+                let remain: Vec<bool> =
+                    (0..t.grid.ndim()).map(|d| t.reduced_grid_dims.contains(&d)).collect();
+                s.push_str(&format!(
+                    "mpi.Allreduce(t{}, comm=mpi.Cart_sub(grid{ti}, remain={:?}))\n",
+                    t.output_id, remain
+                ));
+            }
+        }
+        s
+    }
+
+    /// Total remote redistribution volume (elements).
+    pub fn redist_volume(&self) -> usize {
+        self.moves.iter().map(|m| m.plan.remote_volume).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> PlannerConfig {
+        PlannerConfig::default()
+    }
+
+    #[test]
+    fn paper_worked_example_structure() {
+        // §II: ijk,ja,ka,al->il on P=8, at paper-relevant extents (the
+        // illustrative N=10 of Tables I/II fits entirely in fast memory,
+        // where the model correctly fuses everything into one term; the
+        // two-term [MTTKRP, MM] structure is the optimum at real sizes).
+        let n = 1 << 12;
+        let spec = EinsumSpec::parse(
+            "ijk,ja,ka,al->il",
+            &[vec![n, n, n], vec![n, 24], vec![n, 24], vec![24, n]],
+        )
+        .unwrap();
+        let plan = plan(&spec, 8, &cfg()).unwrap();
+        assert_eq!(plan.terms.len(), 2, "MTTKRP term + MM term");
+        let t0 = &plan.terms[0];
+        // Term 0: 4-dim grid over (a,i,j,k); the paper's (2,2,2,1) with
+        // the rank dim unsplit.
+        assert_eq!(t0.grid.size(), 8);
+        let a_dim = t0.grid_dim_of('a');
+        assert_eq!(t0.grid.dims()[a_dim], 1, "rank dim must not be split");
+        assert!(matches!(t0.kernel, LocalKernel::Mttkrp { .. }));
+        // Term 1: MM over (a,i,l).
+        let t1 = &plan.terms[1];
+        assert_eq!(t1.grid.size(), 8);
+        assert_eq!(t1.ops.len(), 1);
+        // There is exactly one redistribution: t1 (ia) between the terms.
+        assert_eq!(plan.moves.len(), 1);
+        assert_eq!(plan.moves[0].from_term, 0);
+        assert_eq!(plan.moves[0].to_term, 1);
+    }
+
+    #[test]
+    fn mttkrp_detection_order3() {
+        let spec = EinsumSpec::parse(
+            "ijk,ja,ka->ia",
+            &[vec![64, 64, 64], vec![64, 24], vec![64, 24]],
+        )
+        .unwrap();
+        let p = plan(&spec, 4, &cfg()).unwrap();
+        assert_eq!(p.terms.len(), 1);
+        match &p.terms[0].kernel {
+            LocalKernel::Mttkrp { x_input, mode, factor_inputs } => {
+                assert_eq!(p.terms[0].inputs[*x_input].indices, vec!['i', 'j', 'k']);
+                assert_eq!(*mode, 0);
+                assert_eq!(factor_inputs.len(), 2);
+            }
+            k => panic!("expected MTTKRP kernel, got {k:?}"),
+        }
+    }
+
+    #[test]
+    fn mttkrp_mode1_detection() {
+        let spec = EinsumSpec::parse(
+            "ijk,ia,ka->ja",
+            &[vec![64, 64, 64], vec![64, 24], vec![64, 24]],
+        )
+        .unwrap();
+        let p = plan(&spec, 4, &cfg()).unwrap();
+        match &p.terms[0].kernel {
+            LocalKernel::Mttkrp { mode, .. } => assert_eq!(*mode, 1),
+            k => panic!("expected MTTKRP, got {k:?}"),
+        }
+    }
+
+    #[test]
+    fn baseline_config_does_not_fuse() {
+        let spec = EinsumSpec::parse(
+            "ijk,ja,ka->ia",
+            &[vec![64, 64, 64], vec![64, 24], vec![64, 24]],
+        )
+        .unwrap();
+        let base = PlannerConfig { fuse: false, soap_grids: false, ..cfg() };
+        let p = plan(&spec, 4, &base).unwrap();
+        assert_eq!(p.terms.len(), 2, "unfused: KRP term + TDOT term");
+        assert!(matches!(p.terms[0].kernel, LocalKernel::Seq));
+        // The KRP intermediate (jka) flows through a redistribution.
+        assert_eq!(p.moves.len(), 1);
+    }
+
+    #[test]
+    fn single_gemm_plan() {
+        let spec =
+            EinsumSpec::parse("ij,jk->ik", &[vec![256, 256], vec![256, 256]]).unwrap();
+        let p = plan(&spec, 8, &cfg()).unwrap();
+        assert_eq!(p.terms.len(), 1);
+        assert!(p.moves.is_empty());
+        assert_eq!(p.terms[0].grid.size(), 8);
+    }
+
+    #[test]
+    fn reduction_dims_marked() {
+        // GEMM on enough ranks that the contracted dim j gets split.
+        let spec =
+            EinsumSpec::parse("ij,jk->ik", &[vec![4096, 4096], vec![4096, 4096]]).unwrap();
+        let p = plan(&spec, 8, &cfg()).unwrap();
+        let t = &p.terms[0];
+        let j_dim = t.grid_dim_of('j');
+        if t.grid.dims()[j_dim] > 1 {
+            assert!(t.reduced_grid_dims.contains(&j_dim));
+        }
+        // i and k are output dims: never in reduced set.
+        assert!(!t.reduced_grid_dims.contains(&t.grid_dim_of('i')));
+        assert!(!t.reduced_grid_dims.contains(&t.grid_dim_of('k')));
+    }
+
+    #[test]
+    fn blocks_cover_extents() {
+        let spec = EinsumSpec::parse(
+            "ijk,ja,ka->ia",
+            &[vec![100, 90, 80], vec![90, 24], vec![80, 24]],
+        )
+        .unwrap();
+        let p = plan(&spec, 6, &cfg()).unwrap();
+        let t = &p.terms[0];
+        for (d, (&b, &n)) in t.block.iter().zip(&t.extents).enumerate() {
+            assert!(b * t.grid.dims()[d] >= n, "dim {d} under-covered");
+        }
+    }
+
+    #[test]
+    fn render_mentions_grids_and_terms() {
+        let n = 1 << 12;
+        let spec = EinsumSpec::parse(
+            "ijk,ja,ka,al->il",
+            &[vec![n, n, n], vec![n, 24], vec![n, 24], vec![24, n]],
+        )
+        .unwrap();
+        let p = plan(&spec, 8, &cfg()).unwrap();
+        let r = p.render();
+        assert!(r.contains("Cart_create"));
+        assert!(r.contains("Redistribute"));
+        assert!(r.contains("fused MTTKRP"));
+    }
+
+    #[test]
+    fn p1_plans_are_trivial_grids() {
+        let spec = EinsumSpec::parse(
+            "ijk,ja,ka->ia",
+            &[vec![32, 32, 32], vec![32, 8], vec![32, 8]],
+        )
+        .unwrap();
+        let p = plan(&spec, 1, &cfg()).unwrap();
+        assert_eq!(p.terms[0].grid.size(), 1);
+        assert!(p.terms[0].reduced_grid_dims.is_empty());
+    }
+}

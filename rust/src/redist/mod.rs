@@ -1,0 +1,385 @@
+//! Data redistribution between block distributions (paper §V-C).
+//!
+//! When consecutive terms distribute a shared tensor differently, the
+//! tensor must move.  The paper derives the per-dimension message
+//! matching analytically (Eqs. 19–28): each source block decomposes into
+//! at most `k ≤ ceil((B_y − 1)/B_x) + 1` contiguous segments (Eq. 26),
+//! each exchanged with exactly one destination block; Eq. 28 bounds the
+//! candidate destination processes so matching is O(segments), never
+//! O(elements).  Multi-dimensional messages are the Cartesian products of
+//! the per-dimension segments (message aggregation: one box = one
+//! message).
+//!
+//! Replication is handled on both sides: the *canonical owner* (lowest
+//! replica rank) sends, and every destination replica receives.
+
+use crate::dist::TensorDist;
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+
+/// One per-dimension overlap segment between a source and a destination
+/// block (Eqs. 25/27 solved as interval intersection).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Segment {
+    /// Source block index `p^(x)` in this dimension.
+    pub src_block: usize,
+    /// Destination block index `p^(y)`.
+    pub dst_block: usize,
+    /// Global start coordinate of the overlap.
+    pub start: usize,
+    /// Overlap length.
+    pub len: usize,
+}
+
+/// Per-dimension message matching: all (src block, dst block) overlap
+/// segments for a dimension of extent `n` split into blocks of `bx`
+/// (source) and `by` (destination).
+///
+/// Implements the Eq. 28 candidate loop: for each source block, only
+/// `ceil((p_x B_x + 1)/B_y) − 1 ≤ p_y < ceil(((p_x + 1) B_x)/B_y)`
+/// destination blocks can overlap.
+pub fn dim_segments(n: usize, bx: usize, by: usize) -> Vec<Segment> {
+    let mut out = Vec::new();
+    if n == 0 {
+        return out;
+    }
+    let n_src = n.div_ceil(bx);
+    for px in 0..n_src {
+        let x0 = px * bx;
+        let x1 = ((px + 1) * bx).min(n);
+        // Eq. 28 candidate range for p^(y).
+        let py_lo = (x0 + 1).div_ceil(by).saturating_sub(1);
+        let py_hi = x1.div_ceil(by); // exclusive
+        for py in py_lo..py_hi {
+            let y0 = py * by;
+            let y1 = ((py + 1) * by).min(n);
+            let s = x0.max(y0);
+            let e = x1.min(y1);
+            if s < e {
+                out.push(Segment { src_block: px, dst_block: py, start: s, len: e - s });
+            }
+        }
+    }
+    out
+}
+
+/// One aggregated redistribution message: a dense box moved from a source
+/// rank's local buffer to a destination rank's local buffer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Message {
+    /// Sending rank (canonical owner of the source block).
+    pub src: usize,
+    /// Receiving rank (one replica of the destination block).
+    pub dst: usize,
+    /// Box offset inside the source rank's local block.
+    pub src_off: Vec<usize>,
+    /// Box offset inside the destination rank's local block.
+    pub dst_off: Vec<usize>,
+    /// Box extents.
+    pub size: Vec<usize>,
+}
+
+impl Message {
+    /// Elements moved.
+    pub fn volume(&self) -> usize {
+        self.size.iter().product()
+    }
+    /// Bytes moved (f32).
+    pub fn bytes(&self) -> usize {
+        self.volume() * 4
+    }
+}
+
+/// The full redistribution plan between two distributions of the same
+/// tensor (§V-C).  Message count is `Π_d k_d · replicas`, independent of
+/// the tensor's element count.
+#[derive(Debug, Clone)]
+pub struct RedistPlan {
+    pub messages: Vec<Message>,
+    /// Total elements moved rank-to-rank (excluding src==dst local copies).
+    pub remote_volume: usize,
+    /// Elements satisfied locally (src == dst).
+    pub local_volume: usize,
+}
+
+/// Build the redistribution plan from `src` to `dst` (same tensor
+/// extents, possibly different grids/blocks/replication).
+pub fn plan(src: &TensorDist, dst: &TensorDist) -> Result<RedistPlan> {
+    if src.extents != dst.extents {
+        return Err(Error::plan(format!(
+            "redistribute extent mismatch: {:?} vs {:?}",
+            src.extents, dst.extents
+        )));
+    }
+    let nd = src.extents.len();
+    // Per-dim effective (block size, #blocks): replicated => one block.
+    let eff = |td: &TensorDist, d: usize| -> usize {
+        if td.is_replicated() {
+            td.extents[d]
+        } else {
+            td.dist.block[d]
+        }
+    };
+    // Per-dimension segments.
+    let per_dim: Vec<Vec<Segment>> = (0..nd)
+        .map(|d| dim_segments(src.extents[d], eff(src, d).max(1), eff(dst, d).max(1)))
+        .collect();
+
+    // Cartesian product of segments -> boxes.
+    let mut messages = Vec::new();
+    let mut remote_volume = 0usize;
+    let mut local_volume = 0usize;
+    let mut sel = vec![0usize; nd];
+    'outer: loop {
+        // materialize current box
+        let segs: Vec<&Segment> = sel.iter().enumerate().map(|(d, &s)| &per_dim[d][s]).collect();
+        let src_block: Vec<usize> = segs.iter().map(|s| s.src_block).collect();
+        let dst_block: Vec<usize> = segs.iter().map(|s| s.dst_block).collect();
+        let src_coords = if src.is_replicated() { vec![] } else { src_block.clone() };
+        let dst_coords = if dst.is_replicated() { vec![] } else { dst_block.clone() };
+        let sender = src.owner_of_block(&src_coords);
+        let size: Vec<usize> = segs.iter().map(|s| s.len).collect();
+        let vol: usize = size.iter().product();
+        // Box offsets inside the local blocks (Eq. 27): replicated blocks
+        // are the whole tensor, so local offset == global coordinate.
+        let src_off: Vec<usize> = if src.is_replicated() {
+            (0..nd).map(|d| segs[d].start).collect()
+        } else {
+            (0..nd).map(|d| segs[d].start - segs[d].src_block * src.dist.block[d]).collect()
+        };
+        let dst_off: Vec<usize> = if dst.is_replicated() {
+            (0..nd).map(|d| segs[d].start).collect()
+        } else {
+            (0..nd).map(|d| segs[d].start - segs[d].dst_block * dst.dist.block[d]).collect()
+        };
+        for &receiver in &dst.replicas_of_block(&dst_coords) {
+            if receiver == sender {
+                local_volume += vol;
+            } else {
+                remote_volume += vol;
+            }
+            messages.push(Message {
+                src: sender,
+                dst: receiver,
+                src_off: src_off.clone(),
+                dst_off: dst_off.clone(),
+                size: size.clone(),
+            });
+        }
+        // odometer
+        for d in (0..nd).rev() {
+            sel[d] += 1;
+            if sel[d] < per_dim[d].len() {
+                continue 'outer;
+            }
+            sel[d] = 0;
+            if d == 0 {
+                break 'outer;
+            }
+        }
+        if nd == 0 {
+            break;
+        }
+    }
+    Ok(RedistPlan { messages, remote_volume, local_volume })
+}
+
+/// Execute a redistribution plan on per-rank local buffers (used by the
+/// simulator's data path and by tests).  `src_bufs[r]` holds rank `r`'s
+/// padded local block under `src`; returns the per-rank blocks under
+/// `dst`.
+pub fn execute(
+    rp: &RedistPlan,
+    src: &TensorDist,
+    dst: &TensorDist,
+    src_bufs: &[Tensor],
+) -> Result<Vec<Tensor>> {
+    let p = src.grid.size().max(dst.grid.size());
+    if src_bufs.len() < src.grid.size() {
+        return Err(Error::plan("src buffer count < grid size"));
+    }
+    let mut out: Vec<Tensor> =
+        (0..p).map(|_| Tensor::zeros(&dst.local_dims())).collect();
+    for m in &rp.messages {
+        let blk = src_bufs[m.src].block(&m.src_off, &m.size);
+        out[m.dst].set_block(&m.dst_off, &blk);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::ProcessGrid;
+
+    #[test]
+    fn dim_segments_equal_blocks() {
+        let segs = dim_segments(8, 4, 4);
+        assert_eq!(segs.len(), 2);
+        assert_eq!(segs[0], Segment { src_block: 0, dst_block: 0, start: 0, len: 4 });
+        assert_eq!(segs[1], Segment { src_block: 1, dst_block: 1, start: 4, len: 4 });
+    }
+
+    #[test]
+    fn dim_segments_split_in_two() {
+        // 8 elements: src one block of 8, dst two blocks of 4.
+        let segs = dim_segments(8, 8, 4);
+        assert_eq!(segs.len(), 2);
+        assert_eq!(segs[0].dst_block, 0);
+        assert_eq!(segs[1].dst_block, 1);
+        assert_eq!(segs[1].start, 4);
+    }
+
+    #[test]
+    fn dim_segments_misaligned() {
+        // Eq. 26: k <= ceil((By-1)/Bx)+1 segments per dst block.
+        let segs = dim_segments(12, 5, 3);
+        // coverage must be exact and disjoint
+        let total: usize = segs.iter().map(|s| s.len).sum();
+        assert_eq!(total, 12);
+        let by = 3;
+        for s in &segs {
+            // every segment within one dst block
+            assert_eq!(s.start / by, s.dst_block);
+            assert_eq!((s.start + s.len - 1) / by, s.dst_block);
+            // and one src block
+            assert_eq!(s.start / 5, s.src_block);
+            assert_eq!((s.start + s.len - 1) / 5, s.src_block);
+        }
+    }
+
+    #[test]
+    fn dim_segments_k_bound() {
+        // Eq. 26 bound on segments per SOURCE block when By > Bx:
+        // a dst block spans at most ceil((By-1)/Bx)+1 src blocks.
+        for (n, bx, by) in [(100, 7, 13), (64, 16, 8), (37, 5, 11), (10, 10, 3)] {
+            let segs = dim_segments(n, bx, by);
+            let k_bound = (by - 1).div_ceil(bx) + 1;
+            let n_dst = n.div_ceil(by);
+            for py in 0..n_dst {
+                let k = segs.iter().filter(|s| s.dst_block == py).count();
+                assert!(k <= k_bound, "n={n} bx={bx} by={by}: k={k} > {k_bound}");
+            }
+            let total: usize = segs.iter().map(|s| s.len).sum();
+            assert_eq!(total, n);
+        }
+    }
+
+    fn fill_dist(td: &TensorDist, global: &Tensor) -> Vec<Tensor> {
+        (0..td.grid.size())
+            .map(|r| {
+                let (off, _size) = td.block_for_rank(r);
+                global.block(&off, &td.local_dims())
+            })
+            .collect()
+    }
+
+    fn check_dist(td: &TensorDist, bufs: &[Tensor], global: &Tensor) {
+        for r in 0..td.grid.size() {
+            let (off, size) = td.block_for_rank(r);
+            let want = global.block(&off, &size);
+            let got = bufs[r].block(&vec![0; size.len()], &size);
+            assert!(got.allclose(&want, 0.0, 0.0), "rank {r} mismatch");
+        }
+    }
+
+    #[test]
+    fn roundtrip_1d_resplit() {
+        // 2 blocks -> 4 blocks of a 16-vector (paper's t1 redistribution:
+        // block over 2 procs -> block over 4 procs).
+        let g2 = ProcessGrid::new(&[2, 2]).unwrap();
+        let src = TensorDist::new(&[16], &g2, &[0]).unwrap(); // split dim0 over 2, replicated over dim1
+        let dst = TensorDist::new(&[16], &g2, &[1]).unwrap(); // now split over the other axis
+        let global = Tensor::random(&[16], 5);
+        let src_bufs = fill_dist(&src, &global);
+        let rp = plan(&src, &dst).unwrap();
+        let dst_bufs = execute(&rp, &src, &dst, &src_bufs).unwrap();
+        check_dist(&dst, &dst_bufs, &global);
+    }
+
+    #[test]
+    fn roundtrip_2d_regrid() {
+        // (2,2) grid -> (4,1) grid over a 12x12 matrix.
+        let ga = ProcessGrid::new(&[2, 2]).unwrap();
+        let gb = ProcessGrid::new(&[4, 1]).unwrap();
+        let src = TensorDist::new(&[12, 12], &ga, &[0, 1]).unwrap();
+        let dst = TensorDist::new(&[12, 12], &gb, &[0, 1]).unwrap();
+        let global = Tensor::random(&[12, 12], 6);
+        let src_bufs = fill_dist(&src, &global);
+        let rp = plan(&src, &dst).unwrap();
+        let dst_bufs = execute(&rp, &src, &dst, &src_bufs).unwrap();
+        check_dist(&dst, &dst_bufs, &global);
+    }
+
+    #[test]
+    fn roundtrip_to_replicated() {
+        // Allgather-like: split -> replicated everywhere.
+        let g = ProcessGrid::new(&[4]).unwrap();
+        let src = TensorDist::new(&[10], &g, &[0]).unwrap();
+        let dst = TensorDist::replicated(&[10], &g).unwrap();
+        let global = Tensor::random(&[10], 7);
+        let src_bufs = fill_dist(&src, &global);
+        let rp = plan(&src, &dst).unwrap();
+        let dst_bufs = execute(&rp, &src, &dst, &src_bufs).unwrap();
+        for r in 0..4 {
+            assert!(dst_bufs[r].allclose(&global, 0.0, 0.0), "rank {r}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_from_replicated() {
+        // Scatter-like: replicated -> split; only owners copy.
+        let g = ProcessGrid::new(&[2, 2]).unwrap();
+        let src = TensorDist::replicated(&[8, 8], &g).unwrap();
+        let dst = TensorDist::new(&[8, 8], &g, &[0, 1]).unwrap();
+        let global = Tensor::random(&[8, 8], 8);
+        let src_bufs: Vec<Tensor> = (0..4).map(|_| global.clone()).collect();
+        let rp = plan(&src, &dst).unwrap();
+        let dst_bufs = execute(&rp, &src, &dst, &src_bufs).unwrap();
+        check_dist(&dst, &dst_bufs, &global);
+    }
+
+    #[test]
+    fn misaligned_blocks_roundtrip() {
+        // Extent 10 split 3 ways (blocks of 4,4,2) -> split 2 ways (5,5):
+        // requires the Eq. 25 step-function segments.
+        let g3 = ProcessGrid::new(&[3]).unwrap();
+        let g2 = ProcessGrid::new(&[2]).unwrap();
+        let src = TensorDist::new(&[10], &g3, &[0]).unwrap();
+        let dst = TensorDist::new(&[10], &g2, &[0]).unwrap();
+        let global = Tensor::random(&[10], 9);
+        let src_bufs = fill_dist(&src, &global);
+        let rp = plan(&src, &dst).unwrap();
+        // dst rank count (2) < src rank count (3): execute sizes buffers by max grid
+        let dst_bufs = execute(&rp, &src, &dst, &src_bufs).unwrap();
+        check_dist(&dst, &dst_bufs, &global);
+    }
+
+    #[test]
+    fn plan_volume_accounting() {
+        let g = ProcessGrid::new(&[2]).unwrap();
+        let src = TensorDist::new(&[8], &g, &[0]).unwrap();
+        let dst = TensorDist::replicated(&[8], &g).unwrap();
+        let rp = plan(&src, &dst).unwrap();
+        // each rank keeps its half locally (4) and sends it to the peer (4)
+        assert_eq!(rp.local_volume, 8);
+        assert_eq!(rp.remote_volume, 8);
+    }
+
+    #[test]
+    fn identical_dists_all_local() {
+        let g = ProcessGrid::new(&[2, 2]).unwrap();
+        let src = TensorDist::new(&[8, 8], &g, &[0, 1]).unwrap();
+        let rp = plan(&src, &src).unwrap();
+        assert_eq!(rp.remote_volume, 0);
+        assert_eq!(rp.local_volume, 64);
+    }
+
+    #[test]
+    fn extent_mismatch_rejected() {
+        let g = ProcessGrid::new(&[2]).unwrap();
+        let a = TensorDist::new(&[8], &g, &[0]).unwrap();
+        let b = TensorDist::new(&[9], &g, &[0]).unwrap();
+        assert!(plan(&a, &b).is_err());
+    }
+}

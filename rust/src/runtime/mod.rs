@@ -1,0 +1,520 @@
+//! PJRT runtime: load AOT-compiled JAX/Pallas artifacts and execute them
+//! as local-tile kernels.
+//!
+//! `make artifacts` (build time, python) lowers every kernel variant to
+//! HLO *text* — the interchange format that survives the jax>=0.5 /
+//! xla_extension 0.5.1 proto-id mismatch (see /opt/xla-example/README.md)
+//! — plus a `manifest.json` index.  This module:
+//!
+//! - loads the manifest ([`Manifest`]),
+//! - lazily compiles variants on the PJRT CPU client with an executable
+//!   cache ([`Engine`]),
+//! - dispatches local ops, **bucketing** ragged tile shapes up to the
+//!   nearest variant by zero-padding (exact for multiply-add
+//!   contractions) and falling back to the native kernels in
+//!   [`crate::tensor::contract`] when no bucket fits ([`KernelEngine`]).
+//!
+//! Python never runs here: the rust binary is self-contained once
+//! `artifacts/` exists.
+
+pub mod json;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use crate::error::{Error, Result};
+use crate::tensor::{contract, Tensor};
+
+/// One AOT-lowered kernel variant (an entry of `manifest.json`).
+#[derive(Debug, Clone)]
+pub struct Variant {
+    pub name: String,
+    pub op: String,
+    pub dtype: String,
+    pub file: String,
+    pub sha256: String,
+    pub inputs: Vec<Vec<usize>>,
+    pub output: Vec<usize>,
+    // op-specific metadata
+    pub dims: Option<Vec<usize>>,
+    pub r: Option<usize>,
+    pub m: Option<usize>,
+    pub k: Option<usize>,
+    pub n: Option<usize>,
+    pub i0: Option<usize>,
+    pub i1: Option<usize>,
+    pub rs: Option<Vec<usize>>,
+    pub mode: Option<usize>,
+}
+
+impl Variant {
+    fn from_json(v: &json::Value) -> Result<Self> {
+        let req_str = |k: &str| -> Result<String> {
+            v.get(k)
+                .and_then(|x| x.as_str())
+                .map(str::to_string)
+                .ok_or_else(|| Error::runtime(format!("variant missing '{k}'")))
+        };
+        let inputs = v
+            .get("inputs")
+            .and_then(|x| x.as_arr())
+            .ok_or_else(|| Error::runtime("variant missing 'inputs'"))?
+            .iter()
+            .map(|s| s.as_usize_vec().ok_or_else(|| Error::runtime("bad input shape")))
+            .collect::<Result<Vec<_>>>()?;
+        let output = v
+            .get("output")
+            .and_then(|x| x.as_usize_vec())
+            .ok_or_else(|| Error::runtime("variant missing 'output'"))?;
+        Ok(Variant {
+            name: req_str("name")?,
+            op: req_str("op")?,
+            dtype: req_str("dtype")?,
+            file: req_str("file")?,
+            sha256: v.get("sha256").and_then(|x| x.as_str()).unwrap_or("").to_string(),
+            inputs,
+            output,
+            dims: v.get("dims").and_then(|x| x.as_usize_vec()),
+            r: v.get("r").and_then(|x| x.as_usize()),
+            m: v.get("m").and_then(|x| x.as_usize()),
+            k: v.get("k").and_then(|x| x.as_usize()),
+            n: v.get("n").and_then(|x| x.as_usize()),
+            i0: v.get("i0").and_then(|x| x.as_usize()),
+            i1: v.get("i1").and_then(|x| x.as_usize()),
+            rs: v.get("rs").and_then(|x| x.as_usize_vec()),
+            mode: v.get("mode").and_then(|x| x.as_usize()),
+        })
+    }
+}
+
+/// The artifact index written by `python -m compile.aot`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub format: String,
+    pub variants: Vec<Variant>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        let doc = json::parse(&text)?;
+        let format = doc
+            .get("format")
+            .and_then(|x| x.as_str())
+            .ok_or_else(|| Error::runtime("manifest missing 'format'"))?
+            .to_string();
+        if format != "hlo-text-v1" {
+            return Err(Error::runtime(format!("unknown manifest format {format}")));
+        }
+        let variants = doc
+            .get("variants")
+            .and_then(|x| x.as_arr())
+            .ok_or_else(|| Error::runtime("manifest missing 'variants'"))?
+            .iter()
+            .map(Variant::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { format, variants })
+    }
+}
+
+/// Execution counters (exposed for tests and EXPERIMENTS.md §Perf).
+#[derive(Debug, Default, Clone)]
+pub struct EngineStats {
+    /// Ops served by a PJRT executable with exactly-matching shapes.
+    pub pjrt_exact: u64,
+    /// Ops served by a PJRT executable after zero-pad bucketing.
+    pub pjrt_padded: u64,
+    /// Ops served by the native fallback kernels.
+    pub native: u64,
+    /// Lazy compilations performed.
+    pub compiles: u64,
+}
+
+/// PJRT engine: CPU client + lazily-compiled executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    stats: RefCell<EngineStats>,
+}
+
+impl Engine {
+    /// Create an engine over an artifacts directory (compiles nothing yet).
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::runtime(format!("PjRtClient::cpu: {e}")))?;
+        Ok(Engine {
+            client,
+            dir,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(EngineStats::default()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.stats.borrow().clone()
+    }
+
+    fn bump(&self, f: impl FnOnce(&mut EngineStats)) {
+        f(&mut self.stats.borrow_mut());
+    }
+
+    /// Find a variant by name.
+    pub fn variant(&self, name: &str) -> Option<&Variant> {
+        self.manifest.variants.iter().find(|v| v.name == name)
+    }
+
+    fn executable(&self, v: &Variant) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(&v.name) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(&v.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| Error::runtime(format!("parse {}: {e}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| Error::runtime(format!("compile {}: {e}", v.name)))?;
+        self.bump(|s| s.compiles += 1);
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(v.name.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute a variant with exactly-matching input tensors.
+    pub fn execute(&self, v: &Variant, inputs: &[&Tensor]) -> Result<Tensor> {
+        if inputs.len() != v.inputs.len() {
+            return Err(Error::runtime(format!(
+                "{}: expected {} inputs, got {}",
+                v.name,
+                v.inputs.len(),
+                inputs.len()
+            )));
+        }
+        for (t, want) in inputs.iter().zip(&v.inputs) {
+            if t.dims() != &want[..] {
+                return Err(Error::runtime(format!(
+                    "{}: input dims {:?} != variant {:?}",
+                    v.name,
+                    t.dims(),
+                    want
+                )));
+            }
+        }
+        let exe = self.executable(v)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(
+                        t.data().as_ptr() as *const u8,
+                        t.data().len() * std::mem::size_of::<f32>(),
+                    )
+                };
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::F32,
+                    t.dims(),
+                    bytes,
+                )
+                .map_err(|e| Error::runtime(format!("literal: {e}")))
+            })
+            .collect::<Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| Error::runtime(format!("execute {}: {e}", v.name)))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::runtime(format!("to_literal: {e}")))?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = lit.to_tuple1().map_err(|e| Error::runtime(format!("tuple1: {e}")))?;
+        let data =
+            out.to_vec::<f32>().map_err(|e| Error::runtime(format!("to_vec: {e}")))?;
+        Tensor::from_vec(&v.output, data)
+    }
+}
+
+/// Backend selection for [`KernelEngine`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Native rust kernels only (no PJRT, no artifacts needed).
+    Native,
+    /// PJRT artifacts with bucketing; native fallback when no bucket fits.
+    Pjrt,
+}
+
+/// The local-kernel dispatcher the coordinator calls on the hot path.
+pub struct KernelEngine {
+    engine: Option<Engine>,
+    backend: Backend,
+    /// Max padded/real volume ratio before bucketing is considered
+    /// wasteful and the native kernel is used instead.
+    max_pad_ratio: f64,
+}
+
+impl KernelEngine {
+    /// Native-only engine (always available).
+    pub fn native() -> Self {
+        KernelEngine { engine: None, backend: Backend::Native, max_pad_ratio: 1.0 }
+    }
+
+    /// PJRT-backed engine over an artifacts dir; falls back to native per
+    /// op when no variant fits.
+    pub fn pjrt(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        Ok(KernelEngine {
+            engine: Some(Engine::new(artifacts_dir)?),
+            backend: Backend::Pjrt,
+            max_pad_ratio: 1.7,
+        })
+    }
+
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.engine.as_ref().map(|e| e.stats()).unwrap_or_default()
+    }
+
+    fn find_bucket<'a>(
+        &'a self,
+        op: &str,
+        dims: &[usize],
+        extra: impl Fn(&Variant) -> bool,
+    ) -> Option<(&'a Engine, &'a Variant, bool)> {
+        let engine = self.engine.as_ref()?;
+        let real: usize = dims.iter().product();
+        let mut best: Option<(&Variant, usize)> = None;
+        for v in &engine.manifest.variants {
+            if v.op != op || !extra(v) {
+                continue;
+            }
+            let vd = match v.dims.as_ref() {
+                Some(d) => d.clone(),
+                None => v.inputs[0].clone(),
+            };
+            if vd.len() != dims.len() {
+                continue;
+            }
+            if !vd.iter().zip(dims).all(|(b, d)| b >= d) {
+                continue;
+            }
+            let vol: usize = vd.iter().product();
+            if (vol as f64) > self.max_pad_ratio * (real as f64).max(1.0) {
+                continue;
+            }
+            match best {
+                Some((_, bv)) if bv <= vol => {}
+                _ => best = Some((v, vol)),
+            }
+        }
+        best.map(|(v, vol)| {
+            let exact = vol == real && v.dims.as_ref().map(|d| d == dims).unwrap_or(false)
+                || v.inputs[0] == dims;
+            (engine, v, exact)
+        })
+    }
+
+    /// `C[m,n] = A[m,k] @ B[k,n]`.
+    pub fn gemm(&self, a: &Tensor, b: &Tensor) -> Result<Tensor> {
+        if self.backend == Backend::Pjrt {
+            let (m, k) = (a.dims()[0], a.dims()[1]);
+            let n = b.dims()[1];
+            if let Some(engine) = self.engine.as_ref() {
+                // exact match first
+                let exact = engine.manifest.variants.iter().find(|v| {
+                    v.op == "gemm"
+                        && v.m == Some(m)
+                        && v.k == Some(k)
+                        && v.n == Some(n)
+                });
+                if let Some(v) = exact {
+                    let out = engine.execute(v, &[a, b])?;
+                    engine.bump(|s| s.pjrt_exact += 1);
+                    return Ok(out);
+                }
+                // bucket: smallest variant covering (m, k, n)
+                let mut best: Option<(&Variant, usize)> = None;
+                for v in &engine.manifest.variants {
+                    if v.op != "gemm" {
+                        continue;
+                    }
+                    let (vm, vk, vn) = (v.m.unwrap(), v.k.unwrap(), v.n.unwrap());
+                    if vm >= m && vk >= k && vn >= n {
+                        let vol = vm * vk + vk * vn;
+                        let real = m * k + k * n;
+                        if (vol as f64) <= self.max_pad_ratio * real as f64 {
+                            if best.map(|(_, bv)| vol < bv).unwrap_or(true) {
+                                best = Some((v, vol));
+                            }
+                        }
+                    }
+                }
+                if let Some((v, _)) = best {
+                    let (vm, vk, vn) = (v.m.unwrap(), v.k.unwrap(), v.n.unwrap());
+                    let ap = a.block(&[0, 0], &[vm, vk]);
+                    let bp = b.block(&[0, 0], &[vk, vn]);
+                    let out = engine.execute(v, &[&ap, &bp])?;
+                    engine.bump(|s| s.pjrt_padded += 1);
+                    return Ok(out.block(&[0, 0], &[m, n]));
+                }
+                engine.bump(|s| s.native += 1);
+            }
+        }
+        contract::gemm(a, b)
+    }
+
+    /// Fused mode-`mode` MTTKRP. `factors` lists all `order` factor slots;
+    /// the `mode` slot is ignored.
+    pub fn mttkrp(&self, x: &Tensor, factors: &[&Tensor], mode: usize) -> Result<Tensor> {
+        if self.backend == Backend::Pjrt {
+            let order = x.order();
+            let rest: Vec<usize> = (0..order).filter(|&m| m != mode).collect();
+            let r = factors[rest[0]].dims()[1];
+            // Artifacts are mode-0: permute X so `mode` leads (HPTT's role).
+            let xp = if mode == 0 {
+                x.clone()
+            } else {
+                let mut perm = vec![mode];
+                perm.extend(rest.iter().copied());
+                x.permute(&perm)
+            };
+            let want: Vec<usize> = xp.dims().to_vec();
+            if let Some((engine, v, exact)) = self.find_bucket("mttkrp", &want, |v| {
+                v.r == Some(r)
+            }) {
+                let vdims = v.dims.clone().unwrap();
+                let xpad =
+                    if exact { xp.clone() } else { xp.block(&vec![0; want.len()], &vdims) };
+                let mut ins: Vec<Tensor> = vec![xpad];
+                for (q, &m) in rest.iter().enumerate() {
+                    let f = factors[m];
+                    if exact {
+                        ins.push(f.clone());
+                    } else {
+                        ins.push(f.block(&[0, 0], &[vdims[q + 1], r]));
+                    }
+                }
+                let refs: Vec<&Tensor> = ins.iter().collect();
+                let out = engine.execute(v, &refs)?;
+                engine.bump(|s| if exact { s.pjrt_exact += 1 } else { s.pjrt_padded += 1 });
+                return Ok(if exact {
+                    out
+                } else {
+                    out.block(&[0, 0], &[x.dims()[mode], r])
+                });
+            }
+            if let Some(engine) = self.engine.as_ref() {
+                engine.bump(|s| s.native += 1);
+            }
+        }
+        contract::mttkrp(x, factors, mode)
+    }
+
+    /// Materialized flat KRP (baseline two-step path): `(I0*I1, R)`.
+    pub fn krp_flat(&self, u0: &Tensor, u1: &Tensor) -> Result<Tensor> {
+        if self.backend == Backend::Pjrt {
+            let (i0, r) = (u0.dims()[0], u0.dims()[1]);
+            let i1 = u1.dims()[0];
+            if let Some(engine) = self.engine.as_ref() {
+                let exact = engine.manifest.variants.iter().find(|v| {
+                    v.op == "krp" && v.i0 == Some(i0) && v.i1 == Some(i1) && v.r == Some(r)
+                });
+                if let Some(v) = exact {
+                    let out = engine.execute(v, &[u0, u1])?;
+                    engine.bump(|s| s.pjrt_exact += 1);
+                    return Ok(out);
+                }
+                engine.bump(|s| s.native += 1);
+            }
+        }
+        let k = contract::krp_chain(&[u0, u1])?;
+        let r = k.dims()[2];
+        k.reshape(&[u0.dims()[0] * u1.dims()[0], r])
+    }
+
+    /// Mode-`mode` TTM chain. `factors[mode]` ignored.
+    pub fn ttmc(&self, x: &Tensor, factors: &[&Tensor], mode: usize) -> Result<Tensor> {
+        if self.backend == Backend::Pjrt {
+            let rs: Vec<usize> = (0..x.order())
+                .map(|m| if m == mode { 0 } else { factors[m].dims()[1] })
+                .collect();
+            if let Some(engine) = self.engine.as_ref() {
+                let exact = engine.manifest.variants.iter().find(|v| {
+                    v.op == "ttmc"
+                        && v.mode == Some(mode)
+                        && v.dims.as_deref() == Some(x.dims())
+                        && v.rs
+                            .as_ref()
+                            .map(|vrs| {
+                                vrs.iter()
+                                    .enumerate()
+                                    .all(|(m, &vr)| m == mode || vr == rs[m])
+                            })
+                            .unwrap_or(false)
+                });
+                if let Some(v) = exact {
+                    let ins: Vec<&Tensor> =
+                        (0..x.order()).filter(|&m| m != mode).map(|m| factors[m]).collect();
+                    let mut all: Vec<&Tensor> = vec![x];
+                    all.extend(ins);
+                    let out = engine.execute(v, &all)?;
+                    engine.bump(|s| s.pjrt_exact += 1);
+                    return Ok(out);
+                }
+                engine.bump(|s| s.native += 1);
+            }
+        }
+        contract::ttmc(x, factors, mode)
+    }
+
+    /// Tensor dot over paired axes (always native: arbitrary-rank folds).
+    pub fn tdot(
+        &self,
+        x: &Tensor,
+        y: &Tensor,
+        axes_x: &[usize],
+        axes_y: &[usize],
+    ) -> Result<Tensor> {
+        contract::tdot(x, y, axes_x, axes_y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_engine_gemm() {
+        let e = KernelEngine::native();
+        let a = Tensor::random(&[8, 8], 1);
+        let b = Tensor::random(&[8, 8], 2);
+        let got = e.gemm(&a, &b).unwrap();
+        let want = contract::gemm(&a, &b).unwrap();
+        assert!(got.allclose(&want, 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn native_engine_mttkrp_modes() {
+        let e = KernelEngine::native();
+        let x = Tensor::random(&[6, 5, 4], 3);
+        let fs: Vec<Tensor> = (0..3).map(|m| Tensor::random(&[x.dims()[m], 3], 4 + m as u64)).collect();
+        let refs: Vec<&Tensor> = fs.iter().collect();
+        for mode in 0..3 {
+            let got = e.mttkrp(&x, &refs, mode).unwrap();
+            let want = contract::mttkrp(&x, &refs, mode).unwrap();
+            assert!(got.allclose(&want, 1e-6, 1e-6));
+        }
+    }
+}

@@ -1,0 +1,75 @@
+//! Accelerator execution model for the Fig. 6 reproduction.
+//!
+//! The paper runs the same schedules on P100 GPUs (cuTENSOR locals) and
+//! distinguishes (a) *accelerator mode* — inputs/outputs live in host
+//! memory, so every benchmark pays H2D/D2H copies — from (b)
+//! *GPU-resident* mode where data never leaves device memory.  CTF only
+//! supports (a).  We model the device with a compute-speedup factor over
+//! the measured CPU kernels plus a PCIe copy cost; the Fig. 6 message
+//! (copy overhead dominates at small node counts and shrinks relative to
+//! compute as weak scaling grows the problem) is structural and survives
+//! the substitution (DESIGN.md §Substitutions).
+
+/// GPU execution model: scaled compute + explicit host<->device copies.
+#[derive(Debug, Clone, Copy)]
+pub struct AccelModel {
+    /// Device compute speedup over the measured CPU kernel time.
+    pub speedup: f64,
+    /// PCIe effective bandwidth, bytes/s (per direction).
+    pub pcie_bw: f64,
+    /// Per-transfer latency, seconds.
+    pub latency: f64,
+}
+
+impl AccelModel {
+    /// P100-over-Xeon defaults: ~8× on contraction kernels, 12 GB/s
+    /// effective PCIe gen3 x16, 10 µs per transfer.
+    pub fn p100() -> Self {
+        AccelModel { speedup: 8.0, pcie_bw: 12e9, latency: 10e-6 }
+    }
+
+    /// Device-side compute time for a measured CPU time.
+    pub fn compute_time(&self, cpu_seconds: f64) -> f64 {
+        cpu_seconds / self.speedup
+    }
+
+    /// One-way copy time for `bytes`.
+    pub fn copy_time(&self, bytes: f64) -> f64 {
+        self.latency + bytes / self.pcie_bw
+    }
+
+    /// Accelerator-mode overhead for a step with the given host-side
+    /// input/output footprints (bytes): copy in + copy out.
+    pub fn h2d_d2h_time(&self, in_bytes: f64, out_bytes: f64) -> f64 {
+        self.copy_time(in_bytes) + self.copy_time(out_bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn speedup_applies() {
+        let a = AccelModel::p100();
+        assert!((a.compute_time(8.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn copies_cost() {
+        let a = AccelModel::p100();
+        let t = a.h2d_d2h_time(12e9, 0.0);
+        assert!(t > 1.0); // 12 GB over 12 GB/s + latencies
+        assert!(a.copy_time(0.0) == a.latency);
+    }
+
+    #[test]
+    fn resident_mode_skips_copies() {
+        // GPU-resident mode is modeled by simply not charging
+        // h2d_d2h_time; sanity-check relative magnitudes.
+        let a = AccelModel::p100();
+        let compute = a.compute_time(0.08);
+        let copies = a.h2d_d2h_time(1e9, 1e8);
+        assert!(copies > compute * 5.0);
+    }
+}

@@ -1,0 +1,82 @@
+//! Collective-communication helpers shared by the coordinator and the
+//! baseline: group construction from sub-grids and cost helpers.
+//!
+//! Data movement itself happens in [`crate::sim::Machine`]; this module
+//! keeps the pure logic testable without a machine instance.
+
+use crate::grid::{ProcessGrid, SubgridSet};
+
+/// Build allreduce groups for reducing a term's partial outputs: one
+/// group per combination of the *kept* (output) dims, each containing the
+/// ranks that differ only in the *reduced* dims (paper §II-D: the output
+/// sub-grids produced by dropping the non-output dimensions).
+pub fn reduction_groups(grid: &ProcessGrid, reduced_dims: &[usize]) -> Vec<Vec<usize>> {
+    let remain: Vec<bool> =
+        (0..grid.ndim()).map(|d| reduced_dims.contains(&d)).collect();
+    // cart_sub groups ranks by the coords of the DROPPED dims; here the
+    // groups must share output coords and span the reduced dims, so we
+    // keep exactly the reduced dims.
+    let sub: SubgridSet = grid.cart_sub(&remain).expect("valid remain");
+    sub.groups
+}
+
+/// Total ranks across groups must equal the grid size and groups must be
+/// disjoint — invariant helper used in tests and debug assertions.
+pub fn groups_partition_ranks(groups: &[Vec<usize>], p: usize) -> bool {
+    let mut seen = vec![false; p];
+    for g in groups {
+        for &r in g {
+            if r >= p || std::mem::replace(&mut seen[r], true) {
+                return false;
+            }
+        }
+    }
+    seen.iter().all(|&b| b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reduction_groups_for_paper_grid() {
+        // Worked example, MM term grid (2,2,2) over (i,l,a): reducing 'a'
+        // (dim 2) groups ranks differing only in a-coord: P_i*P_l = 4
+        // groups of 2 (§II-E's grid1_out Cart_sub(remain=[F,F,T])).
+        let g = ProcessGrid::new(&[2, 2, 2]).unwrap();
+        let groups = reduction_groups(&g, &[2]);
+        assert_eq!(groups.len(), 4);
+        for grp in &groups {
+            assert_eq!(grp.len(), 2);
+            let c0 = g.coords(grp[0]);
+            let c1 = g.coords(grp[1]);
+            assert_eq!(c0[0], c1[0]);
+            assert_eq!(c0[1], c1[1]);
+            assert_ne!(c0[2], c1[2]);
+        }
+        assert!(groups_partition_ranks(&groups, 8));
+    }
+
+    #[test]
+    fn no_reduction_dims_gives_singletons() {
+        let g = ProcessGrid::new(&[2, 2]).unwrap();
+        let groups = reduction_groups(&g, &[]);
+        assert_eq!(groups.len(), 4);
+        assert!(groups.iter().all(|g| g.len() == 1));
+    }
+
+    #[test]
+    fn all_dims_reduced_gives_one_group() {
+        let g = ProcessGrid::new(&[2, 4]).unwrap();
+        let groups = reduction_groups(&g, &[0, 1]);
+        assert_eq!(groups.len(), 1);
+        assert_eq!(groups[0].len(), 8);
+    }
+
+    #[test]
+    fn partition_checker_catches_overlap() {
+        assert!(!groups_partition_ranks(&[vec![0, 1], vec![1]], 2));
+        assert!(!groups_partition_ranks(&[vec![0]], 2));
+        assert!(groups_partition_ranks(&[vec![0], vec![1]], 2));
+    }
+}

@@ -1,0 +1,340 @@
+//! Simulated distributed machine (Piz Daint substitute — see DESIGN.md
+//! §Substitutions).
+//!
+//! P ranks with **real rank-local buffers**: collectives and
+//! redistributions move actual bytes between buffers, so distributed
+//! numerics are bit-exact versus an MPI run.  *Time* is hybrid:
+//!
+//! - compute: measured wall-clock of each rank's local kernel (ranks run
+//!   sequentially in-process; the simulated parallel time takes the max
+//!   over ranks per step);
+//! - communication: an α–β (latency–bandwidth) model calibrated to a
+//!   Cray-Aries-class interconnect, with tree collectives.
+//!
+//! The paper's evaluation claims concern communication *volume* and
+//! schedule structure; volumes here are exact, and the cost model turns
+//! them into the Fig. 5/6 runtime series.
+
+pub mod accel;
+pub mod collectives;
+pub mod network;
+
+pub use accel::AccelModel;
+pub use network::NetworkModel;
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+
+/// Per-step time breakdown (the blue/pink split of Fig. 5).
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct TimeBreakdown {
+    /// Max per-rank local compute seconds.
+    pub compute: f64,
+    /// Modeled communication seconds.
+    pub comm: f64,
+}
+
+impl TimeBreakdown {
+    pub fn total(&self) -> f64 {
+        self.compute + self.comm
+    }
+}
+
+/// Communication counters (exact volumes, for bound-vs-measured checks).
+#[derive(Debug, Default, Clone)]
+pub struct CommStats {
+    /// Bytes crossing rank boundaries in point-to-point messages.
+    pub p2p_bytes: u128,
+    /// Point-to-point message count.
+    pub p2p_msgs: u64,
+    /// Bytes reduced in allreduce calls (payload size × participations).
+    pub allreduce_bytes: u128,
+    /// Allreduce invocations.
+    pub allreduces: u64,
+}
+
+/// The simulated machine: rank-local tensor stores + cost accounting.
+pub struct Machine {
+    ranks: usize,
+    net: NetworkModel,
+    /// Named per-rank tensors: store[name][rank].
+    store: HashMap<String, Vec<Tensor>>,
+    /// Accumulated per-rank compute seconds (current step).
+    step_compute: Vec<f64>,
+    /// Totals.
+    pub time: TimeBreakdown,
+    pub comm: CommStats,
+}
+
+impl Machine {
+    /// Create a machine with `ranks` processes and a network model.
+    pub fn new(ranks: usize, net: NetworkModel) -> Self {
+        Machine {
+            ranks,
+            net,
+            store: HashMap::new(),
+            step_compute: vec![0.0; ranks],
+            time: TimeBreakdown::default(),
+            comm: CommStats::default(),
+        }
+    }
+
+    pub fn ranks(&self) -> usize {
+        self.ranks
+    }
+
+    pub fn network(&self) -> &NetworkModel {
+        &self.net
+    }
+
+    /// Install a per-rank tensor set under `name`.
+    pub fn put(&mut self, name: &str, per_rank: Vec<Tensor>) -> Result<()> {
+        if per_rank.len() != self.ranks {
+            return Err(Error::plan(format!(
+                "put {name}: {} tensors for {} ranks",
+                per_rank.len(),
+                self.ranks
+            )));
+        }
+        self.store.insert(name.to_string(), per_rank);
+        Ok(())
+    }
+
+    /// Rank-local tensor view.
+    pub fn get(&self, name: &str, rank: usize) -> Result<&Tensor> {
+        self.store
+            .get(name)
+            .and_then(|v| v.get(rank))
+            .ok_or_else(|| Error::plan(format!("tensor {name} rank {rank} missing")))
+    }
+
+    /// All ranks' buffers for `name`.
+    pub fn get_all(&self, name: &str) -> Result<&[Tensor]> {
+        self.store
+            .get(name)
+            .map(|v| v.as_slice())
+            .ok_or_else(|| Error::plan(format!("tensor {name} missing")))
+    }
+
+    /// Remove a tensor (free intermediates between terms).
+    pub fn drop_tensor(&mut self, name: &str) {
+        self.store.remove(name);
+    }
+
+    /// Names currently stored (diagnostics).
+    pub fn tensor_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.store.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Record `seconds` of local compute on `rank` for the current step.
+    pub fn charge_compute(&mut self, rank: usize, seconds: f64) {
+        self.step_compute[rank] += seconds;
+    }
+
+    /// Run `f` as rank-local compute on every rank, writing the results
+    /// under `out_name` and charging measured wall-clock per rank.
+    pub fn compute_step<F>(&mut self, out_name: &str, mut f: F) -> Result<()>
+    where
+        F: FnMut(usize, &Machine) -> Result<Tensor>,
+    {
+        let mut outs = Vec::with_capacity(self.ranks);
+        for r in 0..self.ranks {
+            let t0 = std::time::Instant::now();
+            let out = f(r, self)?;
+            let dt = t0.elapsed().as_secs_f64();
+            outs.push(out);
+            self.step_compute[r] += dt;
+        }
+        self.store.insert(out_name.to_string(), outs);
+        Ok(())
+    }
+
+    /// Close the current step: parallel compute time = max over ranks.
+    pub fn end_step(&mut self) {
+        let max = self.step_compute.iter().cloned().fold(0.0, f64::max);
+        self.time.compute += max;
+        self.step_compute.iter_mut().for_each(|t| *t = 0.0);
+    }
+
+    /// Allreduce-sum `name` over each group of ranks (the §II-D partial
+    /// result reduction over a sub-grid).  Data: every rank in a group
+    /// ends with the elementwise sum.  Time: tree allreduce on the
+    /// payload size, charged once (groups reduce concurrently).
+    pub fn allreduce_sum(&mut self, name: &str, groups: &[Vec<usize>]) -> Result<()> {
+        let bufs = self
+            .store
+            .get_mut(name)
+            .ok_or_else(|| Error::plan(format!("allreduce: {name} missing")))?;
+        let mut max_t = 0.0f64;
+        for g in groups {
+            if g.len() <= 1 {
+                continue;
+            }
+            let len = bufs[g[0]].len();
+            for &r in &g[1..] {
+                if bufs[r].len() != len {
+                    return Err(Error::shape(format!(
+                        "allreduce {name}: rank {r} buffer len {} != {len}",
+                        bufs[r].len()
+                    )));
+                }
+            }
+            // sum into g[0], then broadcast (data path).
+            let (first, rest) = {
+                let mut sum = bufs[g[0]].clone();
+                for &r in &g[1..] {
+                    sum.add_assign(&bufs[r]).unwrap();
+                }
+                (sum, g[1..].to_vec())
+            };
+            bufs[g[0]] = first.clone();
+            for r in rest {
+                bufs[r] = first.clone();
+            }
+            let bytes = (len * 4) as f64;
+            let t = self.net.allreduce_time(g.len(), bytes);
+            self.comm.allreduce_bytes += (len * 4) as u128 * (g.len() as u128);
+            self.comm.allreduces += 1;
+            max_t = max_t.max(t);
+        }
+        self.time.comm += max_t;
+        Ok(())
+    }
+
+    /// Execute a redistribution plan: move real boxes between rank
+    /// buffers, charge the α–β model on the per-rank maximum send/recv
+    /// volume (links are parallel across rank pairs).
+    pub fn redistribute(
+        &mut self,
+        src_name: &str,
+        dst_name: &str,
+        rp: &crate::redist::RedistPlan,
+        src_dist: &crate::dist::TensorDist,
+        dst_dist: &crate::dist::TensorDist,
+    ) -> Result<()> {
+        let src_bufs = self
+            .store
+            .get(src_name)
+            .ok_or_else(|| Error::plan(format!("redistribute: {src_name} missing")))?;
+        let dst_bufs = crate::redist::execute(rp, src_dist, dst_dist, src_bufs)?;
+        let mut dst_bufs = dst_bufs;
+        dst_bufs.truncate(self.ranks);
+        while dst_bufs.len() < self.ranks {
+            dst_bufs.push(Tensor::zeros(&dst_dist.local_dims()));
+        }
+        // Cost: per-rank send and recv byte totals; time = α·(max #msgs
+        // on a rank) + β·(max bytes through any rank).
+        let mut sent = vec![0u128; self.ranks];
+        let mut recv = vec![0u128; self.ranks];
+        let mut msgs = vec![0u64; self.ranks];
+        for m in &rp.messages {
+            if m.src == m.dst {
+                continue;
+            }
+            let b = m.bytes() as u128;
+            sent[m.src] += b;
+            recv[m.dst] += b;
+            msgs[m.src] += 1;
+            self.comm.p2p_bytes += b;
+            self.comm.p2p_msgs += 1;
+        }
+        let max_bytes = sent
+            .iter()
+            .zip(&recv)
+            .map(|(s, r)| s + r)
+            .max()
+            .unwrap_or(0) as f64;
+        let max_msgs = msgs.iter().max().copied().unwrap_or(0) as f64;
+        self.time.comm += self.net.p2p_time(max_msgs, max_bytes);
+        self.store.insert(dst_name.to_string(), dst_bufs);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::TensorDist;
+    use crate::grid::ProcessGrid;
+
+    fn machine(p: usize) -> Machine {
+        Machine::new(p, NetworkModel::aries())
+    }
+
+    #[test]
+    fn put_get_roundtrip() {
+        let mut m = machine(2);
+        m.put("x", vec![Tensor::zeros(&[2]), Tensor::zeros(&[2])]).unwrap();
+        assert_eq!(m.get("x", 1).unwrap().len(), 2);
+        assert!(m.get("y", 0).is_err());
+        assert!(m.put("z", vec![Tensor::zeros(&[1])]).is_err());
+    }
+
+    #[test]
+    fn compute_step_records_max_time() {
+        let mut m = machine(4);
+        m.compute_step("out", |r, _| Ok(Tensor::from_vec(&[1], vec![r as f32]).unwrap()))
+            .unwrap();
+        m.end_step();
+        assert!(m.time.compute > 0.0);
+        assert_eq!(m.get("out", 3).unwrap().data()[0], 3.0);
+    }
+
+    #[test]
+    fn allreduce_sums_groups() {
+        let mut m = machine(4);
+        let bufs: Vec<Tensor> =
+            (0..4).map(|r| Tensor::from_vec(&[2], vec![r as f32, 1.0]).unwrap()).collect();
+        m.put("t", bufs).unwrap();
+        // two groups: {0,1}, {2,3}
+        m.allreduce_sum("t", &[vec![0, 1], vec![2, 3]]).unwrap();
+        assert_eq!(m.get("t", 0).unwrap().data(), &[1.0, 2.0]);
+        assert_eq!(m.get("t", 1).unwrap().data(), &[1.0, 2.0]);
+        assert_eq!(m.get("t", 2).unwrap().data(), &[5.0, 2.0]);
+        assert!(m.time.comm > 0.0);
+        assert_eq!(m.comm.allreduces, 2);
+    }
+
+    #[test]
+    fn allreduce_singleton_group_free() {
+        let mut m = machine(2);
+        m.put("t", vec![Tensor::zeros(&[2]), Tensor::zeros(&[2])]).unwrap();
+        m.allreduce_sum("t", &[vec![0], vec![1]]).unwrap();
+        assert_eq!(m.time.comm, 0.0);
+    }
+
+    #[test]
+    fn redistribute_moves_data_and_charges() {
+        let g = ProcessGrid::new(&[2]).unwrap();
+        let src = TensorDist::new(&[8], &g, &[0]).unwrap();
+        let dst = TensorDist::replicated(&[8], &g).unwrap();
+        let global = Tensor::random(&[8], 3);
+        let mut m = machine(2);
+        let bufs: Vec<Tensor> = (0..2)
+            .map(|r| {
+                let (off, _) = src.block_for_rank(r);
+                global.block(&off, &src.local_dims())
+            })
+            .collect();
+        m.put("t", bufs).unwrap();
+        let rp = crate::redist::plan(&src, &dst).unwrap();
+        m.redistribute("t", "t2", &rp, &src, &dst).unwrap();
+        for r in 0..2 {
+            assert!(m.get("t2", r).unwrap().allclose(&global, 0.0, 0.0));
+        }
+        assert!(m.comm.p2p_bytes > 0);
+        assert!(m.time.comm > 0.0);
+    }
+
+    #[test]
+    fn drop_tensor_frees() {
+        let mut m = machine(1);
+        m.put("x", vec![Tensor::zeros(&[1])]).unwrap();
+        m.drop_tensor("x");
+        assert!(m.get("x", 0).is_err());
+    }
+}

@@ -1,0 +1,95 @@
+//! α–β (latency–bandwidth) interconnect cost model.
+//!
+//! Calibrated to a Cray-Aries-class network (Piz Daint, §VI-A): per-hop
+//! latency ~1.5 µs, per-node injection bandwidth ~10 GB/s.  The paper's
+//! comparisons depend on communication *volumes* (which the simulator
+//! counts exactly); this model only converts volumes to the seconds
+//! plotted in Fig. 5/6.
+
+/// Latency–bandwidth network model.
+#[derive(Debug, Clone, Copy)]
+pub struct NetworkModel {
+    /// Per-message latency, seconds.
+    pub alpha: f64,
+    /// Per-byte transfer time, seconds (1 / bandwidth).
+    pub beta: f64,
+}
+
+impl NetworkModel {
+    /// Cray Aries defaults: α = 1.5 µs, 10 GB/s injection bandwidth.
+    pub fn aries() -> Self {
+        NetworkModel { alpha: 1.5e-6, beta: 1.0 / 10e9 }
+    }
+
+    /// An ideal network (zero cost) — for compute-only measurements
+    /// (the paper's blue bars are produced exactly this way: "a version
+    /// of the code stripped of any inter-node communication", §VI-B).
+    pub fn ideal() -> Self {
+        NetworkModel { alpha: 0.0, beta: 0.0 }
+    }
+
+    /// Point-to-point phase: `msgs` sequential message setups plus
+    /// `bytes` through the bottleneck link.
+    pub fn p2p_time(&self, msgs: f64, bytes: f64) -> f64 {
+        self.alpha * msgs + self.beta * bytes
+    }
+
+    /// Tree allreduce over `p` ranks with an `m`-byte payload:
+    /// reduce + broadcast, `2·ceil(log2 p)` rounds of `(α + β·m)`.
+    /// (§VI-B observes exactly this `log2` depth dependence: the MM
+    /// overhead steps up whenever the reduction grid dim doubles.)
+    pub fn allreduce_time(&self, p: usize, m: f64) -> f64 {
+        if p <= 1 {
+            return 0.0;
+        }
+        let rounds = (p as f64).log2().ceil();
+        2.0 * rounds * (self.alpha + self.beta * m)
+    }
+
+    /// Broadcast over `p` ranks (binomial tree).
+    pub fn bcast_time(&self, p: usize, m: f64) -> f64 {
+        if p <= 1 {
+            return 0.0;
+        }
+        (p as f64).log2().ceil() * (self.alpha + self.beta * m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_is_free() {
+        let n = NetworkModel::ideal();
+        assert_eq!(n.p2p_time(10.0, 1e9), 0.0);
+        assert_eq!(n.allreduce_time(512, 1e9), 0.0);
+    }
+
+    #[test]
+    fn allreduce_scales_log2() {
+        let n = NetworkModel::aries();
+        let t4 = n.allreduce_time(4, 1e6);
+        let t16 = n.allreduce_time(16, 1e6);
+        assert!((t16 / t4 - 2.0).abs() < 1e-9); // log2 16 / log2 4 = 2
+        assert_eq!(n.allreduce_time(1, 1e6), 0.0);
+    }
+
+    #[test]
+    fn allreduce_doubling_depth_steps() {
+        // §VI-B: doubling the reduction dim increases allreduce depth by
+        // one round — the staircase in Fig. 5's MM plots.
+        let n = NetworkModel::aries();
+        let t8 = n.allreduce_time(8, 1e6);
+        let t16 = n.allreduce_time(16, 1e6);
+        let extra = t16 - t8;
+        assert!((extra - 2.0 * (n.alpha + n.beta * 1e6)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn p2p_linear() {
+        let n = NetworkModel::aries();
+        assert!((n.p2p_time(0.0, 10e9) - 1.0).abs() < 1e-9);
+        assert!((n.p2p_time(2.0, 0.0) - 3e-6).abs() < 1e-12);
+    }
+}

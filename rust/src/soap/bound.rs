@@ -1,0 +1,425 @@
+//! Numeric I/O lower-bound machinery for a single SOAP statement.
+//!
+//! The tile-volume maximization is a geometric program; in log space the
+//! feasible set is convex and the KKT condition says the constraint
+//! marginals `m_d = Σ_{a ∋ d} vol(a)` must be equal across all indices
+//! whose tiles are strictly inside `[1, N_d]`.  We solve it with a damped
+//! multiplicative fixed point plus a tight-constraint rescale, then find
+//! `X₀ = argmin_X V(X)/(X − S)` by golden-section search.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// One array's access set: which iteration indices address it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AccessSet {
+    /// Array name (for rendering/debugging).
+    pub name: String,
+    /// Iteration indices addressing the array (subset of the statement's).
+    pub indices: Vec<char>,
+}
+
+/// A SOAP statement: iteration indices with extents + the access sets of
+/// every array touched (inputs and output alike — both cost I/O).
+#[derive(Debug, Clone)]
+pub struct Statement {
+    /// Iteration index extents.
+    pub extents: BTreeMap<char, f64>,
+    /// Access sets (inputs + output).
+    pub accesses: Vec<AccessSet>,
+}
+
+/// The result of the I/O lower-bound analysis at fast-memory size `S`.
+#[derive(Debug, Clone)]
+pub struct IoBound {
+    /// Computational intensity: max new values per loaded element.
+    pub rho: f64,
+    /// The `X₀` achieving the tightest bound (paper: `5S/2` for MTTKRP).
+    pub x0: f64,
+    /// Optimal tile size per index at `X₀` (the communication-optimal
+    /// tiling the schedule uses).
+    pub tiles: BTreeMap<char, f64>,
+    /// Iteration-space volume `|V|`.
+    pub volume: f64,
+    /// The I/O lower bound `Q ≥ |V| / ρ`.
+    pub q: f64,
+}
+
+impl Statement {
+    /// Build from (extents, accesses); validates access indices.
+    pub fn new(
+        extents: BTreeMap<char, f64>,
+        accesses: Vec<AccessSet>,
+    ) -> Result<Self> {
+        for a in &accesses {
+            for c in &a.indices {
+                if !extents.contains_key(c) {
+                    return Err(Error::plan(format!(
+                        "access {} uses unknown index '{c}'",
+                        a.name
+                    )));
+                }
+            }
+        }
+        Ok(Statement { extents, accesses })
+    }
+
+    /// Iteration-space volume `|V| = ∏ N_d`.
+    pub fn volume(&self) -> f64 {
+        self.extents.values().product()
+    }
+
+    fn index_order(&self) -> Vec<char> {
+        self.extents.keys().copied().collect()
+    }
+
+    /// Maximize `∏ t_d` s.t. `Σ_a ∏_{d∈a} t_d ≤ x`, `1 ≤ t_d ≤ N_d`.
+    /// Returns (tiles in index order, tile volume).
+    pub fn optimal_tiles(&self, x: f64) -> (Vec<f64>, f64) {
+        let order = self.index_order();
+        let n = order.len();
+        let pos: BTreeMap<char, usize> =
+            order.iter().enumerate().map(|(i, &c)| (c, i)).collect();
+        let caps: Vec<f64> = order.iter().map(|c| self.extents[c].max(1.0)).collect();
+        // access sets as index positions
+        let acc: Vec<Vec<usize>> = self
+            .accesses
+            .iter()
+            .map(|a| a.indices.iter().map(|c| pos[c]).collect())
+            .collect();
+
+        // log-space tiles, initialized to an even split of ln(x) over the
+        // largest access set.
+        let max_set = acc.iter().map(|a| a.len()).max().unwrap_or(1).max(1);
+        let mut y: Vec<f64> =
+            caps.iter().map(|c| (x.ln() / max_set as f64).min(c.ln())).collect();
+
+        let vol_of = |a: &[usize], y: &[f64]| -> f64 {
+            a.iter().map(|&d| y[d]).sum::<f64>().exp()
+        };
+        let constraint = |y: &[f64]| -> f64 { acc.iter().map(|a| vol_of(a, y)).sum() };
+
+        // Rescale the *unclamped* coordinates by a common log-shift `u`
+        // until the constraint is tight (bisection; C is monotone in u).
+        let rescale = |y: &mut Vec<f64>, caps: &[f64]| {
+            for _ in 0..24 {
+                let c = constraint(y);
+                if (c / x - 1.0).abs() < 1e-9 {
+                    break;
+                }
+                let free: Vec<usize> = (0..n)
+                    .filter(|&d| {
+                        if c < x {
+                            y[d] < caps[d].ln() - 1e-12
+                        } else {
+                            y[d] > 1e-12
+                        }
+                    })
+                    .collect();
+                if free.is_empty() {
+                    break;
+                }
+                // bisect a shift u applied to all free coords
+                let (mut lo, mut hi) = if c < x { (0.0, 60.0) } else { (-60.0, 0.0) };
+                for _ in 0..48 {
+                    let u = 0.5 * (lo + hi);
+                    let mut yt = y.clone();
+                    for &d in &free {
+                        yt[d] = (yt[d] + u).clamp(0.0, caps[d].ln());
+                    }
+                    if constraint(&yt) < x {
+                        lo = u;
+                    } else {
+                        hi = u;
+                    }
+                }
+                let u = 0.5 * (lo + hi);
+                for &d in &free {
+                    y[d] = (y[d] + u).clamp(0.0, caps[d].ln());
+                }
+            }
+        };
+
+        rescale(&mut y, &caps);
+        // Damped KKT fixed point: equalize marginals over interior coords.
+        let gamma = 0.2;
+        for _ in 0..200 {
+            let vols: Vec<f64> = acc.iter().map(|a| vol_of(a, &y)).collect();
+            let mut m = vec![0.0f64; n];
+            for (a, &v) in acc.iter().zip(&vols) {
+                for &d in a {
+                    m[d] += v;
+                }
+            }
+            let interior: Vec<usize> = (0..n)
+                .filter(|&d| y[d] > 1e-9 && y[d] < caps[d].ln() - 1e-9 && m[d] > 0.0)
+                .collect();
+            if interior.len() <= 1 {
+                break;
+            }
+            let target = interior.iter().map(|&d| m[d].ln()).sum::<f64>()
+                / interior.len() as f64;
+            let mut delta = 0.0;
+            for &d in &interior {
+                let step = gamma * (target - m[d].ln());
+                y[d] = (y[d] + step).clamp(0.0, caps[d].ln());
+                delta += step.abs();
+            }
+            rescale(&mut y, &caps);
+            if delta < 1e-10 {
+                break;
+            }
+        }
+        let tiles: Vec<f64> = y.iter().map(|v| v.exp()).collect();
+        let volume = y.iter().sum::<f64>().exp();
+        (tiles, volume)
+    }
+
+    /// Tile volume at accessed-budget `x` (the inner maximization).
+    pub fn tile_volume(&self, x: f64) -> f64 {
+        self.optimal_tiles(x).1
+    }
+
+    /// Full bound at fast-memory size `s`: golden-section minimize
+    /// `ρ(X) = V(X)/(X − S)` over `X ∈ (S, 64·S]`.
+    pub fn io_bound(&self, s: f64) -> IoBound {
+        let f = |x: f64| self.tile_volume(x) / (x - s);
+        let (mut a, mut b) = (s * 1.0001, s * 64.0);
+        // If even the full problem fits in X≤b, extend until growth stops
+        // mattering (tile volume saturates at |V|).
+        let phi = (5f64.sqrt() - 1.0) / 2.0;
+        let mut c = b - phi * (b - a);
+        let mut d = a + phi * (b - a);
+        let mut fc = f(c);
+        let mut fd = f(d);
+        for _ in 0..60 {
+            if fc < fd {
+                b = d;
+                d = c;
+                fd = fc;
+                c = b - phi * (b - a);
+                fc = f(c);
+            } else {
+                a = c;
+                c = d;
+                fc = fd;
+                d = a + phi * (b - a);
+                fd = f(d);
+            }
+            if (b - a) / b < 1e-8 {
+                break;
+            }
+        }
+        let x0 = 0.5 * (a + b);
+        let (tiles_v, volume_at_x0) = self.optimal_tiles(x0);
+        let rho = volume_at_x0 / (x0 - s);
+        let order = self.index_order();
+        let tiles: BTreeMap<char, f64> =
+            order.iter().copied().zip(tiles_v).collect();
+        let v = self.volume();
+        IoBound { rho, x0, tiles, volume: v, q: v / rho }
+    }
+
+    /// Parallel I/O lower bound per process (paper §IV-E): each of `p`
+    /// processes computes `|V|/p` elementary operations, so
+    /// `Q_proc ≥ |V| / (p · ρ)`.
+    pub fn parallel_io_bound(&self, s: f64, p: usize) -> f64 {
+        let b = self.io_bound(s);
+        b.volume / (p as f64 * b.rho)
+    }
+}
+
+/// Convenience constructors for the paper's canonical statements.
+impl Statement {
+    /// Classical GEMM `C[i,j] += A[i,k] B[k,j]`.
+    pub fn gemm(ni: f64, nj: f64, nk: f64) -> Self {
+        let mut e = BTreeMap::new();
+        e.insert('i', ni);
+        e.insert('j', nj);
+        e.insert('k', nk);
+        Statement {
+            extents: e,
+            accesses: vec![
+                AccessSet { name: "A".into(), indices: vec!['i', 'k'] },
+                AccessSet { name: "B".into(), indices: vec!['k', 'j'] },
+                AccessSet { name: "C".into(), indices: vec!['i', 'j'] },
+            ],
+        }
+    }
+
+    /// Fused order-3 MTTKRP `u[i,l] += T[i,j,k] v[j,l] w[k,l]` (§IV-E).
+    pub fn mttkrp3(ni: f64, nj: f64, nk: f64, nl: f64) -> Self {
+        let mut e = BTreeMap::new();
+        e.insert('i', ni);
+        e.insert('j', nj);
+        e.insert('k', nk);
+        e.insert('l', nl);
+        Statement {
+            extents: e,
+            accesses: vec![
+                AccessSet { name: "T".into(), indices: vec!['i', 'j', 'k'] },
+                AccessSet { name: "v".into(), indices: vec!['j', 'l'] },
+                AccessSet { name: "w".into(), indices: vec!['k', 'l'] },
+                AccessSet { name: "u".into(), indices: vec!['i', 'l'] },
+            ],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::soap::{gemm_rho_closed_form, mttkrp_rho_closed_form};
+
+    const BIG: f64 = 1e12; // effectively unbounded extents
+
+    #[test]
+    fn gemm_bound_matches_closed_form() {
+        // §IV-A: rho = sqrt(S)/2 at X0 = 3S, square tiles sqrt(S/3)... but
+        // note the classical result keeps only A,B loads; with the output
+        // access included the machinery still recovers sqrt(S)/2 up to a
+        // constant factor; we check against the exact optimum of OUR
+        // model: max t^3 s.t. 3t^2 <= X -> rho(X) = (X/3)^{3/2}/(X-S),
+        // minimized at X0 = 3S with rho = sqrt(S)/2.
+        for s in [1e4, 1e6, 1e8] {
+            let st = Statement::gemm(BIG, BIG, BIG);
+            let b = st.io_bound(s);
+            let want = gemm_rho_closed_form(s);
+            assert!(
+                (b.rho - want).abs() / want < 0.02,
+                "S={s}: rho {} vs closed form {want}",
+                b.rho
+            );
+            assert!((b.x0 - 3.0 * s).abs() / (3.0 * s) < 0.05, "X0 {} vs 3S", b.x0);
+            // square tiles sqrt(X0/3) = sqrt(S)
+            for (_, t) in &b.tiles {
+                assert!((t - s.sqrt()).abs() / s.sqrt() < 0.05);
+            }
+        }
+    }
+
+    #[test]
+    fn mttkrp_bound_matches_paper() {
+        // §IV-E headline: rho = S^{2/3}/3, X0 = 5S/2,
+        // tiles I=J=K=S^{1/3}, L=S^{2/3}/2.
+        for s in [1e4, 1e6, 1e8] {
+            let st = Statement::mttkrp3(BIG, BIG, BIG, BIG);
+            let b = st.io_bound(s);
+            let want = mttkrp_rho_closed_form(s);
+            assert!(
+                (b.rho - want).abs() / want < 0.02,
+                "S={s}: rho {} vs paper {want}",
+                b.rho
+            );
+            assert!(
+                (b.x0 - 2.5 * s).abs() / (2.5 * s) < 0.05,
+                "S={s}: X0 {} vs 5S/2",
+                b.x0
+            );
+            let third = s.powf(1.0 / 3.0);
+            for c in ['i', 'j', 'k'] {
+                assert!(
+                    (b.tiles[&c] - third).abs() / third < 0.05,
+                    "tile {c} = {} vs S^(1/3) = {third}",
+                    b.tiles[&c]
+                );
+            }
+            let l_want = s.powf(2.0 / 3.0) / 2.0;
+            assert!(
+                (b.tiles[&'l'] - l_want).abs() / l_want < 0.05,
+                "tile l = {} vs S^(2/3)/2 = {l_want}",
+                b.tiles[&'l']
+            );
+        }
+    }
+
+    #[test]
+    fn mttkrp_q_formula() {
+        // Q >= 3 N1 N2 N3 N4 / S^{2/3}
+        let s = 1e6;
+        let st = Statement::mttkrp3(BIG, BIG, BIG, BIG);
+        let b = st.io_bound(s);
+        let n = [2e3, 2e3, 2e3, 1e3];
+        let v: f64 = n.iter().product();
+        let q = v / b.rho;
+        let want = crate::soap::mttkrp_q_closed_form(&n, s);
+        assert!((q - want).abs() / want < 0.02);
+    }
+
+    #[test]
+    fn extent_clamping_respected() {
+        // Rank dim clamped at 24 (Table V): l-tile must cap at 24.
+        let st = Statement::mttkrp3(BIG, BIG, BIG, 24.0);
+        let b = st.io_bound(1e6);
+        assert!(b.tiles[&'l'] <= 24.0 + 1e-6);
+        assert!(b.rho > 0.0);
+    }
+
+    #[test]
+    fn rho_monotone_in_s() {
+        let st = Statement::mttkrp3(BIG, BIG, BIG, BIG);
+        let r1 = st.io_bound(1e4).rho;
+        let r2 = st.io_bound(1e6).rho;
+        assert!(r2 > r1);
+    }
+
+    #[test]
+    fn parallel_bound_scales() {
+        let st = Statement::gemm(4096.0, 4096.0, 4096.0);
+        let s = 1e6;
+        let q1 = st.parallel_io_bound(s, 1);
+        let q8 = st.parallel_io_bound(s, 8);
+        assert!((q1 / q8 - 8.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn materialization_statement_has_low_rho() {
+        // Unfused KRP (ja,ka->jka) materializes an output as large as its
+        // iteration space: rho ~ O(1); the machinery must see that.
+        let mut e = BTreeMap::new();
+        e.insert('j', BIG);
+        e.insert('k', BIG);
+        e.insert('a', BIG);
+        let st = Statement::new(
+            e,
+            vec![
+                AccessSet { name: "A".into(), indices: vec!['j', 'a'] },
+                AccessSet { name: "B".into(), indices: vec!['k', 'a'] },
+                AccessSet { name: "out".into(), indices: vec!['j', 'k', 'a'] },
+            ],
+        )
+        .unwrap();
+        let b = st.io_bound(1e6);
+        // output term jka dominates: at most ~X values per X loads.
+        assert!(b.rho < 3.0, "rho = {}", b.rho);
+    }
+
+    #[test]
+    fn invalid_access_rejected() {
+        let mut e = BTreeMap::new();
+        e.insert('i', 10.0);
+        assert!(Statement::new(
+            e,
+            vec![AccessSet { name: "A".into(), indices: vec!['z'] }]
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn tiles_satisfy_constraint() {
+        let st = Statement::mttkrp3(BIG, BIG, BIG, BIG);
+        let x = 1e7;
+        let (tiles, _) = st.optimal_tiles(x);
+        let order: Vec<char> = st.extents.keys().copied().collect();
+        let pos: std::collections::BTreeMap<char, usize> =
+            order.iter().enumerate().map(|(i, &c)| (c, i)).collect();
+        let c: f64 = st
+            .accesses
+            .iter()
+            .map(|a| a.indices.iter().map(|i| tiles[pos[i]]).product::<f64>())
+            .sum();
+        assert!(c <= x * 1.01, "constraint violated: {c} > {x}");
+        assert!(c >= x * 0.9, "constraint slack: {c} << {x}");
+    }
+}

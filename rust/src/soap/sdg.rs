@@ -1,0 +1,300 @@
+//! Symbolic Directed Graph (SDG) and kernel-fusion enumeration (§IV-C).
+//!
+//! Every vertex of the SDG is a tensor (input or intermediate); edges are
+//! data dependencies induced by the contraction path.  Each partition of
+//! the non-input vertices describes one candidate kernel fusion: the
+//! vertices of a part are computed together as a single fused SOAP
+//! statement whose access sets are the part's *external* tensors
+//! (intermediates internal to the part never touch slow memory — this is
+//! how the fused MTTKRP beats the two-step formulation by `S^{1/6}`).
+//! The partition minimizing total `Q` is the program's I/O lower bound
+//! and its grouping is the schedule the planner materializes.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::contraction::Path;
+use crate::einsum::EinsumSpec;
+use crate::error::Result;
+use crate::soap::bound::{AccessSet, IoBound, Statement};
+
+/// One fused group of contraction-path ops.
+#[derive(Debug, Clone)]
+pub struct FusedGroup {
+    /// Indices into `path.ops` fused into this statement (execution order).
+    pub op_indices: Vec<usize>,
+    /// External input tensors: (tensor id, index string).
+    pub inputs: Vec<(usize, Vec<char>)>,
+    /// Output tensors escaping the group: (tensor id, index string).
+    pub outputs: Vec<(usize, Vec<char>)>,
+    /// The fused statement's iteration indices.
+    pub indices: Vec<char>,
+    /// I/O bound of the fused statement at the analysis `S`.
+    pub bound: IoBound,
+}
+
+impl FusedGroup {
+    /// Render like the paper's term naming (e.g. `MTTKRP term`).
+    pub fn render(&self) -> String {
+        let ins: Vec<String> = self
+            .inputs
+            .iter()
+            .map(|(_, idx)| idx.iter().collect::<String>())
+            .collect();
+        let outs: Vec<String> = self
+            .outputs
+            .iter()
+            .map(|(_, idx)| idx.iter().collect::<String>())
+            .collect();
+        format!("{}->{}", ins.join(","), outs.join(","))
+    }
+}
+
+/// The I/O-minimal fusion of a contraction path.
+#[derive(Debug, Clone)]
+pub struct Fusion {
+    /// Fused groups in execution order (the plan's "terms", §II-B).
+    pub groups: Vec<FusedGroup>,
+    /// Total I/O lower bound (sum over groups).
+    pub total_q: f64,
+    /// Number of candidate partitions evaluated.
+    pub candidates: usize,
+}
+
+/// Build the fused statement for a contiguous slice of ops and bound it.
+fn group_statement(
+    path: &Path,
+    spec: &EinsumSpec,
+    ops: &[usize],
+    s: f64,
+) -> Result<FusedGroup> {
+    let produced: BTreeSet<usize> =
+        ops.iter().map(|&q| path.ops[q].output_id).collect();
+    // External inputs: consumed by the group, not produced inside it.
+    let mut inputs: Vec<(usize, Vec<char>)> = Vec::new();
+    for &q in ops {
+        let op = &path.ops[q];
+        for (slot, &id) in op.input_ids.iter().enumerate() {
+            if !produced.contains(&id)
+                && !inputs.iter().any(|(iid, _)| *iid == id)
+            {
+                inputs.push((id, op.inputs[slot].clone()));
+            }
+        }
+    }
+    // Outputs: produced inside, consumed outside (or the program result).
+    let result_id = path.result_id();
+    let mut outputs: Vec<(usize, Vec<char>)> = Vec::new();
+    for &q in ops {
+        let op = &path.ops[q];
+        let id = op.output_id;
+        let consumed_outside = path
+            .ops
+            .iter()
+            .enumerate()
+            .any(|(p, other)| !ops.contains(&p) && other.input_ids.contains(&id));
+        if (consumed_outside || id == result_id)
+            && !outputs.iter().any(|(oid, _)| *oid == id)
+        {
+            outputs.push((id, op.output.clone()));
+        }
+    }
+    // Iteration indices: union over the grouped ops.
+    let mut idx: BTreeSet<char> = BTreeSet::new();
+    for &q in ops {
+        idx.extend(path.ops[q].all_indices());
+    }
+    let extents: BTreeMap<char, f64> =
+        idx.iter().map(|&c| (c, spec.extents[&c] as f64)).collect();
+    let mut accesses: Vec<AccessSet> = Vec::new();
+    for (id, ind) in inputs.iter().chain(outputs.iter()) {
+        accesses.push(AccessSet { name: format!("t{id}"), indices: ind.clone() });
+    }
+    let st = Statement::new(extents, accesses)?;
+    let bound = st.io_bound(s);
+    Ok(FusedGroup {
+        op_indices: ops.to_vec(),
+        inputs,
+        outputs,
+        indices: idx.into_iter().collect(),
+        bound,
+    })
+}
+
+/// A fused group is *schedulable* only when its single-statement
+/// evaluation does not asymptotically increase the arithmetic: the fused
+/// iteration space (product of the union indices) must not exceed the
+/// largest constituent op's volume by more than a constant slack.
+/// (Fusing two unrelated contractions CAN lower the I/O bound at the
+/// price of recomputing one operand per iteration of the other — a
+/// FLOP blowup the paper's schedules never take.)
+fn group_is_schedulable(path: &Path, spec: &EinsumSpec, ops: &[usize]) -> bool {
+    let mut union: BTreeSet<char> = BTreeSet::new();
+    let mut max_op_vol: f64 = 0.0;
+    for &q in ops {
+        let op = &path.ops[q];
+        let vol: f64 =
+            op.all_indices().iter().map(|c| spec.extents[c] as f64).product();
+        max_op_vol = max_op_vol.max(vol);
+        union.extend(op.all_indices());
+    }
+    let fused_vol: f64 = union.iter().map(|c| spec.extents[c] as f64).product();
+    fused_vol <= 2.0 * max_op_vol
+}
+
+/// Enumerate contiguous partitions of the op sequence (2^{n-1} for n ops
+/// — the SDG of a contraction path is a tree whose execution order makes
+/// contiguous groupings the candidate fusions) and return the partition
+/// with minimal total I/O among schedulable partitions (no recomputation
+/// blowup).
+pub fn best_fusion(path: &Path, spec: &EinsumSpec, s: f64) -> Result<Fusion> {
+    let n = path.ops.len();
+    if n == 0 {
+        return Ok(Fusion { groups: vec![], total_q: 0.0, candidates: 0 });
+    }
+    let mut best: Option<(Vec<FusedGroup>, f64)> = None;
+    let masks = 1usize << (n - 1);
+    for cut_mask in 0..masks {
+        let mut groups: Vec<Vec<usize>> = vec![vec![0]];
+        for q in 1..n {
+            if cut_mask & (1 << (q - 1)) != 0 {
+                groups.push(vec![q]);
+            } else {
+                groups.last_mut().unwrap().push(q);
+            }
+        }
+        if !groups.iter().all(|g| group_is_schedulable(path, spec, g)) {
+            continue;
+        }
+        let mut fgs = Vec::with_capacity(groups.len());
+        let mut total = 0.0;
+        for g in &groups {
+            let fg = group_statement(path, spec, g, s)?;
+            total += fg.bound.q;
+            fgs.push(fg);
+        }
+        if best.as_ref().map(|(_, bq)| total < *bq).unwrap_or(true) {
+            best = Some((fgs, total));
+        }
+    }
+    let (groups, total_q) =
+        best.ok_or_else(|| crate::error::Error::plan("no schedulable fusion"))?;
+    Ok(Fusion { groups, total_q, candidates: masks })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::contraction::optimize;
+
+    const S: f64 = 1e6;
+
+    fn analyzed(expr: &str, shapes: &[Vec<usize>]) -> (Path, EinsumSpec, Fusion) {
+        let spec = EinsumSpec::parse(expr, shapes).unwrap();
+        let path = optimize(&spec).unwrap();
+        let fusion = best_fusion(&path, &spec, S).unwrap();
+        (path, spec, fusion)
+    }
+
+    #[test]
+    fn mttkrp_fuses_krp_and_tdot() {
+        // §II-B: the optimal schedule fuses KRP + TDOT into one MTTKRP term.
+        let n = 1 << 14;
+        let (_, _, fusion) = analyzed(
+            "ijk,ja,ka->ia",
+            &[vec![n, n, n], vec![n, 24], vec![n, 24]],
+        );
+        assert_eq!(fusion.groups.len(), 1, "expected single fused MTTKRP group");
+        let g = &fusion.groups[0];
+        assert_eq!(g.op_indices, vec![0, 1]);
+        assert_eq!(g.inputs.len(), 3);
+        assert_eq!(g.outputs.len(), 1);
+        assert_eq!(fusion.candidates, 2);
+    }
+
+    #[test]
+    fn fused_mttkrp_beats_two_step() {
+        // The S^{1/6} separation (§IV-E): fused Q strictly below unfused.
+        let n = 1 << 14;
+        let spec = EinsumSpec::parse(
+            "ijk,ja,ka->ia",
+            &[vec![n, n, n], vec![n, 24], vec![n, 24]],
+        )
+        .unwrap();
+        let path = optimize(&spec).unwrap();
+        let fused = group_statement(&path, &spec, &[0, 1], S).unwrap();
+        let krp = group_statement(&path, &spec, &[0], S).unwrap();
+        let tdot = group_statement(&path, &spec, &[1], S).unwrap();
+        assert!(
+            fused.bound.q < krp.bound.q + tdot.bound.q,
+            "fused {} !< two-step {}",
+            fused.bound.q,
+            krp.bound.q + tdot.bound.q
+        );
+    }
+
+    #[test]
+    fn worked_example_groups_into_mttkrp_and_mm() {
+        // §II-B: ijk,ja,ka,al->il fuses into [MTTKRP term] + [MM term].
+        let n = 1 << 12;
+        let (_, _, fusion) = analyzed(
+            "ijk,ja,ka,al->il",
+            &[vec![n, n, n], vec![n, 24], vec![n, 24], vec![24, n]],
+        );
+        assert_eq!(fusion.groups.len(), 2, "{:?}", fusion.groups.iter().map(|g| g.render()).collect::<Vec<_>>());
+        // First group: 3 inputs (X, A, B), output ia.
+        assert_eq!(fusion.groups[0].inputs.len(), 3);
+        let out0: String = fusion.groups[0].outputs[0].1.iter().collect();
+        assert_eq!(out0, "ia");
+        // Second group: the GEMM ia,al->il.
+        assert_eq!(fusion.groups[1].inputs.len(), 2);
+        let out1: String = fusion.groups[1].outputs[0].1.iter().collect();
+        assert_eq!(out1, "il");
+    }
+
+    #[test]
+    fn single_gemm_single_group() {
+        let (_, _, fusion) =
+            analyzed("ij,jk->ik", &[vec![4096, 4096], vec![4096, 4096]]);
+        assert_eq!(fusion.groups.len(), 1);
+        assert_eq!(fusion.candidates, 1);
+    }
+
+    #[test]
+    fn mm_chain_not_fused() {
+        // 2MM: fusing two GEMMs does not reduce I/O (no shared reuse to
+        // exploit at this S) — expect two groups.
+        let n = 4096;
+        let (_, _, fusion) = analyzed(
+            "ij,jk,kl->il",
+            &[vec![n, n], vec![n, n], vec![n, n]],
+        );
+        assert_eq!(fusion.groups.len(), 2);
+    }
+
+    #[test]
+    fn group_external_io_accounting() {
+        // In a 2-group split of the worked example, t1 (ia) must appear as
+        // the first group's output and the second group's input.
+        let n = 1 << 12;
+        let (path, spec, fusion) = analyzed(
+            "ijk,ja,ka,al->il",
+            &[vec![n, n, n], vec![n, 24], vec![n, 24], vec![24, n]],
+        );
+        assert_eq!(fusion.groups.len(), 2);
+        let t1_id = fusion.groups[0].outputs[0].0;
+        assert!(fusion.groups[1].inputs.iter().any(|(id, _)| *id == t1_id));
+        assert_eq!(t1_id, path.ops[fusion.groups[0].op_indices[1]].output_id);
+        let _ = spec;
+    }
+
+    #[test]
+    fn total_q_is_sum_of_groups() {
+        let n = 1 << 12;
+        let (_, _, fusion) = analyzed(
+            "ijk,ja,ka,al->il",
+            &[vec![n, n, n], vec![n, 24], vec![n, 24], vec![24, n]],
+        );
+        let sum: f64 = fusion.groups.iter().map(|g| g.bound.q).sum();
+        assert!((sum - fusion.total_q).abs() / sum < 1e-12);
+    }
+}

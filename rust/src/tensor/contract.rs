@@ -1,0 +1,776 @@
+//! Native local contraction kernels (exact-shape fallback for the PJRT
+//! artifacts, and the oracle in integration tests).
+//!
+//! Everything lowers the way the paper's Sec. III-B describes: TDOT/TTM
+//! fold to GEMM after a mode permutation; MTTKRP has a dedicated *fused*
+//! kernel (KRP tile formed on the fly, never materialized) mirroring the
+//! L1 Pallas kernel's structure; the two-step MTTKRP used by the CTF-like
+//! baseline is also provided.
+
+use super::transpose::{dematricize, matricize};
+use super::Tensor;
+use crate::error::{Error, Result};
+
+/// Blocked GEMM: `C[m,n] = A[m,k] * B[k,n]`.
+///
+/// i-k-j loop order over `MC x KC` panels so `B` rows stream contiguously
+/// and `C` rows stay hot; with `-O3` the inner loop auto-vectorizes.
+pub fn gemm(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let (m, k) = mat_dims(a)?;
+    let (k2, n) = mat_dims(b)?;
+    if k != k2 {
+        return Err(Error::shape(format!("gemm: inner dims {k} != {k2}")));
+    }
+    let mut c = vec![0.0f32; m * n];
+    gemm_into(a.data(), b.data(), &mut c, m, k, n);
+    Tensor::from_vec(&[m, n], c)
+}
+
+/// GEMM into a preallocated accumulator (`c += a * b`). Raw-slice API so
+/// the coordinator's hot path can reuse buffers.
+pub fn gemm_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    const MC: usize = 64;
+    const KC: usize = 256;
+    let mut i0 = 0;
+    while i0 < m {
+        let i1 = (i0 + MC).min(m);
+        let mut k0 = 0;
+        while k0 < k {
+            let k1 = (k0 + KC).min(k);
+            for i in i0..i1 {
+                let c_row = &mut c[i * n..(i + 1) * n];
+                for kk in k0..k1 {
+                    let aik = a[i * k + kk];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let b_row = &b[kk * n..kk * n + n];
+                    for (cv, bv) in c_row.iter_mut().zip(b_row) {
+                        *cv += aik * bv;
+                    }
+                }
+            }
+            k0 = k1;
+        }
+        i0 = i1;
+    }
+}
+
+fn mat_dims(t: &Tensor) -> Result<(usize, usize)> {
+    if t.order() != 2 {
+        return Err(Error::shape(format!("expected matrix, got order {}", t.order())));
+    }
+    Ok((t.dims()[0], t.dims()[1]))
+}
+
+/// Tensor dot product over paired axes (numpy `tensordot` semantics):
+/// fold both operands so the contracted axes are adjacent, GEMM, unfold.
+pub fn tdot(x: &Tensor, y: &Tensor, axes_x: &[usize], axes_y: &[usize]) -> Result<Tensor> {
+    if axes_x.len() != axes_y.len() {
+        return Err(Error::shape("tdot: axes length mismatch"));
+    }
+    for (&ax, &ay) in axes_x.iter().zip(axes_y) {
+        if x.dims()[ax] != y.dims()[ay] {
+            return Err(Error::shape(format!(
+                "tdot: contracted extents differ: x[{ax}]={} y[{ay}]={}",
+                x.dims()[ax],
+                y.dims()[ay]
+            )));
+        }
+    }
+    let free_x: Vec<usize> = (0..x.order()).filter(|d| !axes_x.contains(d)).collect();
+    let free_y: Vec<usize> = (0..y.order()).filter(|d| !axes_y.contains(d)).collect();
+
+    let perm_x: Vec<usize> = free_x.iter().chain(axes_x.iter()).copied().collect();
+    let perm_y: Vec<usize> = axes_y.iter().chain(free_y.iter()).copied().collect();
+    let xp = x.permute(&perm_x);
+    let yp = y.permute(&perm_y);
+
+    let m: usize = free_x.iter().map(|&d| x.dims()[d]).product();
+    let kk: usize = axes_x.iter().map(|&d| x.dims()[d]).product();
+    let n: usize = free_y.iter().map(|&d| y.dims()[d]).product();
+
+    let mut c = vec![0.0f32; m * n];
+    gemm_into(xp.data(), yp.data(), &mut c, m, kk, n);
+
+    let mut out_dims: Vec<usize> = free_x.iter().map(|&d| x.dims()[d]).collect();
+    out_dims.extend(free_y.iter().map(|&d| y.dims()[d]));
+    if out_dims.is_empty() {
+        out_dims.push(1);
+    }
+    Tensor::from_vec(&out_dims, c)
+}
+
+/// Tensor-times-matrix in `mode`: contract X's mode-`mode` fibers with
+/// `U[I_mode, R]`, placing R in that mode.
+pub fn ttm(x: &Tensor, u: &Tensor, mode: usize) -> Result<Tensor> {
+    let (i_mode, r) = mat_dims(u)?;
+    if x.dims()[mode] != i_mode {
+        return Err(Error::shape(format!(
+            "ttm: mode {mode} extent {} != U rows {}",
+            x.dims()[mode],
+            i_mode
+        )));
+    }
+    // fold: (I_mode, rest) = matricize; U^T * that is (R, rest); unfold.
+    let xm = matricize(x, mode); // (I_mode, rest)
+    let ut = u.permute(&[1, 0]); // (R, I_mode)
+    let mut c = vec![0.0f32; r * xm.dims()[1]];
+    gemm_into(ut.data(), xm.data(), &mut c, r, i_mode, xm.dims()[1]);
+    let folded = Tensor::from_vec(&[r, xm.dims()[1]], c)?;
+    let mut out_dims = x.dims().to_vec();
+    out_dims[mode] = r;
+    Ok(dematricize(&folded, &out_dims, mode))
+}
+
+/// Mode-`mode` TTM chain (Table IV TTMc): apply every factor but `mode`'s.
+/// `factors[mode]` is ignored and may be any placeholder.
+pub fn ttmc(x: &Tensor, factors: &[&Tensor], mode: usize) -> Result<Tensor> {
+    let mut out = x.clone();
+    for m in 0..x.order() {
+        if m == mode {
+            continue;
+        }
+        out = ttm(&out, factors[m], m)?;
+    }
+    Ok(out)
+}
+
+/// Khatri-Rao product chain, unflattened: `(I_0, ..., I_{q-1}, R)`.
+pub fn krp_chain(factors: &[&Tensor]) -> Result<Tensor> {
+    if factors.is_empty() {
+        return Err(Error::shape("krp_chain: no factors"));
+    }
+    let r = factors[0].dims()[1];
+    let mut out = factors[0].clone();
+    for f in &factors[1..] {
+        if f.dims()[1] != r {
+            return Err(Error::shape("krp_chain: rank mismatch"));
+        }
+        let rows_out: usize = out.len() / r;
+        let rows_f = f.dims()[0];
+        let mut data = vec![0.0f32; rows_out * rows_f * r];
+        for i in 0..rows_out {
+            let o_row = &out.data()[i * r..(i + 1) * r];
+            for j in 0..rows_f {
+                let f_row = &f.data()[j * r..(j + 1) * r];
+                let dst = &mut data[(i * rows_f + j) * r..(i * rows_f + j + 1) * r];
+                for c in 0..r {
+                    dst[c] = o_row[c] * f_row[c];
+                }
+            }
+        }
+        let mut dims: Vec<usize> = out.dims()[..out.order() - 1].to_vec();
+        dims.push(rows_f);
+        dims.push(r);
+        out = Tensor::from_vec(&dims, data)?;
+    }
+    Ok(out)
+}
+
+/// Fused mode-`mode` MTTKRP (paper Sec. IV-E tiling structure): the KRP
+/// row is formed on the fly per (reduction-index) and contracted
+/// immediately — the KRP never hits memory, exactly like the L1 Pallas
+/// kernel.  `factors[mode]` is ignored.
+pub fn mttkrp(x: &Tensor, factors: &[&Tensor], mode: usize) -> Result<Tensor> {
+    let order = x.order();
+    if factors.len() != order {
+        return Err(Error::shape(format!(
+            "mttkrp: need {order} factors (mode slot ignored), got {}",
+            factors.len()
+        )));
+    }
+    let rest: Vec<usize> = (0..order).filter(|&m| m != mode).collect();
+    let r = factors[rest[0]].dims()[1];
+    for &m in &rest {
+        if factors[m].dims() != [x.dims()[m], r] {
+            return Err(Error::shape(format!(
+                "mttkrp: factor {m} dims {:?} != [{}, {r}]",
+                factors[m].dims(),
+                x.dims()[m]
+            )));
+        }
+    }
+    // Matricize X with `mode` leading: rows = I_mode, cols iterate `rest`
+    // in row-major order.  Then, exactly like the L1 Pallas kernel, form
+    // KRP *tiles* of KC columns in a bounded scratch buffer and contract
+    // each against the matching X-column panel with the blocked GEMM —
+    // the KRP never materializes beyond the scratch tile.
+    let xm = matricize(x, mode);
+    let n_rows = xm.dims()[0];
+    let n_cols = xm.dims()[1];
+    let rest_dims: Vec<usize> = rest.iter().map(|&m| x.dims()[m]).collect();
+
+    const KC: usize = 512; // KRP tile rows resident in "fast memory"
+    let mut out = vec![0.0f32; n_rows * r];
+    let mut krp_tile = vec![0.0f32; KC * r];
+    let mut panel = vec![0.0f32; n_rows * KC];
+    let mut idx = vec![0usize; rest.len()];
+    let mut col0 = 0usize;
+    while col0 < n_cols {
+        let tile = KC.min(n_cols - col0);
+        // Build the KRP tile rows [col0, col0+tile).
+        for t in 0..tile {
+            let dst = &mut krp_tile[t * r..(t + 1) * r];
+            let f0 = factors[rest[0]];
+            dst.copy_from_slice(&f0.data()[idx[0] * r..idx[0] * r + r]);
+            for (q, &m) in rest.iter().enumerate().skip(1) {
+                let row = &factors[m].data()[idx[q] * r..idx[q] * r + r];
+                for c in 0..r {
+                    dst[c] *= row[c];
+                }
+            }
+            for q in (0..rest.len()).rev() {
+                idx[q] += 1;
+                if idx[q] < rest_dims[q] {
+                    break;
+                }
+                idx[q] = 0;
+            }
+        }
+        // Gather the X column panel (n_rows x tile) contiguously.
+        for i in 0..n_rows {
+            panel[i * tile..(i + 1) * tile]
+                .copy_from_slice(&xm.data()[i * n_cols + col0..i * n_cols + col0 + tile]);
+        }
+        // out += panel @ krp_tile  (the kernel's MXU contraction)
+        gemm_into(&panel[..n_rows * tile], &krp_tile[..tile * r], &mut out, n_rows, tile, r);
+        col0 += tile;
+    }
+    Tensor::from_vec(&[n_rows, r], out)
+}
+
+/// Sum a tensor over one mode (used to eliminate indices that appear in
+/// one operand only and not in the output).
+pub fn reduce_mode(x: &Tensor, mode: usize) -> Tensor {
+    let dims = x.dims();
+    let out_dims: Vec<usize> =
+        dims.iter().enumerate().filter(|(d, _)| *d != mode).map(|(_, &e)| e).collect();
+    let out_dims = if out_dims.is_empty() { vec![1] } else { out_dims };
+    let mut out = Tensor::zeros(&out_dims);
+    // permute `mode` to front, then sum rows.
+    let mut perm = vec![mode];
+    perm.extend((0..x.order()).filter(|&d| d != mode));
+    let xp = x.permute(&perm);
+    let rows = dims[mode];
+    let cols = xp.len() / rows.max(1);
+    for r in 0..rows {
+        let src = &xp.data()[r * cols..(r + 1) * cols];
+        for (o, s) in out.data_mut().iter_mut().zip(src) {
+            *o += s;
+        }
+    }
+    out
+}
+
+/// General binary einsum: `out[out_idx] = Σ x[x_idx] * y[y_idx]` with
+/// batch (shared & kept), contracted (shared & dropped) and free indices.
+/// This is the local-tile workhorse for arbitrary fused-group ops: folds
+/// both operands into `(batch, free, contracted)` layout and runs one
+/// GEMM per batch slice.
+pub fn einsum2(
+    x: &Tensor,
+    x_idx: &[char],
+    y: &Tensor,
+    y_idx: &[char],
+    out_idx: &[char],
+) -> Result<Tensor> {
+    if x.order() != x_idx.len() || y.order() != y_idx.len() {
+        return Err(Error::shape("einsum2: index/rank mismatch"));
+    }
+    // Pre-reduce indices private to one operand and absent from output
+    // (copy-on-write: the common all-indices-used case never clones).
+    let mut x_owned: Option<Tensor> = None;
+    let mut x_idx: Vec<char> = x_idx.to_vec();
+    loop {
+        let victim = x_idx
+            .iter()
+            .position(|c| !y_idx.contains(c) && !out_idx.contains(c));
+        match victim {
+            Some(d) => {
+                let cur = x_owned.as_ref().unwrap_or(x);
+                x_owned = Some(reduce_mode(cur, d));
+                x_idx.remove(d);
+                if x_idx.is_empty() {
+                    x_idx.push('\u{1}'); // synthetic singleton
+                }
+            }
+            None => break,
+        }
+    }
+    let x: &Tensor = x_owned.as_ref().unwrap_or(x);
+    let mut y_owned: Option<Tensor> = None;
+    let mut y_idx: Vec<char> = y_idx.to_vec();
+    loop {
+        let victim = y_idx
+            .iter()
+            .position(|c| !x_idx.contains(c) && !out_idx.contains(c));
+        match victim {
+            Some(d) => {
+                let cur = y_owned.as_ref().unwrap_or(y);
+                y_owned = Some(reduce_mode(cur, d));
+                y_idx.remove(d);
+                if y_idx.is_empty() {
+                    y_idx.push('\u{1}');
+                }
+            }
+            None => break,
+        }
+    }
+    let y: &Tensor = y_owned.as_ref().unwrap_or(y);
+
+    let batch: Vec<char> = x_idx
+        .iter()
+        .copied()
+        .filter(|c| y_idx.contains(c) && out_idx.contains(c))
+        .collect();
+    let contracted: Vec<char> = x_idx
+        .iter()
+        .copied()
+        .filter(|c| y_idx.contains(c) && !out_idx.contains(c))
+        .collect();
+    let free_x: Vec<char> = x_idx
+        .iter()
+        .copied()
+        .filter(|c| !y_idx.contains(c) && *c != '\u{1}')
+        .collect();
+    let free_y: Vec<char> = y_idx
+        .iter()
+        .copied()
+        .filter(|c| !x_idx.contains(c) && *c != '\u{1}')
+        .collect();
+
+    let pos = |idx: &[char], c: char| idx.iter().position(|&i| i == c).unwrap();
+    let ext_x = |c: char| x.dims()[pos(&x_idx, c)];
+    let ext_y = |c: char| y.dims()[pos(&y_idx, c)];
+    for &c in &batch {
+        if ext_x(c) != ext_y(c) {
+            return Err(Error::shape(format!("einsum2: batch extent mismatch '{c}'")));
+        }
+    }
+    for &c in &contracted {
+        if ext_x(c) != ext_y(c) {
+            return Err(Error::shape(format!("einsum2: contracted extent mismatch '{c}'")));
+        }
+    }
+
+    // Fold x -> (B, M, K), y -> (B, K, N).
+    let perm_x: Vec<usize> = batch
+        .iter()
+        .chain(free_x.iter())
+        .chain(contracted.iter())
+        .map(|&c| pos(&x_idx, c))
+        .chain(x_idx.iter().enumerate().filter(|(_, &c)| c == '\u{1}').map(|(d, _)| d))
+        .collect();
+    let perm_y: Vec<usize> = batch
+        .iter()
+        .chain(contracted.iter())
+        .chain(free_y.iter())
+        .map(|&c| pos(&y_idx, c))
+        .chain(y_idx.iter().enumerate().filter(|(_, &c)| c == '\u{1}').map(|(d, _)| d))
+        .collect();
+    // Identity permutations fold for free: borrow the original data.
+    let is_identity = |p: &[usize]| p.iter().enumerate().all(|(i, &q)| i == q);
+    let xp_owned;
+    let xp_data: &[f32] = if is_identity(&perm_x) {
+        x.data()
+    } else {
+        xp_owned = x.permute(&perm_x);
+        xp_owned.data()
+    };
+    let yp_owned;
+    let yp_data: &[f32] = if is_identity(&perm_y) {
+        y.data()
+    } else {
+        yp_owned = y.permute(&perm_y);
+        yp_owned.data()
+    };
+    let b: usize = batch.iter().map(|&c| ext_x(c)).product();
+    let m: usize = free_x.iter().map(|&c| ext_x(c)).product();
+    let kk: usize = contracted.iter().map(|&c| ext_x(c)).product();
+    let n: usize = free_y.iter().map(|&c| ext_y(c)).product();
+
+    let mut c_data = vec![0.0f32; b * m * n];
+    for bi in 0..b {
+        let xs = &xp_data[bi * m * kk..(bi + 1) * m * kk];
+        let ys = &yp_data[bi * kk * n..(bi + 1) * kk * n];
+        let cs = &mut c_data[bi * m * n..(bi + 1) * m * n];
+        gemm_into(xs, ys, cs, m, kk, n);
+    }
+    // Result layout: (batch..., free_x..., free_y...); permute to out_idx.
+    let natural: Vec<char> = batch
+        .iter()
+        .chain(free_x.iter())
+        .chain(free_y.iter())
+        .copied()
+        .collect();
+    let nat_dims: Vec<usize> = natural
+        .iter()
+        .map(|&c| if free_y.contains(&c) { ext_y(c) } else { ext_x(c) })
+        .collect();
+    let nat_dims = if nat_dims.is_empty() { vec![1] } else { nat_dims };
+    let t = Tensor::from_vec(&nat_dims, c_data)?;
+    if natural.is_empty() {
+        return Ok(t);
+    }
+    if natural == out_idx {
+        return Ok(t);
+    }
+    let out_set: std::collections::BTreeSet<char> = out_idx.iter().copied().collect();
+    let nat_set: std::collections::BTreeSet<char> = natural.iter().copied().collect();
+    if out_set != nat_set {
+        return Err(Error::shape(format!(
+            "einsum2: output indices {:?} != computed {:?}",
+            out_idx, natural
+        )));
+    }
+    let perm: Vec<usize> = out_idx
+        .iter()
+        .map(|&c| natural.iter().position(|&d| d == c).unwrap())
+        .collect();
+    Ok(t.permute(&perm))
+}
+
+/// Two-step MTTKRP (explicit KRP then GEMM) — the communication-suboptimal
+/// formulation the CTF-like baseline uses (paper Sec. IV-E).
+pub fn mttkrp_two_step(x: &Tensor, factors: &[&Tensor], mode: usize) -> Result<Tensor> {
+    let order = x.order();
+    let rest: Vec<usize> = (0..order).filter(|&m| m != mode).collect();
+    let krp = krp_chain(&rest.iter().map(|&m| factors[m]).collect::<Vec<_>>())?;
+    let r = krp.dims()[krp.order() - 1];
+    let krp_mat = krp.reshape(&[krp.len() / r, r])?;
+    let xm = matricize(x, mode);
+    gemm(&xm, &krp_mat)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn randn(dims: &[usize], seed: u64) -> Tensor {
+        Tensor::random(dims, seed)
+    }
+
+    /// Naive triple-loop GEMM oracle.
+    fn gemm_naive(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = (a.dims()[0], a.dims()[1]);
+        let n = b.dims()[1];
+        let mut c = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for kk in 0..k {
+                    s += a.at(&[i, kk]) * b.at(&[kk, j]);
+                }
+                *c.at_mut(&[i, j]) = s;
+            }
+        }
+        c
+    }
+
+    /// Naive elementwise MTTKRP oracle straight from the einsum.
+    fn mttkrp_naive(x: &Tensor, factors: &[&Tensor], mode: usize) -> Tensor {
+        let order = x.order();
+        let rest: Vec<usize> = (0..order).filter(|&m| m != mode).collect();
+        let r = factors[rest[0]].dims()[1];
+        let mut out = Tensor::zeros(&[x.dims()[mode], r]);
+        let dims = x.dims().to_vec();
+        let total: usize = dims.iter().product();
+        let strides = super::super::strides_of(&dims);
+        for flat in 0..total {
+            let mut rem = flat;
+            let mut idx = vec![0usize; order];
+            for d in 0..order {
+                idx[d] = rem / strides[d];
+                rem %= strides[d];
+            }
+            for c in 0..r {
+                let mut v = x.data()[flat];
+                for &m in &rest {
+                    v *= factors[m].at(&[idx[m], c]);
+                }
+                *out.at_mut(&[idx[mode], c]) += v;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn gemm_matches_naive() {
+        let a = randn(&[17, 23], 1);
+        let b = randn(&[23, 9], 2);
+        let got = gemm(&a, &b).unwrap();
+        assert!(got.allclose(&gemm_naive(&a, &b), 1e-4, 1e-5));
+    }
+
+    #[test]
+    fn gemm_blocked_path() {
+        let a = randn(&[130, 300], 3);
+        let b = randn(&[300, 70], 4);
+        let got = gemm(&a, &b).unwrap();
+        assert!(got.allclose(&gemm_naive(&a, &b), 1e-3, 1e-3));
+    }
+
+    #[test]
+    fn gemm_rejects_mismatch() {
+        let a = randn(&[3, 4], 1);
+        let b = randn(&[5, 2], 2);
+        assert!(gemm(&a, &b).is_err());
+    }
+
+    #[test]
+    fn tdot_matches_paper_example() {
+        // ijk,jka->ia == tensordot(X, t0, axes=([1,2],[0,1])) (Sec. II-A)
+        let x = randn(&[5, 6, 7], 10);
+        let t0 = randn(&[6, 7, 4], 11);
+        let got = tdot(&x, &t0, &[1, 2], &[0, 1]).unwrap();
+        assert_eq!(got.dims(), &[5, 4]);
+        // oracle via full loops
+        let mut want = Tensor::zeros(&[5, 4]);
+        for i in 0..5 {
+            for j in 0..6 {
+                for k in 0..7 {
+                    for a in 0..4 {
+                        *want.at_mut(&[i, a]) += x.at(&[i, j, k]) * t0.at(&[j, k, a]);
+                    }
+                }
+            }
+        }
+        assert!(got.allclose(&want, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn tdot_full_contraction_scalar() {
+        let x = randn(&[3, 4], 20);
+        let y = randn(&[3, 4], 21);
+        let got = tdot(&x, &y, &[0, 1], &[0, 1]).unwrap();
+        assert_eq!(got.dims(), &[1]);
+        let want: f32 = x.data().iter().zip(y.data()).map(|(a, b)| a * b).sum();
+        assert!((got.data()[0] - want).abs() < 1e-3);
+    }
+
+    #[test]
+    fn ttm_all_modes() {
+        let x = randn(&[4, 5, 6], 30);
+        for mode in 0..3 {
+            let u = randn(&[x.dims()[mode], 3], 31 + mode as u64);
+            let got = ttm(&x, &u, mode).unwrap();
+            let mut want_dims = x.dims().to_vec();
+            want_dims[mode] = 3;
+            assert_eq!(got.dims(), &want_dims[..]);
+            // oracle
+            let mut want = Tensor::zeros(&want_dims);
+            for i in 0..4 {
+                for j in 0..5 {
+                    for k in 0..6 {
+                        let idx = [i, j, k];
+                        for rr in 0..3 {
+                            let mut o = idx.to_vec();
+                            o[mode] = rr;
+                            *want.at_mut(&o) += x.at(&idx) * u.at(&[idx[mode], rr]);
+                        }
+                    }
+                }
+            }
+            assert!(got.allclose(&want, 1e-4, 1e-4), "mode {mode}");
+        }
+    }
+
+    #[test]
+    fn ttmc_order3() {
+        let x = randn(&[4, 5, 6], 40);
+        let u0 = randn(&[4, 2], 41);
+        let u1 = randn(&[5, 3], 42);
+        let u2 = randn(&[6, 2], 43);
+        let got = ttmc(&x, &[&u0, &u1, &u2], 1).unwrap();
+        assert_eq!(got.dims(), &[2, 5, 2]);
+        let step1 = ttm(&x, &u0, 0).unwrap();
+        let want = ttm(&step1, &u2, 2).unwrap();
+        assert!(got.allclose(&want, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn krp_chain_shape_and_values() {
+        let u0 = randn(&[3, 4], 50);
+        let u1 = randn(&[5, 4], 51);
+        let k = krp_chain(&[&u0, &u1]).unwrap();
+        assert_eq!(k.dims(), &[3, 5, 4]);
+        for i in 0..3 {
+            for j in 0..5 {
+                for c in 0..4 {
+                    let want = u0.at(&[i, c]) * u1.at(&[j, c]);
+                    assert!((k.at(&[i, j, c]) - want).abs() < 1e-6);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mttkrp_order3_all_modes() {
+        let x = randn(&[5, 6, 7], 60);
+        let fs: Vec<Tensor> =
+            (0..3).map(|m| randn(&[x.dims()[m], 4], 61 + m as u64)).collect();
+        let frefs: Vec<&Tensor> = fs.iter().collect();
+        for mode in 0..3 {
+            let got = mttkrp(&x, &frefs, mode).unwrap();
+            let want = mttkrp_naive(&x, &frefs, mode);
+            assert!(got.allclose(&want, 1e-3, 1e-4), "mode {mode}");
+        }
+    }
+
+    #[test]
+    fn mttkrp_order5() {
+        let x = randn(&[3, 4, 2, 4, 3], 70);
+        let fs: Vec<Tensor> =
+            (0..5).map(|m| randn(&[x.dims()[m], 3], 71 + m as u64)).collect();
+        let frefs: Vec<&Tensor> = fs.iter().collect();
+        for mode in [0usize, 2, 4] {
+            let got = mttkrp(&x, &frefs, mode).unwrap();
+            let want = mttkrp_naive(&x, &frefs, mode);
+            assert!(got.allclose(&want, 1e-3, 1e-4), "mode {mode}");
+        }
+    }
+
+    /// Naive einsum2 oracle via full index iteration.
+    fn einsum2_naive(
+        x: &Tensor,
+        x_idx: &[char],
+        y: &Tensor,
+        y_idx: &[char],
+        out_idx: &[char],
+    ) -> Tensor {
+        use std::collections::BTreeMap;
+        let mut ext: BTreeMap<char, usize> = BTreeMap::new();
+        for (d, &c) in x_idx.iter().enumerate() {
+            ext.insert(c, x.dims()[d]);
+        }
+        for (d, &c) in y_idx.iter().enumerate() {
+            ext.insert(c, y.dims()[d]);
+        }
+        let all: Vec<char> = ext.keys().copied().collect();
+        let out_dims: Vec<usize> = out_idx.iter().map(|c| ext[c]).collect();
+        let out_dims = if out_dims.is_empty() { vec![1] } else { out_dims };
+        let mut out = Tensor::zeros(&out_dims);
+        let total: usize = all.iter().map(|c| ext[c]).product();
+        for flat in 0..total {
+            let mut rem = flat;
+            let mut asn: BTreeMap<char, usize> = BTreeMap::new();
+            for &c in all.iter().rev() {
+                asn.insert(c, rem % ext[&c]);
+                rem /= ext[&c];
+            }
+            let xi: Vec<usize> = x_idx.iter().map(|c| asn[c]).collect();
+            let yi: Vec<usize> = y_idx.iter().map(|c| asn[c]).collect();
+            let oi: Vec<usize> = if out_idx.is_empty() {
+                vec![0]
+            } else {
+                out_idx.iter().map(|c| asn[c]).collect()
+            };
+            *out.at_mut(&oi) += x.at(&xi) * y.at(&yi);
+        }
+        out
+    }
+
+    #[test]
+    fn einsum2_pure_matmul() {
+        let a = randn(&[7, 9], 100);
+        let b = randn(&[9, 5], 101);
+        let got = einsum2(&a, &['i', 'j'], &b, &['j', 'k'], &['i', 'k']).unwrap();
+        let want = einsum2_naive(&a, &['i', 'j'], &b, &['j', 'k'], &['i', 'k']);
+        assert!(got.allclose(&want, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn einsum2_krp_batched_outer() {
+        // ja,ka->jka: 'a' is a batch dim, nothing contracted.
+        let a = randn(&[6, 4], 102);
+        let b = randn(&[5, 4], 103);
+        let got = einsum2(&a, &['j', 'a'], &b, &['k', 'a'], &['j', 'k', 'a']).unwrap();
+        let want = einsum2_naive(&a, &['j', 'a'], &b, &['k', 'a'], &['j', 'k', 'a']);
+        assert_eq!(got.dims(), &[6, 5, 4]);
+        assert!(got.allclose(&want, 1e-4, 1e-5));
+    }
+
+    #[test]
+    fn einsum2_tdot_paper() {
+        // ijk,jka->ia
+        let x = randn(&[5, 6, 7], 104);
+        let t0 = randn(&[6, 7, 4], 105);
+        let got =
+            einsum2(&x, &['i', 'j', 'k'], &t0, &['j', 'k', 'a'], &['i', 'a']).unwrap();
+        let want = einsum2_naive(&x, &['i', 'j', 'k'], &t0, &['j', 'k', 'a'], &['i', 'a']);
+        assert!(got.allclose(&want, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn einsum2_output_permutation() {
+        let a = randn(&[3, 4], 106);
+        let b = randn(&[4, 5], 107);
+        let got = einsum2(&a, &['i', 'j'], &b, &['j', 'k'], &['k', 'i']).unwrap();
+        let want = einsum2_naive(&a, &['i', 'j'], &b, &['j', 'k'], &['k', 'i']);
+        assert!(got.allclose(&want, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn einsum2_private_index_reduced() {
+        // ijx,jk->ik: x is private to the left operand and reduced.
+        let a = randn(&[3, 4, 5], 108);
+        let b = randn(&[4, 6], 109);
+        let got = einsum2(&a, &['i', 'j', 'x'], &b, &['j', 'k'], &['i', 'k']).unwrap();
+        let want = einsum2_naive(&a, &['i', 'j', 'x'], &b, &['j', 'k'], &['i', 'k']);
+        assert!(got.allclose(&want, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn einsum2_full_contraction() {
+        let a = randn(&[3, 4], 110);
+        let b = randn(&[3, 4], 111);
+        let got = einsum2(&a, &['i', 'j'], &b, &['i', 'j'], &[]).unwrap();
+        let want: f32 = a.data().iter().zip(b.data()).map(|(x, y)| x * y).sum();
+        assert!((got.data()[0] - want).abs() < 1e-3);
+    }
+
+    #[test]
+    fn einsum2_batched_matmul() {
+        // bij,bjk->bik
+        let a = randn(&[2, 3, 4], 112);
+        let b = randn(&[2, 4, 5], 113);
+        let got =
+            einsum2(&a, &['b', 'i', 'j'], &b, &['b', 'j', 'k'], &['b', 'i', 'k']).unwrap();
+        let want =
+            einsum2_naive(&a, &['b', 'i', 'j'], &b, &['b', 'j', 'k'], &['b', 'i', 'k']);
+        assert!(got.allclose(&want, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn reduce_mode_sums() {
+        let t = randn(&[3, 4, 5], 114);
+        let r = reduce_mode(&t, 1);
+        assert_eq!(r.dims(), &[3, 5]);
+        let mut want = Tensor::zeros(&[3, 5]);
+        for i in 0..3 {
+            for j in 0..4 {
+                for k in 0..5 {
+                    *want.at_mut(&[i, k]) += t.at(&[i, j, k]);
+                }
+            }
+        }
+        assert!(r.allclose(&want, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn fused_equals_two_step() {
+        let x = randn(&[6, 5, 4], 80);
+        let fs: Vec<Tensor> =
+            (0..3).map(|m| randn(&[x.dims()[m], 5], 81 + m as u64)).collect();
+        let frefs: Vec<&Tensor> = fs.iter().collect();
+        for mode in 0..3 {
+            let fused = mttkrp(&x, &frefs, mode).unwrap();
+            let two = mttkrp_two_step(&x, &frefs, mode).unwrap();
+            assert!(fused.allclose(&two, 1e-3, 1e-4), "mode {mode}");
+        }
+    }
+}

@@ -1,0 +1,414 @@
+//! Dense tensor substrate: row-major `f32` tensors, strided block access,
+//! HPTT-lite transposition, and native contraction kernels.
+//!
+//! This is the local-compute substrate under the coordinator: the PJRT
+//! runtime handles bucketed tile shapes, and these native kernels are the
+//! exact-shape fallback (and the oracle used in integration tests).
+//!
+//! The paper evaluates in `C^n` on Piz Daint with MKL/cuTENSOR locals; we
+//! standardize on `f32` (the artifacts' dtype) — the data-movement
+//! analysis is dtype-agnostic.
+
+pub mod contract;
+pub mod transpose;
+
+use crate::error::{Error, Result};
+
+/// Dense row-major tensor of `f32`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    dims: Vec<usize>,
+    data: Vec<f32>,
+}
+
+/// Row-major strides for `dims`.
+pub fn strides_of(dims: &[usize]) -> Vec<usize> {
+    let n = dims.len();
+    let mut s = vec![1usize; n];
+    for i in (0..n.saturating_sub(1)).rev() {
+        s[i] = s[i + 1] * dims[i + 1];
+    }
+    s
+}
+
+impl Tensor {
+    /// All-zeros tensor.
+    pub fn zeros(dims: &[usize]) -> Self {
+        let len = dims.iter().product();
+        Tensor { dims: dims.to_vec(), data: vec![0.0; len] }
+    }
+
+    /// Build from raw row-major data.
+    pub fn from_vec(dims: &[usize], data: Vec<f32>) -> Result<Self> {
+        let len: usize = dims.iter().product();
+        if data.len() != len {
+            return Err(Error::shape(format!(
+                "data length {} != product of dims {:?}",
+                data.len(),
+                dims
+            )));
+        }
+        Ok(Tensor { dims: dims.to_vec(), data })
+    }
+
+    /// Deterministic pseudo-random tensor in [-1, 1) (splitmix64-seeded
+    /// xorshift; no rand dependency, reproducible across platforms).
+    ///
+    /// The seed goes through two splitmix64 avalanche rounds: xorshift is
+    /// GF(2)-linear, so *raw* sequential seeds (1, 2, 3, ...) would
+    /// produce linearly-related — i.e. statistically correlated —
+    /// streams, which breaks downstream consumers like the CP-ALS
+    /// example (near-collinear factors stall the decomposition).
+    pub fn random(dims: &[usize], seed: u64) -> Self {
+        fn splitmix(mut z: u64) -> u64 {
+            z = z.wrapping_add(0x9E3779B97F4A7C15);
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        }
+        let len: usize = dims.iter().product();
+        let mut state = splitmix(splitmix(seed)) | 1;
+        let mut data = Vec::with_capacity(len);
+        for _ in 0..len {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            // map to [-1, 1)
+            data.push(((state >> 11) as f64 / (1u64 << 53) as f64 * 2.0 - 1.0) as f32);
+        }
+        Tensor { dims: dims.to_vec(), data }
+    }
+
+    /// Tensor order (number of modes).
+    pub fn order(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Mode extents.
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// Total element count.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True when the tensor has no elements.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Raw row-major data.
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable raw data.
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Consume into raw data.
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Element accessor (debug/test convenience; not a hot path).
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        debug_assert_eq!(idx.len(), self.dims.len());
+        let s = strides_of(&self.dims);
+        let off: usize = idx.iter().zip(&s).map(|(i, st)| i * st).sum();
+        self.data[off]
+    }
+
+    /// Mutable element accessor.
+    pub fn at_mut(&mut self, idx: &[usize]) -> &mut f32 {
+        let s = strides_of(&self.dims);
+        let off: usize = idx.iter().zip(&s).map(|(i, st)| i * st).sum();
+        &mut self.data[off]
+    }
+
+    /// Reinterpret with new dims of equal product (row-major reshape).
+    pub fn reshape(&self, dims: &[usize]) -> Result<Tensor> {
+        let len: usize = dims.iter().product();
+        if len != self.data.len() {
+            return Err(Error::shape(format!(
+                "reshape {:?} -> {:?}: element count mismatch",
+                self.dims, dims
+            )));
+        }
+        Ok(Tensor { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    /// Extract the block `[off[d] .. off[d]+size[d])` in every dim.
+    /// Out-of-range tails are zero-padded (bucketed PJRT dispatch relies on
+    /// this: padding with zeros is exact for multiply-add contractions).
+    pub fn block(&self, off: &[usize], size: &[usize]) -> Tensor {
+        debug_assert_eq!(off.len(), self.dims.len());
+        let mut out = Tensor::zeros(size);
+        let src_strides = strides_of(&self.dims);
+        let dst_strides = strides_of(size);
+        let n = self.dims.len();
+        if n == 0 {
+            return out;
+        }
+        // Copy contiguous innermost runs.
+        let inner_copy = size[n - 1].min(self.dims[n - 1].saturating_sub(off[n - 1]));
+        if inner_copy == 0 {
+            return out;
+        }
+        let outer_dims = &size[..n - 1];
+        let total_outer: usize = outer_dims.iter().product();
+        let mut idx = vec![0usize; n - 1];
+        for _ in 0..total_outer {
+            let mut in_range = true;
+            let mut src_off = off[n - 1];
+            let mut dst_off = 0usize;
+            for d in 0..n - 1 {
+                let gi = off[d] + idx[d];
+                if gi >= self.dims[d] {
+                    in_range = false;
+                    break;
+                }
+                src_off += gi * src_strides[d];
+                dst_off += idx[d] * dst_strides[d];
+            }
+            if in_range {
+                out.data[dst_off..dst_off + inner_copy]
+                    .copy_from_slice(&self.data[src_off..src_off + inner_copy]);
+            }
+            // advance odometer
+            for d in (0..n - 1).rev() {
+                idx[d] += 1;
+                if idx[d] < outer_dims[d] {
+                    break;
+                }
+                idx[d] = 0;
+            }
+        }
+        out
+    }
+
+    /// Write `blk` into this tensor at offset `off` (inverse of `block`;
+    /// clips to bounds so padded buckets round-trip).
+    pub fn set_block(&mut self, off: &[usize], blk: &Tensor) {
+        let n = self.dims.len();
+        debug_assert_eq!(off.len(), n);
+        debug_assert_eq!(blk.dims.len(), n);
+        if n == 0 {
+            return;
+        }
+        let dst_strides = strides_of(&self.dims);
+        let src_strides = strides_of(&blk.dims);
+        let inner_copy = blk.dims[n - 1].min(self.dims[n - 1].saturating_sub(off[n - 1]));
+        if inner_copy == 0 {
+            return;
+        }
+        let outer_dims = &blk.dims[..n - 1];
+        let total_outer: usize = outer_dims.iter().product();
+        let mut idx = vec![0usize; n - 1];
+        for _ in 0..total_outer {
+            let mut in_range = true;
+            let mut dst_off = off[n - 1];
+            let mut src_off = 0usize;
+            for d in 0..n - 1 {
+                let gi = off[d] + idx[d];
+                if gi >= self.dims[d] {
+                    in_range = false;
+                    break;
+                }
+                dst_off += gi * dst_strides[d];
+                src_off += idx[d] * src_strides[d];
+            }
+            if in_range {
+                self.data[dst_off..dst_off + inner_copy]
+                    .copy_from_slice(&blk.data[src_off..src_off + inner_copy]);
+            }
+            for d in (0..n - 1).rev() {
+                idx[d] += 1;
+                if idx[d] < outer_dims[d] {
+                    break;
+                }
+                idx[d] = 0;
+            }
+        }
+    }
+
+    /// Permute modes (out-of-place, cache-blocked; see [`transpose`]).
+    pub fn permute(&self, perm: &[usize]) -> Tensor {
+        transpose::permute(self, perm)
+    }
+
+    /// In-place accumulate: `self += other` (shapes must match).
+    pub fn add_assign(&mut self, other: &Tensor) -> Result<()> {
+        if self.dims != other.dims {
+            return Err(Error::shape(format!(
+                "add_assign {:?} += {:?}",
+                self.dims, other.dims
+            )));
+        }
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+        Ok(())
+    }
+
+    /// In-place scale.
+    pub fn scale(&mut self, s: f32) {
+        for a in &mut self.data {
+            *a *= s;
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Max |a - b| over all elements.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Relative Frobenius error ||a - b|| / ||b||.
+    pub fn rel_error(&self, other: &Tensor) -> f64 {
+        let mut num = 0.0f64;
+        for (a, b) in self.data.iter().zip(&other.data) {
+            let d = (*a as f64) - (*b as f64);
+            num += d * d;
+        }
+        let den = other.norm().max(1e-30);
+        num.sqrt() / den
+    }
+
+    /// Approximate equality within atol + rtol*|b| per element.
+    pub fn allclose(&self, other: &Tensor, rtol: f32, atol: f32) -> bool {
+        self.dims == other.dims
+            && self
+                .data
+                .iter()
+                .zip(&other.data)
+                .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strides_row_major() {
+        assert_eq!(strides_of(&[2, 3, 4]), vec![12, 4, 1]);
+        assert_eq!(strides_of(&[5]), vec![1]);
+        assert_eq!(strides_of(&[]), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn zeros_and_len() {
+        let t = Tensor::zeros(&[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert!(t.data().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn from_vec_checks_len() {
+        assert!(Tensor::from_vec(&[2, 2], vec![1.0; 4]).is_ok());
+        assert!(Tensor::from_vec(&[2, 2], vec![1.0; 5]).is_err());
+    }
+
+    #[test]
+    fn at_indexing() {
+        let t = Tensor::from_vec(&[2, 3], (0..6).map(|x| x as f32).collect()).unwrap();
+        assert_eq!(t.at(&[0, 0]), 0.0);
+        assert_eq!(t.at(&[0, 2]), 2.0);
+        assert_eq!(t.at(&[1, 0]), 3.0);
+        assert_eq!(t.at(&[1, 2]), 5.0);
+    }
+
+    #[test]
+    fn random_is_deterministic() {
+        let a = Tensor::random(&[4, 4], 7);
+        let b = Tensor::random(&[4, 4], 7);
+        let c = Tensor::random(&[4, 4], 8);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert!(a.data().iter().all(|&x| (-1.0..1.0).contains(&x)));
+    }
+
+    #[test]
+    fn block_interior() {
+        let t = Tensor::from_vec(&[4, 4], (0..16).map(|x| x as f32).collect()).unwrap();
+        let b = t.block(&[1, 1], &[2, 2]);
+        assert_eq!(b.data(), &[5.0, 6.0, 9.0, 10.0]);
+    }
+
+    #[test]
+    fn block_zero_pads_tail() {
+        let t = Tensor::from_vec(&[3, 3], (0..9).map(|x| x as f32).collect()).unwrap();
+        let b = t.block(&[2, 2], &[2, 2]);
+        assert_eq!(b.data(), &[8.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn block_set_block_roundtrip() {
+        let mut t = Tensor::zeros(&[4, 6]);
+        let blk = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        t.set_block(&[2, 3], &blk);
+        let back = t.block(&[2, 3], &[2, 3]);
+        assert_eq!(back, blk);
+        assert_eq!(t.at(&[0, 0]), 0.0);
+        assert_eq!(t.at(&[2, 3]), 1.0);
+        assert_eq!(t.at(&[3, 5]), 6.0);
+    }
+
+    #[test]
+    fn set_block_clips() {
+        let mut t = Tensor::zeros(&[3, 3]);
+        let blk = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]).unwrap();
+        t.set_block(&[2, 2], &blk); // only [2,2] in range
+        assert_eq!(t.at(&[2, 2]), 1.0);
+        assert_eq!(t.data().iter().filter(|&&x| x != 0.0).count(), 1);
+    }
+
+    #[test]
+    fn block_order3() {
+        let t = Tensor::from_vec(&[2, 3, 4], (0..24).map(|x| x as f32).collect()).unwrap();
+        let b = t.block(&[1, 1, 2], &[1, 2, 2]);
+        assert_eq!(b.dims(), &[1, 2, 2]);
+        assert_eq!(b.at(&[0, 0, 0]), t.at(&[1, 1, 2]));
+        assert_eq!(b.at(&[0, 1, 1]), t.at(&[1, 2, 3]));
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec(&[2, 6], (0..12).map(|x| x as f32).collect()).unwrap();
+        let r = t.reshape(&[3, 4]).unwrap();
+        assert_eq!(r.data(), t.data());
+        assert!(t.reshape(&[5, 5]).is_err());
+    }
+
+    #[test]
+    fn add_assign_and_norm() {
+        let mut a = Tensor::from_vec(&[2], vec![3.0, 4.0]).unwrap();
+        let b = Tensor::from_vec(&[2], vec![0.0, 0.0]).unwrap();
+        a.add_assign(&b).unwrap();
+        assert!((a.norm() - 5.0).abs() < 1e-9);
+        let c = Tensor::zeros(&[3]);
+        assert!(a.add_assign(&c).is_err());
+    }
+
+    #[test]
+    fn allclose_and_rel_error() {
+        let a = Tensor::from_vec(&[2], vec![1.0, 2.0]).unwrap();
+        let mut b = a.clone();
+        assert!(a.allclose(&b, 1e-6, 1e-6));
+        b.data_mut()[0] += 1e-3;
+        assert!(!a.allclose(&b, 1e-6, 1e-6));
+        assert!(a.rel_error(&b) < 1e-2);
+    }
+}

@@ -1,0 +1,258 @@
+//! HPTT-lite: blocked out-of-place tensor transposition.
+//!
+//! The paper links both Deinsum and CTF against HPTT for out-of-place mode
+//! permutations (Sec. VI-A); every fold-to-GEMM lowering needs one.  This
+//! is a compact reimplementation: odometer iteration over all-but-two
+//! modes, with a cache-blocked 2D kernel over (src-innermost,
+//! dst-innermost) so one side always streams contiguously.
+
+use super::{strides_of, Tensor};
+
+/// Cache block edge for the 2D transpose microkernel (f32: 32x32 = 4 KiB
+/// per tile side, comfortably L1-resident).
+const BLOCK: usize = 32;
+
+/// Permute tensor modes: `out[i_{perm[0]}, ..., i_{perm[n-1]}] = in[i_0, ..., i_{n-1}]`.
+///
+/// `perm[d]` is the source mode that lands in destination mode `d`
+/// (numpy's `transpose` convention).
+pub fn permute(t: &Tensor, perm: &[usize]) -> Tensor {
+    let n = t.order();
+    assert_eq!(perm.len(), n, "perm length mismatch");
+    debug_assert!({
+        let mut seen = vec![false; n];
+        perm.iter().all(|&p| p < n && !std::mem::replace(&mut seen[p], true))
+    });
+
+    let src_dims = t.dims();
+    let dst_dims: Vec<usize> = perm.iter().map(|&p| src_dims[p]).collect();
+    if n <= 1 || perm.iter().enumerate().all(|(i, &p)| i == p) {
+        return Tensor::from_vec(&dst_dims, t.data().to_vec()).unwrap();
+    }
+
+    let src_strides = strides_of(src_dims);
+    let dst_strides = strides_of(&dst_dims);
+    // Stride of each *source* mode in the destination layout.
+    let mut dst_stride_of_src = vec![0usize; n];
+    for (d, &p) in perm.iter().enumerate() {
+        dst_stride_of_src[p] = dst_strides[d];
+    }
+
+    let mut out = vec![0.0f32; t.len()];
+    let src = t.data();
+
+    // The two "fast" modes: source innermost (contiguous reads) and the
+    // source mode that is destination-innermost (contiguous writes).
+    let src_inner = n - 1;
+    let dst_inner_src_mode = perm[n - 1];
+
+    if dst_inner_src_mode == src_inner {
+        // Innermost mode unchanged: copy contiguous runs.
+        let run = src_dims[src_inner];
+        let outer: usize = t.len() / run.max(1);
+        let mut idx = vec![0usize; n - 1];
+        for _ in 0..outer {
+            let mut s = 0usize;
+            let mut d = 0usize;
+            for m in 0..n - 1 {
+                s += idx[m] * src_strides[m];
+                d += idx[m] * dst_stride_of_src[m];
+            }
+            out[d..d + run].copy_from_slice(&src[s..s + run]);
+            for m in (0..n - 1).rev() {
+                idx[m] += 1;
+                if idx[m] < src_dims[m] {
+                    break;
+                }
+                idx[m] = 0;
+            }
+        }
+        return Tensor::from_vec(&dst_dims, out).unwrap();
+    }
+
+    // General case: 2D blocked kernel over (a, b) = (dst-inner source
+    // mode, src-inner mode); odometer over the remaining modes.
+    let a_mode = dst_inner_src_mode;
+    let b_mode = src_inner;
+    let na = src_dims[a_mode];
+    let nb = src_dims[b_mode];
+    let sa_src = src_strides[a_mode];
+    // b is src innermost: stride 1 in src. a is dst innermost: stride 1 in dst.
+    let sb_dst = dst_stride_of_src[b_mode];
+
+    let rest: Vec<usize> = (0..n).filter(|&m| m != a_mode && m != b_mode).collect();
+    let rest_dims: Vec<usize> = rest.iter().map(|&m| src_dims[m]).collect();
+    let rest_total: usize = rest_dims.iter().product();
+    let mut idx = vec![0usize; rest.len()];
+
+    for _ in 0..rest_total.max(1) {
+        let mut base_s = 0usize;
+        let mut base_d = 0usize;
+        for (r, &m) in rest.iter().enumerate() {
+            base_s += idx[r] * src_strides[m];
+            base_d += idx[r] * dst_stride_of_src[m];
+        }
+        // Blocked 2D transpose: src[a*sa_src + b], dst[b*sb_dst + a].
+        // Inner loop runs over `a` so the *writes* are contiguous (the
+        // destination is written exactly once, while the strided reads
+        // overlap via hardware prefetch across the block's rows).
+        let mut a0 = 0;
+        while a0 < na {
+            let a1 = (a0 + BLOCK).min(na);
+            let mut b0 = 0;
+            while b0 < nb {
+                let b1 = (b0 + BLOCK).min(nb);
+                for b in b0..b1 {
+                    let d_row = base_d + b * sb_dst;
+                    let s_col = base_s + b;
+                    for a in a0..a1 {
+                        out[d_row + a] = src[s_col + a * sa_src];
+                    }
+                }
+                b0 = b1;
+            }
+            a0 = a1;
+        }
+        for r in (0..rest.len()).rev() {
+            idx[r] += 1;
+            if idx[r] < rest_dims[r] {
+                break;
+            }
+            idx[r] = 0;
+        }
+    }
+    Tensor::from_vec(&dst_dims, out).unwrap()
+}
+
+/// Mode-n matricization (paper Sec. III-B): permute so `mode` leads, then
+/// flatten the rest — returns an (I_mode, prod rest) matrix.
+pub fn matricize(t: &Tensor, mode: usize) -> Tensor {
+    let n = t.order();
+    let mut perm = Vec::with_capacity(n);
+    perm.push(mode);
+    perm.extend((0..n).filter(|&m| m != mode));
+    let p = permute(t, &perm);
+    let rows = t.dims()[mode];
+    let cols = t.len() / rows.max(1);
+    p.reshape(&[rows, cols]).unwrap()
+}
+
+/// Inverse of [`matricize`]: fold an (I_mode, prod rest) matrix back into
+/// a tensor with extents `dims`, placing rows in `mode`.
+pub fn dematricize(m: &Tensor, dims: &[usize], mode: usize) -> Tensor {
+    let n = dims.len();
+    let mut permuted_dims = Vec::with_capacity(n);
+    permuted_dims.push(dims[mode]);
+    permuted_dims.extend((0..n).filter(|&d| d != mode).map(|d| dims[d]));
+    let t = m.reshape(&permuted_dims).unwrap();
+    // inverse permutation of [mode, rest...]
+    let fwd: Vec<usize> = std::iter::once(mode).chain((0..n).filter(|&d| d != mode)).collect();
+    let mut inv = vec![0usize; n];
+    for (pos, &d) in fwd.iter().enumerate() {
+        inv[d] = pos;
+    }
+    permute(&t, &inv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(dims: &[usize]) -> Tensor {
+        let len: usize = dims.iter().product();
+        Tensor::from_vec(dims, (0..len).map(|x| x as f32).collect()).unwrap()
+    }
+
+    /// Elementwise oracle for permute.
+    fn permute_naive(t: &Tensor, perm: &[usize]) -> Tensor {
+        let src_dims = t.dims();
+        let dst_dims: Vec<usize> = perm.iter().map(|&p| src_dims[p]).collect();
+        let mut out = Tensor::zeros(&dst_dims);
+        let n = src_dims.len();
+        let total = t.len();
+        let src_strides = strides_of(src_dims);
+        for flat in 0..total {
+            let mut rem = flat;
+            let mut idx = vec![0usize; n];
+            for d in 0..n {
+                idx[d] = rem / src_strides[d];
+                rem %= src_strides[d];
+            }
+            let dst_idx: Vec<usize> = perm.iter().map(|&p| idx[p]).collect();
+            *out.at_mut(&dst_idx) = t.data()[flat];
+        }
+        out
+    }
+
+    #[test]
+    fn matrix_transpose() {
+        let t = seq(&[3, 5]);
+        let tt = permute(&t, &[1, 0]);
+        assert_eq!(tt.dims(), &[5, 3]);
+        for i in 0..3 {
+            for j in 0..5 {
+                assert_eq!(tt.at(&[j, i]), t.at(&[i, j]));
+            }
+        }
+    }
+
+    #[test]
+    fn identity_perm_is_copy() {
+        let t = seq(&[4, 6]);
+        assert_eq!(permute(&t, &[0, 1]), t);
+    }
+
+    #[test]
+    fn all_order3_perms_match_naive() {
+        let t = seq(&[3, 4, 5]);
+        for perm in [[0, 1, 2], [0, 2, 1], [1, 0, 2], [1, 2, 0], [2, 0, 1], [2, 1, 0]] {
+            assert_eq!(permute(&t, &perm), permute_naive(&t, &perm), "{perm:?}");
+        }
+    }
+
+    #[test]
+    fn order4_blocked_path() {
+        let t = seq(&[6, 40, 5, 36]); // > BLOCK in two modes
+        let perm = [3, 1, 0, 2];
+        assert_eq!(permute(&t, &perm), permute_naive(&t, &perm));
+    }
+
+    #[test]
+    fn innermost_fixed_fast_path() {
+        let t = seq(&[7, 8, 33]);
+        let perm = [1, 0, 2];
+        assert_eq!(permute(&t, &perm), permute_naive(&t, &perm));
+    }
+
+    #[test]
+    fn large_blocked_transpose() {
+        let t = seq(&[65, 70]);
+        assert_eq!(permute(&t, &[1, 0]), permute_naive(&t, &[1, 0]));
+    }
+
+    #[test]
+    fn matricize_mode0_is_reshape() {
+        let t = seq(&[3, 4, 5]);
+        let m = matricize(&t, 0);
+        assert_eq!(m.dims(), &[3, 20]);
+        assert_eq!(m.data(), t.data());
+    }
+
+    #[test]
+    fn matricize_mode1() {
+        let t = seq(&[3, 4, 5]);
+        let m = matricize(&t, 1);
+        assert_eq!(m.dims(), &[4, 15]);
+        assert_eq!(m.at(&[2, 7]), t.at(&[1, 2, 2])); // col 7 = (i=1, k=2)
+    }
+
+    #[test]
+    fn matricize_dematricize_roundtrip() {
+        let t = seq(&[3, 4, 5]);
+        for mode in 0..3 {
+            let m = matricize(&t, mode);
+            let back = dematricize(&m, t.dims(), mode);
+            assert_eq!(back, t, "mode {mode}");
+        }
+    }
+}

@@ -1,0 +1,266 @@
+//! Property-based tests on the coordinator invariants (hand-rolled
+//! generator — the offline registry has no proptest; shrinking is traded
+//! for printing the failing seed/case, which is reproducible because all
+//! randomness is seeded xorshift).
+//!
+//! Invariants exercised, across randomized einsums / extents / rank
+//! counts:
+//!
+//! 1. **Distribution correctness** — the distributed result equals the
+//!    serial oracle (routing + batching + replication + reduction +
+//!    redistribution compose to the identity on the math).
+//! 2. **Conservation** — redistribution plans move exactly the tensor's
+//!    volume (no element lost or duplicated per destination block).
+//! 3. **Grid validity** — every planned grid factors P exactly and never
+//!    over-splits an extent.
+//! 4. **Fusion sanity** — fused plans never do more modeled I/O than the
+//!    unfused baseline.
+
+use deinsum::baseline::plan_baseline;
+use deinsum::coordinator::Coordinator;
+use deinsum::einsum::EinsumSpec;
+use deinsum::planner::{plan, PlannerConfig};
+use deinsum::redist;
+use deinsum::runtime::KernelEngine;
+use deinsum::sim::NetworkModel;
+use deinsum::tensor::{contract, Tensor};
+
+/// Tiny deterministic PRNG (xorshift64*).
+struct Rng(u64);
+impl Rng {
+    fn new(seed: u64) -> Self {
+        Rng(seed.wrapping_mul(0x9E3779B97F4A7C15) | 1)
+    }
+    fn next(&mut self) -> u64 {
+        self.0 ^= self.0 << 13;
+        self.0 ^= self.0 >> 7;
+        self.0 ^= self.0 << 17;
+        self.0
+    }
+    fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + (self.next() as usize) % (hi - lo + 1)
+    }
+    fn pick<'a, T>(&mut self, v: &'a [T]) -> &'a T {
+        &v[self.range(0, v.len() - 1)]
+    }
+}
+
+/// Serial oracle: run the optimized path globally with einsum2.
+fn oracle(spec: &EinsumSpec, inputs: &[Tensor]) -> Tensor {
+    let path = deinsum::contraction::optimize(spec).unwrap();
+    let mut table: std::collections::BTreeMap<usize, (Tensor, Vec<char>)> =
+        Default::default();
+    for (i, t) in inputs.iter().enumerate() {
+        table.insert(i, (t.clone(), spec.inputs[i].clone()));
+    }
+    let mut last = 0;
+    for op in &path.ops {
+        let (a, ai) = table[&op.input_ids[0]].clone();
+        let out = if op.input_ids.len() == 2 {
+            let (b, bi) = table[&op.input_ids[1]].clone();
+            contract::einsum2(&a, &ai, &b, &bi, &op.output).unwrap()
+        } else {
+            // unary permute/reduce
+            let mut t = a;
+            let mut idx = ai;
+            while let Some(d) = idx.iter().position(|c| !op.output.contains(c)) {
+                t = contract::reduce_mode(&t, d);
+                idx.remove(d);
+            }
+            if idx != op.output {
+                let perm: Vec<usize> = op
+                    .output
+                    .iter()
+                    .map(|c| idx.iter().position(|d| d == c).unwrap())
+                    .collect();
+                t = t.permute(&perm);
+            }
+            t
+        };
+        table.insert(op.output_id, (out, op.output.clone()));
+        last = op.output_id;
+    }
+    let (t, idx) = table[&last].clone();
+    if idx == spec.output {
+        t
+    } else {
+        let perm: Vec<usize> = spec
+            .output
+            .iter()
+            .map(|c| idx.iter().position(|d| d == c).unwrap())
+            .collect();
+        t.permute(&perm)
+    }
+}
+
+/// Random benchmark-family einsum with random small extents.
+fn random_case(rng: &mut Rng) -> (String, Vec<Vec<usize>>) {
+    let exprs = [
+        "ij,jk->ik",
+        "ij,jk,kl->il",
+        "ijk,ja,ka->ia",
+        "ijk,ia,ka->ja",
+        "ijk,ia,ja->ka",
+        "ijk,ja,ka,al->il",
+        "ijkl,ja,ka,la->ia",
+    ];
+    let expr = (*rng.pick(&exprs)).to_string();
+    let mut ext: std::collections::BTreeMap<char, usize> = Default::default();
+    for c in expr.chars().filter(|c| c.is_ascii_alphabetic()) {
+        ext.entry(c).or_insert_with(|| rng.range(3, 14));
+    }
+    let lhs = expr.split("->").next().unwrap().to_string();
+    let shapes: Vec<Vec<usize>> =
+        lhs.split(',').map(|s| s.chars().map(|c| ext[&c]).collect()).collect();
+    (expr, shapes)
+}
+
+#[test]
+fn property_distributed_equals_oracle() {
+    let engine = KernelEngine::native();
+    let mut rng = Rng::new(0xD315);
+    for trial in 0..40 {
+        let (expr, shapes) = random_case(&mut rng);
+        let p = *rng.pick(&[1usize, 2, 3, 4, 6, 8]);
+        let spec = EinsumSpec::parse(&expr, &shapes).unwrap();
+        let pl = match plan(&spec, p, &PlannerConfig::default()) {
+            Ok(pl) => pl,
+            Err(e) => panic!("trial {trial} ({expr}, P={p}): plan failed: {e}"),
+        };
+        let inputs: Vec<Tensor> = shapes
+            .iter()
+            .enumerate()
+            .map(|(i, s)| Tensor::random(s, trial * 31 + i as u64))
+            .collect();
+        let rep = Coordinator::new(&engine, NetworkModel::aries())
+            .run(&pl, &inputs)
+            .unwrap_or_else(|e| panic!("trial {trial} ({expr}, P={p}): {e}"));
+        let want = oracle(&spec, &inputs);
+        assert!(
+            rep.output.allclose(&want, 1e-3, 1e-3),
+            "trial {trial}: {expr} P={p} shapes {shapes:?}: rel err {}",
+            rep.output.rel_error(&want)
+        );
+    }
+}
+
+#[test]
+fn property_baseline_equals_oracle() {
+    let engine = KernelEngine::native();
+    let mut rng = Rng::new(0xBA5E);
+    for trial in 0..25 {
+        let (expr, shapes) = random_case(&mut rng);
+        let p = *rng.pick(&[1usize, 2, 4, 8]);
+        let spec = EinsumSpec::parse(&expr, &shapes).unwrap();
+        let pl = plan_baseline(&spec, p).unwrap();
+        let inputs: Vec<Tensor> = shapes
+            .iter()
+            .enumerate()
+            .map(|(i, s)| Tensor::random(s, trial * 37 + i as u64))
+            .collect();
+        let rep = Coordinator::new(&engine, NetworkModel::aries())
+            .run(&pl, &inputs)
+            .unwrap_or_else(|e| panic!("trial {trial} ({expr}, P={p}): {e}"));
+        let want = oracle(&spec, &inputs);
+        assert!(
+            rep.output.allclose(&want, 1e-3, 1e-3),
+            "trial {trial}: {expr} P={p}: rel err {}",
+            rep.output.rel_error(&want)
+        );
+    }
+}
+
+#[test]
+fn property_redistribution_conserves_elements() {
+    use deinsum::dist::TensorDist;
+    use deinsum::grid::ProcessGrid;
+    let mut rng = Rng::new(0x5EED);
+    for trial in 0..60 {
+        let nd = rng.range(1, 3);
+        let extents: Vec<usize> = (0..nd).map(|_| rng.range(4, 20)).collect();
+        let mk = |rng: &mut Rng, extents: &[usize]| {
+            let gdims: Vec<usize> =
+                extents.iter().map(|&e| [1usize, 2, 3, 4][rng.range(0, 3)].min(e)).collect();
+            let g = ProcessGrid::new(&gdims).unwrap();
+            let all: Vec<usize> = (0..extents.len()).collect();
+            TensorDist::new(extents, &g, &all).unwrap()
+        };
+        let src = mk(&mut rng, &extents);
+        let dst = mk(&mut rng, &extents);
+        let rp = redist::plan(&src, &dst).unwrap();
+        // Each destination block must be covered exactly once.
+        let total: usize = extents.iter().product();
+        let covered: usize = rp
+            .messages
+            .iter()
+            .map(|m| m.volume())
+            .sum::<usize>()
+            / dst_replicas(&dst);
+        assert_eq!(
+            covered, total,
+            "trial {trial}: extents {extents:?} src {:?} dst {:?}",
+            src.dist.grid, dst.dist.grid
+        );
+        // And the data must actually round-trip.
+        let global = Tensor::random(&extents, trial);
+        let src_bufs: Vec<Tensor> = (0..src.grid.size())
+            .map(|r| {
+                let (off, _) = src.block_for_rank(r);
+                global.block(&off, &src.local_dims())
+            })
+            .collect();
+        let out = redist::execute(&rp, &src, &dst, &src_bufs).unwrap();
+        for r in 0..dst.grid.size() {
+            let (off, size) = dst.block_for_rank(r);
+            let want = global.block(&off, &size);
+            let got = out[r].block(&vec![0; size.len()], &size);
+            assert!(got.allclose(&want, 0.0, 0.0), "trial {trial} rank {r}");
+        }
+    }
+}
+
+fn dst_replicas(dst: &deinsum::dist::TensorDist) -> usize {
+    dst.grid.size() / dst.n_blocks()
+}
+
+#[test]
+fn property_grids_factor_p_exactly() {
+    let mut rng = Rng::new(0x6B1D);
+    for trial in 0..40 {
+        let (expr, shapes) = random_case(&mut rng);
+        let p = rng.range(1, 12);
+        let spec = EinsumSpec::parse(&expr, &shapes).unwrap();
+        let Ok(pl) = plan(&spec, p, &PlannerConfig::default()) else {
+            continue;
+        };
+        for t in &pl.terms {
+            assert_eq!(t.grid.size(), p, "trial {trial}: {expr} P={p}");
+            for (d, (&g, &n)) in t.grid.dims().iter().zip(&t.extents).enumerate() {
+                assert!(g <= n, "trial {trial}: grid dim {d} over-split ({g} > {n})");
+            }
+        }
+    }
+}
+
+#[test]
+fn property_fused_q_never_worse() {
+    let mut rng = Rng::new(0xF0500);
+    for _ in 0..20 {
+        let (expr, mut shapes) = random_case(&mut rng);
+        // Inflate to sizes where fusion matters.
+        for s in &mut shapes {
+            for d in s.iter_mut() {
+                *d *= 64;
+            }
+        }
+        let spec = EinsumSpec::parse(&expr, &shapes).unwrap();
+        let fused = plan(&spec, 8, &PlannerConfig::default()).unwrap();
+        let unfused = plan_baseline(&spec, 8).unwrap();
+        assert!(
+            fused.total_q <= unfused.total_q * 1.0001,
+            "{expr}: fused Q {} > unfused {}",
+            fused.total_q,
+            unfused.total_q
+        );
+    }
+}

@@ -1,0 +1,188 @@
+//! Integration tests over the real AOT artifacts: the PJRT CPU client
+//! loads HLO text lowered from the JAX/Pallas kernels and the results
+//! must match the native Rust oracles bit-for-bit up to f32 tolerance.
+//!
+//! Requires `make artifacts` (skipped gracefully when absent, e.g. in a
+//! bare checkout).
+
+use deinsum::coordinator::Coordinator;
+use deinsum::einsum::EinsumSpec;
+use deinsum::planner::{plan, PlannerConfig};
+use deinsum::runtime::{Engine, KernelEngine};
+use deinsum::sim::NetworkModel;
+use deinsum::tensor::{contract, Tensor};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: no artifacts/ (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn manifest_loads_and_lists_all_ops() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = deinsum::runtime::Manifest::load(&dir).unwrap();
+    assert_eq!(m.format, "hlo-text-v1");
+    for op in ["gemm", "mttkrp", "krp", "ttmc"] {
+        assert!(
+            m.variants.iter().any(|v| v.op == op),
+            "missing op {op} in manifest"
+        );
+    }
+    for v in &m.variants {
+        assert!(dir.join(&v.file).exists(), "missing artifact {}", v.file);
+        assert!(!v.output.is_empty());
+    }
+}
+
+#[test]
+fn pjrt_gemm_exact_variant_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::new(&dir).unwrap();
+    let v = engine
+        .manifest()
+        .variants
+        .iter()
+        .find(|v| v.op == "gemm" && v.m == Some(64) && v.k == Some(64) && v.n == Some(64))
+        .expect("gemm_64 variant");
+    let a = Tensor::random(&[64, 64], 1);
+    let b = Tensor::random(&[64, 64], 2);
+    let got = engine.execute(v, &[&a, &b]).unwrap();
+    let want = contract::gemm(&a, &b).unwrap();
+    assert!(
+        got.allclose(&want, 1e-3, 1e-3),
+        "PJRT gemm diverges from native: rel {}",
+        got.rel_error(&want)
+    );
+    assert_eq!(engine.stats().compiles, 1);
+}
+
+#[test]
+fn pjrt_executable_cache_reused() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::new(&dir).unwrap();
+    let v = engine
+        .manifest()
+        .variants
+        .iter()
+        .find(|v| v.op == "gemm" && v.m == Some(64))
+        .unwrap()
+        .clone();
+    let a = Tensor::random(&[64, 64], 3);
+    let b = Tensor::random(&[64, 64], 4);
+    engine.execute(&v, &[&a, &b]).unwrap();
+    engine.execute(&v, &[&a, &b]).unwrap();
+    assert_eq!(engine.stats().compiles, 1, "second call must hit the cache");
+}
+
+#[test]
+fn pjrt_fused_mttkrp_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::new(&dir).unwrap();
+    let v = engine
+        .manifest()
+        .variants
+        .iter()
+        .find(|v| v.op == "mttkrp" && v.dims.as_deref() == Some(&[64, 64, 64][..]))
+        .expect("mttkrp 64^3 variant");
+    let x = Tensor::random(&[64, 64, 64], 5);
+    let f1 = Tensor::random(&[64, 24], 6);
+    let f2 = Tensor::random(&[64, 24], 7);
+    let got = engine.execute(v, &[&x, &f1, &f2]).unwrap();
+    let want = contract::mttkrp(&x, &[&x, &f1, &f2], 0).unwrap();
+    assert!(
+        got.allclose(&want, 1e-2, 1e-2),
+        "PJRT fused MTTKRP diverges: rel {}",
+        got.rel_error(&want)
+    );
+}
+
+#[test]
+fn kernel_engine_buckets_ragged_mttkrp() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = KernelEngine::pjrt(&dir).unwrap();
+    // 60^3 pads up to the 64^3 bucket (zero padding is exact).
+    let x = Tensor::random(&[60, 60, 60], 8);
+    let f1 = Tensor::random(&[60, 24], 9);
+    let f2 = Tensor::random(&[60, 24], 10);
+    let got = engine.mttkrp(&x, &[&x, &f1, &f2], 0).unwrap();
+    let want = contract::mttkrp(&x, &[&x, &f1, &f2], 0).unwrap();
+    assert!(got.allclose(&want, 1e-2, 1e-2), "rel {}", got.rel_error(&want));
+    let st = engine.stats();
+    assert!(st.pjrt_padded >= 1, "expected a padded PJRT dispatch: {st:?}");
+}
+
+#[test]
+fn kernel_engine_falls_back_when_no_bucket() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = KernelEngine::pjrt(&dir).unwrap();
+    // A shape far from any bucket (pad ratio too large) -> native path.
+    let a = Tensor::random(&[7, 3], 11);
+    let b = Tensor::random(&[3, 5], 12);
+    let got = engine.gemm(&a, &b).unwrap();
+    let want = contract::gemm(&a, &b).unwrap();
+    assert!(got.allclose(&want, 1e-4, 1e-4));
+    assert!(engine.stats().native >= 1);
+}
+
+#[test]
+fn pjrt_krp_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = KernelEngine::pjrt(&dir).unwrap();
+    let u0 = Tensor::random(&[128, 24], 13);
+    let u1 = Tensor::random(&[128, 24], 14);
+    let got = engine.krp_flat(&u0, &u1).unwrap();
+    let k = contract::krp_chain(&[&u0, &u1]).unwrap();
+    let want = k.reshape(&[128 * 128, 24]).unwrap();
+    assert!(got.allclose(&want, 1e-4, 1e-4));
+    assert_eq!(engine.stats().pjrt_exact, 1);
+}
+
+#[test]
+fn pjrt_ttmc_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = KernelEngine::pjrt(&dir).unwrap();
+    let x = Tensor::random(&[16, 16, 16, 16, 16], 15);
+    let fs: Vec<Tensor> = (0..5).map(|m| Tensor::random(&[16, 24], 16 + m as u64)).collect();
+    let frefs: Vec<&Tensor> = fs.iter().collect();
+    let got = engine.ttmc(&x, &frefs, 0).unwrap();
+    let want = contract::ttmc(&x, &frefs, 0).unwrap();
+    assert!(got.allclose(&want, 1e-2, 1e-2), "rel {}", got.rel_error(&want));
+    assert_eq!(engine.stats().pjrt_exact, 1);
+}
+
+#[test]
+fn distributed_run_on_pjrt_engine_matches_native_engine() {
+    let Some(dir) = artifacts_dir() else { return };
+    // Full three-layer round trip: L3 coordinator -> PJRT-compiled
+    // L2/L1 pipeline on every rank, vs the all-native run.
+    let spec = EinsumSpec::parse(
+        "ijk,ja,ka->ia",
+        &[vec![128, 128, 128], vec![128, 24], vec![128, 24]],
+    )
+    .unwrap();
+    let pl = plan(&spec, 8, &PlannerConfig::default()).unwrap();
+    let inputs = vec![
+        Tensor::random(&[128, 128, 128], 21),
+        Tensor::random(&[128, 24], 22),
+        Tensor::random(&[128, 24], 23),
+    ];
+    let pjrt = KernelEngine::pjrt(&dir).unwrap();
+    let native = KernelEngine::native();
+    let rep_p = Coordinator::new(&pjrt, NetworkModel::aries()).run(&pl, &inputs).unwrap();
+    let rep_n = Coordinator::new(&native, NetworkModel::aries()).run(&pl, &inputs).unwrap();
+    assert!(
+        rep_p.output.allclose(&rep_n.output, 1e-2, 1e-2),
+        "PJRT vs native distributed runs diverge: rel {}",
+        rep_p.output.rel_error(&rep_n.output)
+    );
+    let st = pjrt.stats();
+    assert!(
+        st.pjrt_exact + st.pjrt_padded > 0,
+        "PJRT engine never used: {st:?}"
+    );
+}
