@@ -15,15 +15,22 @@ mod common;
 use deinsum::bench_support::{geomean, run_point, suite, BenchPoint};
 use deinsum::runtime::KernelEngine;
 use deinsum::sim::NetworkModel;
+use deinsum::KernelConfig;
 
 fn main() {
     let max_nodes = common::env_usize("DEINSUM_BENCH_NODES", 64);
     let sf = common::env_usize("DEINSUM_BENCH_SIZE_FACTOR", 16);
     let reps = common::env_usize("DEINSUM_BENCH_REPS", 2);
-    let engine = KernelEngine::native();
+    // Local-kernel engine config from the environment (RAYON_NUM_THREADS /
+    // DEINSUM_NUM_THREADS, DEINSUM_MC/KC/NC); the same KernelConfig the
+    // coordinator's engine dispatches with, so the blue compute bars
+    // reflect the packed multithreaded kernels.
+    let kcfg = KernelConfig::from_env();
+    let engine = KernelEngine::native_with(kcfg);
     let net = NetworkModel::aries();
 
     println!("# Fig. 5 (CPU weak scaling) — size-factor {sf}, reps {reps}, up to {max_nodes} nodes");
+    println!("# local kernels: {kcfg:?}");
     println!(
         "{:<14} {:>5} {:>12} {:>12} {:>12} {:>12} {:>9}",
         "benchmark", "P", "dein comp", "dein comm", "dein total", "ctf-like", "speedup"

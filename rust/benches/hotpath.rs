@@ -2,71 +2,204 @@
 //! on the coordinator's critical path, timed in isolation so regressions
 //! are attributable.
 //!
-//! - native GEMM microkernel (local compute floor)
-//! - fused MTTKRP kernel vs two-step (local)
-//! - HPTT-lite transposition
+//! - packed GEMM (multi + single thread) vs the seed scalar kernel
+//! - fused MTTKRP (multi + single thread, SOAP-derived tiles) vs two-step
+//! - HPTT-lite transposition, serial vs threaded
 //! - redistribution *planning* (must be O(messages), never O(elements))
 //! - redistribution *execution* (memcpy-bound)
 //! - end-to-end plan construction (SOAP solve + grid search)
+//!
+//! Besides the human-readable table, results land in
+//! `BENCH_hotpath.json` (override with `DEINSUM_BENCH_JSON`) as
+//! `{"config": ..., "results": [{kernel, shape, median_seconds, gflops?,
+//! speedup?}, ...]}` so future PRs have a perf trajectory to diff.
 
 #[path = "common.rs"]
 mod common;
+
+use std::fmt::Write as _;
 
 use deinsum::dist::TensorDist;
 use deinsum::einsum::EinsumSpec;
 use deinsum::grid::ProcessGrid;
 use deinsum::planner::{plan, PlannerConfig};
 use deinsum::redist;
-use deinsum::tensor::{contract, Tensor};
+use deinsum::tensor::kernel::{self, KernelConfig, ScratchPool};
+use deinsum::tensor::{contract, transpose, Tensor};
+
+fn record(
+    out: &mut Vec<String>,
+    kernel: &str,
+    shape: &str,
+    median_s: f64,
+    gflops: Option<f64>,
+    speedup: Option<f64>,
+) {
+    let mut s = format!(
+        "    {{\"kernel\": \"{kernel}\", \"shape\": \"{shape}\", \"median_seconds\": {median_s:.9}"
+    );
+    if let Some(g) = gflops {
+        let _ = write!(s, ", \"gflops\": {g:.3}");
+    }
+    if let Some(x) = speedup {
+        let _ = write!(s, ", \"speedup\": {x:.3}");
+    }
+    s.push('}');
+    out.push(s);
+}
 
 fn main() {
     let reps = common::env_usize("DEINSUM_BENCH_REPS", 5);
+    let cfg = KernelConfig::from_env();
+    let serial = cfg.serial();
+    let pool = ScratchPool::new();
+    let mut records: Vec<String> = Vec::new();
+    println!("# kernel config: {cfg:?}");
 
-    // --- GEMM microkernel ---------------------------------------------------
+    // --- GEMM: seed scalar kernel vs packed engine ---------------------------
     for n in [128usize, 256, 512] {
         let a = Tensor::random(&[n, n], 1);
         let b = Tensor::random(&[n, n], 2);
-        let (med, _, _) = common::time_median(reps, || {
-            let _ = contract::gemm(&a, &b).unwrap();
+        let flops = 2.0 * (n as f64).powi(3);
+        let shape = format!("{n}x{n}x{n}");
+        let mut c = vec![0.0f32; n * n];
+
+        let (scalar, _, _) = common::time_median(reps, || {
+            c.fill(0.0);
+            contract::gemm_scalar_into(a.data(), b.data(), &mut c, n, n, n);
         });
-        let gflops = 2.0 * (n as f64).powi(3) / med / 1e9;
-        println!("gemm {n}x{n}x{n}: {} ({gflops:.2} GFLOP/s)", common::fmt_s(med));
+        let (packed1, _, _) = common::time_median(reps, || {
+            c.fill(0.0);
+            kernel::gemm_into_with(&serial, &pool, a.data(), b.data(), &mut c, n, n, n);
+        });
+        let (packed, _, _) = common::time_median(reps, || {
+            c.fill(0.0);
+            kernel::gemm_into_with(&cfg, &pool, a.data(), b.data(), &mut c, n, n, n);
+        });
+        println!(
+            "gemm {shape}: scalar {} ({:.2} GF/s) | packed-1t {} ({:.2} GF/s, {:.2}x) | packed-{}t {} ({:.2} GF/s, {:.2}x)",
+            common::fmt_s(scalar),
+            flops / scalar / 1e9,
+            common::fmt_s(packed1),
+            flops / packed1 / 1e9,
+            scalar / packed1,
+            cfg.threads,
+            common::fmt_s(packed),
+            flops / packed / 1e9,
+            scalar / packed
+        );
+        record(&mut records, "gemm_scalar", &shape, scalar, Some(flops / scalar / 1e9), None);
+        record(
+            &mut records,
+            "gemm_packed_1t",
+            &shape,
+            packed1,
+            Some(flops / packed1 / 1e9),
+            Some(scalar / packed1),
+        );
+        record(
+            &mut records,
+            "gemm_packed",
+            &shape,
+            packed,
+            Some(flops / packed / 1e9),
+            Some(scalar / packed),
+        );
     }
 
     // --- fused MTTKRP vs two-step (local kernels) ----------------------------
     for n in [64usize, 128] {
+        let r = 24usize;
         let x = Tensor::random(&[n, n, n], 3);
-        let f1 = Tensor::random(&[n, 24], 4);
-        let f2 = Tensor::random(&[n, 24], 5);
+        let f1 = Tensor::random(&[n, r], 4);
+        let f2 = Tensor::random(&[n, r], 5);
         let slots = [&x, &f1, &f2];
-        let (fused, _, _) = common::time_median(reps, || {
-            let _ = contract::mttkrp(&x, &slots, 0).unwrap();
-        });
+        let flops = 2.0 * (n as f64).powi(3) * r as f64;
+        let shape = format!("{n}^3 r{r}");
+
+        // SOAP-derived blocks: the planner's own tile sizes feed the
+        // local kernel config (the §IV story end to end).
+        let spec = EinsumSpec::parse(
+            "ijk,ja,ka->ia",
+            &[vec![n, n, n], vec![n, r], vec![n, r]],
+        )
+        .unwrap();
+        let soap_cfg = plan(&spec, 1, &PlannerConfig::default())
+            .map(|p| p.terms[0].kernel_config(cfg))
+            .unwrap_or(cfg);
+
         let (two, _, _) = common::time_median(reps, || {
             let _ = contract::mttkrp_two_step(&x, &slots, 0).unwrap();
         });
-        let flops = 2.0 * (n as f64).powi(3) * 24.0;
+        let (fused1, _, _) = common::time_median(reps, || {
+            let _ = contract::mttkrp_with(&serial, &pool, &x, &slots, 0).unwrap();
+        });
+        let (fused, _, _) = common::time_median(reps, || {
+            let _ = contract::mttkrp_with(&cfg, &pool, &x, &slots, 0).unwrap();
+        });
+        let (fused_soap, _, _) = common::time_median(reps, || {
+            let _ = contract::mttkrp_with(&soap_cfg, &pool, &x, &slots, 0).unwrap();
+        });
         println!(
-            "mttkrp {n}^3 r24: fused {} ({:.2} GFLOP/s) vs two-step {} ({:.2}x)",
+            "mttkrp {shape}: two-step {} | fused-1t {} ({:.2}x) | fused-{}t {} ({:.2} GF/s, {:.2}x) | soap-tiles {}",
+            common::fmt_s(two),
+            common::fmt_s(fused1),
+            two / fused1,
+            cfg.threads,
             common::fmt_s(fused),
             flops / fused / 1e9,
-            common::fmt_s(two),
-            two / fused
+            two / fused,
+            common::fmt_s(fused_soap)
+        );
+        record(&mut records, "mttkrp_two_step", &shape, two, Some(flops / two / 1e9), None);
+        record(
+            &mut records,
+            "mttkrp_fused_1t",
+            &shape,
+            fused1,
+            Some(flops / fused1 / 1e9),
+            Some(two / fused1),
+        );
+        record(
+            &mut records,
+            "mttkrp_fused",
+            &shape,
+            fused,
+            Some(flops / fused / 1e9),
+            Some(two / fused),
+        );
+        record(
+            &mut records,
+            "mttkrp_fused_soap_tiles",
+            &shape,
+            fused_soap,
+            Some(flops / fused_soap / 1e9),
+            Some(two / fused_soap),
         );
     }
 
-    // --- transposition --------------------------------------------------------
-    for dims in [[256usize, 256, 16], [64, 64, 64]] {
+    // --- transposition: serial vs threaded -----------------------------------
+    for dims in [[256usize, 256, 16], [64, 64, 64], [512, 384, 4]] {
         let t = Tensor::random(&dims, 6);
-        let (med, _, _) = common::time_median(reps, || {
-            let _ = t.permute(&[2, 1, 0]);
+        let bytes = (t.len() * 8) as f64; // read + write
+        let shape = format!("{dims:?} perm [2,1,0]");
+        let (ser, _, _) = common::time_median(reps, || {
+            let _ = transpose::permute_with(&serial, &t, &[2, 1, 0]);
         });
-        let gbs = (t.len() * 8) as f64 / med / 1e9; // read + write
+        let (par, _, _) = common::time_median(reps, || {
+            let _ = transpose::permute_with(&cfg, &t, &[2, 1, 0]);
+        });
         println!(
-            "permute {:?} [2,1,0]: {} ({gbs:.2} GB/s)",
-            dims,
-            common::fmt_s(med)
+            "permute {shape}: serial {} ({:.2} GB/s) | {}t {} ({:.2} GB/s, {:.2}x)",
+            common::fmt_s(ser),
+            bytes / ser / 1e9,
+            cfg.threads,
+            common::fmt_s(par),
+            bytes / par / 1e9,
+            ser / par
         );
+        record(&mut records, "permute_serial", &shape, ser, None, None);
+        record(&mut records, "permute", &shape, par, None, Some(ser / par));
     }
 
     // --- redistribution planning: must not scale with element count ----------
@@ -79,10 +212,8 @@ fn main() {
             let _ = redist::plan(&src, &dst).unwrap();
         });
         let msgs = redist::plan(&src, &dst).unwrap().messages.len();
-        println!(
-            "redist plan rows={n} (64 ranks, {msgs} msgs): {}",
-            common::fmt_s(med)
-        );
+        println!("redist plan rows={n} (64 ranks, {msgs} msgs): {}", common::fmt_s(med));
+        record(&mut records, "redist_plan", &format!("rows={n} p=64"), med, None, None);
     }
 
     // --- redistribution execution (data movement) -----------------------------
@@ -104,7 +235,11 @@ fn main() {
             let _ = redist::execute(&rp, &src, &dst, &bufs).unwrap();
         });
         let gbs = (n * 4) as f64 / med / 1e9;
-        println!("redist execute {n} f32 over 8->4 ranks: {} ({gbs:.2} GB/s)", common::fmt_s(med));
+        println!(
+            "redist execute {n} f32 over 8->4 ranks: {} ({gbs:.2} GB/s)",
+            common::fmt_s(med)
+        );
+        record(&mut records, "redist_execute", &format!("{n} f32 8->4"), med, None, None);
     }
 
     // --- plan construction (SOAP + grids + moves) ------------------------------
@@ -119,5 +254,22 @@ fn main() {
             let _ = plan(&spec, 64, &PlannerConfig::default()).unwrap();
         });
         println!("plan(worked example, P=64): {}", common::fmt_s(med));
+        record(&mut records, "plan_worked_example", "P=64", med, None, None);
+    }
+
+    // --- machine-readable trajectory ------------------------------------------
+    let json = format!(
+        "{{\n  \"config\": {{\"mc\": {}, \"kc\": {}, \"nc\": {}, \"threads\": {}, \"reps\": {reps}}},\n  \"results\": [\n{}\n  ]\n}}\n",
+        cfg.mc,
+        cfg.kc,
+        cfg.nc,
+        cfg.threads,
+        records.join(",\n")
+    );
+    let path =
+        std::env::var("DEINSUM_BENCH_JSON").unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("# wrote {path}"),
+        Err(e) => eprintln!("# could not write {path}: {e}"),
     }
 }

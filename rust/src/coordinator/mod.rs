@@ -222,7 +222,10 @@ impl<'e> Coordinator<'e> {
                                         .get(&op.input_ids[1])
                                         .ok_or_else(|| Error::plan("missing local"))?
                                         .clone();
-                                    contract::einsum2(&a, &ai, &b, &bi, &op.output)?
+                                    // Engine dispatch: folds and packing
+                                    // reuse the engine's scratch pool
+                                    // across steps.
+                                    engine.einsum2(&a, &ai, &b, &bi, &op.output)?
                                 }
                                 1 => {
                                     let (a, ai) = table
@@ -546,6 +549,41 @@ mod tests {
         // the intermediate must be redistributed: nonzero p2p or allreduce
         assert!(rep.comm.p2p_bytes > 0 || rep.comm.allreduce_bytes > 0);
         assert!(rep.time.total() > 0.0);
+    }
+
+    #[test]
+    fn steady_state_runs_reuse_engine_scratch() {
+        // The zero-alloc invariant on the coordinator's hot path: once
+        // the engine's scratch pool is warm, repeated plan executions
+        // (e.g. CP-ALS sweeps) take every packing/fold buffer from the
+        // pool instead of the heap.
+        let spec = EinsumSpec::parse(
+            "ijk,ja,ka->ia",
+            &[vec![24, 20, 16], vec![20, 8], vec![16, 8]],
+        )
+        .unwrap();
+        let pl = plan(&spec, 4, &PlannerConfig::default()).unwrap();
+        let inputs: Vec<Tensor> = vec![
+            Tensor::random(&[24, 20, 16], 1),
+            Tensor::random(&[20, 8], 2),
+            Tensor::random(&[16, 8], 3),
+        ];
+        let engine = KernelEngine::native();
+        let coord = Coordinator::new(&engine, NetworkModel::aries());
+        // Warmup populates the pool to its high-water mark.
+        for _ in 0..2 {
+            coord.run(&pl, &inputs).unwrap();
+        }
+        let warm = engine.scratch_stats();
+        for _ in 0..3 {
+            coord.run(&pl, &inputs).unwrap();
+        }
+        let after = engine.scratch_stats();
+        assert_eq!(
+            after.allocs, warm.allocs,
+            "steady-state coordinator steps allocated scratch ({warm:?} -> {after:?})"
+        );
+        assert!(after.takes > warm.takes, "steps must route buffers through the pool");
     }
 
     #[test]

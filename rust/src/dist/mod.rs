@@ -1,0 +1,319 @@
+//! Block distributions of tensors over Cartesian process grids (paper
+//! §II-D, §V-B).
+//!
+//! A [`TensorDist`] maps every tensor dimension onto one grid dimension
+//! (block distribution: dimension `d` of extent `N_d` handled by grid
+//! dimension `g` of size `P_g` splits into blocks of `ceil(N_d / P_g)`).
+//! Grid dimensions *not* mapped by any tensor dimension replicate the
+//! tensor: all ranks sharing the mapped coordinates hold the same block
+//! (Fig. 3 / Table II — e.g. A[j,a] on grid (i,j,k,a) is replicated over
+//! the (i,k) sub-grids).  The *canonical owner* of a block is the lowest
+//! replica rank; redistribution sends from owners and delivers to every
+//! replica ([`crate::redist`]).
+
+use crate::error::{Error, Result};
+use crate::grid::ProcessGrid;
+
+/// The per-dimension block geometry of a distribution.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BlockDist {
+    /// Grid dimension handling each tensor dimension.
+    pub grid_dim: Vec<usize>,
+    /// Grid extent along each tensor dimension (`P_g` of the handling
+    /// grid dim; how many ways the dimension is split).
+    pub grid: Vec<usize>,
+    /// Nominal block size per tensor dimension: `ceil(N_d / P_g)`.  The
+    /// trailing block may be short; ranks whose block starts past the
+    /// extent hold an empty (zero-padded) block.
+    pub block: Vec<usize>,
+}
+
+/// A tensor block-distributed (and possibly replicated) over a grid.
+#[derive(Debug, Clone)]
+pub struct TensorDist {
+    /// Global tensor extents.
+    pub extents: Vec<usize>,
+    /// The process grid the tensor lives on.
+    pub grid: ProcessGrid,
+    /// Block geometry (meaningless when fully replicated).
+    pub dist: BlockDist,
+    /// Fully replicated: every rank holds the whole tensor.
+    replicated: bool,
+}
+
+impl TensorDist {
+    /// Block-distribute `extents` over `grid`, mapping tensor dimension
+    /// `d` onto grid dimension `grid_dims[d]`.  Grid dimensions left
+    /// unmapped replicate the tensor over their sub-grids.
+    pub fn new(extents: &[usize], grid: &ProcessGrid, grid_dims: &[usize]) -> Result<Self> {
+        if grid_dims.len() != extents.len() {
+            return Err(Error::plan(format!(
+                "dist: {} grid dims for {} tensor dims",
+                grid_dims.len(),
+                extents.len()
+            )));
+        }
+        for (d, &g) in grid_dims.iter().enumerate() {
+            if g >= grid.ndim() {
+                return Err(Error::plan(format!(
+                    "dist: tensor dim {d} mapped to grid dim {g} of {}-d grid",
+                    grid.ndim()
+                )));
+            }
+            if grid_dims[..d].contains(&g) {
+                return Err(Error::plan(format!(
+                    "dist: grid dim {g} handles two tensor dims"
+                )));
+            }
+        }
+        let gsizes: Vec<usize> = grid_dims.iter().map(|&g| grid.dims()[g]).collect();
+        let block: Vec<usize> = extents
+            .iter()
+            .zip(&gsizes)
+            .map(|(&n, &g)| n.div_ceil(g.max(1)).max(1))
+            .collect();
+        Ok(TensorDist {
+            extents: extents.to_vec(),
+            grid: grid.clone(),
+            dist: BlockDist { grid_dim: grid_dims.to_vec(), grid: gsizes, block },
+            replicated: false,
+        })
+    }
+
+    /// Fully replicated distribution: every rank holds the whole tensor.
+    pub fn replicated(extents: &[usize], grid: &ProcessGrid) -> Result<Self> {
+        Ok(TensorDist {
+            extents: extents.to_vec(),
+            grid: grid.clone(),
+            dist: BlockDist {
+                grid_dim: Vec::new(),
+                grid: vec![1; extents.len()],
+                block: extents.to_vec(),
+            },
+            replicated: true,
+        })
+    }
+
+    /// True when every rank holds the whole tensor.
+    pub fn is_replicated(&self) -> bool {
+        self.replicated
+    }
+
+    /// Per-rank local buffer shape (the padded nominal block; identical
+    /// on all ranks so redistribution offsets are rank-independent).
+    pub fn local_dims(&self) -> Vec<usize> {
+        if self.replicated {
+            self.extents.clone()
+        } else {
+            self.dist.block.clone()
+        }
+    }
+
+    /// Number of *real* blocks per tensor dimension (trailing ranks past
+    /// `ceil(N_d / block_d)` hold empty blocks).
+    pub fn blocks_per_dim(&self) -> Vec<usize> {
+        if self.replicated {
+            return vec![1; self.extents.len()];
+        }
+        self.extents
+            .iter()
+            .zip(&self.dist.block)
+            .map(|(&n, &b)| n.div_ceil(b).max(1))
+            .collect()
+    }
+
+    /// Total number of distinct blocks.
+    pub fn n_blocks(&self) -> usize {
+        self.blocks_per_dim().iter().product()
+    }
+
+    /// All block coordinates (per tensor dimension).  For a replicated
+    /// distribution there is a single block with empty coordinates, the
+    /// convention [`crate::redist`] uses.
+    pub fn block_coords(&self) -> Vec<Vec<usize>> {
+        if self.replicated {
+            return vec![Vec::new()];
+        }
+        let per_dim = self.blocks_per_dim();
+        let nd = per_dim.len();
+        let total: usize = per_dim.iter().product();
+        let mut out = Vec::with_capacity(total);
+        let mut idx = vec![0usize; nd];
+        for _ in 0..total {
+            out.push(idx.clone());
+            for d in (0..nd).rev() {
+                idx[d] += 1;
+                if idx[d] < per_dim[d] {
+                    break;
+                }
+                idx[d] = 0;
+            }
+        }
+        out
+    }
+
+    /// The global (offset, clipped size) of rank `r`'s block.  Ranks past
+    /// the real block count get an empty size.
+    pub fn block_for_rank(&self, r: usize) -> (Vec<usize>, Vec<usize>) {
+        if self.replicated {
+            return (vec![0; self.extents.len()], self.extents.clone());
+        }
+        let coords = self.grid.coords(r);
+        let mut off = Vec::with_capacity(self.extents.len());
+        let mut size = Vec::with_capacity(self.extents.len());
+        for (d, &n) in self.extents.iter().enumerate() {
+            let bc = coords[self.dist.grid_dim[d]];
+            let o = bc * self.dist.block[d];
+            off.push(o);
+            size.push(self.dist.block[d].min(n.saturating_sub(o)));
+        }
+        (off, size)
+    }
+
+    /// Canonical owner (lowest replica rank) of the block at `coords`
+    /// (per-tensor-dim block coordinates; empty for replicated dists).
+    pub fn owner_of_block(&self, coords: &[usize]) -> usize {
+        if self.replicated || coords.is_empty() {
+            return 0;
+        }
+        debug_assert_eq!(coords.len(), self.extents.len());
+        let mut full = vec![0usize; self.grid.ndim()];
+        for (d, &bc) in coords.iter().enumerate() {
+            full[self.dist.grid_dim[d]] = bc;
+        }
+        self.grid.rank(&full)
+    }
+
+    /// Every rank holding (a replica of) the block at `coords`.
+    pub fn replicas_of_block(&self, coords: &[usize]) -> Vec<usize> {
+        if self.replicated || coords.is_empty() {
+            return (0..self.grid.size()).collect();
+        }
+        debug_assert_eq!(coords.len(), self.extents.len());
+        let unmapped: Vec<usize> = (0..self.grid.ndim())
+            .filter(|g| !self.dist.grid_dim.contains(g))
+            .collect();
+        let mut base = vec![0usize; self.grid.ndim()];
+        for (d, &bc) in coords.iter().enumerate() {
+            base[self.dist.grid_dim[d]] = bc;
+        }
+        if unmapped.is_empty() {
+            return vec![self.grid.rank(&base)];
+        }
+        let dims: Vec<usize> = unmapped.iter().map(|&g| self.grid.dims()[g]).collect();
+        let total: usize = dims.iter().product();
+        let mut out = Vec::with_capacity(total);
+        let mut idx = vec![0usize; unmapped.len()];
+        for _ in 0..total {
+            let mut full = base.clone();
+            for (q, &g) in unmapped.iter().enumerate() {
+                full[g] = idx[q];
+            }
+            out.push(self.grid.rank(&full));
+            for q in (0..unmapped.len()).rev() {
+                idx[q] += 1;
+                if idx[q] < dims[q] {
+                    break;
+                }
+                idx[q] = 0;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simple_block_split() {
+        let g = ProcessGrid::new(&[2, 2]).unwrap();
+        let td = TensorDist::new(&[8, 6], &g, &[0, 1]).unwrap();
+        assert!(!td.is_replicated());
+        assert_eq!(td.local_dims(), vec![4, 3]);
+        assert_eq!(td.n_blocks(), 4);
+        // rank = i*2 + j over coords (i, j)
+        assert_eq!(td.block_for_rank(0), (vec![0, 0], vec![4, 3]));
+        assert_eq!(td.block_for_rank(3), (vec![4, 3], vec![4, 3]));
+        assert_eq!(td.owner_of_block(&[1, 0]), 2);
+        assert_eq!(td.replicas_of_block(&[1, 0]), vec![2]);
+    }
+
+    #[test]
+    fn partial_replication_over_unmapped_dims() {
+        // Fig. 3: A[j,a] on a (2,2,2,1) grid over (i,j,k,a), mapped to
+        // grid dims (1, 3) -> replicated over the (i,k) sub-grids.
+        let g = ProcessGrid::new(&[2, 2, 2, 1]).unwrap();
+        let td = TensorDist::new(&[10, 10], &g, &[1, 3]).unwrap();
+        assert_eq!(td.local_dims(), vec![5, 10]);
+        // Block (j=0, a=0): replicas are ranks with j-coord 0, any (i,k):
+        // ranks {0,1,4,5} (Table II).
+        let mut reps = td.replicas_of_block(&[0, 0]);
+        reps.sort_unstable();
+        assert_eq!(reps, vec![0, 1, 4, 5]);
+        assert_eq!(td.owner_of_block(&[0, 0]), 0);
+        let mut reps = td.replicas_of_block(&[1, 0]);
+        reps.sort_unstable();
+        assert_eq!(reps, vec![2, 3, 6, 7]);
+        assert_eq!(td.owner_of_block(&[1, 0]), 2);
+    }
+
+    #[test]
+    fn fully_replicated() {
+        let g = ProcessGrid::new(&[4]).unwrap();
+        let td = TensorDist::replicated(&[10], &g).unwrap();
+        assert!(td.is_replicated());
+        assert_eq!(td.local_dims(), vec![10]);
+        assert_eq!(td.n_blocks(), 1);
+        assert_eq!(td.block_coords(), vec![Vec::<usize>::new()]);
+        assert_eq!(td.owner_of_block(&[]), 0);
+        assert_eq!(td.replicas_of_block(&[]), vec![0, 1, 2, 3]);
+        assert_eq!(td.block_for_rank(2), (vec![0], vec![10]));
+    }
+
+    #[test]
+    fn uneven_extent_clips_trailing_block() {
+        let g = ProcessGrid::new(&[3]).unwrap();
+        let td = TensorDist::new(&[10], &g, &[0]).unwrap();
+        assert_eq!(td.local_dims(), vec![4]);
+        assert_eq!(td.block_for_rank(2), (vec![8], vec![2]));
+        assert_eq!(td.blocks_per_dim(), vec![3]);
+    }
+
+    #[test]
+    fn oversplit_dim_leaves_empty_blocks() {
+        // extent 5 over 4 ranks: blocks of 2, only 3 real blocks.
+        let g = ProcessGrid::new(&[4]).unwrap();
+        let td = TensorDist::new(&[5], &g, &[0]).unwrap();
+        assert_eq!(td.blocks_per_dim(), vec![3]);
+        let (off, size) = td.block_for_rank(3);
+        assert_eq!(off, vec![6]);
+        assert_eq!(size, vec![0]);
+    }
+
+    #[test]
+    fn blocks_cover_every_element_once() {
+        let g = ProcessGrid::new(&[2, 3]).unwrap();
+        let td = TensorDist::new(&[7, 8], &g, &[0, 1]).unwrap();
+        let mut seen = vec![vec![0u32; 8]; 7];
+        for bc in td.block_coords() {
+            let r = td.owner_of_block(&bc);
+            let (off, size) = td.block_for_rank(r);
+            for i in off[0]..off[0] + size[0] {
+                for j in off[1]..off[1] + size[1] {
+                    seen[i][j] += 1;
+                }
+            }
+        }
+        assert!(seen.iter().flatten().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn rejects_bad_mappings() {
+        let g = ProcessGrid::new(&[2, 2]).unwrap();
+        assert!(TensorDist::new(&[8], &g, &[0, 1]).is_err()); // len mismatch
+        assert!(TensorDist::new(&[8, 8], &g, &[0, 2]).is_err()); // dim out of range
+        assert!(TensorDist::new(&[8, 8], &g, &[1, 1]).is_err()); // double mapping
+    }
+}

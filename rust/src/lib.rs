@@ -21,6 +21,34 @@
 //!
 //! The CTF-like comparator the paper evaluates against lives in
 //! [`baseline`]; the Table IV/V benchmark suite in [`bench_support`].
+//!
+//! ## The local compute engine
+//!
+//! Once communication is I/O-optimal, end-to-end time is decided by the
+//! arithmetic intensity of the local tile kernels (paper §III-B, §V).
+//! The native kernels therefore run on a packed compute engine
+//! ([`tensor::kernel`]):
+//!
+//! - **Packing**: GEMM-shaped work packs `A` into `MC×KC` panels of
+//!   8-row strips and `B` into `KC×NC` panels of 8-column strips
+//!   (BLIS/Goto layout), with ragged edges zero-padded inside the packs
+//!   so the microkernel stays branch-free.
+//! - **Microkernel**: an 8×8 register-tiled accumulator block carried
+//!   across the full `KC` reduction; no data-dependent branches, so the
+//!   compiler auto-vectorizes the FMA loop.
+//! - **Threading**: the M macro-loop (and the transpose / fused-MTTKRP
+//!   unit spaces) split across `std::thread::scope` workers operating on
+//!   disjoint output bands.  Thread count honors `RAYON_NUM_THREADS` /
+//!   `DEINSUM_NUM_THREADS`, defaulting to all cores.
+//! - **Scratch reuse**: every packing/fold buffer comes from a
+//!   size-classed [`ScratchPool`]; steady-state coordinator steps perform
+//!   zero heap allocations for intermediates (the pool's `allocs`
+//!   counter is flat after warmup — asserted in tests).
+//!
+//! Knobs live in [`KernelConfig`] (`mc`/`kc`/`nc`/`threads`, env
+//! overrides `DEINSUM_MC`/`KC`/`NC`), which the PJRT/native dispatcher
+//! ([`runtime::KernelEngine`]) carries and the planner can derive from
+//! SOAP-optimal tile sizes via [`KernelConfig::from_tiles`].
 
 pub mod baseline;
 pub mod bench_support;
@@ -38,4 +66,5 @@ pub mod soap;
 pub mod tensor;
 
 pub use error::{Error, Result};
+pub use tensor::kernel::{KernelConfig, ScratchPool, ScratchStats};
 pub use tensor::Tensor;

@@ -27,6 +27,7 @@ use crate::redist::{self, RedistPlan};
 use crate::soap::bound::Statement;
 use crate::soap::sdg::{best_fusion, FusedGroup};
 use crate::soap::{self, IoBound};
+use crate::tensor::kernel::KernelConfig;
 
 /// Planner knobs.
 #[derive(Debug, Clone, Copy)]
@@ -107,6 +108,31 @@ impl TermPlan {
     /// Block size of index `c`.
     pub fn block_of(&self, c: char) -> usize {
         self.block[self.grid_dim_of(c)]
+    }
+
+    /// Derive a local-kernel configuration from this term's SOAP-optimal
+    /// tile sizes (§IV), so the cache blocking of the packed engine
+    /// follows the same proportions the I/O analysis assumed: `mc` from
+    /// the leading output index tile, `nc` from the trailing one (the
+    /// rank-like dimension in MTTKRP terms), `kc` from the tightest
+    /// contracted-index tile.  Indices without a tile keep `base`'s
+    /// blocks; the thread count is always `base`'s.
+    pub fn kernel_config(&self, base: KernelConfig) -> KernelConfig {
+        let tile = |c: char| self.bound.tiles.get(&c).copied();
+        let tm = self.output_indices.first().copied().and_then(tile);
+        let tn = self.output_indices.last().copied().and_then(tile);
+        let tk = self
+            .indices
+            .iter()
+            .filter(|c| !self.output_indices.contains(c))
+            .filter_map(|&c| tile(c))
+            .fold(f64::INFINITY, f64::min);
+        KernelConfig::from_tiles(
+            tm.unwrap_or(base.mc as f64),
+            if tk.is_finite() { tk } else { base.kc as f64 },
+            tn.unwrap_or(base.nc as f64),
+        )
+        .with_threads(base.threads)
     }
 }
 
@@ -567,6 +593,22 @@ mod tests {
         for (d, (&b, &n)) in t.block.iter().zip(&t.extents).enumerate() {
             assert!(b * t.grid.dims()[d] >= n, "dim {d} under-covered");
         }
+    }
+
+    #[test]
+    fn kernel_config_from_soap_tiles() {
+        let spec =
+            EinsumSpec::parse("ij,jk->ik", &[vec![4096, 4096], vec![4096, 4096]]).unwrap();
+        let p = plan(&spec, 8, &cfg()).unwrap();
+        let base = KernelConfig::default().with_threads(3);
+        let kcfg = p.terms[0].kernel_config(base);
+        assert_eq!(kcfg.threads, 3, "thread count comes from base");
+        assert_eq!(kcfg.mc % 8, 0);
+        assert_eq!(kcfg.nc % 8, 0);
+        assert!(kcfg.kc >= 8);
+        // GEMM tiles at S = 2^26 are ~sqrt(S/3) ≈ 4730, clamped to the
+        // packing maxima — the config must stay in the engine's range.
+        assert!(kcfg.mc <= 1024 && kcfg.kc <= 2048 && kcfg.nc <= 4096);
     }
 
     #[test]

@@ -187,7 +187,8 @@ pub fn plan(src: &TensorDist, dst: &TensorDist) -> Result<RedistPlan> {
 /// Execute a redistribution plan on per-rank local buffers (used by the
 /// simulator's data path and by tests).  `src_bufs[r]` holds rank `r`'s
 /// padded local block under `src`; returns the per-rank blocks under
-/// `dst`.
+/// `dst`.  Each message box moves with direct strided copies
+/// ([`Tensor::copy_box_from`]) — no temporary block tensor per message.
 pub fn execute(
     rp: &RedistPlan,
     src: &TensorDist,
@@ -200,11 +201,20 @@ pub fn execute(
     }
     let mut out: Vec<Tensor> =
         (0..p).map(|_| Tensor::zeros(&dst.local_dims())).collect();
-    for m in &rp.messages {
-        let blk = src_bufs[m.src].block(&m.src_off, &m.size);
-        out[m.dst].set_block(&m.dst_off, &blk);
-    }
+    execute_into(rp, src_bufs, &mut out);
     Ok(out)
+}
+
+/// Core of [`execute`]: move every message box into caller-owned
+/// destination buffers (zeroed, one per rank, shaped `dst.local_dims()`).
+/// The simulator's [`crate::sim::Machine::redistribute`] goes through
+/// [`execute`] today because its destination tensors become owned store
+/// entries; recycling them across *runs* needs a persistent machine (see
+/// ROADMAP "Local kernel performance" open items).
+pub fn execute_into(rp: &RedistPlan, src_bufs: &[Tensor], out: &mut [Tensor]) {
+    for m in &rp.messages {
+        out[m.dst].copy_box_from(&src_bufs[m.src], &m.src_off, &m.dst_off, &m.size);
+    }
 }
 
 #[cfg(test)]

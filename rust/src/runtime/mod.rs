@@ -19,12 +19,19 @@
 
 pub mod json;
 
+/// The PJRT C-API surface this module compiles against.  In the offline
+/// build it is a stub whose client constructor fails (native kernels then
+/// serve every op); swap in the real `xla` crate to enable artifacts.
+#[path = "xla_shim.rs"]
+mod xla;
+
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
 use crate::error::{Error, Result};
+use crate::tensor::kernel::{KernelConfig, ScratchPool, ScratchStats};
 use crate::tensor::{contract, Tensor};
 
 /// One AOT-lowered kernel variant (an entry of `manifest.json`).
@@ -255,18 +262,37 @@ pub enum Backend {
 }
 
 /// The local-kernel dispatcher the coordinator calls on the hot path.
+/// Carries the compute-engine handles the native kernels need: a
+/// [`KernelConfig`] (cache blocks + thread count, possibly SOAP-derived)
+/// and a [`ScratchPool`] reused across every step the engine serves, so
+/// steady-state local compute performs zero packing/fold allocations.
 pub struct KernelEngine {
     engine: Option<Engine>,
     backend: Backend,
     /// Max padded/real volume ratio before bucketing is considered
     /// wasteful and the native kernel is used instead.
     max_pad_ratio: f64,
+    /// Blocking/threading knobs for the native packed kernels.
+    config: KernelConfig,
+    /// Packing + fold scratch, reused across steps.
+    scratch: ScratchPool,
 }
 
 impl KernelEngine {
     /// Native-only engine (always available).
     pub fn native() -> Self {
-        KernelEngine { engine: None, backend: Backend::Native, max_pad_ratio: 1.0 }
+        Self::native_with(KernelConfig::from_env())
+    }
+
+    /// Native-only engine with explicit kernel configuration.
+    pub fn native_with(config: KernelConfig) -> Self {
+        KernelEngine {
+            engine: None,
+            backend: Backend::Native,
+            max_pad_ratio: 1.0,
+            config: config.normalized(),
+            scratch: ScratchPool::new(),
+        }
     }
 
     /// PJRT-backed engine over an artifacts dir; falls back to native per
@@ -276,11 +302,29 @@ impl KernelEngine {
             engine: Some(Engine::new(artifacts_dir)?),
             backend: Backend::Pjrt,
             max_pad_ratio: 1.7,
+            config: KernelConfig::from_env(),
+            scratch: ScratchPool::new(),
         })
     }
 
     pub fn backend(&self) -> Backend {
         self.backend
+    }
+
+    /// The native-kernel configuration this engine dispatches with.
+    pub fn config(&self) -> KernelConfig {
+        self.config
+    }
+
+    /// Replace the kernel configuration (e.g. with SOAP-derived tiles via
+    /// [`KernelConfig::from_tiles`]).
+    pub fn set_config(&mut self, config: KernelConfig) {
+        self.config = config.normalized();
+    }
+
+    /// Scratch-pool counters (steady-state invariant: `allocs` flat).
+    pub fn scratch_stats(&self) -> ScratchStats {
+        self.scratch.stats()
     }
 
     pub fn stats(&self) -> EngineStats {
@@ -372,7 +416,7 @@ impl KernelEngine {
                 engine.bump(|s| s.native += 1);
             }
         }
-        contract::gemm(a, b)
+        contract::gemm_with(&self.config, &self.scratch, a, b)
     }
 
     /// Fused mode-`mode` MTTKRP. `factors` lists all `order` factor slots;
@@ -419,7 +463,27 @@ impl KernelEngine {
                 engine.bump(|s| s.native += 1);
             }
         }
-        contract::mttkrp(x, factors, mode)
+        contract::mttkrp_with(&self.config, &self.scratch, x, factors, mode)
+    }
+
+    /// General binary einsum on the local tiles (the `Seq` kernel's
+    /// workhorse), folding through this engine's scratch pool.  The AOT
+    /// artifact set has no generic-einsum variants (only gemm / mttkrp /
+    /// krp / ttmc are lowered), so this always runs on the native packed
+    /// engine; on a PJRT backend the dispatch is still counted in
+    /// [`EngineStats::native`] so telemetry reflects every op served.
+    pub fn einsum2(
+        &self,
+        x: &Tensor,
+        x_idx: &[char],
+        y: &Tensor,
+        y_idx: &[char],
+        out_idx: &[char],
+    ) -> Result<Tensor> {
+        if let Some(engine) = self.engine.as_ref() {
+            engine.bump(|s| s.native += 1);
+        }
+        contract::einsum2_with(&self.config, &self.scratch, x, x_idx, y, y_idx, out_idx)
     }
 
     /// Materialized flat KRP (baseline two-step path): `(I0*I1, R)`.
@@ -503,6 +567,38 @@ mod tests {
         let got = e.gemm(&a, &b).unwrap();
         let want = contract::gemm(&a, &b).unwrap();
         assert!(got.allclose(&want, 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn native_engine_einsum2_and_scratch_reuse() {
+        let e = KernelEngine::native();
+        let x = Tensor::random(&[12, 10, 8], 5);
+        let y = Tensor::random(&[10, 8, 4], 6);
+        // Warm the pool, then steady state must stop allocating.
+        for _ in 0..2 {
+            let _ = e.einsum2(&x, &['i', 'j', 'k'], &y, &['j', 'k', 'a'], &['a', 'i']).unwrap();
+        }
+        let warm = e.scratch_stats();
+        let got = e.einsum2(&x, &['i', 'j', 'k'], &y, &['j', 'k', 'a'], &['a', 'i']).unwrap();
+        let want =
+            contract::einsum2(&x, &['i', 'j', 'k'], &y, &['j', 'k', 'a'], &['a', 'i']).unwrap();
+        assert!(got.allclose(&want, 1e-5, 1e-5));
+        let after = e.scratch_stats();
+        assert_eq!(after.allocs, warm.allocs, "engine scratch must be reused");
+        assert!(after.takes > warm.takes, "engine must route through the pool");
+    }
+
+    #[test]
+    fn native_engine_with_explicit_config() {
+        use crate::tensor::kernel::KernelConfig;
+        let cfg = KernelConfig::from_tiles(64.0, 64.0, 24.0).with_threads(2);
+        let e = KernelEngine::native_with(cfg);
+        assert_eq!(e.config(), cfg.normalized());
+        let a = Tensor::random(&[33, 17], 7);
+        let b = Tensor::random(&[17, 21], 8);
+        let got = e.gemm(&a, &b).unwrap();
+        let want = contract::gemm(&a, &b).unwrap();
+        assert!(got.allclose(&want, 1e-5, 1e-5));
     }
 
     #[test]

@@ -6,32 +6,60 @@
 //! kernel (KRP tile formed on the fly, never materialized) mirroring the
 //! L1 Pallas kernel's structure; the two-step MTTKRP used by the CTF-like
 //! baseline is also provided.
+//!
+//! All GEMM-shaped work runs on the packed engine in [`super::kernel`]
+//! (BLIS-style MC×KC / KC×NC packing, 8×8 register microkernel, row-band
+//! threading); the fused MTTKRP parallelizes over row bands of the
+//! matricized tensor with each worker forming its own bounded KRP tile.
+//! Every `*_with` variant takes an explicit [`KernelConfig`] +
+//! [`ScratchPool`] so the coordinator's steady-state steps reuse packing
+//! and fold buffers across steps; the plain-named entry points use the
+//! process-global config/pool.
 
-use super::transpose::{dematricize, matricize};
+use super::kernel::{self, KernelConfig, ScratchPool};
+use super::transpose::{self, dematricize, matricize};
 use super::Tensor;
 use crate::error::{Error, Result};
 
-/// Blocked GEMM: `C[m,n] = A[m,k] * B[k,n]`.
-///
-/// i-k-j loop order over `MC x KC` panels so `B` rows stream contiguously
-/// and `C` rows stay hot; with `-O3` the inner loop auto-vectorizes.
+/// Packed GEMM: `C[m,n] = A[m,k] * B[k,n]`.
 pub fn gemm(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    gemm_with(&KernelConfig::global(), kernel::global_pool(), a, b)
+}
+
+/// [`gemm`] with an explicit engine config and scratch pool.
+pub fn gemm_with(
+    cfg: &KernelConfig,
+    pool: &ScratchPool,
+    a: &Tensor,
+    b: &Tensor,
+) -> Result<Tensor> {
     let (m, k) = mat_dims(a)?;
     let (k2, n) = mat_dims(b)?;
     if k != k2 {
         return Err(Error::shape(format!("gemm: inner dims {k} != {k2}")));
     }
     let mut c = vec![0.0f32; m * n];
-    gemm_into(a.data(), b.data(), &mut c, m, k, n);
+    kernel::gemm_into_with(cfg, pool, a.data(), b.data(), &mut c, m, k, n);
     Tensor::from_vec(&[m, n], c)
 }
 
 /// GEMM into a preallocated accumulator (`c += a * b`). Raw-slice API so
-/// the coordinator's hot path can reuse buffers.
+/// the coordinator's hot path can reuse buffers.  Runs on the packed
+/// engine with the process-global config/pool; see
+/// [`kernel::gemm_into_with`] for the explicit-handles variant.
 pub fn gemm_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(c.len(), m * n);
+    kernel::gemm_into_with(&KernelConfig::global(), kernel::global_pool(), a, b, c, m, k, n);
+}
+
+/// The seed's scalar i-k-j kernel, kept as the perf baseline and test
+/// oracle.  Note: **no** `aik == 0.0` skip — that branch defeated
+/// vectorization on dense inputs and is exactly what the packed engine
+/// replaced (the zero-handling semantics are identical either way, which
+/// `gemm_zero_rich_inputs_match_oracle` pins down).
+pub fn gemm_scalar_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert!(a.len() >= m * k);
+    debug_assert!(b.len() >= k * n);
+    debug_assert!(c.len() >= m * n);
     const MC: usize = 64;
     const KC: usize = 256;
     let mut i0 = 0;
@@ -44,9 +72,6 @@ pub fn gemm_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usi
                 let c_row = &mut c[i * n..(i + 1) * n];
                 for kk in k0..k1 {
                     let aik = a[i * k + kk];
-                    if aik == 0.0 {
-                        continue;
-                    }
                     let b_row = &b[kk * n..kk * n + n];
                     for (cv, bv) in c_row.iter_mut().zip(b_row) {
                         *cv += aik * bv;
@@ -150,7 +175,7 @@ pub fn krp_chain(factors: &[&Tensor]) -> Result<Tensor> {
         if f.dims()[1] != r {
             return Err(Error::shape("krp_chain: rank mismatch"));
         }
-        let rows_out: usize = out.len() / r;
+        let rows_out: usize = out.len() / r.max(1);
         let rows_f = f.dims()[0];
         let mut data = vec![0.0f32; rows_out * rows_f * r];
         for i in 0..rows_out {
@@ -172,10 +197,30 @@ pub fn krp_chain(factors: &[&Tensor]) -> Result<Tensor> {
 }
 
 /// Fused mode-`mode` MTTKRP (paper Sec. IV-E tiling structure): the KRP
-/// row is formed on the fly per (reduction-index) and contracted
-/// immediately — the KRP never hits memory, exactly like the L1 Pallas
-/// kernel.  `factors[mode]` is ignored.
+/// row is formed on the fly per reduction index and contracted
+/// immediately — the KRP never hits memory beyond a bounded tile, exactly
+/// like the L1 Pallas kernel.  `factors[mode]` is ignored.
 pub fn mttkrp(x: &Tensor, factors: &[&Tensor], mode: usize) -> Result<Tensor> {
+    mttkrp_with(&KernelConfig::global(), kernel::global_pool(), x, factors, mode)
+}
+
+/// Maximum tensor order the fused MTTKRP path handles (odometer digit
+/// buffers are fixed-size so the hot loop allocates nothing).
+const MAX_MTTKRP_ORDER: usize = 16;
+
+/// [`mttkrp`] with explicit engine config + scratch pool.  Threading
+/// splits the matricized tensor's rows into bands (disjoint output
+/// slices); each worker builds its own KC×R KRP tile — tiny and
+/// redundant, which beats synchronizing on a shared one — and contracts
+/// the matching column panel with the packed GEMM through a strided view
+/// (no panel gather).
+pub fn mttkrp_with(
+    cfg: &KernelConfig,
+    pool: &ScratchPool,
+    x: &Tensor,
+    factors: &[&Tensor],
+    mode: usize,
+) -> Result<Tensor> {
     let order = x.order();
     if factors.len() != order {
         return Err(Error::shape(format!(
@@ -184,6 +229,9 @@ pub fn mttkrp(x: &Tensor, factors: &[&Tensor], mode: usize) -> Result<Tensor> {
         )));
     }
     let rest: Vec<usize> = (0..order).filter(|&m| m != mode).collect();
+    if rest.is_empty() || order > MAX_MTTKRP_ORDER {
+        return Err(Error::shape(format!("mttkrp: unsupported order {order}")));
+    }
     let r = factors[rest[0]].dims()[1];
     for &m in &rest {
         if factors[m].dims() != [x.dims()[m], r] {
@@ -194,36 +242,96 @@ pub fn mttkrp(x: &Tensor, factors: &[&Tensor], mode: usize) -> Result<Tensor> {
             )));
         }
     }
-    // Matricize X with `mode` leading: rows = I_mode, cols iterate `rest`
-    // in row-major order.  Then, exactly like the L1 Pallas kernel, form
-    // KRP *tiles* of KC columns in a bounded scratch buffer and contract
-    // each against the matching X-column panel with the blocked GEMM —
-    // the KRP never materializes beyond the scratch tile.
-    let xm = matricize(x, mode);
-    let n_rows = xm.dims()[0];
-    let n_cols = xm.dims()[1];
-    let rest_dims: Vec<usize> = rest.iter().map(|&m| x.dims()[m]).collect();
-
-    const KC: usize = 512; // KRP tile rows resident in "fast memory"
+    let cfg = cfg.normalized();
+    let n_rows = x.dims()[mode];
+    let n_cols = x.len() / n_rows.max(1);
     let mut out = vec![0.0f32; n_rows * r];
-    let mut krp_tile = vec![0.0f32; KC * r];
-    let mut panel = vec![0.0f32; n_rows * KC];
-    let mut idx = vec![0usize; rest.len()];
+    if n_rows == 0 || n_cols == 0 || r == 0 {
+        return Tensor::from_vec(&[n_rows, r], out);
+    }
+
+    // Matricize X with `mode` leading.  Mode 0 is already that layout —
+    // borrow it; otherwise permute into pool scratch (HPTT's role).
+    let xm_guard = if mode == 0 {
+        None
+    } else {
+        let mut perm = Vec::with_capacity(order);
+        perm.push(mode);
+        perm.extend(rest.iter().copied());
+        let mut buf = pool.take(x.len());
+        transpose::permute_into(&cfg, x.data(), x.dims(), &perm, &mut buf);
+        Some(buf)
+    };
+    let xm: &[f32] = match &xm_guard {
+        Some(b) => b,
+        None => x.data(),
+    };
+
+    let rest_dims: Vec<usize> = rest.iter().map(|&m| x.dims()[m]).collect();
+    let fdata: Vec<&[f32]> = rest.iter().map(|&m| factors[m].data()).collect();
+    let kc_tile = cfg.kc.max(64); // KRP tile rows resident in "fast memory"
+
+    // Same multiply-add cutoff and MR-aligned band split as the packed
+    // GEMM (kernel::parallel_row_bands — one partitioning scheme for the
+    // whole engine).
+    let madds = n_rows.saturating_mul(n_cols).saturating_mul(r);
+    let threads =
+        if madds < kernel::PARALLEL_FLOP_CUTOFF { 1 } else { cfg.threads.min(n_rows) };
+    let serial = cfg.serial();
+    kernel::parallel_row_bands(threads, n_rows, r, &mut out, |row0, rows, out_band| {
+        mttkrp_band(
+            serial,
+            pool,
+            &xm[row0 * n_cols..],
+            n_cols,
+            &fdata,
+            &rest_dims,
+            r,
+            rows,
+            out_band,
+            kc_tile,
+        );
+    });
+    Tensor::from_vec(&[n_rows, r], out)
+}
+
+/// One worker's fused MTTKRP over its row band: stream KC-column tiles,
+/// build the KRP tile rows on the fly (product of factor rows under the
+/// mixed-radix odometer), contract via the strided packed GEMM.
+fn mttkrp_band(
+    cfg: KernelConfig,
+    pool: &ScratchPool,
+    xm: &[f32],
+    n_cols: usize,
+    fdata: &[&[f32]],
+    rest_dims: &[usize],
+    r: usize,
+    rows: usize,
+    out: &mut [f32],
+    kc_tile: usize,
+) {
+    let mut krp = pool.take(kc_tile * r);
+    let mut idx = [0usize; MAX_MTTKRP_ORDER];
+    let q_rest = rest_dims.len();
     let mut col0 = 0usize;
     while col0 < n_cols {
-        let tile = KC.min(n_cols - col0);
-        // Build the KRP tile rows [col0, col0+tile).
+        let tile = kc_tile.min(n_cols - col0);
+        // Mixed-radix digits of col0 over rest_dims (last fastest).
+        let mut rem = col0;
+        for q in (0..q_rest).rev() {
+            idx[q] = rem % rest_dims[q];
+            rem /= rest_dims[q];
+        }
         for t in 0..tile {
-            let dst = &mut krp_tile[t * r..(t + 1) * r];
-            let f0 = factors[rest[0]];
-            dst.copy_from_slice(&f0.data()[idx[0] * r..idx[0] * r + r]);
-            for (q, &m) in rest.iter().enumerate().skip(1) {
-                let row = &factors[m].data()[idx[q] * r..idx[q] * r + r];
+            let dst = &mut krp[t * r..(t + 1) * r];
+            dst.copy_from_slice(&fdata[0][idx[0] * r..idx[0] * r + r]);
+            for q in 1..q_rest {
+                let row = &fdata[q][idx[q] * r..idx[q] * r + r];
                 for c in 0..r {
                     dst[c] *= row[c];
                 }
             }
-            for q in (0..rest.len()).rev() {
+            for q in (0..q_rest).rev() {
                 idx[q] += 1;
                 if idx[q] < rest_dims[q] {
                     break;
@@ -231,16 +339,22 @@ pub fn mttkrp(x: &Tensor, factors: &[&Tensor], mode: usize) -> Result<Tensor> {
                 idx[q] = 0;
             }
         }
-        // Gather the X column panel (n_rows x tile) contiguously.
-        for i in 0..n_rows {
-            panel[i * tile..(i + 1) * tile]
-                .copy_from_slice(&xm.data()[i * n_cols + col0..i * n_cols + col0 + tile]);
-        }
-        // out += panel @ krp_tile  (the kernel's MXU contraction)
-        gemm_into(&panel[..n_rows * tile], &krp_tile[..tile * r], &mut out, n_rows, tile, r);
+        // out += X[:, col0..col0+tile] @ krp — strided A view, no gather.
+        kernel::gemm_strided(
+            &cfg,
+            pool,
+            &xm[col0..],
+            n_cols,
+            &krp[..tile * r],
+            r,
+            out,
+            r,
+            rows,
+            tile,
+            r,
+        );
         col0 += tile;
     }
-    Tensor::from_vec(&[n_rows, r], out)
 }
 
 /// Sum a tensor over one mode (used to eliminate indices that appear in
@@ -272,6 +386,24 @@ pub fn reduce_mode(x: &Tensor, mode: usize) -> Tensor {
 /// both operands into `(batch, free, contracted)` layout and runs one
 /// GEMM per batch slice.
 pub fn einsum2(
+    x: &Tensor,
+    x_idx: &[char],
+    y: &Tensor,
+    y_idx: &[char],
+    out_idx: &[char],
+) -> Result<Tensor> {
+    einsum2_with(&KernelConfig::global(), kernel::global_pool(), x, x_idx, y, y_idx, out_idx)
+}
+
+/// [`einsum2`] with explicit engine config + scratch pool: the mode
+/// folds and (when the output order needs a final permute) the GEMM
+/// accumulator land in pool scratch, so steady-state steps allocate only
+/// the escaping output buffer.  Exception: the rare pre-reduction of
+/// indices private to one operand ([`reduce_mode`]) still allocates its
+/// intermediates.
+pub fn einsum2_with(
+    cfg: &KernelConfig,
+    pool: &ScratchPool,
     x: &Tensor,
     x_idx: &[char],
     y: &Tensor,
@@ -373,34 +505,39 @@ pub fn einsum2(
         .chain(y_idx.iter().enumerate().filter(|(_, &c)| c == '\u{1}').map(|(d, _)| d))
         .collect();
     // Identity permutations fold for free: borrow the original data.
+    // Non-identity folds land in pool scratch (freed on return).
     let is_identity = |p: &[usize]| p.iter().enumerate().all(|(i, &q)| i == q);
-    let xp_owned;
-    let xp_data: &[f32] = if is_identity(&perm_x) {
-        x.data()
+    let xp_guard = if is_identity(&perm_x) {
+        None
     } else {
-        xp_owned = x.permute(&perm_x);
-        xp_owned.data()
+        let mut buf = pool.take(x.len());
+        transpose::permute_into(cfg, x.data(), x.dims(), &perm_x, &mut buf);
+        Some(buf)
     };
-    let yp_owned;
-    let yp_data: &[f32] = if is_identity(&perm_y) {
-        y.data()
+    let xp_data: &[f32] = match &xp_guard {
+        Some(b) => b,
+        None => x.data(),
+    };
+    let yp_guard = if is_identity(&perm_y) {
+        None
     } else {
-        yp_owned = y.permute(&perm_y);
-        yp_owned.data()
+        let mut buf = pool.take(y.len());
+        transpose::permute_into(cfg, y.data(), y.dims(), &perm_y, &mut buf);
+        Some(buf)
+    };
+    let yp_data: &[f32] = match &yp_guard {
+        Some(b) => b,
+        None => y.data(),
     };
     let b: usize = batch.iter().map(|&c| ext_x(c)).product();
     let m: usize = free_x.iter().map(|&c| ext_x(c)).product();
     let kk: usize = contracted.iter().map(|&c| ext_x(c)).product();
     let n: usize = free_y.iter().map(|&c| ext_y(c)).product();
 
-    let mut c_data = vec![0.0f32; b * m * n];
-    for bi in 0..b {
-        let xs = &xp_data[bi * m * kk..(bi + 1) * m * kk];
-        let ys = &yp_data[bi * kk * n..(bi + 1) * kk * n];
-        let cs = &mut c_data[bi * m * n..(bi + 1) * m * n];
-        gemm_into(xs, ys, cs, m, kk, n);
-    }
-    // Result layout: (batch..., free_x..., free_y...); permute to out_idx.
+    // Result layout after the batched GEMMs: (batch..., free_x...,
+    // free_y...); resolve the output permutation up front so the
+    // accumulator can live in pool scratch when a final permute is
+    // needed (only the escaping buffer is ever heap-allocated).
     let natural: Vec<char> = batch
         .iter()
         .chain(free_x.iter())
@@ -412,26 +549,46 @@ pub fn einsum2(
         .map(|&c| if free_y.contains(&c) { ext_y(c) } else { ext_x(c) })
         .collect();
     let nat_dims = if nat_dims.is_empty() { vec![1] } else { nat_dims };
-    let t = Tensor::from_vec(&nat_dims, c_data)?;
-    if natural.is_empty() {
-        return Ok(t);
+    let needs_perm = !natural.is_empty() && natural != out_idx;
+    if needs_perm {
+        let out_set: std::collections::BTreeSet<char> = out_idx.iter().copied().collect();
+        let nat_set: std::collections::BTreeSet<char> = natural.iter().copied().collect();
+        if out_set != nat_set {
+            return Err(Error::shape(format!(
+                "einsum2: output indices {:?} != computed {:?}",
+                out_idx, natural
+            )));
+        }
     }
-    if natural == out_idx {
-        return Ok(t);
+
+    if !needs_perm {
+        let mut c_data = vec![0.0f32; b * m * n];
+        for bi in 0..b {
+            let xs = &xp_data[bi * m * kk..(bi + 1) * m * kk];
+            let ys = &yp_data[bi * kk * n..(bi + 1) * kk * n];
+            let cs = &mut c_data[bi * m * n..(bi + 1) * m * n];
+            kernel::gemm_into_with(cfg, pool, xs, ys, cs, m, kk, n);
+        }
+        return Tensor::from_vec(&nat_dims, c_data);
     }
-    let out_set: std::collections::BTreeSet<char> = out_idx.iter().copied().collect();
-    let nat_set: std::collections::BTreeSet<char> = natural.iter().copied().collect();
-    if out_set != nat_set {
-        return Err(Error::shape(format!(
-            "einsum2: output indices {:?} != computed {:?}",
-            out_idx, natural
-        )));
+
+    // Non-identity output order: accumulate in scratch, permute straight
+    // into the escaping buffer.
+    let mut c_scratch = pool.take_zeroed(b * m * n);
+    for bi in 0..b {
+        let xs = &xp_data[bi * m * kk..(bi + 1) * m * kk];
+        let ys = &yp_data[bi * kk * n..(bi + 1) * kk * n];
+        let cs = &mut c_scratch[bi * m * n..(bi + 1) * m * n];
+        kernel::gemm_into_with(cfg, pool, xs, ys, cs, m, kk, n);
     }
     let perm: Vec<usize> = out_idx
         .iter()
         .map(|&c| natural.iter().position(|&d| d == c).unwrap())
         .collect();
-    Ok(t.permute(&perm))
+    let mut out_data = vec![0.0f32; b * m * n];
+    transpose::permute_into(cfg, &c_scratch, &nat_dims, &perm, &mut out_data);
+    let out_dims: Vec<usize> = perm.iter().map(|&p| nat_dims[p]).collect();
+    Tensor::from_vec(&out_dims, out_data)
 }
 
 /// Two-step MTTKRP (explicit KRP then GEMM) — the communication-suboptimal
@@ -512,6 +669,40 @@ mod tests {
         let b = randn(&[300, 70], 4);
         let got = gemm(&a, &b).unwrap();
         assert!(got.allclose(&gemm_naive(&a, &b), 1e-3, 1e-3));
+    }
+
+    #[test]
+    fn gemm_packed_matches_scalar_kernel() {
+        for (m, k, n) in [(33usize, 65usize, 29usize), (128, 128, 128), (7, 513, 3)] {
+            let a = randn(&[m, k], 5);
+            let b = randn(&[k, n], 6);
+            let mut packed = vec![0.0f32; m * n];
+            gemm_into(a.data(), b.data(), &mut packed, m, k, n);
+            let mut scalar = vec![0.0f32; m * n];
+            gemm_scalar_into(a.data(), b.data(), &mut scalar, m, k, n);
+            let got = Tensor::from_vec(&[m, n], packed).unwrap();
+            let want = Tensor::from_vec(&[m, n], scalar).unwrap();
+            assert!(got.allclose(&want, 1e-3, 1e-3), "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn gemm_zero_rich_inputs_match_oracle() {
+        // Invariant pinned by the removal of the `aik == 0.0` skip: exact
+        // zeros in A (entire rows/cols of them) change nothing.
+        let mut a = randn(&[40, 48], 7);
+        for (i, v) in a.data_mut().iter_mut().enumerate() {
+            if i % 3 == 0 || (i / 48) % 5 == 0 {
+                *v = 0.0;
+            }
+        }
+        let b = randn(&[48, 31], 8);
+        let got = gemm(&a, &b).unwrap();
+        assert!(got.allclose(&gemm_naive(&a, &b), 1e-4, 1e-4));
+        let mut scalar = vec![0.0f32; 40 * 31];
+        gemm_scalar_into(a.data(), b.data(), &mut scalar, 40, 48, 31);
+        let want = Tensor::from_vec(&[40, 31], scalar).unwrap();
+        assert!(got.allclose(&want, 1e-4, 1e-4));
     }
 
     #[test]
@@ -634,6 +825,38 @@ mod tests {
         }
     }
 
+    #[test]
+    fn mttkrp_parallel_matches_serial() {
+        // Big enough to engage the threaded band path.
+        let x = randn(&[96, 48, 32], 75);
+        let fs: Vec<Tensor> =
+            (0..3).map(|m| randn(&[x.dims()[m], 24], 76 + m as u64)).collect();
+        let frefs: Vec<&Tensor> = fs.iter().collect();
+        let pool = ScratchPool::new();
+        let cfg1 = KernelConfig::default().serial();
+        let cfg4 = KernelConfig::default().with_threads(4);
+        for mode in 0..3 {
+            let a = mttkrp_with(&cfg1, &pool, &x, &frefs, mode).unwrap();
+            let b = mttkrp_with(&cfg4, &pool, &x, &frefs, mode).unwrap();
+            assert!(a.allclose(&b, 1e-5, 1e-5), "mode {mode}");
+            let want = mttkrp_naive(&x, &frefs, mode);
+            assert!(a.allclose(&want, 1e-2, 1e-3), "mode {mode} vs naive");
+        }
+    }
+
+    #[test]
+    fn mttkrp_degenerate_extent_one_dims() {
+        let x = randn(&[1, 4, 3], 77);
+        let fs: Vec<Tensor> =
+            (0..3).map(|m| randn(&[x.dims()[m], 2], 78 + m as u64)).collect();
+        let frefs: Vec<&Tensor> = fs.iter().collect();
+        for mode in 0..3 {
+            let got = mttkrp(&x, &frefs, mode).unwrap();
+            let want = mttkrp_naive(&x, &frefs, mode);
+            assert!(got.allclose(&want, 1e-4, 1e-4), "mode {mode}");
+        }
+    }
+
     /// Naive einsum2 oracle via full index iteration.
     fn einsum2_naive(
         x: &Tensor,
@@ -743,6 +966,26 @@ mod tests {
         let want =
             einsum2_naive(&a, &['b', 'i', 'j'], &b, &['b', 'j', 'k'], &['b', 'i', 'k']);
         assert!(got.allclose(&want, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn einsum2_steady_state_uses_pool() {
+        // The folds and packing of a repeated einsum2 must stop
+        // allocating once the pool is warm.
+        let pool = ScratchPool::new();
+        let cfg = KernelConfig::default().serial();
+        let x = randn(&[24, 18, 12], 114);
+        let t0 = randn(&[18, 12, 8], 115);
+        for _ in 0..2 {
+            let _ = einsum2_with(&cfg, &pool, &x, &['i', 'j', 'k'], &t0, &['j', 'k', 'a'], &['i', 'a'])
+                .unwrap();
+        }
+        let warm = pool.stats().allocs;
+        for _ in 0..5 {
+            let _ = einsum2_with(&cfg, &pool, &x, &['i', 'j', 'k'], &t0, &['j', 'k', 'a'], &['i', 'a'])
+                .unwrap();
+        }
+        assert_eq!(pool.stats().allocs, warm, "einsum2 steady state allocated");
     }
 
     #[test]

@@ -1,0 +1,681 @@
+//! The packed compute engine: BLIS-style cache blocking, an 8×8
+//! register-tiled microkernel, std::thread macro-loop parallelism, and a
+//! reusable scratch-buffer pool.
+//!
+//! Layout follows Goto/BLIS: `A` is packed into `MC×KC` panels of
+//! [`MR`]-row strips, `B` into `KC×NC` panels of [`NR`]-column strips, and
+//! the microkernel keeps an `MR×NR` accumulator block in registers across
+//! the full `KC` reduction (no branches in the inner loop, so `-O3`
+//! auto-vectorizes it).  Edge tiles are zero-padded *inside the packed
+//! panels*, which keeps the microkernel branch-free for ragged shapes.
+//!
+//! Threading splits the M macro-loop into disjoint row bands (one
+//! `thread::scope` spawn per band; every band owns a disjoint `&mut`
+//! slice of C, so the parallelism is safe Rust with no atomics on the
+//! data path).  The thread count and block sizes come from a
+//! [`KernelConfig`], which the planner can derive from SOAP tile sizes
+//! ([`KernelConfig::from_tiles`]) and benches override from the
+//! environment (`RAYON_NUM_THREADS` / `DEINSUM_NUM_THREADS`,
+//! `DEINSUM_MC/KC/NC`).
+//!
+//! All packing buffers come from a [`ScratchPool`]: a size-classed
+//! free-list behind a mutex, so steady-state kernel invocations perform
+//! zero heap allocations (verified by [`ScratchPool::stats`] in tests).
+
+use std::collections::BTreeMap;
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Microkernel rows (M-direction register tile).
+pub const MR: usize = 8;
+/// Microkernel columns (N-direction register tile).
+pub const NR: usize = 8;
+
+/// Problems below this many multiply-adds run single-threaded (thread
+/// spawn + pool traffic would dominate).  Shared by the packed GEMM and
+/// the fused MTTKRP so their serial/parallel crossover stays aligned.
+pub(crate) const PARALLEL_FLOP_CUTOFF: usize = 1 << 18;
+
+/// Cache-blocking and threading knobs for the local compute engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KernelConfig {
+    /// A-panel rows per pack (L2-resident; rounded up to a multiple of [`MR`]).
+    pub mc: usize,
+    /// Reduction depth per pack (shared by GEMM and the MTTKRP KRP tile).
+    pub kc: usize,
+    /// B-panel columns per pack (rounded up to a multiple of [`NR`]).
+    pub nc: usize,
+    /// Worker threads for the macro loops (1 = fully serial).
+    pub threads: usize,
+}
+
+impl Default for KernelConfig {
+    fn default() -> Self {
+        KernelConfig { mc: 128, kc: 256, nc: 512, threads: detected_threads() }.normalized()
+    }
+}
+
+/// Thread count: `RAYON_NUM_THREADS` (the convention distributed-BLAS
+/// users already set) or `DEINSUM_NUM_THREADS`, else all cores.  Probed
+/// once per process — config derivation sits on the planner path.
+fn detected_threads() -> usize {
+    static THREADS: OnceLock<usize> = OnceLock::new();
+    *THREADS.get_or_init(|| {
+        for var in ["RAYON_NUM_THREADS", "DEINSUM_NUM_THREADS"] {
+            if let Ok(v) = std::env::var(var) {
+                if let Ok(n) = v.trim().parse::<usize>() {
+                    if n >= 1 {
+                        return n;
+                    }
+                }
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
+}
+
+fn env_block(var: &str, default: usize) -> usize {
+    std::env::var(var)
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(default)
+}
+
+impl KernelConfig {
+    /// Defaults with environment overrides (`DEINSUM_MC`, `DEINSUM_KC`,
+    /// `DEINSUM_NC`, `RAYON_NUM_THREADS`/`DEINSUM_NUM_THREADS`).
+    pub fn from_env() -> Self {
+        let d = KernelConfig::default();
+        KernelConfig {
+            mc: env_block("DEINSUM_MC", d.mc),
+            kc: env_block("DEINSUM_KC", d.kc),
+            nc: env_block("DEINSUM_NC", d.nc),
+            threads: d.threads,
+        }
+        .normalized()
+    }
+
+    /// Clamp blocks to the microkernel grid (mc, nc multiples of MR/NR).
+    pub fn normalized(mut self) -> Self {
+        self.mc = self.mc.max(MR).div_ceil(MR) * MR;
+        self.nc = self.nc.max(NR).div_ceil(NR) * NR;
+        self.kc = self.kc.max(8);
+        self.threads = self.threads.max(1);
+        self
+    }
+
+    /// Same blocks, explicit thread count.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Same blocks, single-threaded (used inside already-parallel bands).
+    pub fn serial(self) -> Self {
+        self.with_threads(1)
+    }
+
+    /// Build cache blocks from SOAP-optimal tile extents (paper §IV):
+    /// `(t_m, t_k, t_n)` are the per-dimension tile sizes the I/O
+    /// analysis found; they clamp into the packing panels so the local
+    /// kernel blocks along the same proportions the schedule assumed.
+    pub fn from_tiles(tm: f64, tk: f64, tn: f64) -> Self {
+        fn clamp(t: f64, lo: usize, hi: usize) -> usize {
+            if !t.is_finite() || t < lo as f64 {
+                lo
+            } else if t > hi as f64 {
+                hi
+            } else {
+                t.round() as usize
+            }
+        }
+        KernelConfig {
+            mc: clamp(tm, MR, 1024),
+            kc: clamp(tk, 8, 2048),
+            nc: clamp(tn, NR, 4096),
+            threads: detected_threads(),
+        }
+        .normalized()
+    }
+
+    /// The process-wide config used by the convenience entry points
+    /// (`contract::gemm_into` etc.).
+    pub fn global() -> KernelConfig {
+        *global_config().lock().unwrap()
+    }
+
+    /// Replace the process-wide config.
+    pub fn install_global(cfg: KernelConfig) {
+        *global_config().lock().unwrap() = cfg.normalized();
+    }
+}
+
+fn global_config() -> &'static Mutex<KernelConfig> {
+    static CFG: OnceLock<Mutex<KernelConfig>> = OnceLock::new();
+    CFG.get_or_init(|| Mutex::new(KernelConfig::from_env()))
+}
+
+/// The process-wide scratch pool behind the convenience entry points.
+pub fn global_pool() -> &'static ScratchPool {
+    static POOL: OnceLock<ScratchPool> = OnceLock::new();
+    POOL.get_or_init(ScratchPool::new)
+}
+
+/// Allocation counters (steady-state invariant: `allocs` stops growing
+/// after warmup while `takes` keeps counting reuses).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ScratchStats {
+    /// Buffers actually heap-allocated (pool misses).
+    pub allocs: u64,
+    /// Total take() calls (hits + misses).
+    pub takes: u64,
+}
+
+/// Size-classed free list of `f32` buffers.  `Sync`: workers inside the
+/// parallel macro loops take and return buffers directly.
+#[derive(Debug, Default)]
+pub struct ScratchPool {
+    free: Mutex<BTreeMap<usize, Vec<Vec<f32>>>>,
+    allocs: AtomicU64,
+    takes: AtomicU64,
+}
+
+impl ScratchPool {
+    pub fn new() -> Self {
+        ScratchPool::default()
+    }
+
+    /// Size class: next power of two, floored at 256 elements (1 KiB)
+    /// so tiny requests of different sizes share one class.
+    fn class_of(len: usize) -> usize {
+        len.max(256).next_power_of_two()
+    }
+
+    /// Borrow a buffer of at least `len` elements.  Contents are
+    /// unspecified (callers fully overwrite or [`ScratchBuf::fill`]).
+    pub fn take(&self, len: usize) -> ScratchBuf<'_> {
+        self.takes.fetch_add(1, Ordering::Relaxed);
+        let class = Self::class_of(len);
+        let reused = self.free.lock().unwrap().get_mut(&class).and_then(Vec::pop);
+        let buf = match reused {
+            Some(b) => b,
+            None => {
+                self.allocs.fetch_add(1, Ordering::Relaxed);
+                vec![0.0f32; class]
+            }
+        };
+        ScratchBuf { pool: self, buf, len }
+    }
+
+    /// [`take`](Self::take), zero-filled.
+    pub fn take_zeroed(&self, len: usize) -> ScratchBuf<'_> {
+        let mut b = self.take(len);
+        b.fill(0.0);
+        b
+    }
+
+    pub fn stats(&self) -> ScratchStats {
+        ScratchStats {
+            allocs: self.allocs.load(Ordering::Relaxed),
+            takes: self.takes.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Drop every pooled buffer (frees memory; counters keep their values).
+    pub fn clear(&self) {
+        self.free.lock().unwrap().clear();
+    }
+}
+
+/// RAII scratch buffer: derefs to `[f32; len]`, returns to the pool on drop.
+pub struct ScratchBuf<'p> {
+    pool: &'p ScratchPool,
+    buf: Vec<f32>,
+    len: usize,
+}
+
+impl Deref for ScratchBuf<'_> {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        &self.buf[..self.len]
+    }
+}
+
+impl DerefMut for ScratchBuf<'_> {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        &mut self.buf[..self.len]
+    }
+}
+
+impl Drop for ScratchBuf<'_> {
+    fn drop(&mut self) {
+        let buf = std::mem::take(&mut self.buf);
+        if buf.capacity() == 0 {
+            return;
+        }
+        // Buffers are allocated at exactly their class size and never
+        // resized, so buf.len() is the class key.
+        self.pool.free.lock().unwrap().entry(buf.len()).or_default().push(buf);
+    }
+}
+
+/// `C[m×n] += A[m×k] · B[k×n]`, all row-major and dense.
+pub fn gemm_into_with(
+    cfg: &KernelConfig,
+    pool: &ScratchPool,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    debug_assert!(a.len() >= m * k);
+    debug_assert!(b.len() >= k * n);
+    debug_assert!(c.len() >= m * n);
+    gemm_strided(cfg, pool, a, k, b, n, c, n, m, k, n);
+}
+
+/// Strided-operand packed GEMM: `C[m×n] += A[m×k] · B[k×n]` with leading
+/// dimensions `lda`/`ldb`/`ldc` (row-major views into larger buffers; the
+/// fused MTTKRP uses this to contract column panels of the matricized
+/// tensor without gathering them first).  Requires `c.len() == m * ldc`.
+pub fn gemm_strided(
+    cfg: &KernelConfig,
+    pool: &ScratchPool,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let cfg = cfg.normalized();
+    let max_bands = m.div_ceil(MR);
+    let threads = if m.saturating_mul(n).saturating_mul(k) < PARALLEL_FLOP_CUTOFF {
+        1
+    } else {
+        cfg.threads.min(max_bands)
+    };
+    parallel_row_bands(threads, m, ldc, c, |row0, rows, c_band| {
+        band_gemm(cfg, pool, &a[row0 * lda..], lda, b, ldb, c_band, ldc, rows, k, n);
+    });
+}
+
+/// Split `out` (`rows × row_elems`, row-major) into disjoint MR-aligned
+/// row bands and run `work(row0, band_rows, band_out)` on up to `threads`
+/// scoped workers (`threads <= 1` runs inline).  The single band-split
+/// used by both the packed GEMM and the fused MTTKRP, so their
+/// partitioning can never diverge.
+pub(crate) fn parallel_row_bands<F>(
+    threads: usize,
+    rows: usize,
+    row_elems: usize,
+    out: &mut [f32],
+    work: F,
+) where
+    F: Fn(usize, usize, &mut [f32]) + Sync,
+{
+    if rows == 0 {
+        return;
+    }
+    if threads <= 1 {
+        work(0, rows, out);
+        return;
+    }
+    let band = rows.div_ceil(threads).div_ceil(MR) * MR;
+    std::thread::scope(|s| {
+        let work = &work;
+        let mut rest: &mut [f32] = out;
+        let mut row0 = 0usize;
+        while row0 < rows {
+            let take = band.min(rows - row0);
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(take * row_elems);
+            rest = tail;
+            s.spawn(move || work(row0, take, head));
+            row0 += take;
+        }
+    });
+}
+
+/// One worker's serial macro-loop nest over its row band (jc → pc → ic,
+/// the Goto loop order: B panels stream through L3, A panels sit in L2).
+fn band_gemm(
+    cfg: KernelConfig,
+    pool: &ScratchPool,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    let mut apack = pool.take(cfg.mc * cfg.kc);
+    let mut bpack = pool.take(cfg.kc * cfg.nc);
+    let mut jc = 0usize;
+    while jc < n {
+        let ncb = cfg.nc.min(n - jc);
+        let mut pc = 0usize;
+        while pc < k {
+            let kcb = cfg.kc.min(k - pc);
+            pack_b(b, ldb, pc, kcb, jc, ncb, &mut bpack);
+            let mut ic = 0usize;
+            while ic < m {
+                let mcb = cfg.mc.min(m - ic);
+                pack_a(a, lda, ic, mcb, pc, kcb, &mut apack);
+                macro_tile(&apack, &bpack, c, ldc, ic, mcb, jc, ncb, kcb);
+                ic += mcb;
+            }
+            pc += kcb;
+        }
+        jc += ncb;
+    }
+}
+
+/// Pack `A[ic..ic+mcb, pc..pc+kcb]` into MR-row strips:
+/// `out[s*kcb*MR + p*MR + i] = A[ic + s*MR + i, pc + p]` (zeros past mcb).
+fn pack_a(a: &[f32], lda: usize, ic: usize, mcb: usize, pc: usize, kcb: usize, out: &mut [f32]) {
+    let strips = mcb.div_ceil(MR);
+    for s in 0..strips {
+        let base = s * kcb * MR;
+        let r0 = ic + s * MR;
+        let rows = MR.min(ic + mcb - r0);
+        for p in 0..kcb {
+            let dst = &mut out[base + p * MR..base + (p + 1) * MR];
+            for (i, d) in dst.iter_mut().enumerate().take(rows) {
+                *d = a[(r0 + i) * lda + pc + p];
+            }
+            for d in dst.iter_mut().skip(rows) {
+                *d = 0.0;
+            }
+        }
+    }
+}
+
+/// Pack `B[pc..pc+kcb, jc..jc+ncb]` into NR-column strips:
+/// `out[t*kcb*NR + p*NR + j] = B[pc + p, jc + t*NR + j]` (zeros past ncb).
+fn pack_b(b: &[f32], ldb: usize, pc: usize, kcb: usize, jc: usize, ncb: usize, out: &mut [f32]) {
+    let strips = ncb.div_ceil(NR);
+    for t in 0..strips {
+        let base = t * kcb * NR;
+        let c0 = jc + t * NR;
+        let cols = NR.min(jc + ncb - c0);
+        for p in 0..kcb {
+            let src = (pc + p) * ldb + c0;
+            let dst = &mut out[base + p * NR..base + (p + 1) * NR];
+            if cols == NR {
+                dst.copy_from_slice(&b[src..src + NR]);
+            } else {
+                for (j, d) in dst.iter_mut().enumerate().take(cols) {
+                    *d = b[src + j];
+                }
+                for d in dst.iter_mut().skip(cols) {
+                    *d = 0.0;
+                }
+            }
+        }
+    }
+}
+
+/// Drive the microkernel over one packed `mcb × ncb` macro tile.
+fn macro_tile(
+    apack: &[f32],
+    bpack: &[f32],
+    c: &mut [f32],
+    ldc: usize,
+    ic: usize,
+    mcb: usize,
+    jc: usize,
+    ncb: usize,
+    kcb: usize,
+) {
+    let mut jr = 0usize;
+    while jr < ncb {
+        let nr_eff = NR.min(ncb - jr);
+        let bstrip = &bpack[(jr / NR) * kcb * NR..][..kcb * NR];
+        let mut ir = 0usize;
+        while ir < mcb {
+            let mr_eff = MR.min(mcb - ir);
+            let astrip = &apack[(ir / MR) * kcb * MR..][..kcb * MR];
+            let base = (ic + ir) * ldc + jc + jr;
+            micro_kernel(kcb, astrip, bstrip, &mut c[base..], ldc, mr_eff, nr_eff);
+            ir += MR;
+        }
+        jr += NR;
+    }
+}
+
+/// The 8×8 register-tiled microkernel: `acc[MR][NR] += a_strip ⊗ b_strip`
+/// over the full `kc` reduction, then a single accumulate into C.  No
+/// data-dependent branches in the reduction loop (the seed kernel's
+/// `aik == 0.0` skip is gone: it broke vectorization on dense inputs).
+#[inline]
+fn micro_kernel(
+    kc: usize,
+    ap: &[f32],
+    bp: &[f32],
+    c: &mut [f32],
+    ldc: usize,
+    mr: usize,
+    nr: usize,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for p in 0..kc {
+        let av: &[f32; MR] = ap[p * MR..(p + 1) * MR].try_into().unwrap();
+        let bv: &[f32; NR] = bp[p * NR..(p + 1) * NR].try_into().unwrap();
+        for i in 0..MR {
+            let aik = av[i];
+            for j in 0..NR {
+                acc[i][j] += aik * bv[j];
+            }
+        }
+    }
+    if mr == MR && nr == NR {
+        for (i, acc_row) in acc.iter().enumerate() {
+            let row = &mut c[i * ldc..i * ldc + NR];
+            for j in 0..NR {
+                row[j] += acc_row[j];
+            }
+        }
+    } else {
+        for (i, acc_row) in acc.iter().enumerate().take(mr) {
+            let row = &mut c[i * ldc..i * ldc + nr];
+            for (j, r) in row.iter_mut().enumerate() {
+                *r += acc_row[j];
+            }
+        }
+    }
+}
+
+/// Run `work(lo, hi)` over `0..units` split across up to `threads`
+/// scoped workers (each at least `min_per_thread` units).  Used by the
+/// transpose and MTTKRP macro loops.
+pub(crate) fn parallel_units<F>(threads: usize, units: usize, min_per_thread: usize, work: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    if units == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(units / min_per_thread.max(1)).max(1);
+    if threads <= 1 {
+        work(0, units);
+        return;
+    }
+    let chunk = units.div_ceil(threads);
+    std::thread::scope(|s| {
+        let work = &work;
+        let mut u0 = 0usize;
+        while u0 < units {
+            let u1 = (u0 + chunk).min(units);
+            s.spawn(move || work(u0, u1));
+            u0 = u1;
+        }
+    });
+}
+
+/// Raw mutable pointer that crosses scoped-thread boundaries.  Safety
+/// contract: every worker writes a disjoint index set (the transpose
+/// writes each destination element exactly once — it is a bijection).
+#[derive(Clone, Copy)]
+pub(crate) struct SendMutPtr(pub *mut f32);
+unsafe impl Send for SendMutPtr {}
+unsafe impl Sync for SendMutPtr {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Unblocked triple-loop oracle.
+    fn gemm_oracle(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                let aik = a[i * k + p];
+                for j in 0..n {
+                    c[i * n + j] += aik * b[p * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    fn randv(len: usize, seed: u64) -> Vec<f32> {
+        crate::tensor::Tensor::random(&[len.max(1)], seed).into_data()[..len].to_vec()
+    }
+
+    fn check_shape(m: usize, k: usize, n: usize, cfg: KernelConfig) {
+        let pool = ScratchPool::new();
+        let a = randv(m * k, 1 + (m * 31 + k * 7 + n) as u64);
+        let b = randv(k * n, 2 + (m + k + n) as u64);
+        let want = gemm_oracle(&a, &b, m, k, n);
+        let mut c = vec![0.0f32; m * n];
+        gemm_into_with(&cfg, &pool, &a, &b, &mut c, m, k, n);
+        for (i, (&g, &w)) in c.iter().zip(&want).enumerate() {
+            assert!(
+                (g - w).abs() <= 1e-3 + 1e-3 * w.abs(),
+                "({m},{k},{n}) cfg {cfg:?} elem {i}: {g} vs {w}"
+            );
+        }
+    }
+
+    #[test]
+    fn packed_gemm_matches_oracle_odd_shapes() {
+        let base = KernelConfig { mc: 16, kc: 24, nc: 16, threads: 1 }.normalized();
+        for &(m, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (7, 1, 9),
+            (1, 64, 1),
+            (8, 8, 8),
+            (17, 23, 9),
+            (33, 65, 29),
+            (64, 64, 64),
+            (100, 3, 50),
+        ] {
+            check_shape(m, k, n, base);
+            check_shape(m, k, n, base.with_threads(4));
+        }
+    }
+
+    #[test]
+    fn packed_gemm_parallel_matches_serial_exactly() {
+        // Same cfg => same blocking => identical FP order per element.
+        let pool = ScratchPool::new();
+        let cfg = KernelConfig { mc: 32, kc: 32, nc: 32, threads: 1 }.normalized();
+        let (m, k, n) = (150, 70, 90);
+        let a = randv(m * k, 11);
+        let b = randv(k * n, 12);
+        let mut c1 = vec![0.0f32; m * n];
+        gemm_into_with(&cfg, &pool, &a, &b, &mut c1, m, k, n);
+        let mut c4 = vec![0.0f32; m * n];
+        gemm_into_with(&cfg.with_threads(4), &pool, &a, &b, &mut c4, m, k, n);
+        // Thread split changes which band a row falls into but not the
+        // per-row reduction order, so results match to roundoff exactly.
+        assert_eq!(c1, c4);
+    }
+
+    #[test]
+    fn gemm_accumulates_into_c() {
+        let pool = ScratchPool::new();
+        let cfg = KernelConfig::default().serial();
+        let a = vec![1.0f32; 4];
+        let b = vec![1.0f32; 4];
+        let mut c = vec![10.0f32; 4];
+        gemm_into_with(&cfg, &pool, &a, &b, &mut c, 2, 2, 2);
+        assert_eq!(c, vec![12.0; 4]);
+    }
+
+    #[test]
+    fn degenerate_dims_are_noops() {
+        let pool = ScratchPool::new();
+        let cfg = KernelConfig::default();
+        let mut c = vec![1.0f32; 6];
+        gemm_into_with(&cfg, &pool, &[], &[], &mut c, 0, 0, 0);
+        gemm_into_with(&cfg, &pool, &[], &[1.0, 2.0], &mut c, 2, 0, 3);
+        assert_eq!(c, vec![1.0; 6]);
+    }
+
+    #[test]
+    fn scratch_pool_reuses_buffers() {
+        let pool = ScratchPool::new();
+        {
+            let _a = pool.take(1000);
+            let _b = pool.take(1000);
+        }
+        let after_warmup = pool.stats();
+        assert_eq!(after_warmup.allocs, 2);
+        for _ in 0..10 {
+            let _a = pool.take(1000);
+            let _b = pool.take(900); // same 1024 class
+        }
+        let s = pool.stats();
+        assert_eq!(s.allocs, after_warmup.allocs, "steady state must not allocate");
+        assert_eq!(s.takes, after_warmup.takes + 20);
+    }
+
+    #[test]
+    fn steady_state_gemm_is_alloc_free() {
+        let pool = ScratchPool::new();
+        let cfg = KernelConfig { mc: 32, kc: 32, nc: 32, threads: 2 }.normalized();
+        // Pre-seed the pool to its high-water mark (2 workers × 2 panels,
+        // all in the same size class here), so the runs below must be
+        // served entirely from the free list regardless of scheduling.
+        {
+            let _bufs: Vec<ScratchBuf> =
+                (0..4).map(|_| pool.take(cfg.mc * cfg.kc)).collect();
+        }
+        let a = randv(64 * 64, 3);
+        let b = randv(64 * 64, 4);
+        let mut c = vec![0.0f32; 64 * 64];
+        let warm = pool.stats().allocs;
+        for _ in 0..5 {
+            gemm_into_with(&cfg, &pool, &a, &b, &mut c, 64, 64, 64);
+        }
+        assert_eq!(pool.stats().allocs, warm, "gemm steady state allocated");
+    }
+
+    #[test]
+    fn config_normalization_and_env_shape() {
+        let c = KernelConfig { mc: 1, kc: 1, nc: 1, threads: 0 }.normalized();
+        assert_eq!(c.mc % MR, 0);
+        assert_eq!(c.nc % NR, 0);
+        assert!(c.kc >= 8 && c.threads >= 1);
+        let t = KernelConfig::from_tiles(100.0, 300.0, 24.0);
+        assert_eq!(t.mc % MR, 0);
+        assert_eq!(t.nc % NR, 0);
+        assert!(t.kc >= 8);
+        let huge = KernelConfig::from_tiles(1e18, f64::NAN, -5.0);
+        assert!(huge.mc <= 1024 && huge.kc >= 8 && huge.nc >= NR);
+    }
+}

@@ -10,7 +10,10 @@
 //! analysis is dtype-agnostic.
 
 pub mod contract;
+pub mod kernel;
 pub mod transpose;
+
+pub use kernel::{KernelConfig, ScratchPool, ScratchStats};
 
 use crate::error::{Error, Result};
 
@@ -147,97 +150,81 @@ impl Tensor {
     pub fn block(&self, off: &[usize], size: &[usize]) -> Tensor {
         debug_assert_eq!(off.len(), self.dims.len());
         let mut out = Tensor::zeros(size);
-        let src_strides = strides_of(&self.dims);
-        let dst_strides = strides_of(size);
-        let n = self.dims.len();
-        if n == 0 {
-            return out;
-        }
-        // Copy contiguous innermost runs.
-        let inner_copy = size[n - 1].min(self.dims[n - 1].saturating_sub(off[n - 1]));
-        if inner_copy == 0 {
-            return out;
-        }
-        let outer_dims = &size[..n - 1];
-        let total_outer: usize = outer_dims.iter().product();
-        let mut idx = vec![0usize; n - 1];
-        for _ in 0..total_outer {
-            let mut in_range = true;
-            let mut src_off = off[n - 1];
-            let mut dst_off = 0usize;
-            for d in 0..n - 1 {
-                let gi = off[d] + idx[d];
-                if gi >= self.dims[d] {
-                    in_range = false;
-                    break;
-                }
-                src_off += gi * src_strides[d];
-                dst_off += idx[d] * dst_strides[d];
-            }
-            if in_range {
-                out.data[dst_off..dst_off + inner_copy]
-                    .copy_from_slice(&self.data[src_off..src_off + inner_copy]);
-            }
-            // advance odometer
-            for d in (0..n - 1).rev() {
-                idx[d] += 1;
-                if idx[d] < outer_dims[d] {
-                    break;
-                }
-                idx[d] = 0;
-            }
-        }
+        out.copy_box_from(self, off, &vec![0; size.len()], size);
         out
     }
 
     /// Write `blk` into this tensor at offset `off` (inverse of `block`;
     /// clips to bounds so padded buckets round-trip).
     pub fn set_block(&mut self, off: &[usize], blk: &Tensor) {
+        debug_assert_eq!(off.len(), self.dims.len());
+        debug_assert_eq!(blk.dims.len(), self.dims.len());
+        self.copy_box_from(blk, &vec![0; blk.dims.len()], off, &blk.dims);
+    }
+
+    /// Permute modes (out-of-place, cache-blocked, multithreaded; see
+    /// [`transpose`]).
+    pub fn permute(&self, perm: &[usize]) -> Tensor {
+        transpose::permute(self, perm)
+    }
+
+    /// Copy the box `src[src_off .. src_off+size]` into
+    /// `self[dst_off .. dst_off+size]` directly — the redistribution data
+    /// path (one contiguous memcpy per innermost run, no temporary block
+    /// tensor).  Out-of-range spans on either side are clipped, matching
+    /// `block`/`set_block` zero-pad semantics when the destination starts
+    /// zeroed.
+    pub fn copy_box_from(
+        &mut self,
+        src: &Tensor,
+        src_off: &[usize],
+        dst_off: &[usize],
+        size: &[usize],
+    ) {
         let n = self.dims.len();
-        debug_assert_eq!(off.len(), n);
-        debug_assert_eq!(blk.dims.len(), n);
+        debug_assert_eq!(src.dims.len(), n);
+        debug_assert_eq!(src_off.len(), n);
+        debug_assert_eq!(dst_off.len(), n);
+        debug_assert_eq!(size.len(), n);
         if n == 0 {
             return;
         }
-        let dst_strides = strides_of(&self.dims);
-        let src_strides = strides_of(&blk.dims);
-        let inner_copy = blk.dims[n - 1].min(self.dims[n - 1].saturating_sub(off[n - 1]));
-        if inner_copy == 0 {
+        let inner = size[n - 1]
+            .min(src.dims[n - 1].saturating_sub(src_off[n - 1]))
+            .min(self.dims[n - 1].saturating_sub(dst_off[n - 1]));
+        if inner == 0 {
             return;
         }
-        let outer_dims = &blk.dims[..n - 1];
+        let src_strides = strides_of(&src.dims);
+        let dst_strides = strides_of(&self.dims);
+        let outer_dims = &size[..n - 1];
         let total_outer: usize = outer_dims.iter().product();
         let mut idx = vec![0usize; n - 1];
         for _ in 0..total_outer {
             let mut in_range = true;
-            let mut dst_off = off[n - 1];
-            let mut src_off = 0usize;
-            for d in 0..n - 1 {
-                let gi = off[d] + idx[d];
-                if gi >= self.dims[d] {
+            let mut s = src_off[n - 1];
+            let mut d = dst_off[n - 1];
+            for q in 0..n - 1 {
+                let si = src_off[q] + idx[q];
+                let di = dst_off[q] + idx[q];
+                if si >= src.dims[q] || di >= self.dims[q] {
                     in_range = false;
                     break;
                 }
-                dst_off += gi * dst_strides[d];
-                src_off += idx[d] * src_strides[d];
+                s += si * src_strides[q];
+                d += di * dst_strides[q];
             }
             if in_range {
-                self.data[dst_off..dst_off + inner_copy]
-                    .copy_from_slice(&blk.data[src_off..src_off + inner_copy]);
+                self.data[d..d + inner].copy_from_slice(&src.data[s..s + inner]);
             }
-            for d in (0..n - 1).rev() {
-                idx[d] += 1;
-                if idx[d] < outer_dims[d] {
+            for q in (0..n - 1).rev() {
+                idx[q] += 1;
+                if idx[q] < outer_dims[q] {
                     break;
                 }
-                idx[d] = 0;
+                idx[q] = 0;
             }
         }
-    }
-
-    /// Permute modes (out-of-place, cache-blocked; see [`transpose`]).
-    pub fn permute(&self, perm: &[usize]) -> Tensor {
-        transpose::permute(self, perm)
     }
 
     /// In-place accumulate: `self += other` (shapes must match).
@@ -352,6 +339,23 @@ mod tests {
         let t = Tensor::from_vec(&[3, 3], (0..9).map(|x| x as f32).collect()).unwrap();
         let b = t.block(&[2, 2], &[2, 2]);
         assert_eq!(b.data(), &[8.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn copy_box_from_matches_block_set_block() {
+        let src = Tensor::from_vec(&[4, 6], (0..24).map(|x| x as f32).collect()).unwrap();
+        // direct path
+        let mut direct = Tensor::zeros(&[5, 5]);
+        direct.copy_box_from(&src, &[1, 2], &[2, 1], &[2, 3]);
+        // temp-block path
+        let mut via_block = Tensor::zeros(&[5, 5]);
+        via_block.set_block(&[2, 1], &src.block(&[1, 2], &[2, 3]));
+        assert_eq!(direct, via_block);
+        // clipping on both sides
+        let mut clipped = Tensor::zeros(&[3, 3]);
+        clipped.copy_box_from(&src, &[3, 4], &[2, 2], &[2, 3]);
+        assert_eq!(clipped.at(&[2, 2]), src.at(&[3, 4]));
+        assert_eq!(clipped.data().iter().filter(|&&x| x != 0.0).count(), 1);
     }
 
     #[test]

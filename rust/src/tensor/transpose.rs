@@ -1,36 +1,73 @@
-//! HPTT-lite: blocked out-of-place tensor transposition.
+//! HPTT-lite: blocked, multithreaded out-of-place tensor transposition.
 //!
 //! The paper links both Deinsum and CTF against HPTT for out-of-place mode
 //! permutations (Sec. VI-A); every fold-to-GEMM lowering needs one.  This
-//! is a compact reimplementation: odometer iteration over all-but-two
-//! modes, with a cache-blocked 2D kernel over (src-innermost,
-//! dst-innermost) so one side always streams contiguously.
+//! is a compact reimplementation on the engine's blocking/threading scheme
+//! ([`super::kernel`]): odometer iteration over all-but-two modes, a
+//! cache-blocked 2D kernel over (src-innermost, dst-innermost) so one side
+//! always streams contiguously, and the work units (rest-index × a-block)
+//! split across scoped threads.  A permutation writes every destination
+//! element exactly once, so any partition of the unit space has disjoint
+//! writes — the parallel path shares the output through a raw pointer
+//! under that invariant.
 
+use super::kernel::{parallel_units, KernelConfig, SendMutPtr};
 use super::{strides_of, Tensor};
 
 /// Cache block edge for the 2D transpose microkernel (f32: 32x32 = 4 KiB
 /// per tile side, comfortably L1-resident).
 const BLOCK: usize = 32;
 
+/// Tensors below this element count transpose serially (thread spawn
+/// costs more than the copy).
+const PARALLEL_ELEM_CUTOFF: usize = 1 << 15;
+
 /// Permute tensor modes: `out[i_{perm[0]}, ..., i_{perm[n-1]}] = in[i_0, ..., i_{n-1}]`.
 ///
 /// `perm[d]` is the source mode that lands in destination mode `d`
 /// (numpy's `transpose` convention).
 pub fn permute(t: &Tensor, perm: &[usize]) -> Tensor {
-    let n = t.order();
+    permute_with(&KernelConfig::global(), t, perm)
+}
+
+/// [`permute`] with an explicit engine config (benches compare serial vs
+/// threaded through this).
+pub fn permute_with(cfg: &KernelConfig, t: &Tensor, perm: &[usize]) -> Tensor {
+    let src_dims = t.dims();
+    let dst_dims: Vec<usize> = perm.iter().map(|&p| src_dims[p]).collect();
+    let mut out = vec![0.0f32; t.len()];
+    permute_into(cfg, t.data(), src_dims, perm, &mut out);
+    Tensor::from_vec(&dst_dims, out).unwrap()
+}
+
+/// Core permutation into a caller-provided buffer (the coordinator's hot
+/// path feeds pool-backed scratch here so mode folds allocate nothing).
+/// `out.len()` must be at least the element count.
+pub fn permute_into(
+    cfg: &KernelConfig,
+    src: &[f32],
+    src_dims: &[usize],
+    perm: &[usize],
+    out: &mut [f32],
+) {
+    let n = src_dims.len();
     assert_eq!(perm.len(), n, "perm length mismatch");
     debug_assert!({
         let mut seen = vec![false; n];
         perm.iter().all(|&p| p < n && !std::mem::replace(&mut seen[p], true))
     });
-
-    let src_dims = t.dims();
-    let dst_dims: Vec<usize> = perm.iter().map(|&p| src_dims[p]).collect();
+    let total: usize = src_dims.iter().product();
+    debug_assert!(src.len() >= total && out.len() >= total);
+    if total == 0 {
+        return;
+    }
     if n <= 1 || perm.iter().enumerate().all(|(i, &p)| i == p) {
-        return Tensor::from_vec(&dst_dims, t.data().to_vec()).unwrap();
+        out[..total].copy_from_slice(&src[..total]);
+        return;
     }
 
     let src_strides = strides_of(src_dims);
+    let dst_dims: Vec<usize> = perm.iter().map(|&p| src_dims[p]).collect();
     let dst_strides = strides_of(&dst_dims);
     // Stride of each *source* mode in the destination layout.
     let mut dst_stride_of_src = vec![0usize; n];
@@ -38,8 +75,8 @@ pub fn permute(t: &Tensor, perm: &[usize]) -> Tensor {
         dst_stride_of_src[p] = dst_strides[d];
     }
 
-    let mut out = vec![0.0f32; t.len()];
-    let src = t.data();
+    let threads = if total < PARALLEL_ELEM_CUTOFF { 1 } else { cfg.threads };
+    let ptr = SendMutPtr(out.as_mut_ptr());
 
     // The two "fast" modes: source innermost (contiguous reads) and the
     // source mode that is destination-innermost (contiguous writes).
@@ -47,31 +84,34 @@ pub fn permute(t: &Tensor, perm: &[usize]) -> Tensor {
     let dst_inner_src_mode = perm[n - 1];
 
     if dst_inner_src_mode == src_inner {
-        // Innermost mode unchanged: copy contiguous runs.
+        // Innermost mode unchanged: copy contiguous runs.  Units are the
+        // outer odometer positions; each unit owns one disjoint run.
         let run = src_dims[src_inner];
-        let outer: usize = t.len() / run.max(1);
-        let mut idx = vec![0usize; n - 1];
-        for _ in 0..outer {
-            let mut s = 0usize;
-            let mut d = 0usize;
-            for m in 0..n - 1 {
-                s += idx[m] * src_strides[m];
-                d += idx[m] * dst_stride_of_src[m];
-            }
-            out[d..d + run].copy_from_slice(&src[s..s + run]);
-            for m in (0..n - 1).rev() {
-                idx[m] += 1;
-                if idx[m] < src_dims[m] {
-                    break;
+        let outer = total / run.max(1);
+        let outer_dims = &src_dims[..n - 1];
+        parallel_units(threads, outer, 64, |u0, u1| {
+            for u in u0..u1 {
+                let mut rem = u;
+                let mut s = 0usize;
+                let mut d = 0usize;
+                for m in (0..n - 1).rev() {
+                    let c = rem % outer_dims[m];
+                    rem /= outer_dims[m];
+                    s += c * src_strides[m];
+                    d += c * dst_stride_of_src[m];
                 }
-                idx[m] = 0;
+                // SAFETY: distinct units have distinct outer coords, so
+                // their destination runs are disjoint (permutation).
+                unsafe {
+                    std::ptr::copy_nonoverlapping(src.as_ptr().add(s), ptr.0.add(d), run);
+                }
             }
-        }
-        return Tensor::from_vec(&dst_dims, out).unwrap();
+        });
+        return;
     }
 
     // General case: 2D blocked kernel over (a, b) = (dst-inner source
-    // mode, src-inner mode); odometer over the remaining modes.
+    // mode, src-inner mode); units are (rest odometer position, a-block).
     let a_mode = dst_inner_src_mode;
     let b_mode = src_inner;
     let na = src_dims[a_mode];
@@ -82,46 +122,46 @@ pub fn permute(t: &Tensor, perm: &[usize]) -> Tensor {
 
     let rest: Vec<usize> = (0..n).filter(|&m| m != a_mode && m != b_mode).collect();
     let rest_dims: Vec<usize> = rest.iter().map(|&m| src_dims[m]).collect();
-    let rest_total: usize = rest_dims.iter().product();
-    let mut idx = vec![0usize; rest.len()];
+    let rest_total: usize = rest_dims.iter().product::<usize>().max(1);
+    let n_ablocks = na.div_ceil(BLOCK);
+    let units = rest_total * n_ablocks;
 
-    for _ in 0..rest_total.max(1) {
-        let mut base_s = 0usize;
-        let mut base_d = 0usize;
-        for (r, &m) in rest.iter().enumerate() {
-            base_s += idx[r] * src_strides[m];
-            base_d += idx[r] * dst_stride_of_src[m];
-        }
-        // Blocked 2D transpose: src[a*sa_src + b], dst[b*sb_dst + a].
-        // Inner loop runs over `a` so the *writes* are contiguous (the
-        // destination is written exactly once, while the strided reads
-        // overlap via hardware prefetch across the block's rows).
-        let mut a0 = 0;
-        while a0 < na {
+    parallel_units(threads, units, 4, |u0, u1| {
+        for u in u0..u1 {
+            let rest_idx = u / n_ablocks;
+            let ab = u % n_ablocks;
+            let a0 = ab * BLOCK;
             let a1 = (a0 + BLOCK).min(na);
-            let mut b0 = 0;
+            let mut rem = rest_idx;
+            let mut base_s = 0usize;
+            let mut base_d = 0usize;
+            for q in (0..rest.len()).rev() {
+                let c = rem % rest_dims[q];
+                rem /= rest_dims[q];
+                base_s += c * src_strides[rest[q]];
+                base_d += c * dst_stride_of_src[rest[q]];
+            }
+            // Blocked 2D transpose: src[a*sa_src + b], dst[b*sb_dst + a].
+            // Inner loop runs over `a` so the *writes* are contiguous.
+            let mut b0 = 0usize;
             while b0 < nb {
                 let b1 = (b0 + BLOCK).min(nb);
                 for b in b0..b1 {
                     let d_row = base_d + b * sb_dst;
                     let s_col = base_s + b;
                     for a in a0..a1 {
-                        out[d_row + a] = src[s_col + a * sa_src];
+                        // SAFETY: (rest, a, b) ↦ d_row + a is injective
+                        // over the whole iteration space (permutation),
+                        // and units partition (rest, a-block) disjointly.
+                        unsafe {
+                            *ptr.0.add(d_row + a) = src[s_col + a * sa_src];
+                        }
                     }
                 }
                 b0 = b1;
             }
-            a0 = a1;
         }
-        for r in (0..rest.len()).rev() {
-            idx[r] += 1;
-            if idx[r] < rest_dims[r] {
-                break;
-            }
-            idx[r] = 0;
-        }
-    }
-    Tensor::from_vec(&dst_dims, out).unwrap()
+    });
 }
 
 /// Mode-n matricization (paper Sec. III-B): permute so `mode` leads, then
@@ -228,6 +268,34 @@ mod tests {
     fn large_blocked_transpose() {
         let t = seq(&[65, 70]);
         assert_eq!(permute(&t, &[1, 0]), permute_naive(&t, &[1, 0]));
+    }
+
+    #[test]
+    fn parallel_matches_serial_above_cutoff() {
+        // Big enough to engage the threaded paths in both kernels.
+        let cfg1 = KernelConfig::default().serial();
+        let cfg4 = KernelConfig::default().with_threads(4);
+        for (dims, perm) in [
+            (vec![96usize, 64, 48], vec![2usize, 1, 0]), // blocked path
+            (vec![96, 64, 48], vec![1, 0, 2]),           // inner-fixed path
+            (vec![512, 600], vec![1, 0]),                // matrix transpose
+            (vec![3, 4, 7, 9, 11, 5], vec![5, 3, 1, 4, 2, 0]), // high order
+        ] {
+            let t = Tensor::random(&dims, 99);
+            let a = permute_with(&cfg1, &t, &perm);
+            let b = permute_with(&cfg4, &t, &perm);
+            assert_eq!(a, b, "{dims:?} {perm:?}");
+            assert_eq!(a, permute_naive(&t, &perm), "{dims:?} {perm:?} vs naive");
+        }
+    }
+
+    #[test]
+    fn degenerate_extents() {
+        for dims in [vec![1usize, 5, 1], vec![1, 1, 1], vec![5, 1, 3]] {
+            let t = seq(&dims);
+            let perm = [2, 0, 1];
+            assert_eq!(permute(&t, &perm), permute_naive(&t, &perm), "{dims:?}");
+        }
     }
 
     #[test]

@@ -1,0 +1,235 @@
+//! Property tests for the packed compute engine: the new packed GEMM,
+//! threaded fused MTTKRP, and parallel transpose against the naive
+//! elementwise oracles, across randomized odd shapes — non-multiples of
+//! every block size, degenerate extent-1 dims, empty free sets — and
+//! across serial/threaded configs (hand-rolled generator: the offline
+//! registry has no proptest; failing seeds print and reproduce).
+
+use deinsum::tensor::kernel::{self, KernelConfig, ScratchPool};
+use deinsum::tensor::{contract, transpose, Tensor};
+
+/// Tiny deterministic PRNG (xorshift64*).
+struct Rng(u64);
+impl Rng {
+    fn new(seed: u64) -> Self {
+        Rng(seed.wrapping_mul(0x9E3779B97F4A7C15) | 1)
+    }
+    fn next(&mut self) -> u64 {
+        self.0 ^= self.0 << 13;
+        self.0 ^= self.0 >> 7;
+        self.0 ^= self.0 << 17;
+        self.0
+    }
+    fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + (self.next() as usize) % (hi - lo + 1)
+    }
+}
+
+fn stress_cfgs() -> Vec<KernelConfig> {
+    vec![
+        // Tiny blocks force many ragged macro/micro edges.
+        KernelConfig { mc: 16, kc: 8, nc: 16, threads: 1 }.normalized(),
+        KernelConfig { mc: 16, kc: 24, nc: 16, threads: 3 }.normalized(),
+        KernelConfig::default().serial(),
+        KernelConfig::default().with_threads(4),
+    ]
+}
+
+fn gemm_oracle(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        for p in 0..k {
+            let aik = a[i * k + p];
+            for j in 0..n {
+                c[i * n + j] += aik * b[p * n + j];
+            }
+        }
+    }
+    c
+}
+
+#[test]
+fn property_packed_gemm_matches_oracle() {
+    let pool = ScratchPool::new();
+    let mut rng = Rng::new(0x6E44);
+    let cfgs = stress_cfgs();
+    for trial in 0..60 {
+        // Odd shapes around the MR/NR=8 and block boundaries; extent-1
+        // dims model empty free sets after folding.
+        let m = rng.range(1, 70);
+        let k = rng.range(1, 90);
+        let n = rng.range(1, 70);
+        let a = Tensor::random(&[m, k], 1000 + trial);
+        let b = Tensor::random(&[k, n], 2000 + trial);
+        let want = gemm_oracle(a.data(), b.data(), m, k, n);
+        for cfg in &cfgs {
+            let mut c = vec![0.0f32; m * n];
+            kernel::gemm_into_with(cfg, &pool, a.data(), b.data(), &mut c, m, k, n);
+            for (i, (&g, &w)) in c.iter().zip(&want).enumerate() {
+                assert!(
+                    (g - w).abs() <= 1e-3 + 1e-3 * w.abs(),
+                    "trial {trial} ({m},{k},{n}) cfg {cfg:?} elem {i}: {g} vs {w}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn property_gemm_degenerate_extent_one() {
+    // m=1 / n=1 / k=1 boundaries (empty free or contracted sets after
+    // folding) against the oracle, all configs.
+    let pool = ScratchPool::new();
+    for &(m, k, n) in
+        &[(1usize, 1usize, 1usize), (1, 50, 1), (1, 1, 40), (40, 1, 1), (1, 33, 27), (27, 33, 1)]
+    {
+        let a = Tensor::random(&[m, k], 7);
+        let b = Tensor::random(&[k, n], 8);
+        let want = gemm_oracle(a.data(), b.data(), m, k, n);
+        for cfg in &stress_cfgs() {
+            let mut c = vec![0.0f32; m * n];
+            kernel::gemm_into_with(cfg, &pool, a.data(), b.data(), &mut c, m, k, n);
+            let got = Tensor::from_vec(&[m, n], c).unwrap();
+            let want_t = Tensor::from_vec(&[m, n], want.clone()).unwrap();
+            assert!(got.allclose(&want_t, 1e-4, 1e-4), "({m},{k},{n}) cfg {cfg:?}");
+        }
+    }
+}
+
+/// Elementwise MTTKRP oracle straight from the einsum.
+fn mttkrp_oracle(x: &Tensor, factors: &[&Tensor], mode: usize) -> Tensor {
+    let order = x.order();
+    let rest: Vec<usize> = (0..order).filter(|&m| m != mode).collect();
+    let r = factors[rest[0]].dims()[1];
+    let mut out = Tensor::zeros(&[x.dims()[mode], r]);
+    let dims = x.dims().to_vec();
+    let total: usize = dims.iter().product();
+    let strides = deinsum::tensor::strides_of(&dims);
+    for flat in 0..total {
+        let mut rem = flat;
+        let mut idx = vec![0usize; order];
+        for d in 0..order {
+            idx[d] = rem / strides[d];
+            rem %= strides[d];
+        }
+        for c in 0..r {
+            let mut v = x.data()[flat];
+            for &m in &rest {
+                v *= factors[m].at(&[idx[m], c]);
+            }
+            *out.at_mut(&[idx[mode], c]) += v;
+        }
+    }
+    out
+}
+
+#[test]
+fn property_fused_mttkrp_matches_oracle() {
+    let pool = ScratchPool::new();
+    let mut rng = Rng::new(0x3771);
+    let cfgs = stress_cfgs();
+    for trial in 0..25 {
+        let order = rng.range(2, 4);
+        let dims: Vec<usize> = (0..order)
+            .map(|_| if rng.range(0, 4) == 0 { 1 } else { rng.range(2, 13) })
+            .collect();
+        let r = rng.range(1, 9);
+        let x = Tensor::random(&dims, 3000 + trial);
+        let fs: Vec<Tensor> =
+            (0..order).map(|m| Tensor::random(&[dims[m], r], 4000 + trial * 7 + m as u64)).collect();
+        let frefs: Vec<&Tensor> = fs.iter().collect();
+        for mode in 0..order {
+            let want = mttkrp_oracle(&x, &frefs, mode);
+            for cfg in &cfgs {
+                let got = contract::mttkrp_with(cfg, &pool, &x, &frefs, mode).unwrap();
+                assert!(
+                    got.allclose(&want, 1e-3, 1e-3),
+                    "trial {trial} dims {dims:?} r {r} mode {mode} cfg {cfg:?}: rel {}",
+                    got.rel_error(&want)
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn mttkrp_large_engages_threaded_bands() {
+    // Above the parallel cutoff: threaded result must equal serial and
+    // the two-step oracle.
+    let pool = ScratchPool::new();
+    let x = Tensor::random(&[80, 40, 40], 1);
+    let fs: Vec<Tensor> = (0..3).map(|m| Tensor::random(&[x.dims()[m], 24], 2 + m as u64)).collect();
+    let frefs: Vec<&Tensor> = fs.iter().collect();
+    for mode in 0..3 {
+        let serial =
+            contract::mttkrp_with(&KernelConfig::default().serial(), &pool, &x, &frefs, mode)
+                .unwrap();
+        let threaded =
+            contract::mttkrp_with(&KernelConfig::default().with_threads(4), &pool, &x, &frefs, mode)
+                .unwrap();
+        assert!(serial.allclose(&threaded, 1e-5, 1e-5), "mode {mode}");
+        let two = contract::mttkrp_two_step(&x, &frefs, mode).unwrap();
+        assert!(serial.allclose(&two, 1e-2, 1e-3), "mode {mode} vs two-step");
+    }
+}
+
+/// Elementwise permute oracle.
+fn permute_oracle(t: &Tensor, perm: &[usize]) -> Tensor {
+    let src_dims = t.dims();
+    let dst_dims: Vec<usize> = perm.iter().map(|&p| src_dims[p]).collect();
+    let mut out = Tensor::zeros(&dst_dims);
+    let strides = deinsum::tensor::strides_of(src_dims);
+    for flat in 0..t.len() {
+        let mut rem = flat;
+        let mut idx = vec![0usize; src_dims.len()];
+        for d in 0..src_dims.len() {
+            idx[d] = rem / strides[d];
+            rem %= strides[d];
+        }
+        let dst_idx: Vec<usize> = perm.iter().map(|&p| idx[p]).collect();
+        *out.at_mut(&dst_idx) = t.data()[flat];
+    }
+    out
+}
+
+#[test]
+fn property_parallel_transpose_matches_oracle() {
+    let mut rng = Rng::new(0x7245);
+    for trial in 0..30 {
+        let order = rng.range(2, 5);
+        let dims: Vec<usize> = (0..order)
+            .map(|_| if rng.range(0, 4) == 0 { 1 } else { rng.range(2, 40) })
+            .collect();
+        // random permutation via repeated swaps
+        let mut perm: Vec<usize> = (0..order).collect();
+        for i in (1..order).rev() {
+            perm.swap(i, rng.range(0, i));
+        }
+        let t = Tensor::random(&dims, 5000 + trial);
+        let want = permute_oracle(&t, &perm);
+        for threads in [1usize, 4] {
+            let got =
+                transpose::permute_with(&KernelConfig::default().with_threads(threads), &t, &perm);
+            assert_eq!(
+                got, want,
+                "trial {trial} dims {dims:?} perm {perm:?} threads {threads}"
+            );
+        }
+    }
+}
+
+#[test]
+fn transpose_above_parallel_cutoff_matches_oracle() {
+    // Forcefully large tensors so the threaded paths run: both the
+    // inner-run fast path and the blocked 2D path.
+    for (dims, perm) in [
+        (vec![40usize, 50, 40], vec![1usize, 0, 2]), // inner mode fixed
+        (vec![40, 50, 40], vec![2, 1, 0]),           // blocked path
+        (vec![300, 300], vec![1, 0]),                // big matrix transpose
+    ] {
+        let t = Tensor::random(&dims, 17);
+        let want = permute_oracle(&t, &perm);
+        let got = transpose::permute_with(&KernelConfig::default().with_threads(8), &t, &perm);
+        assert_eq!(got, want, "{dims:?} {perm:?}");
+    }
+}
