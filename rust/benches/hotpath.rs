@@ -5,9 +5,13 @@
 //! - packed GEMM (multi + single thread) vs the seed scalar kernel
 //! - fused MTTKRP (multi + single thread, SOAP-derived tiles) vs two-step
 //! - HPTT-lite transposition, serial vs threaded
+//! - parallel-region dispatch: persistent pool vs per-step thread spawn
 //! - redistribution *planning* (must be O(messages), never O(elements))
-//! - redistribution *execution* (memcpy-bound)
+//! - redistribution *execution* (memcpy-bound, recycled destinations)
 //! - end-to-end plan construction (SOAP solve + grid search)
+//! - coordinator steady state: persistent machine + warm pools vs the
+//!   cold per-run-spawn baseline, on a multi-step plan
+//!   (`DEINSUM_BENCH_TINY=1` shrinks it for CI smoke runs)
 //!
 //! Besides the human-readable table, results land in
 //! `BENCH_hotpath.json` (override with `DEINSUM_BENCH_JSON`) as
@@ -18,12 +22,16 @@
 mod common;
 
 use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
 
+use deinsum::coordinator::Coordinator;
 use deinsum::dist::TensorDist;
 use deinsum::einsum::EinsumSpec;
 use deinsum::grid::ProcessGrid;
 use deinsum::planner::{plan, PlannerConfig};
 use deinsum::redist;
+use deinsum::runtime::{pool, KernelEngine};
+use deinsum::sim::NetworkModel;
 use deinsum::tensor::kernel::{self, KernelConfig, ScratchPool};
 use deinsum::tensor::{contract, transpose, Tensor};
 
@@ -50,14 +58,18 @@ fn record(
 
 fn main() {
     let reps = common::env_usize("DEINSUM_BENCH_REPS", 5);
+    // Smoke mode: every section shrinks so CI can exercise the full
+    // bench surface (including coordinator_steady_state) in seconds.
+    let tiny = std::env::var("DEINSUM_BENCH_TINY").is_ok();
     let cfg = KernelConfig::from_env();
     let serial = cfg.serial();
-    let pool = ScratchPool::new();
+    let scratch = ScratchPool::new();
     let mut records: Vec<String> = Vec::new();
-    println!("# kernel config: {cfg:?}");
+    println!("# kernel config: {cfg:?} tiny={tiny}");
 
     // --- GEMM: seed scalar kernel vs packed engine ---------------------------
-    for n in [128usize, 256, 512] {
+    let gemm_sizes: &[usize] = if tiny { &[96] } else { &[128, 256, 512] };
+    for &n in gemm_sizes {
         let a = Tensor::random(&[n, n], 1);
         let b = Tensor::random(&[n, n], 2);
         let flops = 2.0 * (n as f64).powi(3);
@@ -70,11 +82,11 @@ fn main() {
         });
         let (packed1, _, _) = common::time_median(reps, || {
             c.fill(0.0);
-            kernel::gemm_into_with(&serial, &pool, a.data(), b.data(), &mut c, n, n, n);
+            kernel::gemm_into_with(&serial, &scratch, a.data(), b.data(), &mut c, n, n, n);
         });
         let (packed, _, _) = common::time_median(reps, || {
             c.fill(0.0);
-            kernel::gemm_into_with(&cfg, &pool, a.data(), b.data(), &mut c, n, n, n);
+            kernel::gemm_into_with(&cfg, &scratch, a.data(), b.data(), &mut c, n, n, n);
         });
         println!(
             "gemm {shape}: scalar {} ({:.2} GF/s) | packed-1t {} ({:.2} GF/s, {:.2}x) | packed-{}t {} ({:.2} GF/s, {:.2}x)",
@@ -108,7 +120,8 @@ fn main() {
     }
 
     // --- fused MTTKRP vs two-step (local kernels) ----------------------------
-    for n in [64usize, 128] {
+    let mttkrp_sizes: &[usize] = if tiny { &[48] } else { &[64, 128] };
+    for &n in mttkrp_sizes {
         let r = 24usize;
         let x = Tensor::random(&[n, n, n], 3);
         let f1 = Tensor::random(&[n, r], 4);
@@ -117,28 +130,33 @@ fn main() {
         let flops = 2.0 * (n as f64).powi(3) * r as f64;
         let shape = format!("{n}^3 r{r}");
 
-        // SOAP-derived blocks: the planner's own tile sizes feed the
-        // local kernel config (the §IV story end to end).
+        // SOAP-derived blocks through the coordinator's own feed
+        // (KernelEngine::configure_for_term) — the §IV story end to end,
+        // with no bench-side reimplementation of the derivation.
         let spec = EinsumSpec::parse(
             "ijk,ja,ka->ia",
             &[vec![n, n, n], vec![n, r], vec![n, r]],
         )
         .unwrap();
+        let feed_engine = KernelEngine::native_with(cfg);
         let soap_cfg = plan(&spec, 1, &PlannerConfig::default())
-            .map(|p| p.terms[0].kernel_config(cfg))
+            .map(|p| {
+                feed_engine.configure_for_term(&p.terms[0]);
+                feed_engine.config()
+            })
             .unwrap_or(cfg);
 
         let (two, _, _) = common::time_median(reps, || {
             let _ = contract::mttkrp_two_step(&x, &slots, 0).unwrap();
         });
         let (fused1, _, _) = common::time_median(reps, || {
-            let _ = contract::mttkrp_with(&serial, &pool, &x, &slots, 0).unwrap();
+            let _ = contract::mttkrp_with(&serial, &scratch, &x, &slots, 0).unwrap();
         });
         let (fused, _, _) = common::time_median(reps, || {
-            let _ = contract::mttkrp_with(&cfg, &pool, &x, &slots, 0).unwrap();
+            let _ = contract::mttkrp_with(&cfg, &scratch, &x, &slots, 0).unwrap();
         });
         let (fused_soap, _, _) = common::time_median(reps, || {
-            let _ = contract::mttkrp_with(&soap_cfg, &pool, &x, &slots, 0).unwrap();
+            let _ = contract::mttkrp_with(&soap_cfg, &scratch, &x, &slots, 0).unwrap();
         });
         println!(
             "mttkrp {shape}: two-step {} | fused-1t {} ({:.2}x) | fused-{}t {} ({:.2} GF/s, {:.2}x) | soap-tiles {}",
@@ -179,7 +197,12 @@ fn main() {
     }
 
     // --- transposition: serial vs threaded -----------------------------------
-    for dims in [[256usize, 256, 16], [64, 64, 64], [512, 384, 4]] {
+    let permute_dims: &[[usize; 3]] = if tiny {
+        &[[64, 64, 64]]
+    } else {
+        &[[256, 256, 16], [64, 64, 64], [512, 384, 4]]
+    };
+    for &dims in permute_dims {
         let t = Tensor::random(&dims, 6);
         let bytes = (t.len() * 8) as f64; // read + write
         let shape = format!("{dims:?} perm [2,1,0]");
@@ -203,7 +226,8 @@ fn main() {
     }
 
     // --- redistribution planning: must not scale with element count ----------
-    for n in [1usize << 12, 1 << 16, 1 << 20] {
+    let plan_rows: &[usize] = if tiny { &[1 << 12] } else { &[1 << 12, 1 << 16, 1 << 20] };
+    for &n in plan_rows {
         let ga = ProcessGrid::new(&[8, 8]).unwrap();
         let gb = ProcessGrid::new(&[16, 4]).unwrap();
         let src = TensorDist::new(&[n, 64], &ga, &[0, 1]).unwrap();
@@ -216,9 +240,9 @@ fn main() {
         record(&mut records, "redist_plan", &format!("rows={n} p=64"), med, None, None);
     }
 
-    // --- redistribution execution (data movement) -----------------------------
+    // --- redistribution execution (data movement, recycled dests) -------------
     {
-        let n = 1usize << 20;
+        let n = if tiny { 1usize << 14 } else { 1usize << 20 };
         let ga = ProcessGrid::new(&[8]).unwrap();
         let gb = ProcessGrid::new(&[4]).unwrap();
         let src = TensorDist::new(&[n], &ga, &[0]).unwrap();
@@ -231,8 +255,13 @@ fn main() {
                 global.block(&off, &src.local_dims())
             })
             .collect();
+        // Steady-state data path: execute_into over recycled destination
+        // buffers (what Machine::redistribute does across runs) — pure
+        // box movement, no allocation in the timed region.
+        let mut dst_bufs: Vec<Tensor> =
+            (0..gb.size()).map(|_| Tensor::zeros(&dst.local_dims())).collect();
         let (med, _, _) = common::time_median(reps, || {
-            let _ = redist::execute(&rp, &src, &dst, &bufs).unwrap();
+            redist::execute_into(&rp, &bufs, &mut dst_bufs);
         });
         let gbs = (n * 4) as f64 / med / 1e9;
         println!(
@@ -240,6 +269,37 @@ fn main() {
             common::fmt_s(med)
         );
         record(&mut records, "redist_execute", &format!("{n} f32 8->4"), med, None, None);
+    }
+
+    // --- parallel-region dispatch: persistent pool vs per-step spawn ----------
+    {
+        let threads = cfg.threads.max(2).min(8);
+        let regions = 64usize;
+        let sink = AtomicU64::new(0);
+        let tiny_region = |t: usize| {
+            sink.fetch_add(t as u64 + 1, Ordering::Relaxed);
+        };
+        // Warm the pool so the measurement sees steady state, not spawn.
+        pool::global().run(threads, 16, &tiny_region);
+        let (pooled, _, _) = common::time_median(reps, || {
+            for _ in 0..regions {
+                pool::global().run(threads, 16, &tiny_region);
+            }
+        });
+        let (spawned, _, _) = common::time_median(reps, || {
+            for _ in 0..regions {
+                pool::run_scoped(threads, 16, &tiny_region);
+            }
+        });
+        println!(
+            "dispatch {regions} regions x 16 tasks ({threads}t): pool {} | spawn {} ({:.2}x)",
+            common::fmt_s(pooled),
+            common::fmt_s(spawned),
+            spawned / pooled
+        );
+        let shape = format!("{regions}x16 tasks {threads}t");
+        record(&mut records, "spawn_dispatch", &shape, spawned, None, None);
+        record(&mut records, "pool_dispatch", &shape, pooled, None, Some(spawned / pooled));
     }
 
     // --- plan construction (SOAP + grids + moves) ------------------------------
@@ -255,6 +315,73 @@ fn main() {
         });
         println!("plan(worked example, P=64): {}", common::fmt_s(med));
         record(&mut records, "plan_worked_example", "P=64", med, None, None);
+    }
+
+    // --- coordinator steady state: persistent runtime vs per-step spawn -------
+    //
+    // A multi-step plan (forced two-term split => staging + local compute
+    // + redistribution + allreduce per run).  Baseline reconstructs the
+    // PR 1 runtime: spawn-per-macro-step dispatch and a fresh engine +
+    // coordinator per run (cold scratch pool, cold machine store, every
+    // destination buffer allocated).  Steady state is the persistent
+    // runtime: pool dispatch, warm scratch, recycled store.
+    {
+        let n = if tiny { 12 } else { 48 };
+        let r = 24usize;
+        let spec = EinsumSpec::parse(
+            "ijk,ja,ka,al->il",
+            &[vec![n, n, n], vec![n, r], vec![n, r], vec![r, n]],
+        )
+        .unwrap();
+        let pcfg = PlannerConfig { s_elements: 64.0, ..Default::default() };
+        let pl = plan(&spec, 8, &pcfg).unwrap();
+        let inputs: Vec<Tensor> = vec![
+            Tensor::random(&[n, n, n], 21),
+            Tensor::random(&[n, r], 22),
+            Tensor::random(&[n, r], 23),
+            Tensor::random(&[r, n], 24),
+        ];
+        let shape = format!("{n}^3 r{r} P=8 terms={}", pl.terms.len());
+
+        pool::set_spawn_baseline(true);
+        let (cold, _, _) = common::time_median(reps, || {
+            let engine = KernelEngine::native_with(cfg);
+            let coord = Coordinator::new(&engine, NetworkModel::aries());
+            let _ = coord.run(&pl, &inputs).unwrap();
+        });
+        pool::set_spawn_baseline(false);
+
+        let engine = KernelEngine::native_with(cfg);
+        let coord = Coordinator::new(&engine, NetworkModel::aries());
+        for _ in 0..2 {
+            let _ = coord.run(&pl, &inputs).unwrap();
+        }
+        let warm = (engine.scratch_stats().allocs, coord.machine_stats().dest_allocs);
+        let (steady, _, _) = common::time_median(reps, || {
+            let _ = coord.run(&pl, &inputs).unwrap();
+        });
+        let after = (engine.scratch_stats().allocs, coord.machine_stats().dest_allocs);
+        // Staging/redistribution destinations must never re-allocate in
+        // steady state (deterministic invariant, also pinned by tests);
+        // scratch allocs are reported (the high-water mark can still be
+        // reached during timed runs when worker overlap first peaks).
+        assert_eq!(after.1, warm.1, "steady-state coordinator re-allocated destinations");
+        println!(
+            "coordinator {shape}: cold+spawn {} | steady {} ({:.2}x) | scratch allocs +{}",
+            common::fmt_s(cold),
+            common::fmt_s(steady),
+            cold / steady,
+            after.0 - warm.0
+        );
+        record(&mut records, "coordinator_cold_start", &shape, cold, None, None);
+        record(
+            &mut records,
+            "coordinator_steady_state",
+            &shape,
+            steady,
+            None,
+            Some(cold / steady),
+        );
     }
 
     // --- machine-readable trajectory ------------------------------------------

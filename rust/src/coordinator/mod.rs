@@ -14,12 +14,24 @@
 //! Numerics are exact (real bytes move between rank buffers); time is
 //! measured compute + α–β-modeled communication, reported per term for
 //! the Fig. 5/6 blue/pink split.
+//!
+//! The coordinator holds its [`Machine`] **across runs**: repeated
+//! executions of a plan (CP-ALS sweeps, benches) recycle every staging
+//! and redistribution destination buffer from the previous run, so the
+//! steady state performs zero staging/redistribution allocations
+//! ([`Machine::store_stats`] counters, asserted in tests) on top of the
+//! engine's zero packing/fold allocations.  Each term also reconfigures
+//! the [`KernelEngine`] with its SOAP-derived tile sizes
+//! ([`crate::planner::TermPlan::kernel_config`] via
+//! [`KernelEngine::configure_for_term`]) — previously opt-in in benches.
+
+use std::cell::RefCell;
 
 use crate::error::{Error, Result};
 use crate::planner::{LocalKernel, Plan};
 use crate::runtime::KernelEngine;
 use crate::sim::collectives::reduction_groups;
-use crate::sim::{AccelModel, CommStats, Machine, NetworkModel, TimeBreakdown};
+use crate::sim::{AccelModel, CommStats, Machine, NetworkModel, StoreStats, TimeBreakdown};
 use crate::tensor::{contract, Tensor};
 
 /// Per-term execution statistics.
@@ -68,21 +80,42 @@ impl RunReport {
     }
 }
 
-/// Executes plans against a kernel engine (PJRT or native).
+/// Executes plans against a kernel engine (PJRT or native), holding a
+/// persistent [`Machine`] so steady-state reruns recycle every staging
+/// and redistribution destination buffer.
 pub struct Coordinator<'e> {
     engine: &'e KernelEngine,
     network: NetworkModel,
+    /// The simulated machine, kept across `run` calls (rebuilt only when
+    /// the rank count changes).  Interior mutability keeps `run(&self)`
+    /// so long-lived coordinators (CP-ALS loops, benches) need no
+    /// exclusive borrow.
+    machine: RefCell<Option<Machine>>,
 }
 
 impl<'e> Coordinator<'e> {
     pub fn new(engine: &'e KernelEngine, network: NetworkModel) -> Self {
-        Coordinator { engine, network }
+        Coordinator { engine, network, machine: RefCell::new(None) }
+    }
+
+    /// Buffer-recycling counters of the persistent machine (defaults
+    /// until the first run).  Steady-state invariant: `dest_allocs`
+    /// stops growing after the first execution of a plan.
+    pub fn machine_stats(&self) -> StoreStats {
+        self.machine.borrow().as_ref().map(|m| m.store_stats()).unwrap_or_default()
     }
 
     /// Run `plan` on global input tensors (one per program operand, in
     /// einsum order).  Initial distribution is not charged (the paper's
     /// weak-scaling timings start from distributed data).
     pub fn run(&self, plan: &Plan, inputs: &[Tensor]) -> Result<RunReport> {
+        let report = self.run_inner(plan, inputs);
+        // Per-term overrides must not leak past the run.
+        self.engine.reset_config();
+        report
+    }
+
+    fn run_inner(&self, plan: &Plan, inputs: &[Tensor]) -> Result<RunReport> {
         if inputs.len() != plan.path.n_inputs {
             return Err(Error::plan(format!(
                 "plan needs {} inputs, got {}",
@@ -101,27 +134,36 @@ impl<'e> Coordinator<'e> {
             }
         }
 
-        let mut machine = Machine::new(plan.p, self.network);
+        // Reuse the persistent machine (and its store) when the rank
+        // count matches; only the accounting is reset per run.
+        let mut machine_slot = self.machine.borrow_mut();
+        if !matches!(machine_slot.as_ref(), Some(m) if m.ranks() == plan.p) {
+            *machine_slot = Some(Machine::new(plan.p, self.network));
+        }
+        let machine = machine_slot.as_mut().unwrap();
+        machine.begin_run();
         let mut per_term: Vec<TermStats> = Vec::new();
+        // Every store name this run touches; anything else is a stale
+        // buffer set from a previously-run plan and is pruned at the end
+        // (the persistent store must not grow across plan switches).
+        let mut live_names: std::collections::BTreeSet<String> = std::collections::BTreeSet::new();
 
         for (ti, term) in plan.terms.iter().enumerate() {
             let mut stats = TermStats { name: term.name.clone(), ..Default::default() };
             let comm_before = machine.time.comm;
+            // Retarget the engine's cache blocking to this term's
+            // SOAP-derived tiles (§IV: the local kernel blocks along the
+            // same proportions the I/O analysis assumed).
+            self.engine.configure_for_term(term);
 
             // --- stage inputs -------------------------------------------------
             let mut in_names: Vec<String> = Vec::with_capacity(term.inputs.len());
             for (slot, tin) in term.inputs.iter().enumerate() {
                 let name = format!("t{}@{}", tin.id, term.name);
                 if tin.id < plan.path.n_inputs {
-                    // Program input: scatter blocks (uncharged staging).
-                    let global = &inputs[tin.id];
-                    let bufs: Vec<Tensor> = (0..plan.p)
-                        .map(|r| {
-                            let (off, _) = tin.dist.block_for_rank(r);
-                            global.block(&off, &tin.dist.local_dims())
-                        })
-                        .collect();
-                    machine.put(&name, bufs)?;
+                    // Program input: scatter blocks into recycled store
+                    // buffers (uncharged staging).
+                    machine.stage_blocks(&name, &inputs[tin.id], &tin.dist)?;
                 } else {
                     // Intermediate: redistribute from the producing term.
                     let mv = plan
@@ -140,11 +182,13 @@ impl<'e> Coordinator<'e> {
                 }
                 stats.local_in_bytes +=
                     tin.dist.local_dims().iter().product::<usize>() * 4;
+                live_names.insert(name.clone());
                 in_names.push(name);
             }
 
             // --- local compute ------------------------------------------------
             let out_name = format!("t{}@{}", term.output_id, term.name);
+            live_names.insert(out_name.clone());
             let engine = self.engine;
             match &term.kernel {
                 LocalKernel::Mttkrp { x_input, mode, factor_inputs } => {
@@ -266,6 +310,11 @@ impl<'e> Coordinator<'e> {
             per_term.push(stats);
         }
 
+        // Prune buffer sets a previous plan staged under names this run
+        // never touched (keeps the persistent store bounded by the
+        // current plan's footprint).
+        machine.retain_tensors(|n| live_names.contains(n));
+
         // --- gather the result ------------------------------------------------
         let last = plan.terms.last().ok_or_else(|| Error::plan("empty plan"))?;
         let out_name = format!("t{}@{}", last.output_id, last.name);
@@ -298,7 +347,7 @@ impl<'e> Coordinator<'e> {
         Ok(RunReport {
             output,
             time: machine.time,
-            comm: machine.comm,
+            comm: machine.comm.clone(),
             per_term,
         })
     }
@@ -584,6 +633,58 @@ mod tests {
             "steady-state coordinator steps allocated scratch ({warm:?} -> {after:?})"
         );
         assert!(after.takes > warm.takes, "steps must route buffers through the pool");
+    }
+
+    #[test]
+    fn steady_state_coordinator_is_allocation_free() {
+        // The tentpole invariant: across consecutive runs of the same
+        // multi-step plan, the engine's scratch pool (packing/fold) AND
+        // the persistent machine's staging/redistribution destinations
+        // stop allocating, and the per-term kernel-config override is
+        // restored after every run.
+        let spec = EinsumSpec::parse(
+            "ijk,ja,ka,al->il",
+            &[vec![16, 16, 16], vec![16, 8], vec![16, 8], vec![8, 16]],
+        )
+        .unwrap();
+        // A small analysis S forces the two-term [MTTKRP, MM] split, so
+        // the plan includes an inter-term redistribution.
+        let cfg = PlannerConfig { s_elements: 64.0, ..Default::default() };
+        let pl = plan(&spec, 8, &cfg).unwrap();
+        assert!(!pl.moves.is_empty(), "want a multi-step plan with redistribution");
+        let inputs: Vec<Tensor> = vec![
+            Tensor::random(&[16, 16, 16], 1),
+            Tensor::random(&[16, 8], 2),
+            Tensor::random(&[16, 8], 3),
+            Tensor::random(&[8, 16], 4),
+        ];
+        let engine = KernelEngine::native();
+        let base = engine.config();
+        let coord = Coordinator::new(&engine, NetworkModel::aries());
+        let first = coord.run(&pl, &inputs).unwrap();
+        coord.run(&pl, &inputs).unwrap();
+        let warm_scratch = engine.scratch_stats();
+        let warm_store = coord.machine_stats();
+        assert!(warm_store.dest_allocs > 0, "first run must have allocated destinations");
+        for _ in 0..2 {
+            let rep = coord.run(&pl, &inputs).unwrap();
+            assert!(rep.output.allclose(&first.output, 0.0, 0.0), "reruns must be bitwise stable");
+        }
+        let after_scratch = engine.scratch_stats();
+        let after_store = coord.machine_stats();
+        assert_eq!(
+            after_scratch.allocs, warm_scratch.allocs,
+            "steady-state packing/fold allocated ({warm_scratch:?} -> {after_scratch:?})"
+        );
+        assert_eq!(
+            after_store.dest_allocs, warm_store.dest_allocs,
+            "steady-state staging/redistribution allocated ({warm_store:?} -> {after_store:?})"
+        );
+        assert!(
+            after_store.dest_reuses > warm_store.dest_reuses,
+            "reruns must recycle store buffers"
+        );
+        assert_eq!(engine.config(), base, "per-term config override must be reset");
     }
 
     #[test]

@@ -36,10 +36,10 @@
 //! - **Microkernel**: an 8×8 register-tiled accumulator block carried
 //!   across the full `KC` reduction; no data-dependent branches, so the
 //!   compiler auto-vectorizes the FMA loop.
-//! - **Threading**: the M macro-loop (and the transpose / fused-MTTKRP
-//!   unit spaces) split across `std::thread::scope` workers operating on
-//!   disjoint output bands.  Thread count honors `RAYON_NUM_THREADS` /
-//!   `DEINSUM_NUM_THREADS`, defaulting to all cores.
+//! - **Threading**: the macro loops run on the persistent runtime (see
+//!   below) over disjoint output bands/tiles.  Thread count honors
+//!   `RAYON_NUM_THREADS` / `DEINSUM_NUM_THREADS`, defaulting to all
+//!   cores.
 //! - **Scratch reuse**: every packing/fold buffer comes from a
 //!   size-classed [`ScratchPool`]; steady-state coordinator steps perform
 //!   zero heap allocations for intermediates (the pool's `allocs`
@@ -47,8 +47,40 @@
 //!
 //! Knobs live in [`KernelConfig`] (`mc`/`kc`/`nc`/`threads`, env
 //! overrides `DEINSUM_MC`/`KC`/`NC`), which the PJRT/native dispatcher
-//! ([`runtime::KernelEngine`]) carries and the planner can derive from
-//! SOAP-optimal tile sizes via [`KernelConfig::from_tiles`].
+//! ([`runtime::KernelEngine`]) carries and the coordinator retargets per
+//! term from SOAP-optimal tile sizes ([`KernelConfig::from_tiles`] via
+//! `TermPlan::kernel_config`).
+//!
+//! ## The persistent runtime
+//!
+//! Every parallel macro loop dispatches to a crate-wide **persistent
+//! work-stealing pool** ([`runtime::pool`]) instead of spawning threads
+//! per macro step: workers are created lazily, park on a condition
+//! variable between jobs, and claim tasks from per-participant deques
+//! with stealing, so ragged tiles rebalance and a parallel region costs
+//! a wakeup rather than a spawn.  On top of it:
+//!
+//! - the packed GEMM packs each `KC×NC` B panel **once** into shared
+//!   scratch (a cooperative pool region; the job-completion protocol is
+//!   the publish/consume fence) and fans out stealable A-panel ×
+//!   macro-tile tasks, splitting macro tiles column-wise when M alone
+//!   cannot feed every worker — wide-N and skinny shapes both
+//!   load-balance;
+//! - the fused MTTKRP forms its KC×R Khatri-Rao tile once per column
+//!   tile (its "B panel") and contracts stealable row bands against it;
+//! - the coordinator holds its simulated [`sim::Machine`] across runs:
+//!   staging and redistribution destinations are recycled from the
+//!   previous run (`redist::execute_into`, [`sim::StoreStats`]
+//!   counters), the allreduce reduces in place, and each term
+//!   reconfigures the engine with its SOAP-derived tiles automatically.
+//!
+//! Per-element reduction orders are fixed by the serial panel walk, so
+//! results are **bitwise identical across thread counts** (asserted in
+//! tests).  Steady-state invariant, counter-asserted end to end: zero
+//! packing/fold/staging/redistribution allocations across repeated
+//! coordinator runs.  `cargo bench --bench hotpath` tracks the win as
+//! `coordinator_steady_state` / `pool_dispatch` vs the retained
+//! spawn-per-step baselines in `BENCH_hotpath.json`.
 
 pub mod baseline;
 pub mod bench_support;

@@ -117,6 +117,11 @@ impl TermPlan {
     /// rank-like dimension in MTTKRP terms), `kc` from the tightest
     /// contracted-index tile.  Indices without a tile keep `base`'s
     /// blocks; the thread count is always `base`'s.
+    ///
+    /// The coordinator feeds this automatically into the engine before
+    /// each term's local compute
+    /// ([`crate::runtime::KernelEngine::configure_for_term`]); callers
+    /// only need it directly for ad-hoc kernel experiments.
     pub fn kernel_config(&self, base: KernelConfig) -> KernelConfig {
         let tile = |c: char| self.bound.tiles.get(&c).copied();
         let tm = self.output_indices.first().copied().and_then(tile);

@@ -184,11 +184,17 @@ pub fn plan(src: &TensorDist, dst: &TensorDist) -> Result<RedistPlan> {
     Ok(RedistPlan { messages, remote_volume, local_volume })
 }
 
-/// Execute a redistribution plan on per-rank local buffers (used by the
-/// simulator's data path and by tests).  `src_bufs[r]` holds rank `r`'s
-/// padded local block under `src`; returns the per-rank blocks under
-/// `dst`.  Each message box moves with direct strided copies
-/// ([`Tensor::copy_box_from`]) — no temporary block tensor per message.
+/// Execute a redistribution plan on per-rank local buffers, allocating a
+/// fresh zeroed destination tensor per rank.  Deprecated: it was the one
+/// step of the coordinator hot path that re-allocated its destinations
+/// on every run.  The simulator now holds a persistent
+/// [`crate::sim::Machine`] whose [`redistribute`](crate::sim::Machine::redistribute)
+/// recycles the previous run's buffers through [`execute_into`]; call
+/// that directly with caller-owned destinations instead.
+#[deprecated(
+    since = "0.3.0",
+    note = "allocates fresh destinations per call; use execute_into with recycled buffers"
+)]
 pub fn execute(
     rp: &RedistPlan,
     src: &TensorDist,
@@ -205,12 +211,13 @@ pub fn execute(
     Ok(out)
 }
 
-/// Core of [`execute`]: move every message box into caller-owned
-/// destination buffers (zeroed, one per rank, shaped `dst.local_dims()`).
-/// The simulator's [`crate::sim::Machine::redistribute`] goes through
-/// [`execute`] today because its destination tensors become owned store
-/// entries; recycling them across *runs* needs a persistent machine (see
-/// ROADMAP "Local kernel performance" open items).
+/// Move every message box into caller-owned destination buffers (one per
+/// rank, shaped `dst.local_dims()`, zeroed by the caller — message boxes
+/// only overwrite the regions they cover).  Each box moves with direct
+/// strided copies ([`Tensor::copy_box_from`]) — no temporary block
+/// tensor per message, and no allocation at all: this is the
+/// steady-state redistribution data path under
+/// [`crate::sim::Machine::redistribute`].
 pub fn execute_into(rp: &RedistPlan, src_bufs: &[Tensor], out: &mut [Tensor]) {
     for m in &rp.messages {
         out[m.dst].copy_box_from(&src_bufs[m.src], &m.src_off, &m.dst_off, &m.size);
@@ -275,6 +282,23 @@ mod tests {
         }
     }
 
+    /// Test harness over [`execute_into`]: allocate zeroed destinations
+    /// (sized by the larger grid, as the deprecated `execute` did) and
+    /// move the boxes.
+    fn run_execute(
+        rp: &RedistPlan,
+        src: &TensorDist,
+        dst: &TensorDist,
+        src_bufs: &[Tensor],
+    ) -> Vec<Tensor> {
+        assert!(src_bufs.len() >= src.grid.size());
+        let p = src.grid.size().max(dst.grid.size());
+        let mut out: Vec<Tensor> =
+            (0..p).map(|_| Tensor::zeros(&dst.local_dims())).collect();
+        execute_into(rp, src_bufs, &mut out);
+        out
+    }
+
     fn fill_dist(td: &TensorDist, global: &Tensor) -> Vec<Tensor> {
         (0..td.grid.size())
             .map(|r| {
@@ -303,7 +327,7 @@ mod tests {
         let global = Tensor::random(&[16], 5);
         let src_bufs = fill_dist(&src, &global);
         let rp = plan(&src, &dst).unwrap();
-        let dst_bufs = execute(&rp, &src, &dst, &src_bufs).unwrap();
+        let dst_bufs = run_execute(&rp, &src, &dst, &src_bufs);
         check_dist(&dst, &dst_bufs, &global);
     }
 
@@ -317,7 +341,7 @@ mod tests {
         let global = Tensor::random(&[12, 12], 6);
         let src_bufs = fill_dist(&src, &global);
         let rp = plan(&src, &dst).unwrap();
-        let dst_bufs = execute(&rp, &src, &dst, &src_bufs).unwrap();
+        let dst_bufs = run_execute(&rp, &src, &dst, &src_bufs);
         check_dist(&dst, &dst_bufs, &global);
     }
 
@@ -330,7 +354,7 @@ mod tests {
         let global = Tensor::random(&[10], 7);
         let src_bufs = fill_dist(&src, &global);
         let rp = plan(&src, &dst).unwrap();
-        let dst_bufs = execute(&rp, &src, &dst, &src_bufs).unwrap();
+        let dst_bufs = run_execute(&rp, &src, &dst, &src_bufs);
         for r in 0..4 {
             assert!(dst_bufs[r].allclose(&global, 0.0, 0.0), "rank {r}");
         }
@@ -345,7 +369,7 @@ mod tests {
         let global = Tensor::random(&[8, 8], 8);
         let src_bufs: Vec<Tensor> = (0..4).map(|_| global.clone()).collect();
         let rp = plan(&src, &dst).unwrap();
-        let dst_bufs = execute(&rp, &src, &dst, &src_bufs).unwrap();
+        let dst_bufs = run_execute(&rp, &src, &dst, &src_bufs);
         check_dist(&dst, &dst_bufs, &global);
     }
 
@@ -361,7 +385,7 @@ mod tests {
         let src_bufs = fill_dist(&src, &global);
         let rp = plan(&src, &dst).unwrap();
         // dst rank count (2) < src rank count (3): execute sizes buffers by max grid
-        let dst_bufs = execute(&rp, &src, &dst, &src_bufs).unwrap();
+        let dst_bufs = run_execute(&rp, &src, &dst, &src_bufs);
         check_dist(&dst, &dst_bufs, &global);
     }
 

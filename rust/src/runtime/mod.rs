@@ -18,6 +18,7 @@
 //! `artifacts/` exists.
 
 pub mod json;
+pub mod pool;
 
 /// The PJRT C-API surface this module compiles against.  In the offline
 /// build it is a stub whose client constructor fails (native kernels then
@@ -25,12 +26,13 @@ pub mod json;
 #[path = "xla_shim.rs"]
 mod xla;
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
 use crate::error::{Error, Result};
+use crate::planner::TermPlan;
 use crate::tensor::kernel::{KernelConfig, ScratchPool, ScratchStats};
 use crate::tensor::{contract, Tensor};
 
@@ -266,14 +268,22 @@ pub enum Backend {
 /// [`KernelConfig`] (cache blocks + thread count, possibly SOAP-derived)
 /// and a [`ScratchPool`] reused across every step the engine serves, so
 /// steady-state local compute performs zero packing/fold allocations.
+///
+/// The active config is split in two: a `base_config` (the engine's
+/// installed blocks + thread count) and the `config` actually dispatched
+/// with, which the coordinator retargets per term from that term's
+/// SOAP-derived tile sizes ([`KernelEngine::configure_for_term`]) and
+/// restores after the run ([`KernelEngine::reset_config`]).
 pub struct KernelEngine {
     engine: Option<Engine>,
     backend: Backend,
     /// Max padded/real volume ratio before bucketing is considered
     /// wasteful and the native kernel is used instead.
     max_pad_ratio: f64,
-    /// Blocking/threading knobs for the native packed kernels.
-    config: KernelConfig,
+    /// Installed blocking/threading knobs (per-term derivation base).
+    base_config: KernelConfig,
+    /// The active knobs (base, or a per-term SOAP-derived override).
+    config: Cell<KernelConfig>,
     /// Packing + fold scratch, reused across steps.
     scratch: ScratchPool,
 }
@@ -286,11 +296,13 @@ impl KernelEngine {
 
     /// Native-only engine with explicit kernel configuration.
     pub fn native_with(config: KernelConfig) -> Self {
+        let config = config.normalized();
         KernelEngine {
             engine: None,
             backend: Backend::Native,
             max_pad_ratio: 1.0,
-            config: config.normalized(),
+            base_config: config,
+            config: Cell::new(config),
             scratch: ScratchPool::new(),
         }
     }
@@ -298,11 +310,13 @@ impl KernelEngine {
     /// PJRT-backed engine over an artifacts dir; falls back to native per
     /// op when no variant fits.
     pub fn pjrt(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let config = KernelConfig::from_env();
         Ok(KernelEngine {
             engine: Some(Engine::new(artifacts_dir)?),
             backend: Backend::Pjrt,
             max_pad_ratio: 1.7,
-            config: KernelConfig::from_env(),
+            base_config: config,
+            config: Cell::new(config),
             scratch: ScratchPool::new(),
         })
     }
@@ -311,15 +325,37 @@ impl KernelEngine {
         self.backend
     }
 
-    /// The native-kernel configuration this engine dispatches with.
+    /// The native-kernel configuration this engine currently dispatches
+    /// with (the base config, or a per-term override).
     pub fn config(&self) -> KernelConfig {
-        self.config
+        self.config.get()
     }
 
-    /// Replace the kernel configuration (e.g. with SOAP-derived tiles via
-    /// [`KernelConfig::from_tiles`]).
+    /// The installed base configuration per-term overrides derive from.
+    pub fn base_config(&self) -> KernelConfig {
+        self.base_config
+    }
+
+    /// Replace the base kernel configuration (e.g. with SOAP-derived
+    /// tiles via [`KernelConfig::from_tiles`]); also resets any per-term
+    /// override.
     pub fn set_config(&mut self, config: KernelConfig) {
-        self.config = config.normalized();
+        self.base_config = config.normalized();
+        self.config.set(self.base_config);
+    }
+
+    /// Retarget the native kernels to `term`'s SOAP-derived tile sizes
+    /// ([`TermPlan::kernel_config`]).  The coordinator calls this before
+    /// each term's local compute so every term runs with the cache
+    /// blocking its I/O analysis assumed; benches use it to measure the
+    /// same feed without reimplementing the derivation.
+    pub fn configure_for_term(&self, term: &TermPlan) {
+        self.config.set(term.kernel_config(self.base_config));
+    }
+
+    /// Drop any per-term override and dispatch with the base config.
+    pub fn reset_config(&self) {
+        self.config.set(self.base_config);
     }
 
     /// Scratch-pool counters (steady-state invariant: `allocs` flat).
@@ -416,7 +452,7 @@ impl KernelEngine {
                 engine.bump(|s| s.native += 1);
             }
         }
-        contract::gemm_with(&self.config, &self.scratch, a, b)
+        contract::gemm_with(&self.config.get(), &self.scratch, a, b)
     }
 
     /// Fused mode-`mode` MTTKRP. `factors` lists all `order` factor slots;
@@ -463,7 +499,7 @@ impl KernelEngine {
                 engine.bump(|s| s.native += 1);
             }
         }
-        contract::mttkrp_with(&self.config, &self.scratch, x, factors, mode)
+        contract::mttkrp_with(&self.config.get(), &self.scratch, x, factors, mode)
     }
 
     /// General binary einsum on the local tiles (the `Seq` kernel's
@@ -483,7 +519,7 @@ impl KernelEngine {
         if let Some(engine) = self.engine.as_ref() {
             engine.bump(|s| s.native += 1);
         }
-        contract::einsum2_with(&self.config, &self.scratch, x, x_idx, y, y_idx, out_idx)
+        contract::einsum2_with(&self.config.get(), &self.scratch, x, x_idx, y, y_idx, out_idx)
     }
 
     /// Materialized flat KRP (baseline two-step path): `(I0*I1, R)`.
@@ -599,6 +635,22 @@ mod tests {
         let got = e.gemm(&a, &b).unwrap();
         let want = contract::gemm(&a, &b).unwrap();
         assert!(got.allclose(&want, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn per_term_config_feed_and_reset() {
+        use crate::einsum::EinsumSpec;
+        use crate::planner::{plan, PlannerConfig};
+        let spec =
+            EinsumSpec::parse("ij,jk->ik", &[vec![4096, 4096], vec![4096, 4096]]).unwrap();
+        let p = plan(&spec, 8, &PlannerConfig::default()).unwrap();
+        let e = KernelEngine::native_with(KernelConfig::default().with_threads(3));
+        let base = e.base_config();
+        e.configure_for_term(&p.terms[0]);
+        assert_eq!(e.config(), p.terms[0].kernel_config(base));
+        assert_eq!(e.config().threads, 3, "thread count comes from the base config");
+        e.reset_config();
+        assert_eq!(e.config(), base);
     }
 
     #[test]

@@ -1,0 +1,528 @@
+//! Persistent work-stealing worker pool: the process-wide execution
+//! substrate under every parallel macro loop in the compute engine.
+//!
+//! PR 1 parallelized the packed GEMM, fused MTTKRP and HPTT-lite
+//! transpose with `std::thread::scope`, which respawns OS threads on
+//! *every* macro step — on a multi-term coordinator run that is hundreds
+//! of spawn/join cycles per plan execution.  This module replaces that
+//! with a crate-wide pool created lazily on first use and kept for the
+//! process lifetime (the DISTAL observation: a *persistent* mapping of
+//! computation onto machine resources is what sustains peak local
+//! throughput):
+//!
+//! - **Per-job slot deques.**  A parallel region ([`WorkerPool::run`])
+//!   becomes a [`Job`]: the task index space is split into one
+//!   contiguous run per participant, each guarded by an atomic claim
+//!   cursor.  A participant drains its own run front-to-back (cache
+//!   locality), then **steals** from the other runs by bumping their
+//!   cursors — ragged task costs rebalance without any task queue
+//!   allocation: the "deque" is `(cursor, end)`.
+//! - **Park/unpark idling.**  Idle workers park on a condition variable
+//!   and are unparked when a job is published; there is no spinning
+//!   between jobs, so an idle pool costs nothing.
+//! - **Caller participation.**  The submitting thread is always
+//!   participant 0 and can finish the whole job alone by stealing, so
+//!   nested `run` calls from inside a worker can never deadlock.
+//! - **Panic containment.**  A panicking task is caught, counted
+//!   finished, and re-raised from the submitter after the job drains
+//!   (the `thread::scope` semantics kernels had before); workers
+//!   survive to serve the next job.
+//! - **Zero steady-state allocation on the data path.**  Tasks carry no
+//!   boxed closures: a job holds one lifetime-erased `&dyn Fn(usize)`
+//!   (the caller blocks until completion, so the borrow is live for
+//!   every access) and fixed-size cursor arrays.  The only per-region
+//!   heap traffic is one `Arc<Job>` control block.
+//!
+//! Publish/consume across phases is by the job completion protocol: task
+//! effects (e.g. a cooperatively packed B panel) are released by each
+//! worker's `AcqRel` decrement of the outstanding-task counter and
+//! acquired by the submitter before `run` returns, so a subsequent job
+//! reads them safely.
+//!
+//! The pool grows on demand up to [`MAX_WORKERS`] − 1 threads: a request
+//! for `t` participants ensures `t − 1` workers exist, so explicit
+//! `KernelConfig::with_threads(8)` runs get real parallelism even when
+//! `available_parallelism` under-reports.  [`run_scoped`] retains the
+//! PR 1 spawn-per-region dispatch as a measurable baseline
+//! (`spawn_dispatch` in `BENCH_hotpath.json`), selectable process-wide
+//! with [`set_spawn_baseline`] so benches can reconstruct the old
+//! behavior end-to-end.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Maximum participants in one parallel region (caller + workers); also
+/// bounds the pool's worker-thread count.
+pub const MAX_WORKERS: usize = 64;
+
+/// One parallel region submitted to the pool.
+///
+/// Safety contract: the `&'static` on `work` is a lie told by
+/// [`WorkerPool::run`], which blocks until `unfinished` reaches zero —
+/// no worker touches `work` after `run` returns, so the erased borrow
+/// is live for every access.
+struct Job {
+    work: &'static (dyn Fn(usize) + Sync),
+    /// Participant slots this job admits (min(threads, tasks)).
+    n_slots: usize,
+    /// Slots handed out so far; slot 0 is reserved for the submitter.
+    joiners: AtomicUsize,
+    /// Per-slot claim cursor: the slot's private deque is
+    /// `cursors[s]..ends[s]`; stealing is a `fetch_add` on a foreign
+    /// cursor.
+    cursors: [AtomicUsize; MAX_WORKERS],
+    ends: [usize; MAX_WORKERS],
+    /// Tasks claimed but whose effects are not yet published.
+    unfinished: AtomicUsize,
+    /// First panic payload from any task; the submitter resumes the
+    /// unwind after waiting (matching `thread::scope` panic
+    /// propagation) and pool workers survive to serve the next job.
+    panic_payload: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+    /// Completion latch for the submitter.
+    done: Mutex<bool>,
+    done_cv: Condvar,
+}
+
+impl Job {
+    fn new(work: &'static (dyn Fn(usize) + Sync), n_tasks: usize, n_slots: usize) -> Job {
+        // The const is only an array-repeat initializer (each element is
+        // a fresh atomic, not a shared one).
+        #[allow(clippy::declare_interior_mutable_const)]
+        const ZERO: AtomicUsize = AtomicUsize::new(0);
+        let cursors = [ZERO; MAX_WORKERS];
+        let mut ends = [0usize; MAX_WORKERS];
+        let chunk = n_tasks.div_ceil(n_slots);
+        for s in 0..n_slots {
+            cursors[s].store((s * chunk).min(n_tasks), Ordering::Relaxed);
+            ends[s] = ((s + 1) * chunk).min(n_tasks);
+        }
+        Job {
+            work,
+            n_slots,
+            joiners: AtomicUsize::new(1), // slot 0 = submitter
+            cursors,
+            ends,
+            unfinished: AtomicUsize::new(n_tasks),
+            panic_payload: Mutex::new(None),
+            done: Mutex::new(false),
+            done_cv: Condvar::new(),
+        }
+    }
+
+    /// Any unclaimed task left in any slot's run?
+    fn has_claimable(&self) -> bool {
+        (0..self.n_slots).any(|s| self.cursors[s].load(Ordering::Relaxed) < self.ends[s])
+    }
+
+    /// Drain tasks as participant `slot`: own run first, then steal the
+    /// other runs.  Publishes completion when the last task finishes.
+    fn work_as(&self, slot: usize, counters: &PoolCounters) {
+        for off in 0..self.n_slots {
+            let victim = (slot + off) % self.n_slots;
+            loop {
+                let t = self.cursors[victim].fetch_add(1, Ordering::Relaxed);
+                if t >= self.ends[victim] {
+                    break;
+                }
+                if off != 0 {
+                    counters.steals.fetch_add(1, Ordering::Relaxed);
+                }
+                counters.tasks.fetch_add(1, Ordering::Relaxed);
+                // The guard counts the task finished even if `work`
+                // unwinds, so waiters never hang on a panicked task; the
+                // catch keeps pool workers alive across task panics and
+                // defers the panic to the submitter.  AssertUnwindSafe:
+                // a panicked region leaves its output half-written
+                // exactly as the old scoped-spawn dispatch did, and the
+                // re-raise below makes that state unobservable-by-
+                // accident.
+                let guard = FinishGuard { job: self };
+                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    (self.work)(t)
+                }));
+                // Record the payload BEFORE the guard publishes
+                // completion: if this was the job's last task, the
+                // submitter must observe it when it wakes.
+                if let Err(payload) = result {
+                    let mut slot = self.panic_payload.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(payload);
+                    }
+                }
+                drop(guard);
+            }
+        }
+    }
+
+    /// Mark one claimed task finished; the last one publishes completion.
+    /// `AcqRel` chains every participant's task effects into the final
+    /// decrement, which the submitter acquires through `done`'s mutex.
+    fn finish_one(&self) {
+        if self.unfinished.fetch_sub(1, Ordering::AcqRel) == 1 {
+            *self.done.lock().unwrap() = true;
+            self.done_cv.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut d = self.done.lock().unwrap();
+        while !*d {
+            d = self.done_cv.wait(d).unwrap();
+        }
+    }
+}
+
+/// Completion accounting that survives unwinding out of a task.
+struct FinishGuard<'a> {
+    job: &'a Job,
+}
+
+impl Drop for FinishGuard<'_> {
+    fn drop(&mut self) {
+        self.job.finish_one();
+    }
+}
+
+/// Blocks on job completion even when the submitter's own task panics:
+/// `run` must never unwind past the lifetime-erased closure while other
+/// workers can still touch it.
+struct WaitGuard<'a> {
+    job: &'a Job,
+}
+
+impl Drop for WaitGuard<'_> {
+    fn drop(&mut self) {
+        self.job.wait();
+    }
+}
+
+#[derive(Default)]
+struct PoolCounters {
+    jobs: AtomicU64,
+    tasks: AtomicU64,
+    steals: AtomicU64,
+}
+
+struct State {
+    /// Jobs with (potentially) unclaimed tasks, submission order.
+    jobs: Vec<Arc<Job>>,
+    /// Worker threads spawned so far (pool lifetime).
+    workers: usize,
+    /// Set by `WorkerPool::drop`: idle workers exit instead of parking,
+    /// so non-global pools don't leak threads.
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    work_cv: Condvar,
+    counters: PoolCounters,
+}
+
+/// Pool telemetry (cumulative since process start).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Parallel regions dispatched through the pool.
+    pub jobs: u64,
+    /// Tasks executed (by workers and submitters).
+    pub tasks: u64,
+    /// Tasks claimed from a foreign slot's run.
+    pub steals: u64,
+    /// Worker threads currently alive.
+    pub workers: usize,
+}
+
+/// The persistent worker pool.  Use the process-wide [`global`] handle;
+/// separate instances exist only for isolation in unit tests.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+}
+
+impl Default for WorkerPool {
+    fn default() -> Self {
+        WorkerPool::new()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // No `run` can be in flight (it borrows &self), so workers are
+        // idle or finishing their last tasks; tell them to exit instead
+        // of parking again.  The global pool is never dropped.
+        self.shared.state.lock().unwrap().shutdown = true;
+        self.shared.work_cv.notify_all();
+    }
+}
+
+impl WorkerPool {
+    /// An empty pool; workers are spawned lazily by [`run`](Self::run).
+    pub fn new() -> Self {
+        WorkerPool {
+            shared: Arc::new(Shared {
+                state: Mutex::new(State { jobs: Vec::new(), workers: 0, shutdown: false }),
+                work_cv: Condvar::new(),
+                counters: PoolCounters::default(),
+            }),
+        }
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        let workers = self.shared.state.lock().unwrap().workers;
+        PoolStats {
+            jobs: self.shared.counters.jobs.load(Ordering::Relaxed),
+            tasks: self.shared.counters.tasks.load(Ordering::Relaxed),
+            steals: self.shared.counters.steals.load(Ordering::Relaxed),
+            workers,
+        }
+    }
+
+    /// Execute `work(t)` for every `t in 0..n_tasks` on up to `threads`
+    /// participants (the calling thread plus pool workers) and return
+    /// when all tasks have finished.  Tasks must be independent; tasks
+    /// that write shared output must write disjoint regions.
+    ///
+    /// `threads <= 1` (or a single task) runs inline with no
+    /// synchronization at all, preserving the engine's serial paths.
+    pub fn run<F>(&self, threads: usize, n_tasks: usize, work: &F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if n_tasks == 0 {
+            return;
+        }
+        let threads = threads.max(1).min(n_tasks).min(MAX_WORKERS);
+        if threads <= 1 {
+            for t in 0..n_tasks {
+                work(t);
+            }
+            return;
+        }
+        if spawn_baseline() {
+            run_scoped(threads, n_tasks, work);
+            return;
+        }
+        self.shared.counters.jobs.fetch_add(1, Ordering::Relaxed);
+        let erased: &(dyn Fn(usize) + Sync) = work;
+        // SAFETY: `run` blocks on `job.wait()` below until every task
+        // has finished, so the erased borrow outlives all accesses.
+        let work_static: &'static (dyn Fn(usize) + Sync) =
+            unsafe { std::mem::transmute(erased) };
+        let job = Arc::new(Job::new(work_static, n_tasks, threads));
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            // Grow the worker set on demand (never shrinks: persistence
+            // is the point).
+            let want = (threads - 1).min(MAX_WORKERS - 1);
+            while st.workers < want {
+                let shared = self.shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("deinsum-pool-{}", st.workers))
+                    .spawn(move || worker_loop(shared))
+                    .expect("spawn pool worker");
+                st.workers += 1;
+            }
+            st.jobs.push(job.clone());
+        }
+        self.shared.work_cv.notify_all();
+        {
+            let _wait = WaitGuard { job: &job };
+            job.work_as(0, &self.shared.counters);
+            // _wait blocks here until every task is done.
+        }
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.jobs.retain(|j| !Arc::ptr_eq(j, &job));
+        }
+        // Re-raise a task panic with its original payload, like the
+        // scoped-spawn dispatch did.
+        if let Some(payload) = job.panic_payload.lock().unwrap().take() {
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let job: Arc<Job> = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                st.jobs.retain(|j| j.has_claimable());
+                if let Some(j) =
+                    st.jobs.iter().find(|j| j.joiners.load(Ordering::Relaxed) < j.n_slots)
+                {
+                    break j.clone();
+                }
+                if st.shutdown {
+                    return;
+                }
+                // Park until a new job is published.
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        let slot = job.joiners.fetch_add(1, Ordering::Relaxed);
+        if slot < job.n_slots {
+            job.work_as(slot, &shared.counters);
+        }
+        // Raced past the slot cap: loop and look for other work.
+    }
+}
+
+/// The process-wide pool behind every kernel macro loop.
+pub fn global() -> &'static WorkerPool {
+    static POOL: OnceLock<WorkerPool> = OnceLock::new();
+    POOL.get_or_init(WorkerPool::new)
+}
+
+static SPAWN_BASELINE: AtomicBool = AtomicBool::new(false);
+
+/// Route every subsequent [`WorkerPool::run`] through the retained
+/// spawn-per-region dispatch ([`run_scoped`]).  Bench-only knob for
+/// measuring the pool against the PR 1 baseline; not for production use.
+pub fn set_spawn_baseline(on: bool) {
+    SPAWN_BASELINE.store(on, Ordering::Relaxed);
+}
+
+fn spawn_baseline() -> bool {
+    SPAWN_BASELINE.load(Ordering::Relaxed)
+}
+
+/// The PR 1 dispatch, retained as a perf baseline: spawn scoped threads
+/// for this region only, static task partition, no stealing.
+pub fn run_scoped<F>(threads: usize, n_tasks: usize, work: &F)
+where
+    F: Fn(usize) + Sync,
+{
+    let threads = threads.max(1).min(n_tasks);
+    if threads <= 1 {
+        for t in 0..n_tasks {
+            work(t);
+        }
+        return;
+    }
+    let chunk = n_tasks.div_ceil(threads);
+    std::thread::scope(|s| {
+        let mut t0 = 0usize;
+        while t0 < n_tasks {
+            let t1 = (t0 + chunk).min(n_tasks);
+            s.spawn(move || {
+                for t in t0..t1 {
+                    work(t);
+                }
+            });
+            t0 = t1;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_every_task_exactly_once() {
+        let pool = WorkerPool::new();
+        for n_tasks in [1usize, 2, 7, 64, 257] {
+            let hits: Vec<AtomicU64> = (0..n_tasks).map(|_| AtomicU64::new(0)).collect();
+            pool.run(4, n_tasks, &|t| {
+                hits[t].fetch_add(1, Ordering::Relaxed);
+            });
+            for (t, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "task {t} of {n_tasks}");
+            }
+        }
+    }
+
+    #[test]
+    fn serial_path_runs_inline() {
+        let pool = WorkerPool::new();
+        let sum = AtomicU64::new(0);
+        pool.run(1, 100, &|t| {
+            sum.fetch_add(t as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 4950);
+        assert_eq!(pool.stats().jobs, 0, "threads=1 must not dispatch a job");
+        assert_eq!(pool.stats().workers, 0);
+    }
+
+    #[test]
+    fn workers_persist_across_jobs() {
+        let pool = WorkerPool::new();
+        let sink = AtomicU64::new(0);
+        for _ in 0..10 {
+            pool.run(3, 32, &|t| {
+                sink.fetch_add(t as u64 + 1, Ordering::Relaxed);
+            });
+        }
+        let s = pool.stats();
+        assert_eq!(s.jobs, 10);
+        assert_eq!(s.tasks, 320);
+        assert!(s.workers <= 2, "grew {} workers for 3 participants", s.workers);
+        assert_eq!(sink.load(Ordering::Relaxed), 10 * (32 * 33 / 2));
+    }
+
+    #[test]
+    fn ragged_tasks_rebalance_by_stealing() {
+        // One slot gets all the slow tasks; total still completes and
+        // the claim accounting stays exact.
+        let pool = WorkerPool::new();
+        let done = AtomicU64::new(0);
+        pool.run(4, 64, &|t| {
+            if t < 16 {
+                // slot 0's run is slow
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+            done.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(done.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn nested_runs_do_not_deadlock() {
+        let pool = global();
+        let total = AtomicU64::new(0);
+        pool.run(4, 8, &|_outer| {
+            // Nested region executed from inside a task: the submitter
+            // can always finish it alone by stealing.
+            let inner = AtomicU64::new(0);
+            pool.run(4, 8, &|t| {
+                inner.fetch_add(t as u64 + 1, Ordering::Relaxed);
+            });
+            total.fetch_add(inner.load(Ordering::Relaxed), Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 8 * 36);
+    }
+
+    #[test]
+    fn task_panic_propagates_and_pool_survives() {
+        let pool = WorkerPool::new();
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(4, 16, &|t| {
+                if t == 7 {
+                    panic!("boom");
+                }
+            });
+        }));
+        let err = res.expect_err("submitter must observe the task panic");
+        assert_eq!(
+            err.downcast_ref::<&str>(),
+            Some(&"boom"),
+            "original panic payload must be preserved"
+        );
+        // All workers survive; the pool stays fully functional.
+        let sum = AtomicU64::new(0);
+        pool.run(4, 32, &|t| {
+            sum.fetch_add(t as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 496);
+    }
+
+    #[test]
+    fn scoped_baseline_matches_pool() {
+        let a = AtomicU64::new(0);
+        run_scoped(4, 100, &|t| {
+            a.fetch_add(t as u64, Ordering::Relaxed);
+        });
+        assert_eq!(a.load(Ordering::Relaxed), 4950);
+    }
+}

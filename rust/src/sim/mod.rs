@@ -55,7 +55,26 @@ pub struct CommStats {
     pub allreduces: u64,
 }
 
+/// Store-buffer recycling counters.  A machine held across coordinator
+/// runs recycles every staging and redistribution destination buffer
+/// whose name and shape recur; in steady state `dest_allocs` is flat
+/// while `dest_reuses` keeps counting (asserted in tests — the
+/// coordinator-level analogue of [`crate::tensor::kernel::ScratchStats`]).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct StoreStats {
+    /// Destination tensors heap-allocated (first run, or shape change).
+    pub dest_allocs: u64,
+    /// Destination tensors recycled from the persistent store.
+    pub dest_reuses: u64,
+}
+
 /// The simulated machine: rank-local tensor stores + cost accounting.
+///
+/// The store persists across runs when the machine is held by a
+/// [`crate::coordinator::Coordinator`]; [`Machine::begin_run`] resets
+/// the per-run time/volume accounting without dropping buffers, so
+/// steady-state re-executions of a plan (CP-ALS sweeps, benches) reuse
+/// every staging/redistribution destination instead of reallocating.
 pub struct Machine {
     ranks: usize,
     net: NetworkModel,
@@ -63,6 +82,8 @@ pub struct Machine {
     store: HashMap<String, Vec<Tensor>>,
     /// Accumulated per-rank compute seconds (current step).
     step_compute: Vec<f64>,
+    /// Buffer-recycling counters (cumulative across runs).
+    store_stats: StoreStats,
     /// Totals.
     pub time: TimeBreakdown,
     pub comm: CommStats,
@@ -76,6 +97,7 @@ impl Machine {
             net,
             store: HashMap::new(),
             step_compute: vec![0.0; ranks],
+            store_stats: StoreStats::default(),
             time: TimeBreakdown::default(),
             comm: CommStats::default(),
         }
@@ -87,6 +109,61 @@ impl Machine {
 
     pub fn network(&self) -> &NetworkModel {
         &self.net
+    }
+
+    /// Buffer-recycling counters (cumulative across runs).
+    pub fn store_stats(&self) -> StoreStats {
+        self.store_stats
+    }
+
+    /// Start a fresh run on this machine: zero the time and volume
+    /// accounting, keep the store (and its recycling counters) so
+    /// repeated executions of the same plan allocate nothing.
+    pub fn begin_run(&mut self) {
+        self.time = TimeBreakdown::default();
+        self.comm = CommStats::default();
+        self.step_compute.iter_mut().for_each(|t| *t = 0.0);
+    }
+
+    /// Take `name`'s per-rank buffer set out of the store for in-place
+    /// recycling, but only if every buffer matches `dims` (otherwise the
+    /// caller must allocate; the counters record which happened).
+    fn recycle_bufs(&mut self, name: &str, dims: &[usize]) -> Option<Vec<Tensor>> {
+        match self.store.remove(name) {
+            Some(v) if v.len() == self.ranks && v.iter().all(|t| t.dims() == dims) => {
+                self.store_stats.dest_reuses += self.ranks as u64;
+                Some(v)
+            }
+            _ => {
+                self.store_stats.dest_allocs += self.ranks as u64;
+                None
+            }
+        }
+    }
+
+    /// Scatter `global` into per-rank blocks under `name` according to
+    /// `dist`, recycling the existing store buffers when shapes match
+    /// (the coordinator's input staging: zero allocations in steady
+    /// state).  Buffers are zeroed first so clipped edge blocks keep the
+    /// [`Tensor::block`] zero-pad semantics.
+    pub fn stage_blocks(
+        &mut self,
+        name: &str,
+        global: &Tensor,
+        dist: &crate::dist::TensorDist,
+    ) -> Result<()> {
+        let ldims = dist.local_dims();
+        let mut bufs = self
+            .recycle_bufs(name, &ldims)
+            .unwrap_or_else(|| (0..self.ranks).map(|_| Tensor::zeros(&ldims)).collect());
+        let zero_off = vec![0usize; ldims.len()];
+        for (r, buf) in bufs.iter_mut().enumerate() {
+            let (off, _) = dist.block_for_rank(r);
+            buf.data_mut().fill(0.0);
+            buf.copy_box_from(global, &off, &zero_off, &ldims);
+        }
+        self.store.insert(name.to_string(), bufs);
+        Ok(())
     }
 
     /// Install a per-rank tensor set under `name`.
@@ -121,6 +198,14 @@ impl Machine {
     /// Remove a tensor (free intermediates between terms).
     pub fn drop_tensor(&mut self, name: &str) {
         self.store.remove(name);
+    }
+
+    /// Drop every stored tensor set whose name fails `keep`.  The
+    /// coordinator prunes names that a run did not touch, so switching
+    /// plans on a persistent machine cannot accumulate stale buffer sets
+    /// (the current plan's buffers stay resident for recycling).
+    pub fn retain_tensors<F: FnMut(&str) -> bool>(&mut self, mut keep: F) {
+        self.store.retain(|name, _| keep(name));
     }
 
     /// Names currently stored (diagnostics).
@@ -162,8 +247,10 @@ impl Machine {
 
     /// Allreduce-sum `name` over each group of ranks (the §II-D partial
     /// result reduction over a sub-grid).  Data: every rank in a group
-    /// ends with the elementwise sum.  Time: tree allreduce on the
-    /// payload size, charged once (groups reduce concurrently).
+    /// ends with the elementwise sum — accumulated in place into the
+    /// group root and broadcast by `copy_from_slice`, so the reduction
+    /// allocates nothing.  Time: tree allreduce on the payload size,
+    /// charged once (groups reduce concurrently).
     pub fn allreduce_sum(&mut self, name: &str, groups: &[Vec<usize>]) -> Result<()> {
         let bufs = self
             .store
@@ -183,17 +270,14 @@ impl Machine {
                     )));
                 }
             }
-            // sum into g[0], then broadcast (data path).
-            let (first, rest) = {
-                let mut sum = bufs[g[0]].clone();
-                for &r in &g[1..] {
-                    sum.add_assign(&bufs[r]).unwrap();
-                }
-                (sum, g[1..].to_vec())
-            };
-            bufs[g[0]] = first.clone();
-            for r in rest {
-                bufs[r] = first.clone();
+            // Reduce into the group root, then broadcast — all in place.
+            for &r in &g[1..] {
+                let (root, src) = two_ranks_mut(bufs, g[0], r);
+                root.add_assign(src).unwrap();
+            }
+            for &r in &g[1..] {
+                let (dst, root) = two_ranks_mut(bufs, r, g[0]);
+                dst.data_mut().copy_from_slice(root.data());
             }
             let bytes = (len * 4) as f64;
             let t = self.net.allreduce_time(g.len(), bytes);
@@ -206,8 +290,11 @@ impl Machine {
     }
 
     /// Execute a redistribution plan: move real boxes between rank
-    /// buffers, charge the α–β model on the per-rank maximum send/recv
-    /// volume (links are parallel across rank pairs).
+    /// buffers through [`crate::redist::execute_into`], recycling the
+    /// destination buffer set from the persistent store when present
+    /// (steady-state runs perform zero redistribution allocations);
+    /// charge the α–β model on the per-rank maximum send/recv volume
+    /// (links are parallel across rank pairs).
     pub fn redistribute(
         &mut self,
         src_name: &str,
@@ -216,15 +303,44 @@ impl Machine {
         src_dist: &crate::dist::TensorDist,
         dst_dist: &crate::dist::TensorDist,
     ) -> Result<()> {
-        let src_bufs = self
-            .store
-            .get(src_name)
-            .ok_or_else(|| Error::plan(format!("redistribute: {src_name} missing")))?;
-        let dst_bufs = crate::redist::execute(rp, src_dist, dst_dist, src_bufs)?;
-        let mut dst_bufs = dst_bufs;
-        dst_bufs.truncate(self.ranks);
-        while dst_bufs.len() < self.ranks {
-            dst_bufs.push(Tensor::zeros(&dst_dist.local_dims()));
+        debug_assert_eq!(src_dist.extents, dst_dist.extents);
+        // Guard before touching the destination entry: recycling removes
+        // it from the store, which would destroy the source under
+        // aliasing or leave the store inconsistent on a missing source.
+        if src_name == dst_name {
+            return Err(Error::plan(format!(
+                "redistribute: in-place aliasing ({src_name}) unsupported"
+            )));
+        }
+        if !self.store.contains_key(src_name) {
+            return Err(Error::plan(format!("redistribute: {src_name} missing")));
+        }
+        if src_dist.grid.size() > self.ranks || dst_dist.grid.size() > self.ranks {
+            return Err(Error::plan(format!(
+                "redistribute: distribution grid ({} -> {} ranks) exceeds machine ({})",
+                src_dist.grid.size(),
+                dst_dist.grid.size(),
+                self.ranks
+            )));
+        }
+        let ldims = dst_dist.local_dims();
+        let mut dst_bufs = match self.recycle_bufs(dst_name, &ldims) {
+            Some(mut v) => {
+                // Message boxes overwrite the covered region; clear the
+                // rest (edge padding) to keep block semantics exact.
+                for t in &mut v {
+                    t.data_mut().fill(0.0);
+                }
+                v
+            }
+            None => (0..self.ranks).map(|_| Tensor::zeros(&ldims)).collect(),
+        };
+        {
+            let src_bufs = self
+                .store
+                .get(src_name)
+                .ok_or_else(|| Error::plan(format!("redistribute: {src_name} missing")))?;
+            crate::redist::execute_into(rp, src_bufs, &mut dst_bufs);
         }
         // Cost: per-rank send and recv byte totals; time = α·(max #msgs
         // on a rank) + β·(max bytes through any rank).
@@ -252,6 +368,18 @@ impl Machine {
         self.time.comm += self.net.p2p_time(max_msgs, max_bytes);
         self.store.insert(dst_name.to_string(), dst_bufs);
         Ok(())
+    }
+}
+
+/// Disjoint mutable/shared access to two rank buffers of one tensor set.
+fn two_ranks_mut(bufs: &mut [Tensor], target: usize, other: usize) -> (&mut Tensor, &Tensor) {
+    debug_assert_ne!(target, other);
+    if target < other {
+        let (lo, hi) = bufs.split_at_mut(other);
+        (&mut lo[target], &hi[0])
+    } else {
+        let (lo, hi) = bufs.split_at_mut(target);
+        (&mut hi[0], &lo[other])
     }
 }
 
@@ -328,6 +456,65 @@ mod tests {
         }
         assert!(m.comm.p2p_bytes > 0);
         assert!(m.time.comm > 0.0);
+    }
+
+    #[test]
+    fn stage_blocks_recycles_buffers() {
+        let g = ProcessGrid::new(&[2]).unwrap();
+        let dist = TensorDist::new(&[10], &g, &[0]).unwrap();
+        let mut m = machine(2);
+        let global = Tensor::random(&[10], 4);
+        m.stage_blocks("x", &global, &dist).unwrap();
+        let s1 = m.store_stats();
+        assert_eq!(s1.dest_allocs, 2, "first staging allocates per rank");
+        // Same name + shape: buffers recycled, contents refreshed.
+        let global2 = Tensor::random(&[10], 5);
+        m.stage_blocks("x", &global2, &dist).unwrap();
+        let s2 = m.store_stats();
+        assert_eq!(s2.dest_allocs, 2, "steady-state staging must not allocate");
+        assert_eq!(s2.dest_reuses, 2);
+        for r in 0..2 {
+            let (off, size) = dist.block_for_rank(r);
+            let want = global2.block(&off, &size);
+            let got = m.get("x", r).unwrap().block(&vec![0; 1], &size);
+            assert!(got.allclose(&want, 0.0, 0.0), "rank {r} stale after recycle");
+        }
+    }
+
+    #[test]
+    fn redistribute_recycles_destinations_across_runs() {
+        let g = ProcessGrid::new(&[2]).unwrap();
+        let src = TensorDist::new(&[8], &g, &[0]).unwrap();
+        let dst = TensorDist::replicated(&[8], &g).unwrap();
+        let rp = crate::redist::plan(&src, &dst).unwrap();
+        let mut m = machine(2);
+        let global = Tensor::random(&[8], 6);
+        m.stage_blocks("t", &global, &src).unwrap();
+        m.redistribute("t", "t2", &rp, &src, &dst).unwrap();
+        let warm = m.store_stats().dest_allocs;
+        for _ in 0..3 {
+            m.redistribute("t", "t2", &rp, &src, &dst).unwrap();
+        }
+        assert_eq!(
+            m.store_stats().dest_allocs,
+            warm,
+            "steady-state redistribution must not allocate destinations"
+        );
+        for r in 0..2 {
+            assert!(m.get("t2", r).unwrap().allclose(&global, 0.0, 0.0), "rank {r}");
+        }
+    }
+
+    #[test]
+    fn begin_run_resets_accounting_but_keeps_store() {
+        let mut m = machine(2);
+        m.put("x", vec![Tensor::zeros(&[2]), Tensor::zeros(&[2])]).unwrap();
+        m.allreduce_sum("x", &[vec![0, 1]]).unwrap();
+        assert!(m.time.comm > 0.0);
+        m.begin_run();
+        assert_eq!(m.time.comm, 0.0);
+        assert_eq!(m.comm.allreduces, 0);
+        assert!(m.get("x", 0).is_ok(), "store survives begin_run");
     }
 
     #[test]

@@ -208,12 +208,15 @@ pub fn mttkrp(x: &Tensor, factors: &[&Tensor], mode: usize) -> Result<Tensor> {
 /// buffers are fixed-size so the hot loop allocates nothing).
 const MAX_MTTKRP_ORDER: usize = 16;
 
-/// [`mttkrp`] with explicit engine config + scratch pool.  Threading
-/// splits the matricized tensor's rows into bands (disjoint output
-/// slices); each worker builds its own KC×R KRP tile — tiny and
-/// redundant, which beats synchronizing on a shared one — and contracts
-/// the matching column panel with the packed GEMM through a strided view
-/// (no panel gather).
+/// [`mttkrp`] with explicit engine config + scratch pool.  The macro
+/// loop mirrors the shared-packing GEMM: the KC×R KRP tile — this
+/// kernel's "B panel" — is formed **once** per column tile in shared
+/// pool scratch (PR 1 built it redundantly per worker), then the
+/// matricized tensor's rows are contracted against it as stealable
+/// pool-task bands (disjoint output slices), each through the strided
+/// packed GEMM with no panel gather.  The column-tile loop is serial and
+/// each row's reduction order is fixed by it, so results are bitwise
+/// identical across thread counts.
 pub fn mttkrp_with(
     cfg: &KernelConfig,
     pool: &ScratchPool,
@@ -278,82 +281,73 @@ pub fn mttkrp_with(
     let threads =
         if madds < kernel::PARALLEL_FLOP_CUTOFF { 1 } else { cfg.threads.min(n_rows) };
     let serial = cfg.serial();
-    kernel::parallel_row_bands(threads, n_rows, r, &mut out, |row0, rows, out_band| {
-        mttkrp_band(
-            serial,
-            pool,
-            &xm[row0 * n_cols..],
-            n_cols,
-            &fdata,
-            &rest_dims,
-            r,
-            rows,
-            out_band,
-            kc_tile,
-        );
-    });
-    Tensor::from_vec(&[n_rows, r], out)
-}
-
-/// One worker's fused MTTKRP over its row band: stream KC-column tiles,
-/// build the KRP tile rows on the fly (product of factor rows under the
-/// mixed-radix odometer), contract via the strided packed GEMM.
-fn mttkrp_band(
-    cfg: KernelConfig,
-    pool: &ScratchPool,
-    xm: &[f32],
-    n_cols: usize,
-    fdata: &[&[f32]],
-    rest_dims: &[usize],
-    r: usize,
-    rows: usize,
-    out: &mut [f32],
-    kc_tile: usize,
-) {
     let mut krp = pool.take(kc_tile * r);
-    let mut idx = [0usize; MAX_MTTKRP_ORDER];
-    let q_rest = rest_dims.len();
     let mut col0 = 0usize;
     while col0 < n_cols {
         let tile = kc_tile.min(n_cols - col0);
-        // Mixed-radix digits of col0 over rest_dims (last fastest).
-        let mut rem = col0;
-        for q in (0..q_rest).rev() {
-            idx[q] = rem % rest_dims[q];
-            rem /= rest_dims[q];
-        }
-        for t in 0..tile {
-            let dst = &mut krp[t * r..(t + 1) * r];
-            dst.copy_from_slice(&fdata[0][idx[0] * r..idx[0] * r + r]);
-            for q in 1..q_rest {
-                let row = &fdata[q][idx[q] * r..idx[q] * r + r];
-                for c in 0..r {
-                    dst[c] *= row[c];
-                }
-            }
-            for q in (0..q_rest).rev() {
-                idx[q] += 1;
-                if idx[q] < rest_dims[q] {
-                    break;
-                }
-                idx[q] = 0;
-            }
-        }
-        // out += X[:, col0..col0+tile] @ krp — strided A view, no gather.
-        kernel::gemm_strided(
-            &cfg,
-            pool,
-            &xm[col0..],
-            n_cols,
-            &krp[..tile * r],
-            r,
-            out,
-            r,
-            rows,
-            tile,
-            r,
-        );
+        // Shared KRP tile: formed once per column tile (the reduction
+        // order every row sees is fixed by this serial loop).
+        fill_krp_tile(&mut krp, col0, tile, &fdata, &rest_dims, r);
+        let krp_tile: &[f32] = &krp[..tile * r];
+        // out[rows, :] += X[rows, col0..col0+tile] @ krp — strided A
+        // view (no gather), disjoint output bands, stealable tasks.
+        kernel::parallel_row_bands(threads, n_rows, r, &mut out, |row0, rows, out_band| {
+            kernel::gemm_strided(
+                &serial,
+                pool,
+                &xm[row0 * n_cols + col0..],
+                n_cols,
+                krp_tile,
+                r,
+                out_band,
+                r,
+                rows,
+                tile,
+                r,
+            );
+        });
         col0 += tile;
+    }
+    drop(krp);
+    Tensor::from_vec(&[n_rows, r], out)
+}
+
+/// Form rows `col0..col0+tile` of the Khatri-Rao product into `krp`
+/// (product of factor rows under the mixed-radix odometer over
+/// `rest_dims`, last digit fastest).  The KRP never hits memory beyond
+/// this bounded tile.
+fn fill_krp_tile(
+    krp: &mut [f32],
+    col0: usize,
+    tile: usize,
+    fdata: &[&[f32]],
+    rest_dims: &[usize],
+    r: usize,
+) {
+    let q_rest = rest_dims.len();
+    let mut idx = [0usize; MAX_MTTKRP_ORDER];
+    // Mixed-radix digits of col0 over rest_dims (last fastest).
+    let mut rem = col0;
+    for q in (0..q_rest).rev() {
+        idx[q] = rem % rest_dims[q];
+        rem /= rest_dims[q];
+    }
+    for t in 0..tile {
+        let dst = &mut krp[t * r..(t + 1) * r];
+        dst.copy_from_slice(&fdata[0][idx[0] * r..idx[0] * r + r]);
+        for q in 1..q_rest {
+            let row = &fdata[q][idx[q] * r..idx[q] * r + r];
+            for c in 0..r {
+                dst[c] *= row[c];
+            }
+        }
+        for q in (0..q_rest).rev() {
+            idx[q] += 1;
+            if idx[q] < rest_dims[q] {
+                break;
+            }
+            idx[q] = 0;
+        }
     }
 }
 

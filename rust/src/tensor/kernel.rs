@@ -1,6 +1,6 @@
 //! The packed compute engine: BLIS-style cache blocking, an 8×8
-//! register-tiled microkernel, std::thread macro-loop parallelism, and a
-//! reusable scratch-buffer pool.
+//! register-tiled microkernel, persistent-pool macro-loop parallelism
+//! with shared B-panel packing, and a reusable scratch-buffer pool.
 //!
 //! Layout follows Goto/BLIS: `A` is packed into `MC×KC` panels of
 //! [`MR`]-row strips, `B` into `KC×NC` panels of [`NR`]-column strips, and
@@ -9,14 +9,27 @@
 //! auto-vectorizes it).  Edge tiles are zero-padded *inside the packed
 //! panels*, which keeps the microkernel branch-free for ragged shapes.
 //!
-//! Threading splits the M macro-loop into disjoint row bands (one
-//! `thread::scope` spawn per band; every band owns a disjoint `&mut`
-//! slice of C, so the parallelism is safe Rust with no atomics on the
-//! data path).  The thread count and block sizes come from a
-//! [`KernelConfig`], which the planner can derive from SOAP tile sizes
-//! ([`KernelConfig::from_tiles`]) and benches override from the
-//! environment (`RAYON_NUM_THREADS` / `DEINSUM_NUM_THREADS`,
-//! `DEINSUM_MC/KC/NC`).
+//! Parallelism runs on the persistent work-stealing pool
+//! ([`crate::runtime::pool`]) instead of per-step `thread::scope`
+//! spawns.  The GEMM macro loop keeps the `jc → pc` panel walk serial
+//! and, per `KC×NC` panel, dispatches two pool regions: a cooperative
+//! **shared pack** of the B panel (one copy in shared scratch, NR-strip
+//! tasks; the pool's job-completion protocol is the publish/consume
+//! fence), then a grid of **A-panel × macro-tile tasks** — each task
+//! packs its own `MC×KC` A panel and drives the microkernel over an
+//! `MC × NC/jr_split` column chunk.  The jr split widens the task grid
+//! when M is skinny, so wide-N and tall-M shapes both load-balance by
+//! stealing; B is packed exactly once per panel either way (PR 1 packed
+//! it redundantly per row band).  Thread count and block sizes come from
+//! a [`KernelConfig`], which the planner derives from SOAP tile sizes
+//! ([`KernelConfig::from_tiles`]) and the coordinator feeds per term;
+//! env overrides: `RAYON_NUM_THREADS` / `DEINSUM_NUM_THREADS`,
+//! `DEINSUM_MC/KC/NC`.
+//!
+//! Determinism: the per-element accumulation order (`jc`, `pc` ascending,
+//! full-`kcb` register accumulation) is independent of the thread count
+//! and of which worker claims a tile, so `threads = 1` and `threads = 8`
+//! produce bitwise-identical results (pinned by tests).
 //!
 //! All packing buffers come from a [`ScratchPool`]: a size-classed
 //! free-list behind a mutex, so steady-state kernel invocations perform
@@ -109,6 +122,18 @@ impl KernelConfig {
     /// Same blocks, explicit thread count.
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.threads = threads.max(1);
+        self
+    }
+
+    /// Shrink blocks to an `m × k × n` problem so packing scratch stays
+    /// proportional to the work (SOAP-derived configs can carry blocks
+    /// far larger than a small local tile).  Loop bounds — and therefore
+    /// results, bitwise — are unchanged: a block larger than an extent
+    /// already behaves as the extent.
+    pub(crate) fn clamp_to(mut self, m: usize, k: usize, n: usize) -> Self {
+        self.mc = self.mc.min(m.max(1).div_ceil(MR) * MR);
+        self.kc = self.kc.min(k.max(8));
+        self.nc = self.nc.min(n.max(1).div_ceil(NR) * NR);
         self
     }
 
@@ -298,57 +323,23 @@ pub fn gemm_strided(
     if m == 0 || n == 0 || k == 0 {
         return;
     }
-    let cfg = cfg.normalized();
-    let max_bands = m.div_ceil(MR);
+    let cfg = cfg.normalized().clamp_to(m, k, n);
     let threads = if m.saturating_mul(n).saturating_mul(k) < PARALLEL_FLOP_CUTOFF {
         1
     } else {
-        cfg.threads.min(max_bands)
+        cfg.threads
     };
-    parallel_row_bands(threads, m, ldc, c, |row0, rows, c_band| {
-        band_gemm(cfg, pool, &a[row0 * lda..], lda, b, ldb, c_band, ldc, rows, k, n);
-    });
-}
-
-/// Split `out` (`rows × row_elems`, row-major) into disjoint MR-aligned
-/// row bands and run `work(row0, band_rows, band_out)` on up to `threads`
-/// scoped workers (`threads <= 1` runs inline).  The single band-split
-/// used by both the packed GEMM and the fused MTTKRP, so their
-/// partitioning can never diverge.
-pub(crate) fn parallel_row_bands<F>(
-    threads: usize,
-    rows: usize,
-    row_elems: usize,
-    out: &mut [f32],
-    work: F,
-) where
-    F: Fn(usize, usize, &mut [f32]) + Sync,
-{
-    if rows == 0 {
-        return;
-    }
     if threads <= 1 {
-        work(0, rows, out);
-        return;
+        serial_gemm(cfg, pool, a, lda, b, ldb, c, ldc, m, k, n);
+    } else {
+        shared_pack_gemm(cfg, pool, threads, a, lda, b, ldb, c, ldc, m, k, n);
     }
-    let band = rows.div_ceil(threads).div_ceil(MR) * MR;
-    std::thread::scope(|s| {
-        let work = &work;
-        let mut rest: &mut [f32] = out;
-        let mut row0 = 0usize;
-        while row0 < rows {
-            let take = band.min(rows - row0);
-            let (head, tail) = std::mem::take(&mut rest).split_at_mut(take * row_elems);
-            rest = tail;
-            s.spawn(move || work(row0, take, head));
-            row0 += take;
-        }
-    });
 }
 
-/// One worker's serial macro-loop nest over its row band (jc → pc → ic,
-/// the Goto loop order: B panels stream through L3, A panels sit in L2).
-fn band_gemm(
+/// The serial macro-loop nest (jc → pc → ic, the Goto loop order: B
+/// panels stream through L3, A panels sit in L2).  Also the retained
+/// oracle the pool-parallel path must match bitwise.
+fn serial_gemm(
     cfg: KernelConfig,
     pool: &ScratchPool,
     a: &[f32],
@@ -363,24 +354,152 @@ fn band_gemm(
 ) {
     let mut apack = pool.take(cfg.mc * cfg.kc);
     let mut bpack = pool.take(cfg.kc * cfg.nc);
+    let cptr = c.as_mut_ptr();
     let mut jc = 0usize;
     while jc < n {
         let ncb = cfg.nc.min(n - jc);
         let mut pc = 0usize;
         while pc < k {
             let kcb = cfg.kc.min(k - pc);
-            pack_b(b, ldb, pc, kcb, jc, ncb, &mut bpack);
+            pack_b_strips(b, ldb, pc, kcb, jc, ncb, 0, ncb.div_ceil(NR), &mut bpack);
             let mut ic = 0usize;
             while ic < m {
                 let mcb = cfg.mc.min(m - ic);
                 pack_a(a, lda, ic, mcb, pc, kcb, &mut apack);
-                macro_tile(&apack, &bpack, c, ldc, ic, mcb, jc, ncb, kcb);
+                // SAFETY: serial — this call exclusively owns all of C.
+                unsafe {
+                    macro_tile(&apack, &bpack, cptr, ldc, ic, mcb, jc, kcb, 0, ncb);
+                }
                 ic += mcb;
             }
             pc += kcb;
         }
         jc += ncb;
     }
+}
+
+/// The pool-parallel macro loop with *shared* B-panel packing (ROADMAP
+/// "shared rather than per-worker B packing with a work-stealing macro
+/// loop").  Per `KC×NC` panel:
+///
+/// 1. **Cooperative pack** — the panel's NR strips are packed once into
+///    shared scratch by a pool region (disjoint strip ranges per task);
+///    the job's completion protocol publishes the packed bytes to the
+///    next region's workers.
+/// 2. **A-panel × macro-tile tasks** — a `m_tiles × jr_split` task grid;
+///    each task packs its own `MC×KC` A panel from pool scratch and runs
+///    the microkernel over its `MC × (NC/jr_split)` column chunk of C.
+///    `jr_split > 1` only when M alone cannot feed every worker, so
+///    skinny-M/wide-N shapes still load-balance; the cost is re-packing
+///    A once per column chunk, the cheap redundancy (an `MC×KC` panel vs
+///    PR 1's per-band `KC×NC` B panel).
+fn shared_pack_gemm(
+    cfg: KernelConfig,
+    pool: &ScratchPool,
+    threads: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    let mut bpack = pool.take(cfg.kc * cfg.nc);
+    let m_tiles = m.div_ceil(cfg.mc);
+    let cptr = SendMutPtr(c.as_mut_ptr());
+    let mut jc = 0usize;
+    while jc < n {
+        let ncb = cfg.nc.min(n - jc);
+        let strips = ncb.div_ceil(NR);
+        let mut pc = 0usize;
+        while pc < k {
+            let kcb = cfg.kc.min(k - pc);
+            // Phase 1: shared B pack, one NR-strip range per task.
+            {
+                let bptr = SendMutPtr(bpack.as_mut_ptr());
+                let strip_chunk = strips.div_ceil(threads * 2).max(1);
+                let pack_tasks = strips.div_ceil(strip_chunk);
+                crate::runtime::pool::global().run(threads, pack_tasks, &|t| {
+                    let s0 = t * strip_chunk;
+                    let s1 = (s0 + strip_chunk).min(strips);
+                    // SAFETY: strip ranges are disjoint, so the slices
+                    // carved out of the shared pack never overlap.
+                    let dst = unsafe {
+                        std::slice::from_raw_parts_mut(
+                            bptr.0.add(s0 * kcb * NR),
+                            (s1 - s0) * kcb * NR,
+                        )
+                    };
+                    pack_b_strips(b, ldb, pc, kcb, jc, ncb, s0, s1, dst);
+                });
+            }
+            // Phase 2: consume the shared panel from macro-tile tasks.
+            let bshared: &[f32] = &bpack;
+            let jr_split = (threads * 2).div_ceil(m_tiles).clamp(1, strips);
+            let jr_per = strips.div_ceil(jr_split) * NR;
+            crate::runtime::pool::global().run(threads, m_tiles * jr_split, &|t| {
+                let ic = (t / jr_split) * cfg.mc;
+                let jr0 = (t % jr_split) * jr_per;
+                if jr0 >= ncb {
+                    return;
+                }
+                let jr1 = (jr0 + jr_per).min(ncb);
+                let mcb = cfg.mc.min(m - ic);
+                let mut apack = pool.take(cfg.mc * cfg.kc);
+                pack_a(a, lda, ic, mcb, pc, kcb, &mut apack);
+                // SAFETY: tasks own disjoint (row-tile, column-chunk)
+                // rectangles of C — `ic` ranges are disjoint across
+                // `t / jr_split`, `jr` ranges across `t % jr_split`.
+                unsafe {
+                    macro_tile(&apack, bshared, cptr.0, ldc, ic, mcb, jc, kcb, jr0, jr1);
+                }
+            });
+            pc += kcb;
+        }
+        jc += ncb;
+    }
+}
+
+/// Split `out` (`rows × row_elems`, row-major) into disjoint MR-aligned
+/// row bands and run `work(row0, band_rows, band_out)` as stealable pool
+/// tasks (`threads <= 1` runs inline).  The single band-split used by
+/// both the packed GEMM driver and the fused MTTKRP, so their
+/// partitioning can never diverge.
+pub(crate) fn parallel_row_bands<F>(
+    threads: usize,
+    rows: usize,
+    row_elems: usize,
+    out: &mut [f32],
+    work: F,
+) where
+    F: Fn(usize, usize, &mut [f32]) + Sync,
+{
+    if rows == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(rows.div_ceil(MR));
+    if threads <= 1 {
+        work(0, rows, out);
+        return;
+    }
+    // Bands finer than the thread count so stealing can rebalance
+    // ragged per-row costs.
+    let band = rows.div_ceil(threads * 2).div_ceil(MR) * MR;
+    let n_bands = rows.div_ceil(band);
+    let ptr = SendMutPtr(out.as_mut_ptr());
+    crate::runtime::pool::global().run(threads, n_bands, &|t| {
+        let row0 = t * band;
+        let take = band.min(rows - row0);
+        // SAFETY: bands are disjoint row ranges of `out`, so the carved
+        // slices never overlap across tasks.
+        let band_out = unsafe {
+            std::slice::from_raw_parts_mut(ptr.0.add(row0 * row_elems), take * row_elems)
+        };
+        work(row0, take, band_out);
+    });
 }
 
 /// Pack `A[ic..ic+mcb, pc..pc+kcb]` into MR-row strips:
@@ -403,13 +522,24 @@ fn pack_a(a: &[f32], lda: usize, ic: usize, mcb: usize, pc: usize, kcb: usize, o
     }
 }
 
-/// Pack `B[pc..pc+kcb, jc..jc+ncb]` into NR-column strips:
-/// `out[t*kcb*NR + p*NR + j] = B[pc + p, jc + t*NR + j]` (zeros past ncb).
-fn pack_b(b: &[f32], ldb: usize, pc: usize, kcb: usize, jc: usize, ncb: usize, out: &mut [f32]) {
-    let strips = ncb.div_ceil(NR);
-    for t in 0..strips {
-        let base = t * kcb * NR;
-        let c0 = jc + t * NR;
+/// Pack the NR-column strips `s0..s1` of `B[pc..pc+kcb, jc..jc+ncb]`:
+/// `out[(s-s0)*kcb*NR + p*NR + j] = B[pc + p, jc + s*NR + j]` (zeros past
+/// ncb).  The full-panel pack is `s0 = 0, s1 = ncb.div_ceil(NR)`; the
+/// shared-pack phase hands each pool task a disjoint strip range.
+fn pack_b_strips(
+    b: &[f32],
+    ldb: usize,
+    pc: usize,
+    kcb: usize,
+    jc: usize,
+    ncb: usize,
+    s0: usize,
+    s1: usize,
+    out: &mut [f32],
+) {
+    for s in s0..s1 {
+        let base = (s - s0) * kcb * NR;
+        let c0 = jc + s * NR;
         let cols = NR.min(jc + ncb - c0);
         for p in 0..kcb {
             let src = (pc + p) * ldb + c0;
@@ -428,28 +558,45 @@ fn pack_b(b: &[f32], ldb: usize, pc: usize, kcb: usize, jc: usize, ncb: usize, o
     }
 }
 
-/// Drive the microkernel over one packed `mcb × ncb` macro tile.
-fn macro_tile(
+/// Drive the microkernel over the column chunk `jr0..jr1` (NR-aligned
+/// start) of one packed macro tile, writing through a raw C pointer.
+///
+/// # Safety
+///
+/// The caller must guarantee exclusive ownership of the C rectangle
+/// `rows [ic, ic+mcb) × cols [jc+jr0, jc+jr1)` under leading dimension
+/// `ldc`, and that `c` points at a live allocation covering it.  The
+/// parallel macro loops partition C into such disjoint rectangles.
+unsafe fn macro_tile(
     apack: &[f32],
     bpack: &[f32],
-    c: &mut [f32],
+    c: *mut f32,
     ldc: usize,
     ic: usize,
     mcb: usize,
     jc: usize,
-    ncb: usize,
     kcb: usize,
+    jr0: usize,
+    jr1: usize,
 ) {
-    let mut jr = 0usize;
-    while jr < ncb {
-        let nr_eff = NR.min(ncb - jr);
+    debug_assert_eq!(jr0 % NR, 0);
+    let mut jr = jr0;
+    while jr < jr1 {
+        let nr_eff = NR.min(jr1 - jr);
         let bstrip = &bpack[(jr / NR) * kcb * NR..][..kcb * NR];
         let mut ir = 0usize;
         while ir < mcb {
             let mr_eff = MR.min(mcb - ir);
             let astrip = &apack[(ir / MR) * kcb * MR..][..kcb * MR];
-            let base = (ic + ir) * ldc + jc + jr;
-            micro_kernel(kcb, astrip, bstrip, &mut c[base..], ldc, mr_eff, nr_eff);
+            micro_kernel(
+                kcb,
+                astrip,
+                bstrip,
+                c.add((ic + ir) * ldc + jc + jr),
+                ldc,
+                mr_eff,
+                nr_eff,
+            );
             ir += MR;
         }
         jr += NR;
@@ -460,12 +607,17 @@ fn macro_tile(
 /// over the full `kc` reduction, then a single accumulate into C.  No
 /// data-dependent branches in the reduction loop (the seed kernel's
 /// `aik == 0.0` skip is gone: it broke vectorization on dense inputs).
+///
+/// # Safety
+///
+/// `c` must point at an exclusively-owned `mr × nr` tile under leading
+/// dimension `ldc` (see [`macro_tile`]).
 #[inline]
-fn micro_kernel(
+unsafe fn micro_kernel(
     kc: usize,
     ap: &[f32],
     bp: &[f32],
-    c: &mut [f32],
+    c: *mut f32,
     ldc: usize,
     mr: usize,
     nr: usize,
@@ -483,24 +635,25 @@ fn micro_kernel(
     }
     if mr == MR && nr == NR {
         for (i, acc_row) in acc.iter().enumerate() {
-            let row = &mut c[i * ldc..i * ldc + NR];
-            for j in 0..NR {
-                row[j] += acc_row[j];
+            let row = c.add(i * ldc);
+            for (j, &v) in acc_row.iter().enumerate() {
+                *row.add(j) += v;
             }
         }
     } else {
         for (i, acc_row) in acc.iter().enumerate().take(mr) {
-            let row = &mut c[i * ldc..i * ldc + nr];
-            for (j, r) in row.iter_mut().enumerate() {
-                *r += acc_row[j];
+            let row = c.add(i * ldc);
+            for (j, &v) in acc_row.iter().enumerate().take(nr) {
+                *row.add(j) += v;
             }
         }
     }
 }
 
-/// Run `work(lo, hi)` over `0..units` split across up to `threads`
-/// scoped workers (each at least `min_per_thread` units).  Used by the
-/// transpose and MTTKRP macro loops.
+/// Run `work(lo, hi)` over `0..units` as stealable pool tasks (chunks
+/// finer than the thread count so ragged unit costs rebalance); callers
+/// guarantee at least `min_per_thread` units per participant.  Used by
+/// the transpose macro loop.
 pub(crate) fn parallel_units<F>(threads: usize, units: usize, min_per_thread: usize, work: F)
 where
     F: Fn(usize, usize) + Sync,
@@ -513,15 +666,12 @@ where
         work(0, units);
         return;
     }
-    let chunk = units.div_ceil(threads);
-    std::thread::scope(|s| {
-        let work = &work;
-        let mut u0 = 0usize;
-        while u0 < units {
-            let u1 = (u0 + chunk).min(units);
-            s.spawn(move || work(u0, u1));
-            u0 = u1;
-        }
+    let chunk = units.div_ceil(threads * 4).max(min_per_thread.max(1));
+    let n_tasks = units.div_ceil(chunk);
+    crate::runtime::pool::global().run(threads, n_tasks, &|t| {
+        let u0 = t * chunk;
+        let u1 = (u0 + chunk).min(units);
+        work(u0, u1);
     });
 }
 

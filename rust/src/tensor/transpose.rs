@@ -6,7 +6,10 @@
 //! ([`super::kernel`]): odometer iteration over all-but-two modes, a
 //! cache-blocked 2D kernel over (src-innermost, dst-innermost) so one side
 //! always streams contiguously, and the work units (rest-index × a-block)
-//! split across scoped threads.  A permutation writes every destination
+//! submitted to the persistent work-stealing pool
+//! ([`crate::runtime::pool`]) as stealable chunks — no thread spawns per
+//! permutation, and bitwise-identical output for any thread count.
+//! A permutation writes every destination
 //! element exactly once, so any partition of the unit space has disjoint
 //! writes — the parallel path shares the output through a raw pointer
 //! under that invariant.

@@ -209,7 +209,10 @@ fn property_redistribution_conserves_elements() {
                 global.block(&off, &src.local_dims())
             })
             .collect();
-        let out = redist::execute(&rp, &src, &dst, &src_bufs).unwrap();
+        let mut out: Vec<Tensor> = (0..src.grid.size().max(dst.grid.size()))
+            .map(|_| Tensor::zeros(&dst.local_dims()))
+            .collect();
+        redist::execute_into(&rp, &src_bufs, &mut out);
         for r in 0..dst.grid.size() {
             let (off, size) = dst.block_for_rank(r);
             let want = global.block(&off, &size);

@@ -1,0 +1,182 @@
+//! Integration tests for the persistent work-stealing runtime: the
+//! pool-dispatched shared-packing GEMM / fused MTTKRP / transpose against
+//! the retained serial oracles, bitwise determinism across thread counts
+//! (`DEINSUM_NUM_THREADS=1` vs `=8` feed exactly the `threads` field
+//! varied here — the env var is read once into `KernelConfig`), and pool
+//! persistence across kernel invocations.
+
+use deinsum::runtime::pool;
+use deinsum::tensor::kernel::{self, KernelConfig, ScratchPool};
+use deinsum::tensor::{contract, transpose, Tensor};
+
+fn gemm_scalar(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    contract::gemm_scalar_into(a, b, &mut c, m, k, n);
+    c
+}
+
+/// Shapes chosen to drive every parallel macro-loop regime above the
+/// serial cutoff: square, skinny-M/wide-N (jr-chunk splitting), tall-M/
+/// narrow-N, and ragged everything.
+const GEMM_SHAPES: [(usize, usize, usize); 5] =
+    [(128, 128, 128), (8, 96, 700), (700, 96, 8), (150, 70, 90), (37, 300, 41)];
+
+#[test]
+fn pool_gemm_matches_scalar_oracle() {
+    let pool = ScratchPool::new();
+    let cfg = KernelConfig { mc: 32, kc: 32, nc: 48, threads: 8 }.normalized();
+    for &(m, k, n) in &GEMM_SHAPES {
+        let a = Tensor::random(&[m, k], (m * 7 + n) as u64);
+        let b = Tensor::random(&[k, n], (k * 3 + m) as u64);
+        let want = gemm_scalar(a.data(), b.data(), m, k, n);
+        let mut c = vec![0.0f32; m * n];
+        kernel::gemm_into_with(&cfg, &pool, a.data(), b.data(), &mut c, m, k, n);
+        for (i, (&g, &w)) in c.iter().zip(&want).enumerate() {
+            assert!(
+                (g - w).abs() <= 1e-3 + 1e-3 * w.abs(),
+                "({m},{k},{n}) elem {i}: {g} vs {w}"
+            );
+        }
+    }
+}
+
+#[test]
+fn gemm_bitwise_deterministic_across_thread_counts() {
+    // Same blocks => same per-element reduction order regardless of the
+    // thread count or which worker claims a tile: results are bitwise
+    // identical, so DEINSUM_NUM_THREADS=1 and =8 agree exactly.
+    let pool = ScratchPool::new();
+    let base = KernelConfig { mc: 32, kc: 32, nc: 48, threads: 1 }.normalized();
+    for &(m, k, n) in &GEMM_SHAPES {
+        let a = Tensor::random(&[m, k], (m + k * 5) as u64);
+        let b = Tensor::random(&[k, n], (n + k * 11) as u64);
+        let mut c1 = vec![0.0f32; m * n];
+        kernel::gemm_into_with(&base, &pool, a.data(), b.data(), &mut c1, m, k, n);
+        for threads in [2usize, 8] {
+            let mut ct = vec![0.0f32; m * n];
+            kernel::gemm_into_with(
+                &base.with_threads(threads),
+                &pool,
+                a.data(),
+                b.data(),
+                &mut ct,
+                m,
+                k,
+                n,
+            );
+            assert_eq!(c1, ct, "({m},{k},{n}) threads {threads} diverged bitwise");
+        }
+    }
+}
+
+#[test]
+fn mttkrp_bitwise_deterministic_and_matches_two_step() {
+    let pool = ScratchPool::new();
+    let x = Tensor::random(&[64, 32, 32], 91);
+    let fs: Vec<Tensor> =
+        (0..3).map(|m| Tensor::random(&[x.dims()[m], 24], 92 + m as u64)).collect();
+    let frefs: Vec<&Tensor> = fs.iter().collect();
+    let base = KernelConfig::default().serial();
+    for mode in 0..3 {
+        let serial = contract::mttkrp_with(&base, &pool, &x, &frefs, mode).unwrap();
+        for threads in [2usize, 8] {
+            let par = contract::mttkrp_with(
+                &base.with_threads(threads),
+                &pool,
+                &x,
+                &frefs,
+                mode,
+            )
+            .unwrap();
+            assert_eq!(
+                serial.data(),
+                par.data(),
+                "mode {mode} threads {threads} diverged bitwise"
+            );
+        }
+        let two = contract::mttkrp_two_step(&x, &frefs, mode).unwrap();
+        assert!(serial.allclose(&two, 1e-2, 1e-3), "mode {mode} vs two-step oracle");
+    }
+}
+
+#[test]
+fn transpose_bitwise_deterministic_across_thread_counts() {
+    let base = KernelConfig::default();
+    for (dims, perm) in [
+        (vec![64usize, 64, 32], vec![2usize, 1, 0]), // blocked 2D path
+        (vec![64, 64, 32], vec![1, 0, 2]),           // inner-run fast path
+        (vec![600, 512], vec![1, 0]),                // matrix transpose
+    ] {
+        let t = Tensor::random(&dims, 401);
+        let serial = transpose::permute_with(&base.serial(), &t, &perm);
+        for threads in [2usize, 8] {
+            let par = transpose::permute_with(&base.with_threads(threads), &t, &perm);
+            assert_eq!(serial, par, "{dims:?} {perm:?} threads {threads}");
+        }
+    }
+}
+
+#[test]
+fn pool_workers_persist_across_kernel_invocations() {
+    // Force the pool to its in-process maximum (8 participants => 7
+    // workers), then verify repeated kernel invocations dispatch jobs to
+    // the same worker set — the whole point of the persistent runtime.
+    pool::global().run(8, 64, &|_t| {});
+    let w0 = pool::global().stats().workers;
+    assert!(w0 <= 7, "8 participants need at most 7 workers, got {w0}");
+    let pool_ = ScratchPool::new();
+    let cfg = KernelConfig { mc: 32, kc: 32, nc: 32, threads: 8 }.normalized();
+    let a = Tensor::random(&[256, 128], 5);
+    let b = Tensor::random(&[128, 256], 6);
+    let jobs0 = pool::global().stats().jobs;
+    let mut c = vec![0.0f32; 256 * 256];
+    for _ in 0..3 {
+        c.fill(0.0);
+        kernel::gemm_into_with(&cfg, &pool_, a.data(), b.data(), &mut c, 256, 128, 256);
+    }
+    let s = pool::global().stats();
+    assert!(s.jobs > jobs0, "parallel kernels must dispatch pool jobs");
+    assert_eq!(s.workers, w0, "kernel invocations must not spawn new workers");
+}
+
+#[test]
+fn pool_gemm_steady_state_is_alloc_free() {
+    // The shared-packing parallel path draws one shared B panel plus one
+    // A panel per in-flight task from the scratch pool; pre-seed the
+    // high-water mark, then repeated runs must be served entirely from
+    // the free lists.
+    let pool_ = ScratchPool::new();
+    let cfg = KernelConfig { mc: 32, kc: 32, nc: 32, threads: 8 }.normalized();
+    {
+        let _a: Vec<_> = (0..10).map(|_| pool_.take(cfg.mc * cfg.kc)).collect();
+        let _b: Vec<_> = (0..2).map(|_| pool_.take(cfg.kc * cfg.nc)).collect();
+    }
+    let a = Tensor::random(&[128, 96], 7);
+    let b = Tensor::random(&[96, 128], 8);
+    let mut c = vec![0.0f32; 128 * 128];
+    let warm = pool_.stats().allocs;
+    for _ in 0..5 {
+        c.fill(0.0);
+        kernel::gemm_into_with(&cfg, &pool_, a.data(), b.data(), &mut c, 128, 96, 128);
+    }
+    let after = pool_.stats();
+    assert_eq!(after.allocs, warm, "steady-state shared-pack gemm allocated");
+    assert!(after.takes > 0, "gemm must route packing buffers through the pool");
+}
+
+#[test]
+fn scoped_baseline_produces_identical_results() {
+    // The retained spawn-per-region dispatch is a drop-in for the pool:
+    // same task decomposition, same outputs (it backs the bench's
+    // per-step-spawn baseline).
+    use std::sync::atomic::{AtomicU64, Ordering};
+    let from_pool = AtomicU64::new(0);
+    let from_scoped = AtomicU64::new(0);
+    pool::global().run(4, 100, &|t| {
+        from_pool.fetch_add((t * t) as u64, Ordering::Relaxed);
+    });
+    pool::run_scoped(4, 100, &|t| {
+        from_scoped.fetch_add((t * t) as u64, Ordering::Relaxed);
+    });
+    assert_eq!(from_pool.load(Ordering::Relaxed), from_scoped.load(Ordering::Relaxed));
+}
