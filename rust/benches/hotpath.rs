@@ -16,7 +16,11 @@
 //! Besides the human-readable table, results land in
 //! `BENCH_hotpath.json` (override with `DEINSUM_BENCH_JSON`) as
 //! `{"config": ..., "results": [{kernel, shape, median_seconds, gflops?,
-//! speedup?}, ...]}` so future PRs have a perf trajectory to diff.
+//! speedup?}, ...]}` so future PRs have a perf trajectory to diff.  The
+//! `coordinator_steady_state` entry also carries `allocs_per_run`: the
+//! total tensor/scratch allocations one warm `Coordinator::run` performs
+//! (engine pool + store destinations + compute outputs + local scratch)
+//! — 0 is the recycled-everything invariant the tests pin.
 
 #[path = "common.rs"]
 mod common;
@@ -35,13 +39,16 @@ use deinsum::sim::NetworkModel;
 use deinsum::tensor::kernel::{self, KernelConfig, ScratchPool};
 use deinsum::tensor::{contract, transpose, Tensor};
 
-fn record(
+/// The single JSON-line formatter every bench entry goes through (so the
+/// schema lives in one place).
+fn record_full(
     out: &mut Vec<String>,
     kernel: &str,
     shape: &str,
     median_s: f64,
     gflops: Option<f64>,
     speedup: Option<f64>,
+    allocs_per_run: Option<u64>,
 ) {
     let mut s = format!(
         "    {{\"kernel\": \"{kernel}\", \"shape\": \"{shape}\", \"median_seconds\": {median_s:.9}"
@@ -52,8 +59,22 @@ fn record(
     if let Some(x) = speedup {
         let _ = write!(s, ", \"speedup\": {x:.3}");
     }
+    if let Some(a) = allocs_per_run {
+        let _ = write!(s, ", \"allocs_per_run\": {a}");
+    }
     s.push('}');
     out.push(s);
+}
+
+fn record(
+    out: &mut Vec<String>,
+    kernel: &str,
+    shape: &str,
+    median_s: f64,
+    gflops: Option<f64>,
+    speedup: Option<f64>,
+) {
+    record_full(out, kernel, shape, median_s, gflops, speedup, None);
 }
 
 fn main() {
@@ -356,31 +377,51 @@ fn main() {
         for _ in 0..2 {
             let _ = coord.run(&pl, &inputs).unwrap();
         }
-        let warm = (engine.scratch_stats().allocs, coord.machine_stats().dest_allocs);
+        // Every allocation source on the run loop: engine packing/fold
+        // scratch, store destinations + compute outputs, and the
+        // coordinator's Seq-intermediate/permute scratch.
+        let total_allocs = || {
+            let ms = coord.machine_stats();
+            engine.scratch_stats().allocs
+                + ms.dest_allocs
+                + ms.out_allocs
+                + coord.local_scratch_stats().allocs
+        };
+        let warm = total_allocs();
+        let warm_store =
+            coord.machine_stats().dest_allocs + coord.machine_stats().out_allocs;
         let (steady, _, _) = common::time_median(reps, || {
             let _ = coord.run(&pl, &inputs).unwrap();
         });
-        let after = (engine.scratch_stats().allocs, coord.machine_stats().dest_allocs);
-        // Staging/redistribution destinations must never re-allocate in
-        // steady state (deterministic invariant, also pinned by tests);
-        // scratch allocs are reported (the high-water mark can still be
-        // reached during timed runs when worker overlap first peaks).
-        assert_eq!(after.1, warm.1, "steady-state coordinator re-allocated destinations");
+        // Store-level recycling is a deterministic invariant (also pinned
+        // by tests); engine scratch can still grow to its high-water mark
+        // during timed runs when worker overlap first peaks.
+        assert_eq!(
+            coord.machine_stats().dest_allocs + coord.machine_stats().out_allocs,
+            warm_store,
+            "steady-state coordinator re-allocated store buffers"
+        );
+        // One precisely-bracketed run for the allocations-per-run figure.
+        let before_run = total_allocs();
+        let _ = coord.run(&pl, &inputs).unwrap();
+        let allocs_per_run = total_allocs() - before_run;
         println!(
-            "coordinator {shape}: cold+spawn {} | steady {} ({:.2}x) | scratch allocs +{}",
+            "coordinator {shape}: cold+spawn {} | steady {} ({:.2}x) | allocs/run {} (timed-window total +{})",
             common::fmt_s(cold),
             common::fmt_s(steady),
             cold / steady,
-            after.0 - warm.0
+            allocs_per_run,
+            total_allocs() - warm
         );
         record(&mut records, "coordinator_cold_start", &shape, cold, None, None);
-        record(
+        record_full(
             &mut records,
             "coordinator_steady_state",
             &shape,
             steady,
             None,
             Some(cold / steady),
+            Some(allocs_per_run),
         );
     }
 

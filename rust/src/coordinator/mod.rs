@@ -17,22 +17,80 @@
 //!
 //! The coordinator holds its [`Machine`] **across runs**: repeated
 //! executions of a plan (CP-ALS sweeps, benches) recycle every staging
-//! and redistribution destination buffer from the previous run, so the
-//! steady state performs zero staging/redistribution allocations
-//! ([`Machine::store_stats`] counters, asserted in tests) on top of the
-//! engine's zero packing/fold allocations.  Each term also reconfigures
-//! the [`KernelEngine`] with its SOAP-derived tile sizes
+//! and redistribution destination buffer from the previous run
+//! ([`Machine::store_stats`] counters) — and, through the `*_into`
+//! kernel family, every **compute output** as well:
+//! [`Machine::compute_step_into`] hands each rank a destination recycled
+//! from the store, the Seq kernel's per-op intermediates and the MTTKRP
+//! output-order permute recycle through a per-`(term, op)`
+//! [`LocalScratchStats`]-counted scratch table, and local inputs are
+//! borrowed from the store rather than deep-copied.  In steady state the
+//! whole run loop performs zero tensor allocations (asserted in tests;
+//! sole documented exception: summed-away private indices pre-reduce
+//! through allocating [`contract::reduce_mode`] intermediates) on top of
+//! the engine's zero packing/fold allocations.  Each term also
+//! reconfigures the [`KernelEngine`] with its SOAP-derived tile sizes
 //! ([`crate::planner::TermPlan::kernel_config`] via
 //! [`KernelEngine::configure_for_term`]) — previously opt-in in benches.
 
 use std::cell::RefCell;
+use std::collections::{BTreeMap, BTreeSet, HashMap};
 
+use crate::einsum::BinaryOp;
 use crate::error::{Error, Result};
-use crate::planner::{LocalKernel, Plan};
+use crate::planner::{LocalKernel, Plan, TermInput};
 use crate::runtime::KernelEngine;
 use crate::sim::collectives::reduction_groups;
 use crate::sim::{AccelModel, CommStats, Machine, NetworkModel, StoreStats, TimeBreakdown};
-use crate::tensor::{contract, Tensor};
+use crate::tensor::{contract, Tensor, ELEM_BYTES};
+
+/// Allocation counters for the coordinator's local scratch table (Seq
+/// intermediates + MTTKRP permute buffers).  Steady-state invariant:
+/// `allocs` stops growing after the first run of a plan while `reuses`
+/// keeps counting.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct LocalScratchStats {
+    /// Whole local tensors heap-allocated (first run, or shape change).
+    pub allocs: u64,
+    /// Whole local tensors recycled across runs.
+    pub reuses: u64,
+}
+
+/// Recycled per-rank buffers for the per-term local compute: Seq-kernel
+/// intermediates keyed by `(term, op)` and the MTTKRP output-order
+/// permute's natural-layout outputs keyed by `(term, usize::MAX)`.  The
+/// coordinator-level analogue of the engine's
+/// [`crate::tensor::kernel::ScratchPool`], but holding whole tensors.
+#[derive(Debug, Default)]
+struct LocalScratch {
+    bufs: HashMap<(usize, usize), Vec<Tensor>>,
+    stats: LocalScratchStats,
+}
+
+/// Scratch key of a term's MTTKRP permute buffers (never a real op id).
+const PERMUTE_SLOT: usize = usize::MAX;
+
+impl LocalScratch {
+    /// Take the buffer set for `key` (recycled when `p` tensors of shape
+    /// `dims` are present, freshly allocated otherwise).
+    fn take(&mut self, key: (usize, usize), p: usize, dims: &[usize]) -> Vec<Tensor> {
+        match self.bufs.remove(&key) {
+            Some(v) if v.len() == p && v.iter().all(|t| t.dims() == dims) => {
+                self.stats.reuses += p as u64;
+                v
+            }
+            _ => {
+                self.stats.allocs += p as u64;
+                (0..p).map(|_| Tensor::zeros(dims)).collect()
+            }
+        }
+    }
+
+    /// Return a buffer set for recycling by the next run.
+    fn put(&mut self, key: (usize, usize), bufs: Vec<Tensor>) {
+        self.bufs.insert(key, bufs);
+    }
+}
 
 /// Per-term execution statistics.
 #[derive(Debug, Clone, Default)]
@@ -91,18 +149,32 @@ pub struct Coordinator<'e> {
     /// so long-lived coordinators (CP-ALS loops, benches) need no
     /// exclusive borrow.
     machine: RefCell<Option<Machine>>,
+    /// Recycled Seq intermediates and MTTKRP permute buffers, kept
+    /// across runs like the machine store.
+    scratch: RefCell<LocalScratch>,
 }
 
 impl<'e> Coordinator<'e> {
     pub fn new(engine: &'e KernelEngine, network: NetworkModel) -> Self {
-        Coordinator { engine, network, machine: RefCell::new(None) }
+        Coordinator {
+            engine,
+            network,
+            machine: RefCell::new(None),
+            scratch: RefCell::new(LocalScratch::default()),
+        }
     }
 
     /// Buffer-recycling counters of the persistent machine (defaults
-    /// until the first run).  Steady-state invariant: `dest_allocs`
-    /// stops growing after the first execution of a plan.
+    /// until the first run).  Steady-state invariant: `dest_allocs` and
+    /// `out_allocs` stop growing after the first execution of a plan.
     pub fn machine_stats(&self) -> StoreStats {
         self.machine.borrow().as_ref().map(|m| m.store_stats()).unwrap_or_default()
+    }
+
+    /// Allocation counters of the coordinator's local scratch table
+    /// (Seq-kernel intermediates + MTTKRP permute buffers).
+    pub fn local_scratch_stats(&self) -> LocalScratchStats {
+        self.scratch.borrow().stats
     }
 
     /// Run `plan` on global input tensors (one per program operand, in
@@ -142,11 +214,14 @@ impl<'e> Coordinator<'e> {
         }
         let machine = machine_slot.as_mut().unwrap();
         machine.begin_run();
+        let mut scratch = self.scratch.borrow_mut();
         let mut per_term: Vec<TermStats> = Vec::new();
-        // Every store name this run touches; anything else is a stale
-        // buffer set from a previously-run plan and is pruned at the end
-        // (the persistent store must not grow across plan switches).
-        let mut live_names: std::collections::BTreeSet<String> = std::collections::BTreeSet::new();
+        // Every store name / scratch key this run touches; anything else
+        // is a stale buffer set from a previously-run plan and is pruned
+        // at the end (the persistent buffers must not grow across plan
+        // switches).
+        let mut live_names: BTreeSet<String> = BTreeSet::new();
+        let mut live_scratch: BTreeSet<(usize, usize)> = BTreeSet::new();
 
         for (ti, term) in plan.terms.iter().enumerate() {
             let mut stats = TermStats { name: term.name.clone(), ..Default::default() };
@@ -181,7 +256,7 @@ impl<'e> Coordinator<'e> {
                     machine.redistribute(&src_name, &name, &mv.plan, &mv.src, &mv.dst)?;
                 }
                 stats.local_in_bytes +=
-                    tin.dist.local_dims().iter().product::<usize>() * 4;
+                    tin.dist.local_dims().iter().product::<usize>() * ELEM_BYTES;
                 live_names.insert(name.clone());
                 in_names.push(name);
             }
@@ -192,31 +267,17 @@ impl<'e> Coordinator<'e> {
             let engine = self.engine;
             match &term.kernel {
                 LocalKernel::Mttkrp { x_input, mode, factor_inputs } => {
-                    let x_name = in_names[*x_input].clone();
-                    let f_names: Vec<String> =
-                        factor_inputs.iter().map(|&s| in_names[s].clone()).collect();
+                    let x_name = &in_names[*x_input];
+                    let f_names: Vec<&str> =
+                        factor_inputs.iter().map(|&s| in_names[s].as_str()).collect();
                     let order = term.inputs[*x_input].indices.len();
                     let mode = *mode;
-                    machine.compute_step(&out_name, |r, m| {
-                        let x = m.get(&x_name, r)?;
-                        let fs: Vec<&Tensor> = f_names
-                            .iter()
-                            .map(|n| m.get(n, r))
-                            .collect::<Result<_>>()?;
-                        // engine.mttkrp wants `order` slots; mode ignored.
-                        let mut slots: Vec<&Tensor> = Vec::with_capacity(order);
-                        let mut fi = fs.iter();
-                        for mm in 0..order {
-                            if mm == mode {
-                                slots.push(x); // placeholder, ignored
-                            } else {
-                                slots.push(fi.next().unwrap());
-                            }
-                        }
-                        engine.mttkrp(x, &slots, mode)
-                    })?;
-                    // kernel output is (mode_idx, r); permute if the term's
-                    // output order differs.
+                    // Local kernel output shape: (local mode extent, local R).
+                    let x_ldims = term.inputs[*x_input].dist.local_dims();
+                    let r_local = term.inputs[factor_inputs[0]].dist.local_dims()[1];
+                    let natural_dims = [x_ldims[mode], r_local];
+                    // Kernel output order is (mode_idx, r); a differing
+                    // term output order takes the recycled permute path.
                     let x_idx = &term.inputs[*x_input].indices;
                     let r_char = term
                         .output_indices
@@ -226,77 +287,164 @@ impl<'e> Coordinator<'e> {
                         .ok_or_else(|| Error::plan("mttkrp: no rank index"))?;
                     let mode_char = x_idx[mode];
                     let natural = vec![mode_char, r_char];
-                    if term.output_indices != natural {
+                    if term.output_indices == natural {
+                        // Kernel writes straight into the store-recycled
+                        // per-rank destinations.
+                        machine.compute_step_into(&out_name, &natural_dims, |r, m, dest| {
+                            mttkrp_rank_into(engine, m, r, x_name, &f_names, order, mode, dest)
+                        })?;
+                    } else {
                         let perm: Vec<usize> = term
                             .output_indices
                             .iter()
                             .map(|c| natural.iter().position(|d| d == c).unwrap())
                             .collect();
-                        let bufs: Vec<Tensor> = (0..plan.p)
-                            .map(|r| machine.get(&out_name, r).map(|t| t.permute(&perm)))
-                            .collect::<Result<_>>()?;
-                        machine.put(&out_name, bufs)?;
+                        let permuted_dims: Vec<usize> =
+                            perm.iter().map(|&p| natural_dims[p]).collect();
+                        // Natural-layout kernel outputs land in scratch
+                        // buffers recycled across runs...
+                        let key = (ti, PERMUTE_SLOT);
+                        live_scratch.insert(key);
+                        let mut nat = scratch.take(key, plan.p, &natural_dims);
+                        for (r, buf) in nat.iter_mut().enumerate() {
+                            let t0 = std::time::Instant::now();
+                            mttkrp_rank_into(
+                                engine,
+                                machine,
+                                r,
+                                x_name,
+                                &f_names,
+                                order,
+                                mode,
+                                buf,
+                            )?;
+                            machine.charge_compute(r, t0.elapsed().as_secs_f64());
+                        }
+                        // ...then permute into the store-recycled
+                        // destinations (no allocation on either side).
+                        machine.compute_step_into(&out_name, &permuted_dims, |r, _m, dest| {
+                            nat[r].permute_into(&perm, dest)
+                        })?;
+                        scratch.put(key, nat);
                     }
                 }
                 LocalKernel::Seq => {
-                    let ops = term.ops.clone();
-                    let ids: Vec<usize> = term.inputs.iter().map(|t| t.id).collect();
-                    let idx_strs: Vec<Vec<char>> =
-                        term.inputs.iter().map(|t| t.indices.clone()).collect();
-                    let in_names_c = in_names.clone();
-                    let out_id = term.output_id;
-                    machine.compute_step(&out_name, move |r, m| {
-                        // local tensor table: id -> (tensor, index string)
-                        let mut table: std::collections::BTreeMap<usize, (Tensor, Vec<char>)> =
-                            std::collections::BTreeMap::new();
-                        for ((id, name), idx) in
-                            ids.iter().zip(&in_names_c).zip(&idx_strs)
-                        {
-                            table.insert(*id, (m.get(name, r)?.clone(), idx.clone()));
+                    // Local output extents per index char: inputs are
+                    // staged at their distribution's padded local dims,
+                    // so every op's local output shape is fixed by the
+                    // chars it keeps — known before any kernel runs,
+                    // which is what lets the destinations be recycled.
+                    let mut local_ext: BTreeMap<char, usize> = BTreeMap::new();
+                    for tin in &term.inputs {
+                        for (c, e) in tin.indices.iter().zip(tin.dist.local_dims()) {
+                            local_ext.insert(*c, e);
                         }
-                        let mut last: Option<usize> = None;
-                        for op in &ops {
-                            let out = match op.input_ids.len() {
+                    }
+                    let op_dims: Vec<Vec<usize>> = term
+                        .ops
+                        .iter()
+                        .map(|op| {
+                            let d: Vec<usize> = op
+                                .output
+                                .iter()
+                                .map(|c| {
+                                    local_ext.get(c).copied().ok_or_else(|| {
+                                        Error::plan(format!("seq: unknown index '{c}'"))
+                                    })
+                                })
+                                .collect::<Result<_>>()?;
+                            Ok(if d.is_empty() { vec![1] } else { d })
+                        })
+                        .collect::<Result<_>>()?;
+                    let n_ops = term.ops.len();
+                    if n_ops == 0 {
+                        return Err(Error::plan("empty term"));
+                    }
+                    debug_assert_eq!(term.ops[n_ops - 1].output_id, term.output_id);
+                    // Tensor-id table: term inputs are *borrowed* from
+                    // the store (never deep-copied); intermediates live
+                    // in scratch buffers recycled across runs.  The
+                    // final op writes the store-recycled destination.
+                    let mut src_of: BTreeMap<usize, SeqSrc> = BTreeMap::new();
+                    for (slot, tin) in term.inputs.iter().enumerate() {
+                        src_of.insert(tin.id, SeqSrc::Input(slot));
+                    }
+                    for (j, op) in term.ops.iter().enumerate() {
+                        src_of.insert(op.output_id, SeqSrc::Op(j));
+                    }
+                    let mut opbufs: Vec<Vec<Tensor>> = (0..n_ops - 1)
+                        .map(|j| {
+                            live_scratch.insert((ti, j));
+                            scratch.take((ti, j), plan.p, &op_dims[j])
+                        })
+                        .collect();
+                    let ops = &term.ops;
+                    let term_inputs = &term.inputs;
+                    machine.compute_step_into(&out_name, &op_dims[n_ops - 1], |r, m, dest| {
+                        for (j, op) in ops.iter().enumerate() {
+                            // Ops run in order: everything before `j` is
+                            // readable, `j`'s buffer (or the final
+                            // destination) is writable.
+                            let (done, rest) = opbufs.split_at_mut(j.min(n_ops - 1));
+                            let dst: &mut Tensor =
+                                if j == n_ops - 1 { &mut *dest } else { &mut rest[0][r] };
+                            match op.input_ids.len() {
                                 2 => {
-                                    let (a, ai) = table
-                                        .get(&op.input_ids[0])
-                                        .ok_or_else(|| Error::plan("missing local"))?
-                                        .clone();
-                                    let (b, bi) = table
-                                        .get(&op.input_ids[1])
-                                        .ok_or_else(|| Error::plan("missing local"))?
-                                        .clone();
-                                    // Engine dispatch: folds and packing
-                                    // reuse the engine's scratch pool
-                                    // across steps.
-                                    engine.einsum2(&a, &ai, &b, &bi, &op.output)?
+                                    let (a, ai) = seq_operand(
+                                        op.input_ids[0],
+                                        j,
+                                        &src_of,
+                                        m,
+                                        r,
+                                        &in_names,
+                                        term_inputs,
+                                        done,
+                                        ops,
+                                    )?;
+                                    let (b, bi) = seq_operand(
+                                        op.input_ids[1],
+                                        j,
+                                        &src_of,
+                                        m,
+                                        r,
+                                        &in_names,
+                                        term_inputs,
+                                        done,
+                                        ops,
+                                    )?;
+                                    engine.einsum2_into(a, ai, b, bi, &op.output, dst)?;
                                 }
                                 1 => {
-                                    let (a, ai) = table
-                                        .get(&op.input_ids[0])
-                                        .ok_or_else(|| Error::plan("missing local"))?
-                                        .clone();
-                                    // unary: permutation (and/or reduction)
-                                    unary_local(&a, &ai, &op.output)?
+                                    let (a, ai) = seq_operand(
+                                        op.input_ids[0],
+                                        j,
+                                        &src_of,
+                                        m,
+                                        r,
+                                        &in_names,
+                                        term_inputs,
+                                        done,
+                                        ops,
+                                    )?;
+                                    unary_local_into(a, ai, &op.output, dst)?;
                                 }
                                 n => {
                                     return Err(Error::plan(format!(
                                         "{n}-ary local op unsupported"
                                     )))
                                 }
-                            };
-                            table.insert(op.output_id, (out, op.output.clone()));
-                            last = Some(op.output_id);
+                            }
                         }
-                        let last = last.ok_or_else(|| Error::plan("empty term"))?;
-                        debug_assert_eq!(last, out_id);
-                        Ok(table.remove(&last).unwrap().0)
+                        Ok(())
                     })?;
+                    for (j, v) in opbufs.into_iter().enumerate() {
+                        scratch.put((ti, j), v);
+                    }
                 }
             }
             machine.end_step();
             stats.local_out_bytes =
-                term.output_dist.local_dims().iter().product::<usize>() * 4;
+                term.output_dist.local_dims().iter().product::<usize>() * ELEM_BYTES;
 
             // --- reduce partials over sub-grids -------------------------------
             if !term.reduced_grid_dims.is_empty() {
@@ -310,10 +458,11 @@ impl<'e> Coordinator<'e> {
             per_term.push(stats);
         }
 
-        // Prune buffer sets a previous plan staged under names this run
-        // never touched (keeps the persistent store bounded by the
-        // current plan's footprint).
+        // Prune buffer sets a previous plan staged under names (or
+        // scratch keys) this run never touched (keeps the persistent
+        // buffers bounded by the current plan's footprint).
         machine.retain_tensors(|n| live_names.contains(n));
+        scratch.bufs.retain(|k, _| live_scratch.contains(k));
 
         // --- gather the result ------------------------------------------------
         let last = plan.terms.last().ok_or_else(|| Error::plan("empty plan"))?;
@@ -323,8 +472,10 @@ impl<'e> Coordinator<'e> {
         for bc in dist.block_coords() {
             let owner = dist.owner_of_block(&bc);
             let (off, size) = dist.block_for_rank(owner);
-            let blk = machine.get(&out_name, owner)?.block(&vec![0; size.len()], &size);
-            assembled.set_block(&off, &blk);
+            // Direct strided copy out of the owner's local buffer — no
+            // temporary block tensor per block.
+            let zero_off = vec![0usize; size.len()];
+            assembled.copy_box_from(machine.get(&out_name, owner)?, &zero_off, &off, &size);
         }
         // Permute to the einsum's requested output order if needed.
         let output = if last.output_indices == plan.spec.output {
@@ -353,17 +504,108 @@ impl<'e> Coordinator<'e> {
     }
 }
 
-/// Unary local op: permutation, possibly with summed-away indices.
+/// Where a Seq-local tensor id lives during a rank's execution: borrowed
+/// from the machine store (term input slot) or from a recycled scratch
+/// buffer (output of an earlier op of the same term).
+enum SeqSrc {
+    Input(usize),
+    Op(usize),
+}
+
+/// Resolve operand `id` of op `j` to a borrowed tensor + index string —
+/// the replacement for the old per-rank clone-everything local table.
+#[allow(clippy::too_many_arguments)]
+fn seq_operand<'a>(
+    id: usize,
+    j: usize,
+    src_of: &BTreeMap<usize, SeqSrc>,
+    m: &'a Machine,
+    r: usize,
+    in_names: &'a [String],
+    inputs: &'a [TermInput],
+    done: &'a [Vec<Tensor>],
+    ops: &'a [BinaryOp],
+) -> Result<(&'a Tensor, &'a [char])> {
+    match src_of.get(&id) {
+        Some(SeqSrc::Input(slot)) => {
+            Ok((m.get(&in_names[*slot], r)?, inputs[*slot].indices.as_slice()))
+        }
+        Some(SeqSrc::Op(i)) if *i < j => Ok((&done[*i][r], ops[*i].output.as_slice())),
+        _ => Err(Error::plan(format!("seq: operand t{id} not available at op {j}"))),
+    }
+}
+
+/// One rank's fused-MTTKRP local kernel through the recycled-output
+/// engine path (`slots` layout: `order` entries, the `mode` slot is a
+/// placeholder the kernel ignores).
+#[allow(clippy::too_many_arguments)]
+fn mttkrp_rank_into(
+    engine: &KernelEngine,
+    m: &Machine,
+    r: usize,
+    x_name: &str,
+    f_names: &[&str],
+    order: usize,
+    mode: usize,
+    dest: &mut Tensor,
+) -> Result<()> {
+    let x = m.get(x_name, r)?;
+    let fs: Vec<&Tensor> = f_names.iter().map(|n| m.get(n, r)).collect::<Result<_>>()?;
+    let mut slots: Vec<&Tensor> = Vec::with_capacity(order);
+    let mut fi = fs.iter();
+    for mm in 0..order {
+        if mm == mode {
+            slots.push(x); // placeholder, ignored
+        } else {
+            slots.push(fi.next().unwrap());
+        }
+    }
+    engine.mttkrp_into(x, &slots, mode, dest)
+}
+
+/// Unary local op: permutation, possibly with summed-away indices
+/// (allocating wrapper over [`unary_local_into`], kept as the oracle in
+/// tests — the run loop itself only uses the `_into` variant).
+#[cfg(test)]
 fn unary_local(a: &Tensor, a_idx: &[char], out_idx: &[char]) -> Result<Tensor> {
-    let mut t = a.clone();
+    let dims: Vec<usize> = out_idx
+        .iter()
+        .map(|c| {
+            a_idx
+                .iter()
+                .position(|d| d == c)
+                .map(|d| a.dims()[d])
+                .ok_or_else(|| Error::shape(format!("unary: index '{c}' missing")))
+        })
+        .collect::<Result<_>>()?;
+    let dims = if dims.is_empty() { vec![1] } else { dims };
+    let mut out = Tensor::zeros(&dims);
+    unary_local_into(a, a_idx, out_idx, &mut out)?;
+    Ok(out)
+}
+
+/// `unary_local` writing through a recycled destination: the final
+/// permutation (the common case — pure mode reorder) lands directly in
+/// `dest` with zero allocations; summed-away indices still reduce
+/// through allocating intermediates ([`contract::reduce_mode`]), the
+/// same exception `einsum2`'s private-index pre-reduction documents.
+fn unary_local_into(
+    a: &Tensor,
+    a_idx: &[char],
+    out_idx: &[char],
+    dest: &mut Tensor,
+) -> Result<()> {
+    let mut owned: Option<Tensor> = None;
     let mut idx = a_idx.to_vec();
     // reduce dropped indices
     while let Some(d) = idx.iter().position(|c| !out_idx.contains(c)) {
-        t = contract::reduce_mode(&t, d);
+        let cur = owned.as_ref().unwrap_or(a);
+        owned = Some(contract::reduce_mode(cur, d));
         idx.remove(d);
     }
-    if idx == out_idx {
-        return Ok(t);
+    let t = owned.as_ref().unwrap_or(a);
+    if idx == out_idx || idx.is_empty() {
+        return dest.copy_from(t);
     }
     let perm: Vec<usize> = out_idx
         .iter()
@@ -373,7 +615,7 @@ fn unary_local(a: &Tensor, a_idx: &[char], out_idx: &[char]) -> Result<Tensor> {
                 .ok_or_else(|| Error::shape(format!("unary: index '{c}' missing")))
         })
         .collect::<Result<_>>()?;
-    Ok(t.permute(&perm))
+    t.permute_into(&perm, dest)
 }
 
 #[cfg(test)]
@@ -665,13 +907,16 @@ mod tests {
         coord.run(&pl, &inputs).unwrap();
         let warm_scratch = engine.scratch_stats();
         let warm_store = coord.machine_stats();
+        let warm_local = coord.local_scratch_stats();
         assert!(warm_store.dest_allocs > 0, "first run must have allocated destinations");
+        assert!(warm_store.out_allocs > 0, "first run must have allocated compute outputs");
         for _ in 0..2 {
             let rep = coord.run(&pl, &inputs).unwrap();
             assert!(rep.output.allclose(&first.output, 0.0, 0.0), "reruns must be bitwise stable");
         }
         let after_scratch = engine.scratch_stats();
         let after_store = coord.machine_stats();
+        let after_local = coord.local_scratch_stats();
         assert_eq!(
             after_scratch.allocs, warm_scratch.allocs,
             "steady-state packing/fold allocated ({warm_scratch:?} -> {after_scratch:?})"
@@ -680,11 +925,114 @@ mod tests {
             after_store.dest_allocs, warm_store.dest_allocs,
             "steady-state staging/redistribution allocated ({warm_store:?} -> {after_store:?})"
         );
+        assert_eq!(
+            after_store.out_allocs, warm_store.out_allocs,
+            "steady-state compute outputs allocated ({warm_store:?} -> {after_store:?})"
+        );
+        assert_eq!(
+            after_local.allocs, warm_local.allocs,
+            "steady-state Seq intermediates/permutes allocated ({warm_local:?} -> {after_local:?})"
+        );
         assert!(
             after_store.dest_reuses > warm_store.dest_reuses,
             "reruns must recycle store buffers"
         );
+        assert!(
+            after_store.out_reuses > warm_store.out_reuses,
+            "reruns must recycle compute-output buffers"
+        );
         assert_eq!(engine.config(), base, "per-term config override must be reset");
+    }
+
+    #[test]
+    fn steady_state_holds_across_thread_counts_with_identical_outputs() {
+        // The acceptance invariant: the recycled-output path is
+        // allocation-free after warmup AND bitwise identical between a
+        // serial and an 8-thread engine.
+        let spec = EinsumSpec::parse(
+            "ijk,ja,ka,al->il",
+            &[vec![16, 16, 16], vec![16, 8], vec![16, 8], vec![8, 16]],
+        )
+        .unwrap();
+        let cfg = PlannerConfig { s_elements: 64.0, ..Default::default() };
+        let pl = plan(&spec, 8, &cfg).unwrap();
+        let inputs: Vec<Tensor> = vec![
+            Tensor::random(&[16, 16, 16], 1),
+            Tensor::random(&[16, 8], 2),
+            Tensor::random(&[16, 8], 3),
+            Tensor::random(&[8, 16], 4),
+        ];
+        let mut outputs = Vec::new();
+        for threads in [1usize, 8] {
+            let engine = KernelEngine::native_with(
+                crate::tensor::KernelConfig::default().with_threads(threads),
+            );
+            let coord = Coordinator::new(&engine, NetworkModel::aries());
+            for _ in 0..2 {
+                coord.run(&pl, &inputs).unwrap();
+            }
+            let warm = (coord.machine_stats(), coord.local_scratch_stats());
+            let rep = coord.run(&pl, &inputs).unwrap();
+            let after = (coord.machine_stats(), coord.local_scratch_stats());
+            assert_eq!(after.0.dest_allocs, warm.0.dest_allocs, "{threads}t dest");
+            assert_eq!(after.0.out_allocs, warm.0.out_allocs, "{threads}t out");
+            assert_eq!(after.1.allocs, warm.1.allocs, "{threads}t local scratch");
+            outputs.push(rep.output);
+        }
+        assert!(
+            outputs[0].allclose(&outputs[1], 0.0, 0.0),
+            "1t vs 8t outputs must be bitwise identical"
+        );
+    }
+
+    #[test]
+    fn mttkrp_permuted_output_recycles_and_matches_oracle() {
+        // Regression: the MTTKRP output-order permute used to allocate
+        // plan.p fresh tensors on every run.  Output order 'ai' differs
+        // from the kernel's natural (mode, r) = 'ia', forcing the
+        // permute path; counters must stay flat across reruns.
+        let spec = EinsumSpec::parse(
+            "ijk,ja,ka->ai",
+            &[vec![16, 20, 12], vec![20, 6], vec![12, 6]],
+        )
+        .unwrap();
+        let pl = plan(&spec, 4, &PlannerConfig::default()).unwrap();
+        let term = pl.terms.last().unwrap();
+        assert!(
+            matches!(pl.terms[0].kernel, LocalKernel::Mttkrp { .. }),
+            "plan must use the fused MTTKRP kernel"
+        );
+        assert_eq!(term.output_indices, vec!['a', 'i'], "output must be permuted");
+        let inputs: Vec<Tensor> = vec![
+            Tensor::random(&[16, 20, 12], 5),
+            Tensor::random(&[20, 6], 6),
+            Tensor::random(&[12, 6], 7),
+        ];
+        let engine = KernelEngine::native();
+        let coord = Coordinator::new(&engine, NetworkModel::aries());
+        let first = coord.run(&pl, &inputs).unwrap();
+        let want = oracle(&spec, &inputs);
+        assert!(first.output.allclose(&want, 1e-3, 1e-3));
+        coord.run(&pl, &inputs).unwrap();
+        let warm_store = coord.machine_stats();
+        let warm_local = coord.local_scratch_stats();
+        assert!(warm_local.reuses > 0, "second run must recycle permute buffers");
+        for _ in 0..3 {
+            let rep = coord.run(&pl, &inputs).unwrap();
+            assert!(rep.output.allclose(&first.output, 0.0, 0.0));
+        }
+        let after_store = coord.machine_stats();
+        let after_local = coord.local_scratch_stats();
+        assert_eq!(after_store.dest_allocs, warm_store.dest_allocs);
+        assert_eq!(
+            after_store.out_allocs, warm_store.out_allocs,
+            "permuted MTTKRP outputs must recycle ({warm_store:?} -> {after_store:?})"
+        );
+        assert!(after_store.out_reuses > warm_store.out_reuses);
+        assert_eq!(
+            after_local.allocs, warm_local.allocs,
+            "permute scratch must recycle ({warm_local:?} -> {after_local:?})"
+        );
     }
 
     #[test]

@@ -72,15 +72,31 @@
 //!   staging and redistribution destinations are recycled from the
 //!   previous run (`redist::execute_into`, [`sim::StoreStats`]
 //!   counters), the allreduce reduces in place, and each term
-//!   reconfigures the engine with its SOAP-derived tiles automatically.
+//!   reconfigures the engine with its SOAP-derived tiles automatically;
+//! - **compute outputs are recycled too**: every local kernel has a
+//!   `*_into` variant writing through a caller-provided tensor
+//!   (`contract::einsum2_into` / `contract::mttkrp_into`,
+//!   `runtime::KernelEngine::einsum2_into` / `mttkrp_into`), the machine
+//!   hands each rank a store-recycled destination
+//!   ([`sim::Machine::compute_step_into`], `out_allocs`/`out_reuses`
+//!   counters), Seq-kernel intermediates and the MTTKRP output-order
+//!   permute recycle through the coordinator's per-`(term, op)` scratch
+//!   table ([`coordinator::LocalScratchStats`]), and local inputs are
+//!   borrowed from the store instead of deep-copied per rank per step.
 //!
 //! Per-element reduction orders are fixed by the serial panel walk, so
 //! results are **bitwise identical across thread counts** (asserted in
 //! tests).  Steady-state invariant, counter-asserted end to end: zero
-//! packing/fold/staging/redistribution allocations across repeated
-//! coordinator runs.  `cargo bench --bench hotpath` tracks the win as
-//! `coordinator_steady_state` / `pool_dispatch` vs the retained
-//! spawn-per-step baselines in `BENCH_hotpath.json`.
+//! tensor allocations across repeated coordinator runs — packing, folds,
+//! staging, redistribution, compute outputs, Seq intermediates, and the
+//! MTTKRP permute all come from recycled buffers.  (One documented
+//! exception remains: ops that sum away an index private to a single
+//! operand pre-reduce through allocating intermediates —
+//! `contract::reduce_mode` — a path the benchmark-family plans never
+//! take and no counter tracks.)  `cargo bench --bench hotpath` tracks
+//! the win as `coordinator_steady_state` (now with an `allocs_per_run`
+//! field) / `pool_dispatch` vs the retained spawn-per-step baselines in
+//! `BENCH_hotpath.json`.
 
 pub mod baseline;
 pub mod bench_support;

@@ -15,7 +15,7 @@
 
 use crate::dist::TensorDist;
 use crate::error::{Error, Result};
-use crate::tensor::Tensor;
+use crate::tensor::{Tensor, ELEM_BYTES};
 
 /// One per-dimension overlap segment between a source and a destination
 /// block (Eqs. 25/27 solved as interval intersection).
@@ -86,7 +86,7 @@ impl Message {
     }
     /// Bytes moved (f32).
     pub fn bytes(&self) -> usize {
-        self.volume() * 4
+        self.volume() * ELEM_BYTES
     }
 }
 
@@ -184,33 +184,6 @@ pub fn plan(src: &TensorDist, dst: &TensorDist) -> Result<RedistPlan> {
     Ok(RedistPlan { messages, remote_volume, local_volume })
 }
 
-/// Execute a redistribution plan on per-rank local buffers, allocating a
-/// fresh zeroed destination tensor per rank.  Deprecated: it was the one
-/// step of the coordinator hot path that re-allocated its destinations
-/// on every run.  The simulator now holds a persistent
-/// [`crate::sim::Machine`] whose [`redistribute`](crate::sim::Machine::redistribute)
-/// recycles the previous run's buffers through [`execute_into`]; call
-/// that directly with caller-owned destinations instead.
-#[deprecated(
-    since = "0.3.0",
-    note = "allocates fresh destinations per call; use execute_into with recycled buffers"
-)]
-pub fn execute(
-    rp: &RedistPlan,
-    src: &TensorDist,
-    dst: &TensorDist,
-    src_bufs: &[Tensor],
-) -> Result<Vec<Tensor>> {
-    let p = src.grid.size().max(dst.grid.size());
-    if src_bufs.len() < src.grid.size() {
-        return Err(Error::plan("src buffer count < grid size"));
-    }
-    let mut out: Vec<Tensor> =
-        (0..p).map(|_| Tensor::zeros(&dst.local_dims())).collect();
-    execute_into(rp, src_bufs, &mut out);
-    Ok(out)
-}
-
 /// Move every message box into caller-owned destination buffers (one per
 /// rank, shaped `dst.local_dims()`, zeroed by the caller — message boxes
 /// only overwrite the regions they cover).  Each box moves with direct
@@ -283,8 +256,7 @@ mod tests {
     }
 
     /// Test harness over [`execute_into`]: allocate zeroed destinations
-    /// (sized by the larger grid, as the deprecated `execute` did) and
-    /// move the boxes.
+    /// (sized by the larger grid) and move the boxes.
     fn run_execute(
         rp: &RedistPlan,
         src: &TensorDist,

@@ -455,25 +455,34 @@ impl KernelEngine {
         contract::gemm_with(&self.config.get(), &self.scratch, a, b)
     }
 
-    /// Fused mode-`mode` MTTKRP. `factors` lists all `order` factor slots;
-    /// the `mode` slot is ignored.
-    pub fn mttkrp(&self, x: &Tensor, factors: &[&Tensor], mode: usize) -> Result<Tensor> {
-        if self.backend == Backend::Pjrt {
-            let order = x.order();
-            let rest: Vec<usize> = (0..order).filter(|&m| m != mode).collect();
-            let r = factors[rest[0]].dims()[1];
-            // Artifacts are mode-0: permute X so `mode` leads (HPTT's role).
-            let xp = if mode == 0 {
-                x.clone()
-            } else {
-                let mut perm = vec![mode];
-                perm.extend(rest.iter().copied());
-                x.permute(&perm)
-            };
-            let want: Vec<usize> = xp.dims().to_vec();
-            if let Some((engine, v, exact)) = self.find_bucket("mttkrp", &want, |v| {
-                v.r == Some(r)
-            }) {
+    /// The PJRT dispatch attempt for a fused MTTKRP: `Some(result)` when
+    /// a compiled variant (exact or bucketed) serves the op, `None` when
+    /// the native engine should (also counts the native fallback).
+    fn mttkrp_pjrt(
+        &self,
+        x: &Tensor,
+        factors: &[&Tensor],
+        mode: usize,
+    ) -> Option<Result<Tensor>> {
+        if self.backend != Backend::Pjrt {
+            return None;
+        }
+        let order = x.order();
+        let rest: Vec<usize> = (0..order).filter(|&m| m != mode).collect();
+        let r = factors[rest[0]].dims()[1];
+        // Artifacts are mode-0: permute X so `mode` leads (HPTT's role).
+        let xp = if mode == 0 {
+            x.clone()
+        } else {
+            let mut perm = vec![mode];
+            perm.extend(rest.iter().copied());
+            x.permute(&perm)
+        };
+        let want: Vec<usize> = xp.dims().to_vec();
+        if let Some((engine, v, exact)) = self.find_bucket("mttkrp", &want, |v| {
+            v.r == Some(r)
+        }) {
+            let run = || -> Result<Tensor> {
                 let vdims = v.dims.clone().unwrap();
                 let xpad =
                     if exact { xp.clone() } else { xp.block(&vec![0; want.len()], &vdims) };
@@ -489,17 +498,42 @@ impl KernelEngine {
                 let refs: Vec<&Tensor> = ins.iter().collect();
                 let out = engine.execute(v, &refs)?;
                 engine.bump(|s| if exact { s.pjrt_exact += 1 } else { s.pjrt_padded += 1 });
-                return Ok(if exact {
-                    out
-                } else {
-                    out.block(&[0, 0], &[x.dims()[mode], r])
-                });
-            }
-            if let Some(engine) = self.engine.as_ref() {
-                engine.bump(|s| s.native += 1);
-            }
+                Ok(if exact { out } else { out.block(&[0, 0], &[x.dims()[mode], r]) })
+            };
+            return Some(run());
+        }
+        if let Some(engine) = self.engine.as_ref() {
+            engine.bump(|s| s.native += 1);
+        }
+        None
+    }
+
+    /// Fused mode-`mode` MTTKRP. `factors` lists all `order` factor slots;
+    /// the `mode` slot is ignored.
+    pub fn mttkrp(&self, x: &Tensor, factors: &[&Tensor], mode: usize) -> Result<Tensor> {
+        if let Some(res) = self.mttkrp_pjrt(x, factors, mode) {
+            return res;
         }
         contract::mttkrp_with(&self.config.get(), &self.scratch, x, factors, mode)
+    }
+
+    /// [`mttkrp`](Self::mttkrp) writing through a caller-provided
+    /// `(I_mode, R)` destination — the coordinator's recycled-output hot
+    /// path.  The native engine writes in place with zero allocations
+    /// ([`contract::mttkrp_with_into`]); a PJRT-served op still
+    /// materializes the executable's result and copies it in (device
+    /// buffers are not recyclable host tensors).
+    pub fn mttkrp_into(
+        &self,
+        x: &Tensor,
+        factors: &[&Tensor],
+        mode: usize,
+        dest: &mut Tensor,
+    ) -> Result<()> {
+        if let Some(res) = self.mttkrp_pjrt(x, factors, mode) {
+            return dest.copy_from(&res?);
+        }
+        contract::mttkrp_with_into(&self.config.get(), &self.scratch, x, factors, mode, dest)
     }
 
     /// General binary einsum on the local tiles (the `Seq` kernel's
@@ -520,6 +554,35 @@ impl KernelEngine {
             engine.bump(|s| s.native += 1);
         }
         contract::einsum2_with(&self.config.get(), &self.scratch, x, x_idx, y, y_idx, out_idx)
+    }
+
+    /// [`einsum2`](Self::einsum2) writing through a caller-provided
+    /// destination (shape-checked; contents overwritten) — always served
+    /// by the native packed engine, with zero allocations once the
+    /// scratch pool is warm.
+    #[allow(clippy::too_many_arguments)]
+    pub fn einsum2_into(
+        &self,
+        x: &Tensor,
+        x_idx: &[char],
+        y: &Tensor,
+        y_idx: &[char],
+        out_idx: &[char],
+        dest: &mut Tensor,
+    ) -> Result<()> {
+        if let Some(engine) = self.engine.as_ref() {
+            engine.bump(|s| s.native += 1);
+        }
+        contract::einsum2_into_with(
+            &self.config.get(),
+            &self.scratch,
+            x,
+            x_idx,
+            y,
+            y_idx,
+            out_idx,
+            dest,
+        )
     }
 
     /// Materialized flat KRP (baseline two-step path): `(I0*I1, R)`.

@@ -25,7 +25,7 @@ pub use network::NetworkModel;
 use std::collections::HashMap;
 
 use crate::error::{Error, Result};
-use crate::tensor::Tensor;
+use crate::tensor::{Tensor, ELEM_BYTES};
 
 /// Per-step time breakdown (the blue/pink split of Fig. 5).
 #[derive(Debug, Default, Clone, Copy, PartialEq)]
@@ -62,10 +62,17 @@ pub struct CommStats {
 /// coordinator-level analogue of [`crate::tensor::kernel::ScratchStats`]).
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct StoreStats {
-    /// Destination tensors heap-allocated (first run, or shape change).
+    /// Staging/redistribution destination tensors heap-allocated (first
+    /// run, or shape change).
     pub dest_allocs: u64,
-    /// Destination tensors recycled from the persistent store.
+    /// Staging/redistribution destination tensors recycled from the
+    /// persistent store.
     pub dest_reuses: u64,
+    /// Compute-output tensors heap-allocated
+    /// ([`Machine::compute_step_into`]: first run, or shape change).
+    pub out_allocs: u64,
+    /// Compute-output tensors recycled from the persistent store.
+    pub out_reuses: u64,
 }
 
 /// The simulated machine: rank-local tensor stores + cost accounting.
@@ -126,15 +133,25 @@ impl Machine {
     }
 
     /// Take `name`'s per-rank buffer set out of the store for in-place
-    /// recycling, but only if every buffer matches `dims` (otherwise the
-    /// caller must allocate; the counters record which happened).
-    fn recycle_bufs(&mut self, name: &str, dims: &[usize]) -> Option<Vec<Tensor>> {
+    /// recycling, but only if every buffer matches `dims` (a mismatched
+    /// set is dropped and the caller must allocate).  Counter-neutral:
+    /// callers record the hit/miss under the right [`StoreStats`] pair.
+    fn take_recycled(&mut self, name: &str, dims: &[usize]) -> Option<Vec<Tensor>> {
         match self.store.remove(name) {
-            Some(v) if v.len() == self.ranks && v.iter().all(|t| t.dims() == dims) => {
+            Some(v) if v.len() == self.ranks && v.iter().all(|t| t.dims() == dims) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// [`take_recycled`](Self::take_recycled) for staging/redistribution
+    /// destinations, recorded under `dest_allocs`/`dest_reuses`.
+    fn recycle_bufs(&mut self, name: &str, dims: &[usize]) -> Option<Vec<Tensor>> {
+        match self.take_recycled(name, dims) {
+            Some(v) => {
                 self.store_stats.dest_reuses += self.ranks as u64;
                 Some(v)
             }
-            _ => {
+            None => {
                 self.store_stats.dest_allocs += self.ranks as u64;
                 None
             }
@@ -144,8 +161,10 @@ impl Machine {
     /// Scatter `global` into per-rank blocks under `name` according to
     /// `dist`, recycling the existing store buffers when shapes match
     /// (the coordinator's input staging: zero allocations in steady
-    /// state).  Buffers are zeroed first so clipped edge blocks keep the
-    /// [`Tensor::block`] zero-pad semantics.
+    /// state).  Only buffers whose block is clipped at the global edge
+    /// are zero-filled before the copy — interior blocks are fully
+    /// overwritten — keeping the [`Tensor::block`] zero-pad semantics
+    /// without a redundant memset per full block.
     pub fn stage_blocks(
         &mut self,
         name: &str,
@@ -158,8 +177,14 @@ impl Machine {
             .unwrap_or_else(|| (0..self.ranks).map(|_| Tensor::zeros(&ldims)).collect());
         let zero_off = vec![0usize; ldims.len()];
         for (r, buf) in bufs.iter_mut().enumerate() {
-            let (off, _) = dist.block_for_rank(r);
-            buf.data_mut().fill(0.0);
+            let (off, size) = dist.block_for_rank(r);
+            // The copied box overwrites exactly the clipped block; a full
+            // (interior) block covers the whole buffer, so only blocks
+            // clipped at the global edge need their zero padding
+            // re-established before the copy.
+            if size != ldims {
+                buf.data_mut().fill(0.0);
+            }
             buf.copy_box_from(global, &off, &zero_off, &ldims);
         }
         self.store.insert(name.to_string(), bufs);
@@ -238,6 +263,36 @@ impl Machine {
         Ok(())
     }
 
+    /// [`compute_step`](Self::compute_step) with **recycled outputs**:
+    /// each rank's destination tensor (shape `dims`) is recycled from the
+    /// persistent store under `out_name` when the previous run left a
+    /// matching buffer set there ([`StoreStats::out_allocs`] /
+    /// [`StoreStats::out_reuses`]), and `f` writes the rank's result
+    /// through it.  Destination contents are unspecified on entry — the
+    /// `*_into` kernels fully overwrite (or zero-initialize) them.
+    pub fn compute_step_into<F>(&mut self, out_name: &str, dims: &[usize], mut f: F) -> Result<()>
+    where
+        F: FnMut(usize, &Machine, &mut Tensor) -> Result<()>,
+    {
+        let mut outs = match self.take_recycled(out_name, dims) {
+            Some(v) => {
+                self.store_stats.out_reuses += self.ranks as u64;
+                v
+            }
+            None => {
+                self.store_stats.out_allocs += self.ranks as u64;
+                (0..self.ranks).map(|_| Tensor::zeros(dims)).collect()
+            }
+        };
+        for (r, out) in outs.iter_mut().enumerate() {
+            let t0 = std::time::Instant::now();
+            f(r, self, out)?;
+            self.step_compute[r] += t0.elapsed().as_secs_f64();
+        }
+        self.store.insert(out_name.to_string(), outs);
+        Ok(())
+    }
+
     /// Close the current step: parallel compute time = max over ranks.
     pub fn end_step(&mut self) {
         let max = self.step_compute.iter().cloned().fold(0.0, f64::max);
@@ -279,9 +334,9 @@ impl Machine {
                 let (dst, root) = two_ranks_mut(bufs, r, g[0]);
                 dst.data_mut().copy_from_slice(root.data());
             }
-            let bytes = (len * 4) as f64;
+            let bytes = (len * ELEM_BYTES) as f64;
             let t = self.net.allreduce_time(g.len(), bytes);
-            self.comm.allreduce_bytes += (len * 4) as u128 * (g.len() as u128);
+            self.comm.allreduce_bytes += (len * ELEM_BYTES) as u128 * (g.len() as u128);
             self.comm.allreduces += 1;
             max_t = max_t.max(t);
         }
@@ -479,6 +534,78 @@ mod tests {
             let got = m.get("x", r).unwrap().block(&vec![0; 1], &size);
             assert!(got.allclose(&want, 0.0, 0.0), "rank {r} stale after recycle");
         }
+    }
+
+    #[test]
+    fn compute_step_into_recycles_outputs() {
+        let mut m = machine(2);
+        for run in 0..3usize {
+            m.compute_step_into("out", &[2], |r, _, dest| {
+                dest.data_mut().fill((run * 10 + r) as f32);
+                Ok(())
+            })
+            .unwrap();
+            m.end_step();
+        }
+        let s = m.store_stats();
+        assert_eq!(s.out_allocs, 2, "only the first step may allocate outputs");
+        assert_eq!(s.out_reuses, 4, "later steps must recycle the store buffers");
+        assert_eq!(m.get("out", 1).unwrap().data(), &[21.0, 21.0]);
+        // A shape change re-allocates (and the counters say so).
+        m.compute_step_into("out", &[3], |_, _, dest| {
+            dest.data_mut().fill(0.0);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(m.store_stats().out_allocs, 4);
+    }
+
+    #[test]
+    fn compute_step_into_reads_inputs_from_store() {
+        let mut m = machine(2);
+        m.put("x", vec![Tensor::from_vec(&[2], vec![1.0, 2.0]).unwrap(),
+                        Tensor::from_vec(&[2], vec![3.0, 4.0]).unwrap()])
+            .unwrap();
+        m.compute_step_into("y", &[2], |r, mm, dest| {
+            let x = mm.get("x", r)?;
+            for (d, s) in dest.data_mut().iter_mut().zip(x.data()) {
+                *d = s * 2.0;
+            }
+            Ok(())
+        })
+        .unwrap();
+        m.end_step();
+        assert_eq!(m.get("y", 1).unwrap().data(), &[6.0, 8.0]);
+        assert!(m.time.compute > 0.0);
+    }
+
+    #[test]
+    fn stage_blocks_edge_rank_zero_padding_survives_recycling() {
+        // Extent 10 over 4 ranks: blocks of 3, rank 3 holds [9..10) — a
+        // clipped block whose tail must stay zero-padded even when the
+        // buffer is recycled with stale nonzero contents.
+        let g = ProcessGrid::new(&[4]).unwrap();
+        let dist = TensorDist::new(&[10], &g, &[0]).unwrap();
+        let mut m = machine(4);
+        let global = Tensor::random(&[10], 11);
+        m.stage_blocks("x", &global, &dist).unwrap();
+        // Dirty every stored buffer, then restage: interior ranks are
+        // fully overwritten without a zero-fill; the clipped edge rank
+        // must be re-padded.
+        for buf in m.store.get_mut("x").unwrap() {
+            buf.data_mut().fill(7.5);
+        }
+        let global2 = Tensor::random(&[10], 12);
+        m.stage_blocks("x", &global2, &dist).unwrap();
+        assert_eq!(m.store_stats().dest_reuses, 4, "restaging must recycle");
+        for r in 0..4 {
+            let got = m.get("x", r).unwrap();
+            let (off, size) = dist.block_for_rank(r);
+            let want = global2.block(&off, &[3]);
+            assert!(got.allclose(&want, 0.0, 0.0), "rank {r} (size {size:?})");
+        }
+        // The edge rank's padding positions are exact zeros again.
+        assert_eq!(m.get("x", 3).unwrap().data()[1..], [0.0, 0.0]);
     }
 
     #[test]

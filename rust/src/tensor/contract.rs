@@ -208,15 +208,8 @@ pub fn mttkrp(x: &Tensor, factors: &[&Tensor], mode: usize) -> Result<Tensor> {
 /// buffers are fixed-size so the hot loop allocates nothing).
 const MAX_MTTKRP_ORDER: usize = 16;
 
-/// [`mttkrp`] with explicit engine config + scratch pool.  The macro
-/// loop mirrors the shared-packing GEMM: the KC×R KRP tile — this
-/// kernel's "B panel" — is formed **once** per column tile in shared
-/// pool scratch (PR 1 built it redundantly per worker), then the
-/// matricized tensor's rows are contracted against it as stealable
-/// pool-task bands (disjoint output slices), each through the strided
-/// packed GEMM with no panel gather.  The column-tile loop is serial and
-/// each row's reduction order is fixed by it, so results are bitwise
-/// identical across thread counts.
+/// [`mttkrp`] with explicit engine config + scratch pool: allocates the
+/// `(I_mode, R)` output and runs [`mttkrp_with_into`].
 pub fn mttkrp_with(
     cfg: &KernelConfig,
     pool: &ScratchPool,
@@ -224,6 +217,29 @@ pub fn mttkrp_with(
     factors: &[&Tensor],
     mode: usize,
 ) -> Result<Tensor> {
+    let (_, n_rows, r) = mttkrp_validate(x, factors, mode)?;
+    let mut out = Tensor::zeros(&[n_rows, r]);
+    mttkrp_with_into(cfg, pool, x, factors, mode, &mut out)?;
+    Ok(out)
+}
+
+/// [`mttkrp`] writing through a caller-provided `(I_mode, R)` output
+/// with the process-global config/pool (the recycled-output hot path).
+pub fn mttkrp_into(
+    x: &Tensor,
+    factors: &[&Tensor],
+    mode: usize,
+    dest: &mut Tensor,
+) -> Result<()> {
+    mttkrp_with_into(&KernelConfig::global(), kernel::global_pool(), x, factors, mode, dest)
+}
+
+/// Shared argument validation: returns `(rest modes, I_mode, R)`.
+fn mttkrp_validate(
+    x: &Tensor,
+    factors: &[&Tensor],
+    mode: usize,
+) -> Result<(Vec<usize>, usize, usize)> {
     let order = x.order();
     if factors.len() != order {
         return Err(Error::shape(format!(
@@ -245,12 +261,41 @@ pub fn mttkrp_with(
             )));
         }
     }
+    Ok((rest, x.dims()[mode], r))
+}
+
+/// The fused-MTTKRP engine proper, writing through a caller-provided
+/// destination (shape-checked `(I_mode, R)`; contents overwritten).  The
+/// macro loop mirrors the shared-packing GEMM: the KC×R KRP tile — this
+/// kernel's "B panel" — is formed **once** per column tile in shared
+/// pool scratch (PR 1 built it redundantly per worker), then the
+/// matricized tensor's rows are contracted against it as stealable
+/// pool-task bands (disjoint output slices), each through the strided
+/// packed GEMM with no panel gather.  The column-tile loop is serial and
+/// each row's reduction order is fixed by it, so results are bitwise
+/// identical across thread counts — and identical to the allocating
+/// [`mttkrp_with`], which is now a thin wrapper over this.
+pub fn mttkrp_with_into(
+    cfg: &KernelConfig,
+    pool: &ScratchPool,
+    x: &Tensor,
+    factors: &[&Tensor],
+    mode: usize,
+    dest: &mut Tensor,
+) -> Result<()> {
+    let (rest, n_rows, r) = mttkrp_validate(x, factors, mode)?;
+    if dest.dims() != [n_rows, r] {
+        return Err(Error::shape(format!(
+            "mttkrp_into: dest dims {:?} != [{n_rows}, {r}]",
+            dest.dims()
+        )));
+    }
     let cfg = cfg.normalized();
-    let n_rows = x.dims()[mode];
     let n_cols = x.len() / n_rows.max(1);
-    let mut out = vec![0.0f32; n_rows * r];
+    let out: &mut [f32] = dest.data_mut();
+    out.fill(0.0);
     if n_rows == 0 || n_cols == 0 || r == 0 {
-        return Tensor::from_vec(&[n_rows, r], out);
+        return Ok(());
     }
 
     // Matricize X with `mode` leading.  Mode 0 is already that layout —
@@ -258,7 +303,7 @@ pub fn mttkrp_with(
     let xm_guard = if mode == 0 {
         None
     } else {
-        let mut perm = Vec::with_capacity(order);
+        let mut perm = Vec::with_capacity(x.order());
         perm.push(mode);
         perm.extend(rest.iter().copied());
         let mut buf = pool.take(x.len());
@@ -291,7 +336,7 @@ pub fn mttkrp_with(
         let krp_tile: &[f32] = &krp[..tile * r];
         // out[rows, :] += X[rows, col0..col0+tile] @ krp — strided A
         // view (no gather), disjoint output bands, stealable tasks.
-        kernel::parallel_row_bands(threads, n_rows, r, &mut out, |row0, rows, out_band| {
+        kernel::parallel_row_bands(threads, n_rows, r, &mut *out, |row0, rows, out_band| {
             kernel::gemm_strided(
                 &serial,
                 pool,
@@ -308,8 +353,7 @@ pub fn mttkrp_with(
         });
         col0 += tile;
     }
-    drop(krp);
-    Tensor::from_vec(&[n_rows, r], out)
+    Ok(())
 }
 
 /// Form rows `col0..col0+tile` of the Khatri-Rao product into `krp`
@@ -389,6 +433,29 @@ pub fn einsum2(
     einsum2_with(&KernelConfig::global(), kernel::global_pool(), x, x_idx, y, y_idx, out_idx)
 }
 
+/// [`einsum2`] writing through a caller-provided output tensor with the
+/// process-global config/pool (the recycled-output hot path).  `dest`
+/// must already have the result dims; its contents are overwritten.
+pub fn einsum2_into(
+    x: &Tensor,
+    x_idx: &[char],
+    y: &Tensor,
+    y_idx: &[char],
+    out_idx: &[char],
+    dest: &mut Tensor,
+) -> Result<()> {
+    einsum2_into_with(
+        &KernelConfig::global(),
+        kernel::global_pool(),
+        x,
+        x_idx,
+        y,
+        y_idx,
+        out_idx,
+        dest,
+    )
+}
+
 /// [`einsum2`] with explicit engine config + scratch pool: the mode
 /// folds and (when the output order needs a final permute) the GEMM
 /// accumulator land in pool scratch, so steady-state steps allocate only
@@ -404,6 +471,43 @@ pub fn einsum2_with(
     y_idx: &[char],
     out_idx: &[char],
 ) -> Result<Tensor> {
+    let out = einsum2_dispatch(cfg, pool, x, x_idx, y, y_idx, out_idx, None)?;
+    Ok(out.expect("einsum2_dispatch without dest returns a tensor"))
+}
+
+/// [`einsum2_with`] writing through a caller-provided output: nothing on
+/// the path allocates except pool misses, so a warm pool plus a recycled
+/// `dest` makes the whole binary contraction allocation-free.  Results
+/// are bitwise identical to [`einsum2_with`] (same dispatch, same
+/// arithmetic order).
+#[allow(clippy::too_many_arguments)]
+pub fn einsum2_into_with(
+    cfg: &KernelConfig,
+    pool: &ScratchPool,
+    x: &Tensor,
+    x_idx: &[char],
+    y: &Tensor,
+    y_idx: &[char],
+    out_idx: &[char],
+    dest: &mut Tensor,
+) -> Result<()> {
+    einsum2_dispatch(cfg, pool, x, x_idx, y, y_idx, out_idx, Some(dest))?;
+    Ok(())
+}
+
+/// The einsum2 engine: with `dest` the result is written through it
+/// (shape-checked, returns `None`); without, a fresh tensor is returned.
+#[allow(clippy::too_many_arguments)]
+fn einsum2_dispatch(
+    cfg: &KernelConfig,
+    pool: &ScratchPool,
+    x: &Tensor,
+    x_idx: &[char],
+    y: &Tensor,
+    y_idx: &[char],
+    out_idx: &[char],
+    mut dest: Option<&mut Tensor>,
+) -> Result<Option<Tensor>> {
     if x.order() != x_idx.len() || y.order() != y_idx.len() {
         return Err(Error::shape("einsum2: index/rank mismatch"));
     }
@@ -556,18 +660,56 @@ pub fn einsum2_with(
     }
 
     if !needs_perm {
-        let mut c_data = vec![0.0f32; b * m * n];
+        // Result lands in natural layout: accumulate directly into the
+        // destination (recycled or freshly owned).
+        let mut owned: Vec<f32> = Vec::new();
+        let c_data: &mut [f32] = match dest.as_deref_mut() {
+            Some(d) => {
+                if d.dims() != &nat_dims[..] {
+                    return Err(Error::shape(format!(
+                        "einsum2_into: dest dims {:?} != result dims {:?}",
+                        d.dims(),
+                        nat_dims
+                    )));
+                }
+                let s = d.data_mut();
+                s.fill(0.0);
+                s
+            }
+            None => {
+                owned = vec![0.0f32; b * m * n];
+                &mut owned
+            }
+        };
         for bi in 0..b {
             let xs = &xp_data[bi * m * kk..(bi + 1) * m * kk];
             let ys = &yp_data[bi * kk * n..(bi + 1) * kk * n];
             let cs = &mut c_data[bi * m * n..(bi + 1) * m * n];
             kernel::gemm_into_with(cfg, pool, xs, ys, cs, m, kk, n);
         }
-        return Tensor::from_vec(&nat_dims, c_data);
+        return match dest {
+            Some(_) => Ok(None),
+            None => Ok(Some(Tensor::from_vec(&nat_dims, owned)?)),
+        };
     }
 
     // Non-identity output order: accumulate in scratch, permute straight
-    // into the escaping buffer.
+    // into the escaping (or recycled) buffer.  Validate the destination
+    // *before* burning the batched GEMMs on a bad call.
+    let perm: Vec<usize> = out_idx
+        .iter()
+        .map(|&c| natural.iter().position(|&d| d == c).unwrap())
+        .collect();
+    let out_dims: Vec<usize> = perm.iter().map(|&p| nat_dims[p]).collect();
+    if let Some(d) = dest.as_deref_mut() {
+        if d.dims() != &out_dims[..] {
+            return Err(Error::shape(format!(
+                "einsum2_into: dest dims {:?} != result dims {:?}",
+                d.dims(),
+                out_dims
+            )));
+        }
+    }
     let mut c_scratch = pool.take_zeroed(b * m * n);
     for bi in 0..b {
         let xs = &xp_data[bi * m * kk..(bi + 1) * m * kk];
@@ -575,14 +717,18 @@ pub fn einsum2_with(
         let cs = &mut c_scratch[bi * m * n..(bi + 1) * m * n];
         kernel::gemm_into_with(cfg, pool, xs, ys, cs, m, kk, n);
     }
-    let perm: Vec<usize> = out_idx
-        .iter()
-        .map(|&c| natural.iter().position(|&d| d == c).unwrap())
-        .collect();
-    let mut out_data = vec![0.0f32; b * m * n];
-    transpose::permute_into(cfg, &c_scratch, &nat_dims, &perm, &mut out_data);
-    let out_dims: Vec<usize> = perm.iter().map(|&p| nat_dims[p]).collect();
-    Tensor::from_vec(&out_dims, out_data)
+    match dest {
+        Some(d) => {
+            // The permutation writes every element: no zeroing needed.
+            transpose::permute_into(cfg, &c_scratch, &nat_dims, &perm, d.data_mut());
+            Ok(None)
+        }
+        None => {
+            let mut out_data = vec![0.0f32; b * m * n];
+            transpose::permute_into(cfg, &c_scratch, &nat_dims, &perm, &mut out_data);
+            Ok(Some(Tensor::from_vec(&out_dims, out_data)?))
+        }
+    }
 }
 
 /// Two-step MTTKRP (explicit KRP then GEMM) — the communication-suboptimal
@@ -980,6 +1126,57 @@ mod tests {
                 .unwrap();
         }
         assert_eq!(pool.stats().allocs, warm, "einsum2 steady state allocated");
+    }
+
+    #[test]
+    #[allow(clippy::type_complexity)]
+    fn einsum2_into_bitwise_matches_allocating() {
+        // Same dispatch, same arithmetic: the recycled-output variant
+        // must be bitwise identical, including the permuted-output path,
+        // and must fully overwrite a dirty destination.
+        let cases: &[(&[usize], &[char], &[usize], &[char], &[char])] = &[
+            (&[7, 9], &['i', 'j'], &[9, 5], &['j', 'k'], &['i', 'k']),
+            (&[3, 4], &['i', 'j'], &[4, 5], &['j', 'k'], &['k', 'i']),
+            (&[6, 4], &['j', 'a'], &[5, 4], &['k', 'a'], &['j', 'k', 'a']),
+            (&[5, 6, 7], &['i', 'j', 'k'], &[6, 7, 4], &['j', 'k', 'a'], &['i', 'a']),
+            (&[3, 4], &['i', 'j'], &[3, 4], &['i', 'j'], &[]),
+        ];
+        for (xd, xi, yd, yi, oi) in cases {
+            let x = randn(xd, 300);
+            let y = randn(yd, 301);
+            let want = einsum2(&x, xi, &y, yi, oi).unwrap();
+            let mut dest = randn(want.dims(), 302); // dirty
+            einsum2_into(&x, xi, &y, yi, oi, &mut dest).unwrap();
+            assert_eq!(dest, want, "{xi:?},{yi:?}->{oi:?}");
+        }
+    }
+
+    #[test]
+    fn einsum2_into_rejects_wrong_dest_dims() {
+        let x = randn(&[3, 4], 310);
+        let y = randn(&[4, 5], 311);
+        let mut bad = Tensor::zeros(&[4, 4]);
+        assert!(einsum2_into(&x, &['i', 'j'], &y, &['j', 'k'], &['i', 'k'], &mut bad).is_err());
+        let mut bad_perm = Tensor::zeros(&[3, 5]); // permuted result is [5, 3]
+        assert!(
+            einsum2_into(&x, &['i', 'j'], &y, &['j', 'k'], &['k', 'i'], &mut bad_perm).is_err()
+        );
+    }
+
+    #[test]
+    fn mttkrp_into_bitwise_matches_allocating() {
+        let x = randn(&[6, 5, 4], 320);
+        let fs: Vec<Tensor> =
+            (0..3).map(|m| randn(&[x.dims()[m], 5], 321 + m as u64)).collect();
+        let frefs: Vec<&Tensor> = fs.iter().collect();
+        for mode in 0..3 {
+            let want = mttkrp(&x, &frefs, mode).unwrap();
+            let mut dest = randn(want.dims(), 330); // dirty
+            mttkrp_into(&x, &frefs, mode, &mut dest).unwrap();
+            assert_eq!(dest, want, "mode {mode}");
+        }
+        let mut bad = Tensor::zeros(&[6, 6]);
+        assert!(mttkrp_into(&x, &frefs, 0, &mut bad).is_err());
     }
 
     #[test]

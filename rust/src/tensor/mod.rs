@@ -17,6 +17,11 @@ pub use kernel::{KernelConfig, ScratchPool, ScratchStats};
 
 use crate::error::{Error, Result};
 
+/// Bytes per tensor element (`f32`).  The single constant every byte
+/// accounting in the crate derives from (communication volumes, α–β
+/// costs, per-rank footprints) — the dtype appears in exactly one place.
+pub const ELEM_BYTES: usize = std::mem::size_of::<f32>();
+
 /// Dense row-major tensor of `f32`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor {
@@ -166,6 +171,54 @@ impl Tensor {
     /// [`transpose`]).
     pub fn permute(&self, perm: &[usize]) -> Tensor {
         transpose::permute(self, perm)
+    }
+
+    /// [`permute`](Self::permute) into a caller-provided destination
+    /// whose dims must equal the permuted dims — the recycled-buffer
+    /// variant the coordinator's steady state uses (a permutation writes
+    /// every destination element, so `out` needs no zeroing).
+    pub fn permute_into(&self, perm: &[usize], out: &mut Tensor) -> Result<()> {
+        let n = self.dims.len();
+        if perm.len() != n {
+            return Err(Error::shape(format!(
+                "permute_into: perm length {} != order {n}",
+                perm.len()
+            )));
+        }
+        let mut seen = vec![false; n];
+        for &p in perm {
+            if p >= n || std::mem::replace(&mut seen[p], true) {
+                return Err(Error::shape(format!("permute_into: bad perm {perm:?}")));
+            }
+        }
+        let want: Vec<usize> = perm.iter().map(|&p| self.dims[p]).collect();
+        if out.dims != want {
+            return Err(Error::shape(format!(
+                "permute_into: dest dims {:?} != permuted dims {:?}",
+                out.dims, want
+            )));
+        }
+        transpose::permute_into(
+            &KernelConfig::global(),
+            &self.data,
+            &self.dims,
+            perm,
+            &mut out.data,
+        );
+        Ok(())
+    }
+
+    /// Shape-checked whole-tensor copy from `src` (recycled-buffer
+    /// helper: refresh a destination without reallocating it).
+    pub fn copy_from(&mut self, src: &Tensor) -> Result<()> {
+        if self.dims != src.dims {
+            return Err(Error::shape(format!(
+                "copy_from: dest dims {:?} != src dims {:?}",
+                self.dims, src.dims
+            )));
+        }
+        self.data.copy_from_slice(&src.data);
+        Ok(())
     }
 
     /// Copy the box `src[src_off .. src_off+size]` into
@@ -404,6 +457,31 @@ mod tests {
         assert!((a.norm() - 5.0).abs() < 1e-9);
         let c = Tensor::zeros(&[3]);
         assert!(a.add_assign(&c).is_err());
+    }
+
+    #[test]
+    fn permute_into_matches_permute_and_checks_shapes() {
+        let t = Tensor::random(&[3, 4, 5], 11);
+        let perm = [2, 0, 1];
+        let want = t.permute(&perm);
+        // Dirty destination: permute_into must fully overwrite it.
+        let mut out = Tensor::random(&[5, 3, 4], 12);
+        t.permute_into(&perm, &mut out).unwrap();
+        assert_eq!(out, want);
+        let mut bad = Tensor::zeros(&[3, 4, 5]);
+        assert!(t.permute_into(&perm, &mut bad).is_err(), "wrong dest dims");
+        assert!(t.permute_into(&[0, 1], &mut out).is_err(), "wrong perm length");
+        assert!(t.permute_into(&[0, 0, 1], &mut out).is_err(), "duplicate perm entry");
+    }
+
+    #[test]
+    fn copy_from_checks_shape() {
+        let src = Tensor::random(&[2, 3], 13);
+        let mut dst = Tensor::zeros(&[2, 3]);
+        dst.copy_from(&src).unwrap();
+        assert_eq!(dst, src);
+        let mut bad = Tensor::zeros(&[3, 2]);
+        assert!(bad.copy_from(&src).is_err());
     }
 
     #[test]

@@ -173,6 +173,71 @@ fn mttkrp_large_engages_threaded_bands() {
     }
 }
 
+#[test]
+fn property_einsum2_into_bitwise_identical_to_allocating() {
+    // The recycled-output variant shares the allocating path's dispatch
+    // and arithmetic order, so results must be *bitwise* identical — at
+    // odd shapes, across thread counts, into dirty destinations.
+    let pool = ScratchPool::new();
+    let mut rng = Rng::new(0x51A7);
+    for trial in 0..40 {
+        let (i, j, k) = (rng.range(1, 33), rng.range(1, 45), rng.range(1, 29));
+        let a = rng.range(1, 17);
+        let x = Tensor::random(&[i, j, k], 6000 + trial);
+        let y = Tensor::random(&[j, k, a], 7000 + trial);
+        // Rotate through output orders incl. permuted layouts.
+        let outs: [&[char]; 3] = [&['i', 'a'], &['a', 'i'], &['i']];
+        let out_idx = outs[(trial % 3) as usize];
+        for threads in [1usize, 8] {
+            let cfg = KernelConfig::default().with_threads(threads);
+            let want = contract::einsum2_with(
+                &cfg, &pool, &x, &['i', 'j', 'k'], &y, &['j', 'k', 'a'], out_idx,
+            )
+            .unwrap();
+            let mut dest = Tensor::random(want.dims(), 8000 + trial);
+            contract::einsum2_into_with(
+                &cfg, &pool, &x, &['i', 'j', 'k'], &y, &['j', 'k', 'a'], out_idx, &mut dest,
+            )
+            .unwrap();
+            assert_eq!(
+                dest, want,
+                "trial {trial} ({i},{j},{k},{a}) ->{out_idx:?} threads {threads}"
+            );
+        }
+    }
+}
+
+#[test]
+fn property_mttkrp_into_bitwise_identical_to_allocating() {
+    let pool = ScratchPool::new();
+    let mut rng = Rng::new(0x91B3);
+    for trial in 0..25 {
+        let order = rng.range(2, 4);
+        let dims: Vec<usize> = (0..order)
+            .map(|_| if rng.range(0, 4) == 0 { 1 } else { rng.range(2, 13) })
+            .collect();
+        let r = rng.range(1, 9);
+        let x = Tensor::random(&dims, 9000 + trial);
+        let fs: Vec<Tensor> = (0..order)
+            .map(|m| Tensor::random(&[dims[m], r], 9500 + trial * 7 + m as u64))
+            .collect();
+        let frefs: Vec<&Tensor> = fs.iter().collect();
+        for mode in 0..order {
+            for threads in [1usize, 8] {
+                let cfg = KernelConfig::default().with_threads(threads);
+                let want = contract::mttkrp_with(&cfg, &pool, &x, &frefs, mode).unwrap();
+                let mut dest = Tensor::random(want.dims(), 9900 + trial);
+                contract::mttkrp_with_into(&cfg, &pool, &x, &frefs, mode, &mut dest)
+                    .unwrap();
+                assert_eq!(
+                    dest, want,
+                    "trial {trial} dims {dims:?} r {r} mode {mode} threads {threads}"
+                );
+            }
+        }
+    }
+}
+
 /// Elementwise permute oracle.
 fn permute_oracle(t: &Tensor, perm: &[usize]) -> Tensor {
     let src_dims = t.dims();
