@@ -3,24 +3,25 @@
 //! benchmarks stand in for (§I: "the main computational kernel of the CP
 //! decomposition").
 //!
-//! Every ALS sweep runs three *distributed* MTTKRPs (modes 0, 1, 2)
-//! through the Deinsum planner/coordinator on P simulated ranks; the
-//! R×R normal equations are solved on the leader.  The fit curve
-//! (1 − ‖X − ⟦A,B,C⟧‖/‖X‖) is logged per sweep and must recover the
-//! planted rank — this is the system prompt's end-to-end validation run,
-//! recorded in EXPERIMENTS.md.
+//! Every ALS sweep runs three *distributed* MTTKRPs (modes 0, 1, 2) on
+//! P simulated ranks; the R×R normal equations are solved on the
+//! leader.  The fit curve (1 − ‖X − ⟦A,B,C⟧‖/‖X‖) is logged per sweep
+//! and must recover the planted rank — this is the system prompt's
+//! end-to-end validation run, recorded in EXPERIMENTS.md.
+//!
+//! This is the workload the `Session`/`Program` handles were shaped
+//! for: each mode's MTTKRP is **compiled once** and re-run every sweep,
+//! so each `Program`'s persistent machine recycles its staging,
+//! redistribution and output buffers across all sweeps (the old
+//! single-coordinator wiring thrashed its store when alternating six
+//! plans through one machine).
 //!
 //! ```bash
 //! cargo run --release --example cp_als [-- --artifacts artifacts]
 //! ```
 
-use deinsum::baseline::plan_baseline;
-use deinsum::coordinator::Coordinator;
-use deinsum::einsum::EinsumSpec;
-use deinsum::planner::{plan, Plan, PlannerConfig};
-use deinsum::runtime::KernelEngine;
-use deinsum::sim::NetworkModel;
 use deinsum::tensor::{contract, Tensor};
+use deinsum::{Program, Session};
 
 const N: usize = 64;
 const RANK: usize = 8;
@@ -115,34 +116,23 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     }
     let x_norm = x.norm();
 
-    // Distributed MTTKRP plans, one per mode (shape-dependent only, so
-    // they are planned once and reused across all sweeps).
+    // Compile once: one distributed-MTTKRP program per mode (plus the
+    // CTF-like baseline comparator), re-run every sweep.
+    let mut builder = Session::builder().ranks(P);
+    if use_pjrt {
+        builder = builder.artifacts("artifacts");
+    }
+    let session = builder.build_or_native();
     let exprs = ["ijk,ja,ka->ia", "ijk,ia,ka->ja", "ijk,ia,ja->ka"];
-    let spec_shapes = [
-        vec![vec![N, N, N], vec![N, RANK], vec![N, RANK]],
-        vec![vec![N, N, N], vec![N, RANK], vec![N, RANK]],
-        vec![vec![N, N, N], vec![N, RANK], vec![N, RANK]],
-    ];
-    let plans: Vec<Plan> = exprs
+    let shapes = vec![vec![N, N, N], vec![N, RANK], vec![N, RANK]];
+    let mut programs: Vec<Program> = exprs
         .iter()
-        .zip(&spec_shapes)
-        .map(|(e, s)| {
-            let spec = EinsumSpec::parse(e, s)?;
-            plan(&spec, P, &PlannerConfig::default())
-        })
+        .map(|e| session.compile(e, &shapes))
         .collect::<deinsum::Result<_>>()?;
-    let base_plans: Vec<Plan> = exprs
+    let mut base_programs: Vec<Program> = exprs
         .iter()
-        .zip(&spec_shapes)
-        .map(|(e, s)| plan_baseline(&EinsumSpec::parse(e, s)?, P))
+        .map(|e| session.compile_baseline(e, &shapes))
         .collect::<deinsum::Result<_>>()?;
-
-    let engine = if use_pjrt {
-        KernelEngine::pjrt("artifacts").unwrap_or_else(|_| KernelEngine::native())
-    } else {
-        KernelEngine::native()
-    };
-    let coord = Coordinator::new(&engine, NetworkModel::aries());
 
     // Random init.
     let mut fac = [
@@ -160,11 +150,11 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             let inputs =
                 vec![x.clone(), fac[others[0]].clone(), fac[others[1]].clone()];
             // Deinsum distributed MTTKRP.
-            let rep = coord.run(&plans[mode], &inputs)?;
+            let rep = programs[mode].run(&inputs)?;
             total.compute += rep.time.compute;
             total.comm += rep.time.comm;
             // Baseline for the time comparison (same math, two-step).
-            let brep = coord.run(&base_plans[mode], &inputs)?;
+            let brep = base_programs[mode].run(&inputs)?;
             base_total.compute += brep.time.compute;
             base_total.comm += brep.time.comm;
             assert!(rep.output.rel_error(&brep.output) < 1e-3);
@@ -205,6 +195,14 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         total.total(),
         base_total.total(),
         base_total.total() / total.total().max(1e-12)
+    );
+    // Per-program counters only (engine scratch is session-wide).
+    let st = programs[0].stats();
+    println!(
+        "mode-0 program: {} runs, {} whole-tensor recycles ({} tensor allocations)",
+        st.runs,
+        st.reuses(),
+        st.store.dest_allocs + st.store.out_allocs + st.local_scratch.allocs
     );
     assert!(fit > 0.99, "CP-ALS failed to recover the planted factors");
     println!("cp_als OK");

@@ -1,36 +1,47 @@
-//! Quickstart: the paper's §II worked example, end to end.
+//! Quickstart: the paper's §II worked example, end to end, through the
+//! `Session`/`Program` front door.
 //!
-//! Plans and runs `ijk,ja,ka,al->il` on 8 simulated ranks, printing the
-//! generated schedule (the §II-E "intermediate program"), the I/O lower
-//! bounds behind it (§IV-E), and the run's time/communication breakdown.
+//! Compiles `ijk,ja,ka,al->il` once into an I/O-optimal distributed
+//! program on 8 simulated ranks, prints the generated schedule (the
+//! §II-E "intermediate program") and the I/O lower bounds behind it
+//! (§IV-E), runs it, and verifies against a single-rank run — no
+//! hand-wiring of the planner or coordinator anywhere.
 //!
 //! ```bash
 //! cargo run --release --example quickstart [-- --artifacts artifacts]
 //! ```
 
-use deinsum::coordinator::Coordinator;
-use deinsum::einsum::EinsumSpec;
-use deinsum::planner::{plan, PlannerConfig};
-use deinsum::runtime::KernelEngine;
-use deinsum::sim::NetworkModel;
 use deinsum::soap::{self, Statement};
-use deinsum::tensor::Tensor;
+use deinsum::{Session, Tensor};
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     let use_pjrt = std::env::args().any(|a| a == "--artifacts");
 
-    // --- the paper's worked example ---------------------------------------
+    // --- the whole §II worked example, front-door only ----------------------
     let n = 256usize;
     let r = 24usize;
     let expr = "ijk,ja,ka,al->il";
     let shapes = vec![vec![n, n, n], vec![n, r], vec![n, r], vec![r, n]];
-    let spec = EinsumSpec::parse(expr, &shapes)?;
+    let mut builder = Session::builder().ranks(8);
+    if use_pjrt {
+        builder = builder.artifacts("artifacts");
+    }
+    let session = builder.build_or_native();
+    let mut program = session.compile(expr, &shapes)?;
+    let inputs: Vec<Tensor> = shapes
+        .iter()
+        .enumerate()
+        .map(|(i, s)| Tensor::random(s, 7 + i as u64))
+        .collect();
+    let rep = program.run(&inputs)?;
+
     println!("einsum: {expr}   (N = {n}, R = {r})");
     println!(
         "naive FLOPs: {:.3e}; iteration space {:.3e}\n",
-        spec.naive_flops() as f64,
-        spec.iteration_space() as f64
+        program.spec().naive_flops() as f64,
+        program.spec().iteration_space() as f64
     );
+    println!("generated schedule (paper §II-E):\n{}", program.schedule());
 
     // --- §IV-E: the theory the schedule is built on ------------------------
     let s = 1e6;
@@ -46,29 +57,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         soap::mttkrp_improvement_factor()
     );
 
-    // --- plan on 8 ranks ----------------------------------------------------
-    let p = 8;
-    let pl = plan(&spec, p, &PlannerConfig::default())?;
-    println!("generated schedule (paper §II-E):\n{}", pl.render());
-
-    // --- execute on the simulated machine -----------------------------------
-    let inputs: Vec<Tensor> = shapes
-        .iter()
-        .enumerate()
-        .map(|(i, s)| Tensor::random(s, 7 + i as u64))
-        .collect();
-    let engine = if use_pjrt {
-        KernelEngine::pjrt("artifacts").unwrap_or_else(|e| {
-            eprintln!("note: PJRT unavailable ({e}); native kernels");
-            KernelEngine::native()
-        })
-    } else {
-        KernelEngine::native()
-    };
-    let coord = Coordinator::new(&engine, NetworkModel::aries());
-    let rep = coord.run(&pl, &inputs)?;
-
-    println!("run on P = {p} simulated ranks:");
+    // --- the run's accounting ----------------------------------------------
+    println!("run on P = {} simulated ranks:", program.ranks());
     for t in &rep.per_term {
         println!(
             "  {:<8} compute {:>9.5}s   comm {:>9.5}s",
@@ -86,11 +76,23 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         rep.comm.p2p_bytes, rep.comm.p2p_msgs, rep.comm.allreduce_bytes
     );
 
-    // --- verify against a single-rank run ------------------------------------
-    let pl1 = plan(&spec, 1, &PlannerConfig::default())?;
-    let rep1 = coord.run(&pl1, &inputs)?;
+    // --- compile-once pays off: a rerun recycles every buffer ---------------
+    let warm = program.stats();
+    let mut out = Tensor::zeros(&program.output_dims());
+    program.run_into(&inputs, &mut out)?;
+    let after = program.stats();
+    println!(
+        "\nrerun into a recycled output: {} new allocations ({} buffers recycled)",
+        after.allocs() - warm.allocs(),
+        after.reuses() - warm.reuses()
+    );
+    assert!(out.allclose(&rep.output, 0.0, 0.0), "rerun must be bitwise stable");
+
+    // --- verify against a single-rank program --------------------------------
+    let mut p1 = session.compile_on(expr, &shapes, 1)?;
+    let rep1 = p1.run(&inputs)?;
     let rel = rep.output.rel_error(&rep1.output);
-    println!("\nP={p} vs P=1 relative error: {rel:.3e}");
+    println!("P=8 vs P=1 relative error: {rel:.3e}");
     assert!(rel < 1e-4, "distributed result diverged");
     println!("quickstart OK");
     Ok(())

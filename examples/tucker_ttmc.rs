@@ -11,13 +11,8 @@
 //! cargo run --release --example tucker_ttmc
 //! ```
 
-use deinsum::baseline::plan_baseline;
-use deinsum::coordinator::Coordinator;
-use deinsum::einsum::EinsumSpec;
-use deinsum::planner::{plan, PlannerConfig};
-use deinsum::runtime::KernelEngine;
-use deinsum::sim::NetworkModel;
 use deinsum::tensor::{contract, Tensor};
+use deinsum::Session;
 
 const N: usize = 16; // each of the 5 tensor modes
 const R: usize = 6; // Tucker rank per compressed mode
@@ -87,18 +82,16 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         vec![N, R],
         vec![N, R],
     ];
-    let spec = EinsumSpec::parse(expr, &shapes)?;
-    let pl = plan(&spec, P, &PlannerConfig::default())?;
-    let bpl = plan_baseline(&spec, P)?;
-    println!("schedule:\n{}", pl.render());
+    let session = Session::builder().ranks(P).build()?;
+    let mut program = session.compile(expr, &shapes)?;
+    let mut baseline = session.compile_baseline(expr, &shapes)?;
+    println!("schedule:\n{}", program.schedule());
 
     let inputs: Vec<Tensor> = std::iter::once(x.clone())
         .chain(f_true.iter().cloned())
         .collect();
-    let engine = KernelEngine::native();
-    let coord = Coordinator::new(&engine, NetworkModel::aries());
-    let rep = coord.run(&pl, &inputs)?;
-    let brep = coord.run(&bpl, &inputs)?;
+    let rep = program.run(&inputs)?;
+    let brep = baseline.run(&inputs)?;
     assert!(rep.output.rel_error(&brep.output) < 1e-3);
     println!(
         "TTMc core computed: {:?}; deinsum {:.5}s vs ctf-like {:.5}s ({:.2}x)",

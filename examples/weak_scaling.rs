@@ -11,8 +11,7 @@
 //! ```
 
 use deinsum::bench_support::{self, geomean, header, row};
-use deinsum::runtime::KernelEngine;
-use deinsum::sim::NetworkModel;
+use deinsum::Session;
 
 fn flag(args: &[String], name: &str) -> Option<String> {
     args.iter()
@@ -29,11 +28,13 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         flag(&args, "--size-factor").and_then(|v| v.parse().ok()).unwrap_or(16);
     let filter = flag(&args, "--filter").unwrap_or_default();
 
-    let engine = match flag(&args, "--artifacts") {
-        Some(dir) => KernelEngine::pjrt(&dir).unwrap_or_else(|_| KernelEngine::native()),
-        None => KernelEngine::native(),
-    };
-    let net = NetworkModel::aries();
+    let mut builder = Session::builder();
+    if let Some(dir) = flag(&args, "--artifacts") {
+        builder = builder.artifacts(dir);
+    }
+    // One session for the whole sweep: every (benchmark, P, scheduler)
+    // plan lands in its cache.
+    let session = builder.plan_cache_capacity(256).build_or_native();
 
     println!(
         "Fig. 5 reproduction (size-factor {sf}; paper sizes = 1): weak scaling to {max_nodes} simulated nodes\n"
@@ -49,7 +50,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         let mut p = 1usize;
         let mut last = None;
         while p <= max_nodes {
-            let (pt, _, _) = bench_support::run_point(&def, p, &engine, net)?;
+            let (pt, _, _) = bench_support::run_point(&def, p, &session)?;
             println!("{}", row(&pt));
             last = Some(pt.speedup);
             all_points.push(pt);

@@ -13,9 +13,7 @@
 mod common;
 
 use deinsum::bench_support::{geomean, run_point, suite, BenchPoint};
-use deinsum::runtime::KernelEngine;
-use deinsum::sim::NetworkModel;
-use deinsum::KernelConfig;
+use deinsum::{KernelConfig, Session};
 
 fn main() {
     let max_nodes = common::env_usize("DEINSUM_BENCH_NODES", 64);
@@ -23,11 +21,14 @@ fn main() {
     let reps = common::env_usize("DEINSUM_BENCH_REPS", 2);
     // Local-kernel engine config from the environment (RAYON_NUM_THREADS /
     // DEINSUM_NUM_THREADS, DEINSUM_MC/KC/NC); the same KernelConfig the
-    // coordinator's engine dispatches with, so the blue compute bars
+    // session's engine dispatches with, so the blue compute bars
     // reflect the packed multithreaded kernels.
     let kcfg = KernelConfig::from_env();
-    let engine = KernelEngine::native_with(kcfg);
-    let net = NetworkModel::aries();
+    let session = Session::builder()
+        .kernel_config(kcfg)
+        .plan_cache_capacity(256)
+        .build()
+        .expect("native session");
 
     println!("# Fig. 5 (CPU weak scaling) — size-factor {sf}, reps {reps}, up to {max_nodes} nodes");
     println!("# local kernels: {kcfg:?}");
@@ -43,9 +44,9 @@ fn main() {
             // One unmeasured warmup (first-touch/page-fault effects hit
             // whichever scheduler runs first), then best-of-reps on each
             // side independently.
-            let _ = run_point(&def, p, &engine, net).expect("warmup");
+            let _ = run_point(&def, p, &session).expect("warmup");
             let mut pts: Vec<BenchPoint> = (0..reps)
-                .map(|_| run_point(&def, p, &engine, net).expect("bench point").0)
+                .map(|_| run_point(&def, p, &session).expect("bench point").0)
                 .collect();
             pts.sort_by(|a, b| {
                 a.deinsum.total().partial_cmp(&b.deinsum.total()).unwrap()

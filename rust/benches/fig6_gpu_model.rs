@@ -12,14 +12,14 @@
 mod common;
 
 use deinsum::bench_support::{run_point, suite};
-use deinsum::runtime::KernelEngine;
-use deinsum::sim::{AccelModel, NetworkModel};
+use deinsum::sim::AccelModel;
+use deinsum::Session;
 
 fn main() {
     let max_nodes = common::env_usize("DEINSUM_BENCH_NODES", 32);
     let sf = common::env_usize("DEINSUM_BENCH_SIZE_FACTOR", 16);
-    let engine = KernelEngine::native();
-    let net = NetworkModel::aries();
+    let session =
+        Session::builder().plan_cache_capacity(256).build().expect("native session");
     let accel = AccelModel::p100();
 
     println!("# Fig. 6 (GPU model: P100-class, {:.0}x kernels, {:.0} GB/s PCIe)",
@@ -32,7 +32,7 @@ fn main() {
     for def in suite(sf) {
         let mut p = 1usize;
         while p <= max_nodes {
-            let (_, drep, brep) = run_point(&def, p, &engine, net).expect("bench point");
+            let (_, drep, brep) = run_point(&def, p, &session).expect("bench point");
             let resident = drep.gpu_time(&accel, true);
             let offload = drep.gpu_time(&accel, false);
             let base = brep.gpu_time(&accel, false);

@@ -9,8 +9,11 @@
 //! - redistribution *planning* (must be O(messages), never O(elements))
 //! - redistribution *execution* (memcpy-bound, recycled destinations)
 //! - end-to-end plan construction (SOAP solve + grid search)
-//! - coordinator steady state: persistent machine + warm pools vs the
-//!   cold per-run-spawn baseline, on a multi-step plan
+//! - program compile through the `Session` front door: plan-cache hit
+//!   vs cold plan (`program_compile_cached` / `program_compile_cold`)
+//! - coordinator steady state: a warm `Program` re-run (persistent
+//!   machine + warm pools) vs the cold first-query path (fresh session,
+//!   cache-miss compile, spawn-dispatch baseline), on a multi-step plan
 //!   (`DEINSUM_BENCH_TINY=1` shrinks it for CI smoke runs)
 //!
 //! Besides the human-readable table, results land in
@@ -18,9 +21,9 @@
 //! `{"config": ..., "results": [{kernel, shape, median_seconds, gflops?,
 //! speedup?}, ...]}` so future PRs have a perf trajectory to diff.  The
 //! `coordinator_steady_state` entry also carries `allocs_per_run`: the
-//! total tensor/scratch allocations one warm `Coordinator::run` performs
-//! (engine pool + store destinations + compute outputs + local scratch)
-//! — 0 is the recycled-everything invariant the tests pin.
+//! total tensor/scratch allocations one warm `Program::run_into` performs
+//! (engine pool + store destinations + compute outputs + local scratch +
+//! gather) — 0 is the recycled-everything invariant the tests pin.
 
 #[path = "common.rs"]
 mod common;
@@ -28,16 +31,15 @@ mod common;
 use std::fmt::Write as _;
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use deinsum::coordinator::Coordinator;
 use deinsum::dist::TensorDist;
 use deinsum::einsum::EinsumSpec;
 use deinsum::grid::ProcessGrid;
 use deinsum::planner::{plan, PlannerConfig};
 use deinsum::redist;
 use deinsum::runtime::{pool, KernelEngine};
-use deinsum::sim::NetworkModel;
 use deinsum::tensor::kernel::{self, KernelConfig, ScratchPool};
 use deinsum::tensor::{contract, transpose, Tensor};
+use deinsum::Session;
 
 /// The single JSON-line formatter every bench entry goes through (so the
 /// schema lives in one place).
@@ -338,80 +340,108 @@ fn main() {
         record(&mut records, "plan_worked_example", "P=64", med, None, None);
     }
 
+    // --- program compile: plan-cache hit vs cold plan --------------------------
+    {
+        let n = 1usize << 12;
+        let expr = "ijk,ja,ka,al->il";
+        let shapes = vec![vec![n, n, n], vec![n, 24], vec![n, 24], vec![24, n]];
+        let (cold, _, _) = common::time_median(reps, || {
+            // Fresh session per iteration: every compile misses the plan
+            // cache and pays the full SOAP solve + grid search.
+            let session = Session::builder().ranks(64).build().unwrap();
+            let _ = session.compile(expr, &shapes).unwrap();
+        });
+        let session = Session::builder().ranks(64).build().unwrap();
+        let _ = session.compile(expr, &shapes).unwrap(); // prime the cache
+        let (cached, _, _) = common::time_median(reps, || {
+            let _ = session.compile(expr, &shapes).unwrap();
+        });
+        assert!(session.cache_stats().hits >= 1, "cached compiles must hit");
+        println!(
+            "program compile (worked example, P=64): cold {} | cache-hit {} ({:.2}x)",
+            common::fmt_s(cold),
+            common::fmt_s(cached),
+            cold / cached
+        );
+        record(&mut records, "program_compile_cold", "P=64", cold, None, None);
+        record(
+            &mut records,
+            "program_compile_cached",
+            "P=64",
+            cached,
+            None,
+            Some(cold / cached),
+        );
+    }
+
     // --- coordinator steady state: persistent runtime vs per-step spawn -------
     //
     // A multi-step plan (forced two-term split => staging + local compute
     // + redistribution + allreduce per run).  Baseline reconstructs the
-    // PR 1 runtime: spawn-per-macro-step dispatch and a fresh engine +
-    // coordinator per run (cold scratch pool, cold machine store, every
-    // destination buffer allocated).  Steady state is the persistent
-    // runtime: pool dispatch, warm scratch, recycled store.
+    // PR 1 runtime: spawn-per-macro-step dispatch and a fresh session +
+    // program per run (cold plan cache, cold scratch pool, cold machine
+    // store — first-query latency through the front door).  Steady state
+    // is the persistent runtime: one warm `Program` re-run.
     {
         let n = if tiny { 12 } else { 48 };
         let r = 24usize;
-        let spec = EinsumSpec::parse(
-            "ijk,ja,ka,al->il",
-            &[vec![n, n, n], vec![n, r], vec![n, r], vec![r, n]],
-        )
-        .unwrap();
+        let expr = "ijk,ja,ka,al->il";
+        let shapes = vec![vec![n, n, n], vec![n, r], vec![n, r], vec![r, n]];
         let pcfg = PlannerConfig { s_elements: 64.0, ..Default::default() };
-        let pl = plan(&spec, 8, &pcfg).unwrap();
         let inputs: Vec<Tensor> = vec![
             Tensor::random(&[n, n, n], 21),
             Tensor::random(&[n, r], 22),
             Tensor::random(&[n, r], 23),
             Tensor::random(&[r, n], 24),
         ];
-        let shape = format!("{n}^3 r{r} P=8 terms={}", pl.terms.len());
+        let mk_session = || {
+            Session::builder().ranks(8).planner(pcfg).kernel_config(cfg).build().unwrap()
+        };
+        // A Program outlives its Session (it shares the engine by Rc).
+        let probe = mk_session().compile(expr, &shapes).unwrap();
+        let shape = format!("{n}^3 r{r} P=8 terms={}", probe.plan().terms.len());
+        drop(probe);
 
         pool::set_spawn_baseline(true);
         let (cold, _, _) = common::time_median(reps, || {
-            let engine = KernelEngine::native_with(cfg);
-            let coord = Coordinator::new(&engine, NetworkModel::aries());
-            let _ = coord.run(&pl, &inputs).unwrap();
+            let session = mk_session();
+            let mut prog = session.compile(expr, &shapes).unwrap();
+            let _ = prog.run(&inputs).unwrap();
         });
         pool::set_spawn_baseline(false);
 
-        let engine = KernelEngine::native_with(cfg);
-        let coord = Coordinator::new(&engine, NetworkModel::aries());
+        let session = mk_session();
+        let mut prog = session.compile(expr, &shapes).unwrap();
         for _ in 0..2 {
-            let _ = coord.run(&pl, &inputs).unwrap();
+            let _ = prog.run(&inputs).unwrap();
         }
-        // Every allocation source on the run loop: engine packing/fold
-        // scratch, store destinations + compute outputs, and the
-        // coordinator's Seq-intermediate/permute scratch.
-        let total_allocs = || {
-            let ms = coord.machine_stats();
-            engine.scratch_stats().allocs
-                + ms.dest_allocs
-                + ms.out_allocs
-                + coord.local_scratch_stats().allocs
-        };
-        let warm = total_allocs();
-        let warm_store =
-            coord.machine_stats().dest_allocs + coord.machine_stats().out_allocs;
+        let warm = prog.stats();
         let (steady, _, _) = common::time_median(reps, || {
-            let _ = coord.run(&pl, &inputs).unwrap();
+            let _ = prog.run(&inputs).unwrap();
         });
         // Store-level recycling is a deterministic invariant (also pinned
         // by tests); engine scratch can still grow to its high-water mark
         // during timed runs when worker overlap first peaks.
+        let timed = prog.stats();
         assert_eq!(
-            coord.machine_stats().dest_allocs + coord.machine_stats().out_allocs,
-            warm_store,
-            "steady-state coordinator re-allocated store buffers"
+            timed.store.dest_allocs + timed.store.out_allocs,
+            warm.store.dest_allocs + warm.store.out_allocs,
+            "steady-state program re-allocated store buffers"
         );
-        // One precisely-bracketed run for the allocations-per-run figure.
-        let before_run = total_allocs();
-        let _ = coord.run(&pl, &inputs).unwrap();
-        let allocs_per_run = total_allocs() - before_run;
+        // One precisely-bracketed run for the allocations-per-run figure,
+        // through the fully-recycled output path (`run_into`).
+        let mut out = Tensor::zeros(&prog.output_dims());
+        prog.run_into(&inputs, &mut out).unwrap(); // warm the gather path
+        let before_run = prog.stats().allocs();
+        prog.run_into(&inputs, &mut out).unwrap();
+        let allocs_per_run = prog.stats().allocs() - before_run;
         println!(
-            "coordinator {shape}: cold+spawn {} | steady {} ({:.2}x) | allocs/run {} (timed-window total +{})",
+            "coordinator {shape}: cold+spawn+plan {} | steady {} ({:.2}x) | allocs/run {} (timed-window total +{})",
             common::fmt_s(cold),
             common::fmt_s(steady),
             cold / steady,
             allocs_per_run,
-            total_allocs() - warm
+            prog.stats().allocs() - warm.allocs()
         );
         record(&mut records, "coordinator_cold_start", &shape, cold, None, None);
         record_full(

@@ -1,0 +1,588 @@
+//! The public front door: compile an einsum **once** into a [`Program`]
+//! and run it many times.
+//!
+//! The paper's whole premise is that a multilinear expression is
+//! *compiled once* into an I/O-optimal distributed schedule and then
+//! executed repeatedly (CP-ALS sweeps, the Fig. 5/6 repeat runs).  The
+//! handle API mirrors that shape:
+//!
+//! - a [`Session`] (built via [`Session::builder`]) owns the
+//!   [`KernelEngine`] — PJRT artifacts or native packed kernels, thread
+//!   and tile overrides — and an LRU **plan cache** keyed by
+//!   `(expr, shapes, ranks, planner config)` with hit/miss counters
+//!   ([`Session::cache_stats`]): recompiling an identical spec skips
+//!   planning entirely and shares the cached [`Plan`];
+//! - a [`Program`] ([`Session::compile`]) owns its plan, its persistent
+//!   simulated machine, and every recycled buffer.  [`Program::run`]
+//!   executes and returns a fresh output; [`Program::run_into`] writes
+//!   the output through a caller-provided tensor so steady-state reruns
+//!   perform **zero tensor allocations** end to end;
+//!   [`Program::schedule`] renders the §II-E intermediate program and
+//!   [`Program::stats`] merges every store/scratch counter into one
+//!   [`RunStats`].
+//!
+//! ```
+//! use deinsum::{Session, Tensor};
+//! # fn main() -> deinsum::Result<()> {
+//! // The paper's §II worked example: ijk,ja,ka,al->il on 8 ranks.
+//! let shapes = vec![vec![10, 10, 10], vec![10, 10], vec![10, 10], vec![10, 10]];
+//! let session = Session::builder().ranks(8).build()?;
+//! let mut program = session.compile("ijk,ja,ka,al->il", &shapes)?;
+//! let inputs: Vec<Tensor> =
+//!     shapes.iter().enumerate().map(|(i, s)| Tensor::random(s, i as u64)).collect();
+//! let report = program.run(&inputs)?;
+//! assert_eq!(report.output.dims(), &[10, 10]);
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! ## Under the hood (the old wiring ritual)
+//!
+//! `compile` runs the same pipeline the free functions expose, in order:
+//! [`EinsumSpec::parse`] validates the expression against the operand
+//! shapes; [`crate::planner::plan`] decomposes it into FLOP-minimal
+//! binary ops ([`crate::contraction`]), finds the I/O-minimal fusion and
+//! per-term Cartesian grids with the SOAP model ([`crate::soap`]),
+//! block-distributes operands ([`crate::dist`]) and infers the
+//! redistribution moves ([`crate::redist`]); `run` drives the resulting
+//! [`Plan`] through the execution core (the [`crate::coordinator`]
+//! module) on the simulated machine ([`crate::sim`]), dispatching local
+//! tile kernels through the engine ([`crate::runtime`]).  Before 0.5.0
+//! every caller hand-wired those steps and borrowed the engine into a
+//! `Coordinator` for its whole lifetime; the deprecated
+//! [`crate::coordinator::Coordinator`] wrapper keeps that path compiling
+//! for one release.
+
+use std::cell::RefCell;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use crate::baseline::plan_baseline;
+use crate::coordinator::{run_plan, ExecState, LocalScratchStats, RunMetrics, RunReport};
+use crate::einsum::EinsumSpec;
+use crate::error::Result;
+use crate::planner::{plan as plan_schedule, Plan, PlannerConfig};
+use crate::runtime::KernelEngine;
+use crate::sim::{NetworkModel, StoreStats};
+use crate::tensor::kernel::{KernelConfig, ScratchStats};
+use crate::tensor::Tensor;
+
+/// Hit/miss/eviction counters of a [`Session`]'s plan cache.  A repeated
+/// [`Session::compile`] of an identical `(expr, shapes, ranks, planner)`
+/// key is a `hit` and skips planning entirely.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct PlanCacheStats {
+    /// Compiles served from the cache (planning skipped).
+    pub hits: u64,
+    /// Compiles that ran the planner.
+    pub misses: u64,
+    /// Cached plans dropped to respect the capacity bound (LRU order).
+    pub evictions: u64,
+}
+
+/// Everything that identifies a plan: the expression, the operand
+/// shapes, the rank count, the planner knobs (f64 compared by bits), and
+/// whether the CTF-like baseline scheduler was requested.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct PlanKey {
+    expr: String,
+    shapes: Vec<Vec<usize>>,
+    p: usize,
+    s_bits: u64,
+    fuse: bool,
+    soap_grids: bool,
+    baseline: bool,
+}
+
+/// LRU plan cache: MRU at the back of `entries`, evictions pop the
+/// front.  Linear scan — capacities are tens of plans, and a hit saves a
+/// full SOAP solve + grid search, so lookup cost is noise.
+struct PlanCache {
+    capacity: usize,
+    entries: Vec<(PlanKey, Rc<Plan>)>,
+    stats: PlanCacheStats,
+}
+
+impl PlanCache {
+    fn new(capacity: usize) -> Self {
+        PlanCache {
+            capacity: capacity.max(1),
+            entries: Vec::new(),
+            stats: PlanCacheStats::default(),
+        }
+    }
+
+    fn get_or_plan(
+        &mut self,
+        key: PlanKey,
+        build: impl FnOnce() -> Result<Plan>,
+    ) -> Result<Rc<Plan>> {
+        if let Some(pos) = self.entries.iter().position(|(k, _)| *k == key) {
+            self.stats.hits += 1;
+            let entry = self.entries.remove(pos);
+            let plan = Rc::clone(&entry.1);
+            self.entries.push(entry);
+            return Ok(plan);
+        }
+        self.stats.misses += 1;
+        let plan = Rc::new(build()?);
+        if self.entries.len() >= self.capacity {
+            self.entries.remove(0);
+            self.stats.evictions += 1;
+        }
+        self.entries.push((key, Rc::clone(&plan)));
+        Ok(plan)
+    }
+}
+
+/// Builder for a [`Session`]: rank count, network model, PJRT artifact
+/// directory, kernel-config/thread overrides, planner knobs, and the
+/// plan-cache capacity.
+#[derive(Debug, Clone)]
+pub struct SessionBuilder {
+    ranks: usize,
+    network: NetworkModel,
+    artifacts: Option<PathBuf>,
+    kernel_config: Option<KernelConfig>,
+    threads: Option<usize>,
+    planner: PlannerConfig,
+    plan_cache_capacity: usize,
+}
+
+impl Default for SessionBuilder {
+    fn default() -> Self {
+        SessionBuilder {
+            ranks: 8,
+            network: NetworkModel::aries(),
+            artifacts: None,
+            kernel_config: None,
+            threads: None,
+            planner: PlannerConfig::default(),
+            plan_cache_capacity: 32,
+        }
+    }
+}
+
+impl SessionBuilder {
+    /// Default rank count for [`Session::compile`] (default 8; per-call
+    /// overrides via [`Session::compile_on`]).
+    pub fn ranks(mut self, p: usize) -> Self {
+        self.ranks = p.max(1);
+        self
+    }
+
+    /// α–β network model for the simulated machine (default
+    /// [`NetworkModel::aries`]).
+    pub fn network(mut self, net: NetworkModel) -> Self {
+        self.network = net;
+        self
+    }
+
+    /// Serve local kernels from AOT PJRT artifacts in `dir` (native
+    /// fallback per op stays available).  [`SessionBuilder::build`]
+    /// fails if the PJRT client cannot load; use
+    /// [`SessionBuilder::build_or_native`] to degrade gracefully.
+    pub fn artifacts(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.artifacts = Some(dir.into());
+        self
+    }
+
+    /// Install explicit cache-blocking/threading knobs on the engine
+    /// (otherwise `DEINSUM_MC/KC/NC` + thread env vars apply).
+    pub fn kernel_config(mut self, cfg: KernelConfig) -> Self {
+        self.kernel_config = Some(cfg);
+        self
+    }
+
+    /// Override just the worker-thread count of the local kernels.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = Some(threads);
+        self
+    }
+
+    /// Planner knobs (analysis `S`, fusion, SOAP grids).  Part of the
+    /// plan-cache key.
+    pub fn planner(mut self, cfg: PlannerConfig) -> Self {
+        self.planner = cfg;
+        self
+    }
+
+    /// Maximum number of cached plans (default 32, minimum 1; least
+    /// recently used plans are evicted).
+    pub fn plan_cache_capacity(mut self, cap: usize) -> Self {
+        self.plan_cache_capacity = cap;
+        self
+    }
+
+    /// Build the session.  Only the PJRT path can fail (missing or
+    /// unloadable artifacts); a native session is infallible.
+    pub fn build(self) -> Result<Session> {
+        let mut engine = match &self.artifacts {
+            Some(dir) => KernelEngine::pjrt(dir)?,
+            None => KernelEngine::native(),
+        };
+        if let Some(cfg) = self.kernel_config {
+            engine.set_config(cfg);
+        }
+        if let Some(t) = self.threads {
+            let cfg = engine.base_config().with_threads(t);
+            engine.set_config(cfg);
+        }
+        Ok(Session {
+            engine: Rc::new(engine),
+            network: self.network,
+            ranks: self.ranks,
+            planner: self.planner,
+            cache: RefCell::new(PlanCache::new(self.plan_cache_capacity)),
+        })
+    }
+
+    /// [`build`](Self::build), degrading to native kernels (with a
+    /// stderr note) when the PJRT artifacts cannot be loaded — the
+    /// pattern every CLI/example wants.
+    pub fn build_or_native(self) -> Session {
+        if self.artifacts.is_some() {
+            let fallback = SessionBuilder { artifacts: None, ..self.clone() };
+            match self.build() {
+                Ok(s) => return s,
+                Err(e) => {
+                    eprintln!("warning: PJRT engine unavailable ({e}); using native kernels");
+                    return fallback.build_or_native();
+                }
+            }
+        }
+        self.build().expect("native session build is infallible")
+    }
+}
+
+/// A compile-once execution context: owns the [`KernelEngine`] shared by
+/// every [`Program`] it compiles, plus the LRU plan cache.  See the
+/// [module docs](self) for the full story.
+pub struct Session {
+    engine: Rc<KernelEngine>,
+    network: NetworkModel,
+    ranks: usize,
+    planner: PlannerConfig,
+    cache: RefCell<PlanCache>,
+}
+
+impl Session {
+    /// Start configuring a session.
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::default()
+    }
+
+    /// Compile `expr` over `shapes` on the session's default rank count.
+    /// Identical `(expr, shapes, ranks, planner)` keys hit the plan
+    /// cache and skip planning (the returned [`Program`] shares the
+    /// cached [`Plan`] but owns fresh execution state).
+    pub fn compile(&self, expr: &str, shapes: &[Vec<usize>]) -> Result<Program> {
+        self.compile_on(expr, shapes, self.ranks)
+    }
+
+    /// [`compile`](Self::compile) with an explicit rank count (weak
+    /// scaling sweeps compile the same expression at many `P`).
+    pub fn compile_on(
+        &self,
+        expr: &str,
+        shapes: &[Vec<usize>],
+        ranks: usize,
+    ) -> Result<Program> {
+        let planner = self.planner;
+        // Parsing happens inside the miss path: a cache hit's key
+        // equality already proves this exact (expr, shapes) pair parsed
+        // successfully when the plan was first built.
+        let plan = self.cache.borrow_mut().get_or_plan(
+            self.key(expr, shapes, ranks, false),
+            || plan_schedule(&EinsumSpec::parse(expr, shapes)?, ranks, &planner),
+        )?;
+        Ok(self.program(plan))
+    }
+
+    /// Compile with the CTF-like baseline scheduler (no fusion, no SOAP
+    /// grids) — the comparator of the paper's Fig. 5/6 rows.  Cached
+    /// under its own key space.
+    pub fn compile_baseline(&self, expr: &str, shapes: &[Vec<usize>]) -> Result<Program> {
+        self.compile_baseline_on(expr, shapes, self.ranks)
+    }
+
+    /// [`compile_baseline`](Self::compile_baseline) with an explicit
+    /// rank count.
+    pub fn compile_baseline_on(
+        &self,
+        expr: &str,
+        shapes: &[Vec<usize>],
+        ranks: usize,
+    ) -> Result<Program> {
+        let plan = self.cache.borrow_mut().get_or_plan(
+            self.key(expr, shapes, ranks, true),
+            || plan_baseline(&EinsumSpec::parse(expr, shapes)?, ranks),
+        )?;
+        Ok(self.program(plan))
+    }
+
+    /// Plan-cache counters (the second compile of an identical spec is a
+    /// counted hit).
+    pub fn cache_stats(&self) -> PlanCacheStats {
+        self.cache.borrow().stats
+    }
+
+    /// Number of plans currently cached.
+    pub fn cached_plans(&self) -> usize {
+        self.cache.borrow().entries.len()
+    }
+
+    /// The kernel engine every program of this session dispatches
+    /// through (native packed kernels, or PJRT with native fallback).
+    pub fn engine(&self) -> &KernelEngine {
+        &self.engine
+    }
+
+    /// Default rank count for [`Session::compile`].
+    pub fn ranks(&self) -> usize {
+        self.ranks
+    }
+
+    /// The session's network model.
+    pub fn network(&self) -> NetworkModel {
+        self.network
+    }
+
+    /// The session's planner knobs (part of every cache key).
+    pub fn planner_config(&self) -> PlannerConfig {
+        self.planner
+    }
+
+    fn key(&self, expr: &str, shapes: &[Vec<usize>], p: usize, baseline: bool) -> PlanKey {
+        // Exhaustive destructuring: adding a PlannerConfig knob without
+        // extending the cache key becomes a compile error here, not a
+        // silent stale cache hit.
+        let PlannerConfig { s_elements, fuse, soap_grids } = self.planner;
+        PlanKey {
+            expr: expr.to_string(),
+            shapes: shapes.to_vec(),
+            p,
+            s_bits: s_elements.to_bits(),
+            fuse,
+            soap_grids,
+            baseline,
+        }
+    }
+
+    fn program(&self, plan: Rc<Plan>) -> Program {
+        Program {
+            engine: Rc::clone(&self.engine),
+            network: self.network,
+            plan,
+            state: ExecState::default(),
+            runs: 0,
+        }
+    }
+}
+
+/// Unified allocation/recycling counters for one [`Program`]: the
+/// persistent machine's staging/redistribution destinations and compute
+/// outputs ([`StoreStats`]), the run loop's local scratch table
+/// ([`LocalScratchStats`]), and the engine's packing/fold pool
+/// ([`ScratchStats`] — shared by every program of the session).  The
+/// steady-state invariant in one number: [`RunStats::allocs`] is flat
+/// across reruns of a warm program.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct RunStats {
+    /// Completed `run`/`run_into` calls of this program.
+    pub runs: u64,
+    /// Staging/redistribution destination + compute-output counters of
+    /// the program's persistent machine.
+    pub store: StoreStats,
+    /// Seq-intermediate / pre-reduction / permute / gather scratch
+    /// counters of the program's local scratch table.
+    pub local_scratch: LocalScratchStats,
+    /// Packing/fold scratch-pool counters of the session engine
+    /// (session-wide: shared across this session's programs).
+    pub engine_scratch: ScratchStats,
+}
+
+impl RunStats {
+    /// Total buffers heap-allocated across every counter — flat across
+    /// steady-state reruns of a warm program (asserted in tests).  Note
+    /// that `engine_scratch` is session-wide: interleaving *another*
+    /// program with larger shapes on the same session can raise the
+    /// shared pool's high-water mark and show up here; the
+    /// [`store`](RunStats::store) and
+    /// [`local_scratch`](RunStats::local_scratch) counters are strictly
+    /// per-program.
+    pub fn allocs(&self) -> u64 {
+        self.store.dest_allocs
+            + self.store.out_allocs
+            + self.local_scratch.allocs
+            + self.engine_scratch.allocs
+    }
+
+    /// Total whole-tensor recycles across every counter.
+    pub fn reuses(&self) -> u64 {
+        self.store.dest_reuses + self.store.out_reuses + self.local_scratch.reuses
+    }
+}
+
+/// A compiled distributed program: the I/O-optimal [`Plan`] (possibly
+/// shared with the session's cache), the persistent simulated machine,
+/// and every recycled buffer.  Re-running is the cheap operation the
+/// whole stack is built around — see the [module docs](self).
+pub struct Program {
+    engine: Rc<KernelEngine>,
+    network: NetworkModel,
+    plan: Rc<Plan>,
+    state: ExecState,
+    runs: u64,
+}
+
+impl Program {
+    /// Execute on global input tensors (one per einsum operand, in
+    /// order) and return the gathered output with the run's accounting.
+    /// Repeated runs recycle every staging, redistribution, compute and
+    /// scratch buffer; only the returned output tensor is freshly
+    /// allocated (use [`run_into`](Self::run_into) to recycle that too).
+    pub fn run(&mut self, inputs: &[Tensor]) -> Result<RunReport> {
+        let (out, metrics) = run_plan(
+            &self.engine,
+            self.network,
+            &mut self.state,
+            &self.plan,
+            inputs,
+            None,
+        )?;
+        self.runs += 1;
+        Ok(RunReport::from_parts(
+            out.expect("run without dest returns an output"),
+            metrics,
+        ))
+    }
+
+    /// [`run`](Self::run) writing the gathered output through `dest`
+    /// (shape-checked against [`output_dims`](Self::output_dims)): the
+    /// fully recycled path — in steady state the whole run performs zero
+    /// tensor allocations.
+    ///
+    /// ```
+    /// # use deinsum::{Session, Tensor};
+    /// # fn main() -> deinsum::Result<()> {
+    /// let session = Session::builder().ranks(4).build()?;
+    /// let shapes = vec![vec![8, 6], vec![6, 4]];
+    /// let mut program = session.compile("ij,jk->ik", &shapes)?;
+    /// let inputs = vec![Tensor::random(&[8, 6], 1), Tensor::random(&[6, 4], 2)];
+    /// let mut out = Tensor::zeros(&program.output_dims());
+    /// let metrics = program.run_into(&inputs, &mut out)?;
+    /// assert_eq!(out.dims(), &[8, 4]);
+    /// assert_eq!(metrics.per_term.len(), 1);
+    /// # Ok(())
+    /// # }
+    /// ```
+    pub fn run_into(&mut self, inputs: &[Tensor], dest: &mut Tensor) -> Result<RunMetrics> {
+        let (_, metrics) = run_plan(
+            &self.engine,
+            self.network,
+            &mut self.state,
+            &self.plan,
+            inputs,
+            Some(dest),
+        )?;
+        self.runs += 1;
+        Ok(metrics)
+    }
+
+    /// Render the generated schedule (the paper's §II-E "intermediate
+    /// program": grids, distributions, compute, Allreduce, Redistribute).
+    pub fn schedule(&self) -> String {
+        self.plan.render()
+    }
+
+    /// The compiled plan (shared with the session cache when the compile
+    /// was a hit).
+    pub fn plan(&self) -> &Plan {
+        &self.plan
+    }
+
+    /// The parsed einsum specification this program computes.
+    pub fn spec(&self) -> &EinsumSpec {
+        &self.plan.spec
+    }
+
+    /// Rank count the plan is scheduled for.
+    pub fn ranks(&self) -> usize {
+        self.plan.p
+    }
+
+    /// Global output dims (what a [`run_into`](Self::run_into) `dest`
+    /// must have).
+    pub fn output_dims(&self) -> Vec<usize> {
+        self.plan.spec.output.iter().map(|c| self.plan.spec.extents[c]).collect()
+    }
+
+    /// Unified counters: machine store + local scratch + engine scratch
+    /// + completed runs.
+    pub fn stats(&self) -> RunStats {
+        RunStats {
+            runs: self.runs,
+            store: self.state.store_stats(),
+            local_scratch: self.state.local_scratch_stats(),
+            engine_scratch: self.engine.scratch_stats(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cache_hits_share_the_plan_and_skip_planning() {
+        let session = Session::builder().ranks(4).build().unwrap();
+        let shapes = vec![vec![12, 10], vec![10, 8]];
+        let p1 = session.compile("ij,jk->ik", &shapes).unwrap();
+        let s = session.cache_stats();
+        assert_eq!((s.hits, s.misses), (0, 1));
+        let p2 = session.compile("ij,jk->ik", &shapes).unwrap();
+        let s = session.cache_stats();
+        assert_eq!((s.hits, s.misses), (1, 1), "identical spec must be a cache hit");
+        // The hit shares the exact same Plan allocation.
+        assert!(std::ptr::eq(p1.plan(), p2.plan()));
+        // Different shapes miss.
+        let shapes2 = vec![vec![14, 10], vec![10, 8]];
+        let _p3 = session.compile("ij,jk->ik", &shapes2).unwrap();
+        let s = session.cache_stats();
+        assert_eq!((s.hits, s.misses), (1, 2), "different shapes must re-plan");
+        assert_eq!(session.cached_plans(), 2);
+    }
+
+    #[test]
+    fn cache_evicts_lru_at_capacity() {
+        let session =
+            Session::builder().ranks(2).plan_cache_capacity(2).build().unwrap();
+        let mk = |n: usize| vec![vec![n, 6], vec![6, 4]];
+        session.compile("ij,jk->ik", &mk(8)).unwrap();
+        session.compile("ij,jk->ik", &mk(10)).unwrap();
+        // Touch the first so the second becomes LRU, then insert a third.
+        session.compile("ij,jk->ik", &mk(8)).unwrap();
+        session.compile("ij,jk->ik", &mk(12)).unwrap();
+        let s = session.cache_stats();
+        assert_eq!(s.evictions, 1);
+        assert_eq!(session.cached_plans(), 2);
+        // The touched entry survived; the LRU one re-plans.
+        session.compile("ij,jk->ik", &mk(8)).unwrap();
+        assert_eq!(session.cache_stats().hits, 2);
+        session.compile("ij,jk->ik", &mk(10)).unwrap();
+        assert_eq!(session.cache_stats().misses, 4, "evicted plan must re-plan");
+    }
+
+    #[test]
+    fn baseline_and_deinsum_plans_cache_separately() {
+        let session = Session::builder().ranks(4).build().unwrap();
+        let shapes = vec![vec![12, 10, 8], vec![10, 4], vec![8, 4]];
+        let d = session.compile("ijk,ja,ka->ia", &shapes).unwrap();
+        let b = session.compile_baseline("ijk,ja,ka->ia", &shapes).unwrap();
+        assert!(!std::ptr::eq(d.plan(), b.plan()));
+        assert_eq!(session.cache_stats().misses, 2);
+        session.compile_baseline("ijk,ja,ka->ia", &shapes).unwrap();
+        assert_eq!(session.cache_stats().hits, 1);
+    }
+}

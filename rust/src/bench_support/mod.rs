@@ -10,13 +10,11 @@
 
 use std::collections::BTreeMap;
 
-use crate::baseline::plan_baseline;
-use crate::coordinator::{Coordinator, RunReport};
+use crate::api::Session;
+use crate::coordinator::RunReport;
 use crate::einsum::EinsumSpec;
 use crate::error::Result;
-use crate::planner::{plan, PlannerConfig};
-use crate::runtime::KernelEngine;
-use crate::sim::{NetworkModel, TimeBreakdown};
+use crate::sim::TimeBreakdown;
 use crate::tensor::Tensor;
 
 /// One Table IV benchmark.
@@ -195,26 +193,25 @@ pub struct BenchPoint {
 
 /// Run one benchmark point: both schedulers, same inputs, numerics
 /// cross-checked.  Returns the reports too (for Fig. 6 GPU modeling).
+/// Plans come through the session's cache, so weak-scaling sweeps that
+/// revisit a `(benchmark, P)` point skip re-planning.
 pub fn run_point(
     def: &BenchDef,
     p: usize,
-    engine: &KernelEngine,
-    net: NetworkModel,
+    session: &Session,
 ) -> Result<(BenchPoint, RunReport, RunReport)> {
-    let spec = def.spec_at(p)?;
     let shapes = def.shapes_at(p);
     let inputs: Vec<Tensor> = shapes
         .iter()
         .enumerate()
         .map(|(i, s)| Tensor::random(s, 42 + i as u64))
         .collect();
-    let coord = Coordinator::new(engine, net);
 
-    let dplan = plan(&spec, p, &PlannerConfig::default())?;
-    let drep = coord.run(&dplan, &inputs)?;
+    let mut dprog = session.compile_on(&def.expr, &shapes, p)?;
+    let drep = dprog.run(&inputs)?;
 
-    let bplan = plan_baseline(&spec, p)?;
-    let brep = coord.run(&bplan, &inputs)?;
+    let mut bprog = session.compile_baseline_on(&def.expr, &shapes, p)?;
+    let brep = bprog.run(&inputs)?;
 
     // Cross-check: two independent schedules must agree.
     debug_assert!(
@@ -317,10 +314,12 @@ mod tests {
     fn run_point_small() {
         let defs = suite(64);
         let m0 = defs.iter().find(|d| d.name == "MTTKRP-03-M0").unwrap();
-        let engine = KernelEngine::native();
-        let (pt, drep, brep) = run_point(m0, 4, &engine, NetworkModel::aries()).unwrap();
+        let session = Session::builder().build().unwrap();
+        let (pt, drep, brep) = run_point(m0, 4, &session).unwrap();
         assert!(pt.speedup > 0.0);
         assert!(drep.output.rel_error(&brep.output) < 1e-3);
+        // Both schedulers' plans landed in the session cache.
+        assert_eq!(session.cache_stats().misses, 2);
     }
 
     #[test]
@@ -331,8 +330,8 @@ mod tests {
         // noise, so this check uses the 64-base suite at P=8.
         let defs = suite(16);
         let m0 = defs.iter().find(|d| d.name == "MTTKRP-03-M0").unwrap();
-        let engine = KernelEngine::native();
-        let (pt, _, _) = run_point(m0, 8, &engine, NetworkModel::aries()).unwrap();
+        let session = Session::builder().build().unwrap();
+        let (pt, _, _) = run_point(m0, 8, &session).unwrap();
         // Communication volume is deterministic — the §IV-E claim.
         assert!(
             pt.deinsum_comm_bytes < pt.baseline_comm_bytes,

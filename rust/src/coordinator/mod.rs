@@ -15,39 +15,43 @@
 //! measured compute + α–β-modeled communication, reported per term for
 //! the Fig. 5/6 blue/pink split.
 //!
-//! The coordinator holds its [`Machine`] **across runs**: repeated
-//! executions of a plan (CP-ALS sweeps, benches) recycle every staging
-//! and redistribution destination buffer from the previous run
-//! ([`Machine::store_stats`] counters) — and, through the `*_into`
-//! kernel family, every **compute output** as well:
-//! [`Machine::compute_step_into`] hands each rank a destination recycled
-//! from the store, the Seq kernel's per-op intermediates and the MTTKRP
-//! output-order permute recycle through a per-`(term, op)`
+//! The execution core is `run_plan` over an `ExecState` — the
+//! persistent [`Machine`] plus the recycled local scratch table — owned
+//! by [`crate::api::Program`] (the public front door: one compiled
+//! program, one persistent state) or, for one more release, by the
+//! deprecated [`Coordinator`] wrapper.  Repeated executions of a plan
+//! (CP-ALS sweeps, benches) recycle every staging and redistribution
+//! destination buffer from the previous run ([`Machine::store_stats`]
+//! counters) — and, through the `*_into` kernel family, every **compute
+//! output** as well: [`Machine::compute_step_into`] hands each rank a
+//! destination recycled from the store, the Seq kernel's per-op
+//! intermediates, its pre-reduction buffers for indices private to one
+//! operand ([`contract::reduce_modes_into`]), and the MTTKRP
+//! output-order permute recycle through a per-`(term, slot)`
 //! [`LocalScratchStats`]-counted scratch table, and local inputs are
 //! borrowed from the store rather than deep-copied.  In steady state the
-//! whole run loop performs zero tensor allocations (asserted in tests;
-//! sole documented exception: summed-away private indices pre-reduce
-//! through allocating [`contract::reduce_mode`] intermediates) on top of
-//! the engine's zero packing/fold allocations.  Each term also
-//! reconfigures the [`KernelEngine`] with its SOAP-derived tile sizes
-//! ([`crate::planner::TermPlan::kernel_config`] via
-//! [`KernelEngine::configure_for_term`]) — previously opt-in in benches.
+//! whole run loop performs zero tensor allocations (asserted in tests).
+//! Each term also reconfigures the [`KernelEngine`] with its
+//! SOAP-derived tile sizes ([`crate::planner::TermPlan::kernel_config`]
+//! via [`KernelEngine::configure_for_term`]).
+//!
+//! [`TensorDist`]: crate::dist::TensorDist
 
 use std::cell::RefCell;
 use std::collections::{BTreeMap, BTreeSet, HashMap};
 
 use crate::einsum::BinaryOp;
 use crate::error::{Error, Result};
-use crate::planner::{LocalKernel, Plan, TermInput};
+use crate::planner::{LocalKernel, Plan, TermInput, TermPlan};
 use crate::runtime::KernelEngine;
 use crate::sim::collectives::reduction_groups;
 use crate::sim::{AccelModel, CommStats, Machine, NetworkModel, StoreStats, TimeBreakdown};
 use crate::tensor::{contract, Tensor, ELEM_BYTES};
 
-/// Allocation counters for the coordinator's local scratch table (Seq
-/// intermediates + MTTKRP permute buffers).  Steady-state invariant:
-/// `allocs` stops growing after the first run of a plan while `reuses`
-/// keeps counting.
+/// Allocation counters for the run loop's local scratch table (Seq
+/// intermediates, pre-reduction buffers, MTTKRP permute buffers, the
+/// gather's permute staging).  Steady-state invariant: `allocs` stops
+/// growing after the first run of a plan while `reuses` keeps counting.
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct LocalScratchStats {
     /// Whole local tensors heap-allocated (first run, or shape change).
@@ -56,19 +60,30 @@ pub struct LocalScratchStats {
     pub reuses: u64,
 }
 
-/// Recycled per-rank buffers for the per-term local compute: Seq-kernel
-/// intermediates keyed by `(term, op)` and the MTTKRP output-order
-/// permute's natural-layout outputs keyed by `(term, usize::MAX)`.  The
-/// coordinator-level analogue of the engine's
-/// [`crate::tensor::kernel::ScratchPool`], but holding whole tensors.
+/// Recycled per-rank buffers for the per-term local compute, keyed by
+/// `(term, slot)`: Seq-kernel intermediates at `(term, op)`,
+/// pre-reduction buffers at `(term, REDUCE_BASE + 2·op + operand)`, the
+/// MTTKRP output-order permute at `(term, PERMUTE_SLOT)`, and the final
+/// gather's permute staging at [`GATHER_KEY`].  The run-loop analogue of
+/// the engine's [`crate::tensor::kernel::ScratchPool`], but holding
+/// whole tensors.
 #[derive(Debug, Default)]
-struct LocalScratch {
+pub(crate) struct LocalScratch {
     bufs: HashMap<(usize, usize), Vec<Tensor>>,
     stats: LocalScratchStats,
 }
 
 /// Scratch key of a term's MTTKRP permute buffers (never a real op id).
 const PERMUTE_SLOT: usize = usize::MAX;
+
+/// Base of the scratch-key slot range holding pre-reduction buffers
+/// (`slot = REDUCE_BASE + 2·op + operand`); far above any real op count
+/// and below [`PERMUTE_SLOT`].
+const REDUCE_BASE: usize = usize::MAX / 2;
+
+/// Scratch key of the gather stage's permute staging buffer (the term
+/// index `usize::MAX` is never a real term).
+const GATHER_KEY: (usize, usize) = (usize::MAX, 0);
 
 impl LocalScratch {
     /// Take the buffer set for `key` (recycled when `p` tensors of shape
@@ -106,6 +121,19 @@ pub struct TermStats {
     pub local_out_bytes: usize,
 }
 
+/// Time/volume accounting of one run, without the gathered output — what
+/// [`crate::api::Program::run_into`] returns (the output lands in the
+/// caller's recycled tensor instead).
+#[derive(Debug, Clone)]
+pub struct RunMetrics {
+    /// Total simulated time.
+    pub time: TimeBreakdown,
+    /// Exact communication volumes.
+    pub comm: CommStats,
+    /// Per-term breakdown.
+    pub per_term: Vec<TermStats>,
+}
+
 /// The result of a distributed run.
 #[derive(Debug, Clone)]
 pub struct RunReport {
@@ -120,6 +148,10 @@ pub struct RunReport {
 }
 
 impl RunReport {
+    pub(crate) fn from_parts(output: Tensor, m: RunMetrics) -> Self {
+        RunReport { output, time: m.time, comm: m.comm, per_term: m.per_term }
+    }
+
     /// Fig. 6 time model: device compute = measured/speedup; in
     /// *accelerator mode* every term also pays H2D/D2H copies of its
     /// local footprints; *GPU-resident* mode skips the copies.  Network
@@ -138,369 +170,669 @@ impl RunReport {
     }
 }
 
-/// Executes plans against a kernel engine (PJRT or native), holding a
-/// persistent [`Machine`] so steady-state reruns recycle every staging
-/// and redistribution destination buffer.
+/// Persistent execution state for one compiled program: the simulated
+/// [`Machine`] (rank-local stores, recycled staging/redistribution/
+/// compute-output buffers) and the [`LocalScratch`] table.  Owned by
+/// [`crate::api::Program`]; the deprecated [`Coordinator`] wraps one in
+/// a `RefCell` for its legacy `run(&self)` signature.
+#[derive(Default)]
+pub(crate) struct ExecState {
+    pub(crate) machine: Option<Machine>,
+    pub(crate) scratch: LocalScratch,
+}
+
+impl ExecState {
+    /// Buffer-recycling counters of the persistent machine (defaults
+    /// until the first run).
+    pub(crate) fn store_stats(&self) -> StoreStats {
+        self.machine.as_ref().map(|m| m.store_stats()).unwrap_or_default()
+    }
+
+    /// Allocation counters of the local scratch table.
+    pub(crate) fn local_scratch_stats(&self) -> LocalScratchStats {
+        self.scratch.stats
+    }
+}
+
+/// Execute `plan` on `state` against `engine`, staging the global
+/// `inputs` (one per program operand, in einsum order).  Initial
+/// distribution is not charged (the paper's weak-scaling timings start
+/// from distributed data).  With `dest = Some(t)` the gathered output is
+/// written through `t` (shape-checked against the spec's output dims;
+/// recycled permute staging keeps the path allocation-free in steady
+/// state) and the returned output is `None`; with `dest = None` a fresh
+/// output tensor is returned.
+pub(crate) fn run_plan(
+    engine: &KernelEngine,
+    network: NetworkModel,
+    state: &mut ExecState,
+    plan: &Plan,
+    inputs: &[Tensor],
+    dest: Option<&mut Tensor>,
+) -> Result<(Option<Tensor>, RunMetrics)> {
+    let res = run_plan_inner(engine, network, state, plan, inputs, dest);
+    // Per-term overrides must not leak past the run.
+    engine.reset_config();
+    res
+}
+
+fn run_plan_inner(
+    engine: &KernelEngine,
+    network: NetworkModel,
+    state: &mut ExecState,
+    plan: &Plan,
+    inputs: &[Tensor],
+    dest: Option<&mut Tensor>,
+) -> Result<(Option<Tensor>, RunMetrics)> {
+    if inputs.len() != plan.path.n_inputs {
+        return Err(Error::plan(format!(
+            "plan needs {} inputs, got {}",
+            plan.path.n_inputs,
+            inputs.len()
+        )));
+    }
+    for (op, t) in plan.spec.inputs.iter().zip(inputs) {
+        let want: Vec<usize> = op.iter().map(|c| plan.spec.extents[c]).collect();
+        if t.dims() != want {
+            return Err(Error::shape(format!(
+                "input dims {:?} != spec {:?}",
+                t.dims(),
+                want
+            )));
+        }
+    }
+    if let Some(d) = dest.as_deref() {
+        let want: Vec<usize> =
+            plan.spec.output.iter().map(|c| plan.spec.extents[c]).collect();
+        if d.dims() != want {
+            return Err(Error::shape(format!(
+                "run_into: dest dims {:?} != output dims {want:?}",
+                d.dims()
+            )));
+        }
+    }
+
+    let ExecState { machine: machine_slot, scratch } = state;
+    // Reuse the persistent machine (and its store) when the rank count
+    // matches; only the accounting is reset per run.
+    if !matches!(machine_slot.as_ref(), Some(m) if m.ranks() == plan.p) {
+        *machine_slot = Some(Machine::new(plan.p, network));
+    }
+    let machine = machine_slot
+        .as_mut()
+        .ok_or_else(|| Error::plan("machine initialization failed"))?;
+    machine.begin_run();
+    let mut per_term: Vec<TermStats> = Vec::new();
+    // Every store name / scratch key this run touches; anything else is
+    // a stale buffer set from a previously-run plan and is pruned at the
+    // end (the persistent buffers must not grow across plan switches).
+    let mut live_names: BTreeSet<String> = BTreeSet::new();
+    let mut live_scratch: BTreeSet<(usize, usize)> = BTreeSet::new();
+
+    for (ti, term) in plan.terms.iter().enumerate() {
+        let mut stats = TermStats { name: term.name.clone(), ..Default::default() };
+        let comm_before = machine.time.comm;
+        // Retarget the engine's cache blocking to this term's
+        // SOAP-derived tiles (§IV: the local kernel blocks along the
+        // same proportions the I/O analysis assumed).
+        engine.configure_for_term(term);
+
+        // --- stage inputs -------------------------------------------------
+        let mut in_names: Vec<String> = Vec::with_capacity(term.inputs.len());
+        for (slot, tin) in term.inputs.iter().enumerate() {
+            let name = format!("t{}@{}", tin.id, term.name);
+            if tin.id < plan.path.n_inputs {
+                // Program input: scatter blocks into recycled store
+                // buffers (uncharged staging).
+                machine.stage_blocks(&name, &inputs[tin.id], &tin.dist)?;
+            } else {
+                // Intermediate: redistribute from the producing term.
+                let mv = plan
+                    .moves
+                    .iter()
+                    .find(|m| m.to_term == ti && m.to_slot == slot)
+                    .ok_or_else(|| {
+                        Error::malformed_plan(
+                            &term.name,
+                            format!("no move for t{} into slot {slot}", tin.id),
+                        )
+                    })?;
+                let from = plan.terms.get(mv.from_term).ok_or_else(|| {
+                    Error::malformed_plan(
+                        &term.name,
+                        format!("move from_term {} out of range", mv.from_term),
+                    )
+                })?;
+                let src_name = format!("t{}@{}", tin.id, from.name);
+                machine.redistribute(&src_name, &name, &mv.plan, &mv.src, &mv.dst)?;
+            }
+            stats.local_in_bytes +=
+                tin.dist.local_dims().iter().product::<usize>() * ELEM_BYTES;
+            live_names.insert(name.clone());
+            in_names.push(name);
+        }
+
+        // --- local compute ------------------------------------------------
+        let out_name = format!("t{}@{}", term.output_id, term.name);
+        live_names.insert(out_name.clone());
+        match &term.kernel {
+            LocalKernel::Mttkrp { x_input, mode, factor_inputs } => {
+                if factor_inputs.is_empty() {
+                    return Err(Error::malformed_plan(&term.name, "mttkrp with no factors"));
+                }
+                // Every slot index comes from the plan: range-check them
+                // all so a corrupted plan is an Err, never a panic
+                // (in_names is index-aligned with term.inputs).
+                let x_in = term.inputs.get(*x_input).ok_or_else(|| {
+                    Error::malformed_plan(
+                        &term.name,
+                        format!("mttkrp x slot {x_input} out of range"),
+                    )
+                })?;
+                let x_name = in_names[*x_input].as_str();
+                let f_names: Vec<&str> = factor_inputs
+                    .iter()
+                    .map(|&s| {
+                        in_names.get(s).map(String::as_str).ok_or_else(|| {
+                            Error::malformed_plan(
+                                &term.name,
+                                format!("mttkrp factor slot {s} out of range"),
+                            )
+                        })
+                    })
+                    .collect::<Result<_>>()?;
+                let order = x_in.indices.len();
+                let mode = *mode;
+                // Local kernel output shape: (local mode extent, local R).
+                let x_ldims = x_in.dist.local_dims();
+                let mode_extent = x_ldims.get(mode).copied().ok_or_else(|| {
+                    Error::malformed_plan(
+                        &term.name,
+                        format!("mttkrp mode {mode} out of range for order {order}"),
+                    )
+                })?;
+                let r_local = term.inputs[factor_inputs[0]]
+                    .dist
+                    .local_dims()
+                    .get(1)
+                    .copied()
+                    .ok_or_else(|| {
+                        Error::malformed_plan(&term.name, "mttkrp factor is not a matrix")
+                    })?;
+                let natural_dims = [mode_extent, r_local];
+                // Kernel output order is (mode_idx, r); a differing
+                // term output order takes the recycled permute path.
+                let x_idx = &x_in.indices;
+                let r_char = term
+                    .output_indices
+                    .iter()
+                    .copied()
+                    .find(|c| !x_idx.contains(c))
+                    .ok_or_else(|| {
+                        Error::malformed_plan(&term.name, "mttkrp: no rank index")
+                    })?;
+                let mode_char = x_idx[mode];
+                let natural = vec![mode_char, r_char];
+                if term.output_indices == natural {
+                    // Kernel writes straight into the store-recycled
+                    // per-rank destinations.
+                    machine.compute_step_into(&out_name, &natural_dims, |r, m, dest| {
+                        mttkrp_rank_into(
+                            engine, m, r, &term.name, x_name, &f_names, order, mode, dest,
+                        )
+                    })?;
+                } else {
+                    let perm: Vec<usize> = term
+                        .output_indices
+                        .iter()
+                        .map(|c| {
+                            natural.iter().position(|d| d == c).ok_or_else(|| {
+                                Error::malformed_plan(
+                                    &term.name,
+                                    format!(
+                                        "mttkrp output index '{c}' not in natural \
+                                         layout {natural:?}"
+                                    ),
+                                )
+                            })
+                        })
+                        .collect::<Result<_>>()?;
+                    let permuted_dims: Vec<usize> =
+                        perm.iter().map(|&p| natural_dims[p]).collect();
+                    // Natural-layout kernel outputs land in scratch
+                    // buffers recycled across runs...
+                    let key = (ti, PERMUTE_SLOT);
+                    live_scratch.insert(key);
+                    let mut nat = scratch.take(key, plan.p, &natural_dims);
+                    for (r, buf) in nat.iter_mut().enumerate() {
+                        let t0 = std::time::Instant::now();
+                        mttkrp_rank_into(
+                            engine, machine, r, &term.name, x_name, &f_names, order, mode,
+                            buf,
+                        )?;
+                        machine.charge_compute(r, t0.elapsed().as_secs_f64());
+                    }
+                    // ...then permute into the store-recycled
+                    // destinations (no allocation on either side).  The
+                    // scratch goes back before error propagation so a
+                    // recovered run stays allocation-free.
+                    let step = machine.compute_step_into(&out_name, &permuted_dims, |r, _m, dest| {
+                        nat[r].permute_into(&perm, dest)
+                    });
+                    scratch.put(key, nat);
+                    step?;
+                }
+            }
+            LocalKernel::Seq => {
+                // Local output extents per index char: inputs are
+                // staged at their distribution's padded local dims,
+                // so every op's local output shape is fixed by the
+                // chars it keeps — known before any kernel runs,
+                // which is what lets the destinations be recycled.
+                let mut local_ext: BTreeMap<char, usize> = BTreeMap::new();
+                for tin in &term.inputs {
+                    for (c, e) in tin.indices.iter().zip(tin.dist.local_dims()) {
+                        local_ext.insert(*c, e);
+                    }
+                }
+                let op_dims: Vec<Vec<usize>> = term
+                    .ops
+                    .iter()
+                    .map(|op| {
+                        let d: Vec<usize> = op
+                            .output
+                            .iter()
+                            .map(|c| {
+                                local_ext.get(c).copied().ok_or_else(|| {
+                                    Error::malformed_plan(
+                                        &term.name,
+                                        format!("seq: unknown index '{c}'"),
+                                    )
+                                })
+                            })
+                            .collect::<Result<_>>()?;
+                        Ok(if d.is_empty() { vec![1] } else { d })
+                    })
+                    .collect::<Result<_>>()?;
+                let n_ops = term.ops.len();
+                if n_ops == 0 {
+                    return Err(Error::malformed_plan(&term.name, "empty term"));
+                }
+                if term.ops[n_ops - 1].output_id != term.output_id {
+                    return Err(Error::malformed_plan(
+                        &term.name,
+                        "last op does not produce the term output",
+                    ));
+                }
+                // Tensor-id table: term inputs are *borrowed* from
+                // the store (never deep-copied); intermediates live
+                // in scratch buffers recycled across runs.  The
+                // final op writes the store-recycled destination.
+                let mut src_of: BTreeMap<usize, SeqSrc> = BTreeMap::new();
+                for (slot, tin) in term.inputs.iter().enumerate() {
+                    src_of.insert(tin.id, SeqSrc::Input(slot));
+                }
+                for (j, op) in term.ops.iter().enumerate() {
+                    src_of.insert(op.output_id, SeqSrc::Op(j));
+                }
+                // Pre-reduction table: operands carrying indices private
+                // to themselves and absent from the op output are summed
+                // away *before* the engine sees them, through recycled
+                // scratch buffers ([`contract::reduce_modes_into`]) — so
+                // `einsum2`'s internal pre-reduction (which allocates)
+                // stays off the hot path.
+                let mut red = build_reduce_slots(
+                    term, ti, plan.p, &src_of, &local_ext, scratch, &mut live_scratch,
+                )?;
+                let mut opbufs: Vec<Vec<Tensor>> = (0..n_ops - 1)
+                    .map(|j| {
+                        live_scratch.insert((ti, j));
+                        scratch.take((ti, j), plan.p, &op_dims[j])
+                    })
+                    .collect();
+                let ops = &term.ops;
+                let term_inputs = &term.inputs;
+                // Bound (not `?`d) so the recycled buffer sets return to
+                // the scratch table even when a kernel errors mid-step —
+                // a caller that recovers keeps its flat alloc counters.
+                let step = machine.compute_step_into(&out_name, &op_dims[n_ops - 1], |r, m, dest| {
+                    for (j, op) in ops.iter().enumerate() {
+                        // Ops run in order: everything before `j` is
+                        // readable, `j`'s buffer (or the final
+                        // destination) is writable.
+                        if op.input_ids.is_empty() {
+                            return Err(Error::malformed_plan(
+                                &term.name,
+                                "0-ary local op unsupported",
+                            ));
+                        }
+                        let (done, rest) = opbufs.split_at_mut(j.min(n_ops - 1));
+                        let dst: &mut Tensor =
+                            if j == n_ops - 1 { &mut *dest } else { &mut rest[0][r] };
+                        let (ra, rai) = seq_operand(
+                            op.input_ids[0],
+                            j,
+                            &src_of,
+                            m,
+                            r,
+                            &in_names,
+                            term_inputs,
+                            done,
+                            ops,
+                        )?;
+                        if let Some(rs) = red[2 * j].as_mut() {
+                            contract::reduce_modes_into(ra, &rs.drop, &mut rs.bufs[r])?;
+                        }
+                        match op.input_ids.len() {
+                            2 => {
+                                let (rb, rbi) = seq_operand(
+                                    op.input_ids[1],
+                                    j,
+                                    &src_of,
+                                    m,
+                                    r,
+                                    &in_names,
+                                    term_inputs,
+                                    done,
+                                    ops,
+                                )?;
+                                if let Some(rs) = red[2 * j + 1].as_mut() {
+                                    contract::reduce_modes_into(
+                                        rb, &rs.drop, &mut rs.bufs[r],
+                                    )?;
+                                }
+                                let (a, ai) = match red[2 * j].as_ref() {
+                                    Some(rs) => (&rs.bufs[r], rs.idx.as_slice()),
+                                    None => (ra, rai),
+                                };
+                                let (b, bi) = match red[2 * j + 1].as_ref() {
+                                    Some(rs) => (&rs.bufs[r], rs.idx.as_slice()),
+                                    None => (rb, rbi),
+                                };
+                                engine.einsum2_into(a, ai, b, bi, &op.output, dst)?;
+                            }
+                            1 => {
+                                let (a, ai) = match red[2 * j].as_ref() {
+                                    Some(rs) => (&rs.bufs[r], rs.idx.as_slice()),
+                                    None => (ra, rai),
+                                };
+                                unary_local_into(a, ai, &op.output, dst)?;
+                            }
+                            n => {
+                                return Err(Error::malformed_plan(
+                                    &term.name,
+                                    format!("{n}-ary local op unsupported"),
+                                ))
+                            }
+                        }
+                    }
+                    Ok(())
+                });
+                for (j, v) in opbufs.into_iter().enumerate() {
+                    scratch.put((ti, j), v);
+                }
+                for (slot, rs) in red.into_iter().enumerate() {
+                    if let Some(rs) = rs {
+                        scratch.put((ti, REDUCE_BASE + slot), rs.bufs);
+                    }
+                }
+                step?;
+            }
+        }
+        machine.end_step();
+        stats.local_out_bytes =
+            term.output_dist.local_dims().iter().product::<usize>() * ELEM_BYTES;
+
+        // --- reduce partials over sub-grids -------------------------------
+        if !term.reduced_grid_dims.is_empty() {
+            let groups = reduction_groups(&term.grid, &term.reduced_grid_dims);
+            machine.allreduce_sum(&out_name, &groups)?;
+        }
+
+        stats.comm = machine.time.comm - comm_before;
+        stats.compute = machine.time.compute
+            - per_term.iter().map(|t| t.compute).sum::<f64>();
+        per_term.push(stats);
+    }
+
+    // --- gather the result ------------------------------------------------
+    let last = plan.terms.last().ok_or_else(|| Error::plan("empty plan"))?;
+    let out_name = format!("t{}@{}", last.output_id, last.name);
+    let dist = &last.output_dist;
+    let perm: Option<Vec<usize>> = if last.output_indices == plan.spec.output {
+        None
+    } else {
+        Some(
+            plan.spec
+                .output
+                .iter()
+                .map(|c| {
+                    last.output_indices.iter().position(|d| d == c).ok_or_else(|| {
+                        Error::malformed_plan(
+                            &last.name,
+                            format!("output index '{c}' missing"),
+                        )
+                    })
+                })
+                .collect::<Result<_>>()?,
+        )
+    };
+    // Assemble the last term's distributed blocks into `target` (term
+    // output order) by direct strided copies out of the owners' local
+    // buffers — no temporary block tensor per block.
+    let zero_off = vec![0usize; dist.extents.len()];
+    let assemble = |target: &mut Tensor| -> Result<()> {
+        for bc in dist.block_coords() {
+            let owner = dist.owner_of_block(&bc);
+            let (off, size) = dist.block_for_rank(owner);
+            target.copy_box_from(machine.get(&out_name, owner)?, &zero_off, &off, &size);
+        }
+        Ok(())
+    };
+    let output = match (dest, perm) {
+        (Some(d), perm) => {
+            // Dims were checked against the spec before the run started.
+            match perm {
+                // Assemble into recycled staging, permute into the
+                // caller's buffer: zero allocations in steady state.
+                Some(p) => {
+                    live_scratch.insert(GATHER_KEY);
+                    let mut g = scratch.take(GATHER_KEY, 1, &dist.extents);
+                    assemble(&mut g[0])?;
+                    g[0].permute_into(&p, d)?;
+                    scratch.put(GATHER_KEY, g);
+                }
+                None => assemble(d)?,
+            }
+            None
+        }
+        (None, Some(p)) => {
+            // The assembled (pre-permute) staging recycles even on the
+            // allocating path; only the escaping output is fresh.
+            live_scratch.insert(GATHER_KEY);
+            let mut g = scratch.take(GATHER_KEY, 1, &dist.extents);
+            assemble(&mut g[0])?;
+            let out = g[0].permute(&p);
+            scratch.put(GATHER_KEY, g);
+            Some(out)
+        }
+        (None, None) => {
+            let mut out = Tensor::zeros(&dist.extents);
+            assemble(&mut out)?;
+            Some(out)
+        }
+    };
+
+    // Prune buffer sets a previous plan staged under names (or scratch
+    // keys) this run never touched (keeps the persistent buffers bounded
+    // by the current plan's footprint).
+    machine.retain_tensors(|n| live_names.contains(n));
+    scratch.bufs.retain(|k, _| live_scratch.contains(k));
+
+    let metrics = RunMetrics {
+        time: machine.time,
+        comm: machine.comm.clone(),
+        per_term,
+    };
+    Ok((output, metrics))
+}
+
+/// One operand's pre-reduction slot: the dropped mode positions in the
+/// operand's original index string, the surviving index string, and the
+/// per-rank recycled destination buffers.
+struct RedSlot {
+    idx: Vec<char>,
+    drop: Vec<usize>,
+    bufs: Vec<Tensor>,
+}
+
+/// Index string of Seq-local tensor `id` (term input or earlier op
+/// output).
+fn seq_idx_of<'t>(
+    id: usize,
+    src_of: &BTreeMap<usize, SeqSrc>,
+    term: &'t TermPlan,
+) -> Result<&'t [char]> {
+    match src_of.get(&id) {
+        Some(SeqSrc::Input(slot)) => Ok(term.inputs[*slot].indices.as_slice()),
+        Some(SeqSrc::Op(i)) => Ok(term.ops[*i].output.as_slice()),
+        None => Err(Error::malformed_plan(
+            &term.name,
+            format!("seq: operand t{id} never produced"),
+        )),
+    }
+}
+
+/// Build the pre-reduction table for a Seq term: entry `2·op + operand`
+/// is `Some` when that operand carries indices private to itself and
+/// absent from the op output (they are summed away into recycled,
+/// [`LocalScratchStats`]-counted buffers before the engine runs).  A
+/// fully-summed binary operand becomes the `[1]`-shaped synthetic
+/// singleton (`'\u{1}'`) `einsum2` itself uses for the already-reduced
+/// state, so even that degenerate case stays allocation-free.
+#[allow(clippy::too_many_arguments)]
+fn build_reduce_slots(
+    term: &TermPlan,
+    ti: usize,
+    p: usize,
+    src_of: &BTreeMap<usize, SeqSrc>,
+    local_ext: &BTreeMap<char, usize>,
+    scratch: &mut LocalScratch,
+    live_scratch: &mut BTreeSet<(usize, usize)>,
+) -> Result<Vec<Option<RedSlot>>> {
+    let mut red: Vec<Option<RedSlot>> = Vec::with_capacity(term.ops.len() * 2);
+    for (j, op) in term.ops.iter().enumerate() {
+        for q in 0..2 {
+            if q >= op.input_ids.len() {
+                red.push(None);
+                continue;
+            }
+            let idx = seq_idx_of(op.input_ids[q], src_of, term)?;
+            let other: Option<&[char]> = if op.input_ids.len() == 2 {
+                Some(seq_idx_of(op.input_ids[1 - q], src_of, term)?)
+            } else {
+                None
+            };
+            let drop: Vec<usize> = idx
+                .iter()
+                .enumerate()
+                .filter(|&(_, c)| {
+                    if op.output.contains(c) {
+                        return false;
+                    }
+                    match other {
+                        Some(o) => !o.contains(c),
+                        None => true,
+                    }
+                })
+                .map(|(d, _)| d)
+                .collect();
+            if drop.is_empty() {
+                red.push(None);
+                continue;
+            }
+            let mut kept: Vec<char> = idx
+                .iter()
+                .enumerate()
+                .filter(|(d, _)| !drop.contains(d))
+                .map(|(_, &c)| c)
+                .collect();
+            let dims: Vec<usize> = if kept.is_empty() {
+                if op.input_ids.len() == 2 {
+                    // Fully-summed binary operand: hand einsum2 the
+                    // synthetic already-reduced singleton it would have
+                    // built itself (unary ops take the empty-index copy
+                    // path instead).
+                    kept.push('\u{1}');
+                }
+                vec![1]
+            } else {
+                kept.iter()
+                    .map(|c| {
+                        local_ext.get(c).copied().ok_or_else(|| {
+                            Error::malformed_plan(
+                                &term.name,
+                                format!("seq: unknown index '{c}'"),
+                            )
+                        })
+                    })
+                    .collect::<Result<_>>()?
+            };
+            let key = (ti, REDUCE_BASE + 2 * j + q);
+            live_scratch.insert(key);
+            red.push(Some(RedSlot { idx: kept, drop, bufs: scratch.take(key, p, &dims) }));
+        }
+    }
+    Ok(red)
+}
+
+/// Executes plans against a kernel engine (PJRT or native), holding the
+/// persistent execution state so steady-state reruns recycle every
+/// buffer.
+///
+/// Deprecated thin wrapper over the execution core for one release: the
+/// handle API ([`crate::api::Session`] / [`crate::api::Program`]) owns
+/// the same state per compiled program, adds a plan cache, and does not
+/// borrow the engine for its whole lifetime.
 pub struct Coordinator<'e> {
     engine: &'e KernelEngine,
     network: NetworkModel,
-    /// The simulated machine, kept across `run` calls (rebuilt only when
-    /// the rank count changes).  Interior mutability keeps `run(&self)`
-    /// so long-lived coordinators (CP-ALS loops, benches) need no
-    /// exclusive borrow.
-    machine: RefCell<Option<Machine>>,
-    /// Recycled Seq intermediates and MTTKRP permute buffers, kept
-    /// across runs like the machine store.
-    scratch: RefCell<LocalScratch>,
+    state: RefCell<ExecState>,
 }
 
 impl<'e> Coordinator<'e> {
+    #[deprecated(
+        since = "0.5.0",
+        note = "use `api::Session::compile` + `api::Program::run`: the handle API owns \
+                the persistent machine, caches plans, and unifies the stats"
+    )]
     pub fn new(engine: &'e KernelEngine, network: NetworkModel) -> Self {
-        Coordinator {
-            engine,
-            network,
-            machine: RefCell::new(None),
-            scratch: RefCell::new(LocalScratch::default()),
-        }
+        Coordinator { engine, network, state: RefCell::new(ExecState::default()) }
     }
 
     /// Buffer-recycling counters of the persistent machine (defaults
     /// until the first run).  Steady-state invariant: `dest_allocs` and
     /// `out_allocs` stop growing after the first execution of a plan.
     pub fn machine_stats(&self) -> StoreStats {
-        self.machine.borrow().as_ref().map(|m| m.store_stats()).unwrap_or_default()
+        self.state.borrow().store_stats()
     }
 
-    /// Allocation counters of the coordinator's local scratch table
-    /// (Seq-kernel intermediates + MTTKRP permute buffers).
+    /// Allocation counters of the local scratch table (Seq-kernel
+    /// intermediates, pre-reduction buffers, MTTKRP permute buffers).
     pub fn local_scratch_stats(&self) -> LocalScratchStats {
-        self.scratch.borrow().stats
+        self.state.borrow().local_scratch_stats()
     }
 
     /// Run `plan` on global input tensors (one per program operand, in
-    /// einsum order).  Initial distribution is not charged (the paper's
-    /// weak-scaling timings start from distributed data).
+    /// einsum order).
     pub fn run(&self, plan: &Plan, inputs: &[Tensor]) -> Result<RunReport> {
-        let report = self.run_inner(plan, inputs);
-        // Per-term overrides must not leak past the run.
-        self.engine.reset_config();
-        report
-    }
-
-    fn run_inner(&self, plan: &Plan, inputs: &[Tensor]) -> Result<RunReport> {
-        if inputs.len() != plan.path.n_inputs {
-            return Err(Error::plan(format!(
-                "plan needs {} inputs, got {}",
-                plan.path.n_inputs,
-                inputs.len()
-            )));
-        }
-        for (op, t) in plan.spec.inputs.iter().zip(inputs) {
-            let want: Vec<usize> = op.iter().map(|c| plan.spec.extents[c]).collect();
-            if t.dims() != want {
-                return Err(Error::shape(format!(
-                    "input dims {:?} != spec {:?}",
-                    t.dims(),
-                    want
-                )));
-            }
-        }
-
-        // Reuse the persistent machine (and its store) when the rank
-        // count matches; only the accounting is reset per run.
-        let mut machine_slot = self.machine.borrow_mut();
-        if !matches!(machine_slot.as_ref(), Some(m) if m.ranks() == plan.p) {
-            *machine_slot = Some(Machine::new(plan.p, self.network));
-        }
-        let machine = machine_slot.as_mut().unwrap();
-        machine.begin_run();
-        let mut scratch = self.scratch.borrow_mut();
-        let mut per_term: Vec<TermStats> = Vec::new();
-        // Every store name / scratch key this run touches; anything else
-        // is a stale buffer set from a previously-run plan and is pruned
-        // at the end (the persistent buffers must not grow across plan
-        // switches).
-        let mut live_names: BTreeSet<String> = BTreeSet::new();
-        let mut live_scratch: BTreeSet<(usize, usize)> = BTreeSet::new();
-
-        for (ti, term) in plan.terms.iter().enumerate() {
-            let mut stats = TermStats { name: term.name.clone(), ..Default::default() };
-            let comm_before = machine.time.comm;
-            // Retarget the engine's cache blocking to this term's
-            // SOAP-derived tiles (§IV: the local kernel blocks along the
-            // same proportions the I/O analysis assumed).
-            self.engine.configure_for_term(term);
-
-            // --- stage inputs -------------------------------------------------
-            let mut in_names: Vec<String> = Vec::with_capacity(term.inputs.len());
-            for (slot, tin) in term.inputs.iter().enumerate() {
-                let name = format!("t{}@{}", tin.id, term.name);
-                if tin.id < plan.path.n_inputs {
-                    // Program input: scatter blocks into recycled store
-                    // buffers (uncharged staging).
-                    machine.stage_blocks(&name, &inputs[tin.id], &tin.dist)?;
-                } else {
-                    // Intermediate: redistribute from the producing term.
-                    let mv = plan
-                        .moves
-                        .iter()
-                        .find(|m| m.to_term == ti && m.to_slot == slot)
-                        .ok_or_else(|| {
-                            Error::plan(format!(
-                                "no move for t{} into {}",
-                                tin.id, term.name
-                            ))
-                        })?;
-                    let src_name =
-                        format!("t{}@{}", tin.id, plan.terms[mv.from_term].name);
-                    machine.redistribute(&src_name, &name, &mv.plan, &mv.src, &mv.dst)?;
-                }
-                stats.local_in_bytes +=
-                    tin.dist.local_dims().iter().product::<usize>() * ELEM_BYTES;
-                live_names.insert(name.clone());
-                in_names.push(name);
-            }
-
-            // --- local compute ------------------------------------------------
-            let out_name = format!("t{}@{}", term.output_id, term.name);
-            live_names.insert(out_name.clone());
-            let engine = self.engine;
-            match &term.kernel {
-                LocalKernel::Mttkrp { x_input, mode, factor_inputs } => {
-                    let x_name = &in_names[*x_input];
-                    let f_names: Vec<&str> =
-                        factor_inputs.iter().map(|&s| in_names[s].as_str()).collect();
-                    let order = term.inputs[*x_input].indices.len();
-                    let mode = *mode;
-                    // Local kernel output shape: (local mode extent, local R).
-                    let x_ldims = term.inputs[*x_input].dist.local_dims();
-                    let r_local = term.inputs[factor_inputs[0]].dist.local_dims()[1];
-                    let natural_dims = [x_ldims[mode], r_local];
-                    // Kernel output order is (mode_idx, r); a differing
-                    // term output order takes the recycled permute path.
-                    let x_idx = &term.inputs[*x_input].indices;
-                    let r_char = term
-                        .output_indices
-                        .iter()
-                        .copied()
-                        .find(|c| !x_idx.contains(c))
-                        .ok_or_else(|| Error::plan("mttkrp: no rank index"))?;
-                    let mode_char = x_idx[mode];
-                    let natural = vec![mode_char, r_char];
-                    if term.output_indices == natural {
-                        // Kernel writes straight into the store-recycled
-                        // per-rank destinations.
-                        machine.compute_step_into(&out_name, &natural_dims, |r, m, dest| {
-                            mttkrp_rank_into(engine, m, r, x_name, &f_names, order, mode, dest)
-                        })?;
-                    } else {
-                        let perm: Vec<usize> = term
-                            .output_indices
-                            .iter()
-                            .map(|c| natural.iter().position(|d| d == c).unwrap())
-                            .collect();
-                        let permuted_dims: Vec<usize> =
-                            perm.iter().map(|&p| natural_dims[p]).collect();
-                        // Natural-layout kernel outputs land in scratch
-                        // buffers recycled across runs...
-                        let key = (ti, PERMUTE_SLOT);
-                        live_scratch.insert(key);
-                        let mut nat = scratch.take(key, plan.p, &natural_dims);
-                        for (r, buf) in nat.iter_mut().enumerate() {
-                            let t0 = std::time::Instant::now();
-                            mttkrp_rank_into(
-                                engine,
-                                machine,
-                                r,
-                                x_name,
-                                &f_names,
-                                order,
-                                mode,
-                                buf,
-                            )?;
-                            machine.charge_compute(r, t0.elapsed().as_secs_f64());
-                        }
-                        // ...then permute into the store-recycled
-                        // destinations (no allocation on either side).
-                        machine.compute_step_into(&out_name, &permuted_dims, |r, _m, dest| {
-                            nat[r].permute_into(&perm, dest)
-                        })?;
-                        scratch.put(key, nat);
-                    }
-                }
-                LocalKernel::Seq => {
-                    // Local output extents per index char: inputs are
-                    // staged at their distribution's padded local dims,
-                    // so every op's local output shape is fixed by the
-                    // chars it keeps — known before any kernel runs,
-                    // which is what lets the destinations be recycled.
-                    let mut local_ext: BTreeMap<char, usize> = BTreeMap::new();
-                    for tin in &term.inputs {
-                        for (c, e) in tin.indices.iter().zip(tin.dist.local_dims()) {
-                            local_ext.insert(*c, e);
-                        }
-                    }
-                    let op_dims: Vec<Vec<usize>> = term
-                        .ops
-                        .iter()
-                        .map(|op| {
-                            let d: Vec<usize> = op
-                                .output
-                                .iter()
-                                .map(|c| {
-                                    local_ext.get(c).copied().ok_or_else(|| {
-                                        Error::plan(format!("seq: unknown index '{c}'"))
-                                    })
-                                })
-                                .collect::<Result<_>>()?;
-                            Ok(if d.is_empty() { vec![1] } else { d })
-                        })
-                        .collect::<Result<_>>()?;
-                    let n_ops = term.ops.len();
-                    if n_ops == 0 {
-                        return Err(Error::plan("empty term"));
-                    }
-                    debug_assert_eq!(term.ops[n_ops - 1].output_id, term.output_id);
-                    // Tensor-id table: term inputs are *borrowed* from
-                    // the store (never deep-copied); intermediates live
-                    // in scratch buffers recycled across runs.  The
-                    // final op writes the store-recycled destination.
-                    let mut src_of: BTreeMap<usize, SeqSrc> = BTreeMap::new();
-                    for (slot, tin) in term.inputs.iter().enumerate() {
-                        src_of.insert(tin.id, SeqSrc::Input(slot));
-                    }
-                    for (j, op) in term.ops.iter().enumerate() {
-                        src_of.insert(op.output_id, SeqSrc::Op(j));
-                    }
-                    let mut opbufs: Vec<Vec<Tensor>> = (0..n_ops - 1)
-                        .map(|j| {
-                            live_scratch.insert((ti, j));
-                            scratch.take((ti, j), plan.p, &op_dims[j])
-                        })
-                        .collect();
-                    let ops = &term.ops;
-                    let term_inputs = &term.inputs;
-                    machine.compute_step_into(&out_name, &op_dims[n_ops - 1], |r, m, dest| {
-                        for (j, op) in ops.iter().enumerate() {
-                            // Ops run in order: everything before `j` is
-                            // readable, `j`'s buffer (or the final
-                            // destination) is writable.
-                            let (done, rest) = opbufs.split_at_mut(j.min(n_ops - 1));
-                            let dst: &mut Tensor =
-                                if j == n_ops - 1 { &mut *dest } else { &mut rest[0][r] };
-                            match op.input_ids.len() {
-                                2 => {
-                                    let (a, ai) = seq_operand(
-                                        op.input_ids[0],
-                                        j,
-                                        &src_of,
-                                        m,
-                                        r,
-                                        &in_names,
-                                        term_inputs,
-                                        done,
-                                        ops,
-                                    )?;
-                                    let (b, bi) = seq_operand(
-                                        op.input_ids[1],
-                                        j,
-                                        &src_of,
-                                        m,
-                                        r,
-                                        &in_names,
-                                        term_inputs,
-                                        done,
-                                        ops,
-                                    )?;
-                                    engine.einsum2_into(a, ai, b, bi, &op.output, dst)?;
-                                }
-                                1 => {
-                                    let (a, ai) = seq_operand(
-                                        op.input_ids[0],
-                                        j,
-                                        &src_of,
-                                        m,
-                                        r,
-                                        &in_names,
-                                        term_inputs,
-                                        done,
-                                        ops,
-                                    )?;
-                                    unary_local_into(a, ai, &op.output, dst)?;
-                                }
-                                n => {
-                                    return Err(Error::plan(format!(
-                                        "{n}-ary local op unsupported"
-                                    )))
-                                }
-                            }
-                        }
-                        Ok(())
-                    })?;
-                    for (j, v) in opbufs.into_iter().enumerate() {
-                        scratch.put((ti, j), v);
-                    }
-                }
-            }
-            machine.end_step();
-            stats.local_out_bytes =
-                term.output_dist.local_dims().iter().product::<usize>() * ELEM_BYTES;
-
-            // --- reduce partials over sub-grids -------------------------------
-            if !term.reduced_grid_dims.is_empty() {
-                let groups = reduction_groups(&term.grid, &term.reduced_grid_dims);
-                machine.allreduce_sum(&out_name, &groups)?;
-            }
-
-            stats.comm = machine.time.comm - comm_before;
-            stats.compute = machine.time.compute
-                - per_term.iter().map(|t| t.compute).sum::<f64>();
-            per_term.push(stats);
-        }
-
-        // Prune buffer sets a previous plan staged under names (or
-        // scratch keys) this run never touched (keeps the persistent
-        // buffers bounded by the current plan's footprint).
-        machine.retain_tensors(|n| live_names.contains(n));
-        scratch.bufs.retain(|k, _| live_scratch.contains(k));
-
-        // --- gather the result ------------------------------------------------
-        let last = plan.terms.last().ok_or_else(|| Error::plan("empty plan"))?;
-        let out_name = format!("t{}@{}", last.output_id, last.name);
-        let dist = &last.output_dist;
-        let mut assembled = Tensor::zeros(&dist.extents);
-        for bc in dist.block_coords() {
-            let owner = dist.owner_of_block(&bc);
-            let (off, size) = dist.block_for_rank(owner);
-            // Direct strided copy out of the owner's local buffer — no
-            // temporary block tensor per block.
-            let zero_off = vec![0usize; size.len()];
-            assembled.copy_box_from(machine.get(&out_name, owner)?, &zero_off, &off, &size);
-        }
-        // Permute to the einsum's requested output order if needed.
-        let output = if last.output_indices == plan.spec.output {
-            assembled
-        } else {
-            let perm: Vec<usize> = plan
-                .spec
-                .output
-                .iter()
-                .map(|c| {
-                    last.output_indices
-                        .iter()
-                        .position(|d| d == c)
-                        .ok_or_else(|| Error::plan(format!("output index '{c}' missing")))
-                })
-                .collect::<Result<_>>()?;
-            assembled.permute(&perm)
-        };
-
-        Ok(RunReport {
-            output,
-            time: machine.time,
-            comm: machine.comm.clone(),
-            per_term,
-        })
+        let mut state = self.state.borrow_mut();
+        let (out, metrics) =
+            run_plan(self.engine, self.network, &mut state, plan, inputs, None)?;
+        Ok(RunReport::from_parts(
+            out.expect("run without dest returns an output"),
+            metrics,
+        ))
     }
 }
 
@@ -543,6 +875,7 @@ fn mttkrp_rank_into(
     engine: &KernelEngine,
     m: &Machine,
     r: usize,
+    term_name: &str,
     x_name: &str,
     f_names: &[&str],
     order: usize,
@@ -557,7 +890,15 @@ fn mttkrp_rank_into(
         if mm == mode {
             slots.push(x); // placeholder, ignored
         } else {
-            slots.push(fi.next().unwrap());
+            slots.push(fi.next().ok_or_else(|| {
+                Error::malformed_plan(
+                    term_name,
+                    format!(
+                        "mttkrp factor count mismatch: {} factors for order {order}",
+                        f_names.len()
+                    ),
+                )
+            })?);
         }
     }
     engine.mttkrp_into(x, &slots, mode, dest)
@@ -586,9 +927,10 @@ fn unary_local(a: &Tensor, a_idx: &[char], out_idx: &[char]) -> Result<Tensor> {
 
 /// `unary_local` writing through a recycled destination: the final
 /// permutation (the common case — pure mode reorder) lands directly in
-/// `dest` with zero allocations; summed-away indices still reduce
-/// through allocating intermediates ([`contract::reduce_mode`]), the
-/// same exception `einsum2`'s private-index pre-reduction documents.
+/// `dest` with zero allocations.  Summed-away indices are normally gone
+/// by the time this runs (the Seq loop pre-reduces them through recycled
+/// scratch); the allocating [`contract::reduce_mode`] fallback remains
+/// for direct callers.
 fn unary_local_into(
     a: &Tensor,
     a_idx: &[char],
@@ -621,8 +963,10 @@ fn unary_local_into(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::Session;
     use crate::einsum::EinsumSpec;
-    use crate::planner::{plan, PlannerConfig};
+    use crate::planner::PlannerConfig;
+    use crate::tensor::KernelConfig;
 
     fn run_einsum(
         expr: &str,
@@ -631,13 +975,12 @@ mod tests {
         cfg: &PlannerConfig,
     ) -> (RunReport, Vec<Tensor>, EinsumSpec) {
         let spec = EinsumSpec::parse(expr, shapes).unwrap();
-        let pl = plan(&spec, p, cfg).unwrap();
         let inputs: Vec<Tensor> = (0..shapes.len())
             .map(|i| Tensor::random(&shapes[i], 1000 + i as u64))
             .collect();
-        let engine = KernelEngine::native();
-        let coord = Coordinator::new(&engine, NetworkModel::aries());
-        let rep = coord.run(&pl, &inputs).unwrap();
+        let session = Session::builder().ranks(p).planner(*cfg).build().unwrap();
+        let mut prog = session.compile(expr, shapes).unwrap();
+        let rep = prog.run(&inputs).unwrap();
         (rep, inputs, spec)
     }
 
@@ -844,35 +1187,30 @@ mod tests {
 
     #[test]
     fn steady_state_runs_reuse_engine_scratch() {
-        // The zero-alloc invariant on the coordinator's hot path: once
-        // the engine's scratch pool is warm, repeated plan executions
-        // (e.g. CP-ALS sweeps) take every packing/fold buffer from the
-        // pool instead of the heap.
-        let spec = EinsumSpec::parse(
-            "ijk,ja,ka->ia",
-            &[vec![24, 20, 16], vec![20, 8], vec![16, 8]],
-        )
-        .unwrap();
-        let pl = plan(&spec, 4, &PlannerConfig::default()).unwrap();
+        // The zero-alloc invariant on the hot path: once the engine's
+        // scratch pool is warm, repeated program executions (e.g. CP-ALS
+        // sweeps) take every packing/fold buffer from the pool instead
+        // of the heap.
+        let shapes = [vec![24, 20, 16], vec![20, 8], vec![16, 8]];
         let inputs: Vec<Tensor> = vec![
             Tensor::random(&[24, 20, 16], 1),
             Tensor::random(&[20, 8], 2),
             Tensor::random(&[16, 8], 3),
         ];
-        let engine = KernelEngine::native();
-        let coord = Coordinator::new(&engine, NetworkModel::aries());
+        let session = Session::builder().ranks(4).build().unwrap();
+        let mut prog = session.compile("ijk,ja,ka->ia", &shapes).unwrap();
         // Warmup populates the pool to its high-water mark.
         for _ in 0..2 {
-            coord.run(&pl, &inputs).unwrap();
+            prog.run(&inputs).unwrap();
         }
-        let warm = engine.scratch_stats();
+        let warm = prog.stats().engine_scratch;
         for _ in 0..3 {
-            coord.run(&pl, &inputs).unwrap();
+            prog.run(&inputs).unwrap();
         }
-        let after = engine.scratch_stats();
+        let after = prog.stats().engine_scratch;
         assert_eq!(
             after.allocs, warm.allocs,
-            "steady-state coordinator steps allocated scratch ({warm:?} -> {after:?})"
+            "steady-state steps allocated scratch ({warm:?} -> {after:?})"
         );
         assert!(after.takes > warm.takes, "steps must route buffers through the pool");
     }
@@ -884,64 +1222,58 @@ mod tests {
         // the persistent machine's staging/redistribution destinations
         // stop allocating, and the per-term kernel-config override is
         // restored after every run.
-        let spec = EinsumSpec::parse(
-            "ijk,ja,ka,al->il",
-            &[vec![16, 16, 16], vec![16, 8], vec![16, 8], vec![8, 16]],
-        )
-        .unwrap();
+        let shapes = [vec![16, 16, 16], vec![16, 8], vec![16, 8], vec![8, 16]];
         // A small analysis S forces the two-term [MTTKRP, MM] split, so
         // the plan includes an inter-term redistribution.
         let cfg = PlannerConfig { s_elements: 64.0, ..Default::default() };
-        let pl = plan(&spec, 8, &cfg).unwrap();
-        assert!(!pl.moves.is_empty(), "want a multi-step plan with redistribution");
+        let session = Session::builder().ranks(8).planner(cfg).build().unwrap();
+        let mut prog = session.compile("ijk,ja,ka,al->il", &shapes).unwrap();
+        assert!(
+            !prog.plan().moves.is_empty(),
+            "want a multi-step plan with redistribution"
+        );
         let inputs: Vec<Tensor> = vec![
             Tensor::random(&[16, 16, 16], 1),
             Tensor::random(&[16, 8], 2),
             Tensor::random(&[16, 8], 3),
             Tensor::random(&[8, 16], 4),
         ];
-        let engine = KernelEngine::native();
-        let base = engine.config();
-        let coord = Coordinator::new(&engine, NetworkModel::aries());
-        let first = coord.run(&pl, &inputs).unwrap();
-        coord.run(&pl, &inputs).unwrap();
-        let warm_scratch = engine.scratch_stats();
-        let warm_store = coord.machine_stats();
-        let warm_local = coord.local_scratch_stats();
-        assert!(warm_store.dest_allocs > 0, "first run must have allocated destinations");
-        assert!(warm_store.out_allocs > 0, "first run must have allocated compute outputs");
+        let base = session.engine().config();
+        let first = prog.run(&inputs).unwrap();
+        prog.run(&inputs).unwrap();
+        let warm = prog.stats();
+        assert!(warm.store.dest_allocs > 0, "first run must have allocated destinations");
+        assert!(warm.store.out_allocs > 0, "first run must have allocated compute outputs");
         for _ in 0..2 {
-            let rep = coord.run(&pl, &inputs).unwrap();
+            let rep = prog.run(&inputs).unwrap();
             assert!(rep.output.allclose(&first.output, 0.0, 0.0), "reruns must be bitwise stable");
         }
-        let after_scratch = engine.scratch_stats();
-        let after_store = coord.machine_stats();
-        let after_local = coord.local_scratch_stats();
+        let after = prog.stats();
         assert_eq!(
-            after_scratch.allocs, warm_scratch.allocs,
-            "steady-state packing/fold allocated ({warm_scratch:?} -> {after_scratch:?})"
+            after.engine_scratch.allocs, warm.engine_scratch.allocs,
+            "steady-state packing/fold allocated ({warm:?} -> {after:?})"
         );
         assert_eq!(
-            after_store.dest_allocs, warm_store.dest_allocs,
-            "steady-state staging/redistribution allocated ({warm_store:?} -> {after_store:?})"
+            after.store.dest_allocs, warm.store.dest_allocs,
+            "steady-state staging/redistribution allocated ({warm:?} -> {after:?})"
         );
         assert_eq!(
-            after_store.out_allocs, warm_store.out_allocs,
-            "steady-state compute outputs allocated ({warm_store:?} -> {after_store:?})"
+            after.store.out_allocs, warm.store.out_allocs,
+            "steady-state compute outputs allocated ({warm:?} -> {after:?})"
         );
         assert_eq!(
-            after_local.allocs, warm_local.allocs,
-            "steady-state Seq intermediates/permutes allocated ({warm_local:?} -> {after_local:?})"
+            after.local_scratch.allocs, warm.local_scratch.allocs,
+            "steady-state Seq intermediates/permutes allocated ({warm:?} -> {after:?})"
         );
         assert!(
-            after_store.dest_reuses > warm_store.dest_reuses,
+            after.store.dest_reuses > warm.store.dest_reuses,
             "reruns must recycle store buffers"
         );
         assert!(
-            after_store.out_reuses > warm_store.out_reuses,
+            after.store.out_reuses > warm.store.out_reuses,
             "reruns must recycle compute-output buffers"
         );
-        assert_eq!(engine.config(), base, "per-term config override must be reset");
+        assert_eq!(session.engine().config(), base, "per-term config override must be reset");
     }
 
     #[test]
@@ -949,13 +1281,8 @@ mod tests {
         // The acceptance invariant: the recycled-output path is
         // allocation-free after warmup AND bitwise identical between a
         // serial and an 8-thread engine.
-        let spec = EinsumSpec::parse(
-            "ijk,ja,ka,al->il",
-            &[vec![16, 16, 16], vec![16, 8], vec![16, 8], vec![8, 16]],
-        )
-        .unwrap();
+        let shapes = [vec![16, 16, 16], vec![16, 8], vec![16, 8], vec![8, 16]];
         let cfg = PlannerConfig { s_elements: 64.0, ..Default::default() };
-        let pl = plan(&spec, 8, &cfg).unwrap();
         let inputs: Vec<Tensor> = vec![
             Tensor::random(&[16, 16, 16], 1),
             Tensor::random(&[16, 8], 2),
@@ -964,19 +1291,25 @@ mod tests {
         ];
         let mut outputs = Vec::new();
         for threads in [1usize, 8] {
-            let engine = KernelEngine::native_with(
-                crate::tensor::KernelConfig::default().with_threads(threads),
-            );
-            let coord = Coordinator::new(&engine, NetworkModel::aries());
+            let session = Session::builder()
+                .ranks(8)
+                .planner(cfg)
+                .kernel_config(KernelConfig::default().with_threads(threads))
+                .build()
+                .unwrap();
+            let mut prog = session.compile("ijk,ja,ka,al->il", &shapes).unwrap();
             for _ in 0..2 {
-                coord.run(&pl, &inputs).unwrap();
+                prog.run(&inputs).unwrap();
             }
-            let warm = (coord.machine_stats(), coord.local_scratch_stats());
-            let rep = coord.run(&pl, &inputs).unwrap();
-            let after = (coord.machine_stats(), coord.local_scratch_stats());
-            assert_eq!(after.0.dest_allocs, warm.0.dest_allocs, "{threads}t dest");
-            assert_eq!(after.0.out_allocs, warm.0.out_allocs, "{threads}t out");
-            assert_eq!(after.1.allocs, warm.1.allocs, "{threads}t local scratch");
+            let warm = prog.stats();
+            let rep = prog.run(&inputs).unwrap();
+            let after = prog.stats();
+            assert_eq!(after.store.dest_allocs, warm.store.dest_allocs, "{threads}t dest");
+            assert_eq!(after.store.out_allocs, warm.store.out_allocs, "{threads}t out");
+            assert_eq!(
+                after.local_scratch.allocs, warm.local_scratch.allocs,
+                "{threads}t local scratch"
+            );
             outputs.push(rep.output);
         }
         assert!(
@@ -991,15 +1324,13 @@ mod tests {
         // plan.p fresh tensors on every run.  Output order 'ai' differs
         // from the kernel's natural (mode, r) = 'ia', forcing the
         // permute path; counters must stay flat across reruns.
-        let spec = EinsumSpec::parse(
-            "ijk,ja,ka->ai",
-            &[vec![16, 20, 12], vec![20, 6], vec![12, 6]],
-        )
-        .unwrap();
-        let pl = plan(&spec, 4, &PlannerConfig::default()).unwrap();
-        let term = pl.terms.last().unwrap();
+        let shapes = [vec![16, 20, 12], vec![20, 6], vec![12, 6]];
+        let spec = EinsumSpec::parse("ijk,ja,ka->ai", &shapes).unwrap();
+        let session = Session::builder().ranks(4).build().unwrap();
+        let mut prog = session.compile("ijk,ja,ka->ai", &shapes).unwrap();
+        let term = prog.plan().terms.last().unwrap();
         assert!(
-            matches!(pl.terms[0].kernel, LocalKernel::Mttkrp { .. }),
+            matches!(prog.plan().terms[0].kernel, LocalKernel::Mttkrp { .. }),
             "plan must use the fused MTTKRP kernel"
         );
         assert_eq!(term.output_indices, vec!['a', 'i'], "output must be permuted");
@@ -1008,30 +1339,26 @@ mod tests {
             Tensor::random(&[20, 6], 6),
             Tensor::random(&[12, 6], 7),
         ];
-        let engine = KernelEngine::native();
-        let coord = Coordinator::new(&engine, NetworkModel::aries());
-        let first = coord.run(&pl, &inputs).unwrap();
+        let first = prog.run(&inputs).unwrap();
         let want = oracle(&spec, &inputs);
         assert!(first.output.allclose(&want, 1e-3, 1e-3));
-        coord.run(&pl, &inputs).unwrap();
-        let warm_store = coord.machine_stats();
-        let warm_local = coord.local_scratch_stats();
-        assert!(warm_local.reuses > 0, "second run must recycle permute buffers");
+        prog.run(&inputs).unwrap();
+        let warm = prog.stats();
+        assert!(warm.local_scratch.reuses > 0, "second run must recycle permute buffers");
         for _ in 0..3 {
-            let rep = coord.run(&pl, &inputs).unwrap();
+            let rep = prog.run(&inputs).unwrap();
             assert!(rep.output.allclose(&first.output, 0.0, 0.0));
         }
-        let after_store = coord.machine_stats();
-        let after_local = coord.local_scratch_stats();
-        assert_eq!(after_store.dest_allocs, warm_store.dest_allocs);
+        let after = prog.stats();
+        assert_eq!(after.store.dest_allocs, warm.store.dest_allocs);
         assert_eq!(
-            after_store.out_allocs, warm_store.out_allocs,
-            "permuted MTTKRP outputs must recycle ({warm_store:?} -> {after_store:?})"
+            after.store.out_allocs, warm.store.out_allocs,
+            "permuted MTTKRP outputs must recycle ({warm:?} -> {after:?})"
         );
-        assert!(after_store.out_reuses > warm_store.out_reuses);
+        assert!(after.store.out_reuses > warm.store.out_reuses);
         assert_eq!(
-            after_local.allocs, warm_local.allocs,
-            "permute scratch must recycle ({warm_local:?} -> {after_local:?})"
+            after.local_scratch.allocs, warm.local_scratch.allocs,
+            "permute scratch must recycle ({warm:?} -> {after:?})"
         );
     }
 

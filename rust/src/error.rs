@@ -11,6 +11,18 @@ pub enum Error {
     Shape(String),
     /// Planning failure (no valid grid, unsupported program, ...).
     Plan(String),
+    /// A plan whose internal structure is inconsistent at *execution*
+    /// time (an output index missing from the kernel's natural layout, a
+    /// factor-count mismatch, an operand that is never produced).  The
+    /// run loop surfaces these as typed errors instead of panicking
+    /// mid-run, so a hand-edited or corrupted [`crate::planner::Plan`]
+    /// fails cleanly.
+    MalformedPlan {
+        /// Name of the term being executed when the inconsistency was found.
+        term: String,
+        /// What was inconsistent.
+        detail: String,
+    },
     /// PJRT runtime failure (artifact missing, compile/execute error).
     Runtime(String),
     /// I/O failure loading artifacts.
@@ -23,6 +35,9 @@ impl fmt::Display for Error {
             Error::Parse(m) => write!(f, "einsum parse error: {m}"),
             Error::Shape(m) => write!(f, "shape error: {m}"),
             Error::Plan(m) => write!(f, "planning error: {m}"),
+            Error::MalformedPlan { term, detail } => {
+                write!(f, "malformed plan (term {term}): {detail}")
+            }
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
@@ -50,6 +65,9 @@ impl Error {
     }
     pub fn plan(m: impl Into<String>) -> Self {
         Error::Plan(m.into())
+    }
+    pub fn malformed_plan(term: impl Into<String>, detail: impl Into<String>) -> Self {
+        Error::MalformedPlan { term: term.into(), detail: detail.into() }
     }
     pub fn runtime(m: impl Into<String>) -> Self {
         Error::Runtime(m.into())

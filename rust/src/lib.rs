@@ -3,24 +3,52 @@
 //! Reproduction of *Deinsum: Practically I/O Optimal Multilinear Algebra*
 //! (Ziogas et al., 2022) as a three-layer Rust + JAX + Pallas stack.
 //!
-//! Given an arbitrary einsum over dense tensors, the library:
+//! The front door is two types ([`api`]): a [`Session`] owning the
+//! kernel engine and an LRU plan cache, and a [`Program`] — an einsum
+//! **compiled once** into an I/O-optimal distributed schedule, owning
+//! its persistent simulated machine and every recycled buffer, re-run
+//! cheaply as many times as the workload needs (CP-ALS sweeps, serving
+//! loops).  The paper's §II worked example, end to end:
 //!
-//! 1. decomposes the n-ary contraction into FLOP-minimizing binary
+//! ```
+//! use deinsum::{Session, Tensor};
+//! # fn main() -> deinsum::Result<()> {
+//! let shapes = vec![vec![10, 10, 10], vec![10, 10], vec![10, 10], vec![10, 10]];
+//! let session = Session::builder().ranks(8).build()?;
+//! let mut program = session.compile("ijk,ja,ka,al->il", &shapes)?;
+//! println!("{}", program.schedule()); // the §II-E intermediate program
+//! let inputs: Vec<Tensor> =
+//!     shapes.iter().enumerate().map(|(i, s)| Tensor::random(s, i as u64)).collect();
+//! let report = program.run(&inputs)?;
+//! assert_eq!(report.output.dims(), &[10, 10]);
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! Compiling an identical spec again is a counted plan-cache hit
+//! ([`Session::cache_stats`]) that skips planning; rerunning a program
+//! recycles every buffer ([`Program::stats`], [`RunStats`]).
+//!
+//! Under the hood, `compile`/`run` drive the pipeline the modules
+//! expose (the [`api`] module docs walk the old hand-wiring):
+//!
+//! 1. decompose the n-ary contraction into FLOP-minimizing binary
 //!    operations ([`contraction`], paper §II-A);
-//! 2. derives tight I/O lower bounds and the matching tile sizes with the
+//! 2. derive tight I/O lower bounds and the matching tile sizes with the
 //!    SOAP combinatorial model ([`soap`], §IV), including the paper's
 //!    headline MTTKRP bound `rho = S^(2/3)/3`;
-//! 3. block-distributes iteration spaces onto Cartesian process grids with
+//! 3. block-distribute iteration spaces onto Cartesian process grids with
 //!    input replication over sub-grids ([`grid`], [`dist`], §II-D, §V-B);
-//! 4. infers the communication to redistribute intermediates between grids
+//! 4. infer the communication to redistribute intermediates between grids
 //!    ([`redist`], §V-C);
-//! 5. plans ([`planner`]) and executes ([`coordinator`]) the distributed
+//! 5. plan ([`planner`]) and execute ([`coordinator`]) the distributed
 //!    program on a simulated multi-rank machine ([`sim`]) whose local tile
 //!    kernels are AOT-compiled JAX/Pallas artifacts run through PJRT
 //!    ([`runtime`]) with native fallbacks ([`tensor`]).
 //!
 //! The CTF-like comparator the paper evaluates against lives in
-//! [`baseline`]; the Table IV/V benchmark suite in [`bench_support`].
+//! [`baseline`] (compiled via [`Session::compile_baseline`]); the Table
+//! IV/V benchmark suite in [`bench_support`].
 //!
 //! ## The local compute engine
 //!
@@ -46,10 +74,11 @@
 //!   counter is flat after warmup — asserted in tests).
 //!
 //! Knobs live in [`KernelConfig`] (`mc`/`kc`/`nc`/`threads`, env
-//! overrides `DEINSUM_MC`/`KC`/`NC`), which the PJRT/native dispatcher
-//! ([`runtime::KernelEngine`]) carries and the coordinator retargets per
-//! term from SOAP-optimal tile sizes ([`KernelConfig::from_tiles`] via
-//! `TermPlan::kernel_config`).
+//! overrides `DEINSUM_MC`/`KC`/`NC`, or
+//! [`SessionBuilder::kernel_config`]/[`SessionBuilder::threads`]), which
+//! the PJRT/native dispatcher ([`runtime::KernelEngine`]) carries and the
+//! run loop retargets per term from SOAP-optimal tile sizes
+//! ([`KernelConfig::from_tiles`] via `TermPlan::kernel_config`).
 //!
 //! ## The persistent runtime
 //!
@@ -68,7 +97,7 @@
 //!   load-balance;
 //! - the fused MTTKRP forms its KC×R Khatri-Rao tile once per column
 //!   tile (its "B panel") and contracts stealable row bands against it;
-//! - the coordinator holds its simulated [`sim::Machine`] across runs:
+//! - every [`Program`] holds its simulated [`sim::Machine`] across runs:
 //!   staging and redistribution destinations are recycled from the
 //!   previous run (`redist::execute_into`, [`sim::StoreStats`]
 //!   counters), the allreduce reduces in place, and each term
@@ -79,25 +108,29 @@
 //!   `runtime::KernelEngine::einsum2_into` / `mttkrp_into`), the machine
 //!   hands each rank a store-recycled destination
 //!   ([`sim::Machine::compute_step_into`], `out_allocs`/`out_reuses`
-//!   counters), Seq-kernel intermediates and the MTTKRP output-order
-//!   permute recycle through the coordinator's per-`(term, op)` scratch
-//!   table ([`coordinator::LocalScratchStats`]), and local inputs are
-//!   borrowed from the store instead of deep-copied per rank per step.
+//!   counters), Seq-kernel intermediates, **pre-reduction buffers for
+//!   indices private to one operand** (`contract::reduce_modes_into` —
+//!   what used to be the one documented allocating exception), and the
+//!   MTTKRP output-order permute recycle through the run loop's
+//!   per-`(term, slot)` scratch table
+//!   ([`coordinator::LocalScratchStats`]), and local inputs are borrowed
+//!   from the store instead of deep-copied per rank per step;
+//! - [`Program::run_into`] writes the gathered output through a
+//!   caller-recycled tensor (permuted gathers stage through recycled
+//!   scratch), so the **entire** steady-state run performs zero tensor
+//!   allocations.
 //!
 //! Per-element reduction orders are fixed by the serial panel walk, so
 //! results are **bitwise identical across thread counts** (asserted in
-//! tests).  Steady-state invariant, counter-asserted end to end: zero
-//! tensor allocations across repeated coordinator runs — packing, folds,
-//! staging, redistribution, compute outputs, Seq intermediates, and the
-//! MTTKRP permute all come from recycled buffers.  (One documented
-//! exception remains: ops that sum away an index private to a single
-//! operand pre-reduce through allocating intermediates —
-//! `contract::reduce_mode` — a path the benchmark-family plans never
-//! take and no counter tracks.)  `cargo bench --bench hotpath` tracks
-//! the win as `coordinator_steady_state` (now with an `allocs_per_run`
-//! field) / `pool_dispatch` vs the retained spawn-per-step baselines in
-//! `BENCH_hotpath.json`.
+//! tests).  Steady-state invariant, counter-asserted end to end
+//! ([`RunStats::allocs`] flat): packing, folds, staging, redistribution,
+//! compute outputs, Seq intermediates, pre-reductions, permutes and the
+//! gather all come from recycled buffers.  `cargo bench --bench hotpath`
+//! tracks the win as `coordinator_steady_state` (with `allocs_per_run`)
+//! and the plan cache as `program_compile_cached` vs `program_compile_cold`
+//! in `BENCH_hotpath.json`.
 
+pub mod api;
 pub mod baseline;
 pub mod bench_support;
 pub mod contraction;
@@ -113,6 +146,8 @@ pub mod sim;
 pub mod soap;
 pub mod tensor;
 
+pub use api::{PlanCacheStats, Program, RunStats, Session, SessionBuilder};
+pub use coordinator::{RunMetrics, RunReport};
 pub use error::{Error, Result};
 pub use tensor::kernel::{KernelConfig, ScratchPool, ScratchStats};
 pub use tensor::Tensor;

@@ -6,18 +6,17 @@
 //!   bench [--ranks P] [--size-factor F] [--filter NAME]        Table IV suite, Fig. 5 rows
 //!   bounds [--s S]                                             §IV-E I/O lower bounds
 //!
-//! CLI parsing is hand-rolled (no clap in the offline vendored registry).
+//! All einsum work goes through the [`Session`]/`Program` front door
+//! (`--artifacts DIR` serves local kernels from PJRT, degrading to the
+//! native engine with a warning).  CLI parsing is hand-rolled (no clap
+//! in the offline vendored registry).
 
 use std::process::ExitCode;
 
 use deinsum::bench_support::{self, header, row};
-use deinsum::coordinator::Coordinator;
-use deinsum::einsum::EinsumSpec;
-use deinsum::planner::{plan, PlannerConfig};
-use deinsum::runtime::KernelEngine;
-use deinsum::sim::NetworkModel;
 use deinsum::soap::{self, Statement};
 use deinsum::tensor::Tensor;
+use deinsum::Session;
 
 fn parse_shapes(s: &str) -> Result<Vec<Vec<usize>>, String> {
     s.split(',')
@@ -56,14 +55,16 @@ fn parse_args(argv: &[String]) -> Args {
     Args { positional, flags }
 }
 
-fn engine_from_flags(args: &Args) -> KernelEngine {
-    match args.flags.get("artifacts") {
-        Some(dir) => KernelEngine::pjrt(dir).unwrap_or_else(|e| {
-            eprintln!("warning: PJRT engine unavailable ({e}); using native kernels");
-            KernelEngine::native()
-        }),
-        None => KernelEngine::native(),
+fn ranks_flag(args: &Args) -> usize {
+    args.flags.get("ranks").map(|s| s.parse().unwrap_or(8)).unwrap_or(8)
+}
+
+fn session_from_flags(args: &Args) -> Session {
+    let mut b = Session::builder().ranks(ranks_flag(args));
+    if let Some(dir) = args.flags.get("artifacts") {
+        b = b.artifacts(dir);
     }
+    b.build_or_native()
 }
 
 fn main() -> ExitCode {
@@ -93,29 +94,25 @@ fn main() -> ExitCode {
 fn cmd_plan(args: &Args) -> Result<(), String> {
     let expr = args.positional.first().ok_or("missing einsum string")?;
     let shapes = parse_shapes(args.flags.get("shapes").ok_or("--shapes required")?)?;
-    let p: usize =
-        args.flags.get("ranks").map(|s| s.parse().unwrap_or(8)).unwrap_or(8);
-    let spec = EinsumSpec::parse(expr, &shapes).map_err(|e| e.to_string())?;
-    let pl = plan(&spec, p, &PlannerConfig::default()).map_err(|e| e.to_string())?;
-    println!("{}", pl.render());
+    // Planning needs no kernel engine: skip the artifacts flag (and any
+    // PJRT-load warning) and compile on a plain native session.
+    let session = Session::builder().ranks(ranks_flag(args)).build_or_native();
+    let program = session.compile(expr, &shapes).map_err(|e| e.to_string())?;
+    println!("{}", program.schedule());
     Ok(())
 }
 
 fn cmd_run(args: &Args) -> Result<(), String> {
     let expr = args.positional.first().ok_or("missing einsum string")?;
     let shapes = parse_shapes(args.flags.get("shapes").ok_or("--shapes required")?)?;
-    let p: usize =
-        args.flags.get("ranks").map(|s| s.parse().unwrap_or(8)).unwrap_or(8);
-    let spec = EinsumSpec::parse(expr, &shapes).map_err(|e| e.to_string())?;
-    let pl = plan(&spec, p, &PlannerConfig::default()).map_err(|e| e.to_string())?;
+    let session = session_from_flags(args);
+    let mut program = session.compile(expr, &shapes).map_err(|e| e.to_string())?;
     let inputs: Vec<Tensor> = shapes
         .iter()
         .enumerate()
         .map(|(i, s)| Tensor::random(s, 7 + i as u64))
         .collect();
-    let engine = engine_from_flags(args);
-    let coord = Coordinator::new(&engine, NetworkModel::aries());
-    let rep = coord.run(&pl, &inputs).map_err(|e| e.to_string())?;
+    let rep = program.run(&inputs).map_err(|e| e.to_string())?;
     println!("output {:?}  |out| = {:.6e}", rep.output.dims(), rep.output.norm());
     println!(
         "time: compute {:.6}s + comm {:.6}s = {:.6}s",
@@ -131,13 +128,11 @@ fn cmd_run(args: &Args) -> Result<(), String> {
 }
 
 fn cmd_bench(args: &Args) -> Result<(), String> {
-    let p: usize =
-        args.flags.get("ranks").map(|s| s.parse().unwrap_or(8)).unwrap_or(8);
+    let p = ranks_flag(args);
     let sf: usize =
         args.flags.get("size-factor").map(|s| s.parse().unwrap_or(16)).unwrap_or(16);
     let filter = args.flags.get("filter").cloned().unwrap_or_default();
-    let engine = engine_from_flags(args);
-    let net = NetworkModel::aries();
+    let session = session_from_flags(args);
     println!("{}", header());
     let mut points = Vec::new();
     for def in bench_support::suite(sf) {
@@ -145,7 +140,7 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
             continue;
         }
         let (pt, _, _) =
-            bench_support::run_point(&def, p, &engine, net).map_err(|e| e.to_string())?;
+            bench_support::run_point(&def, p, &session).map_err(|e| e.to_string())?;
         println!("{}", row(&pt));
         points.push(pt);
     }

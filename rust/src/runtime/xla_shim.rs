@@ -4,8 +4,8 @@
 //! shim provides the exact API shape [`super`] compiles against and fails
 //! at *client construction* time: [`PjRtClient::cpu`] returns an error,
 //! `KernelEngine::pjrt` surfaces it, and every caller falls back to the
-//! native kernels (the engine's designed degradation path — see the
-//! `engine_from_flags` handling in `main.rs`).  Swapping this module for
+//! native kernels (the engine's designed degradation path —
+//! `api::SessionBuilder::build_or_native`).  Swapping this module for
 //! the real `xla` crate re-enables artifact execution without touching
 //! `runtime/mod.rs`.
 #![allow(dead_code)]

@@ -78,10 +78,11 @@ pub struct StoreStats {
 /// The simulated machine: rank-local tensor stores + cost accounting.
 ///
 /// The store persists across runs when the machine is held by a
-/// [`crate::coordinator::Coordinator`]; [`Machine::begin_run`] resets
-/// the per-run time/volume accounting without dropping buffers, so
-/// steady-state re-executions of a plan (CP-ALS sweeps, benches) reuse
-/// every staging/redistribution destination instead of reallocating.
+/// [`crate::api::Program`] (or the deprecated coordinator wrapper);
+/// [`Machine::begin_run`] resets the per-run time/volume accounting
+/// without dropping buffers, so steady-state re-executions of a plan
+/// (CP-ALS sweeps, benches) reuse every staging/redistribution
+/// destination instead of reallocating.
 pub struct Machine {
     ranks: usize,
     net: NetworkModel,

@@ -398,24 +398,89 @@ fn fill_krp_tile(
 /// Sum a tensor over one mode (used to eliminate indices that appear in
 /// one operand only and not in the output).
 pub fn reduce_mode(x: &Tensor, mode: usize) -> Tensor {
-    let dims = x.dims();
-    let out_dims: Vec<usize> =
-        dims.iter().enumerate().filter(|(d, _)| *d != mode).map(|(_, &e)| e).collect();
+    let out_dims: Vec<usize> = x
+        .dims()
+        .iter()
+        .enumerate()
+        .filter(|(d, _)| *d != mode)
+        .map(|(_, &e)| e)
+        .collect();
     let out_dims = if out_dims.is_empty() { vec![1] } else { out_dims };
     let mut out = Tensor::zeros(&out_dims);
-    // permute `mode` to front, then sum rows.
-    let mut perm = vec![mode];
-    perm.extend((0..x.order()).filter(|&d| d != mode));
-    let xp = x.permute(&perm);
-    let rows = dims[mode];
-    let cols = xp.len() / rows.max(1);
-    for r in 0..rows {
-        let src = &xp.data()[r * cols..(r + 1) * cols];
-        for (o, s) in out.data_mut().iter_mut().zip(src) {
-            *o += s;
+    reduce_modes_into(x, &[mode], &mut out).expect("dims derived from x");
+    out
+}
+
+/// Tensor order up to which [`reduce_modes_into`]'s odometer lives on
+/// the stack (far above the order-5 tensors of the benchmark suite);
+/// higher orders fall back to a heap odometer rather than failing.
+const REDUCE_MAX_ORDER: usize = 16;
+
+/// Sum `x` over every mode listed in `drop` into `dest`, with **zero
+/// allocations** up to order [`REDUCE_MAX_ORDER`]: a single linear pass
+/// over `x` accumulating into the kept-dims layout.  `dest` must already
+/// have the kept dims (`[1]` when every mode is dropped); its contents
+/// are overwritten.  Per output element the dropped indices are visited
+/// in ascending order, so a single-mode call is bitwise identical to
+/// [`reduce_mode`].
+///
+/// This is the coordinator's pre-reduction hot path for indices private
+/// to one operand: destinations come from its recycled local scratch
+/// table, closing what used to be the last documented steady-state
+/// allocation exception.
+pub fn reduce_modes_into(x: &Tensor, drop: &[usize], dest: &mut Tensor) -> Result<()> {
+    let dims = x.dims();
+    let n = dims.len();
+    if drop.iter().any(|&d| d >= n) {
+        return Err(Error::shape(format!("reduce: mode out of range for order {n}")));
+    }
+    let want: Vec<usize> =
+        (0..n).filter(|d| !drop.contains(d)).map(|d| dims[d]).collect();
+    let want = if want.is_empty() { vec![1] } else { want };
+    if dest.dims() != want {
+        return Err(Error::shape(format!(
+            "reduce: dest dims {:?} != kept dims {want:?}",
+            dest.dims()
+        )));
+    }
+    // Destination stride per source dim (0 for dropped dims); the linear
+    // walk over `x` advances the destination offset with a plain
+    // odometer carry.  On-stack for every realistic order; exotic orders
+    // pay one heap odometer instead of erroring.
+    let mut dstride_arr = [0usize; REDUCE_MAX_ORDER];
+    let mut idx_arr = [0usize; REDUCE_MAX_ORDER];
+    let mut dstride_heap: Vec<usize>;
+    let mut idx_heap: Vec<usize>;
+    let (dstride, idx): (&mut [usize], &mut [usize]) = if n <= REDUCE_MAX_ORDER {
+        (&mut dstride_arr[..n], &mut idx_arr[..n])
+    } else {
+        dstride_heap = vec![0usize; n];
+        idx_heap = vec![0usize; n];
+        (&mut dstride_heap[..], &mut idx_heap[..])
+    };
+    let mut s = 1usize;
+    for d in (0..n).rev() {
+        if !drop.contains(&d) {
+            dstride[d] = s;
+            s *= dims[d];
         }
     }
-    out
+    let out = dest.data_mut();
+    out.fill(0.0);
+    let mut off = 0usize;
+    for &v in x.data() {
+        out[off] += v;
+        for d in (0..n).rev() {
+            idx[d] += 1;
+            if idx[d] < dims[d] {
+                off += dstride[d];
+                break;
+            }
+            idx[d] = 0;
+            off -= dstride[d] * (dims[d] - 1);
+        }
+    }
+    Ok(())
 }
 
 /// General binary einsum: `out[out_idx] = Σ x[x_idx] * y[y_idx]` with
@@ -516,9 +581,11 @@ fn einsum2_dispatch(
     let mut x_owned: Option<Tensor> = None;
     let mut x_idx: Vec<char> = x_idx.to_vec();
     loop {
+        // The synthetic singleton is never a victim (it marks an operand
+        // already fully reduced — re-selecting it would loop forever).
         let victim = x_idx
             .iter()
-            .position(|c| !y_idx.contains(c) && !out_idx.contains(c));
+            .position(|c| *c != '\u{1}' && !y_idx.contains(c) && !out_idx.contains(c));
         match victim {
             Some(d) => {
                 let cur = x_owned.as_ref().unwrap_or(x);
@@ -537,7 +604,7 @@ fn einsum2_dispatch(
     loop {
         let victim = y_idx
             .iter()
-            .position(|c| !x_idx.contains(c) && !out_idx.contains(c));
+            .position(|c| *c != '\u{1}' && !x_idx.contains(c) && !out_idx.contains(c));
         match victim {
             Some(d) => {
                 let cur = y_owned.as_ref().unwrap_or(y);
@@ -1193,6 +1260,53 @@ mod tests {
             }
         }
         assert!(r.allclose(&want, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn einsum2_fully_summed_operand_terminates_and_scales() {
+        // Regression: an operand whose indices are ALL summed away
+        // collapses to the synthetic singleton ('\u{1}'); the victim
+        // search used to re-select that singleton forever (hang).  The
+        // result is the other operand scaled by the full sum.
+        let x = randn(&[4, 3], 140);
+        let y = randn(&[2, 5], 141);
+        let s: f32 = y.data().iter().sum();
+        let mut want = x.clone();
+        for v in want.data_mut().iter_mut() {
+            *v *= s;
+        }
+        let got = einsum2(&x, &['i', 'j'], &y, &['k', 'l'], &['i', 'j']).unwrap();
+        assert!(got.allclose(&want, 1e-4, 1e-4), "rel {}", got.rel_error(&want));
+        // Symmetric: the singleton on the x side.
+        let got2 = einsum2(&y, &['k', 'l'], &x, &['i', 'j'], &['i', 'j']).unwrap();
+        assert!(got2.allclose(&want, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn reduce_modes_into_matches_chained_reduce_mode() {
+        // Multi-mode single-pass sum vs the chained one-mode oracle, on
+        // every drop subset of an order-4 tensor, writing through a
+        // dirty recycled-style destination.
+        let t = randn(&[3, 4, 2, 5], 117);
+        for drop_mask in 1u32..(1 << 4) {
+            let drop: Vec<usize> = (0..4).filter(|d| drop_mask & (1 << d) != 0).collect();
+            // Oracle: drop modes one at a time (descending so positions
+            // stay valid).
+            let mut want = t.clone();
+            for &d in drop.iter().rev() {
+                want = reduce_mode(&want, d);
+            }
+            let mut dest = randn(want.dims(), 118); // dirty
+            reduce_modes_into(&t, &drop, &mut dest).unwrap();
+            assert!(
+                dest.allclose(&want, 1e-4, 1e-4),
+                "drop {drop:?}: max diff {}",
+                dest.max_abs_diff(&want)
+            );
+        }
+        // Shape mismatch is a typed error, not a panic.
+        let mut bad = Tensor::zeros(&[3, 4]);
+        assert!(reduce_modes_into(&t, &[0], &mut bad).is_err());
     }
 
     #[test]

@@ -1,0 +1,223 @@
+//! Integration tests for the `Session`/`Program` front door (the 0.5.0
+//! handle API): plan-cache behavior, steady-state recycling through the
+//! unified `RunStats`, equivalence with the deprecated `Coordinator`
+//! wrapper, the private-summed-index pre-reduction, and typed
+//! malformed-plan errors.
+
+use deinsum::einsum::EinsumSpec;
+use deinsum::planner::{plan, PlannerConfig};
+use deinsum::tensor::contract;
+use deinsum::{Error, Session, Tensor};
+
+/// The paper's §II worked example, small enough for tests.
+const WORKED: &str = "ijk,ja,ka,al->il";
+
+fn worked_shapes(n: usize, r: usize) -> Vec<Vec<usize>> {
+    vec![vec![n, n, n], vec![n, r], vec![n, r], vec![r, n]]
+}
+
+fn random_inputs(shapes: &[Vec<usize>], seed: u64) -> Vec<Tensor> {
+    shapes
+        .iter()
+        .enumerate()
+        .map(|(i, s)| Tensor::random(s, seed + i as u64))
+        .collect()
+}
+
+#[test]
+fn recompiling_identical_spec_is_a_counted_cache_hit() {
+    // The acceptance pin: the second compile of an identical spec is a
+    // cache hit that skips planning — counter-asserted, and the two
+    // programs share the very same Plan allocation.
+    let shapes = worked_shapes(12, 6);
+    let session = Session::builder().ranks(8).build().unwrap();
+    let p1 = session.compile(WORKED, &shapes).unwrap();
+    assert_eq!(session.cache_stats().misses, 1);
+    assert_eq!(session.cache_stats().hits, 0);
+    let p2 = session.compile(WORKED, &shapes).unwrap();
+    assert_eq!(session.cache_stats().misses, 1, "identical spec must not re-plan");
+    assert_eq!(session.cache_stats().hits, 1);
+    assert!(
+        std::ptr::eq(p1.plan(), p2.plan()),
+        "a cache hit must share the cached Plan"
+    );
+    // Different shapes are a different program: a counted miss.
+    let other = worked_shapes(14, 6);
+    let p3 = session.compile(WORKED, &other).unwrap();
+    assert_eq!(session.cache_stats().misses, 2, "different shapes must re-plan");
+    assert!(!std::ptr::eq(p1.plan(), p3.plan()));
+    // Different rank count too.
+    session.compile_on(WORKED, &shapes, 4).unwrap();
+    assert_eq!(session.cache_stats().misses, 3, "different P must re-plan");
+}
+
+#[test]
+fn program_reruns_are_bitwise_identical_with_flat_unified_allocs() {
+    let shapes = worked_shapes(16, 8);
+    let inputs = random_inputs(&shapes, 100);
+    // Small analysis S forces the two-term split (redistribution on the
+    // hot path).
+    let cfg = PlannerConfig { s_elements: 64.0, ..Default::default() };
+    let session = Session::builder().ranks(8).planner(cfg).build().unwrap();
+    let mut prog = session.compile(WORKED, &shapes).unwrap();
+    let first = prog.run(&inputs).unwrap();
+    // Warm every path, including the recycled-output gather.
+    let mut out = Tensor::zeros(&prog.output_dims());
+    prog.run_into(&inputs, &mut out).unwrap();
+    assert!(out.allclose(&first.output, 0.0, 0.0), "run_into must match run bitwise");
+    let warm = prog.stats();
+    assert_eq!(warm.runs, 2);
+    for _ in 0..3 {
+        prog.run_into(&inputs, &mut out).unwrap();
+        assert!(out.allclose(&first.output, 0.0, 0.0), "rerun must be bitwise stable");
+    }
+    let after = prog.stats();
+    assert_eq!(
+        after.allocs(),
+        warm.allocs(),
+        "warm run_into reruns must allocate nothing ({warm:?} -> {after:?})"
+    );
+    assert!(after.reuses() > warm.reuses(), "reruns must recycle buffers");
+    assert_eq!(after.runs, 5);
+}
+
+#[test]
+fn run_into_matches_run_for_permuted_outputs() {
+    // Whatever final layout the planner picks, the recycled-gather path
+    // must agree with the allocating one bitwise (covers both the
+    // direct-assemble and the permute-staging arm).
+    for expr in ["ij,jk->ik", "ij,jk->ki", "ijk,ja,ka->ai"] {
+        let lhs = expr.split("->").next().unwrap();
+        let shapes: Vec<Vec<usize>> = lhs
+            .split(',')
+            .map(|s| {
+                s.chars()
+                    .map(|c| match c {
+                        'i' => 12,
+                        'j' => 10,
+                        'k' => 8,
+                        _ => 6,
+                    })
+                    .collect()
+            })
+            .collect();
+        let inputs = random_inputs(&shapes, 200);
+        let session = Session::builder().ranks(4).build().unwrap();
+        let mut prog = session.compile(expr, &shapes).unwrap();
+        let rep = prog.run(&inputs).unwrap();
+        let mut out = Tensor::random(&prog.output_dims(), 999); // dirty dest
+        prog.run_into(&inputs, &mut out).unwrap();
+        assert!(out.allclose(&rep.output, 0.0, 0.0), "{expr}");
+        // Shape-checked: a wrong destination is a typed error.
+        let mut bad = Tensor::zeros(&[3, 3]);
+        assert!(matches!(
+            prog.run_into(&inputs, &mut bad),
+            Err(Error::Shape(_))
+        ));
+    }
+}
+
+#[test]
+#[allow(deprecated)]
+fn deprecated_coordinator_wrapper_matches_handle_api() {
+    use deinsum::coordinator::Coordinator;
+    use deinsum::runtime::KernelEngine;
+    use deinsum::sim::NetworkModel;
+
+    let shapes = worked_shapes(12, 6);
+    let inputs = random_inputs(&shapes, 300);
+    // Old wiring ritual.
+    let spec = EinsumSpec::parse(WORKED, &shapes).unwrap();
+    let pl = plan(&spec, 8, &PlannerConfig::default()).unwrap();
+    let engine = KernelEngine::native();
+    let coord = Coordinator::new(&engine, NetworkModel::aries());
+    let old = coord.run(&pl, &inputs).unwrap();
+    // Front door.
+    let session = Session::builder().ranks(8).build().unwrap();
+    let new = session.compile(WORKED, &shapes).unwrap().run(&inputs).unwrap();
+    assert!(
+        new.output.allclose(&old.output, 0.0, 0.0),
+        "wrapper and handle API must be bitwise identical (rel {})",
+        new.output.rel_error(&old.output)
+    );
+    assert_eq!(new.per_term.len(), old.per_term.len());
+    assert_eq!(new.comm.p2p_bytes, old.comm.p2p_bytes);
+    assert_eq!(new.comm.allreduce_bytes, old.comm.allreduce_bytes);
+}
+
+#[test]
+fn private_summed_index_routes_through_recycled_scratch() {
+    // `ijk,ka->ia` sums away `j`, which is private to the first operand:
+    // the run loop must pre-reduce it through the counted local scratch
+    // table (the last documented steady-state allocation exception,
+    // now closed) and still match the serial oracle.
+    let shapes = vec![vec![10, 7, 8], vec![8, 5]];
+    let inputs = random_inputs(&shapes, 400);
+    let session = Session::builder().ranks(4).build().unwrap();
+    let mut prog = session.compile("ijk,ka->ia", &shapes).unwrap();
+    let first = prog.run(&inputs).unwrap();
+    let want = contract::einsum2(
+        &inputs[0],
+        &['i', 'j', 'k'],
+        &inputs[1],
+        &['k', 'a'],
+        &['i', 'a'],
+    )
+    .unwrap();
+    assert!(
+        first.output.allclose(&want, 1e-3, 1e-3),
+        "rel err {}",
+        first.output.rel_error(&want)
+    );
+    prog.run(&inputs).unwrap();
+    let warm = prog.stats();
+    assert!(
+        warm.local_scratch.reuses > 0,
+        "second run must recycle pre-reduction buffers ({warm:?})"
+    );
+    for _ in 0..3 {
+        let rep = prog.run(&inputs).unwrap();
+        assert!(rep.output.allclose(&first.output, 0.0, 0.0));
+    }
+    let after = prog.stats();
+    assert_eq!(
+        after.local_scratch.allocs, warm.local_scratch.allocs,
+        "steady-state pre-reduction must not allocate ({warm:?} -> {after:?})"
+    );
+    assert_eq!(after.store.dest_allocs, warm.store.dest_allocs);
+    assert_eq!(after.store.out_allocs, warm.store.out_allocs);
+    assert_eq!(
+        after.engine_scratch.allocs, warm.engine_scratch.allocs,
+        "engine packing/fold scratch must stay flat in steady state"
+    );
+}
+
+#[test]
+#[allow(deprecated)]
+fn malformed_plan_surfaces_as_typed_error_not_panic() {
+    use deinsum::coordinator::Coordinator;
+    use deinsum::runtime::KernelEngine;
+    use deinsum::sim::NetworkModel;
+
+    // A fused-MTTKRP plan whose output index string is corrupted after
+    // planning: execution must return Error::MalformedPlan, not panic on
+    // an unwrap mid-run.
+    let shapes = vec![vec![12, 10, 8], vec![10, 4], vec![8, 4]];
+    let spec = EinsumSpec::parse("ijk,ja,ka->ia", &shapes).unwrap();
+    let mut pl = plan(&spec, 4, &PlannerConfig::default()).unwrap();
+    let last = pl.terms.len() - 1;
+    pl.terms[last].output_indices = vec!['a', 'q'];
+    let inputs = random_inputs(&shapes, 500);
+    let engine = KernelEngine::native();
+    let coord = Coordinator::new(&engine, NetworkModel::aries());
+    match coord.run(&pl, &inputs) {
+        Err(Error::MalformedPlan { term, detail }) => {
+            assert!(!term.is_empty());
+            assert!(detail.contains('q'), "detail should name the bad index: {detail}");
+        }
+        other => panic!("want Err(MalformedPlan), got {other:?}"),
+    }
+    // The error formats with its term context.
+    let e = Error::malformed_plan("term0", "boom");
+    assert_eq!(e.to_string(), "malformed plan (term term0): boom");
+}

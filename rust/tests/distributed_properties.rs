@@ -17,13 +17,11 @@
 //!    unfused baseline.
 
 use deinsum::baseline::plan_baseline;
-use deinsum::coordinator::Coordinator;
 use deinsum::einsum::EinsumSpec;
 use deinsum::planner::{plan, PlannerConfig};
 use deinsum::redist;
-use deinsum::runtime::KernelEngine;
-use deinsum::sim::NetworkModel;
 use deinsum::tensor::{contract, Tensor};
+use deinsum::Session;
 
 /// Tiny deterministic PRNG (xorshift64*).
 struct Rng(u64);
@@ -117,23 +115,25 @@ fn random_case(rng: &mut Rng) -> (String, Vec<Vec<usize>>) {
 
 #[test]
 fn property_distributed_equals_oracle() {
-    let engine = KernelEngine::native();
+    // One session for all trials: the engine and the plan cache are
+    // shared, so repeated (expr, shapes, p) draws hit the cache.
+    let session = Session::builder().build().unwrap();
     let mut rng = Rng::new(0xD315);
     for trial in 0..40 {
         let (expr, shapes) = random_case(&mut rng);
         let p = *rng.pick(&[1usize, 2, 3, 4, 6, 8]);
         let spec = EinsumSpec::parse(&expr, &shapes).unwrap();
-        let pl = match plan(&spec, p, &PlannerConfig::default()) {
-            Ok(pl) => pl,
-            Err(e) => panic!("trial {trial} ({expr}, P={p}): plan failed: {e}"),
+        let mut prog = match session.compile_on(&expr, &shapes, p) {
+            Ok(prog) => prog,
+            Err(e) => panic!("trial {trial} ({expr}, P={p}): compile failed: {e}"),
         };
         let inputs: Vec<Tensor> = shapes
             .iter()
             .enumerate()
             .map(|(i, s)| Tensor::random(s, trial * 31 + i as u64))
             .collect();
-        let rep = Coordinator::new(&engine, NetworkModel::aries())
-            .run(&pl, &inputs)
+        let rep = prog
+            .run(&inputs)
             .unwrap_or_else(|e| panic!("trial {trial} ({expr}, P={p}): {e}"));
         let want = oracle(&spec, &inputs);
         assert!(
@@ -146,20 +146,20 @@ fn property_distributed_equals_oracle() {
 
 #[test]
 fn property_baseline_equals_oracle() {
-    let engine = KernelEngine::native();
+    let session = Session::builder().build().unwrap();
     let mut rng = Rng::new(0xBA5E);
     for trial in 0..25 {
         let (expr, shapes) = random_case(&mut rng);
         let p = *rng.pick(&[1usize, 2, 4, 8]);
         let spec = EinsumSpec::parse(&expr, &shapes).unwrap();
-        let pl = plan_baseline(&spec, p).unwrap();
         let inputs: Vec<Tensor> = shapes
             .iter()
             .enumerate()
             .map(|(i, s)| Tensor::random(s, trial * 37 + i as u64))
             .collect();
-        let rep = Coordinator::new(&engine, NetworkModel::aries())
-            .run(&pl, &inputs)
+        let rep = session
+            .compile_baseline_on(&expr, &shapes, p)
+            .and_then(|mut prog| prog.run(&inputs))
             .unwrap_or_else(|e| panic!("trial {trial} ({expr}, P={p}): {e}"));
         let want = oracle(&spec, &inputs);
         assert!(

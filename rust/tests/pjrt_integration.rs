@@ -5,12 +5,9 @@
 //! Requires `make artifacts` (skipped gracefully when absent, e.g. in a
 //! bare checkout).
 
-use deinsum::coordinator::Coordinator;
-use deinsum::einsum::EinsumSpec;
-use deinsum::planner::{plan, PlannerConfig};
 use deinsum::runtime::{Engine, KernelEngine};
-use deinsum::sim::NetworkModel;
 use deinsum::tensor::{contract, Tensor};
+use deinsum::Session;
 
 fn artifacts_dir() -> Option<std::path::PathBuf> {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -158,29 +155,27 @@ fn pjrt_ttmc_matches_native() {
 #[test]
 fn distributed_run_on_pjrt_engine_matches_native_engine() {
     let Some(dir) = artifacts_dir() else { return };
-    // Full three-layer round trip: L3 coordinator -> PJRT-compiled
-    // L2/L1 pipeline on every rank, vs the all-native run.
-    let spec = EinsumSpec::parse(
-        "ijk,ja,ka->ia",
-        &[vec![128, 128, 128], vec![128, 24], vec![128, 24]],
-    )
-    .unwrap();
-    let pl = plan(&spec, 8, &PlannerConfig::default()).unwrap();
+    // Full three-layer round trip through the front door: an
+    // artifacts-backed session compiles and runs the program with
+    // PJRT-served local kernels on every rank, vs the all-native run.
+    let shapes = vec![vec![128, 128, 128], vec![128, 24], vec![128, 24]];
     let inputs = vec![
         Tensor::random(&[128, 128, 128], 21),
         Tensor::random(&[128, 24], 22),
         Tensor::random(&[128, 24], 23),
     ];
-    let pjrt = KernelEngine::pjrt(&dir).unwrap();
-    let native = KernelEngine::native();
-    let rep_p = Coordinator::new(&pjrt, NetworkModel::aries()).run(&pl, &inputs).unwrap();
-    let rep_n = Coordinator::new(&native, NetworkModel::aries()).run(&pl, &inputs).unwrap();
+    let pjrt = Session::builder().ranks(8).artifacts(&dir).build().unwrap();
+    let native = Session::builder().ranks(8).build().unwrap();
+    let rep_p =
+        pjrt.compile("ijk,ja,ka->ia", &shapes).unwrap().run(&inputs).unwrap();
+    let rep_n =
+        native.compile("ijk,ja,ka->ia", &shapes).unwrap().run(&inputs).unwrap();
     assert!(
         rep_p.output.allclose(&rep_n.output, 1e-2, 1e-2),
         "PJRT vs native distributed runs diverge: rel {}",
         rep_p.output.rel_error(&rep_n.output)
     );
-    let st = pjrt.stats();
+    let st = pjrt.engine().stats();
     assert!(
         st.pjrt_exact + st.pjrt_padded > 0,
         "PJRT engine never used: {st:?}"
