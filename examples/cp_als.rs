@@ -202,7 +202,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         "mode-0 program: {} runs, {} whole-tensor recycles ({} tensor allocations)",
         st.runs,
         st.reuses(),
-        st.store.dest_allocs + st.store.out_allocs + st.local_scratch.allocs
+        st.tensor_allocs()
     );
     assert!(fit > 0.99, "CP-ALS failed to recover the planted factors");
     println!("cp_als OK");

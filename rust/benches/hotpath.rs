@@ -165,7 +165,11 @@ fn main() {
         let soap_cfg = plan(&spec, 1, &PlannerConfig::default())
             .map(|p| {
                 feed_engine.configure_for_term(&p.terms[0]);
-                feed_engine.config()
+                let derived = feed_engine.config();
+                // The override is thread-local (and engine-tagged) since
+                // 0.6.0; clear it rather than leave a stale entry behind.
+                feed_engine.reset_config();
+                derived
             })
             .unwrap_or(cfg);
 
@@ -453,6 +457,98 @@ fn main() {
             Some(cold / steady),
             Some(allocs_per_run),
         );
+    }
+
+    // --- serving throughput: 1 worker vs 8 workers -----------------------------
+    //
+    // Mixed MTTKRP/TTMc/GEMM traffic over 8 distinct program keys (so
+    // key-affinity routing can spread across all 8 workers), driven
+    // closed-loop: submit a full batch, wait for every ticket, recycle
+    // each reply's output tensor as the next round's destination.  The
+    // 8w/1w ratio is the serving layer's scaling headline.
+    {
+        use deinsum::{ServeRequest, Server, Ticket};
+        let n = if tiny { 8 } else { 16 };
+        let r = 4usize;
+        let keys: Vec<(String, Vec<Vec<usize>>)> = vec![
+            ("ijk,ja,ka->ia".into(), vec![vec![n, n, n], vec![n, r], vec![n, r]]),
+            ("ijk,ia,ka->ja".into(), vec![vec![n, n, n], vec![n, r], vec![n, r]]),
+            ("ijk,ia,ja->ka".into(), vec![vec![n, n, n], vec![n, r], vec![n, r]]),
+            ("ijk,ja,ka->ai".into(), vec![vec![n, n, n], vec![n, r], vec![n, r]]),
+            (
+                "ijkl,jb,kc,ld->ibcd".into(),
+                vec![vec![n, n, n, n], vec![n, 3], vec![n, 3], vec![n, 3]],
+            ),
+            ("ij,jk->ik".into(), vec![vec![2 * n, n], vec![n, n]]),
+            ("ij,jk->ki".into(), vec![vec![2 * n, n], vec![n, n]]),
+            ("ij,jk,kl->il".into(), vec![vec![n, n], vec![n, n], vec![n, n]]),
+        ];
+        let inputs: Vec<std::sync::Arc<Vec<Tensor>>> = keys
+            .iter()
+            .enumerate()
+            .map(|(i, (_, shapes))| {
+                std::sync::Arc::new(
+                    shapes
+                        .iter()
+                        .enumerate()
+                        .map(|(j, s)| Tensor::random(s, (31 + 7 * i + j) as u64))
+                        .collect::<Vec<_>>(),
+                )
+            })
+            .collect();
+        let batch = if tiny { 16usize } else { 64 };
+        let shape = format!("{} keys x {batch} reqs n={n}", keys.len());
+        let mut medians = Vec::new();
+        for &workers in &[1usize, 8] {
+            let session =
+                Session::builder().ranks(8).kernel_config(cfg).build().unwrap();
+            let server = Server::builder(session).workers(workers).build();
+            // Per-slot recycled destinations (closed loop: replies hand
+            // them back for the next round).
+            let mut dests: Vec<Option<Tensor>> = (0..batch)
+                .map(|q| {
+                    let (expr, shapes) = &keys[q % keys.len()];
+                    Some(Tensor::zeros(&Server::output_dims(expr, shapes).unwrap()))
+                })
+                .collect();
+            let drive = |dests: &mut Vec<Option<Tensor>>| {
+                let tickets: Vec<Ticket> = (0..batch)
+                    .map(|q| {
+                        let (expr, shapes) = &keys[q % keys.len()];
+                        server
+                            .submit(ServeRequest {
+                                tenant: format!("bench-{}", q % 2),
+                                expr: expr.clone(),
+                                shapes: shapes.clone(),
+                                inputs: std::sync::Arc::clone(&inputs[q % keys.len()]),
+                                dest: dests[q].take().unwrap(),
+                            })
+                            .unwrap()
+                    })
+                    .collect();
+                for (q, t) in tickets.into_iter().enumerate() {
+                    dests[q] = Some(t.wait().unwrap().output);
+                }
+            };
+            drive(&mut dests); // warm every worker's programs
+            let (med, _, _) = common::time_median(reps, || drive(&mut dests));
+            let rps = batch as f64 / med;
+            println!(
+                "serve {shape} {workers}w: {} per batch ({rps:.0} req/s, p99 {:.6}s, hit rate {:.2})",
+                common::fmt_s(med),
+                server.stats().p99_latency_s,
+                server.stats().hit_rate(),
+            );
+            medians.push(med);
+            record(
+                &mut records,
+                &format!("serve_throughput_{workers}w"),
+                &shape,
+                med,
+                None,
+                if workers == 8 { Some(medians[0] / med) } else { None },
+            );
+        }
     }
 
     // --- machine-readable trajectory ------------------------------------------

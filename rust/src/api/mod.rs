@@ -21,6 +21,23 @@
 //!   [`Program::stats`] merges every store/scratch counter into one
 //!   [`RunStats`].
 //!
+//! ## Concurrency (0.6.0: `Rc` → `Arc`)
+//!
+//! As of 0.6.0 the handles are thread-safe: the session shares its
+//! [`KernelEngine`] and cached [`Plan`]s by `Arc` (they were `Rc` in
+//! 0.5.0), the plan cache sits behind a mutex, and the engine's per-term
+//! kernel-config override moved into thread-local state — so `Session`
+//! is `Send + Sync` and every `Program` is `Send`.  Many threads can
+//! compile from one shared session and run their programs concurrently;
+//! results stay bitwise identical to serial execution because per-element
+//! accumulation orders never depend on scheduling.  The multi-tenant
+//! worker pool built on top of this lives in [`crate::serve`].
+//!
+//! The deprecated `Coordinator` borrow-the-engine wrapper (0.4.0's
+//! wiring, kept one release for migration) is **removed** in 0.6.0: the
+//! handles are the only front door, and the execution core keeps
+//! `Program`-owned state only.
+//!
 //! ```
 //! use deinsum::{Session, Tensor};
 //! # fn main() -> deinsum::Result<()> {
@@ -49,13 +66,11 @@
 //! module) on the simulated machine ([`crate::sim`]), dispatching local
 //! tile kernels through the engine ([`crate::runtime`]).  Before 0.5.0
 //! every caller hand-wired those steps and borrowed the engine into a
-//! `Coordinator` for its whole lifetime; the deprecated
-//! [`crate::coordinator::Coordinator`] wrapper keeps that path compiling
-//! for one release.
+//! `Coordinator` for its whole lifetime; that wrapper was deprecated in
+//! 0.5.0 and removed in 0.6.0.
 
-use std::cell::RefCell;
 use std::path::PathBuf;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use crate::baseline::plan_baseline;
 use crate::coordinator::{run_plan, ExecState, LocalScratchStats, RunMetrics, RunReport};
@@ -97,9 +112,16 @@ struct PlanKey {
 /// LRU plan cache: MRU at the back of `entries`, evictions pop the
 /// front.  Linear scan — capacities are tens of plans, and a hit saves a
 /// full SOAP solve + grid search, so lookup cost is noise.
+///
+/// Concurrency protocol (the cache sits behind a session mutex): a
+/// compile takes the lock for [`lookup`](Self::lookup), releases it to
+/// run the planner on a miss — a SOAP solve must never block other
+/// tenants' cache hits — and re-takes it for
+/// [`insert`](Self::insert), which detects a racing insert of the same
+/// key and shares the first plan so cache-hit pointer identity holds.
 struct PlanCache {
     capacity: usize,
-    entries: Vec<(PlanKey, Rc<Plan>)>,
+    entries: Vec<(PlanKey, Arc<Plan>)>,
     stats: PlanCacheStats,
 }
 
@@ -112,26 +134,36 @@ impl PlanCache {
         }
     }
 
-    fn get_or_plan(
-        &mut self,
-        key: PlanKey,
-        build: impl FnOnce() -> Result<Plan>,
-    ) -> Result<Rc<Plan>> {
-        if let Some(pos) = self.entries.iter().position(|(k, _)| *k == key) {
+    /// Counted lookup: a present key is a hit (and becomes MRU); an
+    /// absent key is a miss and the caller must plan + `insert`.
+    fn lookup(&mut self, key: &PlanKey) -> Option<Arc<Plan>> {
+        if let Some(pos) = self.entries.iter().position(|(k, _)| k == key) {
             self.stats.hits += 1;
             let entry = self.entries.remove(pos);
-            let plan = Rc::clone(&entry.1);
+            let plan = Arc::clone(&entry.1);
             self.entries.push(entry);
-            return Ok(plan);
+            return Some(plan);
         }
         self.stats.misses += 1;
-        let plan = Rc::new(build()?);
+        None
+    }
+
+    /// Install a freshly-built plan.  If a concurrent compile of the
+    /// same key won the race while this thread was planning, the earlier
+    /// plan is kept (and returned) so hits keep sharing one allocation.
+    fn insert(&mut self, key: PlanKey, plan: Arc<Plan>) -> Arc<Plan> {
+        if let Some(pos) = self.entries.iter().position(|(k, _)| *k == key) {
+            let entry = self.entries.remove(pos);
+            let existing = Arc::clone(&entry.1);
+            self.entries.push(entry);
+            return existing;
+        }
         if self.entries.len() >= self.capacity {
             self.entries.remove(0);
             self.stats.evictions += 1;
         }
-        self.entries.push((key, Rc::clone(&plan)));
-        Ok(plan)
+        self.entries.push((key, Arc::clone(&plan)));
+        plan
     }
 }
 
@@ -229,11 +261,11 @@ impl SessionBuilder {
             engine.set_config(cfg);
         }
         Ok(Session {
-            engine: Rc::new(engine),
+            engine: Arc::new(engine),
             network: self.network,
             ranks: self.ranks,
             planner: self.planner,
-            cache: RefCell::new(PlanCache::new(self.plan_cache_capacity)),
+            cache: Mutex::new(PlanCache::new(self.plan_cache_capacity)),
         })
     }
 
@@ -256,14 +288,16 @@ impl SessionBuilder {
 }
 
 /// A compile-once execution context: owns the [`KernelEngine`] shared by
-/// every [`Program`] it compiles, plus the LRU plan cache.  See the
-/// [module docs](self) for the full story.
+/// every [`Program`] it compiles, plus the LRU plan cache.  `Send +
+/// Sync` since 0.6.0: wrap it in an `Arc` and compile from as many
+/// threads as the workload needs (the serving layer does exactly this).
+/// See the [module docs](self) for the full story.
 pub struct Session {
-    engine: Rc<KernelEngine>,
+    engine: Arc<KernelEngine>,
     network: NetworkModel,
     ranks: usize,
     planner: PlannerConfig,
-    cache: RefCell<PlanCache>,
+    cache: Mutex<PlanCache>,
 }
 
 impl Session {
@@ -288,14 +322,9 @@ impl Session {
         shapes: &[Vec<usize>],
         ranks: usize,
     ) -> Result<Program> {
-        let planner = self.planner;
-        // Parsing happens inside the miss path: a cache hit's key
-        // equality already proves this exact (expr, shapes) pair parsed
-        // successfully when the plan was first built.
-        let plan = self.cache.borrow_mut().get_or_plan(
-            self.key(expr, shapes, ranks, false),
-            || plan_schedule(&EinsumSpec::parse(expr, shapes)?, ranks, &planner),
-        )?;
+        let plan = self.cached_plan(self.key(expr, shapes, ranks, false), || {
+            plan_schedule(&EinsumSpec::parse(expr, shapes)?, ranks, &self.planner)
+        })?;
         Ok(self.program(plan))
     }
 
@@ -314,22 +343,44 @@ impl Session {
         shapes: &[Vec<usize>],
         ranks: usize,
     ) -> Result<Program> {
-        let plan = self.cache.borrow_mut().get_or_plan(
-            self.key(expr, shapes, ranks, true),
-            || plan_baseline(&EinsumSpec::parse(expr, shapes)?, ranks),
-        )?;
+        let plan = self.cached_plan(self.key(expr, shapes, ranks, true), || {
+            plan_baseline(&EinsumSpec::parse(expr, shapes)?, ranks)
+        })?;
         Ok(self.program(plan))
+    }
+
+    /// The single lookup → plan-outside-the-lock → insert dance both
+    /// compile flavors share.  Parsing happens inside the miss path: a
+    /// cache hit's key equality already proves the exact `(expr,
+    /// shapes)` pair parsed successfully when the plan was first built.
+    /// The cache lock is dropped around `build` (the planner run) so
+    /// concurrent tenants' cache hits never queue behind a SOAP solve;
+    /// racing same-key misses each run the planner once and the insert
+    /// dedups to the first plan.
+    fn cached_plan(
+        &self,
+        key: PlanKey,
+        build: impl FnOnce() -> Result<Plan>,
+    ) -> Result<Arc<Plan>> {
+        let cached = self.cache.lock().unwrap().lookup(&key);
+        match cached {
+            Some(p) => Ok(p),
+            None => {
+                let built = Arc::new(build()?);
+                Ok(self.cache.lock().unwrap().insert(key, built))
+            }
+        }
     }
 
     /// Plan-cache counters (the second compile of an identical spec is a
     /// counted hit).
     pub fn cache_stats(&self) -> PlanCacheStats {
-        self.cache.borrow().stats
+        self.cache.lock().unwrap().stats
     }
 
     /// Number of plans currently cached.
     pub fn cached_plans(&self) -> usize {
-        self.cache.borrow().entries.len()
+        self.cache.lock().unwrap().entries.len()
     }
 
     /// The kernel engine every program of this session dispatches
@@ -369,9 +420,9 @@ impl Session {
         }
     }
 
-    fn program(&self, plan: Rc<Plan>) -> Program {
+    fn program(&self, plan: Arc<Plan>) -> Program {
         Program {
-            engine: Rc::clone(&self.engine),
+            engine: Arc::clone(&self.engine),
             network: self.network,
             plan,
             state: ExecState::default(),
@@ -422,16 +473,40 @@ impl RunStats {
     pub fn reuses(&self) -> u64 {
         self.store.dest_reuses + self.store.out_reuses + self.local_scratch.reuses
     }
+
+    /// Whole-tensor allocations strictly attributable to *this* program
+    /// (store destinations + compute outputs + local scratch), excluding
+    /// the session-wide engine packing pool whose high-water mark can
+    /// move when another program runs.  This is the per-request figure
+    /// the serving layer accounts ([`crate::serve::ServeStats`]) and the
+    /// zero-steady-state-allocations acceptance tests assert.
+    pub fn tensor_allocs(&self) -> u64 {
+        self.store.dest_allocs + self.store.out_allocs + self.local_scratch.allocs
+    }
+
+    /// Whole-tensor recycles attributable to this program — the
+    /// counterpart of [`tensor_allocs`](Self::tensor_allocs).  Equal to
+    /// [`reuses`](Self::reuses) today (the engine pool contributes no
+    /// per-program reuse counter), named separately so the serving
+    /// layer's accounting reads symmetrically.
+    pub fn tensor_reuses(&self) -> u64 {
+        self.reuses()
+    }
 }
 
 /// A compiled distributed program: the I/O-optimal [`Plan`] (possibly
 /// shared with the session's cache), the persistent simulated machine,
 /// and every recycled buffer.  Re-running is the cheap operation the
 /// whole stack is built around — see the [module docs](self).
+///
+/// `Send` since 0.6.0: a program can move to (or be created on) any
+/// worker thread and run there while sibling programs of the same
+/// session run elsewhere — per-program state is exclusive (`&mut self`),
+/// and the shared engine is `Sync`.
 pub struct Program {
-    engine: Rc<KernelEngine>,
+    engine: Arc<KernelEngine>,
     network: NetworkModel,
-    plan: Rc<Plan>,
+    plan: Arc<Plan>,
     state: ExecState,
     runs: u64,
 }
@@ -515,7 +590,7 @@ impl Program {
     /// Global output dims (what a [`run_into`](Self::run_into) `dest`
     /// must have).
     pub fn output_dims(&self) -> Vec<usize> {
-        self.plan.spec.output.iter().map(|c| self.plan.spec.extents[c]).collect()
+        self.plan.spec.output_shape()
     }
 
     /// Unified counters: machine store + local scratch + engine scratch
@@ -572,6 +647,19 @@ mod tests {
         assert_eq!(session.cache_stats().hits, 2);
         session.compile("ij,jk->ik", &mk(10)).unwrap();
         assert_eq!(session.cache_stats().misses, 4, "evicted plan must re-plan");
+    }
+
+    #[test]
+    fn handles_are_send_and_sync() {
+        // The 0.6.0 contract: sessions are shareable across threads and
+        // programs are movable to worker threads.  Compile-time only.
+        fn is_send<T: Send>() {}
+        fn is_sync<T: Sync>() {}
+        is_send::<Session>();
+        is_sync::<Session>();
+        is_send::<Program>();
+        is_send::<KernelEngine>();
+        is_sync::<KernelEngine>();
     }
 
     #[test]

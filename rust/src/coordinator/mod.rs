@@ -18,8 +18,9 @@
 //! The execution core is `run_plan` over an `ExecState` — the
 //! persistent [`Machine`] plus the recycled local scratch table — owned
 //! by [`crate::api::Program`] (the public front door: one compiled
-//! program, one persistent state) or, for one more release, by the
-//! deprecated [`Coordinator`] wrapper.  Repeated executions of a plan
+//! program, one persistent state; the deprecated `Coordinator` wrapper
+//! was removed in 0.6.0 at the end of its one-release migration
+//! window).  Repeated executions of a plan
 //! (CP-ALS sweeps, benches) recycle every staging and redistribution
 //! destination buffer from the previous run ([`Machine::store_stats`]
 //! counters) — and, through the `*_into` kernel family, every **compute
@@ -37,7 +38,6 @@
 //!
 //! [`TensorDist`]: crate::dist::TensorDist
 
-use std::cell::RefCell;
 use std::collections::{BTreeMap, BTreeSet, HashMap};
 
 use crate::einsum::BinaryOp;
@@ -172,9 +172,11 @@ impl RunReport {
 
 /// Persistent execution state for one compiled program: the simulated
 /// [`Machine`] (rank-local stores, recycled staging/redistribution/
-/// compute-output buffers) and the [`LocalScratch`] table.  Owned by
-/// [`crate::api::Program`]; the deprecated [`Coordinator`] wraps one in
-/// a `RefCell` for its legacy `run(&self)` signature.
+/// compute-output buffers) and the [`LocalScratch`] table.  Owned
+/// exclusively by one [`crate::api::Program`] — which is what lets
+/// programs of a shared session execute on concurrent threads: all
+/// mutable run state is program-private, and the shared
+/// [`KernelEngine`] is `Sync`.
 #[derive(Default)]
 pub(crate) struct ExecState {
     pub(crate) machine: Option<Machine>,
@@ -210,10 +212,17 @@ pub(crate) fn run_plan(
     inputs: &[Tensor],
     dest: Option<&mut Tensor>,
 ) -> Result<(Option<Tensor>, RunMetrics)> {
-    let res = run_plan_inner(engine, network, state, plan, inputs, dest);
-    // Per-term overrides must not leak past the run.
-    engine.reset_config();
-    res
+    /// Drop guard: the thread-local per-term override must not leak past
+    /// the run — including when a kernel panics and a caller (the
+    /// serving worker's per-request containment) catches the unwind.
+    struct ResetConfig<'e>(&'e KernelEngine);
+    impl Drop for ResetConfig<'_> {
+        fn drop(&mut self) {
+            self.0.reset_config();
+        }
+    }
+    let _reset = ResetConfig(engine);
+    run_plan_inner(engine, network, state, plan, inputs, dest)
 }
 
 fn run_plan_inner(
@@ -786,56 +795,6 @@ fn build_reduce_slots(
     Ok(red)
 }
 
-/// Executes plans against a kernel engine (PJRT or native), holding the
-/// persistent execution state so steady-state reruns recycle every
-/// buffer.
-///
-/// Deprecated thin wrapper over the execution core for one release: the
-/// handle API ([`crate::api::Session`] / [`crate::api::Program`]) owns
-/// the same state per compiled program, adds a plan cache, and does not
-/// borrow the engine for its whole lifetime.
-pub struct Coordinator<'e> {
-    engine: &'e KernelEngine,
-    network: NetworkModel,
-    state: RefCell<ExecState>,
-}
-
-impl<'e> Coordinator<'e> {
-    #[deprecated(
-        since = "0.5.0",
-        note = "use `api::Session::compile` + `api::Program::run`: the handle API owns \
-                the persistent machine, caches plans, and unifies the stats"
-    )]
-    pub fn new(engine: &'e KernelEngine, network: NetworkModel) -> Self {
-        Coordinator { engine, network, state: RefCell::new(ExecState::default()) }
-    }
-
-    /// Buffer-recycling counters of the persistent machine (defaults
-    /// until the first run).  Steady-state invariant: `dest_allocs` and
-    /// `out_allocs` stop growing after the first execution of a plan.
-    pub fn machine_stats(&self) -> StoreStats {
-        self.state.borrow().store_stats()
-    }
-
-    /// Allocation counters of the local scratch table (Seq-kernel
-    /// intermediates, pre-reduction buffers, MTTKRP permute buffers).
-    pub fn local_scratch_stats(&self) -> LocalScratchStats {
-        self.state.borrow().local_scratch_stats()
-    }
-
-    /// Run `plan` on global input tensors (one per program operand, in
-    /// einsum order).
-    pub fn run(&self, plan: &Plan, inputs: &[Tensor]) -> Result<RunReport> {
-        let mut state = self.state.borrow_mut();
-        let (out, metrics) =
-            run_plan(self.engine, self.network, &mut state, plan, inputs, None)?;
-        Ok(RunReport::from_parts(
-            out.expect("run without dest returns an output"),
-            metrics,
-        ))
-    }
-}
-
 /// Where a Seq-local tensor id lives during a rank's execution: borrowed
 /// from the machine store (term input slot) or from a recycled scratch
 /// buffer (output of an earlier op of the same term).
@@ -1360,6 +1319,39 @@ mod tests {
             after.local_scratch.allocs, warm.local_scratch.allocs,
             "permute scratch must recycle ({warm:?} -> {after:?})"
         );
+    }
+
+    #[test]
+    fn malformed_plan_surfaces_as_typed_error_not_panic() {
+        // A fused-MTTKRP plan whose output index string is corrupted
+        // after planning: execution must return Error::MalformedPlan,
+        // not panic on an unwrap mid-run.  (Moved here from the
+        // integration suite when the deprecated Coordinator wrapper —
+        // the last public way to execute a hand-edited Plan — was
+        // removed in 0.6.0.)
+        let shapes = vec![vec![12, 10, 8], vec![10, 4], vec![8, 4]];
+        let spec = EinsumSpec::parse("ijk,ja,ka->ia", &shapes).unwrap();
+        let mut pl =
+            crate::planner::plan(&spec, 4, &PlannerConfig::default()).unwrap();
+        let last = pl.terms.len() - 1;
+        pl.terms[last].output_indices = vec!['a', 'q'];
+        let inputs: Vec<Tensor> = shapes
+            .iter()
+            .enumerate()
+            .map(|(i, s)| Tensor::random(s, 500 + i as u64))
+            .collect();
+        let engine = KernelEngine::native();
+        let mut state = ExecState::default();
+        match run_plan(&engine, NetworkModel::aries(), &mut state, &pl, &inputs, None) {
+            Err(Error::MalformedPlan { term, detail }) => {
+                assert!(!term.is_empty());
+                assert!(detail.contains('q'), "detail should name the bad index: {detail}");
+            }
+            other => panic!("want Err(MalformedPlan), got {:?}", other.err()),
+        }
+        // The error formats with its term context.
+        let e = Error::malformed_plan("term0", "boom");
+        assert_eq!(e.to_string(), "malformed plan (term term0): boom");
     }
 
     #[test]

@@ -129,6 +129,48 @@
 //! tracks the win as `coordinator_steady_state` (with `allocs_per_run`)
 //! and the plan cache as `program_compile_cached` vs `program_compile_cold`
 //! in `BENCH_hotpath.json`.
+//!
+//! ## Serving
+//!
+//! Since 0.6.0 the handles are thread-safe (`Session: Send + Sync`,
+//! `Program: Send` — the engine's config override is thread-local, its
+//! scratch pool locks per size class, and plans are shared by `Arc`), so
+//! many programs compiled from one session can run on concurrent
+//! threads with bitwise-identical results.  The [`serve`] module builds
+//! the multi-tenant layer on top: a [`Server`] with a fixed worker pool,
+//! bounded per-worker queues, key-affinity routing that **coalesces**
+//! identical `(expr, shapes)` traffic onto one warm program, and
+//! per-tenant [`ServeStats`] (queue depth, p50/p99 latency, throughput,
+//! warm-program hit rate).  A request moves its output buffer in and
+//! gets it back filled — the recycled `run_into` path — so steady-state
+//! serving performs zero tensor allocations per request:
+//!
+//! ```
+//! use std::sync::Arc;
+//! use deinsum::{ServeRequest, Server, Session, Tensor};
+//! # fn main() -> deinsum::Result<()> {
+//! let session = Session::builder().ranks(4).build()?;
+//! let server = Server::builder(session).workers(2).build();
+//! let shapes = vec![vec![12, 10, 8], vec![10, 4], vec![8, 4]];
+//! let inputs: Vec<Tensor> =
+//!     shapes.iter().enumerate().map(|(i, s)| Tensor::random(s, i as u64)).collect();
+//! let ticket = server.submit(ServeRequest {
+//!     tenant: "tenant-a".into(),
+//!     expr: "ijk,ja,ka->ia".into(),
+//!     shapes: shapes.clone(),
+//!     inputs: Arc::new(inputs),
+//!     dest: Tensor::zeros(&Server::output_dims("ijk,ja,ka->ia", &shapes)?),
+//! })?;
+//! let reply = ticket.wait()?;
+//! assert_eq!(reply.output.dims(), &[12, 4]);
+//! assert_eq!(server.tenant_stats("tenant-a").unwrap().completed, 1);
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! `cargo bench --bench hotpath` tracks serving throughput as
+//! `serve_throughput_1w` / `serve_throughput_8w`, and
+//! `examples/serving.rs` drives a closed-loop mixed MTTKRP/TTMc load.
 
 pub mod api;
 pub mod baseline;
@@ -142,6 +184,7 @@ pub mod grid;
 pub mod planner;
 pub mod redist;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod soap;
 pub mod tensor;
@@ -149,5 +192,6 @@ pub mod tensor;
 pub use api::{PlanCacheStats, Program, RunStats, Session, SessionBuilder};
 pub use coordinator::{RunMetrics, RunReport};
 pub use error::{Error, Result};
+pub use serve::{ServeReply, ServeRequest, ServeStats, Server, ServerBuilder, Ticket};
 pub use tensor::kernel::{KernelConfig, ScratchPool, ScratchStats};
 pub use tensor::Tensor;

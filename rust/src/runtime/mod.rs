@@ -26,10 +26,9 @@ pub mod pool;
 #[path = "xla_shim.rs"]
 mod xla;
 
-use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use crate::error::{Error, Result};
 use crate::planner::TermPlan;
@@ -142,13 +141,16 @@ pub struct EngineStats {
     pub compiles: u64,
 }
 
-/// PJRT engine: CPU client + lazily-compiled executable cache.
+/// PJRT engine: CPU client + lazily-compiled executable cache.  The
+/// cache and counters sit behind mutexes (`Sync`): every program of a
+/// session — including the serving layer's concurrent workers — shares
+/// one engine.
 pub struct Engine {
     client: xla::PjRtClient,
     dir: PathBuf,
     manifest: Manifest,
-    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
-    stats: RefCell<EngineStats>,
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+    stats: Mutex<EngineStats>,
 }
 
 impl Engine {
@@ -162,8 +164,8 @@ impl Engine {
             client,
             dir,
             manifest,
-            cache: RefCell::new(HashMap::new()),
-            stats: RefCell::new(EngineStats::default()),
+            cache: Mutex::new(HashMap::new()),
+            stats: Mutex::new(EngineStats::default()),
         })
     }
 
@@ -172,11 +174,11 @@ impl Engine {
     }
 
     pub fn stats(&self) -> EngineStats {
-        self.stats.borrow().clone()
+        self.stats.lock().unwrap().clone()
     }
 
     fn bump(&self, f: impl FnOnce(&mut EngineStats)) {
-        f(&mut self.stats.borrow_mut());
+        f(&mut self.stats.lock().unwrap());
     }
 
     /// Find a variant by name.
@@ -184,10 +186,12 @@ impl Engine {
         self.manifest.variants.iter().find(|v| v.name == name)
     }
 
-    fn executable(&self, v: &Variant) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.cache.borrow().get(&v.name) {
+    fn executable(&self, v: &Variant) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(&v.name) {
             return Ok(e.clone());
         }
+        // Compile outside the lock (it can be slow); a concurrent racer
+        // compiling the same variant just wins the insert below.
         let path = self.dir.join(&v.file);
         let proto = xla::HloModuleProto::from_text_file(&path)
             .map_err(|e| Error::runtime(format!("parse {}: {e}", path.display())))?;
@@ -197,8 +201,14 @@ impl Engine {
             .compile(&comp)
             .map_err(|e| Error::runtime(format!("compile {}: {e}", v.name)))?;
         self.bump(|s| s.compiles += 1);
-        let exe = Rc::new(exe);
-        self.cache.borrow_mut().insert(v.name.clone(), exe.clone());
+        let exe = Arc::new(exe);
+        let exe = self
+            .cache
+            .lock()
+            .unwrap()
+            .entry(v.name.clone())
+            .or_insert(exe)
+            .clone();
         Ok(exe)
     }
 
@@ -263,6 +273,31 @@ pub enum Backend {
     Pjrt,
 }
 
+std::thread_local! {
+    /// The calling thread's per-term kernel-config overrides, keyed by
+    /// the identity of the engine each was set through.  Storing the
+    /// overrides in TLS (instead of a `Cell` on the engine) is what
+    /// makes [`KernelEngine`] `Sync`: concurrent programs sharing one
+    /// engine — the serving layer's worker pool — each retarget the
+    /// blocking for *their* current term without clobbering each other's
+    /// dispatch.  Keying by engine id keeps multiple engines on ONE
+    /// thread fully independent (a deinsum and a baseline session
+    /// compared side by side): setting or resetting through engine A
+    /// never changes what engine B dispatches with.  The map is a tiny
+    /// linear-scan vec — a thread touches a handful of engines at most.
+    /// The run loop sets an entry before each term and removes it
+    /// through a drop guard after every run (even on error or a caught
+    /// kernel panic), so overrides never leak across runs on a thread.
+    static TERM_CONFIG: std::cell::RefCell<Vec<(u64, KernelConfig)>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
+/// Process-unique engine identity for the TLS override tag.
+fn next_engine_id() -> u64 {
+    static NEXT: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    NEXT.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+}
+
 /// The local-kernel dispatcher the coordinator calls on the hot path.
 /// Carries the compute-engine handles the native kernels need: a
 /// [`KernelConfig`] (cache blocks + thread count, possibly SOAP-derived)
@@ -270,10 +305,12 @@ pub enum Backend {
 /// steady-state local compute performs zero packing/fold allocations.
 ///
 /// The active config is split in two: a `base_config` (the engine's
-/// installed blocks + thread count) and the `config` actually dispatched
+/// installed blocks + thread count) and the config actually dispatched
 /// with, which the coordinator retargets per term from that term's
 /// SOAP-derived tile sizes ([`KernelEngine::configure_for_term`]) and
-/// restores after the run ([`KernelEngine::reset_config`]).
+/// restores after the run ([`KernelEngine::reset_config`]).  The
+/// override lives in thread-local state, so the engine is `Send + Sync`
+/// and concurrently-running programs cannot cross-configure each other.
 pub struct KernelEngine {
     engine: Option<Engine>,
     backend: Backend,
@@ -282,10 +319,24 @@ pub struct KernelEngine {
     max_pad_ratio: f64,
     /// Installed blocking/threading knobs (per-term derivation base).
     base_config: KernelConfig,
-    /// The active knobs (base, or a per-term SOAP-derived override).
-    config: Cell<KernelConfig>,
+    /// Identity tag for this engine's thread-local overrides.
+    engine_id: u64,
     /// Packing + fold scratch, reused across steps.
     scratch: ScratchPool,
+}
+
+impl Drop for KernelEngine {
+    fn drop(&mut self) {
+        // Purge this thread's TLS override entry so engine churn on a
+        // long-lived thread (build session → configure → drop, repeated)
+        // cannot grow the per-thread map without bound.  Entries left on
+        // *other* threads are unreachable from here but inert forever —
+        // ids are never reused — and threads that executed a program
+        // already cleared theirs via run_plan's drop guard.  `try_with`:
+        // never panic if the TLS is already torn down.
+        let id = self.engine_id;
+        let _ = TERM_CONFIG.try_with(|c| c.borrow_mut().retain(|(eid, _)| *eid != id));
+    }
 }
 
 impl KernelEngine {
@@ -302,7 +353,7 @@ impl KernelEngine {
             backend: Backend::Native,
             max_pad_ratio: 1.0,
             base_config: config,
-            config: Cell::new(config),
+            engine_id: next_engine_id(),
             scratch: ScratchPool::new(),
         }
     }
@@ -316,7 +367,7 @@ impl KernelEngine {
             backend: Backend::Pjrt,
             max_pad_ratio: 1.7,
             base_config: config,
-            config: Cell::new(config),
+            engine_id: next_engine_id(),
             scratch: ScratchPool::new(),
         })
     }
@@ -326,9 +377,15 @@ impl KernelEngine {
     }
 
     /// The native-kernel configuration this engine currently dispatches
-    /// with (the base config, or a per-term override).
+    /// with on the *calling thread* (the base config, or the thread's
+    /// per-term override — if that override was set through *this*
+    /// engine; another engine's override on the same thread is ignored).
     pub fn config(&self) -> KernelConfig {
-        self.config.get()
+        TERM_CONFIG
+            .with(|c| {
+                c.borrow().iter().find(|(id, _)| *id == self.engine_id).map(|(_, cfg)| *cfg)
+            })
+            .unwrap_or(self.base_config)
     }
 
     /// The installed base configuration per-term overrides derive from.
@@ -338,24 +395,35 @@ impl KernelEngine {
 
     /// Replace the base kernel configuration (e.g. with SOAP-derived
     /// tiles via [`KernelConfig::from_tiles`]); also resets any per-term
-    /// override.
+    /// override on this thread.
     pub fn set_config(&mut self, config: KernelConfig) {
         self.base_config = config.normalized();
-        self.config.set(self.base_config);
+        self.reset_config();
     }
 
     /// Retarget the native kernels to `term`'s SOAP-derived tile sizes
     /// ([`TermPlan::kernel_config`]).  The coordinator calls this before
     /// each term's local compute so every term runs with the cache
     /// blocking its I/O analysis assumed; benches use it to measure the
-    /// same feed without reimplementing the derivation.
+    /// same feed without reimplementing the derivation.  The override is
+    /// thread-local: it only affects ops this thread dispatches, so
+    /// concurrent programs on other threads keep their own blocking.
     pub fn configure_for_term(&self, term: &TermPlan) {
-        self.config.set(term.kernel_config(self.base_config));
+        let cfg = term.kernel_config(self.base_config);
+        TERM_CONFIG.with(|c| {
+            let mut map = c.borrow_mut();
+            match map.iter_mut().find(|(id, _)| *id == self.engine_id) {
+                Some(entry) => entry.1 = cfg,
+                None => map.push((self.engine_id, cfg)),
+            }
+        });
     }
 
-    /// Drop any per-term override and dispatch with the base config.
+    /// Drop this thread's per-term override *for this engine* and
+    /// dispatch with the base config (other engines' overrides on the
+    /// thread are untouched).
     pub fn reset_config(&self) {
-        self.config.set(self.base_config);
+        TERM_CONFIG.with(|c| c.borrow_mut().retain(|(id, _)| *id != self.engine_id));
     }
 
     /// Scratch-pool counters (steady-state invariant: `allocs` flat).
@@ -452,7 +520,7 @@ impl KernelEngine {
                 engine.bump(|s| s.native += 1);
             }
         }
-        contract::gemm_with(&self.config.get(), &self.scratch, a, b)
+        contract::gemm_with(&self.config(), &self.scratch, a, b)
     }
 
     /// The PJRT dispatch attempt for a fused MTTKRP: `Some(result)` when
@@ -514,7 +582,7 @@ impl KernelEngine {
         if let Some(res) = self.mttkrp_pjrt(x, factors, mode) {
             return res;
         }
-        contract::mttkrp_with(&self.config.get(), &self.scratch, x, factors, mode)
+        contract::mttkrp_with(&self.config(), &self.scratch, x, factors, mode)
     }
 
     /// [`mttkrp`](Self::mttkrp) writing through a caller-provided
@@ -533,7 +601,7 @@ impl KernelEngine {
         if let Some(res) = self.mttkrp_pjrt(x, factors, mode) {
             return dest.copy_from(&res?);
         }
-        contract::mttkrp_with_into(&self.config.get(), &self.scratch, x, factors, mode, dest)
+        contract::mttkrp_with_into(&self.config(), &self.scratch, x, factors, mode, dest)
     }
 
     /// General binary einsum on the local tiles (the `Seq` kernel's
@@ -553,7 +621,7 @@ impl KernelEngine {
         if let Some(engine) = self.engine.as_ref() {
             engine.bump(|s| s.native += 1);
         }
-        contract::einsum2_with(&self.config.get(), &self.scratch, x, x_idx, y, y_idx, out_idx)
+        contract::einsum2_with(&self.config(), &self.scratch, x, x_idx, y, y_idx, out_idx)
     }
 
     /// [`einsum2`](Self::einsum2) writing through a caller-provided
@@ -574,7 +642,7 @@ impl KernelEngine {
             engine.bump(|s| s.native += 1);
         }
         contract::einsum2_into_with(
-            &self.config.get(),
+            &self.config(),
             &self.scratch,
             x,
             x_idx,
@@ -714,6 +782,37 @@ mod tests {
         assert_eq!(e.config().threads, 3, "thread count comes from the base config");
         e.reset_config();
         assert_eq!(e.config(), base);
+    }
+
+    #[test]
+    fn per_term_override_is_private_to_one_engine() {
+        use crate::einsum::EinsumSpec;
+        use crate::planner::{plan, PlannerConfig};
+        // Two engines on one thread (deinsum vs baseline comparisons do
+        // exactly this): an override set through A must not change what
+        // B dispatches with.
+        let spec =
+            EinsumSpec::parse("ij,jk->ik", &[vec![4096, 4096], vec![4096, 4096]]).unwrap();
+        let p = plan(&spec, 8, &PlannerConfig::default()).unwrap();
+        let a = KernelEngine::native_with(KernelConfig::default().with_threads(2));
+        let b = KernelEngine::native_with(
+            KernelConfig { mc: 64, kc: 64, nc: 64, threads: 1 }.normalized(),
+        );
+        a.configure_for_term(&p.terms[0]);
+        assert_eq!(a.config(), p.terms[0].kernel_config(a.base_config()));
+        assert_eq!(b.config(), b.base_config(), "B must ignore A's override");
+        // B setting and resetting (what run_plan's drop guard does) must
+        // not wipe A's pending override.
+        b.configure_for_term(&p.terms[0]);
+        b.reset_config();
+        assert_eq!(b.config(), b.base_config());
+        assert_eq!(
+            a.config(),
+            p.terms[0].kernel_config(a.base_config()),
+            "A's override must survive B's set/reset cycle"
+        );
+        a.reset_config();
+        assert_eq!(a.config(), a.base_config());
     }
 
     #[test]

@@ -23,6 +23,12 @@
 //! - **Caller participation.**  The submitting thread is always
 //!   participant 0 and can finish the whole job alone by stealing, so
 //!   nested `run` calls from inside a worker can never deadlock.
+//! - **Multiple submitters.**  Any number of threads can submit jobs
+//!   concurrently (the serving layer's workers all dispatch through this
+//!   one pool): jobs coexist in the published list, every submitter
+//!   drives its own job to completion, and idle workers join the job
+//!   with the *fewest* participants so concurrent regions share the
+//!   worker set instead of queueing behind the oldest job.
 //! - **Panic containment.**  A panicking task is caught, counted
 //!   finished, and re-raised from the submitter after the job drains
 //!   (the `thread::scope` semantics kernels had before); workers
@@ -347,8 +353,16 @@ fn worker_loop(shared: Arc<Shared>) {
             let mut st = shared.state.lock().unwrap();
             loop {
                 st.jobs.retain(|j| j.has_claimable());
-                if let Some(j) =
-                    st.jobs.iter().find(|j| j.joiners.load(Ordering::Relaxed) < j.n_slots)
+                // Fairness across concurrent submitters: join the job
+                // with the fewest participants so far, not the oldest
+                // one — with several serving threads submitting regions
+                // at once, first-come ordering would pile every worker
+                // onto one submitter's job while the others run alone.
+                if let Some(j) = st
+                    .jobs
+                    .iter()
+                    .filter(|j| j.joiners.load(Ordering::Relaxed) < j.n_slots)
+                    .min_by_key(|j| j.joiners.load(Ordering::Relaxed))
                 {
                     break j.clone();
                 }
@@ -491,6 +505,39 @@ mod tests {
             total.fetch_add(inner.load(Ordering::Relaxed), Ordering::Relaxed);
         });
         assert_eq!(total.load(Ordering::Relaxed), 8 * 36);
+    }
+
+    #[test]
+    fn concurrent_submitters_share_the_pool_without_serializing() {
+        // The serving layer's dispatch shape: several OS threads submit
+        // parallel regions to one pool concurrently.  Every region must
+        // complete with exact task accounting — a submitter can always
+        // finish its own job alone, so this cannot deadlock even when
+        // the workers are all busy elsewhere.
+        let pool = WorkerPool::new();
+        let totals: Vec<AtomicU64> = (0..6).map(|_| AtomicU64::new(0)).collect();
+        std::thread::scope(|s| {
+            for (sub, total) in totals.iter().enumerate() {
+                let pool = &pool;
+                s.spawn(move || {
+                    for _ in 0..8 {
+                        pool.run(3, 40, &|t| {
+                            total.fetch_add(t as u64 + sub as u64, Ordering::Relaxed);
+                        });
+                    }
+                });
+            }
+        });
+        let tasks_per_region: u64 = (0..40).sum();
+        for (sub, total) in totals.iter().enumerate() {
+            assert_eq!(
+                total.load(Ordering::Relaxed),
+                8 * (tasks_per_region + 40 * sub as u64),
+                "submitter {sub} lost tasks"
+            );
+        }
+        let s = pool.stats();
+        assert_eq!(s.tasks, 6 * 8 * 40, "every task ran exactly once");
     }
 
     #[test]

@@ -1,0 +1,972 @@
+//! Multi-tenant serving layer over [`Session`]: a fixed worker pool
+//! executing compiled [`Program`]s concurrently against one shared
+//! engine.
+//!
+//! The paper's compile-once/run-many shape (§II) is exactly what a
+//! serving workload wants: a distributed schedule is compiled into a
+//! cacheable [`crate::planner::Plan`], and the marginal cost of a query
+//! is one warm `run_into` — zero planning, zero tensor allocations.  DISTAL and
+//! EinDecomp make the same observation from the scheduling side: once
+//! the schedule is a *value*, the win is running many of them
+//! concurrently against shared local-compute machinery.  This module is
+//! that layer:
+//!
+//! - a [`Server`] owns an `Arc<Session>` and a fixed pool of worker
+//!   threads (one queue each, created at [`ServerBuilder::build`] and
+//!   joined on drop);
+//! - requests are **routed by program key** — the `(expr, shapes)` pair
+//!   — so every request for one compiled program lands on the same
+//!   worker and reuses that worker's warm [`Program`] (persistent
+//!   machine, recycled buffers: steady-state requests perform zero
+//!   tensor allocations, counter-asserted in `tests/serving.rs`);
+//! - queued requests with the *same* key are **coalesced**: the worker
+//!   pops the head of its queue plus every same-key request behind it
+//!   (up to [`COALESCE_MAX`]) and serves them back-to-back on the warm
+//!   program, amortizing per-program staging and term configuration;
+//! - each worker's queue is **bounded** ([`ServerBuilder::queue_capacity`]):
+//!   a full queue blocks [`Server::submit`] until the worker drains —
+//!   natural backpressure instead of unbounded memory growth;
+//! - per-tenant [`ServeStats`] track queue depth, p50/p99 latency,
+//!   throughput, and the warm-program cache hit rate.
+//!
+//! Clients submit a [`ServeRequest`] (inputs shared by `Arc`, output
+//! destination moved in and returned through the [`Ticket`] — the
+//! recycled-output `run_into` path end to end) and wait on the ticket:
+//!
+//! ```
+//! use std::sync::Arc;
+//! use deinsum::{ServeRequest, Server, Session, Tensor};
+//! # fn main() -> deinsum::Result<()> {
+//! let session = Session::builder().ranks(4).build()?;
+//! let server = Server::builder(session).workers(2).build();
+//! let shapes = vec![vec![8, 6], vec![6, 4]];
+//! let ticket = server.submit(ServeRequest {
+//!     tenant: "docs".into(),
+//!     expr: "ij,jk->ik".into(),
+//!     shapes: shapes.clone(),
+//!     inputs: Arc::new(vec![Tensor::random(&[8, 6], 1), Tensor::random(&[6, 4], 2)]),
+//!     dest: Tensor::zeros(&Server::output_dims("ij,jk->ik", &shapes)?),
+//! })?;
+//! let reply = ticket.wait()?;
+//! assert_eq!(reply.output.dims(), &[8, 4]);
+//! # Ok(())
+//! # }
+//! ```
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::{HashMap, VecDeque};
+use std::hash::{Hash, Hasher};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use crate::api::{Program, Session};
+use crate::coordinator::RunMetrics;
+use crate::einsum::EinsumSpec;
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+
+/// Maximum requests a worker serves back-to-back from one queue pop
+/// (the coalescing window).  Bounds the latency a late same-key arrival
+/// can add to requests of *other* keys queued behind it.
+pub const COALESCE_MAX: usize = 16;
+
+/// Latency samples retained per tenant for the p50/p99 estimates (a
+/// sliding window, so long-running servers report recent behavior).
+const LATENCY_WINDOW: usize = 1024;
+
+/// What identifies a compiled program for routing and coalescing: the
+/// einsum expression and the operand shapes (rank count and planner
+/// knobs are session-wide).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct ProgramKey {
+    expr: String,
+    shapes: Vec<Vec<usize>>,
+}
+
+impl ProgramKey {
+    /// Stable routing hash (`DefaultHasher::new` is keyed with fixed
+    /// constants, so the key→worker map is deterministic).
+    fn route(&self, workers: usize) -> usize {
+        let mut h = DefaultHasher::new();
+        self.hash(&mut h);
+        (h.finish() % workers as u64) as usize
+    }
+}
+
+/// One unit of traffic: which tenant is asking, what program to run
+/// (expression + operand shapes, compiled on first use and cached), the
+/// input tensors (shared — a closed-loop client reuses one `Arc` across
+/// requests), and the output destination (moved in, filled by
+/// `run_into`, returned through the ticket — the fully recycled path).
+pub struct ServeRequest {
+    /// Tenant name for per-tenant accounting ([`Server::tenant_stats`]).
+    pub tenant: String,
+    /// Einsum expression, e.g. `"ijk,ja,ka->ia"`.
+    pub expr: String,
+    /// Global operand shapes (one per einsum operand, in order).
+    pub shapes: Vec<Vec<usize>>,
+    /// Global input tensors matching `shapes`.
+    pub inputs: Arc<Vec<Tensor>>,
+    /// Output destination; dims must equal
+    /// [`Server::output_dims`]`(expr, shapes)` (checked at submit).
+    pub dest: Tensor,
+}
+
+/// A served request's result: the filled output destination (the same
+/// buffer submitted as [`ServeRequest::dest`]), the run's
+/// time/communication accounting, and the end-to-end latency.
+#[derive(Debug)]
+pub struct ServeReply {
+    /// The output tensor (the request's recycled `dest`, now filled).
+    pub output: Tensor,
+    /// Simulated time + exact communication volumes of the run.
+    pub metrics: RunMetrics,
+    /// Submit-to-completion wall-clock seconds (queueing included).
+    pub latency_s: f64,
+}
+
+/// Per-tenant (or server-wide) serving counters.  Latency percentiles
+/// are computed over a sliding window of the most recent 1024
+/// completions (`LATENCY_WINDOW`).
+#[derive(Debug, Clone, Default)]
+pub struct ServeStats {
+    /// Requests accepted by [`Server::submit`].
+    pub submitted: u64,
+    /// Requests completed successfully.
+    pub completed: u64,
+    /// Requests that finished with an error (delivered via the ticket).
+    pub errors: u64,
+    /// Accepted but not yet finished (queued or executing).
+    pub in_flight: u64,
+    /// Requests currently sitting in worker queues (server-wide stats
+    /// only; per-tenant stats report `in_flight` here).
+    pub queue_depth: usize,
+    /// Requests served as part of a same-key batch behind a leader
+    /// (each coalesced batch of `n` counts `n - 1`).
+    pub coalesced: u64,
+    /// Requests that found their program warm on the owning worker.
+    pub program_hits: u64,
+    /// Requests that had to construct (compile or re-instantiate) a
+    /// program first.
+    pub program_misses: u64,
+    /// Median submit-to-completion latency, seconds.
+    pub p50_latency_s: f64,
+    /// 99th-percentile latency, seconds.
+    pub p99_latency_s: f64,
+    /// Completions per second between the first submit and the latest
+    /// completion.
+    pub throughput_rps: f64,
+    /// Whole-tensor allocations performed serving these requests (store
+    /// destinations + compute outputs + local scratch; engine packing
+    /// scratch is session-wide and excluded).  Flat in steady state.
+    pub tensor_allocs: u64,
+    /// Whole-tensor recycles serving these requests.
+    pub tensor_reuses: u64,
+}
+
+impl ServeStats {
+    /// Warm-program cache hit rate in `[0, 1]` (1.0 when no requests).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.program_hits + self.program_misses;
+        if total == 0 {
+            return 1.0;
+        }
+        self.program_hits as f64 / total as f64
+    }
+}
+
+/// Per-tenant accumulator behind the stats mutex.
+#[derive(Default)]
+struct Acc {
+    submitted: u64,
+    completed: u64,
+    errors: u64,
+    coalesced: u64,
+    program_hits: u64,
+    program_misses: u64,
+    tensor_allocs: u64,
+    tensor_reuses: u64,
+    latencies: VecDeque<f64>,
+    first_submit: Option<Instant>,
+    last_done: Option<Instant>,
+}
+
+impl Acc {
+    fn note_submit(&mut self, now: Instant) {
+        self.submitted += 1;
+        self.first_submit.get_or_insert(now);
+    }
+
+    fn note_done(&mut self, latency_s: f64, ok: bool, now: Instant) {
+        if ok {
+            self.completed += 1;
+        } else {
+            self.errors += 1;
+        }
+        if self.latencies.len() >= LATENCY_WINDOW {
+            self.latencies.pop_front();
+        }
+        self.latencies.push_back(latency_s);
+        self.last_done = Some(now);
+    }
+
+    /// Cheap copy taken *under* the stats lock; the percentile sort runs
+    /// on the copy after release ([`Frozen::finish`]) so a monitoring
+    /// poll never stalls the submit/complete path behind an O(n log n)
+    /// sort.
+    fn freeze(&self) -> Frozen {
+        Frozen {
+            submitted: self.submitted,
+            completed: self.completed,
+            errors: self.errors,
+            coalesced: self.coalesced,
+            program_hits: self.program_hits,
+            program_misses: self.program_misses,
+            tensor_allocs: self.tensor_allocs,
+            tensor_reuses: self.tensor_reuses,
+            latencies: self.latencies.iter().copied().collect(),
+            first_submit: self.first_submit,
+            last_done: self.last_done,
+        }
+    }
+}
+
+/// Lock-free continuation of [`Acc::freeze`].
+struct Frozen {
+    submitted: u64,
+    completed: u64,
+    errors: u64,
+    coalesced: u64,
+    program_hits: u64,
+    program_misses: u64,
+    tensor_allocs: u64,
+    tensor_reuses: u64,
+    latencies: Vec<f64>,
+    first_submit: Option<Instant>,
+    last_done: Option<Instant>,
+}
+
+impl Frozen {
+    fn finish(mut self, queue_depth: usize) -> ServeStats {
+        self.latencies.sort_by(f64::total_cmp);
+        let pct = |q: f64| -> f64 {
+            if self.latencies.is_empty() {
+                return 0.0;
+            }
+            let idx = ((self.latencies.len() - 1) as f64 * q).round() as usize;
+            self.latencies[idx.min(self.latencies.len() - 1)]
+        };
+        let throughput = match (self.first_submit, self.last_done) {
+            (Some(t0), Some(t1)) if self.completed > 0 => {
+                self.completed as f64 / t1.duration_since(t0).as_secs_f64().max(1e-9)
+            }
+            _ => 0.0,
+        };
+        ServeStats {
+            submitted: self.submitted,
+            completed: self.completed,
+            errors: self.errors,
+            in_flight: self.submitted.saturating_sub(self.completed + self.errors),
+            queue_depth,
+            coalesced: self.coalesced,
+            program_hits: self.program_hits,
+            program_misses: self.program_misses,
+            p50_latency_s: pct(0.50),
+            p99_latency_s: pct(0.99),
+            throughput_rps: throughput,
+            tensor_allocs: self.tensor_allocs,
+            tensor_reuses: self.tensor_reuses,
+        }
+    }
+}
+
+#[derive(Default)]
+struct StatsInner {
+    totals: Acc,
+    tenants: HashMap<String, Acc>,
+}
+
+/// One queued request (internal).
+struct Request {
+    key: ProgramKey,
+    tenant: String,
+    inputs: Arc<Vec<Tensor>>,
+    dest: Tensor,
+    reply: ReplyGuard,
+    submitted: Instant,
+}
+
+/// Completion slot a [`Ticket`] waits on.
+struct ReplySlot {
+    result: Mutex<Option<Result<ServeReply>>>,
+    cv: Condvar,
+}
+
+impl ReplySlot {
+    fn new() -> Arc<Self> {
+        Arc::new(ReplySlot { result: Mutex::new(None), cv: Condvar::new() })
+    }
+
+    fn fulfill(&self, r: Result<ServeReply>) {
+        let mut slot = self.result.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(r);
+            self.cv.notify_all();
+        }
+    }
+}
+
+/// The worker-side handle on a reply slot.  Dropping it *unfulfilled* —
+/// a worker thread dying outside the per-request panic containment, or
+/// queued requests being torn down — delivers an error instead of
+/// leaving [`Ticket::wait`] blocked forever: every accepted ticket
+/// resolves, one way or the other.
+struct ReplyGuard {
+    slot: Arc<ReplySlot>,
+}
+
+impl ReplyGuard {
+    fn fulfill(&self, r: Result<ServeReply>) {
+        self.slot.fulfill(r);
+    }
+}
+
+impl Drop for ReplyGuard {
+    fn drop(&mut self) {
+        // Poison-tolerant: this can run while unwinding from a panic
+        // elsewhere; never double-panic out of a destructor.
+        if let Ok(mut slot) = self.slot.result.lock() {
+            if slot.is_none() {
+                *slot = Some(Err(Error::runtime(
+                    "request dropped unserved (worker died or server torn down)",
+                )));
+                self.slot.cv.notify_all();
+            }
+        }
+    }
+}
+
+/// Handle to one in-flight request; [`Ticket::wait`] blocks until the
+/// serving worker fulfills it (success or typed error).
+pub struct Ticket {
+    slot: Arc<ReplySlot>,
+}
+
+impl Ticket {
+    /// Block until the request finishes and take its result.
+    pub fn wait(self) -> Result<ServeReply> {
+        let mut r = self.slot.result.lock().unwrap();
+        loop {
+            if let Some(res) = r.take() {
+                return res;
+            }
+            r = self.slot.cv.wait(r).unwrap();
+        }
+    }
+
+    /// Non-blocking poll: `true` once the result is ready.
+    pub fn is_ready(&self) -> bool {
+        self.slot.result.lock().unwrap().is_some()
+    }
+}
+
+/// One worker's bounded queue.
+struct WorkQueue {
+    state: Mutex<QueueState>,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+#[derive(Default)]
+struct QueueState {
+    queue: VecDeque<Request>,
+    closed: bool,
+}
+
+/// Bound on the memoized output-dims table (distinct program keys seen
+/// at submit); an overflow clears the table rather than growing without
+/// limit under adversarial unique-key traffic.
+const DIMS_CACHE_CAP: usize = 1024;
+
+struct Shared {
+    session: Arc<Session>,
+    queues: Vec<WorkQueue>,
+    capacity: usize,
+    programs_per_worker: usize,
+    stats: Mutex<StatsInner>,
+    /// Memoized `output_dims` per program key: submit validates the
+    /// destination without re-parsing the expression on every request.
+    dims_cache: Mutex<HashMap<ProgramKey, Vec<usize>>>,
+}
+
+impl Shared {
+    /// Pop the next batch for worker `w`: the queue head plus every
+    /// same-key request behind it (up to [`COALESCE_MAX`]).  `None` on
+    /// shutdown with an empty queue — workers drain before exiting, so
+    /// every accepted ticket is fulfilled.
+    fn pop_batch(&self, w: usize) -> Option<Vec<Request>> {
+        let q = &self.queues[w];
+        let mut st = q.state.lock().unwrap();
+        loop {
+            if let Some(leader) = st.queue.pop_front() {
+                let key = leader.key.clone();
+                let mut batch = vec![leader];
+                let mut i = 0;
+                while i < st.queue.len() && batch.len() < COALESCE_MAX {
+                    if st.queue[i].key == key {
+                        let req = st.queue.remove(i).expect("index checked");
+                        batch.push(req);
+                    } else {
+                        i += 1;
+                    }
+                }
+                q.not_full.notify_all();
+                return Some(batch);
+            }
+            if st.closed {
+                return None;
+            }
+            st = q.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Record a completion under both the tenant and the totals.
+    fn note_done(
+        &self,
+        tenant: &str,
+        latency_s: f64,
+        ok: bool,
+        hit: bool,
+        coalesced: bool,
+        allocs: u64,
+        reuses: u64,
+    ) {
+        let now = Instant::now();
+        let mut stats = self.stats.lock().unwrap();
+        let inner = &mut *stats;
+        // Allocate the owned tenant key only on first contact; the
+        // steady-state completion path stays allocation-free.
+        if !inner.tenants.contains_key(tenant) {
+            inner.tenants.insert(tenant.to_string(), Acc::default());
+        }
+        let tenant_acc = inner.tenants.get_mut(tenant).expect("inserted above");
+        for acc in [&mut inner.totals, tenant_acc] {
+            acc.note_done(latency_s, ok, now);
+            if hit {
+                acc.program_hits += 1;
+            } else {
+                acc.program_misses += 1;
+            }
+            if coalesced {
+                acc.coalesced += 1;
+            }
+            acc.tensor_allocs += allocs;
+            acc.tensor_reuses += reuses;
+        }
+    }
+
+    fn queue_depth(&self) -> usize {
+        self.queues.iter().map(|q| q.state.lock().unwrap().queue.len()).sum()
+    }
+
+    /// [`Server::output_dims`] memoized by program key — steady-state
+    /// submits skip the einsum re-parse entirely.
+    fn output_dims_cached(&self, key: &ProgramKey) -> Result<Vec<usize>> {
+        if let Some(dims) = self.dims_cache.lock().unwrap().get(key) {
+            return Ok(dims.clone());
+        }
+        let dims = Server::output_dims(&key.expr, &key.shapes)?;
+        let mut cache = self.dims_cache.lock().unwrap();
+        if cache.len() >= DIMS_CACHE_CAP {
+            cache.clear();
+        }
+        cache.insert(key.clone(), dims.clone());
+        Ok(dims)
+    }
+}
+
+/// A warm compiled program held by one worker, with the last-seen
+/// [`crate::api::RunStats::tensor_allocs`] /
+/// [`crate::api::RunStats::tensor_reuses`] counters so each request's
+/// allocation delta can be attributed (engine packing scratch is
+/// deliberately excluded there: that pool is shared session-wide, so
+/// its high-water mark can move when *another* program first runs a
+/// larger shape — per-request accounting would misattribute it).
+struct WarmProgram {
+    program: Program,
+    allocs_seen: u64,
+    reuses_seen: u64,
+}
+
+/// Configures and builds a [`Server`].
+pub struct ServerBuilder {
+    session: Arc<Session>,
+    workers: usize,
+    queue_capacity: usize,
+    programs_per_worker: usize,
+}
+
+impl ServerBuilder {
+    /// Number of worker threads (default 4, minimum 1).  Requests are
+    /// routed to workers by program key, so distinct programs execute
+    /// concurrently while same-program traffic stays on one warm state.
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = n.max(1);
+        self
+    }
+
+    /// Bound of each worker's submission queue (default 64, minimum 1);
+    /// a full queue blocks `submit` until the worker drains.
+    pub fn queue_capacity(mut self, n: usize) -> Self {
+        self.queue_capacity = n.max(1);
+        self
+    }
+
+    /// Warm programs kept per worker before the least recently used is
+    /// dropped (default 32, minimum 1).  Evicting a program frees its
+    /// persistent machine and scratch; its *plan* stays in the session
+    /// cache, so re-instantiating is cheap.
+    pub fn programs_per_worker(mut self, n: usize) -> Self {
+        self.programs_per_worker = n.max(1);
+        self
+    }
+
+    /// Spawn the worker pool and start serving.
+    pub fn build(self) -> Server {
+        let workers = self.workers;
+        let shared = Arc::new(Shared {
+            session: self.session,
+            queues: (0..workers)
+                .map(|_| WorkQueue {
+                    state: Mutex::new(QueueState::default()),
+                    not_empty: Condvar::new(),
+                    not_full: Condvar::new(),
+                })
+                .collect(),
+            capacity: self.queue_capacity,
+            programs_per_worker: self.programs_per_worker,
+            stats: Mutex::new(StatsInner::default()),
+            dims_cache: Mutex::new(HashMap::new()),
+        });
+        let handles = (0..workers)
+            .map(|w| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("deinsum-serve-{w}"))
+                    .spawn(move || worker_loop(shared, w))
+                    .expect("spawn serve worker")
+            })
+            .collect();
+        Server { shared, handles }
+    }
+}
+
+/// The multi-tenant serving front: a fixed worker pool over one shared
+/// [`Session`].  See the [module docs](self).
+///
+/// Dropping the server closes every queue, drains outstanding requests
+/// (all accepted tickets are fulfilled), and joins the workers.
+pub struct Server {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start configuring a server over `session` (an owned [`Session`]
+    /// or an existing `Arc<Session>` — the session stays usable for
+    /// direct compiles alongside the server).
+    pub fn builder(session: impl Into<Arc<Session>>) -> ServerBuilder {
+        ServerBuilder {
+            session: session.into(),
+            workers: 4,
+            queue_capacity: 64,
+            programs_per_worker: 32,
+        }
+    }
+
+    /// Global output dims of `expr` over `shapes` — what a
+    /// [`ServeRequest::dest`] must be allocated as.
+    pub fn output_dims(expr: &str, shapes: &[Vec<usize>]) -> Result<Vec<usize>> {
+        Ok(EinsumSpec::parse(expr, shapes)?.output_shape())
+    }
+
+    /// Enqueue a request on the worker owning its `(expr, shapes)` key.
+    /// Validates the expression and destination dims up front (typed
+    /// error now rather than through the ticket), then blocks only while
+    /// that worker's queue is at capacity.  Execution errors are
+    /// delivered through the returned [`Ticket`].
+    pub fn submit(&self, req: ServeRequest) -> Result<Ticket> {
+        let key = ProgramKey { expr: req.expr, shapes: req.shapes };
+        // Validation is memoized by key: the first submit of a key pays
+        // one parse; steady-state submits only compare dims.
+        let want = self.shared.output_dims_cached(&key)?;
+        if req.dest.dims() != want {
+            return Err(Error::shape(format!(
+                "submit: dest dims {:?} != output dims {want:?} of {}",
+                req.dest.dims(),
+                key.expr
+            )));
+        }
+        let w = key.route(self.shared.queues.len());
+        let slot = ReplySlot::new();
+        let request = Request {
+            key,
+            tenant: req.tenant,
+            inputs: req.inputs,
+            dest: req.dest,
+            reply: ReplyGuard { slot: Arc::clone(&slot) },
+            submitted: Instant::now(),
+        };
+        {
+            let q = &self.shared.queues[w];
+            let mut st = q.state.lock().unwrap();
+            while st.queue.len() >= self.shared.capacity && !st.closed {
+                st = q.not_full.wait(st).unwrap();
+            }
+            if st.closed {
+                return Err(Error::runtime("server is shut down"));
+            }
+            {
+                let now = Instant::now();
+                let mut stats = self.shared.stats.lock().unwrap();
+                stats.totals.note_submit(now);
+                // Clone the tenant name only for a first-ever submit.
+                match stats.tenants.get_mut(&request.tenant) {
+                    Some(acc) => acc.note_submit(now),
+                    None => {
+                        let mut acc = Acc::default();
+                        acc.note_submit(now);
+                        stats.tenants.insert(request.tenant.clone(), acc);
+                    }
+                }
+            }
+            st.queue.push_back(request);
+            q.not_empty.notify_all();
+        }
+        Ok(Ticket { slot })
+    }
+
+    /// Server-wide counters (latency window spans all tenants).
+    pub fn stats(&self) -> ServeStats {
+        let depth = self.shared.queue_depth();
+        let frozen = self.shared.stats.lock().unwrap().totals.freeze();
+        frozen.finish(depth)
+    }
+
+    /// One tenant's counters (`queue_depth` reports the tenant's
+    /// in-flight count), or `None` if the tenant never submitted.
+    pub fn tenant_stats(&self, tenant: &str) -> Option<ServeStats> {
+        let frozen =
+            self.shared.stats.lock().unwrap().tenants.get(tenant).map(Acc::freeze)?;
+        let in_flight = frozen.submitted.saturating_sub(frozen.completed + frozen.errors);
+        Some(frozen.finish(in_flight as usize))
+    }
+
+    /// Tenants seen so far (sorted).
+    pub fn tenants(&self) -> Vec<String> {
+        let mut t: Vec<String> =
+            self.shared.stats.lock().unwrap().tenants.keys().cloned().collect();
+        t.sort();
+        t
+    }
+
+    /// The session every worker compiles through (shared plan cache).
+    pub fn session(&self) -> &Session {
+        &self.shared.session
+    }
+
+    /// Worker-thread count.
+    pub fn workers(&self) -> usize {
+        self.shared.queues.len()
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        for q in &self.shared.queues {
+            q.state.lock().unwrap().closed = true;
+            q.not_empty.notify_all();
+            q.not_full.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One worker: drain the queue in coalesced same-key batches, serving
+/// each batch on a warm program from the worker-local LRU.
+fn worker_loop(shared: Arc<Shared>, w: usize) {
+    // MRU at the back, like the session's plan cache.
+    let mut warm: Vec<(ProgramKey, WarmProgram)> = Vec::new();
+    while let Some(batch) = shared.pop_batch(w) {
+        let key = batch[0].key.clone();
+        // Take the program out of the LRU for the whole batch (it goes
+        // back, as MRU, unless a task panic poisoned it).
+        let mut entry: Option<WarmProgram> =
+            warm.iter().position(|(k, _)| *k == key).map(|pos| warm.remove(pos).1);
+        let mut was_warm = entry.is_some();
+        for (i, req) in batch.into_iter().enumerate() {
+            let first_of_batch = i == 0;
+            // A request is a program-cache hit when the worker already
+            // held the warm program (including coalesced followers riding
+            // the leader's instantiation); a fresh construction — first
+            // contact, or recovery after a panic — is a miss.
+            // Compile is panic-contained like the run below: a planner
+            // panic must cost one request an error, not the worker
+            // thread (a dead worker would strand its whole queue).
+            let compiled = match entry.take() {
+                Some(p) => Ok(p),
+                None => std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    shared.session.compile(&key.expr, &key.shapes)
+                }))
+                .unwrap_or_else(|_| {
+                    Err(Error::runtime(format!("planning {} panicked", key.expr)))
+                })
+                .map(|program| {
+                    let st = program.stats();
+                    WarmProgram {
+                        program,
+                        allocs_seen: st.tensor_allocs(),
+                        reuses_seen: st.tensor_reuses(),
+                    }
+                }),
+            };
+            let (mut prog, hit) = match compiled {
+                Ok(p) => (p, was_warm),
+                Err(e) => {
+                    let latency = req.submitted.elapsed().as_secs_f64();
+                    shared.note_done(
+                        &req.tenant,
+                        latency,
+                        false,
+                        false,
+                        !first_of_batch,
+                        0,
+                        0,
+                    );
+                    // Deliver the planner's error as-is: clients match on
+                    // the typed variant (Shape vs Plan vs Runtime) to
+                    // tell bad requests from server faults.
+                    req.reply.fulfill(Err(e));
+                    continue;
+                }
+            };
+            let mut dest = req.dest;
+            // Contain kernel panics to the request: the program is
+            // dropped (its state may be inconsistent), the ticket gets a
+            // typed error, and the worker lives on.
+            let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                prog.program.run_into(&req.inputs, &mut dest)
+            }));
+            let latency = req.submitted.elapsed().as_secs_f64();
+            match run {
+                Ok(run_result) => {
+                    let st = prog.program.stats();
+                    let allocs = st.tensor_allocs() - prog.allocs_seen;
+                    let reuses = st.tensor_reuses() - prog.reuses_seen;
+                    prog.allocs_seen = st.tensor_allocs();
+                    prog.reuses_seen = st.tensor_reuses();
+                    let ok = run_result.is_ok();
+                    shared.note_done(
+                        &req.tenant,
+                        latency,
+                        ok,
+                        hit,
+                        !first_of_batch,
+                        allocs,
+                        reuses,
+                    );
+                    match run_result {
+                        Ok(metrics) => req.reply.fulfill(Ok(ServeReply {
+                            output: dest,
+                            metrics,
+                            latency_s: latency,
+                        })),
+                        Err(e) => req.reply.fulfill(Err(e)),
+                    }
+                    was_warm = true;
+                    entry = Some(prog);
+                }
+                Err(_panic) => {
+                    shared.note_done(&req.tenant, latency, false, hit, !first_of_batch, 0, 0);
+                    req.reply.fulfill(Err(Error::runtime(format!(
+                        "serving {} panicked; program state dropped",
+                        key.expr
+                    ))));
+                    // `prog` is dropped here; the next request for this
+                    // key re-instantiates from the cached plan.
+                    was_warm = false;
+                }
+            }
+        }
+        if let Some(prog) = entry {
+            if warm.len() >= shared.programs_per_worker {
+                warm.remove(0);
+            }
+            warm.push((key, prog));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gemm_request(tenant: &str, n: usize, seed: u64) -> ServeRequest {
+        let shapes = vec![vec![n, 6], vec![6, 4]];
+        ServeRequest {
+            tenant: tenant.into(),
+            expr: "ij,jk->ik".into(),
+            shapes: shapes.clone(),
+            inputs: Arc::new(vec![
+                Tensor::random(&shapes[0], seed),
+                Tensor::random(&shapes[1], seed + 1),
+            ]),
+            dest: Tensor::zeros(&[n, 4]),
+        }
+    }
+
+    #[test]
+    fn output_dims_matches_spec() {
+        let dims =
+            Server::output_dims("ijk,ja,ka->ai", &[vec![8, 6, 4], vec![6, 3], vec![4, 3]])
+                .unwrap();
+        assert_eq!(dims, vec![3, 8]);
+        assert!(Server::output_dims("ij,jk->ik", &[vec![2, 2]]).is_err());
+    }
+
+    #[test]
+    fn single_request_roundtrip_matches_direct_run() {
+        let session = Session::builder().ranks(4).build().unwrap();
+        let req = gemm_request("t0", 8, 10);
+        let inputs = Arc::clone(&req.inputs);
+        // Direct reference through a second program of the same session
+        // shape (fresh session: identical config → bitwise-equal).
+        let reference = {
+            let s = Session::builder().ranks(4).build().unwrap();
+            let mut p = s.compile("ij,jk->ik", &req.shapes).unwrap();
+            p.run(&inputs).unwrap().output
+        };
+        let server = Server::builder(session).workers(2).build();
+        let reply = server.submit(req).unwrap().wait().unwrap();
+        assert!(reply.output.allclose(&reference, 0.0, 0.0));
+        assert!(reply.latency_s >= 0.0);
+        assert_eq!(reply.metrics.per_term.len(), 1);
+        let st = server.stats();
+        assert_eq!((st.submitted, st.completed, st.errors), (1, 1, 0));
+        assert_eq!(st.program_misses, 1, "first request instantiates the program");
+        let ts = server.tenant_stats("t0").unwrap();
+        assert_eq!(ts.completed, 1);
+        assert!(server.tenant_stats("nobody").is_none());
+    }
+
+    #[test]
+    fn submit_rejects_bad_destination_and_bad_expr() {
+        let server =
+            Server::builder(Session::builder().ranks(2).build().unwrap()).workers(1).build();
+        let mut req = gemm_request("t", 8, 3);
+        req.dest = Tensor::zeros(&[3, 3]);
+        assert!(matches!(server.submit(req), Err(Error::Shape(_))));
+        let mut bad = gemm_request("t", 8, 4);
+        bad.expr = "ij,jk-".into();
+        assert!(server.submit(bad).is_err());
+        // Nothing was accepted.
+        assert_eq!(server.stats().submitted, 0);
+    }
+
+    #[test]
+    fn same_key_requests_route_to_one_worker_and_coalesce_when_queued() {
+        // Coalescing is deterministic at the queue level: pop_batch takes
+        // the head plus every same-key request behind it.
+        let session = Arc::new(Session::builder().ranks(2).build().unwrap());
+        let shared = Arc::new(Shared {
+            session,
+            queues: vec![WorkQueue {
+                state: Mutex::new(QueueState::default()),
+                not_empty: Condvar::new(),
+                not_full: Condvar::new(),
+            }],
+            capacity: 64,
+            programs_per_worker: 4,
+            stats: Mutex::new(StatsInner::default()),
+            dims_cache: Mutex::new(HashMap::new()),
+        });
+        let mk = |expr: &str| Request {
+            key: ProgramKey {
+                expr: expr.into(),
+                shapes: vec![vec![4, 4], vec![4, 4]],
+            },
+            tenant: "t".into(),
+            inputs: Arc::new(vec![]),
+            dest: Tensor::zeros(&[4, 4]),
+            reply: ReplyGuard { slot: ReplySlot::new() },
+            submitted: Instant::now(),
+        };
+        {
+            let mut st = shared.queues[0].state.lock().unwrap();
+            for expr in ["ij,jk->ik", "ij,jk->ki", "ij,jk->ik", "ij,jk->ik"] {
+                st.queue.push_back(mk(expr));
+            }
+        }
+        let batch = shared.pop_batch(0).expect("head batch");
+        assert_eq!(batch.len(), 3, "leader + two same-key followers");
+        assert!(batch.iter().all(|r| r.key.expr == "ij,jk->ik"));
+        let batch = shared.pop_batch(0).expect("remaining key");
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].key.expr, "ij,jk->ki");
+        // Routing is stable: the same key always picks the same worker.
+        let k = ProgramKey { expr: "ijk,ja,ka->ia".into(), shapes: vec![vec![4, 4, 4]] };
+        assert_eq!(k.route(8), k.route(8));
+        assert!(k.route(8) < 8);
+    }
+
+    #[test]
+    fn dropping_an_unserved_request_errors_the_ticket_instead_of_hanging() {
+        // The no-hang guarantee: whatever kills a request between accept
+        // and fulfill (worker death, teardown), the ticket resolves.
+        let slot = ReplySlot::new();
+        let ticket = Ticket { slot: Arc::clone(&slot) };
+        let req = Request {
+            key: ProgramKey { expr: "ij,jk->ik".into(), shapes: vec![] },
+            tenant: "t".into(),
+            inputs: Arc::new(vec![]),
+            dest: Tensor::zeros(&[1]),
+            reply: ReplyGuard { slot },
+            submitted: Instant::now(),
+        };
+        drop(req);
+        let err = ticket.wait().expect_err("unserved request must deliver an error");
+        assert!(err.to_string().contains("unserved"), "{err}");
+    }
+
+    #[test]
+    fn shutdown_drains_outstanding_tickets() {
+        let server =
+            Server::builder(Session::builder().ranks(2).build().unwrap()).workers(1).build();
+        let tickets: Vec<Ticket> =
+            (0..6).map(|i| server.submit(gemm_request("t", 8, 20 + i)).unwrap()).collect();
+        drop(server);
+        for t in tickets {
+            assert!(t.wait().is_ok(), "accepted requests must be served before shutdown");
+        }
+    }
+
+    #[test]
+    fn stats_percentiles_are_ordered() {
+        let mut acc = Acc::default();
+        let t0 = Instant::now();
+        for _ in 0..100 {
+            acc.note_submit(t0);
+        }
+        for i in 0..100 {
+            acc.note_done(i as f64 / 100.0, true, Instant::now());
+        }
+        let s = acc.freeze().finish(0);
+        assert!(s.p50_latency_s <= s.p99_latency_s);
+        assert_eq!(s.completed, 100);
+        assert_eq!(s.in_flight, 0);
+        assert!(s.throughput_rps > 0.0);
+        assert_eq!(s.hit_rate(), 1.0, "no program lookups recorded yet");
+    }
+}

@@ -31,11 +31,14 @@
 //! and of which worker claims a tile, so `threads = 1` and `threads = 8`
 //! produce bitwise-identical results (pinned by tests).
 //!
-//! All packing buffers come from a [`ScratchPool`]: a size-classed
-//! free-list behind a mutex, so steady-state kernel invocations perform
-//! zero heap allocations (verified by [`ScratchPool::stats`] in tests).
+//! All packing buffers come from a [`ScratchPool`]: size-classed
+//! free-lists with **one lock per size class**, so steady-state kernel
+//! invocations perform zero heap allocations (verified by
+//! [`ScratchPool::stats`] in tests) and concurrent submitter threads —
+//! the multi-tenant serving layer runs many programs against one shared
+//! engine pool — only contend when they want the exact same class at the
+//! exact same instant.
 
-use std::collections::BTreeMap;
 use std::ops::{Deref, DerefMut};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, OnceLock};
@@ -198,24 +201,53 @@ pub struct ScratchStats {
     pub takes: u64,
 }
 
-/// Size-classed free list of `f32` buffers.  `Sync`: workers inside the
-/// parallel macro loops take and return buffers directly.
-#[derive(Debug, Default)]
+/// Smallest size class: 256 elements (1 KiB), so tiny requests of
+/// different sizes share one class.
+const CLASS_MIN_SHIFT: u32 = 8;
+
+/// Number of size classes: powers of two from 2^8 up to 2^39 elements
+/// (2 TiB of f32) — far past any realistic packing buffer; larger
+/// requests clamp into the top class.
+const N_CLASSES: usize = 32;
+
+/// Size-classed free lists of `f32` buffers.  `Sync`: workers inside the
+/// parallel macro loops — and, since the serving layer, multiple
+/// submitter threads running different programs against one shared
+/// engine — take and return buffers directly.  Each size class has its
+/// own lock, so concurrent takes only serialize when they race for the
+/// same class; the free lists themselves stay process-wide (no
+/// per-thread sharding), which keeps the steady-state `allocs`-flat
+/// invariant independent of which worker thread happens to claim a task.
+#[derive(Debug)]
 pub struct ScratchPool {
-    free: Mutex<BTreeMap<usize, Vec<Vec<f32>>>>,
+    free: [Mutex<Vec<Vec<f32>>>; N_CLASSES],
     allocs: AtomicU64,
     takes: AtomicU64,
 }
 
+impl Default for ScratchPool {
+    fn default() -> Self {
+        ScratchPool::new()
+    }
+}
+
 impl ScratchPool {
     pub fn new() -> Self {
-        ScratchPool::default()
+        ScratchPool {
+            free: std::array::from_fn(|_| Mutex::new(Vec::new())),
+            allocs: AtomicU64::new(0),
+            takes: AtomicU64::new(0),
+        }
     }
 
-    /// Size class: next power of two, floored at 256 elements (1 KiB)
-    /// so tiny requests of different sizes share one class.
+    /// Size class: next power of two, floored at 256 elements.
     fn class_of(len: usize) -> usize {
-        len.max(256).next_power_of_two()
+        len.max(1 << CLASS_MIN_SHIFT).next_power_of_two()
+    }
+
+    /// Free-list index of a class value (a power of two ≥ 2^8).
+    fn class_index(class: usize) -> usize {
+        (class.trailing_zeros().saturating_sub(CLASS_MIN_SHIFT) as usize).min(N_CLASSES - 1)
     }
 
     /// Borrow a buffer of at least `len` elements.  Contents are
@@ -223,7 +255,19 @@ impl ScratchPool {
     pub fn take(&self, len: usize) -> ScratchBuf<'_> {
         self.takes.fetch_add(1, Ordering::Relaxed);
         let class = Self::class_of(len);
-        let reused = self.free.lock().unwrap().get_mut(&class).and_then(Vec::pop);
+        let reused = {
+            let mut list = self.free[Self::class_index(class)].lock().unwrap();
+            match list.pop() {
+                // Only the clamped top class can mix sizes; everywhere
+                // else buffers sit at exactly their class size.
+                Some(b) if b.len() >= class => Some(b),
+                Some(b) => {
+                    list.push(b);
+                    None
+                }
+                None => None,
+            }
+        };
         let buf = match reused {
             Some(b) => b,
             None => {
@@ -250,7 +294,9 @@ impl ScratchPool {
 
     /// Drop every pooled buffer (frees memory; counters keep their values).
     pub fn clear(&self) {
-        self.free.lock().unwrap().clear();
+        for list in &self.free {
+            list.lock().unwrap().clear();
+        }
     }
 }
 
@@ -281,8 +327,9 @@ impl Drop for ScratchBuf<'_> {
             return;
         }
         // Buffers are allocated at exactly their class size and never
-        // resized, so buf.len() is the class key.
-        self.pool.free.lock().unwrap().entry(buf.len()).or_default().push(buf);
+        // resized, so buf.len() is the class value.
+        let idx = ScratchPool::class_index(buf.len());
+        self.pool.free[idx].lock().unwrap().push(buf);
     }
 }
 
@@ -792,6 +839,55 @@ mod tests {
         let s = pool.stats();
         assert_eq!(s.allocs, after_warmup.allocs, "steady state must not allocate");
         assert_eq!(s.takes, after_warmup.takes + 20);
+    }
+
+    #[test]
+    fn scratch_class_index_covers_all_sizes() {
+        assert_eq!(ScratchPool::class_of(1), 256);
+        assert_eq!(ScratchPool::class_of(256), 256);
+        assert_eq!(ScratchPool::class_of(257), 512);
+        assert_eq!(ScratchPool::class_index(256), 0);
+        assert_eq!(ScratchPool::class_index(512), 1);
+        // The top class clamps instead of indexing out of bounds.
+        assert!(ScratchPool::class_index(1usize << (usize::BITS - 1)) < N_CLASSES);
+        // A buffer returned into the clamped class never serves a
+        // request it is too small for.
+        let pool = ScratchPool::new();
+        {
+            let _small = pool.take(300); // class 512
+        }
+        let big = pool.take(400); // same class, fits
+        assert!(big.len() >= 400);
+    }
+
+    #[test]
+    fn scratch_pool_is_safe_under_concurrent_takes() {
+        // The serving layer's shape of pool traffic: several submitter
+        // threads taking/returning concurrently.  Buffers returned by
+        // any thread are visible to every other (process-wide free
+        // lists), so total allocations are bounded by the concurrent
+        // high-water mark, not by thread count × rounds.
+        let pool = ScratchPool::new();
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let pool = &pool;
+                s.spawn(move || {
+                    for i in 0..50 {
+                        let mut b = pool.take(1000 + (t * 13 + i) % 24);
+                        b.fill(t as f32);
+                    }
+                });
+            }
+        });
+        let stats = pool.stats();
+        assert_eq!(stats.takes, 200);
+        assert!(stats.allocs <= 4, "at most one live buffer per thread: {stats:?}");
+        // Warm pool: a serial sweep allocates nothing new.
+        let before = pool.stats().allocs;
+        for _ in 0..10 {
+            let _ = pool.take(1001);
+        }
+        assert_eq!(pool.stats().allocs, before);
     }
 
     #[test]

@@ -1,0 +1,304 @@
+//! Concurrency coverage for the 0.6.0 multi-tenant layer: programs
+//! compiled from one shared `Session` running on many threads must be
+//! bitwise identical to serial execution with flat per-program tensor
+//! allocations, the plan cache must survive concurrent access, and a
+//! `Server` must sustain concurrent `run_into` traffic with zero
+//! steady-state tensor allocations per request.
+
+use std::sync::Arc;
+
+use deinsum::{ServeRequest, Server, Session, Tensor};
+
+/// A mixed workload: MTTKRP all three modes (one with a permuted
+/// output), a TTMc-shaped chain, plain and transposed GEMM, and a
+/// 2MM chain — eight distinct program keys.
+fn mixed_workload() -> Vec<(&'static str, Vec<Vec<usize>>)> {
+    let n = 12usize;
+    let r = 4usize;
+    vec![
+        ("ijk,ja,ka->ia", vec![vec![n, n, n], vec![n, r], vec![n, r]]),
+        ("ijk,ia,ka->ja", vec![vec![n, n, n], vec![n, r], vec![n, r]]),
+        ("ijk,ia,ja->ka", vec![vec![n, n, n], vec![n, r], vec![n, r]]),
+        ("ijk,ja,ka->ai", vec![vec![n, n, n], vec![n, r], vec![n, r]]),
+        ("ijkl,jb,kc,ld->ibcd", vec![vec![6, 6, 6, 6], vec![6, 3], vec![6, 3], vec![6, 3]]),
+        ("ij,jk->ik", vec![vec![16, 12], vec![12, 8]]),
+        ("ij,jk->ki", vec![vec![16, 12], vec![12, 8]]),
+        ("ij,jk,kl->il", vec![vec![10, 8], vec![8, 12], vec![12, 6]]),
+    ]
+}
+
+fn inputs_for(shapes: &[Vec<usize>], seed: u64) -> Arc<Vec<Tensor>> {
+    Arc::new(
+        shapes
+            .iter()
+            .enumerate()
+            .map(|(i, s)| Tensor::random(s, seed + i as u64))
+            .collect(),
+    )
+}
+
+#[test]
+fn concurrent_programs_from_one_session_match_serial_bitwise() {
+    let session = Arc::new(Session::builder().ranks(4).build().unwrap());
+    let work = mixed_workload();
+    let inputs: Vec<Arc<Vec<Tensor>>> =
+        (0..work.len()).map(|i| inputs_for(&work[i].1, 1000 + 100 * i as u64)).collect();
+
+    // Serial reference: one program per key, run once.
+    let serial: Vec<Tensor> = work
+        .iter()
+        .zip(&inputs)
+        .map(|((expr, shapes), ins)| {
+            session.compile(expr, shapes).unwrap().run(ins).unwrap().output
+        })
+        .collect();
+
+    // Concurrent: one thread per key, each compiling its own program
+    // from the SAME session (all compiles are now cache hits sharing the
+    // serial pass's plans), re-running it with recycled outputs.  Every
+    // rerun must be bitwise identical to serial, and per-program tensor
+    // allocations must be flat after warmup.
+    std::thread::scope(|s| {
+        for (((expr, shapes), ins), want) in work.iter().zip(&inputs).zip(&serial) {
+            let session = Arc::clone(&session);
+            s.spawn(move || {
+                let mut prog = session.compile(expr, shapes).unwrap();
+                let mut out = Tensor::zeros(&prog.output_dims());
+                for _ in 0..2 {
+                    prog.run_into(ins, &mut out).unwrap();
+                }
+                assert!(out.allclose(want, 0.0, 0.0), "{expr}: warmup diverged from serial");
+                // RunStats::tensor_allocs deliberately excludes the
+                // session-wide engine packing pool, whose high-water
+                // mark depends on which programs ran concurrently.
+                let warm = prog.stats().tensor_allocs();
+                for _ in 0..3 {
+                    prog.run_into(ins, &mut out).unwrap();
+                    assert!(
+                        out.allclose(want, 0.0, 0.0),
+                        "{expr}: concurrent rerun diverged from serial"
+                    );
+                }
+                assert_eq!(
+                    prog.stats().tensor_allocs(),
+                    warm,
+                    "{expr}: steady-state rerun allocated tensors under concurrency"
+                );
+            });
+        }
+    });
+    let cs = session.cache_stats();
+    assert_eq!(cs.misses, work.len() as u64, "serial pass planned each key exactly once");
+    assert_eq!(cs.hits, work.len() as u64, "every concurrent compile must hit the cache");
+}
+
+#[test]
+fn plan_cache_survives_concurrent_compile_stress() {
+    // Loom-free stress: 8 threads hammer the shared cache with a mix of
+    // hits and misses.  Invariants: every compile is counted exactly
+    // once (hits + misses == total), capacity is respected, and every
+    // returned program is runnable.
+    let session = Arc::new(
+        Session::builder().ranks(2).plan_cache_capacity(4).build().unwrap(),
+    );
+    let specs: Vec<(String, Vec<Vec<usize>>)> = (0..6)
+        .map(|i| ("ij,jk->ik".to_string(), vec![vec![8 + 2 * i, 6], vec![6, 4]]))
+        .collect();
+    let threads = 8usize;
+    let iters = 12usize;
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let session = Arc::clone(&session);
+            let specs = &specs;
+            s.spawn(move || {
+                for i in 0..iters {
+                    let (expr, shapes) = &specs[(t + i) % specs.len()];
+                    let mut prog = session.compile(expr, shapes).unwrap();
+                    if i == 0 {
+                        // Each thread also executes once: compiled
+                        // handles must be immediately usable.
+                        let ins: Vec<Tensor> = shapes
+                            .iter()
+                            .map(|sh| Tensor::random(sh, t as u64))
+                            .collect();
+                        let rep = prog.run(&ins).unwrap();
+                        assert_eq!(rep.output.dims(), prog.output_dims());
+                    }
+                }
+            });
+        }
+    });
+    let cs = session.cache_stats();
+    assert_eq!(
+        cs.hits + cs.misses,
+        (threads * iters) as u64,
+        "every compile is exactly one counted hit or miss: {cs:?}"
+    );
+    // 6 distinct keys in a 4-entry cache: evictions must have happened,
+    // and the cache never exceeds its bound.
+    assert!(session.cached_plans() <= 4);
+    assert!(cs.misses >= 6, "each distinct key planned at least once: {cs:?}");
+}
+
+#[test]
+fn server_with_8_workers_sustains_concurrent_traffic_with_zero_steady_state_allocs() {
+    // The acceptance pin: an 8-worker server serving mixed traffic from
+    // two tenants over programs compiled from ONE session returns
+    // bitwise-identical outputs vs serial execution, and once every
+    // program is warm, requests perform zero tensor allocations
+    // (counter-asserted through the server's own accounting).
+    let work = mixed_workload();
+    let inputs: Vec<Arc<Vec<Tensor>>> =
+        (0..work.len()).map(|i| inputs_for(&work[i].1, 5000 + 100 * i as u64)).collect();
+
+    // Serial reference on an independent session (identical settings →
+    // identical plans → bitwise-identical outputs).
+    let reference: Vec<Tensor> = {
+        let s = Session::builder().ranks(4).build().unwrap();
+        work.iter()
+            .zip(&inputs)
+            .map(|((expr, shapes), ins)| {
+                s.compile(expr, shapes).unwrap().run(ins).unwrap().output
+            })
+            .collect()
+    };
+
+    let session = Session::builder().ranks(4).build().unwrap();
+    let server = Server::builder(session).workers(8).queue_capacity(32).build();
+    let submit_round = |tenant: &str| -> Vec<deinsum::Ticket> {
+        work.iter()
+            .zip(&inputs)
+            .map(|((expr, shapes), ins)| {
+                server
+                    .submit(ServeRequest {
+                        tenant: tenant.into(),
+                        expr: (*expr).into(),
+                        shapes: shapes.clone(),
+                        inputs: Arc::clone(ins),
+                        dest: Tensor::zeros(
+                            &Server::output_dims(expr, shapes).unwrap(),
+                        ),
+                    })
+                    .unwrap()
+            })
+            .collect()
+    };
+
+    // Warmup: two rounds so every key's owning worker holds a warm
+    // program and every recycled path (including permuted gathers) has
+    // its buffers.
+    for _ in 0..2 {
+        for ticket in submit_round("warmup") {
+            ticket.wait().unwrap();
+        }
+    }
+    let warm = server.stats();
+    assert_eq!(warm.errors, 0, "warmup must succeed: {warm:?}");
+    assert_eq!(warm.completed, 2 * work.len() as u64);
+    assert_eq!(
+        warm.program_misses,
+        work.len() as u64,
+        "each key instantiates exactly one program (key-affinity routing): {warm:?}"
+    );
+
+    // Steady state: three interleaved rounds from two tenants, all in
+    // flight together.
+    let mut all_tickets = Vec::new();
+    for _ in 0..3 {
+        for tenant in ["tenant-a", "tenant-b"] {
+            all_tickets.push((tenant, submit_round(tenant)));
+        }
+    }
+    for (_, tickets) in all_tickets {
+        for (ticket, want) in tickets.into_iter().zip(&reference) {
+            let reply = ticket.wait().unwrap();
+            assert!(
+                reply.output.allclose(want, 0.0, 0.0),
+                "served output diverged from serial reference"
+            );
+        }
+    }
+
+    let after = server.stats();
+    assert_eq!(after.errors, 0);
+    assert_eq!(after.completed, warm.completed + 6 * work.len() as u64);
+    assert_eq!(after.in_flight, 0);
+    assert_eq!(
+        after.tensor_allocs, warm.tensor_allocs,
+        "steady-state serving must perform zero tensor allocations per request \
+         ({warm:?} -> {after:?})"
+    );
+    assert!(after.tensor_reuses > warm.tensor_reuses, "requests must recycle buffers");
+    assert_eq!(after.program_misses, warm.program_misses, "no program re-instantiation");
+    assert!(after.p50_latency_s <= after.p99_latency_s);
+    assert!(after.throughput_rps > 0.0);
+    assert!(after.hit_rate() > 0.8, "steady state must be warm-program hits: {after:?}");
+
+    // Per-tenant accounting: both tenants saw all three rounds.
+    for tenant in ["tenant-a", "tenant-b"] {
+        let ts = server.tenant_stats(tenant).unwrap();
+        assert_eq!(ts.completed, 3 * work.len() as u64, "{tenant}: {ts:?}");
+        assert_eq!(ts.errors, 0);
+        assert_eq!(ts.in_flight, 0);
+    }
+    assert_eq!(server.tenants(), vec!["tenant-a", "tenant-b", "warmup"]);
+}
+
+#[test]
+fn bounded_queue_applies_backpressure_without_losing_requests() {
+    // One worker, tiny queue: submitters block instead of erroring or
+    // dropping; every request completes exactly once.
+    let session = Session::builder().ranks(2).build().unwrap();
+    let server =
+        Arc::new(Server::builder(session).workers(1).queue_capacity(2).build());
+    let shapes = vec![vec![8, 6], vec![6, 4]];
+    let ins = inputs_for(&shapes, 77);
+    std::thread::scope(|s| {
+        for t in 0..4 {
+            let server = Arc::clone(&server);
+            let shapes = shapes.clone();
+            let ins = Arc::clone(&ins);
+            s.spawn(move || {
+                for _ in 0..4 {
+                    let ticket = server
+                        .submit(ServeRequest {
+                            tenant: format!("client-{t}"),
+                            expr: "ij,jk->ik".into(),
+                            shapes: shapes.clone(),
+                            inputs: Arc::clone(&ins),
+                            dest: Tensor::zeros(&[8, 4]),
+                        })
+                        .unwrap();
+                    ticket.wait().unwrap();
+                }
+            });
+        }
+    });
+    let st = server.stats();
+    assert_eq!((st.submitted, st.completed, st.errors), (16, 16, 0));
+    assert_eq!(st.queue_depth, 0);
+    assert_eq!(st.in_flight, 0);
+    assert_eq!(server.tenants().len(), 4);
+}
+
+#[test]
+fn programs_can_move_across_threads() {
+    // Program: Send — compile on one thread, run on another, hand the
+    // result back.  (Compile-time guarantee exercised at runtime.)
+    let session = Session::builder().ranks(2).build().unwrap();
+    let shapes = vec![vec![10, 8], vec![8, 6]];
+    let mut prog = session.compile("ij,jk->ik", &shapes).unwrap();
+    let ins = inputs_for(&shapes, 31);
+    let here = prog.run(&ins).unwrap().output;
+    let there = std::thread::spawn(move || {
+        let out = prog.run(&ins).unwrap().output;
+        (prog, out)
+    })
+    .join()
+    .unwrap();
+    assert!(here.allclose(&there.1, 0.0, 0.0));
+    // And back again.
+    let mut prog = there.0;
+    let ins2 = inputs_for(&shapes, 31);
+    assert!(prog.run(&ins2).unwrap().output.allclose(&here, 0.0, 0.0));
+}

@@ -1,0 +1,139 @@
+#!/usr/bin/env python3
+"""CI perf-regression gate over BENCH_hotpath.json.
+
+Diffs a freshly-emitted bench JSON (the candidate) against the
+checked-in repo-root seed (the baseline) and fails the build when:
+
+  1. a kernel present in the baseline is missing from the candidate
+     (schema regression — replaces the old ad-hoc `grep -q` lines);
+  2. any candidate entry carries a nonzero ``allocs_per_run`` (the
+     recycled-everything steady-state invariant);
+  3. a (kernel, shape) pair present in both files with *real* timings on
+     both sides regressed beyond ``--tolerance`` (median ratio).  Rows
+     whose baseline or candidate median is the 0.0 placeholder are
+     skipped, so the gate is meaningful from the first real baseline
+     onward without blocking on the offline-seeded schema file; shape
+     mismatches (e.g. tiny-smoke runs vs full-shape baselines) are
+     skipped for the same reason.
+
+With ``--compact OUT`` it also writes a trajectory-friendly compact JSON
+(one line per kernel) and echoes it to stdout, so cross-PR perf tracking
+reads straight out of the CI log instead of downloading artifacts.
+
+Usage:
+  tools/bench_gate.py --baseline BENCH_hotpath.json \
+      --candidate rust/BENCH_hotpath.json [--tolerance 3.0] \
+      [--compact rust/BENCH_compact.jsonl]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load(path: str) -> dict:
+    with open(path, encoding="utf-8") as fh:
+        doc = json.load(fh)
+    if not isinstance(doc.get("results"), list):
+        raise SystemExit(f"{path}: no 'results' array")
+    return doc
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True, help="checked-in seed/baseline JSON")
+    ap.add_argument("--candidate", required=True, help="freshly emitted bench JSON")
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=3.0,
+        help="max candidate/baseline median ratio before failing (default 3.0; "
+        "CI runners are noisy, so this catches order-of-magnitude cliffs, "
+        "not jitter)",
+    )
+    ap.add_argument("--compact", help="also write a one-line-per-kernel .jsonl here")
+    args = ap.parse_args()
+
+    baseline = load(args.baseline)
+    candidate = load(args.candidate)
+    failures: list[str] = []
+
+    # 1. Every baseline kernel must still be emitted.
+    want = {r["kernel"] for r in baseline["results"]}
+    have = {r["kernel"] for r in candidate["results"]}
+    for missing in sorted(want - have):
+        failures.append(f"kernel '{missing}' missing from {args.candidate}")
+
+    # 2. The steady state must stay allocation-free — and the field must
+    #    keep being emitted: a kernel whose baseline row carries
+    #    allocs_per_run must carry it in the candidate too, or the gate
+    #    would pass vacuously after a bench refactor drops the counter.
+    for r in candidate["results"]:
+        if r.get("allocs_per_run", 0) != 0:
+            failures.append(
+                f"{r['kernel']} ({r.get('shape', '?')}): allocs_per_run = "
+                f"{r['allocs_per_run']} (must be 0)"
+            )
+    counted = {r["kernel"] for r in baseline["results"] if "allocs_per_run" in r}
+    for kernel in sorted(counted):
+        rows = [r for r in candidate["results"] if r["kernel"] == kernel]
+        if rows and not any("allocs_per_run" in r for r in rows):
+            failures.append(
+                f"{kernel}: baseline tracks allocs_per_run but the candidate "
+                f"stopped emitting it (invariant no longer enforced)"
+            )
+
+    # 3. Median-ratio regression check on matching (kernel, shape) rows
+    #    with real timings on both sides.
+    base_by_key = {
+        (r["kernel"], r.get("shape")): r["median_seconds"] for r in baseline["results"]
+    }
+    checked = 0
+    for r in candidate["results"]:
+        base = base_by_key.get((r["kernel"], r.get("shape")))
+        cand = r["median_seconds"]
+        if not base:  # baseline placeholder (0.0) or unmatched shape
+            continue
+        if not cand:
+            # The baseline has a real timing but the candidate emitted
+            # 0.0: only a broken timer or an accidental placeholder
+            # produces that — fail loudly instead of skipping the kernel
+            # out of the gate forever.
+            failures.append(
+                f"{r['kernel']} ({r.get('shape', '?')}): candidate median is 0.0 "
+                f"but baseline has a real timing ({base:.6g}s) — timer broken?"
+            )
+            continue
+        checked += 1
+        ratio = cand / base
+        if ratio > args.tolerance:
+            failures.append(
+                f"{r['kernel']} ({r.get('shape', '?')}): median {cand:.6g}s vs "
+                f"baseline {base:.6g}s ({ratio:.2f}x > {args.tolerance:.2f}x)"
+            )
+    print(
+        f"bench gate: {len(have)} kernels emitted, {len(want)} required, "
+        f"{checked} median ratios checked (tolerance {args.tolerance:.2f}x)"
+    )
+
+    if args.compact:
+        lines = [json.dumps(r, sort_keys=True) for r in candidate["results"]]
+        with open(args.compact, "w", encoding="utf-8") as fh:
+            fh.write("\n".join(lines) + "\n")
+        print(f"--- compact trajectory ({args.compact}) ---")
+        for line in lines:
+            print(line)
+
+    if failures:
+        print(f"\nbench gate FAILED ({len(failures)} problem(s)):", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print("bench gate OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
