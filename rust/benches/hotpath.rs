@@ -551,6 +551,64 @@ fn main() {
         }
     }
 
+    // --- serving admission: try_submit + bounded wait round trip ---------------
+    //
+    // The 0.7.0 fault-tolerant admission path (dims validation against
+    // the memoized cache, non-blocking queue reservation, ticket with a
+    // deadline-bounded wait) timed as a closed-loop round trip on a warm
+    // single-worker server.  Tracks the robustness layer's overhead: the
+    // typed-error seam must stay invisible next to the run itself.
+    {
+        use deinsum::{ServeRequest, Server};
+        let n = if tiny { 8 } else { 16 };
+        let shapes = vec![vec![n, n], vec![n, n]];
+        let ins = std::sync::Arc::new(vec![
+            Tensor::random(&[n, n], 91),
+            Tensor::random(&[n, n], 92),
+        ]);
+        let session = Session::builder().ranks(8).kernel_config(cfg).build().unwrap();
+        let server = Server::builder(session).workers(1).build();
+        let mut dest =
+            Some(Tensor::zeros(&Server::output_dims("ij,jk->ik", &shapes).unwrap()));
+        let mut round_trip = || {
+            let ticket = server
+                .try_submit(ServeRequest {
+                    tenant: "admission".into(),
+                    expr: "ij,jk->ik".into(),
+                    shapes: shapes.clone(),
+                    inputs: std::sync::Arc::clone(&ins),
+                    dest: dest.take().unwrap(),
+                })
+                .expect("a single closed-loop request never fills the queue");
+            dest = Some(
+                ticket
+                    .wait_timeout(std::time::Duration::from_secs(30))
+                    .expect("served well within the bound")
+                    .output,
+            );
+        };
+        round_trip(); // warm the program + recycled paths
+        let inner = 32usize;
+        let (med, _, _) = common::time_median(reps, || {
+            for _ in 0..inner {
+                round_trip();
+            }
+        });
+        let per_req = med / inner as f64;
+        println!(
+            "serve admission (try_submit + wait_timeout, 1w closed loop): {} per request",
+            common::fmt_s(per_req)
+        );
+        record(
+            &mut records,
+            "serve_admission",
+            &format!("ij,jk->ik n={n} 1w"),
+            per_req,
+            None,
+            None,
+        );
+    }
+
     // --- machine-readable trajectory ------------------------------------------
     let json = format!(
         "{{\n  \"config\": {{\"mc\": {}, \"kc\": {}, \"nc\": {}, \"threads\": {}, \"reps\": {reps}}},\n  \"results\": [\n{}\n  ]\n}}\n",

@@ -179,6 +179,7 @@ pub struct SessionBuilder {
     threads: Option<usize>,
     planner: PlannerConfig,
     plan_cache_capacity: usize,
+    fault_plan: Option<crate::fault::FaultPlan>,
 }
 
 impl Default for SessionBuilder {
@@ -191,6 +192,7 @@ impl Default for SessionBuilder {
             threads: None,
             planner: PlannerConfig::default(),
             plan_cache_capacity: 32,
+            fault_plan: None,
         }
     }
 }
@@ -246,6 +248,18 @@ impl SessionBuilder {
         self
     }
 
+    /// Install an explicit deterministic fault-injection plan
+    /// ([`crate::fault::FaultPlan`]) on the session's engine, replacing
+    /// the environment-seeded default (`DEINSUM_FAULT_SEED`).  The
+    /// engine's dispatch methods and the run loop check their named
+    /// sites against it; a [`crate::serve::Server`] built over the
+    /// session inherits it for the `serve.*` sites.  Test-only seam —
+    /// sessions without one pay a single branch per site check.
+    pub fn fault_plan(mut self, plan: crate::fault::FaultPlan) -> Self {
+        self.fault_plan = Some(plan);
+        self
+    }
+
     /// Build the session.  Only the PJRT path can fail (missing or
     /// unloadable artifacts); a native session is infallible.
     pub fn build(self) -> Result<Session> {
@@ -259,6 +273,9 @@ impl SessionBuilder {
         if let Some(t) = self.threads {
             let cfg = engine.base_config().with_threads(t);
             engine.set_config(cfg);
+        }
+        if let Some(plan) = self.fault_plan {
+            engine.set_faults(crate::fault::Faults::plan(plan));
         }
         Ok(Session {
             engine: Arc::new(engine),
@@ -362,12 +379,12 @@ impl Session {
         key: PlanKey,
         build: impl FnOnce() -> Result<Plan>,
     ) -> Result<Arc<Plan>> {
-        let cached = self.cache.lock().unwrap().lookup(&key);
+        let cached = crate::sync::lock(&self.cache).lookup(&key);
         match cached {
             Some(p) => Ok(p),
             None => {
                 let built = Arc::new(build()?);
-                Ok(self.cache.lock().unwrap().insert(key, built))
+                Ok(crate::sync::lock(&self.cache).insert(key, built))
             }
         }
     }
@@ -375,12 +392,12 @@ impl Session {
     /// Plan-cache counters (the second compile of an identical spec is a
     /// counted hit).
     pub fn cache_stats(&self) -> PlanCacheStats {
-        self.cache.lock().unwrap().stats
+        crate::sync::lock(&self.cache).stats
     }
 
     /// Number of plans currently cached.
     pub fn cached_plans(&self) -> usize {
-        self.cache.lock().unwrap().entries.len()
+        crate::sync::lock(&self.cache).entries.len()
     }
 
     /// The kernel engine every program of this session dispatches

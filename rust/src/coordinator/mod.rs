@@ -285,6 +285,7 @@ fn run_plan_inner(
         // SOAP-derived tiles (§IV: the local kernel blocks along the
         // same proportions the I/O analysis assumed).
         engine.configure_for_term(term);
+        engine.faults().check(crate::fault::site::RUN_PLAN_TERM)?;
 
         // --- stage inputs -------------------------------------------------
         let mut in_names: Vec<String> = Vec::with_capacity(term.inputs.len());

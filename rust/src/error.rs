@@ -27,6 +27,24 @@ pub enum Error {
     Runtime(String),
     /// I/O failure loading artifacts.
     Io(std::io::Error),
+    /// A transient failure that is safe to retry (flaky execute, injected
+    /// fault).  The serving layer retries these up to its budget;
+    /// [`Error::is_retryable`] returns `true`.
+    Transient(String),
+    /// The request was accepted but its worker died (panic outside
+    /// per-request containment) before it could be completed or requeued
+    /// within the retry budget.  Retryable: resubmission lands on a fresh
+    /// worker incarnation.
+    WorkerLost(String),
+    /// Non-blocking admission ([`crate::serve::Server::try_submit`])
+    /// found the target queue full.  The caller sheds or retries later.
+    QueueFull,
+    /// A deadline attached to the request or its `wait` expired before a
+    /// result was produced.
+    DeadlineExceeded,
+    /// The server has been shut down (or dropped); no new work is
+    /// accepted.
+    ServerShutdown,
 }
 
 impl fmt::Display for Error {
@@ -40,6 +58,11 @@ impl fmt::Display for Error {
             }
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Transient(m) => write!(f, "transient error (retryable): {m}"),
+            Error::WorkerLost(m) => write!(f, "worker lost: {m}"),
+            Error::QueueFull => write!(f, "queue full: request shed (try again later)"),
+            Error::DeadlineExceeded => write!(f, "deadline exceeded"),
+            Error::ServerShutdown => write!(f, "server is shut down"),
         }
     }
 }
@@ -71,5 +94,20 @@ impl Error {
     }
     pub fn runtime(m: impl Into<String>) -> Self {
         Error::Runtime(m.into())
+    }
+    pub fn transient(m: impl Into<String>) -> Self {
+        Error::Transient(m.into())
+    }
+    pub fn worker_lost(m: impl Into<String>) -> Self {
+        Error::WorkerLost(m.into())
+    }
+
+    /// Whether resubmitting the same request can reasonably succeed.
+    /// True only for failures caused by *where* the request ran
+    /// ([`Error::Transient`], [`Error::WorkerLost`]) — never for
+    /// deterministic failures of the request itself (parse, shape, plan,
+    /// compile), which would fail identically on every retry.
+    pub fn is_retryable(&self) -> bool {
+        matches!(self, Error::Transient(_) | Error::WorkerLost(_))
     }
 }

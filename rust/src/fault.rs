@@ -1,0 +1,458 @@
+//! Deterministic fault injection: the testing seam behind the serving
+//! layer's recovery paths.
+//!
+//! A serving system's fault tolerance is only as real as its ability to
+//! *rehearse* failure: worker panics, hung kernels, and transient
+//! runtime errors have to be injectable on demand, deterministically, so
+//! every recovery path (supervision restarts, bounded retry, deadline
+//! shedding) is exercised by ordinary tests instead of waiting for
+//! production to find them.  This module is that seam:
+//!
+//! - a [`FaultPlan`] maps **named sites** (e.g. `"serve.run"`,
+//!   `"serve.worker"`, `"run_plan.term"`, `"engine.gemm"`) to scheduled
+//!   [`FaultKind`]s — a panic, an artificial latency, or a transient
+//!   typed error ([`crate::error::Error::Transient`]);
+//! - schedules are expressed against each site's **invocation counter**
+//!   (an atomic tick): either an explicit list of ticks
+//!   ([`FaultPlan::panic_at`] and friends) or a periodic stride
+//!   ([`FaultPlan::panic_every`]), so a plan's behavior is a pure
+//!   function of how often each site is reached — no clocks, no RNG at
+//!   check time;
+//! - fired faults are **counted per site and kind**
+//!   ([`FaultPlan::fired`]), so tests can assert that recovery counters
+//!   (restarts, retries, sheds) match the injected plan *exactly*;
+//! - [`FaultPlan::from_env`] builds a seeded plan from
+//!   `DEINSUM_FAULT_SEED`, enabling a CI chaos leg that runs the whole
+//!   serving suite under injected panics and latency with zero code
+//!   changes.  The seeded plan only targets the serving-layer sites
+//!   (`serve.*`) whose recovery machinery guarantees a closed loop still
+//!   completes; direct `Program::run` traffic is never failed by it.
+//!
+//! The plan is threaded through the stack by handle:
+//! [`crate::api::SessionBuilder::fault_plan`] installs it on the
+//! [`crate::runtime::KernelEngine`] (whose dispatch methods and the
+//! run loop check the `engine.*` / `run_plan.*` sites), and
+//! [`crate::serve::ServerBuilder`] inherits the session's plan (or takes
+//! its own) for the `serve.*` sites.  A site check against an absent
+//! plan is a single branch — production traffic pays nothing.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+
+/// What an armed site does when its schedule fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// `panic!` at the site.  Contained or fatal depending on where the
+    /// site sits: `serve.run` panics are caught by per-request
+    /// containment, `serve.worker` panics kill the worker incarnation
+    /// and exercise the supervisor.
+    Panic,
+    /// Return a typed [`Error::Transient`] from the site — the retryable
+    /// failure class (a flaky interconnect, a transiently-failing PJRT
+    /// execute).
+    Transient,
+    /// Sleep for the given duration at the site, then continue — a hung
+    /// or slow kernel, for deadline/timeout coverage.
+    Latency(Duration),
+}
+
+/// When a rule fires, in site-invocation ticks (0-based).
+#[derive(Debug, Clone)]
+enum Ticks {
+    /// Fire at exactly these ticks.
+    At(Vec<u64>),
+    /// Fire whenever `tick % stride == offset`.
+    Every { stride: u64, offset: u64 },
+}
+
+impl Ticks {
+    fn fires(&self, tick: u64) -> bool {
+        match self {
+            Ticks::At(ts) => ts.contains(&tick),
+            Ticks::Every { stride, offset } => {
+                *stride > 0 && tick % *stride == *offset % *stride
+            }
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Rule {
+    kind: FaultKind,
+    ticks: Ticks,
+    fired: AtomicU64,
+}
+
+#[derive(Debug)]
+struct Site {
+    name: String,
+    tick: AtomicU64,
+    rules: Vec<Rule>,
+}
+
+/// Per-site totals of faults actually fired (what tests compare
+/// recovery counters against).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct FiredCounts {
+    /// Panics raised at the site.
+    pub panics: u64,
+    /// Transient errors returned from the site.
+    pub transients: u64,
+    /// Latency injections slept at the site.
+    pub latencies: u64,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    sites: Vec<Site>,
+}
+
+/// A deterministic fault-injection schedule.  Cheap to clone (shared by
+/// `Arc`): the engine, the run loop, and every serving worker hold the
+/// same plan, so per-site tick counters are global to the process's view
+/// of that plan.  See the [module docs](self).
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    inner: Arc<Inner>,
+}
+
+/// Builder state: `FaultPlan`'s scheduling methods consume and return
+/// the plan, so construction reads as a literal description of the
+/// chaos: `FaultPlan::new().panic_at("serve.worker", &[4]).
+/// transient_at("serve.run", &[2, 9])`.
+impl FaultPlan {
+    /// An empty plan (no site ever fires).
+    pub fn new() -> Self {
+        FaultPlan::default()
+    }
+
+    fn add(mut self, site: &str, kind: FaultKind, ticks: Ticks) -> Self {
+        // Plans are built before being shared; the Arc is still unique.
+        let inner = Arc::get_mut(&mut self.inner)
+            .expect("FaultPlan schedules must be added before the plan is shared");
+        let rule = Rule { kind, ticks, fired: AtomicU64::new(0) };
+        match inner.sites.iter_mut().find(|s| s.name == site) {
+            Some(s) => s.rules.push(rule),
+            None => inner.sites.push(Site {
+                name: site.to_string(),
+                tick: AtomicU64::new(0),
+                rules: vec![rule],
+            }),
+        }
+        self
+    }
+
+    /// Panic at `site` on exactly these invocation ticks (0-based).
+    pub fn panic_at(self, site: &str, ticks: &[u64]) -> Self {
+        self.add(site, FaultKind::Panic, Ticks::At(ticks.to_vec()))
+    }
+
+    /// Return a transient error from `site` on exactly these ticks.
+    pub fn transient_at(self, site: &str, ticks: &[u64]) -> Self {
+        self.add(site, FaultKind::Transient, Ticks::At(ticks.to_vec()))
+    }
+
+    /// Sleep `latency` at `site` on exactly these ticks.
+    pub fn latency_at(self, site: &str, latency: Duration, ticks: &[u64]) -> Self {
+        self.add(site, FaultKind::Latency(latency), Ticks::At(ticks.to_vec()))
+    }
+
+    /// Panic at `site` whenever `tick % stride == offset`.
+    pub fn panic_every(self, site: &str, stride: u64, offset: u64) -> Self {
+        self.add(site, FaultKind::Panic, Ticks::Every { stride, offset })
+    }
+
+    /// Transient error at `site` whenever `tick % stride == offset`.
+    pub fn transient_every(self, site: &str, stride: u64, offset: u64) -> Self {
+        self.add(site, FaultKind::Transient, Ticks::Every { stride, offset })
+    }
+
+    /// Latency at `site` whenever `tick % stride == offset`.
+    pub fn latency_every(
+        self,
+        site: &str,
+        latency: Duration,
+        stride: u64,
+        offset: u64,
+    ) -> Self {
+        self.add(site, FaultKind::Latency(latency), Ticks::Every { stride, offset })
+    }
+
+    /// The seeded chaos plan behind the CI fault leg: reads
+    /// `DEINSUM_FAULT_SEED` and, when set, returns
+    /// [`seeded`](Self::seeded)`(seed)`.  `None` (no injection at all)
+    /// when the variable is unset or unparseable.
+    pub fn from_env() -> Option<FaultPlan> {
+        let seed = std::env::var("DEINSUM_FAULT_SEED").ok()?.trim().parse::<u64>().ok()?;
+        Some(Self::seeded(seed))
+    }
+
+    /// A deterministic seeded plan targeting only the serving layer's
+    /// *recoverable* sites — transient run errors (retried by the
+    /// server), worker-loop panics (restarted by the supervisor), and
+    /// small latencies — so a full serving workload under this plan must
+    /// still complete every ticket.  Direct `Program::run` paths are
+    /// untouched: the seed varies stride offsets, not the target sites.
+    pub fn seeded(seed: u64) -> FaultPlan {
+        // SplitMix64: decorrelate the offsets from small seeds.
+        let mut s = seed.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        let mut next = move || {
+            s = s.wrapping_add(0x9e37_79b9_7f4a_7c15);
+            let mut z = s;
+            z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+            z ^ (z >> 31)
+        };
+        FaultPlan::new()
+            .transient_every(site::SERVE_RUN, 7, next() % 7)
+            .panic_every(site::SERVE_WORKER, 13, next() % 13)
+            .latency_every(
+                site::SERVE_WORKER,
+                Duration::from_micros(500),
+                5,
+                next() % 5,
+            )
+    }
+
+    /// True when at least one rule targets `site` (cheap pre-check for
+    /// hot paths that want to skip string work entirely).
+    pub fn arms(&self, site: &str) -> bool {
+        self.inner.sites.iter().any(|s| s.name == site)
+    }
+
+    /// Totals of faults actually fired at `site` so far.
+    pub fn fired(&self, site: &str) -> FiredCounts {
+        let mut c = FiredCounts::default();
+        if let Some(s) = self.inner.sites.iter().find(|s| s.name == site) {
+            for r in &s.rules {
+                let n = r.fired.load(Ordering::Relaxed);
+                match r.kind {
+                    FaultKind::Panic => c.panics += n,
+                    FaultKind::Transient => c.transients += n,
+                    FaultKind::Latency(_) => c.latencies += n,
+                }
+            }
+        }
+        c
+    }
+
+    /// Times `site` has been checked (the tick counter's current value).
+    pub fn hits(&self, site: &str) -> u64 {
+        self.inner
+            .sites
+            .iter()
+            .find(|s| s.name == site)
+            .map(|s| s.tick.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Evaluate one invocation of `site`: bump its tick, sleep through
+    /// any latency rule that fires, then return `Err(Transient)` or
+    /// panic if an error rule fires.  Sites that cannot surface a
+    /// `Result` use [`check_abort`](Self::check_abort) instead.
+    pub fn check(&self, site: &str) -> Result<()> {
+        match self.evaluate(site) {
+            None => Ok(()),
+            Some((tick, FaultKind::Transient)) => Err(Error::transient(format!(
+                "injected transient fault at {site} (tick {tick})"
+            ))),
+            Some((tick, FaultKind::Panic)) => {
+                panic!("injected panic at {site} (tick {tick})")
+            }
+            Some((_, FaultKind::Latency(_))) => unreachable!("latency handled inline"),
+        }
+    }
+
+    /// [`check`](Self::check) for sites with no error channel: transient
+    /// rules escalate to panics too (at an uncontained site like
+    /// `serve.worker`, any injected failure means the worker dies).
+    pub fn check_abort(&self, site: &str) {
+        if let Some((tick, kind)) = self.evaluate(site) {
+            panic!("injected {kind:?} at {site} (tick {tick})");
+        }
+    }
+
+    /// Shared tick-advance + rule walk.  Latency rules fire inline (and
+    /// several may fire on one tick); the first error-class rule that
+    /// fires is returned for the caller to raise.
+    fn evaluate(&self, site: &str) -> Option<(u64, FaultKind)> {
+        let s = self.inner.sites.iter().find(|s| s.name == site)?;
+        let tick = s.tick.fetch_add(1, Ordering::Relaxed);
+        let mut hit: Option<(u64, FaultKind)> = None;
+        for r in &s.rules {
+            if !r.ticks.fires(tick) {
+                continue;
+            }
+            match r.kind {
+                FaultKind::Latency(d) => {
+                    r.fired.fetch_add(1, Ordering::Relaxed);
+                    std::thread::sleep(d);
+                }
+                kind => {
+                    if hit.is_none() {
+                        r.fired.fetch_add(1, Ordering::Relaxed);
+                        hit = Some((tick, kind));
+                    }
+                }
+            }
+        }
+        hit
+    }
+}
+
+/// An optional shared fault plan — what the engine and serving layer
+/// actually store.  `Faults::none()` checks compile to one branch on a
+/// `None`, so the production hot path is unaffected.
+#[derive(Debug, Clone, Default)]
+pub struct Faults(Option<FaultPlan>);
+
+impl Faults {
+    /// No injection (the production default when `DEINSUM_FAULT_SEED` is
+    /// unset).
+    pub fn none() -> Self {
+        Faults(None)
+    }
+
+    /// Wrap an explicit plan.
+    pub fn plan(plan: FaultPlan) -> Self {
+        Faults(Some(plan))
+    }
+
+    /// The environment-driven default: `DEINSUM_FAULT_SEED` or nothing.
+    pub fn from_env() -> Self {
+        Faults(FaultPlan::from_env())
+    }
+
+    /// The underlying plan, if any (tests read fired counts off it).
+    pub fn get(&self) -> Option<&FaultPlan> {
+        self.0.as_ref()
+    }
+
+    /// Is any plan installed at all?
+    pub fn active(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// [`FaultPlan::check`] against the installed plan (no-op without one).
+    #[inline]
+    pub fn check(&self, site: &str) -> Result<()> {
+        match &self.0 {
+            None => Ok(()),
+            Some(p) => p.check(site),
+        }
+    }
+
+    /// [`FaultPlan::check_abort`] against the installed plan.
+    #[inline]
+    pub fn check_abort(&self, site: &str) {
+        if let Some(p) = &self.0 {
+            p.check_abort(site);
+        }
+    }
+}
+
+/// Canonical site names, so callers and tests never drift on strings.
+pub mod site {
+    /// Checked by every serving worker once per batch-serve loop,
+    /// *outside* per-request panic containment: a panic here kills the
+    /// worker incarnation and exercises the supervisor.
+    pub const SERVE_WORKER: &str = "serve.worker";
+    /// Checked inside per-request containment immediately before the
+    /// program runs: panics are contained to the request, transients are
+    /// retryable run failures.
+    pub const SERVE_RUN: &str = "serve.run";
+    /// Checked inside compile containment before a worker instantiates a
+    /// program: a panic here costs the request a typed error (compile
+    /// failures are deterministic — never retried).
+    pub const SERVE_COMPILE: &str = "serve.compile";
+    /// Checked by the run loop once per plan term.
+    pub const RUN_PLAN_TERM: &str = "run_plan.term";
+    /// Checked by the engine's GEMM dispatch.
+    pub const ENGINE_GEMM: &str = "engine.gemm";
+    /// Checked by the engine's fused-MTTKRP dispatch.
+    pub const ENGINE_MTTKRP: &str = "engine.mttkrp";
+    /// Checked by the engine's binary-einsum dispatch.
+    pub const ENGINE_EINSUM2: &str = "engine.einsum2";
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn explicit_ticks_fire_exactly_once_each() {
+        let plan = FaultPlan::new().transient_at("t.site", &[1, 3]);
+        let results: Vec<bool> = (0..6).map(|_| plan.check("t.site").is_err()).collect();
+        assert_eq!(results, vec![false, true, false, true, false, false]);
+        assert_eq!(plan.fired("t.site").transients, 2);
+        assert_eq!(plan.hits("t.site"), 6);
+        // Unknown sites never fire and never count.
+        assert!(plan.check("other.site").is_ok());
+        assert_eq!(plan.hits("other.site"), 0);
+    }
+
+    #[test]
+    fn stride_schedule_is_periodic() {
+        let plan = FaultPlan::new().transient_every("s", 3, 1);
+        let errs = (0..9).filter(|_| plan.check("s").is_err()).count();
+        assert_eq!(errs, 3, "ticks 1, 4, 7");
+    }
+
+    #[test]
+    fn panic_rule_panics_and_counts() {
+        let plan = FaultPlan::new().panic_at("p", &[0]);
+        let p2 = plan.clone();
+        let r = std::panic::catch_unwind(move || p2.check("p").unwrap());
+        assert!(r.is_err());
+        assert_eq!(plan.fired("p").panics, 1);
+        assert!(plan.check("p").is_ok(), "tick 1 is clean");
+    }
+
+    #[test]
+    fn latency_rule_delays_then_succeeds() {
+        let plan =
+            FaultPlan::new().latency_at("l", Duration::from_millis(5), &[0]);
+        let t0 = std::time::Instant::now();
+        assert!(plan.check("l").is_ok());
+        assert!(t0.elapsed() >= Duration::from_millis(5));
+        assert_eq!(plan.fired("l").latencies, 1);
+    }
+
+    #[test]
+    fn transient_error_is_typed_and_retryable() {
+        let plan = FaultPlan::new().transient_at("x", &[0]);
+        let err = plan.check("x").unwrap_err();
+        assert!(matches!(err, Error::Transient(_)));
+        assert!(err.is_retryable());
+    }
+
+    #[test]
+    fn seeded_plan_targets_only_recoverable_serve_sites() {
+        let plan = FaultPlan::seeded(42);
+        assert!(plan.arms(site::SERVE_RUN));
+        assert!(plan.arms(site::SERVE_WORKER));
+        for never in
+            [site::SERVE_COMPILE, site::RUN_PLAN_TERM, site::ENGINE_GEMM, site::ENGINE_EINSUM2]
+        {
+            assert!(!plan.arms(never), "{never} must stay clean under the seeded plan");
+        }
+        // Same seed, same schedule.
+        let a = FaultPlan::seeded(7);
+        let b = FaultPlan::seeded(7);
+        let fire = |p: &FaultPlan| -> Vec<bool> {
+            (0..40).map(|_| p.check(site::SERVE_RUN).is_err()).collect()
+        };
+        assert_eq!(fire(&a), fire(&b));
+    }
+
+    #[test]
+    fn faults_none_is_inert() {
+        let f = Faults::none();
+        assert!(!f.active());
+        assert!(f.check("anything").is_ok());
+        f.check_abort("anything");
+    }
+}

@@ -171,6 +171,65 @@
 //! `cargo bench --bench hotpath` tracks serving throughput as
 //! `serve_throughput_1w` / `serve_throughput_8w`, and
 //! `examples/serving.rs` drives a closed-loop mixed MTTKRP/TTMc load.
+//!
+//! ## Robustness
+//!
+//! Since 0.7.0 the serving stack treats failure as traffic with a typed
+//! answer at every layer, and every accepted ticket **resolves** —
+//! filled or failed, never hung:
+//!
+//! - **Admission control**: [`Server::try_submit`] sheds on a full
+//!   queue with [`Error::QueueFull`] instead of blocking, and
+//!   [`Server::submit_with_deadline`] bounds both the backpressure wait
+//!   and the request's queue residency with
+//!   [`Error::DeadlineExceeded`].  A shut-down server answers
+//!   [`Error::ServerShutdown`].
+//! - **Bounded waits**: [`Ticket::wait_timeout`] gives up after a bound
+//!   with [`Error::DeadlineExceeded`]; the worker still fulfills the
+//!   abandoned slot, so nothing leaks.
+//! - **Containment, retry, supervision**: planner/kernel panics are
+//!   contained to the request; transient failures
+//!   ([`Error::is_retryable`]) are retried with exponential backoff up
+//!   to [`ServerBuilder::max_retries`]; a worker that dies outside
+//!   containment is restarted by a supervisor with a fresh warm-program
+//!   LRU, its in-flight requests requeued or failed with
+//!   [`Error::WorkerLost`].  [`ServeStats`] exposes the
+//!   `shed`/`timeouts`/`retries`/`restarts` counters.
+//! - **Rehearsal**: the deterministic [`fault`] injection seam
+//!   ([`FaultPlan`], threaded via [`SessionBuilder::fault_plan`] /
+//!   `ServerBuilder::fault_plan`, env-armed by `DEINSUM_FAULT_SEED`)
+//!   drives every recovery path in `tests/faults.rs` and a CI chaos
+//!   leg.  Library mutexes are poison-tolerant throughout: a contained
+//!   panic never wedges an unrelated thread on a poisoned lock.
+//!
+//! ```
+//! use std::sync::Arc;
+//! use std::time::Duration;
+//! use deinsum::{Error, ServeRequest, Server, Session, Tensor};
+//! # fn main() -> deinsum::Result<()> {
+//! let session = Session::builder().ranks(2).build()?;
+//! let server = Server::builder(session).workers(1).build();
+//! let shapes = vec![vec![8, 6], vec![6, 4]];
+//! let request = ServeRequest {
+//!     tenant: "latency-sensitive".into(),
+//!     expr: "ij,jk->ik".into(),
+//!     shapes: shapes.clone(),
+//!     inputs: Arc::new(vec![Tensor::random(&[8, 6], 1), Tensor::random(&[6, 4], 2)]),
+//!     dest: Tensor::zeros(&Server::output_dims("ij,jk->ik", &shapes)?),
+//! };
+//! // Non-blocking admission + bounded wait: every outcome is typed.
+//! match server.try_submit(request) {
+//!     Ok(ticket) => match ticket.wait_timeout(Duration::from_secs(30)) {
+//!         Ok(reply) => assert_eq!(reply.output.dims(), &[8, 4]),
+//!         Err(Error::DeadlineExceeded) => { /* give up; the worker still resolves the slot */ }
+//!         Err(e) => return Err(e),
+//!     },
+//!     Err(Error::QueueFull) => { /* shed: back off and resubmit later */ }
+//!     Err(e) => return Err(e),
+//! }
+//! # Ok(())
+//! # }
+//! ```
 
 pub mod api;
 pub mod baseline;
@@ -180,6 +239,7 @@ pub mod coordinator;
 pub mod dist;
 pub mod einsum;
 pub mod error;
+pub mod fault;
 pub mod grid;
 pub mod planner;
 pub mod redist;
@@ -187,11 +247,13 @@ pub mod runtime;
 pub mod serve;
 pub mod sim;
 pub mod soap;
+mod sync;
 pub mod tensor;
 
 pub use api::{PlanCacheStats, Program, RunStats, Session, SessionBuilder};
 pub use coordinator::{RunMetrics, RunReport};
 pub use error::{Error, Result};
+pub use fault::{FaultKind, FaultPlan};
 pub use serve::{ServeReply, ServeRequest, ServeStats, Server, ServerBuilder, Ticket};
 pub use tensor::kernel::{KernelConfig, ScratchPool, ScratchStats};
 pub use tensor::Tensor;

@@ -31,7 +31,9 @@ use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 
 use crate::error::{Error, Result};
+use crate::fault::{self, Faults};
 use crate::planner::TermPlan;
+use crate::sync;
 use crate::tensor::kernel::{KernelConfig, ScratchPool, ScratchStats};
 use crate::tensor::{contract, Tensor};
 
@@ -174,11 +176,11 @@ impl Engine {
     }
 
     pub fn stats(&self) -> EngineStats {
-        self.stats.lock().unwrap().clone()
+        sync::lock(&self.stats).clone()
     }
 
     fn bump(&self, f: impl FnOnce(&mut EngineStats)) {
-        f(&mut self.stats.lock().unwrap());
+        f(&mut sync::lock(&self.stats));
     }
 
     /// Find a variant by name.
@@ -187,7 +189,7 @@ impl Engine {
     }
 
     fn executable(&self, v: &Variant) -> Result<Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.cache.lock().unwrap().get(&v.name) {
+        if let Some(e) = sync::lock(&self.cache).get(&v.name) {
             return Ok(e.clone());
         }
         // Compile outside the lock (it can be slow); a concurrent racer
@@ -202,13 +204,7 @@ impl Engine {
             .map_err(|e| Error::runtime(format!("compile {}: {e}", v.name)))?;
         self.bump(|s| s.compiles += 1);
         let exe = Arc::new(exe);
-        let exe = self
-            .cache
-            .lock()
-            .unwrap()
-            .entry(v.name.clone())
-            .or_insert(exe)
-            .clone();
+        let exe = sync::lock(&self.cache).entry(v.name.clone()).or_insert(exe).clone();
         Ok(exe)
     }
 
@@ -323,6 +319,11 @@ pub struct KernelEngine {
     engine_id: u64,
     /// Packing + fold scratch, reused across steps.
     scratch: ScratchPool,
+    /// Deterministic fault-injection seam ([`crate::fault`]): dispatch
+    /// methods check their `engine.*` sites against it.  Defaults to the
+    /// environment plan (`DEINSUM_FAULT_SEED`), which arms no `engine.*`
+    /// sites — production dispatch pays one `None` branch.
+    faults: Faults,
 }
 
 impl Drop for KernelEngine {
@@ -355,6 +356,7 @@ impl KernelEngine {
             base_config: config,
             engine_id: next_engine_id(),
             scratch: ScratchPool::new(),
+            faults: Faults::from_env(),
         }
     }
 
@@ -369,11 +371,23 @@ impl KernelEngine {
             base_config: config,
             engine_id: next_engine_id(),
             scratch: ScratchPool::new(),
+            faults: Faults::from_env(),
         })
     }
 
     pub fn backend(&self) -> Backend {
         self.backend
+    }
+
+    /// Install an explicit fault-injection plan (replaces the
+    /// environment-seeded default).  See [`crate::fault`].
+    pub fn set_faults(&mut self, faults: Faults) {
+        self.faults = faults;
+    }
+
+    /// The installed fault seam (tests read fired counts off its plan).
+    pub fn faults(&self) -> &Faults {
+        &self.faults
     }
 
     /// The native-kernel configuration this engine currently dispatches
@@ -476,6 +490,7 @@ impl KernelEngine {
 
     /// `C[m,n] = A[m,k] @ B[k,n]`.
     pub fn gemm(&self, a: &Tensor, b: &Tensor) -> Result<Tensor> {
+        self.faults.check(fault::site::ENGINE_GEMM)?;
         if self.backend == Backend::Pjrt {
             let (m, k) = (a.dims()[0], a.dims()[1]);
             let n = b.dims()[1];
@@ -579,6 +594,7 @@ impl KernelEngine {
     /// Fused mode-`mode` MTTKRP. `factors` lists all `order` factor slots;
     /// the `mode` slot is ignored.
     pub fn mttkrp(&self, x: &Tensor, factors: &[&Tensor], mode: usize) -> Result<Tensor> {
+        self.faults.check(fault::site::ENGINE_MTTKRP)?;
         if let Some(res) = self.mttkrp_pjrt(x, factors, mode) {
             return res;
         }
@@ -598,6 +614,7 @@ impl KernelEngine {
         mode: usize,
         dest: &mut Tensor,
     ) -> Result<()> {
+        self.faults.check(fault::site::ENGINE_MTTKRP)?;
         if let Some(res) = self.mttkrp_pjrt(x, factors, mode) {
             return dest.copy_from(&res?);
         }
@@ -618,6 +635,7 @@ impl KernelEngine {
         y_idx: &[char],
         out_idx: &[char],
     ) -> Result<Tensor> {
+        self.faults.check(fault::site::ENGINE_EINSUM2)?;
         if let Some(engine) = self.engine.as_ref() {
             engine.bump(|s| s.native += 1);
         }
@@ -638,6 +656,7 @@ impl KernelEngine {
         out_idx: &[char],
         dest: &mut Tensor,
     ) -> Result<()> {
+        self.faults.check(fault::site::ENGINE_EINSUM2)?;
         if let Some(engine) = self.engine.as_ref() {
             engine.bump(|s| s.native += 1);
         }

@@ -57,6 +57,8 @@
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
+use crate::sync;
+
 /// Maximum participants in one parallel region (caller + workers); also
 /// bounds the pool's worker-thread count.
 pub const MAX_WORKERS: usize = 64;
@@ -150,7 +152,7 @@ impl Job {
                 // completion: if this was the job's last task, the
                 // submitter must observe it when it wakes.
                 if let Err(payload) = result {
-                    let mut slot = self.panic_payload.lock().unwrap();
+                    let mut slot = sync::lock(&self.panic_payload);
                     if slot.is_none() {
                         *slot = Some(payload);
                     }
@@ -165,15 +167,15 @@ impl Job {
     /// decrement, which the submitter acquires through `done`'s mutex.
     fn finish_one(&self) {
         if self.unfinished.fetch_sub(1, Ordering::AcqRel) == 1 {
-            *self.done.lock().unwrap() = true;
+            *sync::lock(&self.done) = true;
             self.done_cv.notify_all();
         }
     }
 
     fn wait(&self) {
-        let mut d = self.done.lock().unwrap();
+        let mut d = sync::lock(&self.done);
         while !*d {
-            d = self.done_cv.wait(d).unwrap();
+            d = sync::wait(&self.done_cv, d);
         }
     }
 }
@@ -255,7 +257,7 @@ impl Drop for WorkerPool {
         // No `run` can be in flight (it borrows &self), so workers are
         // idle or finishing their last tasks; tell them to exit instead
         // of parking again.  The global pool is never dropped.
-        self.shared.state.lock().unwrap().shutdown = true;
+        sync::lock(&self.shared.state).shutdown = true;
         self.shared.work_cv.notify_all();
     }
 }
@@ -273,7 +275,7 @@ impl WorkerPool {
     }
 
     pub fn stats(&self) -> PoolStats {
-        let workers = self.shared.state.lock().unwrap().workers;
+        let workers = sync::lock(&self.shared.state).workers;
         PoolStats {
             jobs: self.shared.counters.jobs.load(Ordering::Relaxed),
             tasks: self.shared.counters.tasks.load(Ordering::Relaxed),
@@ -315,7 +317,7 @@ impl WorkerPool {
             unsafe { std::mem::transmute(erased) };
         let job = Arc::new(Job::new(work_static, n_tasks, threads));
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = sync::lock(&self.shared.state);
             // Grow the worker set on demand (never shrinks: persistence
             // is the point).
             let want = (threads - 1).min(MAX_WORKERS - 1);
@@ -336,12 +338,12 @@ impl WorkerPool {
             // _wait blocks here until every task is done.
         }
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = sync::lock(&self.shared.state);
             st.jobs.retain(|j| !Arc::ptr_eq(j, &job));
         }
         // Re-raise a task panic with its original payload, like the
         // scoped-spawn dispatch did.
-        if let Some(payload) = job.panic_payload.lock().unwrap().take() {
+        if let Some(payload) = sync::lock(&job.panic_payload).take() {
             std::panic::resume_unwind(payload);
         }
     }
@@ -350,7 +352,7 @@ impl WorkerPool {
 fn worker_loop(shared: Arc<Shared>) {
     loop {
         let job: Arc<Job> = {
-            let mut st = shared.state.lock().unwrap();
+            let mut st = sync::lock(&shared.state);
             loop {
                 st.jobs.retain(|j| j.has_claimable());
                 // Fairness across concurrent submitters: join the job
@@ -370,7 +372,7 @@ fn worker_loop(shared: Arc<Shared>) {
                     return;
                 }
                 // Park until a new job is published.
-                st = shared.work_cv.wait(st).unwrap();
+                st = sync::wait(&shared.work_cv, st);
             }
         };
         let slot = job.joiners.fetch_add(1, Ordering::Relaxed);

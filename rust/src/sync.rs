@@ -1,0 +1,67 @@
+//! Poison-tolerant synchronization helpers.
+//!
+//! Every `Mutex` in this crate guards state whose invariants are
+//! re-established at well-defined points (counters, free lists, caches
+//! keyed by value), so a panic while holding the lock never leaves the
+//! data structurally broken — only *stale*, which every consumer already
+//! tolerates.  Propagating `std`'s poison flag would instead let one
+//! contained panic (a per-request `catch_unwind` in the serving layer, a
+//! worker that the supervisor is about to restart) cascade `unwrap`
+//! panics into every unrelated tenant touching the same pool or cache.
+//! These helpers recover the guard unconditionally.
+
+use std::sync::{Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+use std::time::Duration;
+
+/// `m.lock()` that shrugs off poisoning instead of panicking.
+#[inline]
+pub(crate) fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// `cv.wait(guard)` that shrugs off poisoning.
+#[inline]
+pub(crate) fn wait<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(|p| p.into_inner())
+}
+
+/// `cv.wait_timeout(guard, dur)` that shrugs off poisoning.
+#[inline]
+pub(crate) fn wait_timeout<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    dur: Duration,
+) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+    cv.wait_timeout(guard, dur).unwrap_or_else(|p| p.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn lock_recovers_from_poison() {
+        let m = Arc::new(Mutex::new(41u32));
+        let m2 = Arc::clone(&m);
+        // Poison the mutex by panicking while holding it.
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex should be poisoned");
+        let mut g = lock(&m);
+        *g += 1;
+        assert_eq!(*g, 42, "state survives poison recovery");
+    }
+
+    #[test]
+    fn wait_timeout_times_out_cleanly() {
+        let m = Mutex::new(());
+        let cv = Condvar::new();
+        let g = lock(&m);
+        let (_g, res) = wait_timeout(&cv, g, Duration::from_millis(1));
+        assert!(res.timed_out());
+    }
+}

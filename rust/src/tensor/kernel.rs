@@ -171,12 +171,12 @@ impl KernelConfig {
     /// The process-wide config used by the convenience entry points
     /// (`contract::gemm_into` etc.).
     pub fn global() -> KernelConfig {
-        *global_config().lock().unwrap()
+        *crate::sync::lock(global_config())
     }
 
     /// Replace the process-wide config.
     pub fn install_global(cfg: KernelConfig) {
-        *global_config().lock().unwrap() = cfg.normalized();
+        *crate::sync::lock(global_config()) = cfg.normalized();
     }
 }
 
@@ -256,7 +256,7 @@ impl ScratchPool {
         self.takes.fetch_add(1, Ordering::Relaxed);
         let class = Self::class_of(len);
         let reused = {
-            let mut list = self.free[Self::class_index(class)].lock().unwrap();
+            let mut list = crate::sync::lock(&self.free[Self::class_index(class)]);
             match list.pop() {
                 // Only the clamped top class can mix sizes; everywhere
                 // else buffers sit at exactly their class size.
@@ -295,7 +295,7 @@ impl ScratchPool {
     /// Drop every pooled buffer (frees memory; counters keep their values).
     pub fn clear(&self) {
         for list in &self.free {
-            list.lock().unwrap().clear();
+            crate::sync::lock(list).clear();
         }
     }
 }
@@ -329,7 +329,7 @@ impl Drop for ScratchBuf<'_> {
         // Buffers are allocated at exactly their class size and never
         // resized, so buf.len() is the class value.
         let idx = ScratchPool::class_index(buf.len());
-        self.pool.free[idx].lock().unwrap().push(buf);
+        crate::sync::lock(&self.pool.free[idx]).push(buf);
     }
 }
 

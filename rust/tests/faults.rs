@@ -1,0 +1,494 @@
+//! Fault-tolerance acceptance suite for the 0.7.0 serving stack: under
+//! a deterministic [`FaultPlan`] injecting worker panics, transient run
+//! failures and latency into a mixed-traffic loop, every submitted
+//! ticket resolves (filled or typed error — none hang), successful
+//! results stay bitwise identical to a fault-free serial run, the
+//! `ServeStats` restart/shed/timeout/retry counters match the injected
+//! plan exactly, and steady-state tensor allocations are flat again
+//! after recovery.
+//!
+//! Every server in this file installs an *explicit* plan via
+//! `ServerBuilder::fault_plan`, so the suite is deterministic whether or
+//! not the CI chaos leg's `DEINSUM_FAULT_SEED` is set in the
+//! environment (the env-seeded plan only arms `serve.*` sites, which an
+//! explicit plan overrides; the serial reference paths below touch only
+//! `engine.*`/`run_plan.*` sites, which the seeded plan never arms).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use deinsum::fault::site;
+use deinsum::{Error, FaultPlan, ServeRequest, Server, Session, Tensor, Ticket};
+
+/// The mixed workload from `tests/serving.rs`: eight distinct program
+/// keys spanning MTTKRP (all modes, one permuted), TTMc, GEMM and a
+/// chain.
+fn mixed_workload() -> Vec<(&'static str, Vec<Vec<usize>>)> {
+    let n = 12usize;
+    let r = 4usize;
+    vec![
+        ("ijk,ja,ka->ia", vec![vec![n, n, n], vec![n, r], vec![n, r]]),
+        ("ijk,ia,ka->ja", vec![vec![n, n, n], vec![n, r], vec![n, r]]),
+        ("ijk,ia,ja->ka", vec![vec![n, n, n], vec![n, r], vec![n, r]]),
+        ("ijk,ja,ka->ai", vec![vec![n, n, n], vec![n, r], vec![n, r]]),
+        ("ijkl,jb,kc,ld->ibcd", vec![vec![6, 6, 6, 6], vec![6, 3], vec![6, 3], vec![6, 3]]),
+        ("ij,jk->ik", vec![vec![16, 12], vec![12, 8]]),
+        ("ij,jk->ki", vec![vec![16, 12], vec![12, 8]]),
+        ("ij,jk,kl->il", vec![vec![10, 8], vec![8, 12], vec![12, 6]]),
+    ]
+}
+
+fn inputs_for(shapes: &[Vec<usize>], seed: u64) -> Arc<Vec<Tensor>> {
+    Arc::new(
+        shapes
+            .iter()
+            .enumerate()
+            .map(|(i, s)| Tensor::random(s, seed + i as u64))
+            .collect(),
+    )
+}
+
+/// Fault-free serial references on an independent session (identical
+/// settings → identical plans → bitwise-identical outputs).
+fn serial_references(
+    ranks: usize,
+    work: &[(&'static str, Vec<Vec<usize>>)],
+    inputs: &[Arc<Vec<Tensor>>],
+) -> Vec<Tensor> {
+    let s = Session::builder().ranks(ranks).build().unwrap();
+    work.iter()
+        .zip(inputs)
+        .map(|((expr, shapes), ins)| s.compile(expr, shapes).unwrap().run(ins).unwrap().output)
+        .collect()
+}
+
+fn request_for(
+    tenant: &str,
+    (expr, shapes): &(&'static str, Vec<Vec<usize>>),
+    ins: &Arc<Vec<Tensor>>,
+) -> ServeRequest {
+    ServeRequest {
+        tenant: tenant.into(),
+        expr: (*expr).into(),
+        shapes: shapes.clone(),
+        inputs: Arc::clone(ins),
+        dest: Tensor::zeros(&Server::output_dims(expr, shapes).unwrap()),
+    }
+}
+
+/// The acceptance pin: 8 workers, two tenants, three rounds of mixed
+/// traffic under explicit worker panics + transient run failures +
+/// injected latency.  With `max_retries` at least the total number of
+/// error-class faults, no request can exhaust its budget, so every
+/// ticket must resolve `Ok` and bitwise-match the serial reference.
+#[test]
+fn chaos_mixed_traffic_resolves_every_ticket_bitwise_identical() {
+    let work = mixed_workload();
+    let inputs: Vec<Arc<Vec<Tensor>>> =
+        (0..work.len()).map(|i| inputs_for(&work[i].1, 9000 + 100 * i as u64)).collect();
+    let reference = serial_references(4, &work, &inputs);
+
+    // 4 transients + 2 panics = 6 error-class fault events.  All ticks
+    // are below the chaos phase's guaranteed site traffic (48 requests →
+    // ≥ 48 ticks at serve.run and serve.worker), so every rule fires
+    // during the chaos phase and none later.
+    let plan = FaultPlan::new()
+        .transient_at(site::SERVE_RUN, &[2, 9, 17, 26])
+        .panic_at(site::SERVE_WORKER, &[5, 19])
+        .latency_at(site::SERVE_WORKER, Duration::from_micros(200), &[3, 11]);
+    let session = Session::builder().ranks(4).build().unwrap();
+    let server = Server::builder(session)
+        .workers(8)
+        .queue_capacity(32)
+        .max_retries(6)
+        .fault_plan(plan.clone())
+        .build();
+
+    let submit_round = |tenant: &str| -> Vec<Ticket> {
+        work.iter()
+            .zip(&inputs)
+            .map(|(key, ins)| server.submit(request_for(tenant, key, ins)).unwrap())
+            .collect()
+    };
+
+    // Chaos phase: 3 rounds × 2 tenants × 8 keys = 48 requests in
+    // flight while every scheduled fault fires.
+    let mut rounds = Vec::new();
+    for _ in 0..3 {
+        for tenant in ["tenant-a", "tenant-b"] {
+            rounds.push(submit_round(tenant));
+        }
+    }
+    for tickets in rounds {
+        for (ticket, want) in tickets.into_iter().zip(&reference) {
+            let reply = ticket.wait().expect("budget covers every injected fault");
+            assert!(
+                reply.output.allclose(want, 0.0, 0.0),
+                "served output diverged from fault-free serial reference"
+            );
+        }
+    }
+
+    let fired_panics = plan.fired(site::SERVE_WORKER).panics;
+    let fired_transients = plan.fired(site::SERVE_RUN).transients;
+    let fired_latencies = plan.fired(site::SERVE_WORKER).latencies;
+    assert_eq!(fired_panics, 2, "both worker-panic ticks were reached");
+    assert_eq!(fired_transients, 4, "all transient ticks were reached");
+    assert_eq!(fired_latencies, 2, "both latency ticks were reached");
+
+    let st = server.stats();
+    assert_eq!(st.completed, 48, "every chaos-phase request completed: {st:?}");
+    assert_eq!(st.errors, 0);
+    assert_eq!(st.in_flight, 0);
+    // The recovery counters match the injected plan exactly: one
+    // supervisor restart per uncontained panic, no sheds and no
+    // timeouts (the plan injects neither), at least one retry per
+    // transient (worker crashes requeue whatever they held, so retries
+    // may exceed the transient count).
+    assert_eq!(st.restarts, fired_panics, "restarts must match injected panics: {st:?}");
+    assert_eq!(st.shed, 0);
+    assert_eq!(st.timeouts, 0);
+    assert!(
+        st.retries >= fired_transients,
+        "each injected transient forces a retry: {st:?}"
+    );
+
+    // Recovery: all scheduled ticks are spent, so traffic is now clean.
+    // Two re-warm rounds (crashed workers rebuild their LRUs from cached
+    // plans and every recycled path refills its buffers, as in
+    // tests/serving.rs), then steady state must be allocation-flat again.
+    for _ in 0..2 {
+        for ticket in submit_round("rewarm") {
+            ticket.wait().unwrap();
+        }
+    }
+    let warm = server.stats();
+    assert_eq!(warm.restarts, fired_panics, "no restarts after the last panic tick");
+    for _ in 0..2 {
+        for ticket in submit_round("steady") {
+            ticket.wait().unwrap();
+        }
+    }
+    let after = server.stats();
+    assert_eq!(after.errors, 0);
+    assert_eq!(
+        after.tensor_allocs, warm.tensor_allocs,
+        "steady-state allocations must be flat after recovery ({warm:?} -> {after:?})"
+    );
+    assert!(after.tensor_reuses > warm.tensor_reuses, "recovered steady state recycles");
+    assert_eq!(after.restarts, fired_panics);
+    assert_eq!(after.completed, warm.completed + 16);
+}
+
+/// Satellite: panic containment on the compile path AND the run path,
+/// exercised on both the serial and the 8-thread kernel engine (the CI
+/// matrix additionally runs this whole suite under
+/// `DEINSUM_NUM_THREADS={1,8}`).  A contained panic costs exactly one
+/// request a typed error — the pool keeps serving, other tenants'
+/// accounting survives, and the supervisor is never involved.
+#[test]
+fn contained_panics_cost_one_request_across_thread_counts() {
+    for threads in [1usize, 8] {
+        // Tick 0 of serve.compile: the very first program instantiation
+        // panics.  Tick 1 of serve.run: the second run attempt panics.
+        // max_retries(0) so the run panic surfaces instead of retrying.
+        let plan = FaultPlan::new()
+            .panic_at(site::SERVE_COMPILE, &[0])
+            .panic_at(site::SERVE_RUN, &[1]);
+        let session = Session::builder().ranks(2).threads(threads).build().unwrap();
+        let server = Server::builder(session)
+            .workers(2)
+            .max_retries(0)
+            .fault_plan(plan.clone())
+            .build();
+        let key = ("ij,jk->ik", vec![vec![8, 6], vec![6, 4]]);
+        let ins = inputs_for(&key.1, 42);
+
+        // Serial submit/wait so the site tick order is deterministic.
+        // 1) compile tick 0 → contained panic → typed error, never
+        //    retried (compile failures are deterministic).
+        let err = server
+            .submit(request_for("victim-compile", &key, &ins))
+            .unwrap()
+            .wait()
+            .expect_err("first compile is scheduled to panic");
+        match &err {
+            Error::Runtime(m) => assert!(m.contains("panicked"), "{m}"),
+            other => panic!("expected contained-panic Runtime error, got {other}"),
+        }
+        assert!(!err.is_retryable(), "compile failures must never be retried");
+
+        // 2) clean request: compile tick 1, run tick 0 → success.
+        let reply = server.submit(request_for("survivor", &key, &ins)).unwrap().wait();
+        assert!(reply.is_ok(), "pool must keep serving after a contained compile panic");
+
+        // 3) warm hit, run tick 1 → contained run panic → typed error,
+        //    program dropped (possibly inconsistent state).
+        let err = server
+            .submit(request_for("victim-run", &key, &ins))
+            .unwrap()
+            .wait()
+            .expect_err("second run is scheduled to panic");
+        match &err {
+            Error::Runtime(m) => assert!(m.contains("panicked"), "{m}"),
+            other => panic!("expected contained-panic Runtime error, got {other}"),
+        }
+
+        // 4) the dropped program re-instantiates from the cached plan and
+        //    serving continues.
+        for _ in 0..3 {
+            server
+                .submit(request_for("survivor", &key, &ins))
+                .unwrap()
+                .wait()
+                .expect("pool must keep serving after a contained run panic");
+        }
+
+        let st = server.stats();
+        assert_eq!(
+            st.restarts, 0,
+            "threads={threads}: contained panics must never reach the supervisor: {st:?}"
+        );
+        assert_eq!(st.errors, 2, "exactly the two victims failed: {st:?}");
+        assert_eq!(st.completed, 4);
+        assert_eq!(st.in_flight, 0);
+        // The untouched tenant's accounting survived both panics.
+        let ts = server.tenant_stats("survivor").unwrap();
+        assert_eq!((ts.completed, ts.errors), (4, 0), "threads={threads}: {ts:?}");
+        assert!(ts.p50_latency_s <= ts.p99_latency_s);
+        assert!(ts.p99_latency_s > 0.0, "latency window survived: {ts:?}");
+        assert_eq!(plan.fired(site::SERVE_COMPILE).panics, 1);
+        assert_eq!(plan.fired(site::SERVE_RUN).panics, 1);
+    }
+}
+
+/// Transient run failures are retried to success within budget, counted
+/// exactly, and the eventual output is bitwise identical to a clean run.
+#[test]
+fn transient_run_failures_retry_to_success() {
+    let key = ("ij,jk->ik", vec![vec![10, 8], vec![8, 6]]);
+    let ins = inputs_for(&key.1, 7);
+    let want = {
+        let s = Session::builder().ranks(2).build().unwrap();
+        s.compile(key.0, &key.1).unwrap().run(&ins).unwrap().output
+    };
+
+    // First two run attempts fail transiently; the third succeeds.
+    let plan = FaultPlan::new().transient_at(site::SERVE_RUN, &[0, 1]);
+    let session = Session::builder().ranks(2).build().unwrap();
+    let server =
+        Server::builder(session).workers(1).max_retries(2).fault_plan(plan.clone()).build();
+    let reply = server
+        .submit(request_for("t", &key, &ins))
+        .unwrap()
+        .wait()
+        .expect("two retries cover two injected transients");
+    assert!(reply.output.allclose(&want, 0.0, 0.0), "retried result must stay bitwise");
+    let st = server.stats();
+    assert_eq!((st.completed, st.errors, st.retries), (1, 0, 2), "{st:?}");
+    assert_eq!(plan.fired(site::SERVE_RUN).transients, 2);
+    assert_eq!(st.restarts, 0, "typed transients never involve the supervisor");
+}
+
+/// A request whose failures outnumber the retry budget gets the typed
+/// transient error back — after exactly `max_retries` counted retries.
+#[test]
+fn retry_budget_exhaustion_surfaces_the_typed_error() {
+    let key = ("ij,jk->ik", vec![vec![8, 6], vec![6, 4]]);
+    let ins = inputs_for(&key.1, 11);
+    let plan = FaultPlan::new().transient_at(site::SERVE_RUN, &[0, 1, 2]);
+    let session = Session::builder().ranks(2).build().unwrap();
+    let server =
+        Server::builder(session).workers(1).max_retries(2).fault_plan(plan.clone()).build();
+    let err = server
+        .submit(request_for("t", &key, &ins))
+        .unwrap()
+        .wait()
+        .expect_err("three injected failures beat a budget of two");
+    assert!(matches!(err, Error::Transient(_)), "{err}");
+    assert!(err.is_retryable(), "the caller may resubmit");
+    let st = server.stats();
+    assert_eq!((st.completed, st.errors, st.retries), (0, 1, 2), "{st:?}");
+
+    // The server is healthy afterwards: the remaining ticks are spent,
+    // so a resubmission succeeds.
+    server.submit(request_for("t", &key, &ins)).unwrap().wait().unwrap();
+    assert_eq!(server.stats().completed, 1);
+}
+
+/// Supervision end to end with exact counter accounting: three
+/// scheduled worker panics against one request and a budget of two.
+/// The supervisor restarts the incarnation three times; the request is
+/// requeued twice (both retries counted) and failed with the typed
+/// `WorkerLost` on the third crash — and the pool serves again
+/// afterwards.
+#[test]
+fn worker_crashes_requeue_then_fail_typed_with_exact_counters() {
+    let key = ("ij,jk->ik", vec![vec![8, 6], vec![6, 4]]);
+    let ins = inputs_for(&key.1, 23);
+    let plan = FaultPlan::new().panic_at(site::SERVE_WORKER, &[0, 1, 2]);
+    let session = Session::builder().ranks(2).build().unwrap();
+    let server =
+        Server::builder(session).workers(1).max_retries(2).fault_plan(plan.clone()).build();
+
+    let err = server
+        .submit(request_for("t", &key, &ins))
+        .unwrap()
+        .wait()
+        .expect_err("three crashes beat a budget of two");
+    match &err {
+        Error::WorkerLost(m) => assert!(m.contains("retry budget exhausted"), "{m}"),
+        other => panic!("expected WorkerLost, got {other}"),
+    }
+    assert!(err.is_retryable(), "a fresh incarnation may well serve a resubmission");
+
+    let st = server.stats();
+    assert_eq!(st.restarts, 3, "one restart per injected crash: {st:?}");
+    assert_eq!(st.retries, 2, "two requeues before the budget ran out: {st:?}");
+    assert_eq!((st.completed, st.errors), (0, 1));
+    assert_eq!(plan.fired(site::SERVE_WORKER).panics, 3);
+
+    // The fourth incarnation is past every scheduled tick: resubmission
+    // succeeds on a rebuilt warm LRU.
+    let reply = server.submit(request_for("t", &key, &ins)).unwrap().wait().unwrap();
+    assert_eq!(reply.output.dims(), &[8, 4]);
+    let st = server.stats();
+    assert_eq!((st.completed, st.restarts), (1, 3), "{st:?}");
+}
+
+/// Injected latency + a bounded client wait: `wait_timeout` returns the
+/// typed deadline error while the worker still finishes the request and
+/// fulfills the abandoned slot — one timeout counted, nothing lost,
+/// nothing hung.
+#[test]
+fn injected_latency_trips_wait_timeout_but_loses_nothing() {
+    let key = ("ij,jk->ik", vec![vec![8, 6], vec![6, 4]]);
+    let ins = inputs_for(&key.1, 31);
+    let plan =
+        FaultPlan::new().latency_at(site::SERVE_RUN, Duration::from_millis(200), &[0]);
+    let session = Session::builder().ranks(2).build().unwrap();
+    let server = Server::builder(session).workers(1).fault_plan(plan.clone()).build();
+
+    let ticket = server.submit(request_for("t", &key, &ins)).unwrap();
+    let err = ticket
+        .wait_timeout(Duration::from_millis(10))
+        .expect_err("the injected 200ms stall outlasts a 10ms wait bound");
+    assert!(matches!(err, Error::DeadlineExceeded), "{err}");
+
+    // The worker is merely slow, not broken: it completes the request
+    // into the abandoned slot.  Poll the server's own accounting.
+    let mut waited = Duration::ZERO;
+    while server.stats().completed == 0 && waited < Duration::from_secs(5) {
+        std::thread::sleep(Duration::from_millis(10));
+        waited += Duration::from_millis(10);
+    }
+    let st = server.stats();
+    assert_eq!(st.completed, 1, "the abandoned request still completes: {st:?}");
+    assert_eq!(st.errors, 0);
+    assert_eq!(st.timeouts, 1, "the abandoned wait is counted: {st:?}");
+    assert_eq!(plan.fired(site::SERVE_RUN).latencies, 1);
+}
+
+/// The CI chaos leg's invariant, pinned in-process: under the
+/// `DEINSUM_FAULT_SEED`-style seeded plan (strided transients, worker
+/// panics and latency), a closed mixed-traffic loop completes with
+/// **zero lost tickets** — every wait returns, `completed + errors ==
+/// submitted`, restarts match fired panics exactly, and every
+/// successful result is bitwise identical to the fault-free reference.
+#[test]
+fn seeded_chaos_plan_loses_no_tickets() {
+    let work = mixed_workload();
+    let inputs: Vec<Arc<Vec<Tensor>>> =
+        (0..work.len()).map(|i| inputs_for(&work[i].1, 13000 + 100 * i as u64)).collect();
+    let reference = serial_references(4, &work, &inputs);
+
+    let plan = FaultPlan::seeded(20260808);
+    let session = Session::builder().ranks(4).build().unwrap();
+    let server = Server::builder(session)
+        .workers(8)
+        .queue_capacity(32)
+        .fault_plan(plan.clone()) // default max_retries, like the CI leg
+        .build();
+
+    let mut outcomes = Vec::new();
+    for round in 0..4 {
+        let tickets: Vec<(usize, Ticket)> = work
+            .iter()
+            .zip(&inputs)
+            .enumerate()
+            .map(|(i, (key, ins))| {
+                let tenant = if round % 2 == 0 { "even" } else { "odd" };
+                (i, server.submit(request_for(tenant, key, ins)).unwrap())
+            })
+            .collect();
+        for (i, ticket) in tickets {
+            // The whole point: this wait RETURNS for every ticket.
+            outcomes.push((i, ticket.wait()));
+        }
+    }
+
+    let submitted = outcomes.len() as u64;
+    let mut ok = 0u64;
+    for (i, outcome) in outcomes {
+        match outcome {
+            Ok(reply) => {
+                ok += 1;
+                assert!(
+                    reply.output.allclose(&reference[i], 0.0, 0.0),
+                    "{}: successful chaos result diverged from serial reference",
+                    work[i].0
+                );
+            }
+            // Budget exhaustion under strided chaos is legitimate — but
+            // it must be one of the typed retryable classes, never a
+            // hang or an untyped failure.
+            Err(e) => assert!(e.is_retryable(), "unexpected error class under chaos: {e}"),
+        }
+    }
+
+    let st = server.stats();
+    assert_eq!(st.submitted, submitted);
+    assert_eq!(st.completed, ok, "{st:?}");
+    assert_eq!(st.completed + st.errors, submitted, "zero lost tickets: {st:?}");
+    assert_eq!(st.in_flight, 0);
+    assert_eq!(
+        st.restarts,
+        plan.fired(site::SERVE_WORKER).panics,
+        "every fired worker panic is one supervised restart: {st:?}"
+    );
+    assert!(
+        st.retries >= plan.fired(site::SERVE_RUN).transients.saturating_sub(st.errors),
+        "fired transients either retried or consumed the budget: {st:?}"
+    );
+    // The strided schedule fires on a 48+-tick run (stride 7 at
+    // serve.run, 13 at serve.worker): the chaos actually happened.
+    assert!(plan.fired(site::SERVE_RUN).transients > 0, "no transients fired");
+    assert!(plan.fired(site::SERVE_WORKER).panics > 0, "no worker panics fired");
+}
+
+/// Dropping a server with queued work: shutdown drains — every accepted
+/// ticket resolves even while the fault plan is stalling workers.
+#[test]
+fn shutdown_under_injected_latency_drains_all_tickets() {
+    let key = ("ij,jk->ik", vec![vec![8, 6], vec![6, 4]]);
+    let ins = inputs_for(&key.1, 55);
+    let plan = FaultPlan::new().latency_every(
+        site::SERVE_WORKER,
+        Duration::from_millis(1),
+        1,
+        0, // every single iteration is slowed
+    );
+    let session = Session::builder().ranks(2).build().unwrap();
+    let server = Server::builder(session).workers(1).fault_plan(plan).build();
+    let tickets: Vec<Ticket> =
+        (0..8).map(|_| server.submit(request_for("t", &key, &ins)).unwrap()).collect();
+    server.shutdown();
+    assert!(matches!(
+        server.submit(request_for("t", &key, &ins)),
+        Err(Error::ServerShutdown)
+    ));
+    drop(server);
+    for t in tickets {
+        t.wait().expect("accepted work must drain through a slowed shutdown");
+    }
+}

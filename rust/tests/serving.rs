@@ -4,10 +4,28 @@
 //! allocations, the plan cache must survive concurrent access, and a
 //! `Server` must sustain concurrent `run_into` traffic with zero
 //! steady-state tensor allocations per request.
+//!
+//! The CI chaos leg re-runs this suite with `DEINSUM_FAULT_SEED` set,
+//! which arms the env-seeded fault plan on every server built here
+//! (strided transient run failures, worker panics, latency — see
+//! `deinsum::fault`).  Under that flag the *exactness* asserts (zero
+//! errors, flat allocations, warm hit rates) are relaxed — injected
+//! faults legitimately consume retry budgets and drop warm programs —
+//! but the load-bearing invariants hold unconditionally: every accepted
+//! ticket resolves (`completed + errors == submitted`, nothing hangs)
+//! and every *successful* reply is bitwise identical to the fault-free
+//! serial reference.
 
 use std::sync::Arc;
 
 use deinsum::{ServeRequest, Server, Session, Tensor};
+
+/// True on the CI chaos leg: servers built without an explicit
+/// `fault_plan` inherit the `DEINSUM_FAULT_SEED`-seeded plan, so
+/// injected faults are expected traffic.
+fn faults_active() -> bool {
+    std::env::var("DEINSUM_FAULT_SEED").is_ok()
+}
 
 /// A mixed workload: MTTKRP all three modes (one with a permuted
 /// output), a TTMc-shaped chain, plain and transposed GEMM, and a
@@ -184,22 +202,35 @@ fn server_with_8_workers_sustains_concurrent_traffic_with_zero_steady_state_allo
             .collect()
     };
 
+    // Under the chaos leg, injected faults may legitimately exhaust a
+    // request's retry budget: accept only the typed retryable classes.
+    let chaos = faults_active();
+    let wait_one = |ticket: deinsum::Ticket| -> Option<deinsum::ServeReply> {
+        match ticket.wait() {
+            Ok(reply) => Some(reply),
+            Err(e) if chaos && e.is_retryable() => None,
+            Err(e) => panic!("request failed outside injected-fault classes: {e}"),
+        }
+    };
+
     // Warmup: two rounds so every key's owning worker holds a warm
     // program and every recycled path (including permuted gathers) has
     // its buffers.
     for _ in 0..2 {
         for ticket in submit_round("warmup") {
-            ticket.wait().unwrap();
+            wait_one(ticket);
         }
     }
     let warm = server.stats();
-    assert_eq!(warm.errors, 0, "warmup must succeed: {warm:?}");
-    assert_eq!(warm.completed, 2 * work.len() as u64);
-    assert_eq!(
-        warm.program_misses,
-        work.len() as u64,
-        "each key instantiates exactly one program (key-affinity routing): {warm:?}"
-    );
+    if !chaos {
+        assert_eq!(warm.errors, 0, "warmup must succeed: {warm:?}");
+        assert_eq!(warm.completed, 2 * work.len() as u64);
+        assert_eq!(
+            warm.program_misses,
+            work.len() as u64,
+            "each key instantiates exactly one program (key-affinity routing): {warm:?}"
+        );
+    }
 
     // Steady state: three interleaved rounds from two tenants, all in
     // flight together.
@@ -211,35 +242,48 @@ fn server_with_8_workers_sustains_concurrent_traffic_with_zero_steady_state_allo
     }
     for (_, tickets) in all_tickets {
         for (ticket, want) in tickets.into_iter().zip(&reference) {
-            let reply = ticket.wait().unwrap();
-            assert!(
-                reply.output.allclose(want, 0.0, 0.0),
-                "served output diverged from serial reference"
-            );
+            if let Some(reply) = wait_one(ticket) {
+                assert!(
+                    reply.output.allclose(want, 0.0, 0.0),
+                    "served output diverged from serial reference"
+                );
+            }
         }
     }
 
     let after = server.stats();
-    assert_eq!(after.errors, 0);
-    assert_eq!(after.completed, warm.completed + 6 * work.len() as u64);
+    // Unconditional: every accepted ticket resolved, nothing hangs.
+    assert_eq!(after.submitted, 8 * work.len() as u64);
+    assert_eq!(after.completed + after.errors, after.submitted, "zero lost tickets");
     assert_eq!(after.in_flight, 0);
-    assert_eq!(
-        after.tensor_allocs, warm.tensor_allocs,
-        "steady-state serving must perform zero tensor allocations per request \
-         ({warm:?} -> {after:?})"
-    );
-    assert!(after.tensor_reuses > warm.tensor_reuses, "requests must recycle buffers");
-    assert_eq!(after.program_misses, warm.program_misses, "no program re-instantiation");
     assert!(after.p50_latency_s <= after.p99_latency_s);
-    assert!(after.throughput_rps > 0.0);
-    assert!(after.hit_rate() > 0.8, "steady state must be warm-program hits: {after:?}");
+    if !chaos {
+        assert_eq!(after.errors, 0);
+        assert_eq!(after.completed, warm.completed + 6 * work.len() as u64);
+        assert_eq!(
+            after.tensor_allocs, warm.tensor_allocs,
+            "steady-state serving must perform zero tensor allocations per request \
+             ({warm:?} -> {after:?})"
+        );
+        assert!(after.tensor_reuses > warm.tensor_reuses, "requests must recycle buffers");
+        assert_eq!(after.program_misses, warm.program_misses, "no program re-instantiation");
+        assert!(after.throughput_rps > 0.0);
+        assert!(after.hit_rate() > 0.8, "steady state must be warm-program hits: {after:?}");
+    }
 
     // Per-tenant accounting: both tenants saw all three rounds.
     for tenant in ["tenant-a", "tenant-b"] {
         let ts = server.tenant_stats(tenant).unwrap();
-        assert_eq!(ts.completed, 3 * work.len() as u64, "{tenant}: {ts:?}");
-        assert_eq!(ts.errors, 0);
+        assert_eq!(
+            ts.completed + ts.errors,
+            3 * work.len() as u64,
+            "{tenant}: every request resolved: {ts:?}"
+        );
         assert_eq!(ts.in_flight, 0);
+        if !chaos {
+            assert_eq!(ts.completed, 3 * work.len() as u64, "{tenant}: {ts:?}");
+            assert_eq!(ts.errors, 0);
+        }
     }
     assert_eq!(server.tenants(), vec!["tenant-a", "tenant-b", "warmup"]);
 }
@@ -253,6 +297,7 @@ fn bounded_queue_applies_backpressure_without_losing_requests() {
         Arc::new(Server::builder(session).workers(1).queue_capacity(2).build());
     let shapes = vec![vec![8, 6], vec![6, 4]];
     let ins = inputs_for(&shapes, 77);
+    let chaos = faults_active();
     std::thread::scope(|s| {
         for t in 0..4 {
             let server = Arc::clone(&server);
@@ -269,13 +314,21 @@ fn bounded_queue_applies_backpressure_without_losing_requests() {
                             dest: Tensor::zeros(&[8, 4]),
                         })
                         .unwrap();
-                    ticket.wait().unwrap();
+                    match ticket.wait() {
+                        Ok(_) => {}
+                        Err(e) if chaos && e.is_retryable() => {}
+                        Err(e) => panic!("request failed outside injected faults: {e}"),
+                    }
                 }
             });
         }
     });
     let st = server.stats();
-    assert_eq!((st.submitted, st.completed, st.errors), (16, 16, 0));
+    assert_eq!(st.submitted, 16);
+    assert_eq!(st.completed + st.errors, 16, "zero lost tickets: {st:?}");
+    if !chaos {
+        assert_eq!((st.completed, st.errors), (16, 0));
+    }
     assert_eq!(st.queue_depth, 0);
     assert_eq!(st.in_flight, 0);
     assert_eq!(server.tenants().len(), 4);

@@ -33,11 +33,42 @@ import json
 import sys
 
 
+# Every row the gate consumes must carry these; checks 1 and 3 index
+# them directly, so a malformed row used to die as a raw KeyError
+# traceback with no hint of which row was broken.
+REQUIRED_FIELDS = ("kernel", "median_seconds")
+
+
 def load(path: str) -> dict:
+    """Read a bench JSON and validate row schema.
+
+    A malformed file (missing ``results``, a non-object row, or a row
+    missing a required field) exits non-zero with a diagnostic naming the
+    file, the row index, the kernel (when present), and the missing
+    field — not a bare ``KeyError`` traceback.
+    """
     with open(path, encoding="utf-8") as fh:
         doc = json.load(fh)
     if not isinstance(doc.get("results"), list):
         raise SystemExit(f"{path}: no 'results' array")
+    problems: list[str] = []
+    for i, row in enumerate(doc["results"]):
+        if not isinstance(row, dict):
+            problems.append(f"results[{i}]: not an object ({type(row).__name__})")
+            continue
+        kernel = row.get("kernel", "<no kernel field>")
+        for field in REQUIRED_FIELDS:
+            if field not in row:
+                problems.append(
+                    f"results[{i}] (kernel '{kernel}'): missing required "
+                    f"field '{field}'"
+                )
+    if problems:
+        print(f"{path}: malformed bench JSON ({len(problems)} problem(s)):",
+              file=sys.stderr)
+        for p in problems:
+            print(f"  - {p}", file=sys.stderr)
+        raise SystemExit(1)
     return doc
 
 
