@@ -15,6 +15,9 @@
 //!   machine + warm pools) vs the cold first-query path (fresh session,
 //!   cache-miss compile, spawn-dispatch baseline), on a multi-step plan
 //!   (`DEINSUM_BENCH_TINY=1` shrinks it for CI smoke runs)
+//! - differential fuzz campaign throughput (`fuzz_campaign`): cases/sec
+//!   of generate + oracle + compile/run at ranks {1,4,8} over the
+//!   fixed-seed tiny corpus (src/fuzz)
 //!
 //! Besides the human-readable table, results land in
 //! `BENCH_hotpath.json` (override with `DEINSUM_BENCH_JSON`) as
@@ -607,6 +610,27 @@ fn main() {
             None,
             None,
         );
+    }
+
+    // --- fuzz campaign throughput (differential harness, src/fuzz) -------------
+    //
+    // Cases/sec over the fixed-seed tiny corpus: each case is generated,
+    // evaluated by the dense oracle, and compiled + run (run and dirty
+    // run_into) at ranks {1,4,8} — so this entry tracks the end-to-end
+    // cost of the correctness harness itself, and the timed region
+    // doubles as a zero-bug assertion on every bench run.
+    {
+        use deinsum::fuzz;
+        let seed = 20260808u64;
+        let cases: u64 = if tiny { 16 } else { 64 };
+        let (med, _, _) = common::time_median(reps, || {
+            let rep = fuzz::campaign(seed, cases, fuzz::DEFAULT_RANKS);
+            assert!(rep.bugs.is_empty(), "fuzz campaign found bugs:\n{}", rep.corpus());
+        });
+        let cps = cases as f64 / med;
+        let shape = format!("seed {seed} x {cases} cases ranks 1,4,8");
+        println!("fuzz campaign {shape}: {} ({cps:.1} cases/s)", common::fmt_s(med));
+        record(&mut records, "fuzz_campaign", &shape, med, None, None);
     }
 
     // --- machine-readable trajectory ------------------------------------------

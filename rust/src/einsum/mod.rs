@@ -26,10 +26,14 @@ impl EinsumSpec {
     ///
     /// Rules enforced (paper §III-A):
     /// - explicit output (`->`) required;
+    /// - every operand carries at least one index (no scalar operands —
+    ///   `,j->j` and trailing commas are rejected);
     /// - every output index must appear in some input;
     /// - repeated indices must agree on extent across operands;
     /// - no index repetition *within* one operand (no traces) — the SOAP
-    ///   model assumes simple overlap access (§IV-B).
+    ///   model assumes simple overlap access (§IV-B);
+    /// - index characters are single ASCII letters, at most 26 distinct
+    ///   indices per program (one loop dimension per letter).
     pub fn parse(expr: &str, shapes: &[Vec<usize>]) -> Result<Self> {
         let expr: String = expr.chars().filter(|c| !c.is_whitespace()).collect();
         let (lhs, rhs) = expr
@@ -43,6 +47,11 @@ impl EinsumSpec {
                 "{} operands in string but {} shapes given",
                 inputs.len(),
                 shapes.len()
+            )));
+        }
+        if let Some(op) = inputs.iter().position(|ops| ops.is_empty()) {
+            return Err(Error::parse(format!(
+                "operand {op} is empty (scalar operands / stray ',' unsupported)"
             )));
         }
         let mut extents = BTreeMap::new();
@@ -75,6 +84,12 @@ impl EinsumSpec {
                     _ => {}
                 }
             }
+        }
+        if extents.len() > 26 {
+            return Err(Error::parse(format!(
+                "{} distinct indices (max 26, one ASCII letter each)",
+                extents.len()
+            )));
         }
         let mut out_seen = Vec::new();
         for &c in &output {
@@ -247,6 +262,45 @@ mod tests {
     #[test]
     fn rejects_operand_count_mismatch() {
         assert!(EinsumSpec::parse("ij,jk->ik", &[vec![2, 3]]).is_err());
+    }
+
+    /// Every hostile rejection is a typed [`Error::Parse`], never a
+    /// panic, and never burns serve retry budget.
+    fn assert_parse_reject(expr: &str, shapes: &[Vec<usize>]) {
+        match EinsumSpec::parse(expr, shapes) {
+            Err(e @ Error::Parse(_)) => assert!(!e.is_retryable(), "{expr}"),
+            Err(e) => panic!("{expr}: expected Parse error, got {e:?}"),
+            Ok(_) => panic!("{expr}: expected rejection"),
+        }
+    }
+
+    #[test]
+    fn rejects_empty_operand_string() {
+        // Leading, middle, and trailing empty operands (stray commas).
+        assert_parse_reject(",j->j", &[vec![], vec![3]]);
+        assert_parse_reject("i,,j->j", &[vec![2], vec![], vec![3]]);
+        assert_parse_reject("i,->", &[vec![2], vec![]]);
+        assert_parse_reject("->", &[vec![]]);
+    }
+
+    #[test]
+    fn rejects_more_than_26_distinct_indices() {
+        // 27 distinct single-letter indices across two operands.
+        let lhs_a: String = ('a'..='z').collect();
+        let expr = format!("{lhs_a},A->A");
+        let shapes = vec![vec![1usize; 26], vec![1usize]];
+        assert_parse_reject(&expr, &shapes);
+        // Exactly 26 is still fine.
+        let expr26 = format!("{lhs_a}->a");
+        assert!(EinsumSpec::parse(&expr26, &[vec![1usize; 26]]).is_ok());
+    }
+
+    #[test]
+    fn rejects_non_ascii_and_multibyte_index_chars() {
+        assert_parse_reject("iμ->i", &[vec![2, 3]]);
+        assert_parse_reject("ij,j\u{4e16}->i", &[vec![2, 3], vec![3, 4]]);
+        assert_parse_reject("i2->i", &[vec![2, 3]]);
+        assert_parse_reject("i_->i", &[vec![2, 3]]);
     }
 
     #[test]

@@ -1,0 +1,768 @@
+//! Deterministic differential einsum fuzzing (ROADMAP item 4).
+//!
+//! The invariant this module enforces end to end: **every generated
+//! einsum either plans and runs bitwise-identical to a naive dense
+//! oracle, or is rejected with a typed [`Error`](crate::Error) — never a
+//! panic, at any rank count.**
+//!
+//! Four pieces, mirroring franken_numpy's oracle-capture + differential
+//! report pipeline:
+//!
+//! - [`generate`]: a SplitMix64-seeded generator (same PRNG family as
+//!   [`crate::fault::FaultPlan`]) producing random einsum chains — 2–5
+//!   operands, random index sharing, permuted/reduced/empty outputs,
+//!   degenerate extents (0 and 1), skinny/fat aspect ratios.  Inputs are
+//!   **small integers** (±2), so every multiply-add chain is exact in
+//!   `f32` regardless of summation order — "bitwise identical" is then a
+//!   meaningful cross-implementation check, not a tolerance fudge.
+//! - [`oracle`]: a naive dense evaluator — an independent odometer loop
+//!   nest over the full iteration space with its own minimal expression
+//!   reader, sharing **no** kernel or parser code with the compile path.
+//! - [`classify`]: runs one case through [`Session::compile`] at several
+//!   rank counts and through `run`/`run_into` with a dirty recycled
+//!   destination, classifying the outcome as oracle-identical,
+//!   typed-reject, or BUG (mismatch/panic — panics are caught via
+//!   `catch_unwind` so one bad case doesn't end a campaign).
+//! - [`shrink`]: a greedy minimizer (drop operands, drop indices, shrink
+//!   extents) that reduces a failing case and reports the one-line repro
+//!   `DEINSUM_FUZZ_SEED=<n> DEINSUM_FUZZ_CASE=<k>`.
+//!
+//! [`campaign`] drives N cases and returns a [`CampaignReport`]; the CLI
+//! (`deinsum fuzz`) and CI run fixed-seed campaigns, and
+//! `tests/fuzz.rs` pins a 64-case corpus plus rejection determinism.
+
+use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use crate::api::Session;
+use crate::error::Error;
+use crate::tensor::{strides_of, Tensor};
+
+/// SplitMix64 — the same avalanche mixer [`crate::fault::FaultPlan`] and
+/// [`Tensor::random`] seed from, kept local so the fuzzer's stream is
+/// fixed forever (a kernel-side PRNG change must not re-roll the corpus).
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    /// Seed the stream.
+    pub fn new(seed: u64) -> Self {
+        SplitMix64 { state: seed }
+    }
+
+    /// Next raw 64-bit draw.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform draw in `[lo, hi]` (inclusive).
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        lo + (self.next_u64() % (hi - lo + 1) as u64) as usize
+    }
+
+    /// True with probability `num / den`.
+    pub fn chance(&mut self, num: u64, den: u64) -> bool {
+        self.next_u64() % den < num
+    }
+}
+
+/// One generated fuzz case: an einsum expression, its operand shapes,
+/// and the `(seed, case)` pair that regenerates it bit-for-bit.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FuzzCase {
+    /// Campaign seed (`DEINSUM_FUZZ_SEED`).
+    pub seed: u64,
+    /// Case index within the campaign (`DEINSUM_FUZZ_CASE`).
+    pub case: u64,
+    /// Einsum expression, e.g. `ijk,ja->ika`.
+    pub expr: String,
+    /// Operand shapes bound to the expression.
+    pub shapes: Vec<Vec<usize>>,
+}
+
+impl FuzzCase {
+    /// One-line repro: re-running the campaign binary with these env
+    /// vars regenerates and re-executes exactly this case.
+    pub fn repro(&self) -> String {
+        format!("DEINSUM_FUZZ_SEED={} DEINSUM_FUZZ_CASE={}", self.seed, self.case)
+    }
+
+    /// Deterministic integer-valued inputs (entries in `{-2..2}`): with
+    /// the generator's iteration-space cap every partial sum stays well
+    /// under 2^24, so all f32 arithmetic is exact and results are
+    /// bitwise identical across any summation order.
+    pub fn inputs(&self) -> Vec<Tensor> {
+        self.shapes
+            .iter()
+            .enumerate()
+            .map(|(op, shape)| {
+                let mut rng = SplitMix64::new(
+                    self.seed
+                        .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+                        .wrapping_add(self.case)
+                        .wrapping_add(op as u64).wrapping_mul(0x2545_f491_4f6c_dd1d),
+                );
+                let len: usize = shape.iter().product();
+                let data: Vec<f32> =
+                    (0..len).map(|_| (rng.range(0, 4) as i64 - 2) as f32).collect();
+                Tensor::from_vec(shape, data).expect("len = product of dims")
+            })
+            .collect()
+    }
+}
+
+/// Hard cap on the full iteration space of a generated case.  Together
+/// with entries in `{-2..2}` (product magnitude ≤ 2^5 over ≤ 5 operands)
+/// every accumulated value stays below `2^5 * 2^16 = 2^21 << 2^24`, so
+/// f32 arithmetic on the whole case is exact.
+const MAX_ITER_SPACE: usize = 1 << 16;
+
+/// Generate case `case` of the campaign seeded by `seed`.  Pure function
+/// of `(seed, case)` — the repro contract.
+pub fn generate(seed: u64, case: u64) -> FuzzCase {
+    let mut rng = SplitMix64::new(
+        seed.wrapping_mul(0x6c62_272e_07bb_0142).wrapping_add(case.wrapping_mul(2) | 1),
+    );
+    let n_ops = rng.range(2, 5);
+    let n_idx = rng.range(2, 6);
+    // Distinct index letters, drawn from a shuffled window of a-z so
+    // expressions don't all reuse the same prefix.
+    let base = rng.range(0, 25 - (n_idx - 1));
+    let pool: Vec<char> = (0..n_idx).map(|q| (b'a' + (base + q) as u8) as char).collect();
+
+    // Extents: mostly small (1..=6), occasionally degenerate 0, with one
+    // optional "fat" dim (skinny/fat aspect ratios) capped afterwards.
+    let mut extents: BTreeMap<char, usize> = BTreeMap::new();
+    for &c in &pool {
+        let e = if rng.chance(1, 12) {
+            0
+        } else if rng.chance(1, 5) {
+            1
+        } else {
+            rng.range(2, 6)
+        };
+        extents.insert(c, e);
+    }
+    if rng.chance(1, 3) {
+        let fat = pool[rng.range(0, n_idx - 1)];
+        extents.insert(fat, rng.range(7, 9));
+    }
+    // Cap the iteration space so integer arithmetic stays exact.
+    loop {
+        let space: usize = extents.values().map(|&e| e.max(1)).product();
+        if space <= MAX_ITER_SPACE {
+            break;
+        }
+        let (&c, _) = extents.iter().max_by_key(|(_, &e)| e).expect("non-empty pool");
+        let e = extents[&c];
+        extents.insert(c, e / 2);
+    }
+
+    // Operands: each a random-order subset of the pool (no repeats — the
+    // compile path rejects traces; index sharing emerges from overlap).
+    let mut inputs: Vec<Vec<char>> = Vec::with_capacity(n_ops);
+    for _ in 0..n_ops {
+        let rank = rng.range(1, n_idx.min(4));
+        let mut avail = pool.clone();
+        let mut idx = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            idx.push(avail.swap_remove(rng.range(0, avail.len() - 1)));
+        }
+        inputs.push(idx);
+    }
+    // Output: random-order subset of the indices actually used (possibly
+    // empty — a full contraction to a scalar), so permuted and reduced
+    // outputs both appear.
+    let mut used: Vec<char> = Vec::new();
+    for op in &inputs {
+        for &c in op {
+            if !used.contains(&c) {
+                used.push(c);
+            }
+        }
+    }
+    let out_rank = rng.range(0, used.len());
+    let mut avail = used.clone();
+    let mut output = Vec::with_capacity(out_rank);
+    for _ in 0..out_rank {
+        output.push(avail.swap_remove(rng.range(0, avail.len() - 1)));
+    }
+
+    let expr = render_expr(&inputs, &output);
+    let shapes: Vec<Vec<usize>> =
+        inputs.iter().map(|op| op.iter().map(|c| extents[c]).collect()).collect();
+    FuzzCase { seed, case, expr, shapes }
+}
+
+fn render_expr(inputs: &[Vec<char>], output: &[char]) -> String {
+    let lhs: Vec<String> = inputs.iter().map(|v| v.iter().collect()).collect();
+    format!("{}->{}", lhs.join(","), output.iter().collect::<String>())
+}
+
+/// The naive dense oracle: evaluate `expr` over `inputs` with one
+/// odometer loop nest across the **full** iteration space — one
+/// multiply chain per point, accumulated into the output slot.  Shares
+/// no code with the compile path (it re-reads the expression with its
+/// own minimal splitter).  Returns `None` when the expression is not a
+/// well-formed simple einsum (the compile path must then reject typed).
+pub fn oracle(expr: &str, shapes: &[Vec<usize>], inputs: &[Tensor]) -> Option<Tensor> {
+    let expr: String = expr.chars().filter(|c| !c.is_whitespace()).collect();
+    let (lhs, rhs) = expr.split_once("->")?;
+    let ops: Vec<Vec<char>> = lhs.split(',').map(|s| s.chars().collect()).collect();
+    let out: Vec<char> = rhs.chars().collect();
+    if ops.len() != shapes.len() || ops.len() != inputs.len() {
+        return None;
+    }
+    // Bind extents; reject malformed structure the way the einsum
+    // semantics do (empty operands, traces, non-letters, conflicts).
+    let mut ext: BTreeMap<char, usize> = BTreeMap::new();
+    for (op, shape) in ops.iter().zip(shapes) {
+        if op.is_empty() || op.len() != shape.len() {
+            return None;
+        }
+        for (q, (&c, &e)) in op.iter().zip(shape).enumerate() {
+            if !c.is_ascii_alphabetic() || op[..q].contains(&c) {
+                return None;
+            }
+            match ext.insert(c, e) {
+                Some(prev) if prev != e => return None,
+                _ => {}
+            }
+        }
+    }
+    for (q, &c) in out.iter().enumerate() {
+        if !ext.contains_key(&c) || out[..q].contains(&c) {
+            return None;
+        }
+    }
+    for (t, shape) in inputs.iter().zip(shapes) {
+        if t.dims() != &shape[..] {
+            return None;
+        }
+    }
+
+    let all: Vec<char> = ext.keys().copied().collect();
+    let dims: Vec<usize> = all.iter().map(|c| ext[c]).collect();
+    let out_dims: Vec<usize> = out.iter().map(|c| ext[c]).collect();
+    let mut result = Tensor::zeros(&out_dims);
+    let total: usize = dims.iter().product();
+    if total == 0 {
+        return Some(result); // an extent-0 index empties every sum
+    }
+    let out_strides = strides_of(&out_dims);
+    // Position of each loop index in the output (usize::MAX = reduced)
+    // and per-operand strides keyed by loop index.
+    let out_pos: Vec<usize> = all
+        .iter()
+        .map(|c| out.iter().position(|o| o == c).unwrap_or(usize::MAX))
+        .collect();
+    let op_strides: Vec<Vec<usize>> = ops
+        .iter()
+        .zip(shapes)
+        .map(|(op, shape)| {
+            let s = strides_of(shape);
+            all.iter()
+                .map(|c| op.iter().position(|o| o == c).map(|q| s[q]).unwrap_or(0))
+                .collect()
+        })
+        .collect();
+
+    let n = all.len();
+    let mut idx = vec![0usize; n];
+    let mut offs = vec![0usize; inputs.len()];
+    let mut out_off = 0usize;
+    for _ in 0..total {
+        let mut v = 1.0f32;
+        for (t, &o) in inputs.iter().zip(&offs) {
+            v *= t.data()[o];
+        }
+        result.data_mut()[out_off] += v;
+        // Odometer carry, updating every offset incrementally.
+        for d in (0..n).rev() {
+            idx[d] += 1;
+            if idx[d] < dims[d] {
+                for (q, so) in op_strides.iter().enumerate() {
+                    offs[q] += so[d];
+                }
+                if out_pos[d] != usize::MAX {
+                    out_off += out_strides[out_pos[d]];
+                }
+                break;
+            }
+            idx[d] = 0;
+            for (q, so) in op_strides.iter().enumerate() {
+                offs[q] -= so[d] * (dims[d] - 1);
+            }
+            if out_pos[d] != usize::MAX {
+                out_off -= out_strides[out_pos[d]] * (dims[d] - 1);
+            }
+        }
+    }
+    Some(result)
+}
+
+/// One typed rejection observed at a specific rank count.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Rejection {
+    /// Rank count the rejection occurred at.
+    pub ranks: usize,
+    /// `Display` rendering of the typed error.
+    pub message: String,
+    /// [`Error::is_retryable`] of the rejection (must be `false`: a
+    /// deterministically-rejected expression must never burn serve
+    /// retry budget).
+    pub retryable: bool,
+}
+
+/// Classification of one case across every probed rank count.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Outcome {
+    /// Every rank count either matched the oracle bitwise (at least one
+    /// did) or rejected typed; rejections ride along for determinism
+    /// checks.
+    Match(Vec<Rejection>),
+    /// Every rank count rejected with a typed error.
+    Reject(Vec<Rejection>),
+    /// A panic, an oracle mismatch, or an accepted-but-invalid
+    /// expression.  The campaign fails on any of these.
+    Bug(String),
+}
+
+impl Outcome {
+    /// Stable one-line signature for cross-run determinism assertions.
+    pub fn signature(&self) -> String {
+        match self {
+            Outcome::Match(rejects) => {
+                let r: Vec<String> =
+                    rejects.iter().map(|r| format!("p{}:{}", r.ranks, r.message)).collect();
+                format!("match[{}]", r.join("|"))
+            }
+            Outcome::Reject(rejects) => {
+                let r: Vec<String> =
+                    rejects.iter().map(|r| format!("p{}:{}", r.ranks, r.message)).collect();
+                format!("reject[{}]", r.join("|"))
+            }
+            Outcome::Bug(m) => format!("bug[{m}]"),
+        }
+    }
+
+    /// True for [`Outcome::Bug`].
+    pub fn is_bug(&self) -> bool {
+        matches!(self, Outcome::Bug(_))
+    }
+
+    /// The typed rejections this outcome carries (empty for bugs).
+    pub fn rejections(&self) -> &[Rejection] {
+        match self {
+            Outcome::Match(r) | Outcome::Reject(r) => r,
+            Outcome::Bug(_) => &[],
+        }
+    }
+}
+
+/// The default rank counts a campaign probes.
+pub const DEFAULT_RANKS: &[usize] = &[1, 4, 8];
+
+/// Run one case through compile + `run` + `run_into` (dirty recycled
+/// destination) at every rank count in `ranks` and compare against the
+/// dense oracle.  Panics anywhere in the pipeline are caught and
+/// classified as [`Outcome::Bug`].
+pub fn classify(case: &FuzzCase, ranks: &[usize]) -> Outcome {
+    let inputs = case.inputs();
+    let want = oracle(&case.expr, &case.shapes, &inputs);
+    let mut rejections: Vec<Rejection> = Vec::new();
+    let mut matched = false;
+    for &p in ranks {
+        let expr = case.expr.clone();
+        let shapes = case.shapes.clone();
+        let ins = inputs.clone();
+        let ran = catch_unwind(AssertUnwindSafe(move || -> crate::Result<(Tensor, Tensor)> {
+            let session = Session::builder().ranks(p).build()?;
+            let mut program = session.compile(&expr, &shapes)?;
+            let report = program.run(&ins)?;
+            // Dirty recycled destination: run_into must fully overwrite.
+            let mut dest = Tensor::random(&program.output_dims(), 0x0D15_EA5E);
+            program.run_into(&ins, &mut dest)?;
+            Ok((report.output, dest))
+        }));
+        match ran {
+            Err(payload) => {
+                return Outcome::Bug(format!(
+                    "panic at P={p}: {} [{}]",
+                    panic_message(&payload),
+                    case.repro()
+                ));
+            }
+            Ok(Err(e)) => {
+                let typed = matches!(
+                    e,
+                    Error::Parse(_) | Error::Shape(_) | Error::Plan(_)
+                );
+                if !typed {
+                    return Outcome::Bug(format!(
+                        "non-compile-class error at P={p}: {e} [{}]",
+                        case.repro()
+                    ));
+                }
+                rejections.push(Rejection {
+                    ranks: p,
+                    message: e.to_string(),
+                    retryable: e.is_retryable(),
+                });
+            }
+            Ok(Ok((out, out_into))) => {
+                let Some(want) = want.as_ref() else {
+                    return Outcome::Bug(format!(
+                        "accepted an expression the oracle rejects at P={p} [{}]",
+                        case.repro()
+                    ));
+                };
+                if let Some(diff) = bitwise_diff(want, &out) {
+                    return Outcome::Bug(format!(
+                        "run mismatch vs oracle at P={p}: {diff} [{}]",
+                        case.repro()
+                    ));
+                }
+                if let Some(diff) = bitwise_diff(want, &out_into) {
+                    return Outcome::Bug(format!(
+                        "run_into (dirty dest) mismatch vs oracle at P={p}: {diff} [{}]",
+                        case.repro()
+                    ));
+                }
+                matched = true;
+            }
+        }
+    }
+    if matched {
+        Outcome::Match(rejections)
+    } else {
+        Outcome::Reject(rejections)
+    }
+}
+
+/// First bitwise difference between two tensors (`None` = identical).
+/// Inputs are small integers, so plain `f32` equality *is* bitwise
+/// equality here (no NaNs; ±0 cannot survive an additive accumulation).
+fn bitwise_diff(want: &Tensor, got: &Tensor) -> Option<String> {
+    if want.dims() != got.dims() {
+        return Some(format!("dims {:?} != oracle {:?}", got.dims(), want.dims()));
+    }
+    for (i, (w, g)) in want.data().iter().zip(got.data()).enumerate() {
+        if w != g {
+            return Some(format!("elem {i}: {g} != oracle {w}"));
+        }
+    }
+    None
+}
+
+fn panic_message(payload: &Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
+
+/// Greedily minimize a failing case: repeatedly try dropping an operand,
+/// dropping one index occurrence, or shrinking one extent, keeping any
+/// candidate for which `is_bug` still holds, until no step shrinks it
+/// further.  The returned case keeps the original `(seed, case)` pair so
+/// [`FuzzCase::repro`] still regenerates the *unshrunk* ancestor.
+pub fn shrink(case: &FuzzCase, is_bug: &mut dyn FnMut(&FuzzCase) -> bool) -> FuzzCase {
+    let mut cur = case.clone();
+    loop {
+        let mut improved = false;
+        for cand in shrink_candidates(&cur) {
+            if is_bug(&cand) {
+                cur = cand;
+                improved = true;
+                break;
+            }
+        }
+        if !improved {
+            return cur;
+        }
+    }
+}
+
+/// Parse the expression back into (inputs, output) index strings; cases
+/// whose expression is too hostile to split structurally can't shrink.
+fn split_expr(expr: &str) -> Option<(Vec<Vec<char>>, Vec<char>)> {
+    let (lhs, rhs) = expr.split_once("->")?;
+    Some((lhs.split(',').map(|s| s.chars().collect()).collect(), rhs.chars().collect()))
+}
+
+fn shrink_candidates(case: &FuzzCase) -> Vec<FuzzCase> {
+    let Some((inputs, output)) = split_expr(&case.expr) else {
+        return Vec::new();
+    };
+    let mut out = Vec::new();
+    // 1. Drop a whole operand (output indices it alone supplied go too).
+    if inputs.len() > 1 {
+        for q in 0..inputs.len() {
+            let mut ins = inputs.clone();
+            let mut shapes = case.shapes.clone();
+            ins.remove(q);
+            shapes.remove(q);
+            let still: Vec<char> = output
+                .iter()
+                .copied()
+                .filter(|c| ins.iter().any(|op| op.contains(c)))
+                .collect();
+            out.push(FuzzCase { expr: render_expr(&ins, &still), shapes, ..case.clone() });
+        }
+    }
+    // 2. Drop one index occurrence from one operand.
+    for q in 0..inputs.len() {
+        if inputs[q].len() <= 1 {
+            continue; // keep operands non-empty (parse would reject)
+        }
+        for d in 0..inputs[q].len() {
+            let mut ins = inputs.clone();
+            let mut shapes = case.shapes.clone();
+            let c = ins[q].remove(d);
+            shapes[q].remove(d);
+            let still: Vec<char> = output
+                .iter()
+                .copied()
+                .filter(|o| *o != c || ins.iter().any(|op| op.contains(o)))
+                .collect();
+            out.push(FuzzCase { expr: render_expr(&ins, &still), shapes, ..case.clone() });
+        }
+    }
+    // 3. Shrink one index's extent everywhere it appears (halve).
+    let mut seen: Vec<char> = Vec::new();
+    for op in &inputs {
+        for &c in op {
+            if !seen.contains(&c) {
+                seen.push(c);
+            }
+        }
+    }
+    for &c in &seen {
+        let cur_ext = inputs
+            .iter()
+            .zip(&case.shapes)
+            .find_map(|(op, sh)| op.iter().position(|&o| o == c).map(|q| sh[q]));
+        let Some(e) = cur_ext else { continue };
+        if e <= 1 {
+            continue;
+        }
+        let mut shapes = case.shapes.clone();
+        for (op, sh) in inputs.iter().zip(shapes.iter_mut()) {
+            for (q, &o) in op.iter().enumerate() {
+                if o == c {
+                    sh[q] = e / 2;
+                }
+            }
+        }
+        out.push(FuzzCase { shapes, ..case.clone() });
+    }
+    out
+}
+
+/// A confirmed BUG: the triggering case, its greedy minimization, and
+/// the classification detail.
+#[derive(Debug, Clone)]
+pub struct BugReport {
+    /// The generated case that failed.
+    pub case: FuzzCase,
+    /// Its shrunk minimization (same classification failure).
+    pub shrunk: FuzzCase,
+    /// What went wrong (panic message / first mismatching element).
+    pub detail: String,
+}
+
+/// Aggregate result of a fuzzing campaign.
+#[derive(Debug, Clone, Default)]
+pub struct CampaignReport {
+    /// Cases run.
+    pub cases: u64,
+    /// Cases bitwise-identical to the oracle on ≥ 1 rank count.
+    pub matches: u64,
+    /// Cases rejected typed on every rank count.
+    pub rejects: u64,
+    /// BUG classifications (empty = the invariant held).
+    pub bugs: Vec<BugReport>,
+}
+
+impl CampaignReport {
+    /// Render the shrunk repro corpus (one block per bug) — the artifact
+    /// CI uploads on failure.
+    pub fn corpus(&self) -> String {
+        if self.bugs.is_empty() {
+            return format!(
+                "# fuzz campaign clean: {} cases, {} oracle-identical, {} typed-reject\n",
+                self.cases, self.matches, self.rejects
+            );
+        }
+        let mut s = String::new();
+        for b in &self.bugs {
+            s.push_str(&format!(
+                "# {}\n# original: {} shapes {:?}\n# shrunk:   {} shapes {:?}\n{}\n",
+                b.detail, b.case.expr, b.case.shapes, b.shrunk.expr, b.shrunk.shapes,
+                b.case.repro()
+            ));
+        }
+        s
+    }
+}
+
+/// Run a fixed-seed campaign of `cases` generated cases at the given
+/// rank counts.  Failing cases are shrunk and reported; the campaign
+/// always runs to completion (panics are contained per case).
+pub fn campaign(seed: u64, cases: u64, ranks: &[usize]) -> CampaignReport {
+    let mut report = CampaignReport { cases, ..Default::default() };
+    for k in 0..cases {
+        let case = generate(seed, k);
+        match classify(&case, ranks) {
+            Outcome::Match(_) => report.matches += 1,
+            Outcome::Reject(_) => report.rejects += 1,
+            Outcome::Bug(detail) => {
+                let shrunk =
+                    shrink(&case, &mut |c: &FuzzCase| classify(c, ranks).is_bug());
+                report.bugs.push(BugReport { case, shrunk, detail });
+            }
+        }
+    }
+    report
+}
+
+/// The case pinned by `DEINSUM_FUZZ_SEED` / `DEINSUM_FUZZ_CASE` (the
+/// repro line a shrunk corpus prints), if both are set and parse.
+pub fn env_case() -> Option<FuzzCase> {
+    let seed: u64 = std::env::var("DEINSUM_FUZZ_SEED").ok()?.parse().ok()?;
+    let case: u64 = std::env::var("DEINSUM_FUZZ_CASE").ok()?.parse().ok()?;
+    Some(generate(seed, case))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_deterministic() {
+        for k in 0..32 {
+            let a = generate(7, k);
+            let b = generate(7, k);
+            assert_eq!(a, b, "case {k} must be a pure function of (seed, case)");
+            assert_eq!(a.inputs(), b.inputs());
+        }
+        assert_ne!(generate(7, 0), generate(8, 0));
+        assert_ne!(generate(7, 0), generate(7, 1));
+    }
+
+    #[test]
+    fn generated_cases_cover_the_advertised_space() {
+        let (mut zero_ext, mut one_ext, mut empty_out, mut permuted) = (0, 0, 0, 0);
+        for k in 0..200 {
+            let c = generate(11, k);
+            let (inputs, output) = split_expr(&c.expr).unwrap();
+            assert!((2..=5).contains(&inputs.len()), "{}", c.expr);
+            if c.shapes.iter().flatten().any(|&e| e == 0) {
+                zero_ext += 1;
+            }
+            if c.shapes.iter().flatten().any(|&e| e == 1) {
+                one_ext += 1;
+            }
+            if output.is_empty() {
+                empty_out += 1;
+            }
+            if output.len() >= 2 {
+                permuted += 1;
+            }
+            // Exactness cap: the full iteration space stays small.
+            let mut ext: BTreeMap<char, usize> = BTreeMap::new();
+            for (op, sh) in inputs.iter().zip(&c.shapes) {
+                for (&i, &e) in op.iter().zip(sh) {
+                    ext.insert(i, e);
+                }
+            }
+            let space: usize = ext.values().map(|&e| e.max(1)).product();
+            assert!(space <= MAX_ITER_SPACE, "{}: space {space}", c.expr);
+        }
+        assert!(zero_ext > 5, "extent-0 cases: {zero_ext}");
+        assert!(one_ext > 20, "extent-1 cases: {one_ext}");
+        assert!(empty_out > 5, "scalar-output cases: {empty_out}");
+        assert!(permuted > 40, "multi-index outputs: {permuted}");
+    }
+
+    #[test]
+    fn oracle_matches_hand_computed_matmul() {
+        // ij,jk->ki with tiny known integers.
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = Tensor::from_vec(&[2, 2], vec![5.0, 6.0, 7.0, 8.0]).unwrap();
+        let got = oracle(
+            "ij,jk->ki",
+            &[vec![2, 2], vec![2, 2]],
+            &[a.clone(), b.clone()],
+        )
+        .unwrap();
+        // C = A*B = [[19,22],[43,50]]; ki transposes it.
+        assert_eq!(got.dims(), &[2, 2]);
+        assert_eq!(got.data(), &[19.0, 43.0, 22.0, 50.0]);
+        // Scalar output: full contraction.
+        let s = oracle("ij,ij->", &[vec![2, 2], vec![2, 2]], &[a.clone(), a]).unwrap();
+        assert_eq!(s.dims(), &[] as &[usize]);
+        assert_eq!(s.data(), &[1.0 + 4.0 + 9.0 + 16.0]);
+        // Extent-0 index: empty sums everywhere.
+        let x = Tensor::zeros(&[0, 3]);
+        let y = Tensor::zeros(&[3, 2]);
+        let z = oracle("ij,jk->ik", &[vec![0, 3], vec![3, 2]], &[x, y]).unwrap();
+        assert_eq!(z.dims(), &[0, 2]);
+        // Malformed structure is None, not a panic.
+        let bad = oracle(",j->j", &[vec![], vec![3]], &[Tensor::zeros(&[]), Tensor::zeros(&[3])]);
+        assert!(bad.is_none());
+        assert!(oracle("ii->i", &[vec![2, 2]], &[Tensor::zeros(&[2, 2])]).is_none());
+    }
+
+    #[test]
+    fn shrinker_reaches_a_minimal_case() {
+        // Plant a synthetic "bug": any case with a contracted index of
+        // extent >= 2 (mimicking an accumulation defect).  The minimizer
+        // must reduce a multi-operand case to <= 2 operands with
+        // single-digit extents while preserving the predicate.
+        let mut is_bug = |c: &FuzzCase| {
+            let Some((inputs, output)) = split_expr(&c.expr) else { return false };
+            inputs.iter().zip(&c.shapes).any(|(op, sh)| {
+                op.iter().zip(sh).any(|(i, &e)| !output.contains(i) && e >= 2)
+            })
+        };
+        let mut found = None;
+        for k in 0..64 {
+            let c = generate(0xF00D, k);
+            let (inputs, _) = split_expr(&c.expr).unwrap();
+            if inputs.len() >= 3 && is_bug(&c) {
+                found = Some(c);
+                break;
+            }
+        }
+        let case = found.expect("corpus contains a 3+-operand contracted case");
+        let shrunk = shrink(&case, &mut is_bug);
+        assert!(is_bug(&shrunk), "shrinking must preserve the failure");
+        let (inputs, _) = split_expr(&shrunk.expr).unwrap();
+        assert!(inputs.len() <= 2, "minimal case has <= 2 operands: {}", shrunk.expr);
+        assert!(
+            shrunk.shapes.iter().flatten().all(|&e| e <= 9),
+            "single-digit extents: {:?}",
+            shrunk.shapes
+        );
+        // The printed repro pair regenerates the unshrunk ancestor.
+        assert_eq!(shrunk.repro(), case.repro());
+        let repro = case.repro();
+        let parts: Vec<u64> = repro
+            .split_whitespace()
+            .map(|kv| kv.split_once('=').unwrap().1.parse().unwrap())
+            .collect();
+        assert_eq!(generate(parts[0], parts[1]), case);
+    }
+}

@@ -230,6 +230,42 @@
 //! # Ok(())
 //! # }
 //! ```
+//!
+//! ## Correctness & fuzzing
+//!
+//! The compile pipeline is held to one invariant, enforced by a
+//! deterministic differential fuzzer ([`fuzz`]): **every generated
+//! einsum either plans and runs bitwise-identical to a naive dense
+//! oracle, or is rejected with a typed [`Error`] — never a panic, at
+//! any rank count.**  The harness generates random einsum chains (2–5
+//! operands, shared/permuted/reduced indices, degenerate extents 0 and
+//! 1, skinny/fat aspect ratios) from a SplitMix64 stream, evaluates
+//! each with an independent odometer loop nest (no shared kernel code),
+//! and compares against `Session::compile` + `run`/`run_into` (dirty
+//! recycled destinations) at rank counts {1, 4, 8}.  Inputs are small
+//! integers, so f32 arithmetic is exact and "bitwise identical" holds
+//! across any summation order.  Rejections must be deterministic across
+//! reruns and thread counts, and never retryable.
+//!
+//! Run a local campaign with the CLI:
+//!
+//! ```text
+//! deinsum fuzz --seed 20260808 --cases 500 --ranks 1,4,8
+//! ```
+//!
+//! Any BUG (panic or oracle mismatch) is greedily shrunk — drop
+//! operands, drop indices, halve extents — and reported with a
+//! one-line repro; re-running with those env vars regenerates the
+//! failing case:
+//!
+//! ```text
+//! DEINSUM_FUZZ_SEED=<n> DEINSUM_FUZZ_CASE=<k> deinsum fuzz
+//! ```
+//!
+//! CI runs a fixed-seed 500-case campaign on the 8-thread leg and
+//! uploads the shrunk repro corpus as an artifact on failure;
+//! `tests/fuzz.rs` pins a 64-case corpus, rejection determinism, and
+//! the shrinker contract.
 
 pub mod api;
 pub mod baseline;
@@ -240,6 +276,7 @@ pub mod dist;
 pub mod einsum;
 pub mod error;
 pub mod fault;
+pub mod fuzz;
 pub mod grid;
 pub mod planner;
 pub mod redist;

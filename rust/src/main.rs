@@ -5,6 +5,10 @@
 //!   run   <einsum> --shapes ...                 [--ranks P]    execute on the simulated machine
 //!   bench [--ranks P] [--size-factor F] [--filter NAME]        Table IV suite, Fig. 5 rows
 //!   bounds [--s S]                                             §IV-E I/O lower bounds
+//!   fuzz  [--seed N] [--cases N] [--ranks 1,4,8] [--corpus F]  differential campaign vs the
+//!                                                              dense oracle (src/fuzz);
+//!                                                              DEINSUM_FUZZ_SEED/_CASE set =
+//!                                                              single-case repro mode
 //!
 //! All einsum work goes through the [`Session`]/`Program` front door
 //! (`--artifacts DIR` serves local kernels from PJRT, degrading to the
@@ -14,6 +18,7 @@
 use std::process::ExitCode;
 
 use deinsum::bench_support::{self, header, row};
+use deinsum::fuzz;
 use deinsum::soap::{self, Statement};
 use deinsum::tensor::Tensor;
 use deinsum::Session;
@@ -70,7 +75,7 @@ fn session_from_flags(args: &Args) -> Session {
 fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() {
-        eprintln!("usage: deinsum <plan|run|bench|bounds> [args]  (see README)");
+        eprintln!("usage: deinsum <plan|run|bench|bounds|fuzz> [args]  (see README)");
         return ExitCode::FAILURE;
     }
     let cmd = argv[0].clone();
@@ -80,6 +85,7 @@ fn main() -> ExitCode {
         "run" => cmd_run(&args),
         "bench" => cmd_bench(&args),
         "bounds" => cmd_bounds(&args),
+        "fuzz" => cmd_fuzz(&args),
         other => Err(format!("unknown command '{other}'")),
     };
     match res {
@@ -146,6 +152,66 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
     }
     println!("geomean speedup: {:.2}x", bench_support::geomean(&points));
     Ok(())
+}
+
+fn cmd_fuzz(args: &Args) -> Result<(), String> {
+    let ranks: Vec<usize> = match args.flags.get("ranks") {
+        Some(s) => s
+            .split(',')
+            .map(|r| r.parse::<usize>().map_err(|e| format!("bad rank '{r}': {e}")))
+            .collect::<Result<_, _>>()?,
+        None => fuzz::DEFAULT_RANKS.to_vec(),
+    };
+    if ranks.is_empty() || ranks.contains(&0) {
+        return Err("--ranks needs a comma-separated list of positive rank counts".into());
+    }
+
+    // Repro mode: DEINSUM_FUZZ_SEED / DEINSUM_FUZZ_CASE (the pair a
+    // shrunk corpus prints) pin one generated case instead of a sweep.
+    if let Some(case) = fuzz::env_case() {
+        println!("repro {}: {} shapes {:?}", case.repro(), case.expr, case.shapes);
+        let outcome = fuzz::classify(&case, &ranks);
+        println!("{}", outcome.signature());
+        return if outcome.is_bug() {
+            Err(format!("BUG reproduced: {}", outcome.signature()))
+        } else {
+            Ok(())
+        };
+    }
+
+    let seed: u64 = match args.flags.get("seed") {
+        Some(s) => s.parse().map_err(|e| format!("bad --seed '{s}': {e}"))?,
+        None => 20260808,
+    };
+    let cases: u64 = match args.flags.get("cases") {
+        Some(s) => s.parse().map_err(|e| format!("bad --cases '{s}': {e}"))?,
+        None => 500,
+    };
+    let report = fuzz::campaign(seed, cases, &ranks);
+    println!(
+        "fuzz seed {seed}: {} cases at ranks {ranks:?} — {} oracle-identical, {} typed-reject, {} bugs",
+        report.cases,
+        report.matches,
+        report.rejects,
+        report.bugs.len()
+    );
+    for b in &report.bugs {
+        eprintln!("BUG: {}", b.detail);
+        eprintln!("  original: {} shapes {:?}", b.case.expr, b.case.shapes);
+        eprintln!("  shrunk:   {} shapes {:?}", b.shrunk.expr, b.shrunk.shapes);
+        eprintln!("  repro:    {}", b.case.repro());
+    }
+    // The corpus (clean summary or shrunk repro blocks) is written even
+    // on failure — CI uploads it as the campaign artifact.
+    if let Some(path) = args.flags.get("corpus") {
+        std::fs::write(path, report.corpus()).map_err(|e| format!("write {path}: {e}"))?;
+        println!("# wrote {path}");
+    }
+    if report.bugs.is_empty() {
+        Ok(())
+    } else {
+        Err(format!("{} BUG case(s) — shrunk repros above", report.bugs.len()))
+    }
 }
 
 fn cmd_bounds(args: &Args) -> Result<(), String> {

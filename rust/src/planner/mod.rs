@@ -236,7 +236,7 @@ fn detect_mttkrp(group: &FusedGroup) -> Option<LocalKernel> {
     if rest != cov {
         return None;
     }
-    let mode = x_idx.iter().position(|&c| c == mode_char).unwrap();
+    let mode = x_idx.iter().position(|&c| c == mode_char)?;
     // Order factor slots by X's mode order (the engine's convention).
     let mut ordered = Vec::new();
     for &c in x_idx.iter() {
@@ -249,15 +249,31 @@ fn detect_mttkrp(group: &FusedGroup) -> Option<LocalKernel> {
             .enumerate()
             .position(|(s, (_, idx))| {
                 s != x_slot && idx.contains(&c) && factor_slots.contains(&s)
-            })
-            .unwrap();
+            })?;
         ordered.push(slot);
     }
     Some(LocalKernel::Mttkrp { x_input: x_slot, mode, factor_inputs: ordered })
 }
 
 /// Plan a distributed schedule for `spec` on `p` ranks.
+///
+/// Degenerate programs are rejected up front, before any grid or SOAP
+/// machinery sees them: a zero-extent index makes every block empty (no
+/// distributed schedule exists), and a rank-0 output has no dimension to
+/// lay a process grid over.  Both come back as typed errors naming the
+/// offender — the fuzz harness ([`crate::fuzz`]) counts them as clean
+/// rejections, never bugs.
 pub fn plan(spec: &EinsumSpec, p: usize, cfg: &PlannerConfig) -> Result<Plan> {
+    if let Some((&c, _)) = spec.extents.iter().find(|&(_, &n)| n == 0) {
+        return Err(Error::shape(format!(
+            "index '{c}' has extent 0: empty tensors cannot be scheduled"
+        )));
+    }
+    if spec.output.is_empty() {
+        return Err(Error::plan(
+            "scalar (rank-0) output unsupported: keep at least one output index",
+        ));
+    }
     let path = optimize(spec)?;
     let fusion = if cfg.fuse {
         best_fusion(&path, spec, cfg.s_elements)?
@@ -287,8 +303,14 @@ pub fn plan(spec: &EinsumSpec, p: usize, cfg: &PlannerConfig) -> Result<Plan> {
             )));
         }
         let indices: Vec<char> = group.indices.clone();
-        let extents: Vec<usize> =
-            indices.iter().map(|c| spec.extents[c]).collect();
+        let extents: Vec<usize> = indices
+            .iter()
+            .map(|c| {
+                spec.extents.get(c).copied().ok_or_else(|| {
+                    Error::plan(format!("term {ti}: index '{c}' has no extent"))
+                })
+            })
+            .collect::<Result<_>>()?;
 
         // Grid shape: SOAP tile proportions (unclamped extents give clean
         // asymptotic ratios; see DESIGN.md) or raw-extent balance.
@@ -302,7 +324,9 @@ pub fn plan(spec: &EinsumSpec, p: usize, cfg: &PlannerConfig) -> Result<Plan> {
             indices
                 .iter()
                 .zip(&extents)
-                .map(|(c, &n)| n as f64 / unclamped.tiles[c])
+                .map(|(c, &n)| {
+                    n as f64 / unclamped.tiles.get(c).copied().unwrap_or(1.0).max(1.0)
+                })
                 .collect()
         } else {
             extents.iter().map(|&n| n as f64).collect()
@@ -323,11 +347,24 @@ pub fn plan(spec: &EinsumSpec, p: usize, cfg: &PlannerConfig) -> Result<Plan> {
 
         // Distributions.
         let mk_dist = |idx: &[char]| -> Result<TensorDist> {
-            let ext: Vec<usize> = idx.iter().map(|c| spec.extents[c]).collect();
+            let ext: Vec<usize> = idx
+                .iter()
+                .map(|c| {
+                    spec.extents.get(c).copied().ok_or_else(|| {
+                        Error::plan(format!("term {ti}: index '{c}' has no extent"))
+                    })
+                })
+                .collect::<Result<_>>()?;
             let gd: Vec<usize> = idx
                 .iter()
-                .map(|c| indices.iter().position(|i| i == c).unwrap())
-                .collect();
+                .map(|c| {
+                    indices.iter().position(|i| i == c).ok_or_else(|| {
+                        Error::plan(format!(
+                            "term {ti}: operand index '{c}' not in term iteration space"
+                        ))
+                    })
+                })
+                .collect::<Result<_>>()?;
             TensorDist::new(&ext, &grid, &gd)
         };
         let mut term_inputs = Vec::new();
@@ -393,7 +430,11 @@ fn single_group(
 ) -> Result<FusedGroup> {
     let sub = Path { ops: vec![path.ops[q].clone()], flops: 0, n_inputs: path.n_inputs };
     let groups = crate::soap::sdg::best_fusion(&sub, spec, s)?;
-    let mut g = groups.groups.into_iter().next().unwrap();
+    let mut g = groups
+        .groups
+        .into_iter()
+        .next()
+        .ok_or_else(|| Error::plan(format!("op {q}: empty fusion for single-op term")))?;
     g.op_indices = vec![q]; // renumber into the original path
     Ok(g)
 }
@@ -629,6 +670,34 @@ mod tests {
         assert!(r.contains("Cart_create"));
         assert!(r.contains("Redistribute"));
         assert!(r.contains("fused MTTKRP"));
+    }
+
+    #[test]
+    fn zero_extent_rejects_typed_naming_the_index() {
+        let spec = EinsumSpec::parse("ij,jk->ik", &[vec![4, 0], vec![0, 3]]).unwrap();
+        for p in [1, 4, 8] {
+            match plan(&spec, p, &cfg()) {
+                Err(Error::Shape(m)) => {
+                    assert!(m.contains("'j'"), "P={p}: should name index j: {m}");
+                    assert!(m.contains("extent 0"), "P={p}: {m}");
+                }
+                Err(e) => panic!("P={p}: want Shape error, got {e:?}"),
+                Ok(_) => panic!("P={p}: zero-extent program must not plan"),
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_output_rejects_typed() {
+        let spec = EinsumSpec::parse("ij,ij->", &[vec![3, 4], vec![3, 4]]).unwrap();
+        match plan(&spec, 4, &cfg()) {
+            Err(e @ Error::Plan(_)) => {
+                assert!(e.to_string().contains("scalar"), "{e}");
+                assert!(!e.is_retryable());
+            }
+            Err(e) => panic!("want Plan error, got {e:?}"),
+            Ok(_) => panic!("rank-0 output must not plan"),
+        }
     }
 
     #[test]

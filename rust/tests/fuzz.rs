@@ -1,0 +1,129 @@
+//! Differential-fuzzing acceptance suite for the plan-or-typed-reject
+//! invariant (ROADMAP item 4): a fixed-seed corpus driven through
+//! `Session::compile` and `run`/`run_into` (dirty recycled destinations)
+//! at rank counts {1, 4, 8} against the naive dense oracle, plus
+//! rejection-determinism and shrinker regressions.
+//!
+//! The CI thread matrix (`DEINSUM_NUM_THREADS={1,8}`) runs this file
+//! under both the serial and the 8-worker kernel paths, so the signature
+//! assertions pin rejection stability across thread counts as well as
+//! across reruns: classification is a pure function of
+//! `(expr, shapes, P)` — the compile path never consults the kernel
+//! thread count before accepting or rejecting.
+
+use deinsum::fuzz::{self, FuzzCase};
+
+/// The fixed campaign seed CI and the corpus tests share (also the
+/// `deinsum fuzz` default).
+const CORPUS_SEED: u64 = 20260808;
+
+#[test]
+fn corpus_plans_bitwise_or_rejects_typed() {
+    let report = fuzz::campaign(CORPUS_SEED, 64, fuzz::DEFAULT_RANKS);
+    assert!(report.bugs.is_empty(), "invariant violated:\n{}", report.corpus());
+    assert_eq!(report.matches + report.rejects, report.cases);
+    // The corpus must exercise both arms of the invariant, or the
+    // campaign is vacuous.
+    assert!(report.matches > 0, "no case matched the oracle bitwise");
+    assert!(report.rejects > 0, "no case was typed-rejected");
+}
+
+#[test]
+fn rejections_are_deterministic_and_never_retryable() {
+    for k in 0..64u64 {
+        let case = fuzz::generate(CORPUS_SEED, k);
+        let first = fuzz::classify(&case, fuzz::DEFAULT_RANKS);
+        let second = fuzz::classify(&case, fuzz::DEFAULT_RANKS);
+        assert_eq!(
+            first.signature(),
+            second.signature(),
+            "case {k} ({}) classified differently across reruns",
+            case.expr
+        );
+        assert!(!first.is_bug(), "case {k}: {}", first.signature());
+        for r in first.rejections() {
+            assert!(!r.message.is_empty(), "case {k} P={}: empty rejection", r.ranks);
+            assert!(
+                !r.retryable,
+                "case {k} P={}: rejection '{}' must never burn serve retry budget",
+                r.ranks,
+                r.message
+            );
+        }
+    }
+}
+
+#[test]
+fn hostile_expressions_reject_typed_at_every_rank_count() {
+    // Hand-picked adversarial expressions the generator's grammar cannot
+    // emit: each must produce the same typed rejection at P in {1,4,8}.
+    let hostile: &[(&str, &[&[usize]])] = &[
+        (",j->j", &[&[], &[3]]),                // empty operand
+        ("ij,jk->ik,", &[&[2, 3], &[3, 2]]),    // trailing comma in output
+        ("ii->i", &[&[2, 2]]),                  // trace (repeated index)
+        ("ij,jk->ik", &[&[2, 0], &[0, 2]]),     // extent-0 contraction
+        ("ij,ij->", &[&[2, 2], &[2, 2]]),       // rank-0 output
+        ("ij,jk->il", &[&[2, 3], &[3, 2]]),     // unbound output index
+        ("ij,jk->ik", &[&[2, 3], &[4, 2]]),     // extent conflict on j
+    ];
+    for (expr, shapes) in hostile {
+        let shapes: Vec<Vec<usize>> = shapes.iter().map(|s| s.to_vec()).collect();
+        let case = FuzzCase { seed: 0, case: 0, expr: expr.to_string(), shapes };
+        let outcome = fuzz::classify(&case, fuzz::DEFAULT_RANKS);
+        assert!(
+            matches!(outcome, fuzz::Outcome::Reject(_)),
+            "{expr}: expected typed reject at every rank count, got {}",
+            outcome.signature()
+        );
+        assert_eq!(outcome.rejections().len(), fuzz::DEFAULT_RANKS.len(), "{expr}");
+        for r in outcome.rejections() {
+            assert!(!r.retryable, "{expr} P={}: '{}'", r.ranks, r.message);
+        }
+    }
+}
+
+#[test]
+fn planted_bug_shrinks_to_minimal_and_reproduces_from_env_pair() {
+    // Plant a synthetic failure predicate — any case with a contracted
+    // index of extent >= 2, mimicking an accumulation defect — and pin
+    // the acceptance contract end to end: the minimizer reaches <= 2
+    // operands with single-digit extents, and the printed
+    // `DEINSUM_FUZZ_SEED`/`DEINSUM_FUZZ_CASE` pair regenerates the
+    // unshrunk ancestor through the same env-var path the CLI repro
+    // mode (`deinsum fuzz`) uses.
+    fn ops_of(c: &FuzzCase) -> Vec<&str> {
+        c.expr.split_once("->").map(|(lhs, _)| lhs.split(',').collect()).unwrap_or_default()
+    }
+    let mut is_bug = |c: &FuzzCase| {
+        let Some((_, rhs)) = c.expr.split_once("->") else { return false };
+        ops_of(c)
+            .iter()
+            .zip(&c.shapes)
+            .any(|(op, sh)| op.chars().zip(sh).any(|(i, &e)| !rhs.contains(i) && e >= 2))
+    };
+    let case = (0..64)
+        .map(|k| fuzz::generate(0xF00D, k))
+        .find(|c| ops_of(c).len() >= 3 && is_bug(c))
+        .expect("corpus contains a 3+-operand contracted case");
+    let shrunk = fuzz::shrink(&case, &mut is_bug);
+    assert!(is_bug(&shrunk), "shrinking must preserve the planted failure");
+    assert!(ops_of(&shrunk).len() <= 2, "minimal case has <= 2 operands: {}", shrunk.expr);
+    assert!(
+        shrunk.shapes.iter().flatten().all(|&e| e <= 9),
+        "single-digit extents: {:?}",
+        shrunk.shapes
+    );
+
+    // The one-line repro names the *ancestor* pair; round-trip it
+    // through the env-var entry point.
+    assert_eq!(
+        shrunk.repro(),
+        format!("DEINSUM_FUZZ_SEED={} DEINSUM_FUZZ_CASE={}", case.seed, case.case)
+    );
+    std::env::set_var("DEINSUM_FUZZ_SEED", case.seed.to_string());
+    std::env::set_var("DEINSUM_FUZZ_CASE", case.case.to_string());
+    let regen = fuzz::env_case().expect("env pair parses back");
+    std::env::remove_var("DEINSUM_FUZZ_SEED");
+    std::env::remove_var("DEINSUM_FUZZ_CASE");
+    assert_eq!(regen, case, "env repro must regenerate the ancestor bit-for-bit");
+}

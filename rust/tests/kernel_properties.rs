@@ -284,6 +284,129 @@ fn property_parallel_transpose_matches_oracle() {
 }
 
 #[test]
+fn property_gemm_extent_zero_tiles_are_no_ops() {
+    // Zero-size tiles are what over-partitioning produces locally (a
+    // grid factor larger than a small extent leaves trailing ranks with
+    // empty blocks — exactly the shapes the fuzzer's degenerate-extent
+    // seeds drive through the planner's P=8 fallback).  The packed GEMM
+    // must early-return — never index OOB or touch the accumulator: an
+    // empty reduction (k = 0) under accumulate semantics leaves C
+    // exactly as it was.
+    let pool = ScratchPool::new();
+    for cfg in &stress_cfgs() {
+        for &(m, k, n) in &[(0usize, 5usize, 7usize), (5, 0, 7), (5, 7, 0), (0, 0, 0)] {
+            let a = Tensor::random(&[m, k], 31);
+            let b = Tensor::random(&[k, n], 32);
+            let mut c = vec![9.0f32; m * n];
+            kernel::gemm_into_with(cfg, &pool, a.data(), b.data(), &mut c, m, k, n);
+            assert!(
+                c.iter().all(|&v| v == 9.0),
+                "({m},{k},{n}) cfg {cfg:?}: zero-size GEMM wrote to C"
+            );
+        }
+    }
+}
+
+#[test]
+fn property_einsum2_into_extent_zero_overwrites_dirty_dest() {
+    // An extent-0 contracted index is an empty sum: a recycled dirty
+    // destination must come back all-zero (fully overwritten), in both
+    // the natural-layout accumulate path and the permuted-output path,
+    // at every config.
+    let pool = ScratchPool::new();
+    let x = Tensor::zeros(&[3, 0, 4]); // ijk with j = 0
+    let y = Tensor::zeros(&[0, 4, 2]); // jka
+    for cfg in &stress_cfgs() {
+        for out_idx in [&['i', 'a'] as &[char], &['a', 'i']] {
+            let want = contract::einsum2_with(
+                cfg, &pool, &x, &['i', 'j', 'k'], &y, &['j', 'k', 'a'], out_idx,
+            )
+            .unwrap();
+            assert!(want.data().iter().all(|&v| v == 0.0), "->{out_idx:?} cfg {cfg:?}");
+            let mut dest = Tensor::random(want.dims(), 77);
+            contract::einsum2_into_with(
+                cfg, &pool, &x, &['i', 'j', 'k'], &y, &['j', 'k', 'a'], out_idx, &mut dest,
+            )
+            .unwrap();
+            assert_eq!(dest, want, "->{out_idx:?} cfg {cfg:?}: dirty dest survived");
+        }
+    }
+    // Extent-0 *free* index: the output itself is empty, not zero-filled.
+    let xe = Tensor::zeros(&[0, 3]); // ij with i = 0
+    let ye = Tensor::zeros(&[3, 2]); // ja
+    let serial = KernelConfig::default().serial();
+    let (xi, yi, oi): (&[char], &[char], &[char]) = (&['i', 'j'], &['j', 'a'], &['i', 'a']);
+    let out = contract::einsum2_with(&serial, &pool, &xe, xi, &ye, yi, oi).unwrap();
+    assert_eq!(out.dims(), &[0, 2]);
+    assert!(out.is_empty());
+}
+
+#[test]
+fn property_einsum2_extent_one_folds_match_oracle() {
+    // All-singleton and mixed extent-1 shapes: the folds that collapse
+    // empty free/contracted sets must stay exact (bitwise vs the _into
+    // twin, value-correct vs hand computation).
+    let pool = ScratchPool::new();
+    for cfg in &stress_cfgs() {
+        let x = Tensor::from_vec(&[1, 1, 1], vec![3.0]).unwrap();
+        let y = Tensor::from_vec(&[1, 1, 1], vec![5.0]).unwrap();
+        let (xi, yi): (&[char], &[char]) = (&['i', 'j', 'k'], &['j', 'k', 'a']);
+        let oi: &[char] = &['i', 'a'];
+        let got = contract::einsum2_with(cfg, &pool, &x, xi, &y, yi, oi).unwrap();
+        assert_eq!(got.dims(), &[1, 1], "cfg {cfg:?}");
+        assert_eq!(got.data(), &[15.0], "cfg {cfg:?}");
+
+        // Extent-1 contracted dim next to a real one: ij,jk->ki with
+        // j = 1 degenerates to a permuted outer product.
+        let a = Tensor::from_vec(&[2, 1], vec![2.0, -1.0]).unwrap();
+        let b = Tensor::from_vec(&[1, 3], vec![1.0, 2.0, 4.0]).unwrap();
+        let (ai, bi, ki): (&[char], &[char], &[char]) = (&['i', 'j'], &['j', 'k'], &['k', 'i']);
+        let got = contract::einsum2_with(cfg, &pool, &a, ai, &b, bi, ki).unwrap();
+        assert_eq!(got.dims(), &[3, 2], "cfg {cfg:?}");
+        assert_eq!(got.data(), &[2.0, -1.0, 4.0, -2.0, 8.0, -4.0], "cfg {cfg:?}");
+        let mut dest = Tensor::random(&[3, 2], 55);
+        contract::einsum2_into_with(cfg, &pool, &a, ai, &b, bi, ki, &mut dest).unwrap();
+        assert_eq!(dest, got, "cfg {cfg:?}: _into twin diverged");
+    }
+}
+
+#[test]
+fn property_mttkrp_into_extent_zero_zeroes_dest() {
+    // Both degenerate MTTKRP shapes: an empty mode-0 fiber count (empty
+    // output) and an empty rest mode (empty reduction — the dirty dest
+    // must be zero-filled, not left stale).
+    let pool = ScratchPool::new();
+    let r = 5usize;
+    for cfg in &stress_cfgs() {
+        for dims in [vec![0usize, 4, 3], vec![4, 0, 3]] {
+            let x = Tensor::zeros(&dims);
+            let fs: Vec<Tensor> = dims.iter().map(|&d| Tensor::random(&[d, r], 3)).collect();
+            let frefs: Vec<&Tensor> = fs.iter().collect();
+            let mut dest = Tensor::random(&[dims[0], r], 9);
+            contract::mttkrp_with_into(cfg, &pool, &x, &frefs, 0, &mut dest).unwrap();
+            assert_eq!(dest.dims(), &[dims[0], r], "dims {dims:?} cfg {cfg:?}");
+            assert!(
+                dest.data().iter().all(|&v| v == 0.0),
+                "dims {dims:?} cfg {cfg:?}: dirty dest survived an empty reduction"
+            );
+        }
+    }
+}
+
+#[test]
+fn property_transpose_extent_zero_is_empty() {
+    // Permuting a tensor with a 0-extent mode must produce the permuted
+    // (still empty) shape without touching any element.
+    for threads in [1usize, 4] {
+        let cfg = KernelConfig::default().with_threads(threads);
+        let t = Tensor::zeros(&[3, 0, 2]);
+        let got = transpose::permute_with(&cfg, &t, &[2, 0, 1]);
+        assert_eq!(got.dims(), &[2, 3, 0], "threads {threads}");
+        assert!(got.is_empty(), "threads {threads}");
+    }
+}
+
+#[test]
 fn transpose_above_parallel_cutoff_matches_oracle() {
     // Forcefully large tensors so the threaded paths run: both the
     // inner-run fast path and the blocked 2D path.
