@@ -15,6 +15,10 @@
 //!   machine + warm pools) vs the cold first-query path (fresh session,
 //!   cache-miss compile, spawn-dispatch baseline), on a multi-step plan
 //!   (`DEINSUM_BENCH_TINY=1` shrinks it for CI smoke runs)
+//! - execution backends: the same warm re-run on the message-passing
+//!   backend (`machine_backend_mp`, speedup = sim/mp) and a
+//!   redistribution-dominated chain over real channels
+//!   (`redistribute_mp`)
 //! - differential fuzz campaign throughput (`fuzz_campaign`): cases/sec
 //!   of generate + oracle + compile/run at ranks {1,4,8} over the
 //!   fixed-seed tiny corpus (src/fuzz)
@@ -459,6 +463,110 @@ fn main() {
             None,
             Some(cold / steady),
             Some(allocs_per_run),
+        );
+    }
+
+    // --- message-passing backend: steady state + redistribution ----------------
+    //
+    // The same warm-Program rerun as coordinator_steady_state, executed
+    // on the mp backend (one thread per rank, channel traffic for every
+    // redistribution/allreduce) — tracks the channel protocol's overhead
+    // over the in-process simulator.  `allocs_per_run` counts per-program
+    // tensor allocations (store + local scratch) of one bracketed warm
+    // run_into; the session-wide engine pool is excluded because mp rank
+    // threads hit it concurrently (its high-water mark is not
+    // deterministic there).
+    {
+        use deinsum::ExecBackend;
+        let n = if tiny { 12 } else { 48 };
+        let r = 24usize;
+        let expr = "ijk,ja,ka,al->il";
+        let shapes = vec![vec![n, n, n], vec![n, r], vec![n, r], vec![r, n]];
+        let pcfg = PlannerConfig { s_elements: 64.0, ..Default::default() };
+        let inputs: Vec<Tensor> = vec![
+            Tensor::random(&[n, n, n], 41),
+            Tensor::random(&[n, r], 42),
+            Tensor::random(&[n, r], 43),
+            Tensor::random(&[r, n], 44),
+        ];
+        let time_backend = |backend: ExecBackend| -> (f64, u64) {
+            let session = Session::builder()
+                .ranks(8)
+                .planner(pcfg)
+                .kernel_config(cfg)
+                .backend(backend)
+                .build()
+                .unwrap();
+            let mut prog = session.compile(expr, &shapes).unwrap();
+            let mut out = Tensor::zeros(&prog.output_dims());
+            for _ in 0..2 {
+                prog.run_into(&inputs, &mut out).unwrap();
+            }
+            let (med, _, _) = common::time_median(reps, || {
+                prog.run_into(&inputs, &mut out).unwrap();
+            });
+            // Precisely-bracketed per-run tensor allocations (must be 0).
+            let before = prog.stats().tensor_allocs();
+            prog.run_into(&inputs, &mut out).unwrap();
+            let allocs = prog.stats().tensor_allocs() - before;
+            (med, allocs)
+        };
+        let (sim_med, _) = time_backend(ExecBackend::Sim);
+        let (mp_med, mp_allocs) = time_backend(ExecBackend::Mp);
+        let shape = format!("{n}^3 r{r} P=8 two-term");
+        println!(
+            "backend {shape}: sim {} | mp {} ({:.2}x) | mp tensor allocs/run {mp_allocs}",
+            common::fmt_s(sim_med),
+            common::fmt_s(mp_med),
+            sim_med / mp_med,
+        );
+        record_full(
+            &mut records,
+            "machine_backend_mp",
+            &shape,
+            mp_med,
+            None,
+            Some(sim_med / mp_med),
+            Some(mp_allocs),
+        );
+
+        // Redistribution-dominated matrix chain on the mp backend: every
+        // inter-term move is real rank-to-rank channel traffic.
+        let cexpr = "ij,jk,kl->il";
+        let m = if tiny { 32 } else { 128 };
+        let cshapes = vec![vec![m, m], vec![m, m], vec![m, m]];
+        let cinputs: Vec<Tensor> = cshapes
+            .iter()
+            .enumerate()
+            .map(|(i, s)| Tensor::random(s, 51 + i as u64))
+            .collect();
+        let session = Session::builder()
+            .ranks(8)
+            .planner(pcfg)
+            .kernel_config(cfg)
+            .backend(ExecBackend::Mp)
+            .build()
+            .unwrap();
+        let mut prog = session.compile(cexpr, &cshapes).unwrap();
+        let moves = prog.plan().moves.len();
+        let mut out = Tensor::zeros(&prog.output_dims());
+        for _ in 0..2 {
+            prog.run_into(&cinputs, &mut out).unwrap();
+        }
+        let (med, _, _) = common::time_median(reps, || {
+            prog.run_into(&cinputs, &mut out).unwrap();
+        });
+        println!(
+            "redistribute mp {cexpr} {m}^2 P=8 ({moves} moves): {} per run",
+            common::fmt_s(med)
+        );
+        record(
+            &mut records,
+            "redistribute_mp",
+            &format!("{m}^2 chain P=8"),
+            med,
+            None,
+            None,
         );
     }
 

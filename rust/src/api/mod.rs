@@ -13,13 +13,22 @@
 //!   ([`Session::cache_stats`]): recompiling an identical spec skips
 //!   planning entirely and shares the cached [`Plan`];
 //! - a [`Program`] ([`Session::compile`]) owns its plan, its persistent
-//!   simulated machine, and every recycled buffer.  [`Program::run`]
-//!   executes and returns a fresh output; [`Program::run_into`] writes
-//!   the output through a caller-provided tensor so steady-state reruns
-//!   perform **zero tensor allocations** end to end;
-//!   [`Program::schedule`] renders the §II-E intermediate program and
-//!   [`Program::stats`] merges every store/scratch counter into one
-//!   [`RunStats`].
+//!   execution backend ([`crate::exec::Executor`]), and every recycled
+//!   buffer.  [`Program::run`] executes and returns a fresh output;
+//!   [`Program::run_into`] writes the output through a caller-provided
+//!   tensor so steady-state reruns perform **zero tensor allocations**
+//!   end to end; [`Program::schedule`] renders the §II-E intermediate
+//!   program and [`Program::stats`] merges every store/scratch counter
+//!   into one [`RunStats`].
+//!
+//! ## Execution backends
+//!
+//! Plans execute through a pluggable [`crate::exec::Executor`]: the
+//! in-process simulated machine ([`ExecBackend::Sim`], the default) or
+//! the message-passing rank-thread backend ([`ExecBackend::Mp`]).
+//! Select per session with [`SessionBuilder::backend`], or process-wide
+//! with `DEINSUM_BACKEND=mp`.  Outputs are bitwise identical across
+//! backends for a fixed plan and inputs.
 //!
 //! ## Concurrency (0.6.0: `Rc` → `Arc`)
 //!
@@ -76,6 +85,7 @@ use crate::baseline::plan_baseline;
 use crate::coordinator::{run_plan, ExecState, LocalScratchStats, RunMetrics, RunReport};
 use crate::einsum::EinsumSpec;
 use crate::error::Result;
+use crate::exec::ExecBackend;
 use crate::planner::{plan as plan_schedule, Plan, PlannerConfig};
 use crate::runtime::KernelEngine;
 use crate::sim::{NetworkModel, StoreStats};
@@ -180,6 +190,7 @@ pub struct SessionBuilder {
     planner: PlannerConfig,
     plan_cache_capacity: usize,
     fault_plan: Option<crate::fault::FaultPlan>,
+    backend: Option<ExecBackend>,
 }
 
 impl Default for SessionBuilder {
@@ -193,6 +204,7 @@ impl Default for SessionBuilder {
             planner: PlannerConfig::default(),
             plan_cache_capacity: 32,
             fault_plan: None,
+            backend: None,
         }
     }
 }
@@ -260,6 +272,15 @@ impl SessionBuilder {
         self
     }
 
+    /// Pin the execution backend for every program of this session
+    /// ([`ExecBackend::Sim`] or [`ExecBackend::Mp`]).  Unset, the
+    /// process-wide `DEINSUM_BACKEND` environment variable decides
+    /// ([`ExecBackend::from_env`], defaulting to the simulator).
+    pub fn backend(mut self, backend: ExecBackend) -> Self {
+        self.backend = Some(backend);
+        self
+    }
+
     /// Build the session.  Only the PJRT path can fail (missing or
     /// unloadable artifacts); a native session is infallible.
     pub fn build(self) -> Result<Session> {
@@ -283,6 +304,7 @@ impl SessionBuilder {
             ranks: self.ranks,
             planner: self.planner,
             cache: Mutex::new(PlanCache::new(self.plan_cache_capacity)),
+            backend: self.backend.unwrap_or_else(ExecBackend::from_env),
         })
     }
 
@@ -315,6 +337,7 @@ pub struct Session {
     ranks: usize,
     planner: PlannerConfig,
     cache: Mutex<PlanCache>,
+    backend: ExecBackend,
 }
 
 impl Session {
@@ -421,6 +444,11 @@ impl Session {
         self.planner
     }
 
+    /// The execution backend every program of this session runs on.
+    pub fn backend(&self) -> ExecBackend {
+        self.backend
+    }
+
     fn key(&self, expr: &str, shapes: &[Vec<usize>], p: usize, baseline: bool) -> PlanKey {
         // Exhaustive destructuring: adding a PlannerConfig knob without
         // extending the cache key becomes a compile error here, not a
@@ -442,15 +470,15 @@ impl Session {
             engine: Arc::clone(&self.engine),
             network: self.network,
             plan,
-            state: ExecState::default(),
+            state: ExecState::with_backend(self.backend),
             runs: 0,
         }
     }
 }
 
 /// Unified allocation/recycling counters for one [`Program`]: the
-/// persistent machine's staging/redistribution destinations and compute
-/// outputs ([`StoreStats`]), the run loop's local scratch table
+/// persistent backend's staging/redistribution destinations and compute
+/// outputs ([`StoreStats`]), its per-rank local scratch
 /// ([`LocalScratchStats`]), and the engine's packing/fold pool
 /// ([`ScratchStats`] — shared by every program of the session).  The
 /// steady-state invariant in one number: [`RunStats::allocs`] is flat
@@ -460,10 +488,10 @@ pub struct RunStats {
     /// Completed `run`/`run_into` calls of this program.
     pub runs: u64,
     /// Staging/redistribution destination + compute-output counters of
-    /// the program's persistent machine.
+    /// the program's persistent backend.
     pub store: StoreStats,
     /// Seq-intermediate / pre-reduction / permute / gather scratch
-    /// counters of the program's local scratch table.
+    /// counters of the backend's per-rank local scratch.
     pub local_scratch: LocalScratchStats,
     /// Packing/fold scratch-pool counters of the session engine
     /// (session-wide: shared across this session's programs).
@@ -512,7 +540,7 @@ impl RunStats {
 }
 
 /// A compiled distributed program: the I/O-optimal [`Plan`] (possibly
-/// shared with the session's cache), the persistent simulated machine,
+/// shared with the session's cache), the persistent execution backend,
 /// and every recycled buffer.  Re-running is the cheap operation the
 /// whole stack is built around — see the [module docs](self).
 ///
@@ -677,6 +705,22 @@ mod tests {
         is_send::<Program>();
         is_send::<KernelEngine>();
         is_sync::<KernelEngine>();
+    }
+
+    #[test]
+    fn builder_pins_backend_and_runs_on_it() {
+        let session =
+            Session::builder().ranks(2).backend(ExecBackend::Mp).build().unwrap();
+        assert_eq!(session.backend(), ExecBackend::Mp);
+        let shapes = vec![vec![8, 6], vec![6, 4]];
+        let mut prog = session.compile("ij,jk->ik", &shapes).unwrap();
+        let inputs = vec![Tensor::random(&[8, 6], 1), Tensor::random(&[6, 4], 2)];
+        let rep = prog.run(&inputs).unwrap();
+        assert_eq!(rep.output.dims(), &[8, 4]);
+        // The pinned backend survives into the program's executor: a
+        // second run must keep reusing it (counters keep accumulating).
+        prog.run(&inputs).unwrap();
+        assert!(prog.stats().store.dest_reuses > 0);
     }
 
     #[test]

@@ -1,5 +1,5 @@
-//! The distributed run loop: execute a [`Plan`] on the simulated machine
-//! (paper §II-D/E).
+//! The distributed run loop: execute a [`Plan`] through a pluggable
+//! [`Executor`] backend (paper §II-D/E).
 //!
 //! For every term, in order:
 //!
@@ -7,105 +7,50 @@
 //!    [`TensorDist`]s) or **Redistribute** intermediates produced by
 //!    earlier terms (§V-C message matching);
 //! 2. **Local compute** on every rank — the fused MTTKRP Pallas/PJRT
-//!    kernel, or the generic folded-GEMM binary-op sequence — with
-//!    measured per-rank wall-clock;
+//!    kernel, or the generic folded-GEMM binary-op sequence — resolved
+//!    once per term into a backend-agnostic
+//!    [`ComputeStep`](crate::exec::ComputeStep) and executed by the
+//!    backend with measured per-rank wall-clock;
 //! 3. **Allreduce** partial outputs over the reduction sub-grids (§II-D).
 //!
 //! Numerics are exact (real bytes move between rank buffers); time is
 //! measured compute + α–β-modeled communication, reported per term for
 //! the Fig. 5/6 blue/pink split.
 //!
-//! The execution core is `run_plan` over an `ExecState` — the
-//! persistent [`Machine`] plus the recycled local scratch table — owned
+//! The execution core is `run_plan` over an `ExecState` — a backend
+//! selection plus the persistent [`Executor`] it lazily builds — owned
 //! by [`crate::api::Program`] (the public front door: one compiled
-//! program, one persistent state; the deprecated `Coordinator` wrapper
-//! was removed in 0.6.0 at the end of its one-release migration
-//! window).  Repeated executions of a plan
-//! (CP-ALS sweeps, benches) recycle every staging and redistribution
-//! destination buffer from the previous run ([`Machine::store_stats`]
-//! counters) — and, through the `*_into` kernel family, every **compute
-//! output** as well: [`Machine::compute_step_into`] hands each rank a
-//! destination recycled from the store, the Seq kernel's per-op
-//! intermediates, its pre-reduction buffers for indices private to one
-//! operand ([`contract::reduce_modes_into`]), and the MTTKRP
-//! output-order permute recycle through a per-`(term, slot)`
-//! [`LocalScratchStats`]-counted scratch table, and local inputs are
-//! borrowed from the store rather than deep-copied.  In steady state the
-//! whole run loop performs zero tensor allocations (asserted in tests).
-//! Each term also reconfigures the [`KernelEngine`] with its
-//! SOAP-derived tile sizes ([`crate::planner::TermPlan::kernel_config`]
-//! via [`KernelEngine::configure_for_term`]).
+//! program, one persistent state).  The run loop itself holds no
+//! machine-specific state: the simulated machine
+//! ([`crate::exec::ExecBackend::Sim`]) and the message-passing thread
+//! sites ([`crate::exec::ExecBackend::Mp`]) sit behind the same seam,
+//! and a plan executes bitwise identically on either.
+//!
+//! Repeated executions of a plan (CP-ALS sweeps, benches) recycle every
+//! staging and redistribution destination buffer, every compute output,
+//! the Seq kernel's per-op intermediates, its pre-reduction buffers, and
+//! the MTTKRP/gather permute staging from the previous run — the
+//! backend's [`StoreStats`] and [`LocalScratchStats`] counters assert a
+//! zero-allocation steady state on the simulated backend.  Each term
+//! also reconfigures the [`KernelEngine`] with its SOAP-derived tile
+//! sizes ([`crate::planner::TermPlan::kernel_config`] via
+//! [`KernelEngine::configure_for_term`]); backends replay the same
+//! config on their own compute threads.
 //!
 //! [`TensorDist`]: crate::dist::TensorDist
 
-use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::collections::BTreeSet;
+use std::sync::Arc;
 
-use crate::einsum::BinaryOp;
 use crate::error::{Error, Result};
-use crate::planner::{LocalKernel, Plan, TermInput, TermPlan};
+use crate::exec::{self, ComputeStep, ExecBackend, Executor};
+use crate::planner::Plan;
 use crate::runtime::KernelEngine;
 use crate::sim::collectives::reduction_groups;
-use crate::sim::{AccelModel, CommStats, Machine, NetworkModel, StoreStats, TimeBreakdown};
-use crate::tensor::{contract, Tensor, ELEM_BYTES};
+use crate::sim::{AccelModel, CommStats, NetworkModel, StoreStats, TimeBreakdown};
+use crate::tensor::{Tensor, ELEM_BYTES};
 
-/// Allocation counters for the run loop's local scratch table (Seq
-/// intermediates, pre-reduction buffers, MTTKRP permute buffers, the
-/// gather's permute staging).  Steady-state invariant: `allocs` stops
-/// growing after the first run of a plan while `reuses` keeps counting.
-#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
-pub struct LocalScratchStats {
-    /// Whole local tensors heap-allocated (first run, or shape change).
-    pub allocs: u64,
-    /// Whole local tensors recycled across runs.
-    pub reuses: u64,
-}
-
-/// Recycled per-rank buffers for the per-term local compute, keyed by
-/// `(term, slot)`: Seq-kernel intermediates at `(term, op)`,
-/// pre-reduction buffers at `(term, REDUCE_BASE + 2·op + operand)`, the
-/// MTTKRP output-order permute at `(term, PERMUTE_SLOT)`, and the final
-/// gather's permute staging at [`GATHER_KEY`].  The run-loop analogue of
-/// the engine's [`crate::tensor::kernel::ScratchPool`], but holding
-/// whole tensors.
-#[derive(Debug, Default)]
-pub(crate) struct LocalScratch {
-    bufs: HashMap<(usize, usize), Vec<Tensor>>,
-    stats: LocalScratchStats,
-}
-
-/// Scratch key of a term's MTTKRP permute buffers (never a real op id).
-const PERMUTE_SLOT: usize = usize::MAX;
-
-/// Base of the scratch-key slot range holding pre-reduction buffers
-/// (`slot = REDUCE_BASE + 2·op + operand`); far above any real op count
-/// and below [`PERMUTE_SLOT`].
-const REDUCE_BASE: usize = usize::MAX / 2;
-
-/// Scratch key of the gather stage's permute staging buffer (the term
-/// index `usize::MAX` is never a real term).
-const GATHER_KEY: (usize, usize) = (usize::MAX, 0);
-
-impl LocalScratch {
-    /// Take the buffer set for `key` (recycled when `p` tensors of shape
-    /// `dims` are present, freshly allocated otherwise).
-    fn take(&mut self, key: (usize, usize), p: usize, dims: &[usize]) -> Vec<Tensor> {
-        match self.bufs.remove(&key) {
-            Some(v) if v.len() == p && v.iter().all(|t| t.dims() == dims) => {
-                self.stats.reuses += p as u64;
-                v
-            }
-            _ => {
-                self.stats.allocs += p as u64;
-                (0..p).map(|_| Tensor::zeros(dims)).collect()
-            }
-        }
-    }
-
-    /// Return a buffer set for recycling by the next run.
-    fn put(&mut self, key: (usize, usize), bufs: Vec<Tensor>) {
-        self.bufs.insert(key, bufs);
-    }
-}
+pub use crate::exec::LocalScratchStats;
 
 /// Per-term execution statistics.
 #[derive(Debug, Clone, Default)]
@@ -170,29 +115,40 @@ impl RunReport {
     }
 }
 
-/// Persistent execution state for one compiled program: the simulated
-/// [`Machine`] (rank-local stores, recycled staging/redistribution/
-/// compute-output buffers) and the [`LocalScratch`] table.  Owned
-/// exclusively by one [`crate::api::Program`] — which is what lets
-/// programs of a shared session execute on concurrent threads: all
-/// mutable run state is program-private, and the shared
-/// [`KernelEngine`] is `Sync`.
-#[derive(Default)]
+/// Persistent execution state for one compiled program: the backend
+/// selection plus the [`Executor`] it lazily builds on the first run
+/// (and rebuilds on a rank-count change, a backend change, or after a
+/// fatal protocol failure poisoned it).  Owned exclusively by one
+/// [`crate::api::Program`] — which is what lets programs of a shared
+/// session execute on concurrent threads: all mutable run state is
+/// program-private, and the shared [`KernelEngine`] is `Sync`.
 pub(crate) struct ExecState {
-    pub(crate) machine: Option<Machine>,
-    pub(crate) scratch: LocalScratch,
+    pub(crate) backend: ExecBackend,
+    pub(crate) exec: Option<Box<dyn Executor>>,
+}
+
+impl Default for ExecState {
+    fn default() -> Self {
+        ExecState { backend: ExecBackend::from_env(), exec: None }
+    }
 }
 
 impl ExecState {
-    /// Buffer-recycling counters of the persistent machine (defaults
-    /// until the first run).
-    pub(crate) fn store_stats(&self) -> StoreStats {
-        self.machine.as_ref().map(|m| m.store_stats()).unwrap_or_default()
+    /// State pinned to an explicit backend
+    /// ([`crate::api::SessionBuilder::backend`]).
+    pub(crate) fn with_backend(backend: ExecBackend) -> Self {
+        ExecState { backend, exec: None }
     }
 
-    /// Allocation counters of the local scratch table.
+    /// Buffer-recycling counters of the persistent executor (defaults
+    /// until the first run).
+    pub(crate) fn store_stats(&self) -> StoreStats {
+        self.exec.as_ref().map(|e| e.store_stats()).unwrap_or_default()
+    }
+
+    /// Allocation counters of the executor's local scratch.
     pub(crate) fn local_scratch_stats(&self) -> LocalScratchStats {
-        self.scratch.stats
+        self.exec.as_ref().map(|e| e.scratch_stats()).unwrap_or_default()
     }
 }
 
@@ -205,7 +161,7 @@ impl ExecState {
 /// state) and the returned output is `None`; with `dest = None` a fresh
 /// output tensor is returned.
 pub(crate) fn run_plan(
-    engine: &KernelEngine,
+    engine: &Arc<KernelEngine>,
     network: NetworkModel,
     state: &mut ExecState,
     plan: &Plan,
@@ -226,7 +182,7 @@ pub(crate) fn run_plan(
 }
 
 fn run_plan_inner(
-    engine: &KernelEngine,
+    engine: &Arc<KernelEngine>,
     network: NetworkModel,
     state: &mut ExecState,
     plan: &Plan,
@@ -261,29 +217,37 @@ fn run_plan_inner(
         }
     }
 
-    let ExecState { machine: machine_slot, scratch } = state;
-    // Reuse the persistent machine (and its store) when the rank count
-    // matches; only the accounting is reset per run.
-    if !matches!(machine_slot.as_ref(), Some(m) if m.ranks() == plan.p) {
-        *machine_slot = Some(Machine::new(plan.p, network));
+    let backend = state.backend;
+    // Reuse the persistent executor (and its stores) when the rank count
+    // and backend match and it is still healthy; only the accounting is
+    // reset per run.  A poisoned message-passing executor (fatal
+    // protocol failure) is torn down and rebuilt here.
+    let rebuild = match state.exec.as_ref() {
+        Some(e) => e.ranks() != plan.p || e.backend() != backend || !e.healthy(),
+        None => true,
+    };
+    if rebuild {
+        state.exec = Some(exec::make(backend, plan.p, network, Arc::clone(engine)));
     }
-    let machine = machine_slot
+    let exec = state
+        .exec
         .as_mut()
-        .ok_or_else(|| Error::plan("machine initialization failed"))?;
-    machine.begin_run();
+        .ok_or_else(|| Error::plan("executor initialization failed"))?;
+    exec.begin_run()?;
     let mut per_term: Vec<TermStats> = Vec::new();
-    // Every store name / scratch key this run touches; anything else is
-    // a stale buffer set from a previously-run plan and is pruned at the
-    // end (the persistent buffers must not grow across plan switches).
+    // Every store name this run touches; anything else is a stale buffer
+    // set from a previously-run plan and is pruned at the end (the
+    // persistent buffers must not grow across plan switches).
     let mut live_names: BTreeSet<String> = BTreeSet::new();
-    let mut live_scratch: BTreeSet<(usize, usize)> = BTreeSet::new();
 
     for (ti, term) in plan.terms.iter().enumerate() {
         let mut stats = TermStats { name: term.name.clone(), ..Default::default() };
-        let comm_before = machine.time.comm;
+        let comm_before = exec.time().comm;
         // Retarget the engine's cache blocking to this term's
         // SOAP-derived tiles (§IV: the local kernel blocks along the
-        // same proportions the I/O analysis assumed).
+        // same proportions the I/O analysis assumed).  Backends replay
+        // the same config on their own compute threads via the step's
+        // [`ComputeStep`] payload.
         engine.configure_for_term(term);
         engine.faults().check(crate::fault::site::RUN_PLAN_TERM)?;
 
@@ -294,7 +258,7 @@ fn run_plan_inner(
             if tin.id < plan.path.n_inputs {
                 // Program input: scatter blocks into recycled store
                 // buffers (uncharged staging).
-                machine.stage_blocks(&name, &inputs[tin.id], &tin.dist)?;
+                exec.stage_blocks(&name, &inputs[tin.id], &tin.dist)?;
             } else {
                 // Intermediate: redistribute from the producing term.
                 let mv = plan
@@ -314,7 +278,7 @@ fn run_plan_inner(
                     )
                 })?;
                 let src_name = format!("t{}@{}", tin.id, from.name);
-                machine.redistribute(&src_name, &name, &mv.plan, &mv.src, &mv.dst)?;
+                exec.redistribute(&src_name, &name, &mv.plan, &mv.src, &mv.dst)?;
             }
             stats.local_in_bytes +=
                 tin.dist.local_dims().iter().product::<usize>() * ELEM_BYTES;
@@ -325,283 +289,26 @@ fn run_plan_inner(
         // --- local compute ------------------------------------------------
         let out_name = format!("t{}@{}", term.output_id, term.name);
         live_names.insert(out_name.clone());
-        match &term.kernel {
-            LocalKernel::Mttkrp { x_input, mode, factor_inputs } => {
-                if factor_inputs.is_empty() {
-                    return Err(Error::malformed_plan(&term.name, "mttkrp with no factors"));
-                }
-                // Every slot index comes from the plan: range-check them
-                // all so a corrupted plan is an Err, never a panic
-                // (in_names is index-aligned with term.inputs).
-                let x_in = term.inputs.get(*x_input).ok_or_else(|| {
-                    Error::malformed_plan(
-                        &term.name,
-                        format!("mttkrp x slot {x_input} out of range"),
-                    )
-                })?;
-                let x_name = in_names[*x_input].as_str();
-                let f_names: Vec<&str> = factor_inputs
-                    .iter()
-                    .map(|&s| {
-                        in_names.get(s).map(String::as_str).ok_or_else(|| {
-                            Error::malformed_plan(
-                                &term.name,
-                                format!("mttkrp factor slot {s} out of range"),
-                            )
-                        })
-                    })
-                    .collect::<Result<_>>()?;
-                let order = x_in.indices.len();
-                let mode = *mode;
-                // Local kernel output shape: (local mode extent, local R).
-                let x_ldims = x_in.dist.local_dims();
-                let mode_extent = x_ldims.get(mode).copied().ok_or_else(|| {
-                    Error::malformed_plan(
-                        &term.name,
-                        format!("mttkrp mode {mode} out of range for order {order}"),
-                    )
-                })?;
-                let r_local = term.inputs[factor_inputs[0]]
-                    .dist
-                    .local_dims()
-                    .get(1)
-                    .copied()
-                    .ok_or_else(|| {
-                        Error::malformed_plan(&term.name, "mttkrp factor is not a matrix")
-                    })?;
-                let natural_dims = [mode_extent, r_local];
-                // Kernel output order is (mode_idx, r); a differing
-                // term output order takes the recycled permute path.
-                let x_idx = &x_in.indices;
-                let r_char = term
-                    .output_indices
-                    .iter()
-                    .copied()
-                    .find(|c| !x_idx.contains(c))
-                    .ok_or_else(|| {
-                        Error::malformed_plan(&term.name, "mttkrp: no rank index")
-                    })?;
-                let mode_char = x_idx[mode];
-                let natural = vec![mode_char, r_char];
-                if term.output_indices == natural {
-                    // Kernel writes straight into the store-recycled
-                    // per-rank destinations.
-                    machine.compute_step_into(&out_name, &natural_dims, |r, m, dest| {
-                        mttkrp_rank_into(
-                            engine, m, r, &term.name, x_name, &f_names, order, mode, dest,
-                        )
-                    })?;
-                } else {
-                    let perm: Vec<usize> = term
-                        .output_indices
-                        .iter()
-                        .map(|c| {
-                            natural.iter().position(|d| d == c).ok_or_else(|| {
-                                Error::malformed_plan(
-                                    &term.name,
-                                    format!(
-                                        "mttkrp output index '{c}' not in natural \
-                                         layout {natural:?}"
-                                    ),
-                                )
-                            })
-                        })
-                        .collect::<Result<_>>()?;
-                    let permuted_dims: Vec<usize> =
-                        perm.iter().map(|&p| natural_dims[p]).collect();
-                    // Natural-layout kernel outputs land in scratch
-                    // buffers recycled across runs...
-                    let key = (ti, PERMUTE_SLOT);
-                    live_scratch.insert(key);
-                    let mut nat = scratch.take(key, plan.p, &natural_dims);
-                    for (r, buf) in nat.iter_mut().enumerate() {
-                        let t0 = std::time::Instant::now();
-                        mttkrp_rank_into(
-                            engine, machine, r, &term.name, x_name, &f_names, order, mode,
-                            buf,
-                        )?;
-                        machine.charge_compute(r, t0.elapsed().as_secs_f64());
-                    }
-                    // ...then permute into the store-recycled
-                    // destinations (no allocation on either side).  The
-                    // scratch goes back before error propagation so a
-                    // recovered run stays allocation-free.
-                    let step = machine.compute_step_into(&out_name, &permuted_dims, |r, _m, dest| {
-                        nat[r].permute_into(&perm, dest)
-                    });
-                    scratch.put(key, nat);
-                    step?;
-                }
-            }
-            LocalKernel::Seq => {
-                // Local output extents per index char: inputs are
-                // staged at their distribution's padded local dims,
-                // so every op's local output shape is fixed by the
-                // chars it keeps — known before any kernel runs,
-                // which is what lets the destinations be recycled.
-                let mut local_ext: BTreeMap<char, usize> = BTreeMap::new();
-                for tin in &term.inputs {
-                    for (c, e) in tin.indices.iter().zip(tin.dist.local_dims()) {
-                        local_ext.insert(*c, e);
-                    }
-                }
-                let op_dims: Vec<Vec<usize>> = term
-                    .ops
-                    .iter()
-                    .map(|op| {
-                        let d: Vec<usize> = op
-                            .output
-                            .iter()
-                            .map(|c| {
-                                local_ext.get(c).copied().ok_or_else(|| {
-                                    Error::malformed_plan(
-                                        &term.name,
-                                        format!("seq: unknown index '{c}'"),
-                                    )
-                                })
-                            })
-                            .collect::<Result<_>>()?;
-                        Ok(if d.is_empty() { vec![1] } else { d })
-                    })
-                    .collect::<Result<_>>()?;
-                let n_ops = term.ops.len();
-                if n_ops == 0 {
-                    return Err(Error::malformed_plan(&term.name, "empty term"));
-                }
-                if term.ops[n_ops - 1].output_id != term.output_id {
-                    return Err(Error::malformed_plan(
-                        &term.name,
-                        "last op does not produce the term output",
-                    ));
-                }
-                // Tensor-id table: term inputs are *borrowed* from
-                // the store (never deep-copied); intermediates live
-                // in scratch buffers recycled across runs.  The
-                // final op writes the store-recycled destination.
-                let mut src_of: BTreeMap<usize, SeqSrc> = BTreeMap::new();
-                for (slot, tin) in term.inputs.iter().enumerate() {
-                    src_of.insert(tin.id, SeqSrc::Input(slot));
-                }
-                for (j, op) in term.ops.iter().enumerate() {
-                    src_of.insert(op.output_id, SeqSrc::Op(j));
-                }
-                // Pre-reduction table: operands carrying indices private
-                // to themselves and absent from the op output are summed
-                // away *before* the engine sees them, through recycled
-                // scratch buffers ([`contract::reduce_modes_into`]) — so
-                // `einsum2`'s internal pre-reduction (which allocates)
-                // stays off the hot path.
-                let mut red = build_reduce_slots(
-                    term, ti, plan.p, &src_of, &local_ext, scratch, &mut live_scratch,
-                )?;
-                let mut opbufs: Vec<Vec<Tensor>> = (0..n_ops - 1)
-                    .map(|j| {
-                        live_scratch.insert((ti, j));
-                        scratch.take((ti, j), plan.p, &op_dims[j])
-                    })
-                    .collect();
-                let ops = &term.ops;
-                let term_inputs = &term.inputs;
-                // Bound (not `?`d) so the recycled buffer sets return to
-                // the scratch table even when a kernel errors mid-step —
-                // a caller that recovers keeps its flat alloc counters.
-                let step = machine.compute_step_into(&out_name, &op_dims[n_ops - 1], |r, m, dest| {
-                    for (j, op) in ops.iter().enumerate() {
-                        // Ops run in order: everything before `j` is
-                        // readable, `j`'s buffer (or the final
-                        // destination) is writable.
-                        if op.input_ids.is_empty() {
-                            return Err(Error::malformed_plan(
-                                &term.name,
-                                "0-ary local op unsupported",
-                            ));
-                        }
-                        let (done, rest) = opbufs.split_at_mut(j.min(n_ops - 1));
-                        let dst: &mut Tensor =
-                            if j == n_ops - 1 { &mut *dest } else { &mut rest[0][r] };
-                        let (ra, rai) = seq_operand(
-                            op.input_ids[0],
-                            j,
-                            &src_of,
-                            m,
-                            r,
-                            &in_names,
-                            term_inputs,
-                            done,
-                            ops,
-                        )?;
-                        if let Some(rs) = red[2 * j].as_mut() {
-                            contract::reduce_modes_into(ra, &rs.drop, &mut rs.bufs[r])?;
-                        }
-                        match op.input_ids.len() {
-                            2 => {
-                                let (rb, rbi) = seq_operand(
-                                    op.input_ids[1],
-                                    j,
-                                    &src_of,
-                                    m,
-                                    r,
-                                    &in_names,
-                                    term_inputs,
-                                    done,
-                                    ops,
-                                )?;
-                                if let Some(rs) = red[2 * j + 1].as_mut() {
-                                    contract::reduce_modes_into(
-                                        rb, &rs.drop, &mut rs.bufs[r],
-                                    )?;
-                                }
-                                let (a, ai) = match red[2 * j].as_ref() {
-                                    Some(rs) => (&rs.bufs[r], rs.idx.as_slice()),
-                                    None => (ra, rai),
-                                };
-                                let (b, bi) = match red[2 * j + 1].as_ref() {
-                                    Some(rs) => (&rs.bufs[r], rs.idx.as_slice()),
-                                    None => (rb, rbi),
-                                };
-                                engine.einsum2_into(a, ai, b, bi, &op.output, dst)?;
-                            }
-                            1 => {
-                                let (a, ai) = match red[2 * j].as_ref() {
-                                    Some(rs) => (&rs.bufs[r], rs.idx.as_slice()),
-                                    None => (ra, rai),
-                                };
-                                unary_local_into(a, ai, &op.output, dst)?;
-                            }
-                            n => {
-                                return Err(Error::malformed_plan(
-                                    &term.name,
-                                    format!("{n}-ary local op unsupported"),
-                                ))
-                            }
-                        }
-                    }
-                    Ok(())
-                });
-                for (j, v) in opbufs.into_iter().enumerate() {
-                    scratch.put((ti, j), v);
-                }
-                for (slot, rs) in red.into_iter().enumerate() {
-                    if let Some(rs) = rs {
-                        scratch.put((ti, REDUCE_BASE + slot), rs.bufs);
-                    }
-                }
-                step?;
-            }
-        }
-        machine.end_step();
+        // Resolve the term against the plan once (validation, shapes,
+        // names, per-term kernel config) and hand the backend the
+        // self-contained step; every backend runs it through the same
+        // per-rank interpreter, which is the bitwise-identity guarantee.
+        let step =
+            ComputeStep::build(term, ti, &in_names, out_name.clone(), engine.base_config())?;
+        exec.compute_step_into(&step)?;
+        exec.end_step();
         stats.local_out_bytes =
             term.output_dist.local_dims().iter().product::<usize>() * ELEM_BYTES;
 
         // --- reduce partials over sub-grids -------------------------------
         if !term.reduced_grid_dims.is_empty() {
             let groups = reduction_groups(&term.grid, &term.reduced_grid_dims);
-            machine.allreduce_sum(&out_name, &groups)?;
+            exec.allreduce_sum(&out_name, &groups)?;
         }
 
-        stats.comm = machine.time.comm - comm_before;
-        stats.compute = machine.time.compute
-            - per_term.iter().map(|t| t.compute).sum::<f64>();
+        stats.comm = exec.time().comm - comm_before;
+        stats.compute =
+            exec.time().compute - per_term.iter().map(|t| t.compute).sum::<f64>();
         per_term.push(stats);
     }
 
@@ -627,246 +334,42 @@ fn run_plan_inner(
                 .collect::<Result<_>>()?,
         )
     };
-    // Assemble the last term's distributed blocks into `target` (term
-    // output order) by direct strided copies out of the owners' local
-    // buffers — no temporary block tensor per block.
-    let zero_off = vec![0usize; dist.extents.len()];
-    let assemble = |target: &mut Tensor| -> Result<()> {
-        for bc in dist.block_coords() {
-            let owner = dist.owner_of_block(&bc);
-            let (off, size) = dist.block_for_rank(owner);
-            target.copy_box_from(machine.get(&out_name, owner)?, &zero_off, &off, &size);
-        }
-        Ok(())
-    };
-    let output = match (dest, perm) {
-        (Some(d), perm) => {
+    let output = match dest {
+        Some(d) => {
             // Dims were checked against the spec before the run started.
-            match perm {
-                // Assemble into recycled staging, permute into the
-                // caller's buffer: zero allocations in steady state.
-                Some(p) => {
-                    live_scratch.insert(GATHER_KEY);
-                    let mut g = scratch.take(GATHER_KEY, 1, &dist.extents);
-                    assemble(&mut g[0])?;
-                    g[0].permute_into(&p, d)?;
-                    scratch.put(GATHER_KEY, g);
-                }
-                None => assemble(d)?,
-            }
+            exec.gather_into(&out_name, dist, perm.as_deref(), d)?;
             None
         }
-        (None, Some(p)) => {
-            // The assembled (pre-permute) staging recycles even on the
-            // allocating path; only the escaping output is fresh.
-            live_scratch.insert(GATHER_KEY);
-            let mut g = scratch.take(GATHER_KEY, 1, &dist.extents);
-            assemble(&mut g[0])?;
-            let out = g[0].permute(&p);
-            scratch.put(GATHER_KEY, g);
-            Some(out)
-        }
-        (None, None) => {
-            let mut out = Tensor::zeros(&dist.extents);
-            assemble(&mut out)?;
+        None => {
+            // Only the escaping output is fresh; the backend's permute
+            // staging recycles underneath.
+            let dims: Vec<usize> = match &perm {
+                Some(p) => p.iter().map(|&i| dist.extents[i]).collect(),
+                None => dist.extents.clone(),
+            };
+            let mut out = Tensor::zeros(&dims);
+            exec.gather_into(&out_name, dist, perm.as_deref(), &mut out)?;
             Some(out)
         }
     };
 
-    // Prune buffer sets a previous plan staged under names (or scratch
-    // keys) this run never touched (keeps the persistent buffers bounded
-    // by the current plan's footprint).
-    machine.retain_tensors(|n| live_names.contains(n));
-    scratch.bufs.retain(|k, _| live_scratch.contains(k));
+    // Prune buffer sets a previous plan staged under names this run
+    // never touched (keeps the persistent buffers bounded by the current
+    // plan's footprint; the backend prunes its scratch the same way).
+    exec.end_run(&live_names)?;
 
     let metrics = RunMetrics {
-        time: machine.time,
-        comm: machine.comm.clone(),
+        time: exec.time(),
+        comm: exec.comm(),
         per_term,
     };
     Ok((output, metrics))
 }
 
-/// One operand's pre-reduction slot: the dropped mode positions in the
-/// operand's original index string, the surviving index string, and the
-/// per-rank recycled destination buffers.
-struct RedSlot {
-    idx: Vec<char>,
-    drop: Vec<usize>,
-    bufs: Vec<Tensor>,
-}
-
-/// Index string of Seq-local tensor `id` (term input or earlier op
-/// output).
-fn seq_idx_of<'t>(
-    id: usize,
-    src_of: &BTreeMap<usize, SeqSrc>,
-    term: &'t TermPlan,
-) -> Result<&'t [char]> {
-    match src_of.get(&id) {
-        Some(SeqSrc::Input(slot)) => Ok(term.inputs[*slot].indices.as_slice()),
-        Some(SeqSrc::Op(i)) => Ok(term.ops[*i].output.as_slice()),
-        None => Err(Error::malformed_plan(
-            &term.name,
-            format!("seq: operand t{id} never produced"),
-        )),
-    }
-}
-
-/// Build the pre-reduction table for a Seq term: entry `2·op + operand`
-/// is `Some` when that operand carries indices private to itself and
-/// absent from the op output (they are summed away into recycled,
-/// [`LocalScratchStats`]-counted buffers before the engine runs).  A
-/// fully-summed binary operand becomes the `[1]`-shaped synthetic
-/// singleton (`'\u{1}'`) `einsum2` itself uses for the already-reduced
-/// state, so even that degenerate case stays allocation-free.
-#[allow(clippy::too_many_arguments)]
-fn build_reduce_slots(
-    term: &TermPlan,
-    ti: usize,
-    p: usize,
-    src_of: &BTreeMap<usize, SeqSrc>,
-    local_ext: &BTreeMap<char, usize>,
-    scratch: &mut LocalScratch,
-    live_scratch: &mut BTreeSet<(usize, usize)>,
-) -> Result<Vec<Option<RedSlot>>> {
-    let mut red: Vec<Option<RedSlot>> = Vec::with_capacity(term.ops.len() * 2);
-    for (j, op) in term.ops.iter().enumerate() {
-        for q in 0..2 {
-            if q >= op.input_ids.len() {
-                red.push(None);
-                continue;
-            }
-            let idx = seq_idx_of(op.input_ids[q], src_of, term)?;
-            let other: Option<&[char]> = if op.input_ids.len() == 2 {
-                Some(seq_idx_of(op.input_ids[1 - q], src_of, term)?)
-            } else {
-                None
-            };
-            let drop: Vec<usize> = idx
-                .iter()
-                .enumerate()
-                .filter(|&(_, c)| {
-                    if op.output.contains(c) {
-                        return false;
-                    }
-                    match other {
-                        Some(o) => !o.contains(c),
-                        None => true,
-                    }
-                })
-                .map(|(d, _)| d)
-                .collect();
-            if drop.is_empty() {
-                red.push(None);
-                continue;
-            }
-            let mut kept: Vec<char> = idx
-                .iter()
-                .enumerate()
-                .filter(|(d, _)| !drop.contains(d))
-                .map(|(_, &c)| c)
-                .collect();
-            let dims: Vec<usize> = if kept.is_empty() {
-                if op.input_ids.len() == 2 {
-                    // Fully-summed binary operand: hand einsum2 the
-                    // synthetic already-reduced singleton it would have
-                    // built itself (unary ops take the empty-index copy
-                    // path instead).
-                    kept.push('\u{1}');
-                }
-                vec![1]
-            } else {
-                kept.iter()
-                    .map(|c| {
-                        local_ext.get(c).copied().ok_or_else(|| {
-                            Error::malformed_plan(
-                                &term.name,
-                                format!("seq: unknown index '{c}'"),
-                            )
-                        })
-                    })
-                    .collect::<Result<_>>()?
-            };
-            let key = (ti, REDUCE_BASE + 2 * j + q);
-            live_scratch.insert(key);
-            red.push(Some(RedSlot { idx: kept, drop, bufs: scratch.take(key, p, &dims) }));
-        }
-    }
-    Ok(red)
-}
-
-/// Where a Seq-local tensor id lives during a rank's execution: borrowed
-/// from the machine store (term input slot) or from a recycled scratch
-/// buffer (output of an earlier op of the same term).
-enum SeqSrc {
-    Input(usize),
-    Op(usize),
-}
-
-/// Resolve operand `id` of op `j` to a borrowed tensor + index string —
-/// the replacement for the old per-rank clone-everything local table.
-#[allow(clippy::too_many_arguments)]
-fn seq_operand<'a>(
-    id: usize,
-    j: usize,
-    src_of: &BTreeMap<usize, SeqSrc>,
-    m: &'a Machine,
-    r: usize,
-    in_names: &'a [String],
-    inputs: &'a [TermInput],
-    done: &'a [Vec<Tensor>],
-    ops: &'a [BinaryOp],
-) -> Result<(&'a Tensor, &'a [char])> {
-    match src_of.get(&id) {
-        Some(SeqSrc::Input(slot)) => {
-            Ok((m.get(&in_names[*slot], r)?, inputs[*slot].indices.as_slice()))
-        }
-        Some(SeqSrc::Op(i)) if *i < j => Ok((&done[*i][r], ops[*i].output.as_slice())),
-        _ => Err(Error::plan(format!("seq: operand t{id} not available at op {j}"))),
-    }
-}
-
-/// One rank's fused-MTTKRP local kernel through the recycled-output
-/// engine path (`slots` layout: `order` entries, the `mode` slot is a
-/// placeholder the kernel ignores).
-#[allow(clippy::too_many_arguments)]
-fn mttkrp_rank_into(
-    engine: &KernelEngine,
-    m: &Machine,
-    r: usize,
-    term_name: &str,
-    x_name: &str,
-    f_names: &[&str],
-    order: usize,
-    mode: usize,
-    dest: &mut Tensor,
-) -> Result<()> {
-    let x = m.get(x_name, r)?;
-    let fs: Vec<&Tensor> = f_names.iter().map(|n| m.get(n, r)).collect::<Result<_>>()?;
-    let mut slots: Vec<&Tensor> = Vec::with_capacity(order);
-    let mut fi = fs.iter();
-    for mm in 0..order {
-        if mm == mode {
-            slots.push(x); // placeholder, ignored
-        } else {
-            slots.push(fi.next().ok_or_else(|| {
-                Error::malformed_plan(
-                    term_name,
-                    format!(
-                        "mttkrp factor count mismatch: {} factors for order {order}",
-                        f_names.len()
-                    ),
-                )
-            })?);
-        }
-    }
-    engine.mttkrp_into(x, &slots, mode, dest)
-}
-
 /// Unary local op: permutation, possibly with summed-away indices
-/// (allocating wrapper over [`unary_local_into`], kept as the oracle in
-/// tests — the run loop itself only uses the `_into` variant).
+/// (allocating wrapper over the run loop's
+/// [`crate::exec::step::unary_local_into`], kept as the oracle in tests
+/// — the run loop itself only uses the `_into` variant).
 #[cfg(test)]
 fn unary_local(a: &Tensor, a_idx: &[char], out_idx: &[char]) -> Result<Tensor> {
     let dims: Vec<usize> = out_idx
@@ -881,43 +384,8 @@ fn unary_local(a: &Tensor, a_idx: &[char], out_idx: &[char]) -> Result<Tensor> {
         .collect::<Result<_>>()?;
     let dims = if dims.is_empty() { vec![1] } else { dims };
     let mut out = Tensor::zeros(&dims);
-    unary_local_into(a, a_idx, out_idx, &mut out)?;
+    crate::exec::step::unary_local_into(a, a_idx, out_idx, &mut out)?;
     Ok(out)
-}
-
-/// `unary_local` writing through a recycled destination: the final
-/// permutation (the common case — pure mode reorder) lands directly in
-/// `dest` with zero allocations.  Summed-away indices are normally gone
-/// by the time this runs (the Seq loop pre-reduces them through recycled
-/// scratch); the allocating [`contract::reduce_mode`] fallback remains
-/// for direct callers.
-fn unary_local_into(
-    a: &Tensor,
-    a_idx: &[char],
-    out_idx: &[char],
-    dest: &mut Tensor,
-) -> Result<()> {
-    let mut owned: Option<Tensor> = None;
-    let mut idx = a_idx.to_vec();
-    // reduce dropped indices
-    while let Some(d) = idx.iter().position(|c| !out_idx.contains(c)) {
-        let cur = owned.as_ref().unwrap_or(a);
-        owned = Some(contract::reduce_mode(cur, d));
-        idx.remove(d);
-    }
-    let t = owned.as_ref().unwrap_or(a);
-    if idx == out_idx || idx.is_empty() {
-        return dest.copy_from(t);
-    }
-    let perm: Vec<usize> = out_idx
-        .iter()
-        .map(|c| {
-            idx.iter()
-                .position(|d| d == c)
-                .ok_or_else(|| Error::shape(format!("unary: index '{c}' missing")))
-        })
-        .collect::<Result<_>>()?;
-    t.permute_into(&perm, dest)
 }
 
 #[cfg(test)]
@@ -925,8 +393,8 @@ mod tests {
     use super::*;
     use crate::api::Session;
     use crate::einsum::EinsumSpec;
-    use crate::planner::PlannerConfig;
-    use crate::tensor::KernelConfig;
+    use crate::planner::{LocalKernel, PlannerConfig};
+    use crate::tensor::{contract, KernelConfig};
 
     fn run_einsum(
         expr: &str,
@@ -1168,10 +636,15 @@ mod tests {
             prog.run(&inputs).unwrap();
         }
         let after = prog.stats().engine_scratch;
-        assert_eq!(
-            after.allocs, warm.allocs,
-            "steady-state steps allocated scratch ({warm:?} -> {after:?})"
-        );
+        // Engine-scratch flatness is deterministic only on the
+        // sequential simulated backend — mp rank threads hit the shared
+        // pool concurrently, so its high-water mark can wander.
+        if ExecBackend::from_env() == ExecBackend::Sim {
+            assert_eq!(
+                after.allocs, warm.allocs,
+                "steady-state steps allocated scratch ({warm:?} -> {after:?})"
+            );
+        }
         assert!(after.takes > warm.takes, "steps must route buffers through the pool");
     }
 
@@ -1179,7 +652,7 @@ mod tests {
     fn steady_state_coordinator_is_allocation_free() {
         // The tentpole invariant: across consecutive runs of the same
         // multi-step plan, the engine's scratch pool (packing/fold) AND
-        // the persistent machine's staging/redistribution destinations
+        // the persistent backend's staging/redistribution destinations
         // stop allocating, and the per-term kernel-config override is
         // restored after every run.
         let shapes = [vec![16, 16, 16], vec![16, 8], vec![16, 8], vec![8, 16]];
@@ -1209,10 +682,14 @@ mod tests {
             assert!(rep.output.allclose(&first.output, 0.0, 0.0), "reruns must be bitwise stable");
         }
         let after = prog.stats();
-        assert_eq!(
-            after.engine_scratch.allocs, warm.engine_scratch.allocs,
-            "steady-state packing/fold allocated ({warm:?} -> {after:?})"
-        );
+        // Engine scratch is only deterministic on the sequential sim
+        // backend (see steady_state_runs_reuse_engine_scratch).
+        if ExecBackend::from_env() == ExecBackend::Sim {
+            assert_eq!(
+                after.engine_scratch.allocs, warm.engine_scratch.allocs,
+                "steady-state packing/fold allocated ({warm:?} -> {after:?})"
+            );
+        }
         assert_eq!(
             after.store.dest_allocs, warm.store.dest_allocs,
             "steady-state staging/redistribution allocated ({warm:?} -> {after:?})"
@@ -1341,7 +818,7 @@ mod tests {
             .enumerate()
             .map(|(i, s)| Tensor::random(s, 500 + i as u64))
             .collect();
-        let engine = KernelEngine::native();
+        let engine = Arc::new(KernelEngine::native());
         let mut state = ExecState::default();
         match run_plan(&engine, NetworkModel::aries(), &mut state, &pl, &inputs, None) {
             Err(Error::MalformedPlan { term, detail }) => {

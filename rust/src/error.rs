@@ -45,6 +45,12 @@ pub enum Error {
     /// The server has been shut down (or dropped); no new work is
     /// accepted.
     ServerShutdown,
+    /// The message-passing backend ([`crate::exec::ExecBackend::Mp`])
+    /// observed a protocol violation between the coordinator and a rank
+    /// site — an unexpected message tag, a dead peer, a timed-out
+    /// collective.  The executor is poisoned afterwards (the next run
+    /// rebuilds it); the error is not retryable on the same executor.
+    Protocol(String),
 }
 
 impl fmt::Display for Error {
@@ -63,6 +69,7 @@ impl fmt::Display for Error {
             Error::QueueFull => write!(f, "queue full: request shed (try again later)"),
             Error::DeadlineExceeded => write!(f, "deadline exceeded"),
             Error::ServerShutdown => write!(f, "server is shut down"),
+            Error::Protocol(m) => write!(f, "mp protocol error: {m}"),
         }
     }
 }
@@ -100,6 +107,9 @@ impl Error {
     }
     pub fn worker_lost(m: impl Into<String>) -> Self {
         Error::WorkerLost(m.into())
+    }
+    pub fn protocol(m: impl Into<String>) -> Self {
+        Error::Protocol(m.into())
     }
 
     /// Whether resubmitting the same request can reasonably succeed.

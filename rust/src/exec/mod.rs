@@ -1,0 +1,210 @@
+//! Pluggable plan-execution backends.
+//!
+//! The coordinator's run loop used to be welded to [`crate::sim::Machine`];
+//! this module dissolves that dependency into the [`Executor`] trait —
+//! the full plan-execution surface (staging, redistribution, local
+//! compute, allreduce, gather, plus the recycling counters) — so the
+//! simulator becomes one backend among several:
+//!
+//! - [`ExecBackend::Sim`] ([`sim::SimExecutor`]): the in-process
+//!   simulated machine.  Fast, deterministic, allocation-free in steady
+//!   state (counter-asserted), with α–β-modeled communication time.
+//! - [`ExecBackend::Mp`] ([`mp::MpExecutor`]): a message-passing
+//!   backend.  Each rank is a real thread-isolated site owning only its
+//!   local store slice, executing instructions from its own channel and
+//!   exchanging redistribution/allreduce payloads rank-to-rank over
+//!   channels — the in-process rehearsal of a multi-node MPI run.
+//!   Protocol violations surface as typed [`Error::Protocol`] values,
+//!   never panics.
+//!
+//! Both backends execute the identical per-rank interpreter
+//! ([`ComputeStep`] + `execute_rank`) over identically-cut blocks, so
+//! their outputs are **bitwise identical** — pinned as a tier-1 test at
+//! P ∈ {1, 4, 8}.  Select a backend per session with
+//! [`crate::api::SessionBuilder::backend`] or process-wide with the
+//! `DEINSUM_BACKEND` environment variable (`sim` | `mp`).
+//!
+//! [`Error::Protocol`]: crate::error::Error::Protocol
+
+pub(crate) mod mp;
+pub(crate) mod sim;
+pub(crate) mod step;
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+
+use crate::dist::TensorDist;
+use crate::error::Result;
+use crate::redist::RedistPlan;
+use crate::runtime::KernelEngine;
+use crate::sim::{CommStats, NetworkModel, StoreStats, TimeBreakdown};
+use crate::tensor::Tensor;
+
+pub use step::ComputeStep;
+
+/// Allocation counters for a backend's local scratch (Seq
+/// intermediates, pre-reduction buffers, MTTKRP permute buffers, the
+/// gather's permute staging).  Steady-state invariant: `allocs` stops
+/// growing after the first run of a plan while `reuses` keeps counting.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct LocalScratchStats {
+    /// Whole local tensors heap-allocated (first run, or shape change).
+    pub allocs: u64,
+    /// Whole local tensors recycled across runs.
+    pub reuses: u64,
+}
+
+impl LocalScratchStats {
+    /// Counter-wise sum (per-rank stats roll up into one figure).
+    pub(crate) fn add(&mut self, other: LocalScratchStats) {
+        self.allocs += other.allocs;
+        self.reuses += other.reuses;
+    }
+}
+
+/// Which execution backend a session drives plans through.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub enum ExecBackend {
+    /// In-process simulated machine (`sim::Machine`): sequential ranks,
+    /// shared store, modeled communication time.  The default.
+    #[default]
+    Sim,
+    /// Message-passing thread sites: one OS thread per rank, private
+    /// stores, real channel traffic for every redistribution and
+    /// reduction.
+    Mp,
+}
+
+impl ExecBackend {
+    /// Resolve the process-wide default from `DEINSUM_BACKEND`
+    /// (case-insensitive `"mp"` selects [`ExecBackend::Mp`]; anything
+    /// else — including unset — selects [`ExecBackend::Sim`]).
+    pub fn from_env() -> ExecBackend {
+        match std::env::var("DEINSUM_BACKEND") {
+            Ok(v) if v.eq_ignore_ascii_case("mp") => ExecBackend::Mp,
+            _ => ExecBackend::Sim,
+        }
+    }
+
+    /// Stable lowercase name (CLI flag values, bench labels).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecBackend::Sim => "sim",
+            ExecBackend::Mp => "mp",
+        }
+    }
+}
+
+/// The plan-execution surface the coordinator drives: everything that
+/// used to be a direct `sim::Machine` call.  One executor instance is
+/// owned by one [`crate::api::Program`] and persists across runs — its
+/// stores and scratch recycle buffers run-to-run, which is where the
+/// zero-allocation steady state lives.
+///
+/// Determinism contract: for a fixed plan and inputs, `gather_into`
+/// must produce bitwise-identical bytes on every backend (block cuts,
+/// accumulation order, and kernel configuration are all fixed by the
+/// plan, never by the backend).
+pub trait Executor: Send {
+    /// Which backend this executor implements.
+    fn backend(&self) -> ExecBackend;
+
+    /// Number of ranks.
+    fn ranks(&self) -> usize;
+
+    /// Whether the executor can run another plan.  A message-passing
+    /// executor that observed a protocol violation (dead rank, timed
+    /// out collective) reports `false` and is rebuilt by the run loop.
+    fn healthy(&self) -> bool {
+        true
+    }
+
+    /// Start a run: reset per-run time/volume accounting, keep stores.
+    fn begin_run(&mut self) -> Result<()>;
+
+    /// Scatter `global` into per-rank blocks under `name` per `dist`
+    /// (recycled destination buffers; uncharged staging).
+    fn stage_blocks(&mut self, name: &str, global: &Tensor, dist: &TensorDist)
+        -> Result<()>;
+
+    /// Install an explicit per-rank tensor set under `name`.
+    fn put(&mut self, name: &str, per_rank: Vec<Tensor>) -> Result<()>;
+
+    /// Fetch rank `rank`'s buffer for `name` (owned: the mp backend
+    /// moves a copy across the channel).
+    fn get(&mut self, name: &str, rank: usize) -> Result<Tensor>;
+
+    /// Execute a redistribution plan from `src_name` into `dst_name`,
+    /// charging the α–β model on the exact per-rank volumes.
+    fn redistribute(
+        &mut self,
+        src_name: &str,
+        dst_name: &str,
+        rp: &RedistPlan,
+        src: &TensorDist,
+        dst: &TensorDist,
+    ) -> Result<()>;
+
+    /// Run `step` on every rank (measured per-rank wall clock; outputs
+    /// recycled under [`ComputeStep`]'s output name).
+    fn compute_step_into(&mut self, step: &ComputeStep) -> Result<()>;
+
+    /// Close the step: parallel compute time = max over ranks.
+    fn end_step(&mut self);
+
+    /// Allreduce-sum `name` over each rank group (paper §II-D).
+    fn allreduce_sum(&mut self, name: &str, groups: &[Vec<usize>]) -> Result<()>;
+
+    /// Assemble `name`'s distributed blocks into `dest` (global layout
+    /// per `dist`, optionally permuted into spec order by `perm`).
+    fn gather_into(
+        &mut self,
+        name: &str,
+        dist: &TensorDist,
+        perm: Option<&[usize]>,
+        dest: &mut Tensor,
+    ) -> Result<()>;
+
+    /// End a run: prune stores/scratch down to the names this run
+    /// touched (persistent buffers stay bounded across plan switches).
+    fn end_run(&mut self, live: &BTreeSet<String>) -> Result<()>;
+
+    /// Store-buffer recycling counters (cumulative across runs).
+    fn store_stats(&self) -> StoreStats;
+
+    /// Local-scratch recycling counters (cumulative across runs).
+    fn scratch_stats(&self) -> LocalScratchStats;
+
+    /// Simulated/modeled time of the current (or last) run.
+    fn time(&self) -> TimeBreakdown;
+
+    /// Exact communication volumes of the current (or last) run.
+    fn comm(&self) -> CommStats;
+}
+
+/// Build an executor for `backend` over `ranks` ranks.  The engine
+/// reference is how rank sites dispatch local kernels (and replay the
+/// coordinator's per-term kernel config on their own threads).
+pub(crate) fn make(
+    backend: ExecBackend,
+    ranks: usize,
+    net: NetworkModel,
+    engine: Arc<KernelEngine>,
+) -> Box<dyn Executor> {
+    match backend {
+        ExecBackend::Sim => Box::new(sim::SimExecutor::new(ranks, net, engine)),
+        ExecBackend::Mp => Box::new(mp::MpExecutor::new(ranks, net, engine)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_from_env_name_roundtrip() {
+        assert_eq!(ExecBackend::Sim.name(), "sim");
+        assert_eq!(ExecBackend::Mp.name(), "mp");
+        assert_eq!(ExecBackend::default(), ExecBackend::Sim);
+    }
+}

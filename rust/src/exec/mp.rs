@@ -1,0 +1,1207 @@
+//! The message-passing backend: one OS thread per rank, private stores,
+//! real channel traffic for every data movement.
+//!
+//! Each rank is a [`RankSite`] owning only its local store slice.  The
+//! coordinator side ([`MpExecutor`]) drives the sites with a strict
+//! instruction protocol: every instruction is broadcast to **all** `p`
+//! ranks, then all `p` acknowledgements are collected in rank order
+//! before the next instruction goes out.  That per-instruction barrier
+//! — together with balanced send/receive counts inside every collective
+//! — guarantees the rank-to-rank data channels are empty at each
+//! barrier, so data from different instructions can never interleave.
+//!
+//! Collectives:
+//!
+//! - **Redistribute**: the coordinator splits the redistribution plan's
+//!   message list per rank; each site ships its outgoing boxes
+//!   ([`DataTag::Redist`]), applies its rank-local boxes, then drains
+//!   exactly its expected receive count.  Boxes are disjoint, so
+//!   arrival order cannot affect the bytes.
+//! - **Allreduce**: pairwise exchange through the group root — members
+//!   send contributions ([`DataTag::ReduceContrib`]), the root
+//!   accumulates them in group order (the same order the simulator
+//!   uses, which keeps the backends bitwise identical) and broadcasts
+//!   the result ([`DataTag::ReduceResult`]).
+//!
+//! Failure taxonomy: data-dependent failures (missing tensor, shape
+//! mismatch) travel as typed errors — the site stays consistent and the
+//! executor stays [`healthy`](super::Executor::healthy).  Protocol
+//! violations (unexpected tag, dead peer, timed-out collective, rank
+//! panic) are *fatal*: the executor is poisoned and the run loop
+//! rebuilds it before the next run.  Nothing in this module panics
+//! across the rank boundary — rank panics are caught and surfaced as
+//! [`Error::Runtime`].
+//!
+//! [`Error::Runtime`]: crate::error::Error::Runtime
+
+use std::any::Any;
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use crate::dist::TensorDist;
+use crate::error::{Error, Result};
+use crate::redist::{Message, RedistPlan};
+use crate::runtime::KernelEngine;
+use crate::sim::{CommStats, NetworkModel, StoreStats, TimeBreakdown};
+use crate::tensor::{Tensor, ELEM_BYTES};
+
+use super::step::{self, ComputeStep, RankScratch, RankStore};
+use super::{ExecBackend, Executor, LocalScratchStats};
+
+/// How long a rank waits on peer data inside a collective before
+/// declaring the collective dead (fatal; poisons the executor).
+const PEER_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// One coordinator→rank instruction.  Every instruction goes to every
+/// rank and is acknowledged before the next one is sent.
+enum Instr {
+    BeginRun,
+    /// Install (or overwrite in place) this rank's staged input block.
+    Stage { name: String, block: Tensor },
+    /// Install this rank's buffer verbatim (no recycling counters).
+    Put { name: String, tensor: Tensor },
+    /// Return a copy of this rank's buffer in the ack (absent → `None`).
+    Fetch { name: String },
+    /// Run this rank's half of a redistribution: ship `sends`, apply
+    /// `locals`, drain exactly `recv_count` incoming boxes.
+    Redistribute {
+        src: String,
+        dst: String,
+        ldims: Vec<usize>,
+        sends: Vec<Message>,
+        locals: Vec<Message>,
+        recv_count: usize,
+    },
+    /// Execute the term's local kernel into the recycled output buffer.
+    Compute { step: Arc<ComputeStep> },
+    /// Allreduce-sum `name` over `group` (`None`: this rank reduces with
+    /// nobody this round and acks immediately).
+    Allreduce { name: String, group: Option<Arc<Vec<usize>>> },
+    /// Prune the store/scratch down to the names this run touched.
+    EndRun { live: Arc<BTreeSet<String>> },
+    /// Shut the rank thread down.
+    Stop,
+}
+
+/// Per-instruction acknowledgement payload: cumulative counters plus
+/// whatever the instruction produced.
+#[derive(Default)]
+struct AckData {
+    /// Measured kernel seconds for a `Compute` instruction.
+    compute_s: f64,
+    /// The fetched tensor for a `Fetch` instruction.
+    tensor: Option<Tensor>,
+    /// Allreduce payload length reported by a group root (drives the
+    /// coordinator's α–β cost model).
+    payload_len: Option<usize>,
+    /// Cumulative store recycling counters for this rank.
+    store: StoreStats,
+    /// Cumulative local-scratch counters for this rank.
+    scratch: LocalScratchStats,
+}
+
+/// One rank→coordinator acknowledgement.
+enum AckMsg {
+    Ok(AckData),
+    /// The instruction failed with a typed (data-dependent) error; the
+    /// site is still consistent.  Counters ride along so the
+    /// coordinator's caches never lag.
+    Err(Error, AckData),
+    /// The site is broken (protocol violation or panic); the executor
+    /// must be poisoned.
+    Fatal(Error),
+}
+
+/// Coarse error class carried inside an abort notice, so the receiving
+/// rank can reconstruct the same typed variant the originator saw.
+#[derive(Debug, Clone, Copy)]
+enum AbortClass {
+    Plan,
+    Shape,
+    Protocol,
+}
+
+impl AbortClass {
+    fn into_error(self, msg: String) -> Error {
+        match self {
+            AbortClass::Plan => Error::Plan(msg),
+            AbortClass::Shape => Error::Shape(msg),
+            AbortClass::Protocol => Error::Protocol(msg),
+        }
+    }
+}
+
+/// Split an error into an abort class plus its *inner* message (so the
+/// reconstructed error Displays identically — no double prefix).
+fn abort_of(e: &Error) -> (AbortClass, String) {
+    match e {
+        Error::Shape(m) => (AbortClass::Shape, m.clone()),
+        Error::Plan(m) => (AbortClass::Plan, m.clone()),
+        Error::Protocol(m) => (AbortClass::Protocol, m.clone()),
+        other => (AbortClass::Protocol, other.to_string()),
+    }
+}
+
+/// One rank-to-rank payload.
+struct DataMsg {
+    src: usize,
+    tag: DataTag,
+    data: Tensor,
+}
+
+/// What a [`DataMsg`] means.  Abort tags keep the receive counts
+/// balanced when the sender hits a typed error mid-collective.
+#[derive(Debug)]
+enum DataTag {
+    /// A redistribution box landing at `dst_off`/`size` in the
+    /// receiver's destination buffer.
+    Redist { dst_off: Vec<usize>, size: Vec<usize> },
+    /// The sender could not produce its redistribution boxes.
+    RedistAbort(String),
+    /// A member's allreduce contribution (full local block).
+    ReduceContrib,
+    /// The root's reduced block, broadcast back to a member.
+    ReduceResult,
+    /// The sender's half of the allreduce failed.
+    ReduceAbort { class: AbortClass, msg: String },
+}
+
+/// How a rank-side handler failed.
+enum Fail {
+    /// Data-dependent error: the site is still consistent, the run
+    /// continues to the next instruction.
+    Typed(Error),
+    /// Protocol violation: the site (or a peer) is broken.
+    Fatal(Error),
+}
+
+impl From<Error> for Fail {
+    fn from(e: Error) -> Self {
+        Fail::Typed(e)
+    }
+}
+
+type RankResult<T> = std::result::Result<T, Fail>;
+
+/// One rank's private world: local store slice, recycled scratch, its
+/// data inbox, and senders to every peer's inbox.
+struct RankSite {
+    rank: usize,
+    engine: Arc<KernelEngine>,
+    store: HashMap<String, Tensor>,
+    scratch: RankScratch,
+    stats: StoreStats,
+    data_rx: Receiver<DataMsg>,
+    data_tx: Vec<Sender<DataMsg>>,
+}
+
+/// The interpreter's read-only view of a rank site's store.
+struct LocalStore<'a> {
+    store: &'a HashMap<String, Tensor>,
+    rank: usize,
+}
+
+impl RankStore for LocalStore<'_> {
+    fn tensor(&self, name: &str) -> Result<&Tensor> {
+        self.store.get(name).ok_or_else(|| {
+            Error::plan(format!("tensor {name} rank {} missing", self.rank))
+        })
+    }
+}
+
+impl RankSite {
+    /// Baseline ack: cumulative counters, no payload.
+    fn ok(&self) -> AckData {
+        AckData {
+            store: self.stats,
+            scratch: self.scratch.stats(),
+            ..AckData::default()
+        }
+    }
+
+    fn recv_data(&self, what: &str) -> RankResult<DataMsg> {
+        self.data_rx.recv_timeout(PEER_TIMEOUT).map_err(|_| {
+            Fail::Fatal(Error::protocol(format!(
+                "rank {}: timed out waiting for {what}",
+                self.rank
+            )))
+        })
+    }
+
+    fn handle(&mut self, instr: Instr) -> RankResult<AckData> {
+        match instr {
+            Instr::BeginRun => {
+                self.scratch.begin_run();
+                Ok(self.ok())
+            }
+            Instr::Stage { name, block } => self.stage(name, block),
+            Instr::Put { name, tensor } => {
+                self.store.insert(name, tensor);
+                Ok(self.ok())
+            }
+            Instr::Fetch { name } => {
+                let mut ack = self.ok();
+                ack.tensor = self.store.get(&name).cloned();
+                Ok(ack)
+            }
+            Instr::Redistribute { src, dst, ldims, sends, locals, recv_count } => {
+                self.redistribute(src, dst, ldims, sends, locals, recv_count)
+            }
+            Instr::Compute { step } => self.compute(&step),
+            Instr::Allreduce { name, group } => self.allreduce(name, group),
+            Instr::EndRun { live } => {
+                self.store.retain(|k, _| live.contains(k));
+                self.scratch.end_run();
+                Ok(self.ok())
+            }
+            // Stop is intercepted by `rank_main` before dispatch.
+            Instr::Stop => Ok(self.ok()),
+        }
+    }
+
+    /// Install a staged input block, recycling the resident buffer in
+    /// place when the shape matches (the per-rank half of the
+    /// simulator's `dest_allocs`/`dest_reuses` accounting — the totals
+    /// line up because staging shapes are uniform across ranks).
+    fn stage(&mut self, name: String, block: Tensor) -> RankResult<AckData> {
+        match self.store.remove(&name) {
+            Some(mut t) if t.dims() == block.dims() => {
+                self.stats.dest_reuses += 1;
+                t.data_mut().copy_from_slice(block.data());
+                self.store.insert(name, t);
+            }
+            _ => {
+                self.stats.dest_allocs += 1;
+                self.store.insert(name, block);
+            }
+        }
+        Ok(self.ok())
+    }
+
+    /// Run the term's local kernel through the shared interpreter,
+    /// recycling the output buffer under the step's output name.
+    fn compute(&mut self, step: &ComputeStep) -> RankResult<AckData> {
+        // Replay the coordinator's per-term kernel config on this
+        // thread (thread-local overrides don't cross thread boundaries).
+        self.engine.configure_override(step.kernel_cfg);
+        let mut dest = match self.store.remove(&step.out_name) {
+            Some(t) if t.dims() == step.out_dims.as_slice() => {
+                self.stats.out_reuses += 1;
+                t
+            }
+            _ => {
+                self.stats.out_allocs += 1;
+                Tensor::zeros(&step.out_dims)
+            }
+        };
+        let t0 = Instant::now();
+        let res = {
+            let view = LocalStore { store: &self.store, rank: self.rank };
+            step::execute_rank(&self.engine, &view, &mut self.scratch, step, &mut dest)
+        };
+        let dt = t0.elapsed().as_secs_f64();
+        // The buffer goes back even on error, so a recovered run still
+        // recycles it.
+        self.store.insert(step.out_name.clone(), dest);
+        match res {
+            Ok(()) => {
+                let mut ack = self.ok();
+                ack.compute_s = dt;
+                Ok(ack)
+            }
+            Err(e) => Err(Fail::Typed(e)),
+        }
+    }
+
+    /// One rank's half of a redistribution round.
+    fn redistribute(
+        &mut self,
+        src: String,
+        dst: String,
+        ldims: Vec<usize>,
+        sends: Vec<Message>,
+        locals: Vec<Message>,
+        recv_count: usize,
+    ) -> RankResult<AckData> {
+        let zero = vec![0usize; ldims.len()];
+        if !self.store.contains_key(&src) {
+            // Every box this rank owed becomes an abort notice, so the
+            // receivers' expected counts stay balanced; then drain our
+            // own inbox before surfacing the typed error.
+            for m in &sends {
+                let _ = self.data_tx[m.dst].send(DataMsg {
+                    src: self.rank,
+                    tag: DataTag::RedistAbort(format!("redistribute: {src} missing")),
+                    data: Tensor::zeros(&[1]),
+                });
+            }
+            for _ in 0..recv_count {
+                let msg = self.recv_data("redistribution data")?;
+                match msg.tag {
+                    DataTag::Redist { .. } | DataTag::RedistAbort(_) => {}
+                    tag => {
+                        return Err(Fail::Fatal(Error::protocol(format!(
+                            "rank {}: unexpected {tag:?} during redistribute",
+                            self.rank
+                        ))))
+                    }
+                }
+            }
+            return Err(Fail::Typed(Error::plan(format!(
+                "redistribute: {src} missing"
+            ))));
+        }
+        // Ship every outgoing box first so no peer stalls on our local
+        // work.
+        {
+            let src_buf = self.store.get(&src).ok_or_else(|| {
+                Fail::Fatal(Error::protocol(format!(
+                    "rank {}: {src} vanished mid-redistribute",
+                    self.rank
+                )))
+            })?;
+            for m in &sends {
+                let mut payload = Tensor::zeros(&m.size);
+                payload.copy_box_from(src_buf, &m.src_off, &zero, &m.size);
+                if self.data_tx[m.dst]
+                    .send(DataMsg {
+                        src: self.rank,
+                        tag: DataTag::Redist { dst_off: m.dst_off.clone(), size: m.size.clone() },
+                        data: payload,
+                    })
+                    .is_err()
+                {
+                    return Err(Fail::Fatal(Error::protocol(format!(
+                        "rank {}: redistribute peer {} is gone",
+                        self.rank, m.dst
+                    ))));
+                }
+            }
+        }
+        // Destination buffer: recycled when the shape matches, cleared
+        // so edge padding outside the incoming boxes stays exact.
+        let mut dstbuf = match self.store.remove(&dst) {
+            Some(mut t) if t.dims() == ldims.as_slice() => {
+                self.stats.dest_reuses += 1;
+                t.data_mut().fill(0.0);
+                t
+            }
+            _ => {
+                self.stats.dest_allocs += 1;
+                Tensor::zeros(&ldims)
+            }
+        };
+        {
+            let src_buf = self.store.get(&src).ok_or_else(|| {
+                Fail::Fatal(Error::protocol(format!(
+                    "rank {}: {src} vanished mid-redistribute",
+                    self.rank
+                )))
+            })?;
+            for m in &locals {
+                dstbuf.copy_box_from(src_buf, &m.src_off, &m.dst_off, &m.size);
+            }
+        }
+        let mut typed: Option<Error> = None;
+        for _ in 0..recv_count {
+            let msg = self.recv_data("redistribution data")?;
+            match msg.tag {
+                DataTag::Redist { dst_off, size } => {
+                    let zo = vec![0usize; size.len()];
+                    dstbuf.copy_box_from(&msg.data, &zo, &dst_off, &size);
+                }
+                DataTag::RedistAbort(m) => {
+                    if typed.is_none() {
+                        typed = Some(Error::plan(m));
+                    }
+                }
+                tag => {
+                    return Err(Fail::Fatal(Error::protocol(format!(
+                        "rank {}: unexpected {tag:?} during redistribute",
+                        self.rank
+                    ))))
+                }
+            }
+        }
+        self.store.insert(dst, dstbuf);
+        match typed {
+            Some(e) => Err(Fail::Typed(e)),
+            None => Ok(self.ok()),
+        }
+    }
+
+    /// One rank's half of an allreduce round: members send their block
+    /// to the group root, the root accumulates in group order and
+    /// broadcasts the sum back.
+    fn allreduce(
+        &mut self,
+        name: String,
+        group: Option<Arc<Vec<usize>>>,
+    ) -> RankResult<AckData> {
+        let Some(g) = group else {
+            return Ok(self.ok());
+        };
+        let root = g[0];
+        if self.rank != root {
+            return self.allreduce_member(&name, root);
+        }
+        let others = &g[1..];
+        let mut member_err: Option<Error> = None;
+        let mut contribs: BTreeMap<usize, Tensor> = BTreeMap::new();
+        for _ in 0..others.len() {
+            let msg = self.recv_data("allreduce contributions")?;
+            match msg.tag {
+                DataTag::ReduceContrib => {
+                    if contribs.insert(msg.src, msg.data).is_some() && member_err.is_none() {
+                        member_err = Some(Error::protocol(format!(
+                            "allreduce {name}: duplicate contribution from rank {}",
+                            msg.src
+                        )));
+                    }
+                }
+                DataTag::ReduceAbort { class, msg: m } => {
+                    if member_err.is_none() {
+                        member_err = Some(class.into_error(m));
+                    }
+                }
+                tag => {
+                    return Err(Fail::Fatal(Error::protocol(format!(
+                        "rank {}: unexpected {tag:?} during allreduce",
+                        self.rank
+                    ))))
+                }
+            }
+        }
+        let mut root_buf = self.store.remove(&name);
+        let verdict = root_verdict(&name, root, others, member_err, &contribs, &mut root_buf);
+        match (verdict, root_buf) {
+            (Ok(len), Some(buf)) => {
+                for &r in others {
+                    if self.data_tx[r]
+                        .send(DataMsg {
+                            src: self.rank,
+                            tag: DataTag::ReduceResult,
+                            data: buf.clone(),
+                        })
+                        .is_err()
+                    {
+                        self.store.insert(name, buf);
+                        return Err(Fail::Fatal(Error::protocol(format!(
+                            "rank {}: allreduce peer {r} is gone",
+                            self.rank
+                        ))));
+                    }
+                }
+                self.store.insert(name, buf);
+                let mut ack = self.ok();
+                ack.payload_len = Some(len);
+                Ok(ack)
+            }
+            (Ok(_), None) => Err(Fail::Fatal(Error::protocol(format!(
+                "allreduce {name}: verdict without a root buffer"
+            )))),
+            (Err(e), maybe) => {
+                if let Some(buf) = maybe {
+                    self.store.insert(name, buf);
+                }
+                // Members are blocked on a response; abort them all so
+                // the round stays balanced, then surface the typed error.
+                let (class, msg) = abort_of(&e);
+                for &r in others {
+                    let _ = self.data_tx[r].send(DataMsg {
+                        src: self.rank,
+                        tag: DataTag::ReduceAbort { class, msg: msg.clone() },
+                        data: Tensor::zeros(&[1]),
+                    });
+                }
+                Err(Fail::Typed(e))
+            }
+        }
+    }
+
+    fn allreduce_member(&mut self, name: &str, root: usize) -> RankResult<AckData> {
+        match self.store.get(name) {
+            Some(t) => {
+                let contrib = t.clone();
+                if self.data_tx[root]
+                    .send(DataMsg {
+                        src: self.rank,
+                        tag: DataTag::ReduceContrib,
+                        data: contrib,
+                    })
+                    .is_err()
+                {
+                    return Err(Fail::Fatal(Error::protocol(format!(
+                        "rank {}: allreduce root {root} is gone",
+                        self.rank
+                    ))));
+                }
+            }
+            None => {
+                let _ = self.data_tx[root].send(DataMsg {
+                    src: self.rank,
+                    tag: DataTag::ReduceAbort {
+                        class: AbortClass::Plan,
+                        msg: format!("allreduce: {name} missing"),
+                    },
+                    data: Tensor::zeros(&[1]),
+                });
+            }
+        }
+        let msg = self.recv_data("allreduce result")?;
+        match msg.tag {
+            DataTag::ReduceResult => match self.store.get_mut(name) {
+                Some(buf) if buf.dims() == msg.data.dims() => {
+                    buf.data_mut().copy_from_slice(msg.data.data());
+                    Ok(self.ok())
+                }
+                _ => Err(Fail::Fatal(Error::protocol(format!(
+                    "rank {}: allreduce result shape mismatch for {name}",
+                    self.rank
+                )))),
+            },
+            DataTag::ReduceAbort { class, msg: m } => Err(Fail::Typed(class.into_error(m))),
+            tag => Err(Fail::Fatal(Error::protocol(format!(
+                "rank {}: unexpected {tag:?} during allreduce",
+                self.rank
+            )))),
+        }
+    }
+}
+
+/// The root's allreduce decision, computed against the buffer *in
+/// place* (`root_buf` is reinserted by the caller whatever happens, so
+/// a typed error never loses the buffer).  Returns the payload length
+/// for the coordinator's cost model.
+fn root_verdict(
+    name: &str,
+    root: usize,
+    others: &[usize],
+    member_err: Option<Error>,
+    contribs: &BTreeMap<usize, Tensor>,
+    root_buf: &mut Option<Tensor>,
+) -> Result<usize> {
+    if let Some(e) = member_err {
+        return Err(e);
+    }
+    let buf = root_buf
+        .as_mut()
+        .ok_or_else(|| Error::plan(format!("allreduce: {name} missing")))?;
+    // Shape pre-check over the whole group before any accumulation, so
+    // a mismatch is a clean typed error with nothing half-summed.
+    for &r in others {
+        let c = contribs.get(&r).ok_or_else(|| {
+            Error::protocol(format!(
+                "allreduce {name}: missing contribution from rank {r}"
+            ))
+        })?;
+        if c.dims() != buf.dims() {
+            return Err(Error::shape(format!(
+                "allreduce {name}: rank {r} block {:?} != rank {root} block {:?}",
+                c.dims(),
+                buf.dims()
+            )));
+        }
+    }
+    // Accumulate in group order — the simulator's order, which is what
+    // keeps the backends bitwise identical.
+    for &r in others {
+        if let Some(c) = contribs.get(&r) {
+            buf.add_assign(c)?;
+        }
+    }
+    Ok(buf.len())
+}
+
+/// Best-effort extraction of a panic payload's message.
+fn panic_msg(p: &(dyn Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
+}
+
+/// A rank thread's main loop: receive, execute (panic-contained), ack.
+fn rank_main(
+    rank: usize,
+    engine: Arc<KernelEngine>,
+    instr_rx: Receiver<Instr>,
+    ack_tx: Sender<AckMsg>,
+    data_rx: Receiver<DataMsg>,
+    data_tx: Vec<Sender<DataMsg>>,
+) {
+    let mut site = RankSite {
+        rank,
+        engine,
+        store: HashMap::new(),
+        scratch: RankScratch::default(),
+        stats: StoreStats::default(),
+        data_rx,
+        data_tx,
+    };
+    loop {
+        let instr = match instr_rx.recv() {
+            Ok(i) => i,
+            Err(_) => break, // coordinator gone: shut down
+        };
+        if matches!(instr, Instr::Stop) {
+            site.engine.reset_config();
+            break;
+        }
+        let ack = match catch_unwind(AssertUnwindSafe(|| site.handle(instr))) {
+            Ok(Ok(d)) => AckMsg::Ok(d),
+            Ok(Err(Fail::Typed(e))) => AckMsg::Err(e, site.ok()),
+            Ok(Err(Fail::Fatal(e))) => AckMsg::Fatal(e),
+            Err(p) => AckMsg::Fatal(Error::runtime(format!(
+                "mp rank {rank} panicked: {}",
+                panic_msg(p.as_ref())
+            ))),
+        };
+        if ack_tx.send(ack).is_err() {
+            break;
+        }
+    }
+}
+
+/// Coordinator side of the message-passing backend.
+pub(crate) struct MpExecutor {
+    p: usize,
+    net: NetworkModel,
+    instr_tx: Vec<Sender<Instr>>,
+    ack_rx: Vec<Receiver<AckMsg>>,
+    threads: Vec<JoinHandle<()>>,
+    step_compute: Vec<f64>,
+    time: TimeBreakdown,
+    comm: CommStats,
+    /// Last-seen cumulative counters per rank (refreshed on every ack).
+    rank_store: Vec<StoreStats>,
+    rank_scratch: Vec<LocalScratchStats>,
+    /// Recycled permuted-gather staging (global extents).
+    gather_stage: Option<Tensor>,
+    gather_stats: LocalScratchStats,
+    gather_live: bool,
+    /// Set on any fatal ack/dead channel; `healthy()` turns false and
+    /// the run loop rebuilds the executor.
+    poisoned: bool,
+}
+
+impl MpExecutor {
+    pub(crate) fn new(ranks: usize, net: NetworkModel, engine: Arc<KernelEngine>) -> Self {
+        let p = ranks.max(1);
+        // Full p×p data mesh: one inbox per rank, every rank holds a
+        // sender to every inbox.
+        let mut data_tx_master: Vec<Sender<DataMsg>> = Vec::with_capacity(p);
+        let mut data_rx_all: Vec<Receiver<DataMsg>> = Vec::with_capacity(p);
+        for _ in 0..p {
+            let (tx, rx) = channel();
+            data_tx_master.push(tx);
+            data_rx_all.push(rx);
+        }
+        let mut instr_tx = Vec::with_capacity(p);
+        let mut ack_rx = Vec::with_capacity(p);
+        let mut threads = Vec::with_capacity(p);
+        for (r, drx) in data_rx_all.into_iter().enumerate() {
+            let (itx, irx) = channel();
+            let (atx, arx) = channel();
+            instr_tx.push(itx);
+            ack_rx.push(arx);
+            let dtx = data_tx_master.clone();
+            let eng = Arc::clone(&engine);
+            threads.push(
+                thread::Builder::new()
+                    .name(format!("deinsum-mp-{r}"))
+                    .spawn(move || rank_main(r, eng, irx, atx, drx, dtx))
+                    .expect("spawn mp rank thread"),
+            );
+        }
+        MpExecutor {
+            p,
+            net,
+            instr_tx,
+            ack_rx,
+            threads,
+            step_compute: vec![0.0; p],
+            time: TimeBreakdown::default(),
+            comm: CommStats::default(),
+            rank_store: vec![StoreStats::default(); p],
+            rank_scratch: vec![LocalScratchStats::default(); p],
+            gather_stage: None,
+            gather_stats: LocalScratchStats::default(),
+            gather_live: false,
+            poisoned: false,
+        }
+    }
+
+    fn send_instr(&mut self, r: usize, i: Instr) -> Result<()> {
+        if self.poisoned {
+            return Err(Error::protocol(
+                "mp executor is poisoned (a rank site failed fatally)",
+            ));
+        }
+        match self.instr_tx[r].send(i) {
+            Ok(()) => Ok(()),
+            Err(_) => {
+                self.poisoned = true;
+                Err(Error::protocol(format!("mp rank {r} is gone")))
+            }
+        }
+    }
+
+    /// Collect all `p` acks in rank order.  Counter caches are updated
+    /// from every non-fatal ack; the first error (typed before later
+    /// typed, fatal poisons) is returned only after the full barrier,
+    /// so the channels are provably drained.
+    fn collect_acks(&mut self) -> Result<Vec<AckData>> {
+        let mut first_err: Option<Error> = None;
+        let mut acks = Vec::with_capacity(self.p);
+        for r in 0..self.p {
+            match self.ack_rx[r].recv() {
+                Ok(AckMsg::Ok(d)) => {
+                    self.rank_store[r] = d.store;
+                    self.rank_scratch[r] = d.scratch;
+                    acks.push(d);
+                }
+                Ok(AckMsg::Err(e, d)) => {
+                    self.rank_store[r] = d.store;
+                    self.rank_scratch[r] = d.scratch;
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                    acks.push(d);
+                }
+                Ok(AckMsg::Fatal(e)) => {
+                    self.poisoned = true;
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                    acks.push(AckData::default());
+                }
+                Err(_) => {
+                    self.poisoned = true;
+                    if first_err.is_none() {
+                        first_err =
+                            Some(Error::protocol(format!("mp rank {r} disconnected mid-run")));
+                    }
+                    acks.push(AckData::default());
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(acks),
+        }
+    }
+
+    /// Broadcast one instruction (built per rank) and collect the acks.
+    fn round(&mut self, mk: impl Fn(usize) -> Instr) -> Result<Vec<AckData>> {
+        for r in 0..self.p {
+            self.send_instr(r, mk(r))?;
+        }
+        self.collect_acks()
+    }
+}
+
+impl Executor for MpExecutor {
+    fn backend(&self) -> ExecBackend {
+        ExecBackend::Mp
+    }
+
+    fn ranks(&self) -> usize {
+        self.p
+    }
+
+    fn healthy(&self) -> bool {
+        !self.poisoned
+    }
+
+    fn begin_run(&mut self) -> Result<()> {
+        self.time = TimeBreakdown::default();
+        self.comm = CommStats::default();
+        self.step_compute.iter_mut().for_each(|t| *t = 0.0);
+        self.gather_live = false;
+        self.round(|_| Instr::BeginRun).map(|_| ())
+    }
+
+    fn stage_blocks(&mut self, name: &str, global: &Tensor, dist: &TensorDist) -> Result<()> {
+        // Cut the blocks with the simulator's exact semantics (zeroed
+        // buffer + clipped box copy ≡ zero padding at global edges), so
+        // the staged bytes are identical across backends.
+        let ldims = dist.local_dims();
+        let zero_off = vec![0usize; ldims.len()];
+        for r in 0..self.p {
+            let (off, _size) = dist.block_for_rank(r);
+            let mut block = Tensor::zeros(&ldims);
+            block.copy_box_from(global, &off, &zero_off, &ldims);
+            self.send_instr(r, Instr::Stage { name: name.to_string(), block })?;
+        }
+        self.collect_acks().map(|_| ())
+    }
+
+    fn put(&mut self, name: &str, per_rank: Vec<Tensor>) -> Result<()> {
+        if per_rank.len() != self.p {
+            return Err(Error::plan(format!(
+                "put {name}: {} tensors for {} ranks",
+                per_rank.len(),
+                self.p
+            )));
+        }
+        for (r, tensor) in per_rank.into_iter().enumerate() {
+            self.send_instr(r, Instr::Put { name: name.to_string(), tensor })?;
+        }
+        self.collect_acks().map(|_| ())
+    }
+
+    fn get(&mut self, name: &str, rank: usize) -> Result<Tensor> {
+        if rank >= self.p {
+            return Err(Error::plan(format!("tensor {name} rank {rank} missing")));
+        }
+        let acks = self.round(|_| Instr::Fetch { name: name.to_string() })?;
+        acks.into_iter()
+            .nth(rank)
+            .and_then(|d| d.tensor)
+            .ok_or_else(|| Error::plan(format!("tensor {name} rank {rank} missing")))
+    }
+
+    fn redistribute(
+        &mut self,
+        src_name: &str,
+        dst_name: &str,
+        rp: &RedistPlan,
+        src: &TensorDist,
+        dst: &TensorDist,
+    ) -> Result<()> {
+        debug_assert_eq!(src.extents, dst.extents);
+        if src_name == dst_name {
+            return Err(Error::plan(format!(
+                "redistribute: in-place aliasing ({src_name}) unsupported"
+            )));
+        }
+        if src.grid.size() > self.p || dst.grid.size() > self.p {
+            return Err(Error::plan(format!(
+                "redistribute: distribution grid ({} -> {} ranks) exceeds machine ({})",
+                src.grid.size(),
+                dst.grid.size(),
+                self.p
+            )));
+        }
+        // Split the plan's message list per rank: what each site sends,
+        // applies locally, and must receive.
+        let mut per_rank: Vec<(Vec<Message>, Vec<Message>, usize)> =
+            (0..self.p).map(|_| (Vec::new(), Vec::new(), 0)).collect();
+        for m in &rp.messages {
+            if m.src >= self.p || m.dst >= self.p {
+                return Err(Error::plan(format!(
+                    "redistribute: message rank {}->{} exceeds machine ({})",
+                    m.src, m.dst, self.p
+                )));
+            }
+            if m.src == m.dst {
+                per_rank[m.src].1.push(m.clone());
+            } else {
+                per_rank[m.src].0.push(m.clone());
+                per_rank[m.dst].2 += 1;
+            }
+        }
+        let ldims = dst.local_dims();
+        for (r, (sends, locals, recv_count)) in per_rank.into_iter().enumerate() {
+            self.send_instr(
+                r,
+                Instr::Redistribute {
+                    src: src_name.to_string(),
+                    dst: dst_name.to_string(),
+                    ldims: ldims.clone(),
+                    sends,
+                    locals,
+                    recv_count,
+                },
+            )?;
+        }
+        self.collect_acks()?;
+        // Charge the simulator's α–β model on the identical message set
+        // (max per-rank volume; links are parallel across rank pairs).
+        let mut sent = vec![0u128; self.p];
+        let mut recv = vec![0u128; self.p];
+        let mut msgs = vec![0u64; self.p];
+        for m in &rp.messages {
+            if m.src == m.dst {
+                continue;
+            }
+            let b = m.bytes() as u128;
+            sent[m.src] += b;
+            recv[m.dst] += b;
+            msgs[m.src] += 1;
+            self.comm.p2p_bytes += b;
+            self.comm.p2p_msgs += 1;
+        }
+        let max_bytes = sent.iter().zip(&recv).map(|(s, r)| s + r).max().unwrap_or(0) as f64;
+        let max_msgs = msgs.iter().max().copied().unwrap_or(0) as f64;
+        self.time.comm += self.net.p2p_time(max_msgs, max_bytes);
+        Ok(())
+    }
+
+    fn compute_step_into(&mut self, step: &ComputeStep) -> Result<()> {
+        let shared = Arc::new(step.clone());
+        for r in 0..self.p {
+            self.send_instr(r, Instr::Compute { step: Arc::clone(&shared) })?;
+        }
+        let acks = self.collect_acks()?;
+        for (r, d) in acks.iter().enumerate() {
+            self.step_compute[r] += d.compute_s;
+        }
+        Ok(())
+    }
+
+    fn end_step(&mut self) {
+        let max = self.step_compute.iter().cloned().fold(0.0, f64::max);
+        self.time.compute += max;
+        self.step_compute.iter_mut().for_each(|t| *t = 0.0);
+    }
+
+    fn allreduce_sum(&mut self, name: &str, groups: &[Vec<usize>]) -> Result<()> {
+        for g in groups {
+            for &r in g {
+                if r >= self.p {
+                    return Err(Error::plan(format!(
+                        "allreduce {name}: rank {r} exceeds machine ({})",
+                        self.p
+                    )));
+                }
+            }
+        }
+        let mut per_rank: Vec<Option<Arc<Vec<usize>>>> = vec![None; self.p];
+        for g in groups {
+            if g.len() <= 1 {
+                continue;
+            }
+            let shared = Arc::new(g.clone());
+            for &r in g {
+                per_rank[r] = Some(Arc::clone(&shared));
+            }
+        }
+        for (r, group) in per_rank.into_iter().enumerate() {
+            self.send_instr(r, Instr::Allreduce { name: name.to_string(), group })?;
+        }
+        let acks = self.collect_acks()?;
+        // Charge the simulator's tree-allreduce model per group from the
+        // payload length each group root measured.
+        let mut max_t = 0.0f64;
+        for g in groups {
+            if g.len() <= 1 {
+                continue;
+            }
+            let len = acks[g[0]].payload_len.ok_or_else(|| {
+                Error::protocol(format!(
+                    "allreduce {name}: missing payload length from root rank {}",
+                    g[0]
+                ))
+            })?;
+            let bytes = (len * ELEM_BYTES) as f64;
+            let t = self.net.allreduce_time(g.len(), bytes);
+            self.comm.allreduce_bytes += (len * ELEM_BYTES) as u128 * (g.len() as u128);
+            self.comm.allreduces += 1;
+            max_t = max_t.max(t);
+        }
+        self.time.comm += max_t;
+        Ok(())
+    }
+
+    fn gather_into(
+        &mut self,
+        name: &str,
+        dist: &TensorDist,
+        perm: Option<&[usize]>,
+        dest: &mut Tensor,
+    ) -> Result<()> {
+        // One Fetch round pulls every rank's block across the channels;
+        // assembly then uses the same owner/box math as the simulator.
+        let acks = self.round(|_| Instr::Fetch { name: name.to_string() })?;
+        let tensors: Vec<Option<Tensor>> = acks.into_iter().map(|d| d.tensor).collect();
+        let assemble = |target: &mut Tensor| -> Result<()> {
+            let zero_off = vec![0usize; dist.extents.len()];
+            for bc in dist.block_coords() {
+                let owner = dist.owner_of_block(&bc);
+                let (off, size) = dist.block_for_rank(owner);
+                let t = tensors
+                    .get(owner)
+                    .and_then(|o| o.as_ref())
+                    .ok_or_else(|| Error::plan(format!("tensor {name} rank {owner} missing")))?;
+                target.copy_box_from(t, &zero_off, &off, &size);
+            }
+            Ok(())
+        };
+        match perm {
+            None => assemble(dest),
+            Some(p) => {
+                self.gather_live = true;
+                let mut g = match self.gather_stage.take() {
+                    Some(t) if t.dims() == &dist.extents[..] => {
+                        self.gather_stats.reuses += 1;
+                        t
+                    }
+                    _ => {
+                        self.gather_stats.allocs += 1;
+                        Tensor::zeros(&dist.extents)
+                    }
+                };
+                let res = assemble(&mut g).and_then(|()| g.permute_into(p, dest));
+                self.gather_stage = Some(g);
+                res
+            }
+        }
+    }
+
+    fn end_run(&mut self, live: &BTreeSet<String>) -> Result<()> {
+        let shared = Arc::new(live.clone());
+        for r in 0..self.p {
+            self.send_instr(r, Instr::EndRun { live: Arc::clone(&shared) })?;
+        }
+        self.collect_acks()?;
+        if !self.gather_live {
+            self.gather_stage = None;
+        }
+        Ok(())
+    }
+
+    fn store_stats(&self) -> StoreStats {
+        let mut s = StoreStats::default();
+        for r in &self.rank_store {
+            s.dest_allocs += r.dest_allocs;
+            s.dest_reuses += r.dest_reuses;
+            s.out_allocs += r.out_allocs;
+            s.out_reuses += r.out_reuses;
+        }
+        s
+    }
+
+    fn scratch_stats(&self) -> LocalScratchStats {
+        let mut s = self.gather_stats;
+        for r in &self.rank_scratch {
+            s.add(*r);
+        }
+        s
+    }
+
+    fn time(&self) -> TimeBreakdown {
+        self.time
+    }
+
+    fn comm(&self) -> CommStats {
+        self.comm.clone()
+    }
+}
+
+impl Drop for MpExecutor {
+    fn drop(&mut self) {
+        for tx in &self.instr_tx {
+            let _ = tx.send(Instr::Stop);
+        }
+        self.instr_tx.clear();
+        for h in self.threads.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exec(p: usize) -> MpExecutor {
+        MpExecutor::new(p, NetworkModel::aries(), Arc::new(KernelEngine::native()))
+    }
+
+    fn t(dims: &[usize], data: &[f32]) -> Tensor {
+        Tensor::from_vec(dims, data.to_vec()).unwrap()
+    }
+
+    #[test]
+    fn put_fetch_roundtrip_and_missing_is_typed() {
+        let mut e = exec(2);
+        e.begin_run().unwrap();
+        e.put("a", vec![t(&[2], &[1.0, 2.0]), t(&[2], &[3.0, 4.0])]).unwrap();
+        assert_eq!(e.get("a", 1).unwrap().data(), &[3.0, 4.0]);
+        assert!(matches!(e.get("missing", 0), Err(Error::Plan(_))));
+        assert!(matches!(e.get("a", 9), Err(Error::Plan(_))));
+        assert!(e.healthy(), "typed errors must not poison the executor");
+    }
+
+    #[test]
+    fn put_wrong_rank_count_is_typed_before_any_send() {
+        let mut e = exec(2);
+        e.begin_run().unwrap();
+        assert!(matches!(e.put("z", vec![Tensor::zeros(&[1])]), Err(Error::Plan(_))));
+        assert!(e.healthy());
+        // The protocol is still in lockstep afterwards.
+        e.put("z", vec![t(&[1], &[7.0]), t(&[1], &[8.0])]).unwrap();
+        assert_eq!(e.get("z", 0).unwrap().data(), &[7.0]);
+    }
+
+    #[test]
+    fn allreduce_sums_groups_over_channels() {
+        let mut e = exec(4);
+        e.begin_run().unwrap();
+        e.put(
+            "x",
+            vec![
+                t(&[2], &[1.0, 2.0]),
+                t(&[2], &[3.0, 4.0]),
+                t(&[2], &[10.0, 20.0]),
+                t(&[2], &[30.0, 40.0]),
+            ],
+        )
+        .unwrap();
+        e.allreduce_sum("x", &[vec![0, 1], vec![2, 3]]).unwrap();
+        assert_eq!(e.get("x", 0).unwrap().data(), &[4.0, 6.0]);
+        assert_eq!(e.get("x", 1).unwrap().data(), &[4.0, 6.0]);
+        assert_eq!(e.get("x", 2).unwrap().data(), &[40.0, 60.0]);
+        assert_eq!(e.get("x", 3).unwrap().data(), &[40.0, 60.0]);
+        let c = e.comm();
+        assert_eq!(c.allreduces, 2);
+        assert_eq!(c.allreduce_bytes, (2 * ELEM_BYTES) as u128 * 4);
+    }
+
+    #[test]
+    fn allreduce_equal_len_different_dims_is_typed_shape_error() {
+        let mut e = exec(2);
+        e.begin_run().unwrap();
+        // Equal element counts, different shapes: must be a typed shape
+        // error (never a panic, never a hang), and must not poison.
+        e.put("y", vec![t(&[2, 3], &[1.0; 6]), t(&[3, 2], &[1.0; 6])]).unwrap();
+        let err = e.allreduce_sum("y", &[vec![0, 1]]).unwrap_err();
+        assert!(matches!(err, Error::Shape(_)), "got: {err}");
+        assert!(e.healthy(), "shape mismatch is data-dependent, not fatal");
+        // Buffers survive untouched (the pre-check runs before any
+        // accumulation) and the protocol stays usable.
+        assert_eq!(e.get("y", 0).unwrap().dims(), &[2, 3]);
+        assert_eq!(e.get("y", 1).unwrap().dims(), &[3, 2]);
+    }
+
+    #[test]
+    fn allreduce_missing_tensor_is_typed_plan_error() {
+        let mut e = exec(2);
+        e.begin_run().unwrap();
+        let err = e.allreduce_sum("nope", &[vec![0, 1]]).unwrap_err();
+        assert!(matches!(err, Error::Plan(_)), "got: {err}");
+        assert!(e.healthy());
+    }
+
+    #[test]
+    fn end_run_prunes_dead_names() {
+        let mut e = exec(2);
+        e.begin_run().unwrap();
+        e.put("keep", vec![t(&[1], &[1.0]), t(&[1], &[2.0])]).unwrap();
+        e.put("drop", vec![t(&[1], &[3.0]), t(&[1], &[4.0])]).unwrap();
+        let mut live = BTreeSet::new();
+        live.insert("keep".to_string());
+        e.end_run(&live).unwrap();
+        assert!(e.get("keep", 0).is_ok());
+        assert!(matches!(e.get("drop", 0), Err(Error::Plan(_))));
+    }
+}

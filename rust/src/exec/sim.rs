@@ -1,0 +1,203 @@
+//! The simulated-machine backend: [`crate::sim::Machine`] behind the
+//! [`Executor`] seam.
+//!
+//! Semantics are unchanged from the pre-trait run loop — shared
+//! in-process store, sequential ranks, measured compute + α–β-modeled
+//! communication, and the zero-allocation steady state (store and
+//! scratch counters stay flat across reruns, counter-asserted in
+//! tests).  Local kernels run through the same
+//! [`execute_rank`](step::execute_rank) interpreter as the
+//! message-passing backend.
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+
+use crate::dist::TensorDist;
+use crate::error::Result;
+use crate::redist::RedistPlan;
+use crate::runtime::KernelEngine;
+use crate::sim::{CommStats, Machine, NetworkModel, StoreStats, TimeBreakdown};
+use crate::tensor::Tensor;
+
+use super::step::{self, ComputeStep, RankScratch, RankStore};
+use super::{ExecBackend, Executor, LocalScratchStats};
+
+/// In-process simulated backend (the default).
+pub(crate) struct SimExecutor {
+    engine: Arc<KernelEngine>,
+    machine: Machine,
+    /// Per-rank recycled compute scratch.
+    scratch: Vec<RankScratch>,
+    /// Recycled permuted-gather staging (global extents).
+    gather_stage: Option<Tensor>,
+    gather_stats: LocalScratchStats,
+    /// Whether the current run's gather used the staging buffer (if
+    /// not, `end_run` prunes it — a plan switch must not pin it).
+    gather_live: bool,
+}
+
+impl SimExecutor {
+    pub(crate) fn new(ranks: usize, net: NetworkModel, engine: Arc<KernelEngine>) -> Self {
+        SimExecutor {
+            engine,
+            machine: Machine::new(ranks, net),
+            scratch: (0..ranks).map(|_| RankScratch::default()).collect(),
+            gather_stage: None,
+            gather_stats: LocalScratchStats::default(),
+            gather_live: false,
+        }
+    }
+}
+
+/// One rank's view of the shared machine store.
+struct MachineRank<'m> {
+    m: &'m Machine,
+    rank: usize,
+}
+
+impl RankStore for MachineRank<'_> {
+    fn tensor(&self, name: &str) -> Result<&Tensor> {
+        self.m.get(name, self.rank)
+    }
+}
+
+/// Assemble `name`'s distributed blocks into `target` (term output
+/// order) by direct strided copies out of the owners' local buffers —
+/// no temporary block tensor per block.
+fn assemble(m: &Machine, name: &str, dist: &TensorDist, target: &mut Tensor) -> Result<()> {
+    let zero_off = vec![0usize; dist.extents.len()];
+    for bc in dist.block_coords() {
+        let owner = dist.owner_of_block(&bc);
+        let (off, size) = dist.block_for_rank(owner);
+        target.copy_box_from(m.get(name, owner)?, &zero_off, &off, &size);
+    }
+    Ok(())
+}
+
+impl Executor for SimExecutor {
+    fn backend(&self) -> ExecBackend {
+        ExecBackend::Sim
+    }
+
+    fn ranks(&self) -> usize {
+        self.machine.ranks()
+    }
+
+    fn begin_run(&mut self) -> Result<()> {
+        self.machine.begin_run();
+        for s in &mut self.scratch {
+            s.begin_run();
+        }
+        self.gather_live = false;
+        Ok(())
+    }
+
+    fn stage_blocks(
+        &mut self,
+        name: &str,
+        global: &Tensor,
+        dist: &TensorDist,
+    ) -> Result<()> {
+        self.machine.stage_blocks(name, global, dist)
+    }
+
+    fn put(&mut self, name: &str, per_rank: Vec<Tensor>) -> Result<()> {
+        self.machine.put(name, per_rank)
+    }
+
+    fn get(&mut self, name: &str, rank: usize) -> Result<Tensor> {
+        self.machine.get(name, rank).cloned()
+    }
+
+    fn redistribute(
+        &mut self,
+        src_name: &str,
+        dst_name: &str,
+        rp: &RedistPlan,
+        src: &TensorDist,
+        dst: &TensorDist,
+    ) -> Result<()> {
+        self.machine.redistribute(src_name, dst_name, rp, src, dst)
+    }
+
+    fn compute_step_into(&mut self, step: &ComputeStep) -> Result<()> {
+        // The coordinator installed the per-term kernel config on this
+        // thread (sim ranks run on the caller's thread), so the closure
+        // only needs the interpreter.
+        let SimExecutor { engine, machine, scratch, .. } = self;
+        machine.compute_step_into(&step.out_name, &step.out_dims, |r, m, dest| {
+            let view = MachineRank { m, rank: r };
+            step::execute_rank(engine, &view, &mut scratch[r], step, dest)
+        })
+    }
+
+    fn end_step(&mut self) {
+        self.machine.end_step();
+    }
+
+    fn allreduce_sum(&mut self, name: &str, groups: &[Vec<usize>]) -> Result<()> {
+        self.machine.allreduce_sum(name, groups)
+    }
+
+    fn gather_into(
+        &mut self,
+        name: &str,
+        dist: &TensorDist,
+        perm: Option<&[usize]>,
+        dest: &mut Tensor,
+    ) -> Result<()> {
+        match perm {
+            None => assemble(&self.machine, name, dist, dest),
+            Some(p) => {
+                // Assemble into recycled staging, permute into the
+                // caller's buffer: zero allocations in steady state.
+                self.gather_live = true;
+                let mut g = match self.gather_stage.take() {
+                    Some(t) if t.dims() == &dist.extents[..] => {
+                        self.gather_stats.reuses += 1;
+                        t
+                    }
+                    _ => {
+                        self.gather_stats.allocs += 1;
+                        Tensor::zeros(&dist.extents)
+                    }
+                };
+                let res = assemble(&self.machine, name, dist, &mut g)
+                    .and_then(|()| g.permute_into(p, dest));
+                self.gather_stage = Some(g);
+                res
+            }
+        }
+    }
+
+    fn end_run(&mut self, live: &BTreeSet<String>) -> Result<()> {
+        self.machine.retain_tensors(|n| live.contains(n));
+        for s in &mut self.scratch {
+            s.end_run();
+        }
+        if !self.gather_live {
+            self.gather_stage = None;
+        }
+        Ok(())
+    }
+
+    fn store_stats(&self) -> StoreStats {
+        self.machine.store_stats()
+    }
+
+    fn scratch_stats(&self) -> LocalScratchStats {
+        let mut s = self.gather_stats;
+        for r in &self.scratch {
+            s.add(r.stats());
+        }
+        s
+    }
+
+    fn time(&self) -> TimeBreakdown {
+        self.machine.time
+    }
+
+    fn comm(&self) -> CommStats {
+        self.machine.comm.clone()
+    }
+}

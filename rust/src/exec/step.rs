@@ -1,0 +1,689 @@
+//! Backend-agnostic description of one term's local compute.
+//!
+//! [`ComputeStep`] is everything a rank needs to run a term's local
+//! kernel: validated names, shapes, the per-term [`KernelConfig`], and
+//! the op sequence — no borrows into the plan, no closures.  It is
+//! `Send + Clone`, so the in-process [`SimExecutor`] runs it directly
+//! while the message-passing backend ships it to rank threads; both
+//! call the same [`execute_rank`] interpreter, which is what makes the
+//! backends bitwise identical.
+//!
+//! All structural plan validation (slot ranges, index membership,
+//! factor counts) happens once in [`ComputeStep::build`] on the
+//! coordinator, with the same typed errors and precedence the run loop
+//! always had; ranks only surface data-dependent kernel errors.
+//!
+//! [`SimExecutor`]: super::sim::SimExecutor
+
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+
+use crate::error::{Error, Result};
+use crate::planner::{LocalKernel, TermPlan};
+use crate::runtime::KernelEngine;
+use crate::tensor::{contract, KernelConfig, Tensor};
+
+use super::LocalScratchStats;
+
+/// Scratch key of a term's MTTKRP permute buffer (never a real op id).
+pub(crate) const PERMUTE_SLOT: usize = usize::MAX;
+
+/// Base of the scratch-key slot range holding pre-reduction buffers
+/// (`slot = REDUCE_BASE + 2·op + operand`); far above any real op count
+/// and below [`PERMUTE_SLOT`].
+pub(crate) const REDUCE_BASE: usize = usize::MAX / 2;
+
+/// Read-only view of one rank's tensor store, as the interpreter sees
+/// it.  The sim backend adapts the shared [`crate::sim::Machine`] store;
+/// the mp backend adapts a rank thread's private `HashMap`.
+pub(crate) trait RankStore {
+    /// Borrow the rank-local buffer for `name`.
+    fn tensor(&self, name: &str) -> Result<&Tensor>;
+}
+
+/// Per-rank recycled scratch (Seq intermediates, pre-reduction buffers,
+/// MTTKRP permute staging), keyed by `(term, slot)`.  The per-rank half
+/// of the old coordinator-global scratch table: each rank now owns its
+/// own buffers (a hard requirement for thread-isolated sites), and the
+/// counters sum to the same totals.
+#[derive(Debug, Default)]
+pub(crate) struct RankScratch {
+    bufs: HashMap<(usize, usize), Tensor>,
+    /// Keys the current run touched (pruned against at `end_run`).
+    touched: BTreeSet<(usize, usize)>,
+    stats: LocalScratchStats,
+}
+
+impl RankScratch {
+    /// Take the buffer for `key` (recycled when the shape matches,
+    /// freshly allocated otherwise) and mark the key live for this run.
+    pub(crate) fn take(&mut self, key: (usize, usize), dims: &[usize]) -> Tensor {
+        self.touched.insert(key);
+        match self.bufs.remove(&key) {
+            Some(t) if t.dims() == dims => {
+                self.stats.reuses += 1;
+                t
+            }
+            _ => {
+                self.stats.allocs += 1;
+                Tensor::zeros(dims)
+            }
+        }
+    }
+
+    /// Return a buffer for recycling by the next run.
+    pub(crate) fn put(&mut self, key: (usize, usize), buf: Tensor) {
+        self.bufs.insert(key, buf);
+    }
+
+    /// Start a run: reset the touched-key set.
+    pub(crate) fn begin_run(&mut self) {
+        self.touched.clear();
+    }
+
+    /// End a run: prune buffers under keys this run never touched.
+    pub(crate) fn end_run(&mut self) {
+        let touched = &self.touched;
+        self.bufs.retain(|k, _| touched.contains(k));
+    }
+
+    /// Allocation counters (cumulative across runs).
+    pub(crate) fn stats(&self) -> LocalScratchStats {
+        self.stats
+    }
+}
+
+/// Where a Seq operand lives at execution time.
+#[derive(Debug, Clone)]
+pub(crate) enum OperandSrc {
+    /// Borrowed from the rank store under this name (a staged term
+    /// input).
+    Store(String),
+    /// Output of earlier op `index` of the same term (tensor id `id`,
+    /// kept for error messages).
+    Op { index: usize, id: usize },
+}
+
+/// One operand's pre-reduction spec: indices private to the operand and
+/// absent from the op output are summed away into a recycled scratch
+/// buffer before the engine runs.
+#[derive(Debug, Clone)]
+pub(crate) struct RedSpec {
+    /// Scratch slot (`REDUCE_BASE + 2·op + operand`).
+    pub(crate) slot: usize,
+    /// Surviving index string after the reduction.
+    pub(crate) idx: Vec<char>,
+    /// Dropped mode positions in the operand's original index string.
+    pub(crate) drop: Vec<usize>,
+    /// Local shape of the reduced operand.
+    pub(crate) dims: Vec<usize>,
+}
+
+/// One resolved Seq operand.
+#[derive(Debug, Clone)]
+pub(crate) struct StepOperand {
+    pub(crate) src: OperandSrc,
+    pub(crate) idx: Vec<char>,
+    pub(crate) red: Option<RedSpec>,
+}
+
+/// One resolved Seq op (unary or binary).
+#[derive(Debug, Clone)]
+pub(crate) struct StepOp {
+    pub(crate) a: StepOperand,
+    pub(crate) b: Option<StepOperand>,
+    pub(crate) output_idx: Vec<char>,
+}
+
+/// The local kernel of a [`ComputeStep`].
+#[derive(Debug, Clone)]
+pub(crate) enum StepKind {
+    /// Fused MTTKRP (natural or permuted output order).
+    Mttkrp {
+        x_name: String,
+        f_names: Vec<String>,
+        order: usize,
+        mode: usize,
+        natural_dims: Vec<usize>,
+        perm: Option<Vec<usize>>,
+    },
+    /// Folded binary-op sequence.
+    Seq { ops: Vec<StepOp>, op_dims: Vec<Vec<usize>>, n_ops: usize },
+}
+
+/// One term's local compute, fully resolved against the plan: what
+/// every rank executes (via [`execute_rank`]) between staging and the
+/// reduction.  Built once per term per run by the coordinator; cheap to
+/// clone (names and index strings only).
+#[derive(Debug, Clone)]
+pub struct ComputeStep {
+    pub(crate) term_index: usize,
+    pub(crate) term_name: String,
+    pub(crate) out_name: String,
+    pub(crate) out_dims: Vec<usize>,
+    pub(crate) kernel_cfg: KernelConfig,
+    pub(crate) kind: StepKind,
+}
+
+impl ComputeStep {
+    /// Resolve `term` (index `ti`, staged under `in_names`) into an
+    /// executable step, with the run loop's historical validation order
+    /// and error messages.  `base_cfg` seeds the per-term kernel config.
+    pub(crate) fn build(
+        term: &TermPlan,
+        ti: usize,
+        in_names: &[String],
+        out_name: String,
+        base_cfg: KernelConfig,
+    ) -> Result<ComputeStep> {
+        let kernel_cfg = term.kernel_config(base_cfg);
+        match &term.kernel {
+            LocalKernel::Mttkrp { x_input, mode, factor_inputs } => {
+                if factor_inputs.is_empty() {
+                    return Err(Error::malformed_plan(&term.name, "mttkrp with no factors"));
+                }
+                // Every slot index comes from the plan: range-check them
+                // all so a corrupted plan is an Err, never a panic
+                // (in_names is index-aligned with term.inputs).
+                let x_in = term.inputs.get(*x_input).ok_or_else(|| {
+                    Error::malformed_plan(
+                        &term.name,
+                        format!("mttkrp x slot {x_input} out of range"),
+                    )
+                })?;
+                let x_name = in_names[*x_input].clone();
+                let f_names: Vec<String> = factor_inputs
+                    .iter()
+                    .map(|&s| {
+                        in_names.get(s).cloned().ok_or_else(|| {
+                            Error::malformed_plan(
+                                &term.name,
+                                format!("mttkrp factor slot {s} out of range"),
+                            )
+                        })
+                    })
+                    .collect::<Result<_>>()?;
+                let order = x_in.indices.len();
+                let mode = *mode;
+                // Local kernel output shape: (local mode extent, local R).
+                let x_ldims = x_in.dist.local_dims();
+                let mode_extent = x_ldims.get(mode).copied().ok_or_else(|| {
+                    Error::malformed_plan(
+                        &term.name,
+                        format!("mttkrp mode {mode} out of range for order {order}"),
+                    )
+                })?;
+                let r_local = term.inputs[factor_inputs[0]]
+                    .dist
+                    .local_dims()
+                    .get(1)
+                    .copied()
+                    .ok_or_else(|| {
+                        Error::malformed_plan(&term.name, "mttkrp factor is not a matrix")
+                    })?;
+                let natural_dims = vec![mode_extent, r_local];
+                // Kernel output order is (mode_idx, r); a differing
+                // term output order takes the recycled permute path.
+                let x_idx = &x_in.indices;
+                let r_char = term
+                    .output_indices
+                    .iter()
+                    .copied()
+                    .find(|c| !x_idx.contains(c))
+                    .ok_or_else(|| {
+                        Error::malformed_plan(&term.name, "mttkrp: no rank index")
+                    })?;
+                let natural = vec![x_idx[mode], r_char];
+                let (perm, out_dims) = if term.output_indices == natural {
+                    (None, natural_dims.clone())
+                } else {
+                    let perm: Vec<usize> = term
+                        .output_indices
+                        .iter()
+                        .map(|c| {
+                            natural.iter().position(|d| d == c).ok_or_else(|| {
+                                Error::malformed_plan(
+                                    &term.name,
+                                    format!(
+                                        "mttkrp output index '{c}' not in natural \
+                                         layout {natural:?}"
+                                    ),
+                                )
+                            })
+                        })
+                        .collect::<Result<_>>()?;
+                    let permuted: Vec<usize> =
+                        perm.iter().map(|&p| natural_dims[p]).collect();
+                    (Some(perm), permuted)
+                };
+                Ok(ComputeStep {
+                    term_index: ti,
+                    term_name: term.name.clone(),
+                    out_name,
+                    out_dims,
+                    kernel_cfg,
+                    kind: StepKind::Mttkrp {
+                        x_name,
+                        f_names,
+                        order,
+                        mode,
+                        natural_dims,
+                        perm,
+                    },
+                })
+            }
+            LocalKernel::Seq => {
+                // Local output extents per index char: inputs are staged
+                // at their distribution's padded local dims, so every
+                // op's local output shape is fixed by the chars it keeps
+                // — known before any kernel runs, which is what lets the
+                // destinations be recycled.
+                let mut local_ext: BTreeMap<char, usize> = BTreeMap::new();
+                for tin in &term.inputs {
+                    for (c, e) in tin.indices.iter().zip(tin.dist.local_dims()) {
+                        local_ext.insert(*c, e);
+                    }
+                }
+                let op_dims: Vec<Vec<usize>> = term
+                    .ops
+                    .iter()
+                    .map(|op| {
+                        let d: Vec<usize> = op
+                            .output
+                            .iter()
+                            .map(|c| {
+                                local_ext.get(c).copied().ok_or_else(|| {
+                                    Error::malformed_plan(
+                                        &term.name,
+                                        format!("seq: unknown index '{c}'"),
+                                    )
+                                })
+                            })
+                            .collect::<Result<_>>()?;
+                        Ok(if d.is_empty() { vec![1] } else { d })
+                    })
+                    .collect::<Result<_>>()?;
+                let n_ops = term.ops.len();
+                if n_ops == 0 {
+                    return Err(Error::malformed_plan(&term.name, "empty term"));
+                }
+                if term.ops[n_ops - 1].output_id != term.output_id {
+                    return Err(Error::malformed_plan(
+                        &term.name,
+                        "last op does not produce the term output",
+                    ));
+                }
+                // Tensor-id table: term inputs are *borrowed* from the
+                // rank store (never deep-copied); intermediates live in
+                // recycled per-rank scratch.  The final op writes the
+                // store-recycled destination.
+                #[derive(Clone, Copy)]
+                enum SeqSrc {
+                    Input(usize),
+                    Op(usize),
+                }
+                let mut src_of: BTreeMap<usize, SeqSrc> = BTreeMap::new();
+                for (slot, tin) in term.inputs.iter().enumerate() {
+                    src_of.insert(tin.id, SeqSrc::Input(slot));
+                }
+                for (j, op) in term.ops.iter().enumerate() {
+                    src_of.insert(op.output_id, SeqSrc::Op(j));
+                }
+                let idx_of = |id: usize| -> Result<&[char]> {
+                    match src_of.get(&id) {
+                        Some(SeqSrc::Input(slot)) => {
+                            Ok(term.inputs[*slot].indices.as_slice())
+                        }
+                        Some(SeqSrc::Op(i)) => Ok(term.ops[*i].output.as_slice()),
+                        None => Err(Error::malformed_plan(
+                            &term.name,
+                            format!("seq: operand t{id} never produced"),
+                        )),
+                    }
+                };
+                // Pre-reduction table: operands carrying indices private
+                // to themselves and absent from the op output are summed
+                // away *before* the engine sees them, through recycled
+                // scratch buffers ([`contract::reduce_modes_into`]) — so
+                // `einsum2`'s internal pre-reduction (which allocates)
+                // stays off the hot path.
+                let mut red_specs: Vec<Option<RedSpec>> =
+                    Vec::with_capacity(term.ops.len() * 2);
+                for (j, op) in term.ops.iter().enumerate() {
+                    for q in 0..2 {
+                        if q >= op.input_ids.len() {
+                            red_specs.push(None);
+                            continue;
+                        }
+                        let idx = idx_of(op.input_ids[q])?;
+                        let other: Option<&[char]> = if op.input_ids.len() == 2 {
+                            Some(idx_of(op.input_ids[1 - q])?)
+                        } else {
+                            None
+                        };
+                        let drop: Vec<usize> = idx
+                            .iter()
+                            .enumerate()
+                            .filter(|&(_, c)| {
+                                if op.output.contains(c) {
+                                    return false;
+                                }
+                                match other {
+                                    Some(o) => !o.contains(c),
+                                    None => true,
+                                }
+                            })
+                            .map(|(d, _)| d)
+                            .collect();
+                        if drop.is_empty() {
+                            red_specs.push(None);
+                            continue;
+                        }
+                        let mut kept: Vec<char> = idx
+                            .iter()
+                            .enumerate()
+                            .filter(|(d, _)| !drop.contains(d))
+                            .map(|(_, &c)| c)
+                            .collect();
+                        let dims: Vec<usize> = if kept.is_empty() {
+                            if op.input_ids.len() == 2 {
+                                // Fully-summed binary operand: hand
+                                // einsum2 the synthetic already-reduced
+                                // singleton it would have built itself
+                                // (unary ops take the empty-index copy
+                                // path instead).
+                                kept.push('\u{1}');
+                            }
+                            vec![1]
+                        } else {
+                            kept.iter()
+                                .map(|c| {
+                                    local_ext.get(c).copied().ok_or_else(|| {
+                                        Error::malformed_plan(
+                                            &term.name,
+                                            format!("seq: unknown index '{c}'"),
+                                        )
+                                    })
+                                })
+                                .collect::<Result<_>>()?
+                        };
+                        red_specs.push(Some(RedSpec {
+                            slot: REDUCE_BASE + 2 * j + q,
+                            idx: kept,
+                            drop,
+                            dims,
+                        }));
+                    }
+                }
+                let mut red_specs = red_specs.into_iter();
+                let mut ops: Vec<StepOp> = Vec::with_capacity(n_ops);
+                for op in term.ops.iter() {
+                    let red_a = red_specs.next().flatten();
+                    let red_b = red_specs.next().flatten();
+                    if op.input_ids.is_empty() {
+                        return Err(Error::malformed_plan(
+                            &term.name,
+                            "0-ary local op unsupported",
+                        ));
+                    }
+                    if op.input_ids.len() > 2 {
+                        return Err(Error::malformed_plan(
+                            &term.name,
+                            format!("{}-ary local op unsupported", op.input_ids.len()),
+                        ));
+                    }
+                    let operand = |id: usize, red: Option<RedSpec>| -> Result<StepOperand> {
+                        let (src, idx) = match src_of.get(&id) {
+                            Some(SeqSrc::Input(slot)) => (
+                                OperandSrc::Store(in_names[*slot].clone()),
+                                term.inputs[*slot].indices.clone(),
+                            ),
+                            Some(SeqSrc::Op(i)) => (
+                                OperandSrc::Op { index: *i, id },
+                                term.ops[*i].output.clone(),
+                            ),
+                            None => {
+                                return Err(Error::malformed_plan(
+                                    &term.name,
+                                    format!("seq: operand t{id} never produced"),
+                                ))
+                            }
+                        };
+                        Ok(StepOperand { src, idx, red })
+                    };
+                    let a = operand(op.input_ids[0], red_a)?;
+                    let b = match op.input_ids.len() {
+                        2 => Some(operand(op.input_ids[1], red_b)?),
+                        _ => None,
+                    };
+                    ops.push(StepOp { a, b, output_idx: op.output.clone() });
+                }
+                let out_dims = op_dims[n_ops - 1].clone();
+                Ok(ComputeStep {
+                    term_index: ti,
+                    term_name: term.name.clone(),
+                    out_name,
+                    out_dims,
+                    kernel_cfg,
+                    kind: StepKind::Seq { ops, op_dims, n_ops },
+                })
+            }
+        }
+    }
+}
+
+/// Execute `step` for one rank: read inputs from `store`, route
+/// intermediates through the rank's recycled `scratch`, write the
+/// result through `dest` (shape [`ComputeStep::out_dims`], contents
+/// unspecified on entry).  Shared by every backend — this function *is*
+/// the cross-backend bitwise-identity guarantee.
+pub(crate) fn execute_rank(
+    engine: &KernelEngine,
+    store: &dyn RankStore,
+    scratch: &mut RankScratch,
+    step: &ComputeStep,
+    dest: &mut Tensor,
+) -> Result<()> {
+    match &step.kind {
+        StepKind::Mttkrp { x_name, f_names, order, mode, natural_dims, perm } => {
+            match perm {
+                None => mttkrp_rank(
+                    engine, store, &step.term_name, x_name, f_names, *order, *mode, dest,
+                ),
+                Some(p) => {
+                    // Natural-layout kernel output lands in a recycled
+                    // scratch buffer, then permutes into the recycled
+                    // destination (no allocation on either side).  The
+                    // scratch goes back before error propagation so a
+                    // recovered run stays allocation-free.
+                    let key = (step.term_index, PERMUTE_SLOT);
+                    let mut nat = scratch.take(key, natural_dims);
+                    let res = mttkrp_rank(
+                        engine, store, &step.term_name, x_name, f_names, *order, *mode,
+                        &mut nat,
+                    )
+                    .and_then(|()| nat.permute_into(p, dest));
+                    scratch.put(key, nat);
+                    res
+                }
+            }
+        }
+        StepKind::Seq { ops, op_dims, n_ops } => {
+            let ti = step.term_index;
+            let mut opbufs: Vec<Tensor> =
+                (0..n_ops - 1).map(|j| scratch.take((ti, j), &op_dims[j])).collect();
+            let mut reds: Vec<Option<Tensor>> = Vec::with_capacity(2 * ops.len());
+            for op in ops.iter() {
+                reds.push(
+                    op.a.red.as_ref().map(|s| scratch.take((ti, s.slot), &s.dims)),
+                );
+                reds.push(
+                    op.b
+                        .as_ref()
+                        .and_then(|b| b.red.as_ref())
+                        .map(|s| scratch.take((ti, s.slot), &s.dims)),
+                );
+            }
+            // Bound (not `?`d) so the recycled buffers return to the
+            // scratch table even when a kernel errors mid-step.
+            let res = run_seq(engine, store, ops, *n_ops, &mut opbufs, &mut reds, dest);
+            for (j, t) in opbufs.into_iter().enumerate() {
+                scratch.put((ti, j), t);
+            }
+            for (q, t) in reds.into_iter().enumerate() {
+                if let Some(t) = t {
+                    scratch.put((ti, REDUCE_BASE + q), t);
+                }
+            }
+            res
+        }
+    }
+}
+
+/// The Seq-kernel op loop for one rank (split out of [`execute_rank`]
+/// so the scratch put-backs wrap it unconditionally).
+fn run_seq(
+    engine: &KernelEngine,
+    store: &dyn RankStore,
+    ops: &[StepOp],
+    n_ops: usize,
+    opbufs: &mut [Tensor],
+    reds: &mut [Option<Tensor>],
+    dest: &mut Tensor,
+) -> Result<()> {
+    for (j, op) in ops.iter().enumerate() {
+        // Ops run in order: everything before `j` is readable, `j`'s
+        // buffer (or the final destination) is writable.
+        let (done, rest) = opbufs.split_at_mut(j.min(n_ops - 1));
+        let dst: &mut Tensor = if j == n_ops - 1 { &mut *dest } else { &mut rest[0] };
+        let (ra, rai) = resolve_operand(&op.a, store, done, j)?;
+        if let Some(spec) = &op.a.red {
+            let buf = reds[2 * j].as_mut().ok_or_else(|| {
+                Error::plan(format!("seq: missing pre-reduction buffer at op {j}"))
+            })?;
+            contract::reduce_modes_into(ra, &spec.drop, buf)?;
+        }
+        match &op.b {
+            Some(bop) => {
+                let (rb, rbi) = resolve_operand(bop, store, done, j)?;
+                if let Some(spec) = &bop.red {
+                    let buf = reds[2 * j + 1].as_mut().ok_or_else(|| {
+                        Error::plan(format!("seq: missing pre-reduction buffer at op {j}"))
+                    })?;
+                    contract::reduce_modes_into(rb, &spec.drop, buf)?;
+                }
+                let (a, ai) = reduced_view(&op.a, ra, rai, &reds[2 * j]);
+                let (b, bi) = reduced_view(bop, rb, rbi, &reds[2 * j + 1]);
+                engine.einsum2_into(a, ai, b, bi, &op.output_idx, dst)?;
+            }
+            None => {
+                let (a, ai) = reduced_view(&op.a, ra, rai, &reds[2 * j]);
+                unary_local_into(a, ai, &op.output_idx, dst)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Resolve a Seq operand to a borrowed tensor + index string.
+fn resolve_operand<'a>(
+    opnd: &'a StepOperand,
+    store: &'a dyn RankStore,
+    done: &'a [Tensor],
+    j: usize,
+) -> Result<(&'a Tensor, &'a [char])> {
+    match &opnd.src {
+        OperandSrc::Store(name) => Ok((store.tensor(name)?, opnd.idx.as_slice())),
+        OperandSrc::Op { index, id } => match done.get(*index) {
+            Some(t) => Ok((t, opnd.idx.as_slice())),
+            None => Err(Error::plan(format!(
+                "seq: operand t{id} not available at op {j}"
+            ))),
+        },
+    }
+}
+
+/// The operand the engine actually sees: the pre-reduced scratch buffer
+/// when a reduction spec fired, the raw operand otherwise.
+fn reduced_view<'a>(
+    opnd: &'a StepOperand,
+    raw: &'a Tensor,
+    raw_idx: &'a [char],
+    red: &'a Option<Tensor>,
+) -> (&'a Tensor, &'a [char]) {
+    match (&opnd.red, red) {
+        (Some(spec), Some(buf)) => (buf, spec.idx.as_slice()),
+        _ => (raw, raw_idx),
+    }
+}
+
+/// One rank's fused-MTTKRP local kernel through the recycled-output
+/// engine path (`slots` layout: `order` entries, the `mode` slot is a
+/// placeholder the kernel ignores).
+#[allow(clippy::too_many_arguments)]
+fn mttkrp_rank(
+    engine: &KernelEngine,
+    store: &dyn RankStore,
+    term_name: &str,
+    x_name: &str,
+    f_names: &[String],
+    order: usize,
+    mode: usize,
+    dest: &mut Tensor,
+) -> Result<()> {
+    let x = store.tensor(x_name)?;
+    let fs: Vec<&Tensor> =
+        f_names.iter().map(|n| store.tensor(n)).collect::<Result<_>>()?;
+    let mut slots: Vec<&Tensor> = Vec::with_capacity(order);
+    let mut fi = fs.iter();
+    for mm in 0..order {
+        if mm == mode {
+            slots.push(x); // placeholder, ignored
+        } else {
+            slots.push(fi.next().ok_or_else(|| {
+                Error::malformed_plan(
+                    term_name,
+                    format!(
+                        "mttkrp factor count mismatch: {} factors for order {order}",
+                        f_names.len()
+                    ),
+                )
+            })?);
+        }
+    }
+    engine.mttkrp_into(x, &slots, mode, dest)
+}
+
+/// Unary local op writing through a recycled destination: the final
+/// permutation (the common case — pure mode reorder) lands directly in
+/// `dest` with zero allocations.  Summed-away indices are normally gone
+/// by the time this runs (the Seq loop pre-reduces them through
+/// recycled scratch); the allocating [`contract::reduce_mode`] fallback
+/// remains for direct callers.
+pub(crate) fn unary_local_into(
+    a: &Tensor,
+    a_idx: &[char],
+    out_idx: &[char],
+    dest: &mut Tensor,
+) -> Result<()> {
+    let mut owned: Option<Tensor> = None;
+    let mut idx = a_idx.to_vec();
+    // reduce dropped indices
+    while let Some(d) = idx.iter().position(|c| !out_idx.contains(c)) {
+        let cur = owned.as_ref().unwrap_or(a);
+        owned = Some(contract::reduce_mode(cur, d));
+        idx.remove(d);
+    }
+    let t = owned.as_ref().unwrap_or(a);
+    if idx == out_idx || idx.is_empty() {
+        return dest.copy_from(t);
+    }
+    let perm: Vec<usize> = out_idx
+        .iter()
+        .map(|c| {
+            idx.iter()
+                .position(|d| d == c)
+                .ok_or_else(|| Error::shape(format!("unary: index '{c}' missing")))
+        })
+        .collect::<Result<_>>()?;
+    t.permute_into(&perm, dest)
+}

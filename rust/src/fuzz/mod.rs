@@ -36,6 +36,7 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 
 use crate::api::Session;
 use crate::error::Error;
+use crate::exec::ExecBackend;
 use crate::tensor::{strides_of, Tensor};
 
 /// SplitMix64 — the same avalanche mixer [`crate::fault::FaultPlan`] and
@@ -373,8 +374,17 @@ pub const DEFAULT_RANKS: &[usize] = &[1, 4, 8];
 /// Run one case through compile + `run` + `run_into` (dirty recycled
 /// destination) at every rank count in `ranks` and compare against the
 /// dense oracle.  Panics anywhere in the pipeline are caught and
-/// classified as [`Outcome::Bug`].
+/// classified as [`Outcome::Bug`].  The execution backend comes from
+/// `DEINSUM_BACKEND` ([`ExecBackend::from_env`]); pin one explicitly
+/// with [`classify_on`].
 pub fn classify(case: &FuzzCase, ranks: &[usize]) -> Outcome {
+    classify_on(case, ranks, ExecBackend::from_env())
+}
+
+/// [`classify`] pinned to an explicit execution backend — the CI matrix
+/// fuzzes the message-passing backend with the same corpus this way,
+/// and the oracle comparison doubles as a cross-backend identity check.
+pub fn classify_on(case: &FuzzCase, ranks: &[usize], backend: ExecBackend) -> Outcome {
     let inputs = case.inputs();
     let want = oracle(&case.expr, &case.shapes, &inputs);
     let mut rejections: Vec<Rejection> = Vec::new();
@@ -384,7 +394,7 @@ pub fn classify(case: &FuzzCase, ranks: &[usize]) -> Outcome {
         let shapes = case.shapes.clone();
         let ins = inputs.clone();
         let ran = catch_unwind(AssertUnwindSafe(move || -> crate::Result<(Tensor, Tensor)> {
-            let session = Session::builder().ranks(p).build()?;
+            let session = Session::builder().ranks(p).backend(backend).build()?;
             let mut program = session.compile(&expr, &shapes)?;
             let report = program.run(&ins)?;
             // Dirty recycled destination: run_into must fully overwrite.
@@ -619,17 +629,31 @@ impl CampaignReport {
 
 /// Run a fixed-seed campaign of `cases` generated cases at the given
 /// rank counts.  Failing cases are shrunk and reported; the campaign
-/// always runs to completion (panics are contained per case).
+/// always runs to completion (panics are contained per case).  Backend
+/// from `DEINSUM_BACKEND`; pin one with [`campaign_on`].
 pub fn campaign(seed: u64, cases: u64, ranks: &[usize]) -> CampaignReport {
+    campaign_on(seed, cases, ranks, ExecBackend::from_env())
+}
+
+/// [`campaign`] pinned to an explicit execution backend.  Shrinking
+/// re-classifies on the same backend, so a backend-specific bug shrinks
+/// against the backend that exhibits it.
+pub fn campaign_on(
+    seed: u64,
+    cases: u64,
+    ranks: &[usize],
+    backend: ExecBackend,
+) -> CampaignReport {
     let mut report = CampaignReport { cases, ..Default::default() };
     for k in 0..cases {
         let case = generate(seed, k);
-        match classify(&case, ranks) {
+        match classify_on(&case, ranks, backend) {
             Outcome::Match(_) => report.matches += 1,
             Outcome::Reject(_) => report.rejects += 1,
             Outcome::Bug(detail) => {
-                let shrunk =
-                    shrink(&case, &mut |c: &FuzzCase| classify(c, ranks).is_bug());
+                let shrunk = shrink(&case, &mut |c: &FuzzCase| {
+                    classify_on(c, ranks, backend).is_bug()
+                });
                 report.bugs.push(BugReport { case, shrunk, detail });
             }
         }
@@ -659,6 +683,22 @@ mod tests {
         }
         assert_ne!(generate(7, 0), generate(8, 0));
         assert_ne!(generate(7, 0), generate(7, 1));
+    }
+
+    #[test]
+    fn classify_on_mp_agrees_with_sim_signature() {
+        // A small generated slice of the corpus classified on both
+        // backends: no bugs on either, and identical signatures —
+        // accept/reject decisions and rejection messages must not
+        // depend on the execution backend.
+        for k in 0..8 {
+            let case = generate(20260808, k);
+            let sim = classify_on(&case, &[1, 4], ExecBackend::Sim);
+            let mp = classify_on(&case, &[1, 4], ExecBackend::Mp);
+            assert!(!sim.is_bug(), "sim bug on case {k}: {}", sim.signature());
+            assert!(!mp.is_bug(), "mp bug on case {k}: {}", mp.signature());
+            assert_eq!(sim.signature(), mp.signature(), "case {k}");
+        }
     }
 
     #[test]

@@ -130,6 +130,47 @@
 //! and the plan cache as `program_compile_cached` vs `program_compile_cold`
 //! in `BENCH_hotpath.json`.
 //!
+//! ## Distributed execution backends
+//!
+//! The run loop is generic over the [`Executor`] trait ([`exec`]) — the
+//! full plan-execution surface (staging, redistribution, local compute,
+//! allreduce, gather, recycling counters).  Two backends implement it:
+//!
+//! - **`sim`** ([`ExecBackend::Sim`], the default): the in-process
+//!   simulated machine — sequential ranks over a shared store, measured
+//!   compute plus α–β-modeled communication, zero-allocation steady
+//!   state (counter-asserted and CI-gated).
+//! - **`mp`** ([`ExecBackend::Mp`]): a message-passing backend — one OS
+//!   thread per rank, each owning only its local store slice, with
+//!   every redistribution and allreduce payload moving rank-to-rank
+//!   over channels.  The in-process rehearsal of a multi-node MPI run:
+//!   protocol violations (dead rank, timed-out collective) surface as
+//!   typed [`Error::Protocol`] values, never panics, and a poisoned
+//!   executor is rebuilt on the next run.
+//!
+//! Select per session with [`SessionBuilder::backend`], or process-wide
+//! with `DEINSUM_BACKEND=mp` (how CI runs the whole suite on the mp
+//! backend).  **Determinism contract**: block cuts, accumulation
+//! orders, and per-term kernel configs are fixed by the plan — never by
+//! the backend — so outputs are bitwise identical across backends:
+//!
+//! ```
+//! use deinsum::{ExecBackend, Session, Tensor};
+//! # fn main() -> deinsum::Result<()> {
+//! let shapes = vec![vec![12, 10, 8], vec![10, 4], vec![8, 4]];
+//! let inputs: Vec<Tensor> =
+//!     shapes.iter().enumerate().map(|(i, s)| Tensor::random(s, i as u64)).collect();
+//! let mut outputs = Vec::new();
+//! for backend in [ExecBackend::Sim, ExecBackend::Mp] {
+//!     let session = Session::builder().ranks(4).backend(backend).build()?;
+//!     let mut program = session.compile("ijk,ja,ka->ia", &shapes)?;
+//!     outputs.push(program.run(&inputs)?.output);
+//! }
+//! assert!(outputs[0].allclose(&outputs[1], 0.0, 0.0)); // bitwise identical
+//! # Ok(())
+//! # }
+//! ```
+//!
 //! ## Serving
 //!
 //! Since 0.6.0 the handles are thread-safe (`Session: Send + Sync`,
@@ -275,6 +316,7 @@ pub mod coordinator;
 pub mod dist;
 pub mod einsum;
 pub mod error;
+pub mod exec;
 pub mod fault;
 pub mod fuzz;
 pub mod grid;
@@ -290,6 +332,7 @@ pub mod tensor;
 pub use api::{PlanCacheStats, Program, RunStats, Session, SessionBuilder};
 pub use coordinator::{RunMetrics, RunReport};
 pub use error::{Error, Result};
+pub use exec::{ExecBackend, Executor};
 pub use fault::{FaultKind, FaultPlan};
 pub use serve::{ServeReply, ServeRequest, ServeStats, Server, ServerBuilder, Ticket};
 pub use tensor::kernel::{KernelConfig, ScratchPool, ScratchStats};

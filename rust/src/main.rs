@@ -2,8 +2,10 @@
 //!
 //! Subcommands:
 //!   plan  <einsum> --shapes 64x64x64,64x24,64x24 [--ranks P]   print the schedule (§II-E)
-//!   run   <einsum> --shapes ...                 [--ranks P]    execute on the simulated machine
-//!   bench [--ranks P] [--size-factor F] [--filter NAME]        Table IV suite, Fig. 5 rows
+//!   run   <einsum> --shapes ... [--ranks P] [--backend sim|mp] execute on a backend (default:
+//!                                                              DEINSUM_BACKEND, else sim)
+//!   bench [--ranks P] [--size-factor F] [--filter NAME] [--backend sim|mp]
+//!                                                              Table IV suite, Fig. 5 rows
 //!   bounds [--s S]                                             §IV-E I/O lower bounds
 //!   fuzz  [--seed N] [--cases N] [--ranks 1,4,8] [--corpus F]  differential campaign vs the
 //!                                                              dense oracle (src/fuzz);
@@ -21,7 +23,7 @@ use deinsum::bench_support::{self, header, row};
 use deinsum::fuzz;
 use deinsum::soap::{self, Statement};
 use deinsum::tensor::Tensor;
-use deinsum::Session;
+use deinsum::{ExecBackend, Session};
 
 fn parse_shapes(s: &str) -> Result<Vec<Vec<usize>>, String> {
     s.split(',')
@@ -64,12 +66,24 @@ fn ranks_flag(args: &Args) -> usize {
     args.flags.get("ranks").map(|s| s.parse().unwrap_or(8)).unwrap_or(8)
 }
 
-fn session_from_flags(args: &Args) -> Session {
+fn backend_flag(args: &Args) -> Result<Option<ExecBackend>, String> {
+    match args.flags.get("backend").map(String::as_str) {
+        None => Ok(None),
+        Some("sim") => Ok(Some(ExecBackend::Sim)),
+        Some("mp") => Ok(Some(ExecBackend::Mp)),
+        Some(other) => Err(format!("bad --backend '{other}' (expected sim|mp)")),
+    }
+}
+
+fn session_from_flags(args: &Args) -> Result<Session, String> {
     let mut b = Session::builder().ranks(ranks_flag(args));
     if let Some(dir) = args.flags.get("artifacts") {
         b = b.artifacts(dir);
     }
-    b.build_or_native()
+    if let Some(backend) = backend_flag(args)? {
+        b = b.backend(backend);
+    }
+    Ok(b.build_or_native())
 }
 
 fn main() -> ExitCode {
@@ -111,7 +125,7 @@ fn cmd_plan(args: &Args) -> Result<(), String> {
 fn cmd_run(args: &Args) -> Result<(), String> {
     let expr = args.positional.first().ok_or("missing einsum string")?;
     let shapes = parse_shapes(args.flags.get("shapes").ok_or("--shapes required")?)?;
-    let session = session_from_flags(args);
+    let session = session_from_flags(args)?;
     let mut program = session.compile(expr, &shapes).map_err(|e| e.to_string())?;
     let inputs: Vec<Tensor> = shapes
         .iter()
@@ -138,7 +152,7 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
     let sf: usize =
         args.flags.get("size-factor").map(|s| s.parse().unwrap_or(16)).unwrap_or(16);
     let filter = args.flags.get("filter").cloned().unwrap_or_default();
-    let session = session_from_flags(args);
+    let session = session_from_flags(args)?;
     println!("{}", header());
     let mut points = Vec::new();
     for def in bench_support::suite(sf) {

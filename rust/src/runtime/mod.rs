@@ -423,7 +423,16 @@ impl KernelEngine {
     /// thread-local: it only affects ops this thread dispatches, so
     /// concurrent programs on other threads keep their own blocking.
     pub fn configure_for_term(&self, term: &TermPlan) {
-        let cfg = term.kernel_config(self.base_config);
+        self.configure_override(term.kernel_config(self.base_config));
+    }
+
+    /// Install `cfg` as this thread's per-term override for this engine.
+    /// Backend rank threads use this to replay the coordinator's
+    /// [`configure_for_term`](Self::configure_for_term) choice (carried
+    /// in a [`crate::exec::ComputeStep`]) on their own thread-local
+    /// config slot, so kernels dispatch with identical blocking on every
+    /// backend.
+    pub(crate) fn configure_override(&self, cfg: KernelConfig) {
         TERM_CONFIG.with(|c| {
             let mut map = c.borrow_mut();
             match map.iter_mut().find(|(id, _)| *id == self.engine_id) {

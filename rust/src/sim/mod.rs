@@ -246,31 +246,15 @@ impl Machine {
         self.step_compute[rank] += seconds;
     }
 
-    /// Run `f` as rank-local compute on every rank, writing the results
-    /// under `out_name` and charging measured wall-clock per rank.
-    pub fn compute_step<F>(&mut self, out_name: &str, mut f: F) -> Result<()>
-    where
-        F: FnMut(usize, &Machine) -> Result<Tensor>,
-    {
-        let mut outs = Vec::with_capacity(self.ranks);
-        for r in 0..self.ranks {
-            let t0 = std::time::Instant::now();
-            let out = f(r, self)?;
-            let dt = t0.elapsed().as_secs_f64();
-            outs.push(out);
-            self.step_compute[r] += dt;
-        }
-        self.store.insert(out_name.to_string(), outs);
-        Ok(())
-    }
-
-    /// [`compute_step`](Self::compute_step) with **recycled outputs**:
-    /// each rank's destination tensor (shape `dims`) is recycled from the
-    /// persistent store under `out_name` when the previous run left a
-    /// matching buffer set there ([`StoreStats::out_allocs`] /
-    /// [`StoreStats::out_reuses`]), and `f` writes the rank's result
-    /// through it.  Destination contents are unspecified on entry — the
-    /// `*_into` kernels fully overwrite (or zero-initialize) them.
+    /// Run `f` as rank-local compute on every rank with **recycled
+    /// outputs**: each rank's destination tensor (shape `dims`) is
+    /// recycled from the persistent store under `out_name` when the
+    /// previous run left a matching buffer set there
+    /// ([`StoreStats::out_allocs`] / [`StoreStats::out_reuses`]), and
+    /// `f` writes the rank's result through it, charged at measured
+    /// wall-clock per rank.  Destination contents are unspecified on
+    /// entry — the `*_into` kernels fully overwrite (or zero-initialize)
+    /// them.
     pub fn compute_step_into<F>(&mut self, out_name: &str, dims: &[usize], mut f: F) -> Result<()>
     where
         F: FnMut(usize, &Machine, &mut Tensor) -> Result<()>,
@@ -317,23 +301,29 @@ impl Machine {
             if g.len() <= 1 {
                 continue;
             }
-            let len = bufs[g[0]].len();
+            let root = g[0];
+            let len = bufs[root].len();
+            // Dims (not just lengths) must agree: equal-element-count
+            // blocks of different shapes are a planner bug and must
+            // surface as a typed error naming the tensor and ranks, not
+            // an elementwise-add panic.
             for &r in &g[1..] {
-                if bufs[r].len() != len {
+                if bufs[r].dims() != bufs[root].dims() {
                     return Err(Error::shape(format!(
-                        "allreduce {name}: rank {r} buffer len {} != {len}",
-                        bufs[r].len()
+                        "allreduce {name}: rank {r} block {:?} != rank {root} block {:?}",
+                        bufs[r].dims(),
+                        bufs[root].dims()
                     )));
                 }
             }
             // Reduce into the group root, then broadcast — all in place.
             for &r in &g[1..] {
-                let (root, src) = two_ranks_mut(bufs, g[0], r);
-                root.add_assign(src).unwrap();
+                let (acc, src) = two_ranks_mut(bufs, root, r);
+                acc.add_assign(src)?;
             }
             for &r in &g[1..] {
-                let (dst, root) = two_ranks_mut(bufs, r, g[0]);
-                dst.data_mut().copy_from_slice(root.data());
+                let (dst, acc) = two_ranks_mut(bufs, r, root);
+                dst.data_mut().copy_from_slice(acc.data());
             }
             let bytes = (len * ELEM_BYTES) as f64;
             let t = self.net.allreduce_time(g.len(), bytes);
@@ -461,11 +451,40 @@ mod tests {
     #[test]
     fn compute_step_records_max_time() {
         let mut m = machine(4);
-        m.compute_step("out", |r, _| Ok(Tensor::from_vec(&[1], vec![r as f32]).unwrap()))
-            .unwrap();
+        m.compute_step_into("out", &[1], |r, _, dest| {
+            dest.data_mut()[0] = r as f32;
+            Ok(())
+        })
+        .unwrap();
         m.end_step();
         assert!(m.time.compute > 0.0);
         assert_eq!(m.get("out", 3).unwrap().data()[0], 3.0);
+    }
+
+    #[test]
+    fn allreduce_equal_len_different_dims_is_typed_shape_error() {
+        // Regression: equal-element-count blocks of different shapes
+        // used to reach `add_assign(..).unwrap()` and panic; they must
+        // surface as a typed shape error naming the tensor and ranks.
+        let mut m = machine(2);
+        m.put(
+            "t",
+            vec![
+                Tensor::from_vec(&[2, 3], vec![1.0; 6]).unwrap(),
+                Tensor::from_vec(&[3, 2], vec![2.0; 6]).unwrap(),
+            ],
+        )
+        .unwrap();
+        match m.allreduce_sum("t", &[vec![0, 1]]) {
+            Err(Error::Shape(msg)) => {
+                assert!(msg.contains("allreduce t"), "{msg}");
+                assert!(msg.contains("rank 1") && msg.contains("rank 0"), "{msg}");
+            }
+            other => panic!("want Err(Shape), got {other:?}"),
+        }
+        // Buffers are untouched: the check runs before any accumulation.
+        assert_eq!(m.get("t", 0).unwrap().data()[0], 1.0);
+        assert_eq!(m.get("t", 1).unwrap().data()[0], 2.0);
     }
 
     #[test]
