@@ -568,6 +568,56 @@ fn main() {
             None,
             None,
         );
+
+        // Same two probes across the process boundary: 8 spawned
+        // `deinsum rank-worker` children per session (`cargo bench`
+        // builds the bin target next to the bench executable), every
+        // instruction and payload length-prefix-framed over pipes —
+        // tracks the wire format's overhead over mp's channels.
+        let (proc_med, proc_allocs) = time_backend(ExecBackend::Proc);
+        println!(
+            "backend {shape}: sim {} | proc {} ({:.2}x) | coordinator tensor allocs/run {proc_allocs}",
+            common::fmt_s(sim_med),
+            common::fmt_s(proc_med),
+            sim_med / proc_med,
+        );
+        record_full(
+            &mut records,
+            "machine_backend_proc",
+            &shape,
+            proc_med,
+            None,
+            Some(sim_med / proc_med),
+            Some(proc_allocs),
+        );
+
+        let session = Session::builder()
+            .ranks(8)
+            .planner(pcfg)
+            .kernel_config(cfg)
+            .backend(ExecBackend::Proc)
+            .build()
+            .unwrap();
+        let mut prog = session.compile(cexpr, &cshapes).unwrap();
+        let mut out = Tensor::zeros(&prog.output_dims());
+        for _ in 0..2 {
+            prog.run_into(&cinputs, &mut out).unwrap();
+        }
+        let (med, _, _) = common::time_median(reps, || {
+            prog.run_into(&cinputs, &mut out).unwrap();
+        });
+        println!(
+            "redistribute proc {cexpr} {m}^2 P=8 ({moves} moves): {} per run",
+            common::fmt_s(med)
+        );
+        record(
+            &mut records,
+            "redistribute_proc",
+            &format!("{m}^2 chain P=8"),
+            med,
+            None,
+            None,
+        );
     }
 
     // --- serving throughput: 1 worker vs 8 workers -----------------------------

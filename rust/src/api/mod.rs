@@ -24,11 +24,17 @@
 //! ## Execution backends
 //!
 //! Plans execute through a pluggable [`crate::exec::Executor`]: the
-//! in-process simulated machine ([`ExecBackend::Sim`], the default) or
-//! the message-passing rank-thread backend ([`ExecBackend::Mp`]).
-//! Select per session with [`SessionBuilder::backend`], or process-wide
-//! with `DEINSUM_BACKEND=mp`.  Outputs are bitwise identical across
-//! backends for a fixed plan and inputs.
+//! in-process simulated machine ([`ExecBackend::Sim`], the default),
+//! the message-passing rank-thread backend ([`ExecBackend::Mp`]), or
+//! the out-of-process backend ([`ExecBackend::Proc`]) driving
+//! `deinsum rank-worker` child processes — or remote TCP peers via
+//! [`SessionBuilder::rank_addrs`] / `DEINSUM_RANK_ADDR` — over a
+//! versioned wire format.  Select per session with
+//! [`SessionBuilder::backend`], or process-wide with
+//! `DEINSUM_BACKEND=mp|proc`.  Outputs are bitwise identical across
+//! backends for a fixed plan and inputs; distributed-transport
+//! deadlines are tuned with [`SessionBuilder::peer_timeout`] /
+//! `DEINSUM_PEER_TIMEOUT_MS`.
 //!
 //! ## Concurrency (0.6.0: `Rc` → `Arc`)
 //!
@@ -80,12 +86,13 @@
 
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use crate::baseline::plan_baseline;
 use crate::coordinator::{run_plan, ExecState, LocalScratchStats, RunMetrics, RunReport};
 use crate::einsum::EinsumSpec;
 use crate::error::Result;
-use crate::exec::ExecBackend;
+use crate::exec::{ExecBackend, ExecTuning};
 use crate::planner::{plan as plan_schedule, Plan, PlannerConfig};
 use crate::runtime::KernelEngine;
 use crate::sim::{NetworkModel, StoreStats};
@@ -191,6 +198,8 @@ pub struct SessionBuilder {
     plan_cache_capacity: usize,
     fault_plan: Option<crate::fault::FaultPlan>,
     backend: Option<ExecBackend>,
+    peer_timeout: Option<Duration>,
+    rank_addrs: Option<Vec<String>>,
 }
 
 impl Default for SessionBuilder {
@@ -205,6 +214,8 @@ impl Default for SessionBuilder {
             plan_cache_capacity: 32,
             fault_plan: None,
             backend: None,
+            peer_timeout: None,
+            rank_addrs: None,
         }
     }
 }
@@ -273,11 +284,33 @@ impl SessionBuilder {
     }
 
     /// Pin the execution backend for every program of this session
-    /// ([`ExecBackend::Sim`] or [`ExecBackend::Mp`]).  Unset, the
-    /// process-wide `DEINSUM_BACKEND` environment variable decides
+    /// ([`ExecBackend::Sim`], [`ExecBackend::Mp`], or
+    /// [`ExecBackend::Proc`]).  Unset, the process-wide
+    /// `DEINSUM_BACKEND` environment variable decides
     /// ([`ExecBackend::from_env`], defaulting to the simulator).
     pub fn backend(mut self, backend: ExecBackend) -> Self {
         self.backend = Some(backend);
+        self
+    }
+
+    /// Bound on every coordinator↔rank wait inside the distributed
+    /// backends (mp and proc).  A blown deadline is a fatal protocol
+    /// error: the run fails typed and the executor is rebuilt on the
+    /// next run.  Unset, `DEINSUM_PEER_TIMEOUT_MS` decides, defaulting
+    /// to 60 s.
+    pub fn peer_timeout(mut self, timeout: Duration) -> Self {
+        self.peer_timeout = Some(timeout);
+        self
+    }
+
+    /// Pre-existing TCP rank listeners for the proc backend, one
+    /// `host:port` per rank in rank order (each a running
+    /// `deinsum rank-worker --listen <addr>`).  Unset, the
+    /// comma-separated `DEINSUM_RANK_ADDR` environment variable
+    /// decides; with neither, the proc backend spawns
+    /// `deinsum rank-worker` child processes over pipes.
+    pub fn rank_addrs(mut self, addrs: Vec<String>) -> Self {
+        self.rank_addrs = Some(addrs);
         self
     }
 
@@ -305,6 +338,16 @@ impl SessionBuilder {
             planner: self.planner,
             cache: Mutex::new(PlanCache::new(self.plan_cache_capacity)),
             backend: self.backend.unwrap_or_else(ExecBackend::from_env),
+            tuning: {
+                let mut t = ExecTuning::default();
+                if let Some(timeout) = self.peer_timeout {
+                    t.peer_timeout = timeout;
+                }
+                if let Some(addrs) = self.rank_addrs {
+                    t.rank_addrs = Some(addrs);
+                }
+                t
+            },
         })
     }
 
@@ -338,6 +381,7 @@ pub struct Session {
     planner: PlannerConfig,
     cache: Mutex<PlanCache>,
     backend: ExecBackend,
+    tuning: ExecTuning,
 }
 
 impl Session {
@@ -470,7 +514,7 @@ impl Session {
             engine: Arc::clone(&self.engine),
             network: self.network,
             plan,
-            state: ExecState::with_backend(self.backend),
+            state: ExecState::with_backend(self.backend, self.tuning.clone()),
             runs: 0,
         }
     }

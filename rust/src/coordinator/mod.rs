@@ -43,7 +43,7 @@ use std::collections::BTreeSet;
 use std::sync::Arc;
 
 use crate::error::{Error, Result};
-use crate::exec::{self, ComputeStep, ExecBackend, Executor};
+use crate::exec::{self, ComputeStep, ExecBackend, ExecTuning, Executor};
 use crate::planner::Plan;
 use crate::runtime::KernelEngine;
 use crate::sim::collectives::reduction_groups;
@@ -124,20 +124,27 @@ impl RunReport {
 /// program-private, and the shared [`KernelEngine`] is `Sync`.
 pub(crate) struct ExecState {
     pub(crate) backend: ExecBackend,
+    /// Transport tuning for the distributed backends (peer deadline,
+    /// pre-existing rank listeners), resolved once per session.
+    pub(crate) tuning: ExecTuning,
     pub(crate) exec: Option<Box<dyn Executor>>,
 }
 
 impl Default for ExecState {
     fn default() -> Self {
-        ExecState { backend: ExecBackend::from_env(), exec: None }
+        ExecState {
+            backend: ExecBackend::from_env(),
+            tuning: ExecTuning::default(),
+            exec: None,
+        }
     }
 }
 
 impl ExecState {
-    /// State pinned to an explicit backend
-    /// ([`crate::api::SessionBuilder::backend`]).
-    pub(crate) fn with_backend(backend: ExecBackend) -> Self {
-        ExecState { backend, exec: None }
+    /// State pinned to an explicit backend and transport tuning
+    /// ([`crate::api::SessionBuilder::backend`] and friends).
+    pub(crate) fn with_backend(backend: ExecBackend, tuning: ExecTuning) -> Self {
+        ExecState { backend, tuning, exec: None }
     }
 
     /// Buffer-recycling counters of the persistent executor (defaults
@@ -227,7 +234,8 @@ fn run_plan_inner(
         None => true,
     };
     if rebuild {
-        state.exec = Some(exec::make(backend, plan.p, network, Arc::clone(engine)));
+        state.exec =
+            Some(exec::make(backend, plan.p, network, Arc::clone(engine), &state.tuning));
     }
     let exec = state
         .exec

@@ -45,12 +45,26 @@ pub enum Error {
     /// The server has been shut down (or dropped); no new work is
     /// accepted.
     ServerShutdown,
-    /// The message-passing backend ([`crate::exec::ExecBackend::Mp`])
-    /// observed a protocol violation between the coordinator and a rank
-    /// site — an unexpected message tag, a dead peer, a timed-out
-    /// collective.  The executor is poisoned afterwards (the next run
-    /// rebuilds it); the error is not retryable on the same executor.
-    Protocol(String),
+    /// A distributed backend ([`crate::exec::ExecBackend::Mp`] or
+    /// [`crate::exec::ExecBackend::Proc`]) observed a protocol violation
+    /// between the coordinator and a rank site — an unexpected message
+    /// tag, a dead peer, a timed-out collective, a wire-format mismatch.
+    /// The executor is poisoned afterwards (the next run rebuilds it);
+    /// the error is not retryable on the same executor.
+    ///
+    /// Carries the site context needed to diagnose a cross-process
+    /// failure from the message alone: which rank observed it (`None`
+    /// for the coordinator), which instruction/protocol stage was in
+    /// flight, and an expected-vs-got detail.
+    Protocol {
+        /// Rank site that observed the violation (`None`: coordinator).
+        rank: Option<usize>,
+        /// Instruction kind or protocol stage in flight (`"handshake"`,
+        /// `"redistribute"`, `"allreduce"`, `"ack"`, ...).
+        instr: String,
+        /// What was expected vs what was observed.
+        detail: String,
+    },
 }
 
 impl fmt::Display for Error {
@@ -69,7 +83,12 @@ impl fmt::Display for Error {
             Error::QueueFull => write!(f, "queue full: request shed (try again later)"),
             Error::DeadlineExceeded => write!(f, "deadline exceeded"),
             Error::ServerShutdown => write!(f, "server is shut down"),
-            Error::Protocol(m) => write!(f, "mp protocol error: {m}"),
+            Error::Protocol { rank, instr, detail } => match rank {
+                Some(r) => {
+                    write!(f, "protocol error [rank {r}, {instr}]: {detail}")
+                }
+                None => write!(f, "protocol error [coordinator, {instr}]: {detail}"),
+            },
         }
     }
 }
@@ -108,8 +127,23 @@ impl Error {
     pub fn worker_lost(m: impl Into<String>) -> Self {
         Error::WorkerLost(m.into())
     }
+    /// Coordinator-side protocol violation with no specific instruction
+    /// context.  Prefer [`Error::protocol_at`] where the failing rank
+    /// and instruction are known.
     pub fn protocol(m: impl Into<String>) -> Self {
-        Error::Protocol(m.into())
+        Error::Protocol { rank: None, instr: "exec".to_string(), detail: m.into() }
+    }
+
+    /// Protocol violation observed at a specific site: `rank` is the
+    /// rank that observed it (`None` for the coordinator), `instr` the
+    /// instruction kind or protocol stage in flight, `detail` the
+    /// expected-vs-got description.
+    pub fn protocol_at(
+        rank: impl Into<Option<usize>>,
+        instr: impl Into<String>,
+        detail: impl Into<String>,
+    ) -> Self {
+        Error::Protocol { rank: rank.into(), instr: instr.into(), detail: detail.into() }
     }
 
     /// Whether resubmitting the same request can reasonably succeed.

@@ -16,22 +16,32 @@
 //!   channels — the in-process rehearsal of a multi-node MPI run.
 //!   Protocol violations surface as typed [`Error::Protocol`] values,
 //!   never panics.
+//! - [`ExecBackend::Proc`] ([`proc::ProcExecutor`]): out-of-process
+//!   rank sites.  Every rank is a `deinsum rank-worker` child process
+//!   (or a remote TCP peer via `DEINSUM_RANK_ADDR`) speaking the
+//!   versioned, length-prefixed wire format of [`wire`]; instruction
+//!   streams and block payloads cross a genuine process boundary with
+//!   read/write deadlines layered on the same ack/abort discipline.
 //!
-//! Both backends execute the identical per-rank interpreter
+//! All backends execute the identical per-rank interpreter
 //! ([`ComputeStep`] + `execute_rank`) over identically-cut blocks, so
 //! their outputs are **bitwise identical** — pinned as a tier-1 test at
 //! P ∈ {1, 4, 8}.  Select a backend per session with
 //! [`crate::api::SessionBuilder::backend`] or process-wide with the
-//! `DEINSUM_BACKEND` environment variable (`sim` | `mp`).
+//! `DEINSUM_BACKEND` environment variable (`sim` | `mp` | `proc`).
 //!
 //! [`Error::Protocol`]: crate::error::Error::Protocol
 
 pub(crate) mod mp;
+pub(crate) mod proc;
 pub(crate) mod sim;
+pub(crate) mod site;
 pub(crate) mod step;
+pub(crate) mod wire;
 
 use std::collections::BTreeSet;
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::dist::TensorDist;
 use crate::error::Result;
@@ -40,6 +50,7 @@ use crate::runtime::KernelEngine;
 use crate::sim::{CommStats, NetworkModel, StoreStats, TimeBreakdown};
 use crate::tensor::Tensor;
 
+pub use proc::rank_worker;
 pub use step::ComputeStep;
 
 /// Allocation counters for a backend's local scratch (Seq
@@ -73,15 +84,21 @@ pub enum ExecBackend {
     /// stores, real channel traffic for every redistribution and
     /// reduction.
     Mp,
+    /// Out-of-process rank sites: one `deinsum rank-worker` child
+    /// process per rank (or a remote TCP peer per `DEINSUM_RANK_ADDR`),
+    /// driven over the versioned wire format of [`wire`].
+    Proc,
 }
 
 impl ExecBackend {
     /// Resolve the process-wide default from `DEINSUM_BACKEND`
-    /// (case-insensitive `"mp"` selects [`ExecBackend::Mp`]; anything
-    /// else — including unset — selects [`ExecBackend::Sim`]).
+    /// (case-insensitive `"mp"` selects [`ExecBackend::Mp`], `"proc"`
+    /// selects [`ExecBackend::Proc`]; anything else — including unset —
+    /// selects [`ExecBackend::Sim`]).
     pub fn from_env() -> ExecBackend {
         match std::env::var("DEINSUM_BACKEND") {
             Ok(v) if v.eq_ignore_ascii_case("mp") => ExecBackend::Mp,
+            Ok(v) if v.eq_ignore_ascii_case("proc") => ExecBackend::Proc,
             _ => ExecBackend::Sim,
         }
     }
@@ -91,7 +108,54 @@ impl ExecBackend {
         match self {
             ExecBackend::Sim => "sim",
             ExecBackend::Mp => "mp",
+            ExecBackend::Proc => "proc",
         }
+    }
+}
+
+/// Transport tuning shared by the distributed backends, resolved once
+/// per session ([`crate::api::SessionBuilder`] overrides beat the
+/// environment).
+#[derive(Debug, Clone)]
+pub(crate) struct ExecTuning {
+    /// Bound on every coordinator↔rank and rank↔rank wait inside the
+    /// mp and proc backends (`DEINSUM_PEER_TIMEOUT_MS`; default 60 s).
+    /// A blown deadline is a fatal protocol error: the executor is
+    /// poisoned and rebuilt on the next run.
+    pub(crate) peer_timeout: Duration,
+    /// Pre-existing rank listeners for the proc backend
+    /// (`DEINSUM_RANK_ADDR`, comma-separated `host:port`).  `None`:
+    /// spawn `deinsum rank-worker` child processes over pipes.
+    pub(crate) rank_addrs: Option<Vec<String>>,
+}
+
+impl Default for ExecTuning {
+    fn default() -> Self {
+        ExecTuning { peer_timeout: env_peer_timeout(), rank_addrs: env_rank_addrs() }
+    }
+}
+
+/// `DEINSUM_PEER_TIMEOUT_MS` (integer milliseconds), defaulting to the
+/// historical 60 s on unset or unparsable values.
+pub(crate) fn env_peer_timeout() -> Duration {
+    std::env::var("DEINSUM_PEER_TIMEOUT_MS")
+        .ok()
+        .and_then(|v| v.trim().parse::<u64>().ok())
+        .filter(|&ms| ms > 0)
+        .map(Duration::from_millis)
+        .unwrap_or(Duration::from_secs(60))
+}
+
+/// `DEINSUM_RANK_ADDR`: comma-separated `host:port` listeners, one per
+/// rank in rank order.  Empty or unset means "spawn child processes".
+pub(crate) fn env_rank_addrs() -> Option<Vec<String>> {
+    let v = std::env::var("DEINSUM_RANK_ADDR").ok()?;
+    let addrs: Vec<String> =
+        v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect();
+    if addrs.is_empty() {
+        None
+    } else {
+        Some(addrs)
     }
 }
 
@@ -190,10 +254,14 @@ pub(crate) fn make(
     ranks: usize,
     net: NetworkModel,
     engine: Arc<KernelEngine>,
+    tuning: &ExecTuning,
 ) -> Box<dyn Executor> {
     match backend {
         ExecBackend::Sim => Box::new(sim::SimExecutor::new(ranks, net, engine)),
-        ExecBackend::Mp => Box::new(mp::MpExecutor::new(ranks, net, engine)),
+        ExecBackend::Mp => {
+            Box::new(mp::MpExecutor::new(ranks, net, engine, tuning.peer_timeout))
+        }
+        ExecBackend::Proc => Box::new(proc::ProcExecutor::new(ranks, net, engine, tuning)),
     }
 }
 
@@ -205,6 +273,17 @@ mod tests {
     fn backend_from_env_name_roundtrip() {
         assert_eq!(ExecBackend::Sim.name(), "sim");
         assert_eq!(ExecBackend::Mp.name(), "mp");
+        assert_eq!(ExecBackend::Proc.name(), "proc");
         assert_eq!(ExecBackend::default(), ExecBackend::Sim);
+    }
+
+    #[test]
+    fn default_tuning_peer_timeout_is_60s_when_env_unset() {
+        // Tests never mutate process-global env (parallel test threads
+        // share it); this pins the default only when the variable is
+        // absent from the environment the suite runs under.
+        if std::env::var("DEINSUM_PEER_TIMEOUT_MS").is_err() {
+            assert_eq!(ExecTuning::default().peer_timeout, Duration::from_secs(60));
+        }
     }
 }

@@ -34,13 +34,12 @@
 //!
 //! [`Error::Runtime`]: crate::error::Error::Runtime
 
-use std::any::Any;
-use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::collections::{BTreeMap, BTreeSet};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::{self, JoinHandle};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::dist::TensorDist;
 use crate::error::{Error, Result};
@@ -49,12 +48,9 @@ use crate::runtime::KernelEngine;
 use crate::sim::{CommStats, NetworkModel, StoreStats, TimeBreakdown};
 use crate::tensor::{Tensor, ELEM_BYTES};
 
-use super::step::{self, ComputeStep, RankScratch, RankStore};
+use super::site::{accumulate_group, panic_msg, SiteState};
+use super::step::ComputeStep;
 use super::{ExecBackend, Executor, LocalScratchStats};
-
-/// How long a rank waits on peer data inside a collective before
-/// declaring the collective dead (fatal; poisons the executor).
-const PEER_TIMEOUT: Duration = Duration::from_secs(60);
 
 /// One coordinator→rank instruction.  Every instruction goes to every
 /// rank and is acknowledged before the next one is sent.
@@ -130,7 +126,9 @@ impl AbortClass {
         match self {
             AbortClass::Plan => Error::Plan(msg),
             AbortClass::Shape => Error::Shape(msg),
-            AbortClass::Protocol => Error::Protocol(msg),
+            // Rank/instruction context does not survive an abort notice;
+            // the generic constructor keeps the detail intact.
+            AbortClass::Protocol => Error::protocol(msg),
         }
     }
 }
@@ -141,7 +139,7 @@ fn abort_of(e: &Error) -> (AbortClass, String) {
     match e {
         Error::Shape(m) => (AbortClass::Shape, m.clone()),
         Error::Plan(m) => (AbortClass::Plan, m.clone()),
-        Error::Protocol(m) => (AbortClass::Protocol, m.clone()),
+        Error::Protocol { detail, .. } => (AbortClass::Protocol, detail.clone()),
         other => (AbortClass::Protocol, other.to_string()),
     }
 }
@@ -187,133 +185,79 @@ impl From<Error> for Fail {
 
 type RankResult<T> = std::result::Result<T, Fail>;
 
-/// One rank's private world: local store slice, recycled scratch, its
-/// data inbox, and senders to every peer's inbox.
+/// One rank's thread-hosted site: the shared [`SiteState`] plus the
+/// channel endpoints this transport uses (its data inbox and senders to
+/// every peer's inbox).
 struct RankSite {
-    rank: usize,
-    engine: Arc<KernelEngine>,
-    store: HashMap<String, Tensor>,
-    scratch: RankScratch,
-    stats: StoreStats,
+    site: SiteState,
+    /// How long to wait on peer data inside a collective before
+    /// declaring the collective dead (fatal; poisons the executor).
+    timeout: Duration,
     data_rx: Receiver<DataMsg>,
     data_tx: Vec<Sender<DataMsg>>,
 }
 
-/// The interpreter's read-only view of a rank site's store.
-struct LocalStore<'a> {
-    store: &'a HashMap<String, Tensor>,
-    rank: usize,
-}
-
-impl RankStore for LocalStore<'_> {
-    fn tensor(&self, name: &str) -> Result<&Tensor> {
-        self.store.get(name).ok_or_else(|| {
-            Error::plan(format!("tensor {name} rank {} missing", self.rank))
-        })
-    }
-}
-
 impl RankSite {
+    fn rank(&self) -> usize {
+        self.site.rank
+    }
+
     /// Baseline ack: cumulative counters, no payload.
     fn ok(&self) -> AckData {
         AckData {
-            store: self.stats,
-            scratch: self.scratch.stats(),
+            store: self.site.stats,
+            scratch: self.site.scratch_stats(),
             ..AckData::default()
         }
     }
 
-    fn recv_data(&self, what: &str) -> RankResult<DataMsg> {
-        self.data_rx.recv_timeout(PEER_TIMEOUT).map_err(|_| {
-            Fail::Fatal(Error::protocol(format!(
-                "rank {}: timed out waiting for {what}",
-                self.rank
-            )))
+    fn recv_data(&self, instr: &str, what: &str) -> RankResult<DataMsg> {
+        self.data_rx.recv_timeout(self.timeout).map_err(|_| {
+            Fail::Fatal(Error::protocol_at(
+                self.rank(),
+                instr,
+                format!("timed out waiting for {what} after {:?}", self.timeout),
+            ))
         })
     }
 
     fn handle(&mut self, instr: Instr) -> RankResult<AckData> {
         match instr {
             Instr::BeginRun => {
-                self.scratch.begin_run();
+                self.site.begin_run();
                 Ok(self.ok())
             }
-            Instr::Stage { name, block } => self.stage(name, block),
+            Instr::Stage { name, block } => {
+                self.site.stage(name, block);
+                Ok(self.ok())
+            }
             Instr::Put { name, tensor } => {
-                self.store.insert(name, tensor);
+                self.site.store.insert(name, tensor);
                 Ok(self.ok())
             }
             Instr::Fetch { name } => {
                 let mut ack = self.ok();
-                ack.tensor = self.store.get(&name).cloned();
+                ack.tensor = self.site.store.get(&name).cloned();
                 Ok(ack)
             }
             Instr::Redistribute { src, dst, ldims, sends, locals, recv_count } => {
                 self.redistribute(src, dst, ldims, sends, locals, recv_count)
             }
-            Instr::Compute { step } => self.compute(&step),
+            Instr::Compute { step } => match self.site.compute(&step) {
+                Ok(dt) => {
+                    let mut ack = self.ok();
+                    ack.compute_s = dt;
+                    Ok(ack)
+                }
+                Err(e) => Err(Fail::Typed(e)),
+            },
             Instr::Allreduce { name, group } => self.allreduce(name, group),
             Instr::EndRun { live } => {
-                self.store.retain(|k, _| live.contains(k));
-                self.scratch.end_run();
+                self.site.end_run(&live);
                 Ok(self.ok())
             }
             // Stop is intercepted by `rank_main` before dispatch.
             Instr::Stop => Ok(self.ok()),
-        }
-    }
-
-    /// Install a staged input block, recycling the resident buffer in
-    /// place when the shape matches (the per-rank half of the
-    /// simulator's `dest_allocs`/`dest_reuses` accounting — the totals
-    /// line up because staging shapes are uniform across ranks).
-    fn stage(&mut self, name: String, block: Tensor) -> RankResult<AckData> {
-        match self.store.remove(&name) {
-            Some(mut t) if t.dims() == block.dims() => {
-                self.stats.dest_reuses += 1;
-                t.data_mut().copy_from_slice(block.data());
-                self.store.insert(name, t);
-            }
-            _ => {
-                self.stats.dest_allocs += 1;
-                self.store.insert(name, block);
-            }
-        }
-        Ok(self.ok())
-    }
-
-    /// Run the term's local kernel through the shared interpreter,
-    /// recycling the output buffer under the step's output name.
-    fn compute(&mut self, step: &ComputeStep) -> RankResult<AckData> {
-        // Replay the coordinator's per-term kernel config on this
-        // thread (thread-local overrides don't cross thread boundaries).
-        self.engine.configure_override(step.kernel_cfg);
-        let mut dest = match self.store.remove(&step.out_name) {
-            Some(t) if t.dims() == step.out_dims.as_slice() => {
-                self.stats.out_reuses += 1;
-                t
-            }
-            _ => {
-                self.stats.out_allocs += 1;
-                Tensor::zeros(&step.out_dims)
-            }
-        };
-        let t0 = Instant::now();
-        let res = {
-            let view = LocalStore { store: &self.store, rank: self.rank };
-            step::execute_rank(&self.engine, &view, &mut self.scratch, step, &mut dest)
-        };
-        let dt = t0.elapsed().as_secs_f64();
-        // The buffer goes back even on error, so a recovered run still
-        // recycles it.
-        self.store.insert(step.out_name.clone(), dest);
-        match res {
-            Ok(()) => {
-                let mut ack = self.ok();
-                ack.compute_s = dt;
-                Ok(ack)
-            }
-            Err(e) => Err(Fail::Typed(e)),
         }
     }
 
@@ -328,26 +272,27 @@ impl RankSite {
         recv_count: usize,
     ) -> RankResult<AckData> {
         let zero = vec![0usize; ldims.len()];
-        if !self.store.contains_key(&src) {
+        if !self.site.store.contains_key(&src) {
             // Every box this rank owed becomes an abort notice, so the
             // receivers' expected counts stay balanced; then drain our
             // own inbox before surfacing the typed error.
             for m in &sends {
                 let _ = self.data_tx[m.dst].send(DataMsg {
-                    src: self.rank,
+                    src: self.rank(),
                     tag: DataTag::RedistAbort(format!("redistribute: {src} missing")),
                     data: Tensor::zeros(&[1]),
                 });
             }
             for _ in 0..recv_count {
-                let msg = self.recv_data("redistribution data")?;
+                let msg = self.recv_data("redistribute", "redistribution data")?;
                 match msg.tag {
                     DataTag::Redist { .. } | DataTag::RedistAbort(_) => {}
                     tag => {
-                        return Err(Fail::Fatal(Error::protocol(format!(
-                            "rank {}: unexpected {tag:?} during redistribute",
-                            self.rank
-                        ))))
+                        return Err(Fail::Fatal(Error::protocol_at(
+                            self.rank(),
+                            "redistribute",
+                            format!("expected box or abort, got {tag:?}"),
+                        )))
                     }
                 }
             }
@@ -358,49 +303,42 @@ impl RankSite {
         // Ship every outgoing box first so no peer stalls on our local
         // work.
         {
-            let src_buf = self.store.get(&src).ok_or_else(|| {
-                Fail::Fatal(Error::protocol(format!(
-                    "rank {}: {src} vanished mid-redistribute",
-                    self.rank
-                )))
+            let src_buf = self.site.store.get(&src).ok_or_else(|| {
+                Fail::Fatal(Error::protocol_at(
+                    self.rank(),
+                    "redistribute",
+                    format!("{src} vanished mid-redistribute"),
+                ))
             })?;
             for m in &sends {
                 let mut payload = Tensor::zeros(&m.size);
                 payload.copy_box_from(src_buf, &m.src_off, &zero, &m.size);
                 if self.data_tx[m.dst]
                     .send(DataMsg {
-                        src: self.rank,
+                        src: self.rank(),
                         tag: DataTag::Redist { dst_off: m.dst_off.clone(), size: m.size.clone() },
                         data: payload,
                     })
                     .is_err()
                 {
-                    return Err(Fail::Fatal(Error::protocol(format!(
-                        "rank {}: redistribute peer {} is gone",
-                        self.rank, m.dst
-                    ))));
+                    return Err(Fail::Fatal(Error::protocol_at(
+                        self.rank(),
+                        "redistribute",
+                        format!("peer {} is gone", m.dst),
+                    )));
                 }
             }
         }
         // Destination buffer: recycled when the shape matches, cleared
         // so edge padding outside the incoming boxes stays exact.
-        let mut dstbuf = match self.store.remove(&dst) {
-            Some(mut t) if t.dims() == ldims.as_slice() => {
-                self.stats.dest_reuses += 1;
-                t.data_mut().fill(0.0);
-                t
-            }
-            _ => {
-                self.stats.dest_allocs += 1;
-                Tensor::zeros(&ldims)
-            }
-        };
+        let mut dstbuf = self.site.take_dest(&dst, &ldims);
         {
-            let src_buf = self.store.get(&src).ok_or_else(|| {
-                Fail::Fatal(Error::protocol(format!(
-                    "rank {}: {src} vanished mid-redistribute",
-                    self.rank
-                )))
+            let src_buf = self.site.store.get(&src).ok_or_else(|| {
+                Fail::Fatal(Error::protocol_at(
+                    self.rank(),
+                    "redistribute",
+                    format!("{src} vanished mid-redistribute"),
+                ))
             })?;
             for m in &locals {
                 dstbuf.copy_box_from(src_buf, &m.src_off, &m.dst_off, &m.size);
@@ -408,7 +346,7 @@ impl RankSite {
         }
         let mut typed: Option<Error> = None;
         for _ in 0..recv_count {
-            let msg = self.recv_data("redistribution data")?;
+            let msg = self.recv_data("redistribute", "redistribution data")?;
             match msg.tag {
                 DataTag::Redist { dst_off, size } => {
                     let zo = vec![0usize; size.len()];
@@ -420,14 +358,15 @@ impl RankSite {
                     }
                 }
                 tag => {
-                    return Err(Fail::Fatal(Error::protocol(format!(
-                        "rank {}: unexpected {tag:?} during redistribute",
-                        self.rank
-                    ))))
+                    return Err(Fail::Fatal(Error::protocol_at(
+                        self.rank(),
+                        "redistribute",
+                        format!("expected box or abort, got {tag:?}"),
+                    )))
                 }
             }
         }
-        self.store.insert(dst, dstbuf);
+        self.site.store.insert(dst, dstbuf);
         match typed {
             Some(e) => Err(Fail::Typed(e)),
             None => Ok(self.ok()),
@@ -446,21 +385,25 @@ impl RankSite {
             return Ok(self.ok());
         };
         let root = g[0];
-        if self.rank != root {
+        if self.rank() != root {
             return self.allreduce_member(&name, root);
         }
         let others = &g[1..];
         let mut member_err: Option<Error> = None;
         let mut contribs: BTreeMap<usize, Tensor> = BTreeMap::new();
         for _ in 0..others.len() {
-            let msg = self.recv_data("allreduce contributions")?;
+            let msg = self.recv_data("allreduce", "allreduce contributions")?;
             match msg.tag {
                 DataTag::ReduceContrib => {
                     if contribs.insert(msg.src, msg.data).is_some() && member_err.is_none() {
-                        member_err = Some(Error::protocol(format!(
-                            "allreduce {name}: duplicate contribution from rank {}",
-                            msg.src
-                        )));
+                        member_err = Some(Error::protocol_at(
+                            root,
+                            "allreduce",
+                            format!(
+                                "duplicate contribution from rank {} for {name}",
+                                msg.src
+                            ),
+                        ));
                     }
                 }
                 DataTag::ReduceAbort { class, msg: m } => {
@@ -469,51 +412,55 @@ impl RankSite {
                     }
                 }
                 tag => {
-                    return Err(Fail::Fatal(Error::protocol(format!(
-                        "rank {}: unexpected {tag:?} during allreduce",
-                        self.rank
-                    ))))
+                    return Err(Fail::Fatal(Error::protocol_at(
+                        self.rank(),
+                        "allreduce",
+                        format!("expected contribution or abort, got {tag:?}"),
+                    )))
                 }
             }
         }
-        let mut root_buf = self.store.remove(&name);
+        let mut root_buf = self.site.store.remove(&name);
         let verdict = root_verdict(&name, root, others, member_err, &contribs, &mut root_buf);
         match (verdict, root_buf) {
             (Ok(len), Some(buf)) => {
                 for &r in others {
                     if self.data_tx[r]
                         .send(DataMsg {
-                            src: self.rank,
+                            src: self.rank(),
                             tag: DataTag::ReduceResult,
                             data: buf.clone(),
                         })
                         .is_err()
                     {
-                        self.store.insert(name, buf);
-                        return Err(Fail::Fatal(Error::protocol(format!(
-                            "rank {}: allreduce peer {r} is gone",
-                            self.rank
-                        ))));
+                        self.site.store.insert(name, buf);
+                        return Err(Fail::Fatal(Error::protocol_at(
+                            self.rank(),
+                            "allreduce",
+                            format!("peer {r} is gone"),
+                        )));
                     }
                 }
-                self.store.insert(name, buf);
+                self.site.store.insert(name, buf);
                 let mut ack = self.ok();
                 ack.payload_len = Some(len);
                 Ok(ack)
             }
-            (Ok(_), None) => Err(Fail::Fatal(Error::protocol(format!(
-                "allreduce {name}: verdict without a root buffer"
-            )))),
+            (Ok(_), None) => Err(Fail::Fatal(Error::protocol_at(
+                self.rank(),
+                "allreduce",
+                format!("{name}: verdict without a root buffer"),
+            ))),
             (Err(e), maybe) => {
                 if let Some(buf) = maybe {
-                    self.store.insert(name, buf);
+                    self.site.store.insert(name, buf);
                 }
                 // Members are blocked on a response; abort them all so
                 // the round stays balanced, then surface the typed error.
                 let (class, msg) = abort_of(&e);
                 for &r in others {
                     let _ = self.data_tx[r].send(DataMsg {
-                        src: self.rank,
+                        src: self.rank(),
                         tag: DataTag::ReduceAbort { class, msg: msg.clone() },
                         data: Tensor::zeros(&[1]),
                     });
@@ -524,26 +471,27 @@ impl RankSite {
     }
 
     fn allreduce_member(&mut self, name: &str, root: usize) -> RankResult<AckData> {
-        match self.store.get(name) {
+        match self.site.store.get(name) {
             Some(t) => {
                 let contrib = t.clone();
                 if self.data_tx[root]
                     .send(DataMsg {
-                        src: self.rank,
+                        src: self.rank(),
                         tag: DataTag::ReduceContrib,
                         data: contrib,
                     })
                     .is_err()
                 {
-                    return Err(Fail::Fatal(Error::protocol(format!(
-                        "rank {}: allreduce root {root} is gone",
-                        self.rank
-                    ))));
+                    return Err(Fail::Fatal(Error::protocol_at(
+                        self.rank(),
+                        "allreduce",
+                        format!("root {root} is gone"),
+                    )));
                 }
             }
             None => {
                 let _ = self.data_tx[root].send(DataMsg {
-                    src: self.rank,
+                    src: self.rank(),
                     tag: DataTag::ReduceAbort {
                         class: AbortClass::Plan,
                         msg: format!("allreduce: {name} missing"),
@@ -552,23 +500,25 @@ impl RankSite {
                 });
             }
         }
-        let msg = self.recv_data("allreduce result")?;
+        let msg = self.recv_data("allreduce", "allreduce result")?;
         match msg.tag {
-            DataTag::ReduceResult => match self.store.get_mut(name) {
+            DataTag::ReduceResult => match self.site.store.get_mut(name) {
                 Some(buf) if buf.dims() == msg.data.dims() => {
                     buf.data_mut().copy_from_slice(msg.data.data());
                     Ok(self.ok())
                 }
-                _ => Err(Fail::Fatal(Error::protocol(format!(
-                    "rank {}: allreduce result shape mismatch for {name}",
-                    self.rank
-                )))),
+                _ => Err(Fail::Fatal(Error::protocol_at(
+                    self.rank(),
+                    "allreduce",
+                    format!("result shape mismatch for {name}"),
+                ))),
             },
             DataTag::ReduceAbort { class, msg: m } => Err(Fail::Typed(class.into_error(m))),
-            tag => Err(Fail::Fatal(Error::protocol(format!(
-                "rank {}: unexpected {tag:?} during allreduce",
-                self.rank
-            )))),
+            tag => Err(Fail::Fatal(Error::protocol_at(
+                self.rank(),
+                "allreduce",
+                format!("expected result or abort, got {tag:?}"),
+            ))),
         }
     }
 }
@@ -591,58 +541,36 @@ fn root_verdict(
     let buf = root_buf
         .as_mut()
         .ok_or_else(|| Error::plan(format!("allreduce: {name} missing")))?;
-    // Shape pre-check over the whole group before any accumulation, so
-    // a mismatch is a clean typed error with nothing half-summed.
+    // Resolve the contributions in group order, then run the shared
+    // shape pre-check + accumulation (the simulator's order, which is
+    // what keeps the backends bitwise identical).
+    let mut ordered: Vec<(usize, &Tensor)> = Vec::with_capacity(others.len());
     for &r in others {
         let c = contribs.get(&r).ok_or_else(|| {
-            Error::protocol(format!(
-                "allreduce {name}: missing contribution from rank {r}"
-            ))
+            Error::protocol_at(
+                root,
+                "allreduce",
+                format!("missing contribution from rank {r} for {name}"),
+            )
         })?;
-        if c.dims() != buf.dims() {
-            return Err(Error::shape(format!(
-                "allreduce {name}: rank {r} block {:?} != rank {root} block {:?}",
-                c.dims(),
-                buf.dims()
-            )));
-        }
+        ordered.push((r, c));
     }
-    // Accumulate in group order — the simulator's order, which is what
-    // keeps the backends bitwise identical.
-    for &r in others {
-        if let Some(c) = contribs.get(&r) {
-            buf.add_assign(c)?;
-        }
-    }
-    Ok(buf.len())
-}
-
-/// Best-effort extraction of a panic payload's message.
-fn panic_msg(p: &(dyn Any + Send)) -> String {
-    if let Some(s) = p.downcast_ref::<&str>() {
-        (*s).to_string()
-    } else if let Some(s) = p.downcast_ref::<String>() {
-        s.clone()
-    } else {
-        "opaque panic payload".to_string()
-    }
+    accumulate_group(name, root, buf, &ordered)
 }
 
 /// A rank thread's main loop: receive, execute (panic-contained), ack.
 fn rank_main(
     rank: usize,
     engine: Arc<KernelEngine>,
+    timeout: Duration,
     instr_rx: Receiver<Instr>,
     ack_tx: Sender<AckMsg>,
     data_rx: Receiver<DataMsg>,
     data_tx: Vec<Sender<DataMsg>>,
 ) {
     let mut site = RankSite {
-        rank,
-        engine,
-        store: HashMap::new(),
-        scratch: RankScratch::default(),
-        stats: StoreStats::default(),
+        site: SiteState::new(rank, engine),
+        timeout,
         data_rx,
         data_tx,
     };
@@ -652,7 +580,7 @@ fn rank_main(
             Err(_) => break, // coordinator gone: shut down
         };
         if matches!(instr, Instr::Stop) {
-            site.engine.reset_config();
+            site.site.engine.reset_config();
             break;
         }
         let ack = match catch_unwind(AssertUnwindSafe(|| site.handle(instr))) {
@@ -674,6 +602,10 @@ fn rank_main(
 pub(crate) struct MpExecutor {
     p: usize,
     net: NetworkModel,
+    /// Bound on every coordinator↔rank and rank↔rank wait
+    /// ([`crate::api::SessionBuilder::peer_timeout`] /
+    /// `DEINSUM_PEER_TIMEOUT_MS`; default 60 s).
+    peer_timeout: Duration,
     instr_tx: Vec<Sender<Instr>>,
     ack_rx: Vec<Receiver<AckMsg>>,
     threads: Vec<JoinHandle<()>>,
@@ -693,7 +625,12 @@ pub(crate) struct MpExecutor {
 }
 
 impl MpExecutor {
-    pub(crate) fn new(ranks: usize, net: NetworkModel, engine: Arc<KernelEngine>) -> Self {
+    pub(crate) fn new(
+        ranks: usize,
+        net: NetworkModel,
+        engine: Arc<KernelEngine>,
+        peer_timeout: Duration,
+    ) -> Self {
         let p = ranks.max(1);
         // Full p×p data mesh: one inbox per rank, every rank holds a
         // sender to every inbox.
@@ -717,13 +654,14 @@ impl MpExecutor {
             threads.push(
                 thread::Builder::new()
                     .name(format!("deinsum-mp-{r}"))
-                    .spawn(move || rank_main(r, eng, irx, atx, drx, dtx))
+                    .spawn(move || rank_main(r, eng, peer_timeout, irx, atx, drx, dtx))
                     .expect("spawn mp rank thread"),
             );
         }
         MpExecutor {
             p,
             net,
+            peer_timeout,
             instr_tx,
             ack_rx,
             threads,
@@ -741,15 +679,17 @@ impl MpExecutor {
 
     fn send_instr(&mut self, r: usize, i: Instr) -> Result<()> {
         if self.poisoned {
-            return Err(Error::protocol(
-                "mp executor is poisoned (a rank site failed fatally)",
+            return Err(Error::protocol_at(
+                None,
+                "send",
+                "executor is poisoned (a rank site failed fatally)",
             ));
         }
         match self.instr_tx[r].send(i) {
             Ok(()) => Ok(()),
             Err(_) => {
                 self.poisoned = true;
-                Err(Error::protocol(format!("mp rank {r} is gone")))
+                Err(Error::protocol_at(None, "send", format!("rank {r} is gone")))
             }
         }
     }
@@ -762,7 +702,7 @@ impl MpExecutor {
         let mut first_err: Option<Error> = None;
         let mut acks = Vec::with_capacity(self.p);
         for r in 0..self.p {
-            match self.ack_rx[r].recv() {
+            match self.ack_rx[r].recv_timeout(self.peer_timeout) {
                 Ok(AckMsg::Ok(d)) => {
                     self.rank_store[r] = d.store;
                     self.rank_scratch[r] = d.scratch;
@@ -786,8 +726,14 @@ impl MpExecutor {
                 Err(_) => {
                     self.poisoned = true;
                     if first_err.is_none() {
-                        first_err =
-                            Some(Error::protocol(format!("mp rank {r} disconnected mid-run")));
+                        first_err = Some(Error::protocol_at(
+                            None,
+                            "ack",
+                            format!(
+                                "no ack from rank {r} within {:?} (dead or stalled)",
+                                self.peer_timeout
+                            ),
+                        ));
                     }
                     acks.push(AckData::default());
                 }
@@ -997,10 +943,11 @@ impl Executor for MpExecutor {
                 continue;
             }
             let len = acks[g[0]].payload_len.ok_or_else(|| {
-                Error::protocol(format!(
-                    "allreduce {name}: missing payload length from root rank {}",
-                    g[0]
-                ))
+                Error::protocol_at(
+                    None,
+                    "allreduce",
+                    format!("missing payload length from root rank {} for {name}", g[0]),
+                )
             })?;
             let bytes = (len * ELEM_BYTES) as f64;
             let t = self.net.allreduce_time(g.len(), bytes);
@@ -1114,7 +1061,12 @@ mod tests {
     use super::*;
 
     fn exec(p: usize) -> MpExecutor {
-        MpExecutor::new(p, NetworkModel::aries(), Arc::new(KernelEngine::native()))
+        MpExecutor::new(
+            p,
+            NetworkModel::aries(),
+            Arc::new(KernelEngine::native()),
+            Duration::from_secs(60),
+        )
     }
 
     fn t(dims: &[usize], data: &[f32]) -> Tensor {
@@ -1190,6 +1142,46 @@ mod tests {
         let err = e.allreduce_sum("nope", &[vec![0, 1]]).unwrap_err();
         assert!(matches!(err, Error::Plan(_)), "got: {err}");
         assert!(e.healthy());
+    }
+
+    #[test]
+    fn short_peer_timeout_poisons_instead_of_hanging() {
+        // A deliberately inconsistent instruction stream: rank 0 is told
+        // to expect one incoming redistribution box that no rank will
+        // ever send.  Under a short peer timeout the rank must give up,
+        // report a fatal timeout (a typed Protocol error at the
+        // coordinator), and poison the executor — never hang.
+        let mut e = MpExecutor::new(
+            2,
+            NetworkModel::aries(),
+            Arc::new(KernelEngine::native()),
+            Duration::from_millis(100),
+        );
+        e.begin_run().unwrap();
+        e.put("s", vec![t(&[1], &[1.0]), t(&[1], &[2.0])]).unwrap();
+        e.send_instr(
+            0,
+            Instr::Redistribute {
+                src: "s".to_string(),
+                dst: "d".to_string(),
+                ldims: vec![1],
+                sends: vec![],
+                locals: vec![],
+                recv_count: 1,
+            },
+        )
+        .unwrap();
+        e.send_instr(1, Instr::BeginRun).unwrap();
+        let err = e.collect_acks().unwrap_err();
+        assert!(
+            matches!(err, Error::Protocol { rank: Some(0), .. }),
+            "want a rank-0 protocol timeout, got: {err}"
+        );
+        assert!(
+            err.to_string().contains("timed out"),
+            "timeout context missing from: {err}"
+        );
+        assert!(!e.healthy(), "a timed-out collective must poison the executor");
     }
 
     #[test]

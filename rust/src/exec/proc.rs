@@ -1,0 +1,1339 @@
+//! The out-of-process backend: one rank site per child process (or
+//! remote TCP peer), driven over the versioned wire format of
+//! [`super::wire`].
+//!
+//! The instruction protocol is the mp backend's, serialized: every
+//! round sends exactly `p` instructions and collects exactly `p`
+//! acknowledgements in rank order, so the transport is provably
+//! drained at every barrier.  Rank-to-rank data movement becomes a
+//! **star topology** — the coordinator relays redistribution boxes and
+//! allreduce partials — which keeps workers free of peer connections
+//! while preserving the exact per-rank interpreter, recycling
+//! counters, accumulation order, and typed error messages of the
+//! other backends (bitwise-pinned in `tests/backends.rs`).
+//!
+//! Transports:
+//!
+//! - **Pipes** (default): each rank is a spawned `deinsum rank-worker`
+//!   child, instructions on its stdin, acks on its stdout, stderr
+//!   passed through.  Spawn failures are retried a few times; a spawn
+//!   that still fails poisons the executor, and the run loop's rebuild
+//!   retries the spawn on the next run.
+//! - **TCP** (`DEINSUM_RANK_ADDR` or
+//!   [`crate::api::SessionBuilder::rank_addrs`]): each rank is a
+//!   pre-existing `deinsum rank-worker --listen host:port` process;
+//!   the coordinator dials it with a bounded retry window.
+//!
+//! Deadlines: every ack/handshake wait is bounded by the session's
+//! peer timeout (a dedicated reader thread per peer feeds a channel,
+//! so pipes get real timeouts too); TCP writes carry a write timeout.
+//! A blown deadline, dead peer, or wire violation surfaces as a typed
+//! [`Error::Protocol`] and poisons the executor — never a hang, never
+//! a panic across the process boundary.
+//!
+//! [`Error::Protocol`]: crate::error::Error::Protocol
+
+use std::collections::BTreeSet;
+use std::io::{self, BufReader, BufWriter, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::dist::TensorDist;
+use crate::error::{Error, Result};
+use crate::redist::{Message, RedistPlan};
+use crate::runtime::KernelEngine;
+use crate::sim::{CommStats, NetworkModel, StoreStats, TimeBreakdown};
+use crate::tensor::{Tensor, ELEM_BYTES};
+
+use super::site::{accumulate_group, panic_msg, SiteState};
+use super::step::ComputeStep;
+use super::wire::{self, WireAck, WireAckData, WireBox, WireInstr};
+use super::{ExecBackend, ExecTuning, Executor, LocalScratchStats};
+
+// ---------------------------------------------------------- worker side
+
+/// How a worker-side handler failed (the proc twin of the mp backend's
+/// failure split).
+enum WFail {
+    /// Data-dependent: the site is consistent, the run continues.
+    Typed(Error),
+    /// The site is broken; the coordinator must poison the executor.
+    Fatal(Error),
+}
+
+/// Baseline ack: cumulative counters, no payload.
+fn ok_data(site: &SiteState) -> WireAckData {
+    WireAckData {
+        store: site.stats,
+        scratch: site.scratch_stats(),
+        ..WireAckData::default()
+    }
+}
+
+/// Execute one instruction against the rank site.  Every typed error
+/// message here matches the mp/sim backends byte-for-byte — that is
+/// what keeps fuzz rejection signatures equal across backends.
+fn handle(site: &mut SiteState, instr: WireInstr) -> std::result::Result<WireAckData, WFail> {
+    match instr {
+        WireInstr::Nop | WireInstr::Stop => Ok(ok_data(site)),
+        WireInstr::BeginRun => {
+            site.begin_run();
+            Ok(ok_data(site))
+        }
+        WireInstr::Stage { name, block } => {
+            site.stage(name, block);
+            Ok(ok_data(site))
+        }
+        WireInstr::Put { name, tensor } => {
+            site.store.insert(name, tensor);
+            Ok(ok_data(site))
+        }
+        WireInstr::Fetch { name } => {
+            let tensor = site.store.get(&name).cloned();
+            let mut ack = ok_data(site);
+            ack.tensor = tensor;
+            Ok(ack)
+        }
+        WireInstr::RedistExtract { src, sends } => {
+            let Some(src_buf) = site.store.get(&src) else {
+                return Err(WFail::Typed(Error::plan(format!(
+                    "redistribute: {src} missing"
+                ))));
+            };
+            let mut boxes = Vec::with_capacity(sends.len());
+            for m in &sends {
+                let zero = vec![0usize; m.size.len()];
+                let mut payload = Tensor::zeros(&m.size);
+                payload.copy_box_from(src_buf, &m.src_off, &zero, &m.size);
+                boxes.push((
+                    m.dst,
+                    WireBox { dst_off: m.dst_off.clone(), size: m.size.clone(), data: payload },
+                ));
+            }
+            let mut ack = ok_data(site);
+            ack.boxes = boxes;
+            Ok(ack)
+        }
+        WireInstr::RedistApply { src, dst, ldims, locals, incoming } => {
+            let mut dstbuf = site.take_dest(&dst, &ldims);
+            {
+                let src_buf = site.store.get(&src).ok_or_else(|| {
+                    WFail::Fatal(Error::protocol_at(
+                        site.rank,
+                        "redistribute",
+                        format!("{src} vanished mid-redistribute"),
+                    ))
+                })?;
+                for m in &locals {
+                    dstbuf.copy_box_from(src_buf, &m.src_off, &m.dst_off, &m.size);
+                }
+            }
+            for b in &incoming {
+                let zo = vec![0usize; b.size.len()];
+                dstbuf.copy_box_from(&b.data, &zo, &b.dst_off, &b.size);
+            }
+            site.store.insert(dst, dstbuf);
+            Ok(ok_data(site))
+        }
+        WireInstr::Compute { step } => match site.compute(&step) {
+            Ok(dt) => {
+                let mut ack = ok_data(site);
+                ack.compute_s = dt;
+                Ok(ack)
+            }
+            Err(e) => Err(WFail::Typed(e)),
+        },
+        WireInstr::ReduceExtract { name } => match site.store.get(&name) {
+            Some(t) => {
+                let contrib = t.clone();
+                let mut ack = ok_data(site);
+                ack.tensor = Some(contrib);
+                Ok(ack)
+            }
+            None => Err(WFail::Typed(Error::plan(format!("allreduce: {name} missing")))),
+        },
+        WireInstr::ReduceAccum { name, root, contribs } => {
+            let Some(mut buf) = site.store.remove(&name) else {
+                return Err(WFail::Typed(Error::plan(format!(
+                    "allreduce: {name} missing"
+                ))));
+            };
+            let refs: Vec<(usize, &Tensor)> =
+                contribs.iter().map(|(r, t)| (*r, t)).collect();
+            match accumulate_group(&name, root, &mut buf, &refs) {
+                Ok(len) => {
+                    let result = buf.clone();
+                    site.store.insert(name, buf);
+                    let mut ack = ok_data(site);
+                    ack.payload_len = Some(len);
+                    ack.tensor = Some(result);
+                    Ok(ack)
+                }
+                Err(e) => {
+                    // The buffer goes back untouched (the shape
+                    // pre-check runs before any accumulation).
+                    site.store.insert(name, buf);
+                    Err(WFail::Typed(e))
+                }
+            }
+        }
+        WireInstr::ReduceStore { name, result } => {
+            match site.store.get_mut(&name) {
+                Some(buf) if buf.dims() == result.dims() => {
+                    buf.data_mut().copy_from_slice(result.data());
+                }
+                _ => {
+                    return Err(WFail::Fatal(Error::protocol_at(
+                        site.rank,
+                        "allreduce",
+                        format!("result shape mismatch for {name}"),
+                    )))
+                }
+            }
+            Ok(ok_data(site))
+        }
+        WireInstr::EndRun { live } => {
+            let live: BTreeSet<String> = live.into_iter().collect();
+            site.end_run(&live);
+            Ok(ok_data(site))
+        }
+    }
+}
+
+/// Serve one coordinator connection: handshake, then the
+/// receive/execute/ack loop (panic-contained) until `Stop` or EOF.
+fn serve_stream<R: Read, W: Write>(
+    engine: Arc<KernelEngine>,
+    mut r: R,
+    mut w: W,
+) -> io::Result<()> {
+    let hello = wire::read_frame(&mut r)?;
+    let (rank, _ranks) = wire::check_hello(&hello)
+        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))?;
+    wire::write_frame(&mut w, &wire::hello_ack(rank))?;
+    let mut site = SiteState::new(rank, engine);
+    loop {
+        let frame = match wire::read_frame(&mut r) {
+            Ok(f) => f,
+            // Coordinator gone (pipe closed / connection dropped): a
+            // clean shutdown, not an error.
+            Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => return Ok(()),
+            Err(e) => return Err(e),
+        };
+        let instr = match wire::decode_instr(&frame) {
+            Ok(i) => i,
+            Err(e) => {
+                // Corrupt stream: report fatally with this rank's
+                // identity attached, then stop serving it.
+                let err = match e {
+                    Error::Protocol { instr, detail, .. } => {
+                        Error::Protocol { rank: Some(rank), instr, detail }
+                    }
+                    other => other,
+                };
+                let _ = wire::write_frame(&mut w, &wire::encode_ack(&WireAck::Fatal { err }));
+                return Ok(());
+            }
+        };
+        if matches!(instr, WireInstr::Stop) {
+            site.engine.reset_config();
+            return Ok(());
+        }
+        let ack = match catch_unwind(AssertUnwindSafe(|| handle(&mut site, instr))) {
+            Ok(Ok(d)) => WireAck::Ok(d),
+            Ok(Err(WFail::Typed(e))) => WireAck::Err { err: e, data: ok_data(&site) },
+            Ok(Err(WFail::Fatal(e))) => WireAck::Fatal { err: e },
+            Err(p) => WireAck::Fatal {
+                err: Error::runtime(format!(
+                    "proc rank {rank} panicked: {}",
+                    panic_msg(p.as_ref())
+                )),
+            },
+        };
+        wire::write_frame(&mut w, &wire::encode_ack(&ack))?;
+    }
+}
+
+/// Run the per-rank serve loop of the proc backend in this process
+/// (the `deinsum rank-worker` CLI entry).
+///
+/// - `listen: None`: serve one coordinator over stdin/stdout (the
+///   spawned-subprocess transport).  Returns when the coordinator
+///   sends `Stop` or closes the pipe.
+/// - `listen: Some(addr)`: bind a TCP listener, print
+///   `listening <addr>` on stdout (so `--listen 127.0.0.1:0` callers
+///   can discover the ephemeral port), and serve coordinators one
+///   connection at a time — each connection gets a fresh rank site, so
+///   a rebuilt executor can reconnect after a failure.  Runs until the
+///   process is killed.
+pub fn rank_worker(listen: Option<&str>) -> Result<()> {
+    // Workers always dispatch native kernels: the engine lives on this
+    // side of the process boundary.
+    let engine = Arc::new(KernelEngine::native());
+    match listen {
+        None => {
+            let stdin = io::stdin();
+            let stdout = io::stdout();
+            let r = stdin.lock();
+            let w = BufWriter::new(stdout.lock());
+            serve_stream(engine, r, w).map_err(Error::Io)
+        }
+        Some(addr) => {
+            let listener = TcpListener::bind(addr)?;
+            let local = listener.local_addr()?;
+            println!("listening {local}");
+            io::stdout().flush()?;
+            for stream in listener.incoming() {
+                let Ok(stream) = stream else { continue };
+                let _ = stream.set_nodelay(true);
+                let Ok(rd) = stream.try_clone() else { continue };
+                // A wire/transport failure kills this connection only;
+                // the listener survives for the next coordinator.
+                let _ = serve_stream(
+                    Arc::clone(&engine),
+                    BufReader::new(rd),
+                    BufWriter::new(stream),
+                );
+            }
+            Ok(())
+        }
+    }
+}
+
+// ----------------------------------------------------- coordinator side
+
+/// Locate the `deinsum` binary to spawn as a rank worker.
+///
+/// Resolution order: `DEINSUM_WORKER_BIN`, the current executable if it
+/// *is* the CLI (exact file stem `deinsum` — a `deinsum-<hash>` test
+/// binary would re-run the test harness), then a sibling search from
+/// the current executable's directory upward (test binaries live in
+/// `target/<profile>/deps`, the CLI one directory up).
+fn worker_binary() -> Result<PathBuf> {
+    if let Ok(p) = std::env::var("DEINSUM_WORKER_BIN") {
+        if !p.trim().is_empty() {
+            return Ok(PathBuf::from(p));
+        }
+    }
+    let is_cli = |p: &Path| p.file_stem().map(|s| s == "deinsum").unwrap_or(false);
+    let exe = std::env::current_exe().map_err(|e| {
+        Error::protocol_at(None, "spawn", format!("cannot resolve current executable: {e}"))
+    })?;
+    if is_cli(&exe) {
+        return Ok(exe);
+    }
+    let name = format!("deinsum{}", std::env::consts::EXE_SUFFIX);
+    let mut dir = exe.parent();
+    for _ in 0..2 {
+        if let Some(d) = dir {
+            let cand = d.join(&name);
+            if cand.is_file() {
+                return Ok(cand);
+            }
+            dir = d.parent();
+        }
+    }
+    Err(Error::protocol_at(
+        None,
+        "spawn",
+        "cannot locate the deinsum worker binary; set DEINSUM_WORKER_BIN",
+    ))
+}
+
+/// One connected rank peer: a framed writer, a reader thread feeding a
+/// channel (which is what gives pipes a real receive deadline), and
+/// the child process handle when this peer was spawned.
+struct Peer {
+    writer: Box<dyn Write + Send>,
+    frames: Receiver<io::Result<Vec<u8>>>,
+    child: Option<Child>,
+}
+
+impl Peer {
+    fn send(&mut self, frame: &[u8]) -> io::Result<()> {
+        wire::write_frame(&mut self.writer, frame)
+    }
+}
+
+impl Drop for Peer {
+    fn drop(&mut self) {
+        // Best-effort Stop, then a bounded wait: never hang the
+        // coordinator on a wedged or dead worker.
+        let _ = wire::write_frame(&mut self.writer, &wire::encode_instr(&WireInstr::Stop));
+        if let Some(child) = self.child.as_mut() {
+            let deadline = Instant::now() + Duration::from_secs(2);
+            loop {
+                match child.try_wait() {
+                    Ok(Some(_)) => break,
+                    Ok(None) if Instant::now() < deadline => {
+                        thread::sleep(Duration::from_millis(20));
+                    }
+                    _ => {
+                        let _ = child.kill();
+                        let _ = child.wait();
+                        break;
+                    }
+                }
+            }
+        }
+        // The reader thread exits on its own at EOF (child dead /
+        // connection closed); it is deliberately not joined, so a
+        // wedged remote peer can never hang a drop.
+    }
+}
+
+/// Spawn a detached reader thread pushing frames into a channel; the
+/// coordinator then waits with `recv_timeout` (pipes have no native
+/// read deadline).
+fn spawn_reader(mut r: Box<dyn Read + Send>) -> Receiver<io::Result<Vec<u8>>> {
+    let (tx, rx) = channel();
+    thread::Builder::new()
+        .name("deinsum-proc-reader".to_string())
+        .spawn(move || loop {
+            match wire::read_frame(&mut r) {
+                Ok(f) => {
+                    if tx.send(Ok(f)).is_err() {
+                        break;
+                    }
+                }
+                Err(e) => {
+                    let _ = tx.send(Err(e));
+                    break;
+                }
+            }
+        })
+        .expect("spawn proc reader thread");
+    rx
+}
+
+/// Coordinator side of the handshake: send hello, await the echoed
+/// hello-ack under the peer deadline.
+fn handshake(peer: &mut Peer, rank: usize, timeout: Duration, ranks: usize) -> Result<()> {
+    peer.send(&wire::hello(rank, ranks)).map_err(|e| {
+        Error::protocol_at(None, "handshake", format!("rank {rank}: {e}"))
+    })?;
+    match peer.frames.recv_timeout(timeout) {
+        Ok(Ok(frame)) => wire::check_hello_ack(&frame, rank),
+        Ok(Err(e)) => Err(Error::protocol_at(
+            None,
+            "handshake",
+            format!("rank {rank} connection failed: {e}"),
+        )),
+        Err(_) => Err(Error::protocol_at(
+            None,
+            "handshake",
+            format!("no hello-ack from rank {rank} within {timeout:?}"),
+        )),
+    }
+}
+
+/// Spawn one `deinsum rank-worker` child and handshake it.
+fn connect_child(bin: &Path, rank: usize, ranks: usize, timeout: Duration) -> Result<Peer> {
+    let mut child = Command::new(bin)
+        .arg("rank-worker")
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .map_err(|e| {
+            Error::protocol_at(None, "spawn", format!("rank {rank}: cannot spawn {bin:?}: {e}"))
+        })?;
+    let stdin = child.stdin.take().ok_or_else(|| {
+        Error::protocol_at(None, "spawn", format!("rank {rank}: no stdin pipe"))
+    })?;
+    let stdout = child.stdout.take().ok_or_else(|| {
+        Error::protocol_at(None, "spawn", format!("rank {rank}: no stdout pipe"))
+    })?;
+    let mut peer = Peer {
+        writer: Box::new(BufWriter::new(stdin)),
+        frames: spawn_reader(Box::new(stdout)),
+        child: Some(child),
+    };
+    handshake(&mut peer, rank, timeout, ranks)?;
+    Ok(peer)
+}
+
+/// Spawn with retry: a transient spawn/handshake failure (fork
+/// pressure, slow child start) gets a few fresh attempts before the
+/// executor is poisoned — and the poisoned executor is rebuilt by the
+/// run loop, which retries the spawn again on the next run.
+fn connect_child_retry(
+    bin: &Path,
+    rank: usize,
+    ranks: usize,
+    timeout: Duration,
+) -> Result<Peer> {
+    let mut last: Option<Error> = None;
+    for attempt in 0..3u32 {
+        if attempt > 0 {
+            thread::sleep(Duration::from_millis(50 << attempt));
+        }
+        match connect_child(bin, rank, ranks, timeout) {
+            Ok(p) => return Ok(p),
+            Err(e) => last = Some(e),
+        }
+    }
+    Err(last.expect("at least one spawn attempt"))
+}
+
+/// Dial one pre-existing TCP rank listener (bounded retry window, then
+/// handshake under the same deadline).
+fn connect_tcp(addr: &str, rank: usize, ranks: usize, timeout: Duration) -> Result<Peer> {
+    let deadline = Instant::now() + timeout;
+    let stream = loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => break s,
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(Error::protocol_at(
+                        None,
+                        "connect",
+                        format!("rank {rank}: cannot reach {addr} within {timeout:?}: {e}"),
+                    ));
+                }
+                thread::sleep(Duration::from_millis(50));
+            }
+        }
+    };
+    let _ = stream.set_nodelay(true);
+    stream.set_write_timeout(Some(timeout)).map_err(|e| {
+        Error::protocol_at(None, "connect", format!("rank {rank}: {e}"))
+    })?;
+    let rd = stream.try_clone().map_err(|e| {
+        Error::protocol_at(None, "connect", format!("rank {rank}: {e}"))
+    })?;
+    let mut peer = Peer {
+        writer: Box::new(BufWriter::new(stream)),
+        frames: spawn_reader(Box::new(rd)),
+        child: None,
+    };
+    handshake(&mut peer, rank, timeout, ranks)?;
+    Ok(peer)
+}
+
+/// One rank's drained acknowledgement for a round.
+struct AckOutcome {
+    /// Typed or reconstructed error (fatal outcomes also land here so
+    /// rank-order error selection sees them).
+    err: Option<Error>,
+    /// Whether the error was fatal (executor poisoned).
+    fatal: bool,
+    data: WireAckData,
+}
+
+/// Coordinator side of the out-of-process backend.
+pub(crate) struct ProcExecutor {
+    p: usize,
+    net: NetworkModel,
+    tuning: ExecTuning,
+    /// Connected peers (empty until the first `begin_run`; connection
+    /// is lazy so construction is infallible and spawn failures are
+    /// typed errors the rebuild seam retries).
+    peers: Vec<Peer>,
+    step_compute: Vec<f64>,
+    time: TimeBreakdown,
+    comm: CommStats,
+    rank_store: Vec<StoreStats>,
+    rank_scratch: Vec<LocalScratchStats>,
+    gather_stage: Option<Tensor>,
+    gather_stats: LocalScratchStats,
+    gather_live: bool,
+    poisoned: bool,
+}
+
+impl ProcExecutor {
+    pub(crate) fn new(
+        ranks: usize,
+        net: NetworkModel,
+        _engine: Arc<KernelEngine>,
+        tuning: &ExecTuning,
+    ) -> Self {
+        // The engine parameter is the factory's shared signature; rank
+        // workers build their own native engines behind the process
+        // boundary.
+        let p = ranks.max(1);
+        ProcExecutor {
+            p,
+            net,
+            tuning: tuning.clone(),
+            peers: Vec::new(),
+            step_compute: vec![0.0; p],
+            time: TimeBreakdown::default(),
+            comm: CommStats::default(),
+            rank_store: vec![StoreStats::default(); p],
+            rank_scratch: vec![LocalScratchStats::default(); p],
+            gather_stage: None,
+            gather_stats: LocalScratchStats::default(),
+            gather_live: false,
+            poisoned: false,
+        }
+    }
+
+    /// Connect every peer (spawn children or dial TCP listeners).  Any
+    /// failure poisons the executor: the run loop rebuilds it, which is
+    /// what retries the spawn/dial on the next run.
+    fn ensure_peers(&mut self) -> Result<()> {
+        if !self.peers.is_empty() {
+            return Ok(());
+        }
+        if self.poisoned {
+            return Err(Error::protocol_at(
+                None,
+                "connect",
+                "executor is poisoned (a rank site failed fatally)",
+            ));
+        }
+        let timeout = self.tuning.peer_timeout;
+        let p = self.p;
+        let connect = || -> Result<Vec<Peer>> {
+            let mut peers = Vec::with_capacity(p);
+            match &self.tuning.rank_addrs {
+                Some(addrs) => {
+                    if addrs.len() < p {
+                        return Err(Error::protocol_at(
+                            None,
+                            "connect",
+                            format!("{} rank addresses for {p} ranks", addrs.len()),
+                        ));
+                    }
+                    for (r, addr) in addrs.iter().take(p).enumerate() {
+                        peers.push(connect_tcp(addr, r, p, timeout)?);
+                    }
+                }
+                None => {
+                    let bin = worker_binary()?;
+                    for r in 0..p {
+                        peers.push(connect_child_retry(&bin, r, p, timeout)?);
+                    }
+                }
+            }
+            Ok(peers)
+        };
+        match connect() {
+            Ok(peers) => {
+                self.peers = peers;
+                Ok(())
+            }
+            Err(e) => {
+                self.poisoned = true;
+                Err(e)
+            }
+        }
+    }
+
+    fn send_frame(&mut self, r: usize, frame: &[u8]) -> Result<()> {
+        if self.poisoned {
+            return Err(Error::protocol_at(
+                None,
+                "send",
+                "executor is poisoned (a rank site failed fatally)",
+            ));
+        }
+        match self.peers[r].send(frame) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                self.poisoned = true;
+                Err(Error::protocol_at(None, "send", format!("rank {r} is gone: {e}")))
+            }
+        }
+    }
+
+    fn send_instr(&mut self, r: usize, instr: &WireInstr) -> Result<()> {
+        let frame = wire::encode_instr(instr);
+        self.send_frame(r, &frame)
+    }
+
+    /// Receive and decode one ack from rank `r` under the peer deadline.
+    fn recv_ack(&mut self, r: usize) -> Result<WireAck> {
+        match self.peers[r].frames.recv_timeout(self.tuning.peer_timeout) {
+            Ok(Ok(frame)) => wire::decode_ack(&frame)
+                .map_err(|e| Error::protocol_at(None, "ack", format!("rank {r}: {e}"))),
+            Ok(Err(e)) => Err(Error::protocol_at(
+                None,
+                "ack",
+                format!("rank {r} connection failed: {e}"),
+            )),
+            Err(RecvTimeoutError::Timeout) => Err(Error::protocol_at(
+                None,
+                "ack",
+                format!(
+                    "no ack from rank {r} within {:?} (dead or stalled)",
+                    self.tuning.peer_timeout
+                ),
+            )),
+            Err(RecvTimeoutError::Disconnected) => {
+                Err(Error::protocol_at(None, "ack", format!("rank {r} is gone")))
+            }
+        }
+    }
+
+    /// Drain all `p` acks in rank order.  Counter caches are refreshed
+    /// from every non-fatal ack; fatal outcomes (worker Fatal ack, dead
+    /// peer, decode failure, timeout) poison the executor but the drain
+    /// still completes, so the per-rank error/payload picture is whole.
+    fn collect_acks_each(&mut self) -> Vec<AckOutcome> {
+        let mut outs = Vec::with_capacity(self.p);
+        for r in 0..self.p {
+            let out = match self.recv_ack(r) {
+                Ok(WireAck::Ok(d)) => {
+                    self.rank_store[r] = d.store;
+                    self.rank_scratch[r] = d.scratch;
+                    AckOutcome { err: None, fatal: false, data: d }
+                }
+                Ok(WireAck::Err { err, data }) => {
+                    self.rank_store[r] = data.store;
+                    self.rank_scratch[r] = data.scratch;
+                    AckOutcome { err: Some(err), fatal: false, data }
+                }
+                Ok(WireAck::Fatal { err }) => {
+                    self.poisoned = true;
+                    AckOutcome { err: Some(err), fatal: true, data: WireAckData::default() }
+                }
+                Err(e) => {
+                    self.poisoned = true;
+                    AckOutcome { err: Some(e), fatal: true, data: WireAckData::default() }
+                }
+            };
+            outs.push(out);
+        }
+        outs
+    }
+
+    /// The mp backend's barrier semantics: the first error in rank
+    /// order is surfaced only after all `p` acks drained.
+    fn collect_acks(&mut self) -> Result<Vec<WireAckData>> {
+        let mut outs = self.collect_acks_each();
+        match outs.iter_mut().find_map(|o| o.err.take()) {
+            Some(e) => Err(e),
+            None => Ok(outs.into_iter().map(|o| o.data).collect()),
+        }
+    }
+
+    /// Send the same instruction to every rank (encoded once) and
+    /// collect the acks.
+    fn broadcast(&mut self, instr: &WireInstr) -> Result<Vec<WireAckData>> {
+        let frame = wire::encode_instr(instr);
+        for r in 0..self.p {
+            self.send_frame(r, &frame)?;
+        }
+        self.collect_acks()
+    }
+}
+
+impl Executor for ProcExecutor {
+    fn backend(&self) -> ExecBackend {
+        ExecBackend::Proc
+    }
+
+    fn ranks(&self) -> usize {
+        self.p
+    }
+
+    fn healthy(&self) -> bool {
+        !self.poisoned
+    }
+
+    fn begin_run(&mut self) -> Result<()> {
+        self.time = TimeBreakdown::default();
+        self.comm = CommStats::default();
+        self.step_compute.iter_mut().for_each(|t| *t = 0.0);
+        self.gather_live = false;
+        self.ensure_peers()?;
+        self.broadcast(&WireInstr::BeginRun).map(|_| ())
+    }
+
+    fn stage_blocks(&mut self, name: &str, global: &Tensor, dist: &TensorDist) -> Result<()> {
+        // Cut the blocks with the simulator's exact semantics (zeroed
+        // buffer + clipped box copy ≡ zero padding at global edges), so
+        // the staged bytes are identical across backends.
+        let ldims = dist.local_dims();
+        let zero_off = vec![0usize; ldims.len()];
+        for r in 0..self.p {
+            let (off, _size) = dist.block_for_rank(r);
+            let mut block = Tensor::zeros(&ldims);
+            block.copy_box_from(global, &off, &zero_off, &ldims);
+            self.send_instr(r, &WireInstr::Stage { name: name.to_string(), block })?;
+        }
+        self.collect_acks().map(|_| ())
+    }
+
+    fn put(&mut self, name: &str, per_rank: Vec<Tensor>) -> Result<()> {
+        if per_rank.len() != self.p {
+            return Err(Error::plan(format!(
+                "put {name}: {} tensors for {} ranks",
+                per_rank.len(),
+                self.p
+            )));
+        }
+        for (r, tensor) in per_rank.into_iter().enumerate() {
+            self.send_instr(r, &WireInstr::Put { name: name.to_string(), tensor })?;
+        }
+        self.collect_acks().map(|_| ())
+    }
+
+    fn get(&mut self, name: &str, rank: usize) -> Result<Tensor> {
+        if rank >= self.p {
+            return Err(Error::plan(format!("tensor {name} rank {rank} missing")));
+        }
+        let acks = self.broadcast(&WireInstr::Fetch { name: name.to_string() })?;
+        acks.into_iter()
+            .nth(rank)
+            .and_then(|d| d.tensor)
+            .ok_or_else(|| Error::plan(format!("tensor {name} rank {rank} missing")))
+    }
+
+    fn redistribute(
+        &mut self,
+        src_name: &str,
+        dst_name: &str,
+        rp: &RedistPlan,
+        src: &TensorDist,
+        dst: &TensorDist,
+    ) -> Result<()> {
+        debug_assert_eq!(src.extents, dst.extents);
+        if src_name == dst_name {
+            return Err(Error::plan(format!(
+                "redistribute: in-place aliasing ({src_name}) unsupported"
+            )));
+        }
+        if src.grid.size() > self.p || dst.grid.size() > self.p {
+            return Err(Error::plan(format!(
+                "redistribute: distribution grid ({} -> {} ranks) exceeds machine ({})",
+                src.grid.size(),
+                dst.grid.size(),
+                self.p
+            )));
+        }
+        // Split the plan's message list per rank: what each site
+        // extracts for shipping and what it applies locally (the
+        // coordinator relays the shipped boxes — star topology).
+        let mut sends: Vec<Vec<Message>> = (0..self.p).map(|_| Vec::new()).collect();
+        let mut locals: Vec<Vec<Message>> = (0..self.p).map(|_| Vec::new()).collect();
+        for m in &rp.messages {
+            if m.src >= self.p || m.dst >= self.p {
+                return Err(Error::plan(format!(
+                    "redistribute: message rank {}->{} exceeds machine ({})",
+                    m.src, m.dst, self.p
+                )));
+            }
+            if m.src == m.dst {
+                locals[m.src].push(m.clone());
+            } else {
+                sends[m.src].push(m.clone());
+            }
+        }
+        // Round one: every rank extracts its outgoing boxes (and checks
+        // the source's presence — the typed `redistribute: .. missing`
+        // error comes from the rank side, as in the mp backend).
+        for (r, s) in sends.iter().enumerate() {
+            self.send_instr(
+                r,
+                &WireInstr::RedistExtract { src: src_name.to_string(), sends: s.clone() },
+            )?;
+        }
+        let mut outs = self.collect_acks_each();
+        if outs.iter().any(|o| o.fatal) {
+            return Err(outs
+                .iter_mut()
+                .find_map(|o| o.err.take())
+                .expect("fatal outcome carries an error"));
+        }
+        let mut typed: Vec<Option<Error>> = Vec::with_capacity(self.p);
+        let mut incoming: Vec<Vec<WireBox>> = (0..self.p).map(|_| Vec::new()).collect();
+        for out in &mut outs {
+            typed.push(out.err.take());
+            for (dst_rank, b) in out.data.boxes.drain(..) {
+                if dst_rank >= self.p {
+                    self.poisoned = true;
+                    return Err(Error::protocol_at(
+                        None,
+                        "redistribute",
+                        format!("extracted box for rank {dst_rank} exceeds machine ({})", self.p),
+                    ));
+                }
+                incoming[dst_rank].push(b);
+            }
+        }
+        // Round two: ranks whose source was missing sit out (their
+        // destination stays untouched, as in the mp backend); everyone
+        // else fills the recycled destination from locals + relayed
+        // boxes.  Disjoint boxes make application order irrelevant to
+        // the bytes.
+        let ldims = dst.local_dims();
+        let nop = wire::encode_instr(&WireInstr::Nop);
+        for r in 0..self.p {
+            if typed[r].is_some() {
+                self.send_frame(r, &nop)?;
+            } else {
+                self.send_instr(
+                    r,
+                    &WireInstr::RedistApply {
+                        src: src_name.to_string(),
+                        dst: dst_name.to_string(),
+                        ldims: ldims.clone(),
+                        locals: std::mem::take(&mut locals[r]),
+                        incoming: std::mem::take(&mut incoming[r]),
+                    },
+                )?;
+            }
+        }
+        let res = self.collect_acks();
+        if let Some(e) = typed.into_iter().flatten().next() {
+            return Err(e);
+        }
+        res?;
+        // Charge the simulator's α–β model on the identical message set
+        // (max per-rank volume; links are parallel across rank pairs).
+        let mut sent = vec![0u128; self.p];
+        let mut recv = vec![0u128; self.p];
+        let mut msgs = vec![0u64; self.p];
+        for m in &rp.messages {
+            if m.src == m.dst {
+                continue;
+            }
+            let b = m.bytes() as u128;
+            sent[m.src] += b;
+            recv[m.dst] += b;
+            msgs[m.src] += 1;
+            self.comm.p2p_bytes += b;
+            self.comm.p2p_msgs += 1;
+        }
+        let max_bytes = sent.iter().zip(&recv).map(|(s, r)| s + r).max().unwrap_or(0) as f64;
+        let max_msgs = msgs.iter().max().copied().unwrap_or(0) as f64;
+        self.time.comm += self.net.p2p_time(max_msgs, max_bytes);
+        Ok(())
+    }
+
+    fn compute_step_into(&mut self, step: &ComputeStep) -> Result<()> {
+        let acks = self.broadcast(&WireInstr::Compute { step: step.clone() })?;
+        for (r, d) in acks.iter().enumerate() {
+            self.step_compute[r] += d.compute_s;
+        }
+        Ok(())
+    }
+
+    fn end_step(&mut self) {
+        let max = self.step_compute.iter().cloned().fold(0.0, f64::max);
+        self.time.compute += max;
+        self.step_compute.iter_mut().for_each(|t| *t = 0.0);
+    }
+
+    fn allreduce_sum(&mut self, name: &str, groups: &[Vec<usize>]) -> Result<()> {
+        for g in groups {
+            for &r in g {
+                if r >= self.p {
+                    return Err(Error::plan(format!(
+                        "allreduce {name}: rank {r} exceeds machine ({})",
+                        self.p
+                    )));
+                }
+            }
+        }
+        let eff: Vec<&Vec<usize>> = groups.iter().filter(|g| g.len() > 1).collect();
+        if eff.is_empty() {
+            // The mp backend still runs a (no-group) round; a Nop round
+            // keeps the lockstep identical.
+            self.broadcast(&WireInstr::Nop)?;
+            return Ok(());
+        }
+        // Membership maps (later groups win, matching the mp backend's
+        // per-rank slot assignment).
+        let mut member_group: Vec<Option<usize>> = vec![None; self.p];
+        let mut root_group: Vec<Option<usize>> = vec![None; self.p];
+        for (gi, g) in eff.iter().enumerate() {
+            root_group[g[0]] = Some(gi);
+            member_group[g[0]] = None;
+            for &r in &g[1..] {
+                member_group[r] = Some(gi);
+                root_group[r] = None;
+            }
+        }
+        // Round one: members hand their local block to the coordinator.
+        let extract = wire::encode_instr(&WireInstr::ReduceExtract { name: name.to_string() });
+        let nop = wire::encode_instr(&WireInstr::Nop);
+        for r in 0..self.p {
+            let frame = if member_group[r].is_some() { &extract } else { &nop };
+            self.send_frame(r, frame)?;
+        }
+        let mut outs = self.collect_acks_each();
+        if outs.iter().any(|o| o.fatal) {
+            return Err(outs
+                .iter_mut()
+                .find_map(|o| o.err.take())
+                .expect("fatal outcome carries an error"));
+        }
+        let mut group_err: Vec<Option<Error>> = (0..eff.len()).map(|_| None).collect();
+        let mut contrib: Vec<Option<Tensor>> = vec![None; self.p];
+        for (r, out) in outs.iter_mut().enumerate() {
+            let Some(gi) = member_group[r] else { continue };
+            if let Some(e) = out.err.take() {
+                if group_err[gi].is_none() {
+                    group_err[gi] = Some(e);
+                }
+            } else {
+                contrib[r] = out.data.tensor.take();
+            }
+        }
+        // Round two: each healthy group's root accumulates the relayed
+        // contributions in group order (the simulator's order — the
+        // bitwise-identity anchor) and returns the sum.
+        for r in 0..self.p {
+            let instr = match root_group[r] {
+                Some(gi) if group_err[gi].is_none() => {
+                    let g = eff[gi];
+                    let mut contribs = Vec::with_capacity(g.len() - 1);
+                    for &m in &g[1..] {
+                        let Some(t) = contrib[m].take() else {
+                            self.poisoned = true;
+                            return Err(Error::protocol_at(
+                                None,
+                                "allreduce",
+                                format!("rank {m} acked extract without a payload for {name}"),
+                            ));
+                        };
+                        contribs.push((m, t));
+                    }
+                    WireInstr::ReduceAccum { name: name.to_string(), root: r, contribs }
+                }
+                _ => WireInstr::Nop,
+            };
+            self.send_instr(r, &instr)?;
+        }
+        let mut outs = self.collect_acks_each();
+        if outs.iter().any(|o| o.fatal) {
+            return Err(outs
+                .iter_mut()
+                .find_map(|o| o.err.take())
+                .expect("fatal outcome carries an error"));
+        }
+        let mut payload: Vec<Option<usize>> = vec![None; eff.len()];
+        let mut result: Vec<Option<Tensor>> = (0..eff.len()).map(|_| None).collect();
+        for (r, out) in outs.iter_mut().enumerate() {
+            let Some(gi) = root_group[r] else { continue };
+            if group_err[gi].is_some() {
+                continue;
+            }
+            match out.err.take() {
+                Some(e) => group_err[gi] = Some(e),
+                None => {
+                    payload[gi] = out.data.payload_len;
+                    result[gi] = out.data.tensor.take();
+                }
+            }
+        }
+        // Round three: broadcast each healthy group's sum back to its
+        // members (the root already holds it).  Failing groups sit the
+        // round out — other groups still complete, as in the mp backend.
+        let mut store_frames: Vec<Option<Vec<u8>>> = (0..eff.len()).map(|_| None).collect();
+        for gi in 0..eff.len() {
+            if group_err[gi].is_none() {
+                let Some(res) = result[gi].take() else {
+                    self.poisoned = true;
+                    return Err(Error::protocol_at(
+                        None,
+                        "allreduce",
+                        format!("root rank {} acked accumulate without a sum for {name}", eff[gi][0]),
+                    ));
+                };
+                store_frames[gi] = Some(wire::encode_instr(&WireInstr::ReduceStore {
+                    name: name.to_string(),
+                    result: res,
+                }));
+            }
+        }
+        for r in 0..self.p {
+            let frame = match member_group[r] {
+                Some(gi) => store_frames[gi].clone().unwrap_or_else(|| nop.clone()),
+                None => nop.clone(),
+            };
+            self.send_frame(r, &frame)?;
+        }
+        self.collect_acks()?;
+        // Error selection matches the mp backend's first-in-rank-order
+        // barrier: every rank of a failing group saw the same message
+        // there, so the group with the smallest member rank wins.
+        let mut best: Option<(usize, Error)> = None;
+        for (gi, g) in eff.iter().enumerate() {
+            if let Some(e) = group_err[gi].take() {
+                let mr = g.iter().copied().min().unwrap_or(usize::MAX);
+                if best.as_ref().map_or(true, |(m, _)| mr < *m) {
+                    best = Some((mr, e));
+                }
+            }
+        }
+        if let Some((_, e)) = best {
+            return Err(e);
+        }
+        // Charge the simulator's tree-allreduce model per group from
+        // the payload length each group root measured.
+        let mut max_t = 0.0f64;
+        for (gi, g) in eff.iter().enumerate() {
+            let len = payload[gi].ok_or_else(|| {
+                Error::protocol_at(
+                    None,
+                    "allreduce",
+                    format!("missing payload length from root rank {} for {name}", g[0]),
+                )
+            })?;
+            let bytes = (len * ELEM_BYTES) as f64;
+            let t = self.net.allreduce_time(g.len(), bytes);
+            self.comm.allreduce_bytes += (len * ELEM_BYTES) as u128 * (g.len() as u128);
+            self.comm.allreduces += 1;
+            max_t = max_t.max(t);
+        }
+        self.time.comm += max_t;
+        Ok(())
+    }
+
+    fn gather_into(
+        &mut self,
+        name: &str,
+        dist: &TensorDist,
+        perm: Option<&[usize]>,
+        dest: &mut Tensor,
+    ) -> Result<()> {
+        // One Fetch round pulls every rank's block across the wire;
+        // assembly then uses the same owner/box math as the simulator.
+        let acks = self.broadcast(&WireInstr::Fetch { name: name.to_string() })?;
+        let tensors: Vec<Option<Tensor>> = acks.into_iter().map(|d| d.tensor).collect();
+        let assemble = |target: &mut Tensor| -> Result<()> {
+            let zero_off = vec![0usize; dist.extents.len()];
+            for bc in dist.block_coords() {
+                let owner = dist.owner_of_block(&bc);
+                let (off, size) = dist.block_for_rank(owner);
+                let t = tensors
+                    .get(owner)
+                    .and_then(|o| o.as_ref())
+                    .ok_or_else(|| Error::plan(format!("tensor {name} rank {owner} missing")))?;
+                target.copy_box_from(t, &zero_off, &off, &size);
+            }
+            Ok(())
+        };
+        match perm {
+            None => assemble(dest),
+            Some(p) => {
+                self.gather_live = true;
+                let mut g = match self.gather_stage.take() {
+                    Some(t) if t.dims() == &dist.extents[..] => {
+                        self.gather_stats.reuses += 1;
+                        t
+                    }
+                    _ => {
+                        self.gather_stats.allocs += 1;
+                        Tensor::zeros(&dist.extents)
+                    }
+                };
+                let res = assemble(&mut g).and_then(|()| g.permute_into(p, dest));
+                self.gather_stage = Some(g);
+                res
+            }
+        }
+    }
+
+    fn end_run(&mut self, live: &BTreeSet<String>) -> Result<()> {
+        self.broadcast(&WireInstr::EndRun { live: live.iter().cloned().collect() })?;
+        if !self.gather_live {
+            self.gather_stage = None;
+        }
+        Ok(())
+    }
+
+    fn store_stats(&self) -> StoreStats {
+        let mut s = StoreStats::default();
+        for r in &self.rank_store {
+            s.dest_allocs += r.dest_allocs;
+            s.dest_reuses += r.dest_reuses;
+            s.out_allocs += r.out_allocs;
+            s.out_reuses += r.out_reuses;
+        }
+        s
+    }
+
+    fn scratch_stats(&self) -> LocalScratchStats {
+        let mut s = self.gather_stats;
+        for r in &self.rank_scratch {
+            s.add(*r);
+        }
+        s
+    }
+
+    fn time(&self) -> TimeBreakdown {
+        self.time
+    }
+
+    fn comm(&self) -> CommStats {
+        self.comm.clone()
+    }
+}
+
+// Dropping the executor drops each Peer: best-effort Stop frame, a
+// bounded child wait (then kill), detached readers exiting at EOF.
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread::JoinHandle;
+
+    fn t(dims: &[usize], data: &[f32]) -> Tensor {
+        Tensor::from_vec(dims, data.to_vec()).unwrap()
+    }
+
+    /// In-process TCP workers: each serves exactly one connection with
+    /// the real `serve_stream` loop (the full wire protocol without
+    /// spawning child processes).
+    fn spawn_tcp_workers(n: usize) -> (Vec<String>, Vec<JoinHandle<()>>) {
+        let mut addrs = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for _ in 0..n {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            addrs.push(listener.local_addr().unwrap().to_string());
+            handles.push(thread::spawn(move || {
+                let engine = Arc::new(KernelEngine::native());
+                if let Ok((stream, _)) = listener.accept() {
+                    let _ = stream.set_nodelay(true);
+                    let rd = stream.try_clone().unwrap();
+                    let _ = serve_stream(engine, BufReader::new(rd), BufWriter::new(stream));
+                }
+            }));
+        }
+        (addrs, handles)
+    }
+
+    fn exec_tcp(addrs: Vec<String>, timeout_ms: u64) -> ProcExecutor {
+        let p = addrs.len();
+        let tuning = ExecTuning {
+            peer_timeout: Duration::from_millis(timeout_ms),
+            rank_addrs: Some(addrs),
+        };
+        ProcExecutor::new(p, NetworkModel::aries(), Arc::new(KernelEngine::native()), &tuning)
+    }
+
+    #[test]
+    fn put_fetch_roundtrip_and_missing_is_typed() {
+        let (addrs, handles) = spawn_tcp_workers(2);
+        {
+            let mut e = exec_tcp(addrs, 10_000);
+            e.begin_run().unwrap();
+            e.put("a", vec![t(&[2], &[1.0, 2.0]), t(&[2], &[3.0, 4.0])]).unwrap();
+            assert_eq!(e.get("a", 1).unwrap().data(), &[3.0, 4.0]);
+            assert!(matches!(e.get("missing", 0), Err(Error::Plan(_))));
+            assert!(matches!(e.get("a", 9), Err(Error::Plan(_))));
+            assert!(e.healthy(), "typed errors must not poison the executor");
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn allreduce_sums_groups_over_the_wire() {
+        let (addrs, handles) = spawn_tcp_workers(4);
+        {
+            let mut e = exec_tcp(addrs, 10_000);
+            e.begin_run().unwrap();
+            e.put(
+                "x",
+                vec![
+                    t(&[2], &[1.0, 2.0]),
+                    t(&[2], &[3.0, 4.0]),
+                    t(&[2], &[10.0, 20.0]),
+                    t(&[2], &[30.0, 40.0]),
+                ],
+            )
+            .unwrap();
+            e.allreduce_sum("x", &[vec![0, 1], vec![2, 3]]).unwrap();
+            assert_eq!(e.get("x", 0).unwrap().data(), &[4.0, 6.0]);
+            assert_eq!(e.get("x", 1).unwrap().data(), &[4.0, 6.0]);
+            assert_eq!(e.get("x", 2).unwrap().data(), &[40.0, 60.0]);
+            assert_eq!(e.get("x", 3).unwrap().data(), &[40.0, 60.0]);
+            let c = e.comm();
+            assert_eq!(c.allreduces, 2);
+            assert_eq!(c.allreduce_bytes, (2 * ELEM_BYTES) as u128 * 4);
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn allreduce_typed_errors_match_mp_and_do_not_poison() {
+        let (addrs, handles) = spawn_tcp_workers(2);
+        {
+            let mut e = exec_tcp(addrs, 10_000);
+            e.begin_run().unwrap();
+            // Missing tensor: a typed plan error.
+            let err = e.allreduce_sum("nope", &[vec![0, 1]]).unwrap_err();
+            assert!(matches!(err, Error::Plan(_)), "got: {err}");
+            assert_eq!(err.to_string(), "planning error: allreduce: nope missing");
+            assert!(e.healthy());
+            // Equal element counts, different shapes: a typed shape
+            // error with the buffers untouched.
+            e.put("y", vec![t(&[2, 3], &[1.0; 6]), t(&[3, 2], &[1.0; 6])]).unwrap();
+            let err = e.allreduce_sum("y", &[vec![0, 1]]).unwrap_err();
+            assert!(matches!(err, Error::Shape(_)), "got: {err}");
+            assert!(e.healthy(), "shape mismatch is data-dependent, not fatal");
+            assert_eq!(e.get("y", 0).unwrap().dims(), &[2, 3]);
+            assert_eq!(e.get("y", 1).unwrap().dims(), &[3, 2]);
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn dead_peer_is_typed_and_poisons() {
+        // A worker that handshakes and then dies: the next round must
+        // surface a typed protocol error under the peer deadline and
+        // poison the executor — never hang, never panic.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let h = thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut rd = BufReader::new(stream.try_clone().unwrap());
+            let mut wr = BufWriter::new(stream);
+            let hello = wire::read_frame(&mut rd).unwrap();
+            let (rank, _) = wire::check_hello(&hello).unwrap();
+            wire::write_frame(&mut wr, &wire::hello_ack(rank)).unwrap();
+            // ... and vanish before serving any instruction.
+        });
+        let mut e = exec_tcp(vec![addr], 1_000);
+        let err = e.begin_run().unwrap_err();
+        assert!(matches!(err, Error::Protocol { .. }), "got: {err}");
+        assert!(!e.healthy(), "a dead peer must poison the executor");
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn unreachable_listener_is_typed_and_poisons() {
+        // Bind-then-drop guarantees nobody is listening on the port.
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let mut e = exec_tcp(vec![addr], 200);
+        let err = e.begin_run().unwrap_err();
+        assert!(matches!(err, Error::Protocol { .. }), "got: {err}");
+        assert!(err.to_string().contains("cannot reach"), "got: {err}");
+        assert!(!e.healthy());
+    }
+
+    #[test]
+    fn too_few_rank_addrs_is_typed() {
+        let tuning = ExecTuning {
+            peer_timeout: Duration::from_millis(200),
+            rank_addrs: Some(vec!["127.0.0.1:1".to_string()]),
+        };
+        let mut e =
+            ProcExecutor::new(2, NetworkModel::aries(), Arc::new(KernelEngine::native()), &tuning);
+        let err = e.begin_run().unwrap_err();
+        assert!(matches!(err, Error::Protocol { .. }), "got: {err}");
+        assert!(err.to_string().contains("1 rank addresses for 2 ranks"), "got: {err}");
+        assert!(!e.healthy());
+    }
+}

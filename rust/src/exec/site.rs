@@ -1,0 +1,178 @@
+//! The per-rank site state shared by every distributed backend.
+//!
+//! A rank site — whether it lives on a thread ([`super::mp`]) or in a
+//! child process ([`super::proc`]) — owns exactly the same local world:
+//! a private store slice, recycled scratch, and the store-recycling
+//! counters.  [`SiteState`] is that world, with the recycling policies
+//! (stage-in-place, zeroed redistribution destinations, compute-output
+//! recycling) implemented **once**, so the counters the coordinator
+//! caches line up bitwise across backends and the typed error messages
+//! the fuzzer compares are identical by construction.
+
+use std::any::Any;
+use std::collections::{BTreeSet, HashMap};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::runtime::KernelEngine;
+use crate::sim::StoreStats;
+use crate::tensor::Tensor;
+
+use super::step::{self, ComputeStep, RankScratch, RankStore};
+use super::LocalScratchStats;
+
+/// The interpreter's read-only view of a rank site's store.
+pub(crate) struct LocalStore<'a> {
+    pub(crate) store: &'a HashMap<String, Tensor>,
+    pub(crate) rank: usize,
+}
+
+impl RankStore for LocalStore<'_> {
+    fn tensor(&self, name: &str) -> Result<&Tensor> {
+        self.store.get(name).ok_or_else(|| {
+            Error::plan(format!("tensor {name} rank {} missing", self.rank))
+        })
+    }
+}
+
+/// One rank's private world: local store slice, recycled scratch, and
+/// cumulative recycling counters.  Transport-agnostic — the mp backend
+/// wraps it in a thread, the proc backend in a worker process.
+pub(crate) struct SiteState {
+    pub(crate) rank: usize,
+    pub(crate) engine: Arc<KernelEngine>,
+    pub(crate) store: HashMap<String, Tensor>,
+    pub(crate) scratch: RankScratch,
+    pub(crate) stats: StoreStats,
+}
+
+impl SiteState {
+    pub(crate) fn new(rank: usize, engine: Arc<KernelEngine>) -> Self {
+        SiteState {
+            rank,
+            engine,
+            store: HashMap::new(),
+            scratch: RankScratch::default(),
+            stats: StoreStats::default(),
+        }
+    }
+
+    /// Cumulative local-scratch counters.
+    pub(crate) fn scratch_stats(&self) -> LocalScratchStats {
+        self.scratch.stats()
+    }
+
+    pub(crate) fn begin_run(&mut self) {
+        self.scratch.begin_run();
+    }
+
+    /// Prune the store/scratch down to the names this run touched.
+    pub(crate) fn end_run(&mut self, live: &BTreeSet<String>) {
+        self.store.retain(|k, _| live.contains(k));
+        self.scratch.end_run();
+    }
+
+    /// Install a staged input block, recycling the resident buffer in
+    /// place when the shape matches (the per-rank half of the
+    /// simulator's `dest_allocs`/`dest_reuses` accounting — the totals
+    /// line up because staging shapes are uniform across ranks).
+    pub(crate) fn stage(&mut self, name: String, block: Tensor) {
+        match self.store.remove(&name) {
+            Some(mut t) if t.dims() == block.dims() => {
+                self.stats.dest_reuses += 1;
+                t.data_mut().copy_from_slice(block.data());
+                self.store.insert(name, t);
+            }
+            _ => {
+                self.stats.dest_allocs += 1;
+                self.store.insert(name, block);
+            }
+        }
+    }
+
+    /// Take a zeroed destination buffer for a redistribution (recycled
+    /// when the resident shape matches, cleared so edge padding outside
+    /// the incoming boxes stays exact).
+    pub(crate) fn take_dest(&mut self, dst: &str, ldims: &[usize]) -> Tensor {
+        match self.store.remove(dst) {
+            Some(mut t) if t.dims() == ldims => {
+                self.stats.dest_reuses += 1;
+                t.data_mut().fill(0.0);
+                t
+            }
+            _ => {
+                self.stats.dest_allocs += 1;
+                Tensor::zeros(ldims)
+            }
+        }
+    }
+
+    /// Run the term's local kernel through the shared interpreter,
+    /// recycling the output buffer under the step's output name.
+    /// Returns the measured kernel seconds; errors are typed and
+    /// data-dependent (the site stays consistent — the buffer goes back
+    /// even on error, so a recovered run still recycles it).
+    pub(crate) fn compute(&mut self, step: &ComputeStep) -> Result<f64> {
+        // Replay the coordinator's per-term kernel config on this
+        // thread/process (thread-local overrides don't cross site
+        // boundaries).
+        self.engine.configure_override(step.kernel_cfg);
+        let mut dest = match self.store.remove(&step.out_name) {
+            Some(t) if t.dims() == step.out_dims.as_slice() => {
+                self.stats.out_reuses += 1;
+                t
+            }
+            _ => {
+                self.stats.out_allocs += 1;
+                Tensor::zeros(&step.out_dims)
+            }
+        };
+        let t0 = Instant::now();
+        let res = {
+            let view = LocalStore { store: &self.store, rank: self.rank };
+            step::execute_rank(&self.engine, &view, &mut self.scratch, step, &mut dest)
+        };
+        let dt = t0.elapsed().as_secs_f64();
+        self.store.insert(step.out_name.clone(), dest);
+        res.map(|()| dt)
+    }
+}
+
+/// The group root's allreduce accumulation: shape pre-check over the
+/// whole group before any accumulation (so a mismatch is a clean typed
+/// error with nothing half-summed), then accumulate in group order —
+/// the simulator's order, which is what keeps the backends bitwise
+/// identical.  `contribs` must already be ordered `g[1..]`.  Returns
+/// the payload length for the coordinator's cost model.
+pub(crate) fn accumulate_group(
+    name: &str,
+    root: usize,
+    buf: &mut Tensor,
+    contribs: &[(usize, &Tensor)],
+) -> Result<usize> {
+    for (r, c) in contribs {
+        if c.dims() != buf.dims() {
+            return Err(Error::shape(format!(
+                "allreduce {name}: rank {r} block {:?} != rank {root} block {:?}",
+                c.dims(),
+                buf.dims()
+            )));
+        }
+    }
+    for (_, c) in contribs {
+        buf.add_assign(c)?;
+    }
+    Ok(buf.len())
+}
+
+/// Best-effort extraction of a panic payload's message.
+pub(crate) fn panic_msg(p: &(dyn Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
+}

@@ -1,0 +1,1143 @@
+//! The proc backend's wire format: versioned, length-prefixed frames
+//! carrying the broadcast/ack instruction protocol across a process
+//! boundary.
+//!
+//! Layout rules, chosen for a dependency-free hand-rolled codec:
+//!
+//! - Every frame is `u32` little-endian length + payload, capped at
+//!   [`MAX_FRAME`] so a corrupt length prefix is rejected before any
+//!   allocation.
+//! - The first frame each way is a **handshake**: magic [`MAGIC`] +
+//!   protocol version [`VERSION`] + rank identity.  Mismatches are
+//!   typed [`Error::Protocol`] values with expected-vs-got detail —
+//!   a coordinator never drives a worker speaking another version.
+//! - Scalars are little-endian; `usize` travels as `u64`; index
+//!   characters as `u32` code points; tensor payloads as raw `f32`
+//!   little-endian bytes (bitwise exact, NaN payloads included).
+//! - Enums are `u8`-tagged.  Unknown tags are protocol errors, never
+//!   panics.
+//!
+//! Everything the mp backend moves over channels has a wire encoding
+//! here: instructions ([`WireInstr`], including the redistribution
+//! box payloads and allreduce partials of the star-topology
+//! collectives), acknowledgements ([`WireAck`] with the cumulative
+//! recycling counters), and typed [`Error`]s so a worker-side failure
+//! reconstructs **display-identically** on the coordinator — which is
+//! what keeps rejection signatures equal across backends.
+
+use std::io::{self, Read, Write};
+
+use crate::error::{Error, Result};
+use crate::redist::Message;
+use crate::sim::StoreStats;
+use crate::tensor::{KernelConfig, Tensor};
+
+use super::step::{
+    ComputeStep, OperandSrc, RedSpec, StepKind, StepOp, StepOperand,
+};
+use super::LocalScratchStats;
+
+/// Wire magic: the first bytes of every handshake frame.
+pub(crate) const MAGIC: [u8; 4] = *b"DEWF";
+
+/// Protocol version.  Bump on any layout change: a coordinator refuses
+/// to drive a worker speaking a different version.
+pub(crate) const VERSION: u16 = 1;
+
+/// Upper bound on a frame payload (1 GiB): a corrupt or hostile length
+/// prefix fails typed instead of attempting the allocation.
+pub(crate) const MAX_FRAME: usize = 1 << 30;
+
+/// Decode-side protocol error (no rank context at the codec layer; the
+/// transport wraps it with the failing site).
+fn bad(detail: impl Into<String>) -> Error {
+    Error::protocol_at(None, "decode", detail)
+}
+
+// ---------------------------------------------------------------- frames
+
+/// Write one length-prefixed frame and flush.
+pub(crate) fn write_frame(w: &mut impl Write, payload: &[u8]) -> io::Result<()> {
+    let len = u32::try_from(payload.len()).map_err(|_| {
+        io::Error::new(io::ErrorKind::InvalidInput, "frame exceeds u32 length")
+    })?;
+    w.write_all(&len.to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Read one length-prefixed frame (bounded by [`MAX_FRAME`]).
+pub(crate) fn read_frame(r: &mut impl Read) -> io::Result<Vec<u8>> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len)?;
+    let n = u32::from_le_bytes(len) as usize;
+    if n > MAX_FRAME {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame length {n} exceeds the {MAX_FRAME} cap"),
+        ));
+    }
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+// ------------------------------------------------------------- handshake
+
+/// Coordinator→worker hello: magic, version, the worker's rank, and the
+/// machine size.
+pub(crate) fn hello(rank: usize, ranks: usize) -> Vec<u8> {
+    let mut e = Enc::default();
+    e.buf.extend_from_slice(&MAGIC);
+    e.put_u16(VERSION);
+    e.put_u8(0); // kind: hello
+    e.put_usize(rank);
+    e.put_usize(ranks);
+    e.buf
+}
+
+/// Worker→coordinator hello acknowledgement, echoing the rank.
+pub(crate) fn hello_ack(rank: usize) -> Vec<u8> {
+    let mut e = Enc::default();
+    e.buf.extend_from_slice(&MAGIC);
+    e.put_u16(VERSION);
+    e.put_u8(1); // kind: hello-ack
+    e.put_usize(rank);
+    e.buf
+}
+
+fn check_preamble(d: &mut Dec<'_>, want_kind: u8) -> Result<()> {
+    let mut magic = [0u8; 4];
+    for b in magic.iter_mut() {
+        *b = d.u8()?;
+    }
+    if magic != MAGIC {
+        return Err(Error::protocol_at(
+            None,
+            "handshake",
+            format!("wire magic mismatch: expected {MAGIC:?}, got {magic:?}"),
+        ));
+    }
+    let version = d.u16()?;
+    if version != VERSION {
+        return Err(Error::protocol_at(
+            None,
+            "handshake",
+            format!("protocol version mismatch: expected {VERSION}, got {version}"),
+        ));
+    }
+    let kind = d.u8()?;
+    if kind != want_kind {
+        return Err(Error::protocol_at(
+            None,
+            "handshake",
+            format!("handshake kind mismatch: expected {want_kind}, got {kind}"),
+        ));
+    }
+    Ok(())
+}
+
+/// Validate a hello frame; returns `(rank, ranks)`.
+pub(crate) fn check_hello(frame: &[u8]) -> Result<(usize, usize)> {
+    let mut d = Dec::new(frame);
+    check_preamble(&mut d, 0)?;
+    let rank = d.usize()?;
+    let ranks = d.usize()?;
+    if rank >= ranks {
+        return Err(Error::protocol_at(
+            None,
+            "handshake",
+            format!("hello rank {rank} out of range for {ranks} ranks"),
+        ));
+    }
+    Ok((rank, ranks))
+}
+
+/// Validate a hello-ack frame against the rank the coordinator assigned.
+pub(crate) fn check_hello_ack(frame: &[u8], expect_rank: usize) -> Result<()> {
+    let mut d = Dec::new(frame);
+    check_preamble(&mut d, 1)?;
+    let rank = d.usize()?;
+    if rank != expect_rank {
+        return Err(Error::protocol_at(
+            None,
+            "handshake",
+            format!("hello-ack rank mismatch: expected {expect_rank}, got {rank}"),
+        ));
+    }
+    Ok(())
+}
+
+// ----------------------------------------------------------- primitives
+
+/// Append-only encoder over a byte buffer.
+#[derive(Default)]
+pub(crate) struct Enc {
+    pub(crate) buf: Vec<u8>,
+}
+
+impl Enc {
+    fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn put_u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn put_usize(&mut self, v: usize) {
+        self.put_u64(v as u64);
+    }
+    fn put_f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn put_bool(&mut self, v: bool) {
+        self.put_u8(v as u8);
+    }
+    fn put_str(&mut self, s: &str) {
+        self.put_usize(s.len());
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+    fn put_usizes(&mut self, v: &[usize]) {
+        self.put_usize(v.len());
+        for &x in v {
+            self.put_usize(x);
+        }
+    }
+    fn put_chars(&mut self, v: &[char]) {
+        self.put_usize(v.len());
+        for &c in v {
+            self.put_u32(c as u32);
+        }
+    }
+    fn put_opt_usize(&mut self, v: Option<usize>) {
+        match v {
+            Some(x) => {
+                self.put_bool(true);
+                self.put_usize(x);
+            }
+            None => self.put_bool(false),
+        }
+    }
+    fn put_tensor(&mut self, t: &Tensor) {
+        self.put_usizes(t.dims());
+        let data = t.data();
+        self.put_usize(data.len());
+        for &x in data {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    fn put_opt_tensor(&mut self, t: &Option<Tensor>) {
+        match t {
+            Some(t) => {
+                self.put_bool(true);
+                self.put_tensor(t);
+            }
+            None => self.put_bool(false),
+        }
+    }
+    fn put_message(&mut self, m: &Message) {
+        self.put_usize(m.src);
+        self.put_usize(m.dst);
+        self.put_usizes(&m.src_off);
+        self.put_usizes(&m.dst_off);
+        self.put_usizes(&m.size);
+    }
+}
+
+/// Cursor decoder; every read is bounds-checked and returns a typed
+/// protocol error on truncation.
+pub(crate) struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    pub(crate) fn new(buf: &'a [u8]) -> Self {
+        Dec { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).filter(|&e| e <= self.buf.len());
+        match end {
+            Some(e) => {
+                let s = &self.buf[self.pos..e];
+                self.pos = e;
+                Ok(s)
+            }
+            None => Err(bad(format!(
+                "truncated frame: wanted {n} bytes at offset {}, frame is {}",
+                self.pos,
+                self.buf.len()
+            ))),
+        }
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn usize(&mut self) -> Result<usize> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| bad(format!("u64 {v} exceeds usize")))
+    }
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn bool(&mut self) -> Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            v => Err(bad(format!("bool tag {v}: expected 0 or 1"))),
+        }
+    }
+    fn str(&mut self) -> Result<String> {
+        let n = self.usize()?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|e| bad(format!("invalid utf-8 string: {e}")))
+    }
+    fn len(&mut self, what: &str) -> Result<usize> {
+        let n = self.usize()?;
+        // A length can never promise more elements than bytes remain;
+        // rejecting here bounds every `Vec::with_capacity` below.
+        if n > self.buf.len().saturating_sub(self.pos) {
+            return Err(bad(format!(
+                "{what} length {n} exceeds remaining frame ({})",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(n)
+    }
+    fn usizes(&mut self) -> Result<Vec<usize>> {
+        let n = self.len("usize list")?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.usize()?);
+        }
+        Ok(v)
+    }
+    fn chars(&mut self) -> Result<Vec<char>> {
+        let n = self.len("char list")?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            let cp = self.u32()?;
+            v.push(
+                char::from_u32(cp)
+                    .ok_or_else(|| bad(format!("invalid char code point {cp}")))?,
+            );
+        }
+        Ok(v)
+    }
+    fn opt_usize(&mut self) -> Result<Option<usize>> {
+        Ok(if self.bool()? { Some(self.usize()?) } else { None })
+    }
+    fn tensor(&mut self) -> Result<Tensor> {
+        let dims = self.usizes()?;
+        let n = self.usize()?;
+        let bytes = self.take(n.checked_mul(4).ok_or_else(|| bad("tensor length overflow"))?)?;
+        let mut data = Vec::with_capacity(n);
+        for c in bytes.chunks_exact(4) {
+            data.push(f32::from_le_bytes(c.try_into().unwrap()));
+        }
+        Tensor::from_vec(&dims, data)
+            .map_err(|e| bad(format!("tensor dims/data mismatch: {e}")))
+    }
+    fn opt_tensor(&mut self) -> Result<Option<Tensor>> {
+        Ok(if self.bool()? { Some(self.tensor()?) } else { None })
+    }
+    fn message(&mut self) -> Result<Message> {
+        Ok(Message {
+            src: self.usize()?,
+            dst: self.usize()?,
+            src_off: self.usizes()?,
+            dst_off: self.usizes()?,
+            size: self.usizes()?,
+        })
+    }
+
+    /// All bytes must be consumed: trailing garbage is a framing bug.
+    fn finish(self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(bad(format!(
+                "{} trailing bytes after decode",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+// ----------------------------------------------------------- error codec
+
+fn put_error(e: &mut Enc, err: &Error) {
+    match err {
+        Error::Parse(m) => {
+            e.put_u8(0);
+            e.put_str(m);
+        }
+        Error::Shape(m) => {
+            e.put_u8(1);
+            e.put_str(m);
+        }
+        Error::Plan(m) => {
+            e.put_u8(2);
+            e.put_str(m);
+        }
+        Error::MalformedPlan { term, detail } => {
+            e.put_u8(3);
+            e.put_str(term);
+            e.put_str(detail);
+        }
+        Error::Runtime(m) => {
+            e.put_u8(4);
+            e.put_str(m);
+        }
+        Error::Io(io_err) => {
+            e.put_u8(5);
+            e.put_str(&io_err.to_string());
+        }
+        Error::Transient(m) => {
+            e.put_u8(6);
+            e.put_str(m);
+        }
+        Error::WorkerLost(m) => {
+            e.put_u8(7);
+            e.put_str(m);
+        }
+        Error::QueueFull => e.put_u8(8),
+        Error::DeadlineExceeded => e.put_u8(9),
+        Error::ServerShutdown => e.put_u8(10),
+        Error::Protocol { rank, instr, detail } => {
+            e.put_u8(11);
+            e.put_opt_usize(*rank);
+            e.put_str(instr);
+            e.put_str(detail);
+        }
+    }
+}
+
+fn get_error(d: &mut Dec<'_>) -> Result<Error> {
+    Ok(match d.u8()? {
+        0 => Error::Parse(d.str()?),
+        1 => Error::Shape(d.str()?),
+        2 => Error::Plan(d.str()?),
+        3 => Error::MalformedPlan { term: d.str()?, detail: d.str()? },
+        4 => Error::Runtime(d.str()?),
+        // io::Error is not cloneable/serializable; the message survives
+        // the wire and Displays identically.
+        5 => Error::Io(io::Error::other(d.str()?)),
+        6 => Error::Transient(d.str()?),
+        7 => Error::WorkerLost(d.str()?),
+        8 => Error::QueueFull,
+        9 => Error::DeadlineExceeded,
+        10 => Error::ServerShutdown,
+        11 => Error::Protocol { rank: d.opt_usize()?, instr: d.str()?, detail: d.str()? },
+        t => return Err(bad(format!("unknown error tag {t}"))),
+    })
+}
+
+// ----------------------------------------------------- compute-step codec
+
+fn put_kernel_config(e: &mut Enc, c: KernelConfig) {
+    e.put_usize(c.mc);
+    e.put_usize(c.kc);
+    e.put_usize(c.nc);
+    e.put_usize(c.threads);
+}
+
+fn get_kernel_config(d: &mut Dec<'_>) -> Result<KernelConfig> {
+    Ok(KernelConfig {
+        mc: d.usize()?,
+        kc: d.usize()?,
+        nc: d.usize()?,
+        threads: d.usize()?,
+    })
+}
+
+fn put_operand(e: &mut Enc, o: &StepOperand) {
+    match &o.src {
+        OperandSrc::Store(name) => {
+            e.put_u8(0);
+            e.put_str(name);
+        }
+        OperandSrc::Op { index, id } => {
+            e.put_u8(1);
+            e.put_usize(*index);
+            e.put_usize(*id);
+        }
+    }
+    e.put_chars(&o.idx);
+    match &o.red {
+        Some(r) => {
+            e.put_bool(true);
+            e.put_usize(r.slot);
+            e.put_chars(&r.idx);
+            e.put_usizes(&r.drop);
+            e.put_usizes(&r.dims);
+        }
+        None => e.put_bool(false),
+    }
+}
+
+fn get_operand(d: &mut Dec<'_>) -> Result<StepOperand> {
+    let src = match d.u8()? {
+        0 => OperandSrc::Store(d.str()?),
+        1 => OperandSrc::Op { index: d.usize()?, id: d.usize()? },
+        t => return Err(bad(format!("unknown operand source tag {t}"))),
+    };
+    let idx = d.chars()?;
+    let red = if d.bool()? {
+        Some(RedSpec {
+            slot: d.usize()?,
+            idx: d.chars()?,
+            drop: d.usizes()?,
+            dims: d.usizes()?,
+        })
+    } else {
+        None
+    };
+    Ok(StepOperand { src, idx, red })
+}
+
+pub(crate) fn put_step(e: &mut Enc, s: &ComputeStep) {
+    e.put_usize(s.term_index);
+    e.put_str(&s.term_name);
+    e.put_str(&s.out_name);
+    e.put_usizes(&s.out_dims);
+    put_kernel_config(e, s.kernel_cfg);
+    match &s.kind {
+        StepKind::Mttkrp { x_name, f_names, order, mode, natural_dims, perm } => {
+            e.put_u8(0);
+            e.put_str(x_name);
+            e.put_usize(f_names.len());
+            for f in f_names {
+                e.put_str(f);
+            }
+            e.put_usize(*order);
+            e.put_usize(*mode);
+            e.put_usizes(natural_dims);
+            match perm {
+                Some(p) => {
+                    e.put_bool(true);
+                    e.put_usizes(p);
+                }
+                None => e.put_bool(false),
+            }
+        }
+        StepKind::Seq { ops, op_dims, n_ops } => {
+            e.put_u8(1);
+            e.put_usize(ops.len());
+            for op in ops {
+                put_operand(e, &op.a);
+                match &op.b {
+                    Some(b) => {
+                        e.put_bool(true);
+                        put_operand(e, b);
+                    }
+                    None => e.put_bool(false),
+                }
+                e.put_chars(&op.output_idx);
+            }
+            e.put_usize(op_dims.len());
+            for d in op_dims {
+                e.put_usizes(d);
+            }
+            e.put_usize(*n_ops);
+        }
+    }
+}
+
+pub(crate) fn get_step(d: &mut Dec<'_>) -> Result<ComputeStep> {
+    let term_index = d.usize()?;
+    let term_name = d.str()?;
+    let out_name = d.str()?;
+    let out_dims = d.usizes()?;
+    let kernel_cfg = get_kernel_config(d)?;
+    let kind = match d.u8()? {
+        0 => {
+            let x_name = d.str()?;
+            let nf = d.len("mttkrp factors")?;
+            let mut f_names = Vec::with_capacity(nf);
+            for _ in 0..nf {
+                f_names.push(d.str()?);
+            }
+            StepKind::Mttkrp {
+                x_name,
+                f_names,
+                order: d.usize()?,
+                mode: d.usize()?,
+                natural_dims: d.usizes()?,
+                perm: if d.bool()? { Some(d.usizes()?) } else { None },
+            }
+        }
+        1 => {
+            let no = d.len("seq ops")?;
+            let mut ops = Vec::with_capacity(no);
+            for _ in 0..no {
+                let a = get_operand(d)?;
+                let b = if d.bool()? { Some(get_operand(d)?) } else { None };
+                let output_idx = d.chars()?;
+                ops.push(StepOp { a, b, output_idx });
+            }
+            let nd = d.len("seq op dims")?;
+            let mut op_dims = Vec::with_capacity(nd);
+            for _ in 0..nd {
+                op_dims.push(d.usizes()?);
+            }
+            StepKind::Seq { ops, op_dims, n_ops: d.usize()? }
+        }
+        t => return Err(bad(format!("unknown step kind tag {t}"))),
+    };
+    Ok(ComputeStep { term_index, term_name, out_name, out_dims, kernel_cfg, kind })
+}
+
+// ------------------------------------------------------ instruction codec
+
+/// One redistribution box riding the star topology: where it lands in
+/// the receiver's destination buffer, plus the payload.
+#[derive(Debug, Clone)]
+pub(crate) struct WireBox {
+    pub(crate) dst_off: Vec<usize>,
+    pub(crate) size: Vec<usize>,
+    pub(crate) data: Tensor,
+}
+
+/// One coordinator→worker instruction.  The mp backend's rank-to-rank
+/// collectives become star-topology rounds here (the coordinator relays
+/// the payloads), which keeps every round at exactly `p` instructions
+/// and `p` acknowledgements — the same lockstep barrier discipline.
+pub(crate) enum WireInstr {
+    /// This rank sits a round out (keeps the barrier balanced).
+    Nop,
+    BeginRun,
+    Stage { name: String, block: Tensor },
+    Put { name: String, tensor: Tensor },
+    Fetch { name: String },
+    /// First redistribution round: extract and return the outgoing
+    /// boxes of `sends` from `src` (every rank checks `src` presence,
+    /// matching the mp backend's typed-error semantics).
+    RedistExtract { src: String, sends: Vec<Message> },
+    /// Second redistribution round: fill the recycled destination from
+    /// the rank-local `locals` plus the relayed `incoming` boxes.
+    RedistApply {
+        src: String,
+        dst: String,
+        ldims: Vec<usize>,
+        locals: Vec<Message>,
+        incoming: Vec<WireBox>,
+    },
+    Compute { step: ComputeStep },
+    /// First allreduce round: return this member's local block.
+    ReduceExtract { name: String },
+    /// Second allreduce round (group root only): accumulate `contribs`
+    /// (ordered `g[1..]`) onto the local block and return the sum.
+    ReduceAccum { name: String, root: usize, contribs: Vec<(usize, Tensor)> },
+    /// Third allreduce round: overwrite the local block with the root's
+    /// reduced `result`.
+    ReduceStore { name: String, result: Tensor },
+    EndRun { live: Vec<String> },
+    Stop,
+}
+
+pub(crate) fn encode_instr(i: &WireInstr) -> Vec<u8> {
+    let mut e = Enc::default();
+    match i {
+        WireInstr::Nop => e.put_u8(0),
+        WireInstr::BeginRun => e.put_u8(1),
+        WireInstr::Stage { name, block } => {
+            e.put_u8(2);
+            e.put_str(name);
+            e.put_tensor(block);
+        }
+        WireInstr::Put { name, tensor } => {
+            e.put_u8(3);
+            e.put_str(name);
+            e.put_tensor(tensor);
+        }
+        WireInstr::Fetch { name } => {
+            e.put_u8(4);
+            e.put_str(name);
+        }
+        WireInstr::RedistExtract { src, sends } => {
+            e.put_u8(5);
+            e.put_str(src);
+            e.put_usize(sends.len());
+            for m in sends {
+                e.put_message(m);
+            }
+        }
+        WireInstr::RedistApply { src, dst, ldims, locals, incoming } => {
+            e.put_u8(6);
+            e.put_str(src);
+            e.put_str(dst);
+            e.put_usizes(ldims);
+            e.put_usize(locals.len());
+            for m in locals {
+                e.put_message(m);
+            }
+            e.put_usize(incoming.len());
+            for b in incoming {
+                e.put_usizes(&b.dst_off);
+                e.put_usizes(&b.size);
+                e.put_tensor(&b.data);
+            }
+        }
+        WireInstr::Compute { step } => {
+            e.put_u8(7);
+            put_step(&mut e, step);
+        }
+        WireInstr::ReduceExtract { name } => {
+            e.put_u8(8);
+            e.put_str(name);
+        }
+        WireInstr::ReduceAccum { name, root, contribs } => {
+            e.put_u8(9);
+            e.put_str(name);
+            e.put_usize(*root);
+            e.put_usize(contribs.len());
+            for (r, t) in contribs {
+                e.put_usize(*r);
+                e.put_tensor(t);
+            }
+        }
+        WireInstr::ReduceStore { name, result } => {
+            e.put_u8(10);
+            e.put_str(name);
+            e.put_tensor(result);
+        }
+        WireInstr::EndRun { live } => {
+            e.put_u8(11);
+            e.put_usize(live.len());
+            for n in live {
+                e.put_str(n);
+            }
+        }
+        WireInstr::Stop => e.put_u8(12),
+    }
+    e.buf
+}
+
+pub(crate) fn decode_instr(frame: &[u8]) -> Result<WireInstr> {
+    let mut d = Dec::new(frame);
+    let instr = match d.u8()? {
+        0 => WireInstr::Nop,
+        1 => WireInstr::BeginRun,
+        2 => WireInstr::Stage { name: d.str()?, block: d.tensor()? },
+        3 => WireInstr::Put { name: d.str()?, tensor: d.tensor()? },
+        4 => WireInstr::Fetch { name: d.str()? },
+        5 => {
+            let src = d.str()?;
+            let n = d.len("redist sends")?;
+            let mut sends = Vec::with_capacity(n);
+            for _ in 0..n {
+                sends.push(d.message()?);
+            }
+            WireInstr::RedistExtract { src, sends }
+        }
+        6 => {
+            let src = d.str()?;
+            let dst = d.str()?;
+            let ldims = d.usizes()?;
+            let nl = d.len("redist locals")?;
+            let mut locals = Vec::with_capacity(nl);
+            for _ in 0..nl {
+                locals.push(d.message()?);
+            }
+            let nb = d.len("redist boxes")?;
+            let mut incoming = Vec::with_capacity(nb);
+            for _ in 0..nb {
+                incoming.push(WireBox {
+                    dst_off: d.usizes()?,
+                    size: d.usizes()?,
+                    data: d.tensor()?,
+                });
+            }
+            WireInstr::RedistApply { src, dst, ldims, locals, incoming }
+        }
+        7 => WireInstr::Compute { step: get_step(&mut d)? },
+        8 => WireInstr::ReduceExtract { name: d.str()? },
+        9 => {
+            let name = d.str()?;
+            let root = d.usize()?;
+            let n = d.len("reduce contribs")?;
+            let mut contribs = Vec::with_capacity(n);
+            for _ in 0..n {
+                contribs.push((d.usize()?, d.tensor()?));
+            }
+            WireInstr::ReduceAccum { name, root, contribs }
+        }
+        10 => WireInstr::ReduceStore { name: d.str()?, result: d.tensor()? },
+        11 => {
+            let n = d.len("live names")?;
+            let mut live = Vec::with_capacity(n);
+            for _ in 0..n {
+                live.push(d.str()?);
+            }
+            WireInstr::EndRun { live }
+        }
+        12 => WireInstr::Stop,
+        t => return Err(bad(format!("unknown instruction tag {t}"))),
+    };
+    d.finish()?;
+    Ok(instr)
+}
+
+// -------------------------------------------------------------- ack codec
+
+/// Per-instruction acknowledgement payload: cumulative counters plus
+/// whatever the instruction produced (the wire twin of the mp backend's
+/// `AckData`, extended with the extracted redistribution boxes the star
+/// topology relays).
+#[derive(Default)]
+pub(crate) struct WireAckData {
+    pub(crate) compute_s: f64,
+    /// Fetched block, extracted allreduce contribution, or reduced
+    /// result — whichever the instruction asked for.
+    pub(crate) tensor: Option<Tensor>,
+    /// Allreduce payload length reported by a group root.
+    pub(crate) payload_len: Option<usize>,
+    /// Extracted redistribution boxes, each tagged with its
+    /// destination rank.
+    pub(crate) boxes: Vec<(usize, WireBox)>,
+    pub(crate) store: StoreStats,
+    pub(crate) scratch: LocalScratchStats,
+}
+
+/// One worker→coordinator acknowledgement.
+pub(crate) enum WireAck {
+    Ok(WireAckData),
+    /// Typed data-dependent failure; the site is still consistent.
+    Err { err: Error, data: WireAckData },
+    /// The site is broken; the executor must be poisoned.
+    Fatal { err: Error },
+}
+
+fn put_store_stats(e: &mut Enc, s: StoreStats) {
+    e.put_u64(s.dest_allocs);
+    e.put_u64(s.dest_reuses);
+    e.put_u64(s.out_allocs);
+    e.put_u64(s.out_reuses);
+}
+
+fn get_store_stats(d: &mut Dec<'_>) -> Result<StoreStats> {
+    Ok(StoreStats {
+        dest_allocs: d.u64()?,
+        dest_reuses: d.u64()?,
+        out_allocs: d.u64()?,
+        out_reuses: d.u64()?,
+    })
+}
+
+fn put_ack_data(e: &mut Enc, a: &WireAckData) {
+    e.put_f64(a.compute_s);
+    e.put_opt_tensor(&a.tensor);
+    e.put_opt_usize(a.payload_len);
+    e.put_usize(a.boxes.len());
+    for (dst, b) in &a.boxes {
+        e.put_usize(*dst);
+        e.put_usizes(&b.dst_off);
+        e.put_usizes(&b.size);
+        e.put_tensor(&b.data);
+    }
+    put_store_stats(e, a.store);
+    e.put_u64(a.scratch.allocs);
+    e.put_u64(a.scratch.reuses);
+}
+
+fn get_ack_data(d: &mut Dec<'_>) -> Result<WireAckData> {
+    let compute_s = d.f64()?;
+    let tensor = d.opt_tensor()?;
+    let payload_len = d.opt_usize()?;
+    let nb = d.len("ack boxes")?;
+    let mut boxes = Vec::with_capacity(nb);
+    for _ in 0..nb {
+        let dst = d.usize()?;
+        boxes.push((
+            dst,
+            WireBox { dst_off: d.usizes()?, size: d.usizes()?, data: d.tensor()? },
+        ));
+    }
+    let store = get_store_stats(d)?;
+    let scratch = LocalScratchStats { allocs: d.u64()?, reuses: d.u64()? };
+    Ok(WireAckData { compute_s, tensor, payload_len, boxes, store, scratch })
+}
+
+pub(crate) fn encode_ack(a: &WireAck) -> Vec<u8> {
+    let mut e = Enc::default();
+    match a {
+        WireAck::Ok(data) => {
+            e.put_u8(0);
+            put_ack_data(&mut e, data);
+        }
+        WireAck::Err { err, data } => {
+            e.put_u8(1);
+            put_error(&mut e, err);
+            put_ack_data(&mut e, data);
+        }
+        WireAck::Fatal { err } => {
+            e.put_u8(2);
+            put_error(&mut e, err);
+        }
+    }
+    e.buf
+}
+
+pub(crate) fn decode_ack(frame: &[u8]) -> Result<WireAck> {
+    let mut d = Dec::new(frame);
+    let ack = match d.u8()? {
+        0 => WireAck::Ok(get_ack_data(&mut d)?),
+        1 => WireAck::Err { err: get_error(&mut d)?, data: get_ack_data(&mut d)? },
+        2 => WireAck::Fatal { err: get_error(&mut d)? },
+        t => return Err(bad(format!("unknown ack tag {t}"))),
+    };
+    d.finish()?;
+    Ok(ack)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ELEM_BYTES;
+
+    fn t(dims: &[usize], data: &[f32]) -> Tensor {
+        Tensor::from_vec(dims, data.to_vec()).unwrap()
+    }
+
+    #[test]
+    fn frame_roundtrip_and_cap() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r).unwrap(), b"hello");
+        // A hostile length prefix fails before allocating.
+        let bogus = (u32::MAX).to_le_bytes();
+        assert!(read_frame(&mut &bogus[..]).is_err());
+        // Truncated payload is an io error, not a hang or panic.
+        let mut short = Vec::new();
+        write_frame(&mut short, b"abcdef").unwrap();
+        short.truncate(short.len() - 2);
+        assert!(read_frame(&mut &short[..]).is_err());
+    }
+
+    #[test]
+    fn handshake_roundtrip_and_mismatches_are_typed() {
+        let h = hello(3, 8);
+        assert_eq!(check_hello(&h).unwrap(), (3, 8));
+        let a = hello_ack(3);
+        check_hello_ack(&a, 3).unwrap();
+        // Wrong echoed rank.
+        let err = check_hello_ack(&a, 4).unwrap_err();
+        assert!(matches!(err, Error::Protocol { .. }), "got {err}");
+        assert!(err.to_string().contains("expected 4, got 3"), "got {err}");
+        // Version skew: expected-vs-got in the message.
+        let mut skew = hello(0, 1);
+        skew[4] = VERSION as u8 + 1;
+        let err = check_hello(&skew).unwrap_err();
+        assert!(err.to_string().contains("version mismatch"), "got {err}");
+        // Foreign magic.
+        let mut foreign = hello(0, 1);
+        foreign[0] = b'X';
+        assert!(check_hello(&foreign).is_err());
+        // A hello is not a hello-ack.
+        assert!(check_hello_ack(&h, 3).is_err());
+    }
+
+    #[test]
+    fn tensor_payloads_are_bitwise_exact() {
+        // NaN payloads, signed zeros, denormals: the codec must move
+        // bits, not values.
+        let vals = [f32::NAN, -0.0, f32::MIN_POSITIVE / 2.0, 1.5e-42, f32::INFINITY];
+        let src = t(&[5], &vals);
+        let mut e = Enc::default();
+        e.put_tensor(&src);
+        let mut d = Dec::new(&e.buf);
+        let back = d.tensor().unwrap();
+        d.finish().unwrap();
+        assert_eq!(back.dims(), src.dims());
+        for (a, b) in src.data().iter().zip(back.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(ELEM_BYTES, 4, "wire tensor encoding assumes f32 elements");
+    }
+
+    #[test]
+    fn instr_roundtrip_covers_every_variant() {
+        let msg = Message {
+            src: 0,
+            dst: 1,
+            src_off: vec![0, 2],
+            dst_off: vec![1, 0],
+            size: vec![2, 2],
+        };
+        let instrs = vec![
+            WireInstr::Nop,
+            WireInstr::BeginRun,
+            WireInstr::Stage { name: "x".into(), block: t(&[2], &[1.0, 2.0]) },
+            WireInstr::Put { name: "y".into(), tensor: t(&[1], &[3.0]) },
+            WireInstr::Fetch { name: "z".into() },
+            WireInstr::RedistExtract { src: "s".into(), sends: vec![msg.clone()] },
+            WireInstr::RedistApply {
+                src: "s".into(),
+                dst: "d".into(),
+                ldims: vec![4, 4],
+                locals: vec![msg],
+                incoming: vec![WireBox {
+                    dst_off: vec![0, 0],
+                    size: vec![1, 2],
+                    data: t(&[1, 2], &[5.0, 6.0]),
+                }],
+            },
+            WireInstr::ReduceExtract { name: "r".into() },
+            WireInstr::ReduceAccum {
+                name: "r".into(),
+                root: 0,
+                contribs: vec![(1, t(&[2], &[1.0, 1.0])), (2, t(&[2], &[2.0, 2.0]))],
+            },
+            WireInstr::ReduceStore { name: "r".into(), result: t(&[2], &[9.0, 9.0]) },
+            WireInstr::EndRun { live: vec!["a".into(), "b".into()] },
+            WireInstr::Stop,
+        ];
+        for i in &instrs {
+            let frame = encode_instr(i);
+            let back = decode_instr(&frame).unwrap();
+            // Structural equality via re-encoding (the types carry
+            // tensors, so no derived PartialEq).
+            assert_eq!(encode_instr(&back), frame);
+        }
+    }
+
+    #[test]
+    fn compute_step_roundtrips_both_kinds() {
+        use crate::exec::step::{PERMUTE_SLOT, REDUCE_BASE};
+        let cfg = KernelConfig { mc: 96, kc: 256, nc: 2048, threads: 3 };
+        let mttkrp = ComputeStep {
+            term_index: 2,
+            term_name: "T2".into(),
+            out_name: "out@T2".into(),
+            out_dims: vec![4, 6],
+            kernel_cfg: cfg,
+            kind: StepKind::Mttkrp {
+                x_name: "x@T2".into(),
+                f_names: vec!["f1".into(), "f2".into()],
+                order: 3,
+                mode: 1,
+                natural_dims: vec![6, 4],
+                perm: Some(vec![1, 0]),
+            },
+        };
+        let seq = ComputeStep {
+            term_index: 0,
+            term_name: "T0".into(),
+            out_name: "o".into(),
+            out_dims: vec![3],
+            kernel_cfg: cfg,
+            kind: StepKind::Seq {
+                ops: vec![StepOp {
+                    a: StepOperand {
+                        src: OperandSrc::Store("a".into()),
+                        idx: vec!['i', 'j'],
+                        red: Some(RedSpec {
+                            slot: REDUCE_BASE + 1,
+                            idx: vec!['i'],
+                            drop: vec![1],
+                            dims: vec![3],
+                        }),
+                    },
+                    b: Some(StepOperand {
+                        src: OperandSrc::Op { index: 0, id: 7 },
+                        idx: vec!['i'],
+                        red: None,
+                    }),
+                    output_idx: vec!['i'],
+                }],
+                op_dims: vec![vec![3]],
+                n_ops: 1,
+            },
+        };
+        for step in [&mttkrp, &seq] {
+            let mut e = Enc::default();
+            put_step(&mut e, step);
+            let mut d = Dec::new(&e.buf);
+            let back = get_step(&mut d).unwrap();
+            d.finish().unwrap();
+            let mut e2 = Enc::default();
+            put_step(&mut e2, &back);
+            assert_eq!(e.buf, e2.buf);
+        }
+        // The sentinel scratch slots survive the u64 trip.
+        let mut e = Enc::default();
+        e.put_usize(PERMUTE_SLOT);
+        let mut d = Dec::new(&e.buf);
+        assert_eq!(d.usize().unwrap(), PERMUTE_SLOT);
+    }
+
+    #[test]
+    fn ack_and_error_roundtrip_display_identical() {
+        let errs = vec![
+            Error::parse("bad expr"),
+            Error::shape("dims"),
+            Error::plan("redistribute: s missing"),
+            Error::malformed_plan("T1", "empty term"),
+            Error::runtime("kernel"),
+            Error::Io(io::Error::other("pipe broke")),
+            Error::transient("flaky"),
+            Error::worker_lost("gone"),
+            Error::QueueFull,
+            Error::DeadlineExceeded,
+            Error::ServerShutdown,
+            Error::protocol_at(3, "allreduce", "expected contribution, got Nop"),
+            Error::protocol("generic"),
+        ];
+        for err in errs {
+            let want = err.to_string();
+            let data = WireAckData {
+                compute_s: 0.5,
+                tensor: Some(t(&[1], &[2.0])),
+                payload_len: Some(7),
+                boxes: vec![(
+                    2,
+                    WireBox { dst_off: vec![1], size: vec![1], data: t(&[1], &[4.0]) },
+                )],
+                store: StoreStats {
+                    dest_allocs: 1,
+                    dest_reuses: 2,
+                    out_allocs: 3,
+                    out_reuses: 4,
+                },
+                scratch: LocalScratchStats { allocs: 5, reuses: 6 },
+            };
+            let frame = encode_ack(&WireAck::Err { err, data });
+            match decode_ack(&frame).unwrap() {
+                WireAck::Err { err, data } => {
+                    assert_eq!(err.to_string(), want, "error must Display identically");
+                    assert_eq!(data.compute_s, 0.5);
+                    assert_eq!(data.payload_len, Some(7));
+                    assert_eq!(data.store.out_reuses, 4);
+                    assert_eq!(data.scratch.reuses, 6);
+                    assert_eq!(data.boxes.len(), 1);
+                }
+                _ => panic!("wrong ack variant"),
+            }
+        }
+        // Truncated and trailing-garbage frames are typed errors.
+        let frame = encode_ack(&WireAck::Ok(WireAckData::default()));
+        assert!(decode_ack(&frame[..frame.len() - 1]).is_err());
+        let mut longer = frame.clone();
+        longer.push(0);
+        assert!(decode_ack(&longer).is_err());
+        assert!(decode_ack(&[99]).is_err());
+    }
+}

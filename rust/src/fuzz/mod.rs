@@ -702,6 +702,25 @@ mod tests {
     }
 
     #[test]
+    fn classify_on_proc_agrees_with_sim_signature() {
+        // Same leg across the process boundary: every case drives real
+        // `deinsum rank-worker` children over the wire format (`cargo
+        // test` builds the bin target, and the worker-binary discovery
+        // finds it next to the test executable).  Fewer cases than the
+        // mp leg — each classification spawns a fleet per rank count —
+        // but the contract is identical: zero bugs, and signatures that
+        // do not depend on the backend.
+        for k in 0..5 {
+            let case = generate(20260808, k);
+            let sim = classify_on(&case, &[1, 4], ExecBackend::Sim);
+            let proc_ = classify_on(&case, &[1, 4], ExecBackend::Proc);
+            assert!(!sim.is_bug(), "sim bug on case {k}: {}", sim.signature());
+            assert!(!proc_.is_bug(), "proc bug on case {k}: {}", proc_.signature());
+            assert_eq!(sim.signature(), proc_.signature(), "case {k}");
+        }
+    }
+
+    #[test]
     fn generated_cases_cover_the_advertised_space() {
         let (mut zero_ext, mut one_ext, mut empty_out, mut permuted) = (0, 0, 0, 0);
         for k in 0..200 {

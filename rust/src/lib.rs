@@ -134,7 +134,7 @@
 //!
 //! The run loop is generic over the [`Executor`] trait ([`exec`]) — the
 //! full plan-execution surface (staging, redistribution, local compute,
-//! allreduce, gather, recycling counters).  Two backends implement it:
+//! allreduce, gather, recycling counters).  Three backends implement it:
 //!
 //! - **`sim`** ([`ExecBackend::Sim`], the default): the in-process
 //!   simulated machine — sequential ranks over a shared store, measured
@@ -147,29 +147,55 @@
 //!   protocol violations (dead rank, timed-out collective) surface as
 //!   typed [`Error::Protocol`] values, never panics, and a poisoned
 //!   executor is rebuilt on the next run.
+//! - **`proc`** ([`ExecBackend::Proc`]): out-of-process rank sites —
+//!   every rank is a `deinsum rank-worker` child process spawned over
+//!   stdin/stdout pipes, or a pre-started TCP listener named by
+//!   `DEINSUM_RANK_ADDR` (comma-separated `host:port`, one per rank in
+//!   rank order; start listeners with
+//!   `deinsum rank-worker --listen host:0`).  Coordinator and workers
+//!   speak a versioned, length-prefixed wire format (magic + protocol
+//!   version handshake; a version skew is a typed error, never a
+//!   misparse), and every read and write carries a deadline —
+//!   [`SessionBuilder::peer_timeout`] / `DEINSUM_PEER_TIMEOUT_MS`,
+//!   shared with mp, default 60 s.  Failure semantics match mp: a dead
+//!   worker, a blown deadline, or a malformed frame surfaces as typed
+//!   [`Error::Protocol`] carrying the rank and instruction site, the
+//!   executor poisons (`healthy() == false`), and the next run rebuilds
+//!   it — respawning children (with bounded reconnect retries) or
+//!   redialing the configured listeners.  `DEINSUM_WORKER_BIN`
+//!   overrides worker-binary discovery when the coordinator is not the
+//!   `deinsum` CLI itself.
 //!
 //! Select per session with [`SessionBuilder::backend`], or process-wide
-//! with `DEINSUM_BACKEND=mp` (how CI runs the whole suite on the mp
-//! backend).  **Determinism contract**: block cuts, accumulation
-//! orders, and per-term kernel configs are fixed by the plan — never by
-//! the backend — so outputs are bitwise identical across backends:
+//! with `DEINSUM_BACKEND=mp|proc` (how CI runs the whole suite on the
+//! mp and proc backends).  **Determinism contract**: block cuts,
+//! accumulation orders, and per-term kernel configs are fixed by the
+//! plan — never by the backend — so outputs are bitwise identical
+//! across all three backends (pinned at P ∈ {1, 4, 8} in
+//! `tests/backends.rs`):
 //!
-//! ```
+//! ```no_run
 //! use deinsum::{ExecBackend, Session, Tensor};
 //! # fn main() -> deinsum::Result<()> {
 //! let shapes = vec![vec![12, 10, 8], vec![10, 4], vec![8, 4]];
 //! let inputs: Vec<Tensor> =
 //!     shapes.iter().enumerate().map(|(i, s)| Tensor::random(s, i as u64)).collect();
 //! let mut outputs = Vec::new();
-//! for backend in [ExecBackend::Sim, ExecBackend::Mp] {
+//! for backend in [ExecBackend::Sim, ExecBackend::Mp, ExecBackend::Proc] {
 //!     let session = Session::builder().ranks(4).backend(backend).build()?;
 //!     let mut program = session.compile("ijk,ja,ka->ia", &shapes)?;
 //!     outputs.push(program.run(&inputs)?.output);
 //! }
 //! assert!(outputs[0].allclose(&outputs[1], 0.0, 0.0)); // bitwise identical
+//! assert!(outputs[0].allclose(&outputs[2], 0.0, 0.0)); // ...across the process boundary too
 //! # Ok(())
 //! # }
 //! ```
+//!
+//! (`no_run` because the proc leg spawns `deinsum rank-worker`
+//! children, and rustdoc builds doctests outside the target directory
+//! where worker-binary discovery looks; the executed equivalents —
+//! including the bitwise pins — live in `tests/backends.rs`.)
 //!
 //! ## Serving
 //!
@@ -332,7 +358,7 @@ pub mod tensor;
 pub use api::{PlanCacheStats, Program, RunStats, Session, SessionBuilder};
 pub use coordinator::{RunMetrics, RunReport};
 pub use error::{Error, Result};
-pub use exec::{ExecBackend, Executor};
+pub use exec::{rank_worker, ExecBackend, Executor};
 pub use fault::{FaultKind, FaultPlan};
 pub use serve::{ServeReply, ServeRequest, ServeStats, Server, ServerBuilder, Ticket};
 pub use tensor::kernel::{KernelConfig, ScratchPool, ScratchStats};

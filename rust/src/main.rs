@@ -2,15 +2,21 @@
 //!
 //! Subcommands:
 //!   plan  <einsum> --shapes 64x64x64,64x24,64x24 [--ranks P]   print the schedule (§II-E)
-//!   run   <einsum> --shapes ... [--ranks P] [--backend sim|mp] execute on a backend (default:
+//!   run   <einsum> --shapes ... [--ranks P] [--backend sim|mp|proc]
+//!                                                              execute on a backend (default:
 //!                                                              DEINSUM_BACKEND, else sim)
-//!   bench [--ranks P] [--size-factor F] [--filter NAME] [--backend sim|mp]
+//!   bench [--ranks P] [--size-factor F] [--filter NAME] [--backend sim|mp|proc]
 //!                                                              Table IV suite, Fig. 5 rows
 //!   bounds [--s S]                                             §IV-E I/O lower bounds
 //!   fuzz  [--seed N] [--cases N] [--ranks 1,4,8] [--corpus F]  differential campaign vs the
 //!                                                              dense oracle (src/fuzz);
 //!                                                              DEINSUM_FUZZ_SEED/_CASE set =
 //!                                                              single-case repro mode
+//!   rank-worker [--listen HOST:PORT]                           serve one rank of the proc
+//!                                                              backend: over stdin/stdout
+//!                                                              (spawned by a coordinator) or
+//!                                                              as a TCP listener for
+//!                                                              DEINSUM_RANK_ADDR peers
 //!
 //! All einsum work goes through the [`Session`]/`Program` front door
 //! (`--artifacts DIR` serves local kernels from PJRT, degrading to the
@@ -71,7 +77,8 @@ fn backend_flag(args: &Args) -> Result<Option<ExecBackend>, String> {
         None => Ok(None),
         Some("sim") => Ok(Some(ExecBackend::Sim)),
         Some("mp") => Ok(Some(ExecBackend::Mp)),
-        Some(other) => Err(format!("bad --backend '{other}' (expected sim|mp)")),
+        Some("proc") => Ok(Some(ExecBackend::Proc)),
+        Some(other) => Err(format!("bad --backend '{other}' (expected sim|mp|proc)")),
     }
 }
 
@@ -89,7 +96,9 @@ fn session_from_flags(args: &Args) -> Result<Session, String> {
 fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() {
-        eprintln!("usage: deinsum <plan|run|bench|bounds|fuzz> [args]  (see README)");
+        eprintln!(
+            "usage: deinsum <plan|run|bench|bounds|fuzz|rank-worker> [args]  (see README)"
+        );
         return ExitCode::FAILURE;
     }
     let cmd = argv[0].clone();
@@ -100,6 +109,7 @@ fn main() -> ExitCode {
         "bench" => cmd_bench(&args),
         "bounds" => cmd_bounds(&args),
         "fuzz" => cmd_fuzz(&args),
+        "rank-worker" => cmd_rank_worker(&args),
         other => Err(format!("unknown command '{other}'")),
     };
     match res {
@@ -226,6 +236,12 @@ fn cmd_fuzz(args: &Args) -> Result<(), String> {
     } else {
         Err(format!("{} BUG case(s) — shrunk repros above", report.bugs.len()))
     }
+}
+
+fn cmd_rank_worker(args: &Args) -> Result<(), String> {
+    // stdout is the wire in pipe mode: nothing else may print there.
+    let listen = args.flags.get("listen").map(String::as_str);
+    deinsum::rank_worker(listen).map_err(|e| e.to_string())
 }
 
 fn cmd_bounds(args: &Args) -> Result<(), String> {

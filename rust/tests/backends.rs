@@ -1,16 +1,28 @@
-//! Cross-backend execution pins (tier-1): the simulated machine and the
-//! message-passing backend must produce **bitwise identical** outputs
-//! for the same plan and inputs — block cuts, accumulation orders, and
-//! per-term kernel configs are fixed by the plan, never by the backend.
+//! Cross-backend execution pins (tier-1): the simulated machine, the
+//! message-passing backend, and the out-of-process backend must produce
+//! **bitwise identical** outputs for the same plan and inputs — block
+//! cuts, accumulation orders, and per-term kernel configs are fixed by
+//! the plan, never by the backend.
 //!
-//! Every pin runs `run` plus a dirty-destination `run_into` on both
-//! backends at several rank counts, including the paper's kernels
+//! Every pin runs `run` plus a dirty-destination `run_into` on all
+//! three backends at several rank counts, including the paper's kernels
 //! (MTTKRP, TTMc), a permuted gather, an allreduce-bearing two-term
 //! split, and degenerate distributions (P=1 grids, extent-0/extent-1
 //! blocks, edge-rank clipped padding surviving dirty store recycling).
+//! The proc backend additionally pins its failure semantics: a killed
+//! rank-worker process yields a typed error (no hang, no panic) and the
+//! run loop's rebuild seam reconnects on the next run.
+
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
 
 use deinsum::planner::PlannerConfig;
-use deinsum::{ExecBackend, Session, Tensor};
+use deinsum::{Error, ExecBackend, Session, Tensor};
+
+/// Every executor backend, in comparison order (sim is the anchor).
+const BACKENDS: [ExecBackend; 3] =
+    [ExecBackend::Sim, ExecBackend::Mp, ExecBackend::Proc];
 
 /// Compile + `run` + dirty-destination `run_into` on one backend.
 fn run_once(
@@ -39,9 +51,10 @@ fn run_once(
     Ok(rep.output)
 }
 
-/// Run `expr` on both backends at `p` ranks: either both accept — and
-/// their outputs are bitwise identical — or both reject with the same
-/// typed error message.  Returns the output when accepted.
+/// Run `expr` on every backend at `p` ranks: either all accept — and
+/// their outputs are bitwise identical to the simulator's — or all
+/// reject with the same typed error message.  Returns the output when
+/// accepted.
 fn pin_bitwise_or_reject(
     expr: &str,
     shapes: &[Vec<usize>],
@@ -54,35 +67,35 @@ fn pin_bitwise_or_reject(
         .map(|(i, s)| Tensor::random(s, 1000 + i as u64))
         .collect();
     let sim = run_once(expr, shapes, p, cfg, ExecBackend::Sim, &inputs);
-    let mp = run_once(expr, shapes, p, cfg, ExecBackend::Mp, &inputs);
-    match (sim, mp) {
-        (Ok(a), Ok(b)) => {
-            assert!(
+    for backend in [ExecBackend::Mp, ExecBackend::Proc] {
+        let other = run_once(expr, shapes, p, cfg, backend, &inputs);
+        match (&sim, other) {
+            (Ok(a), Ok(b)) => assert!(
                 a.allclose(&b, 0.0, 0.0),
-                "{expr} P={p}: sim vs mp must be bitwise identical"
-            );
-            Some(b)
-        }
-        (Err(a), Err(b)) => {
-            assert_eq!(
+                "{expr} P={p}: sim vs {} must be bitwise identical",
+                backend.name()
+            ),
+            (Err(a), Err(b)) => assert_eq!(
                 a.to_string(),
                 b.to_string(),
-                "{expr} P={p}: backends must reject identically"
-            );
-            None
+                "{expr} P={p}: sim vs {} must reject identically",
+                backend.name()
+            ),
+            (sim, other) => panic!(
+                "{expr} P={p}: backends disagree on acceptance (sim: {:?}, {}: {:?})",
+                sim.as_ref().map(|_| "accepted").map_err(|e| e.to_string()),
+                backend.name(),
+                other.map(|_| "accepted").map_err(|e| e.to_string()),
+            ),
         }
-        (sim, mp) => panic!(
-            "{expr} P={p}: backends disagree on acceptance (sim: {:?}, mp: {:?})",
-            sim.map(|_| "accepted").map_err(|e| e.to_string()),
-            mp.map(|_| "accepted").map_err(|e| e.to_string()),
-        ),
     }
+    sim.ok()
 }
 
 /// [`pin_bitwise_or_reject`] for expressions that must be accepted.
 fn pin_bitwise(expr: &str, shapes: &[Vec<usize>], p: usize, cfg: PlannerConfig) -> Tensor {
     pin_bitwise_or_reject(expr, shapes, p, cfg)
-        .unwrap_or_else(|| panic!("{expr} P={p}: expected both backends to accept"))
+        .unwrap_or_else(|| panic!("{expr} P={p}: expected every backend to accept"))
 }
 
 #[test]
@@ -127,7 +140,8 @@ fn permuted_gather_bitwise_across_backends() {
 fn allreduce_and_redistribution_bitwise_across_backends() {
     // A small analysis S forces the two-term [MTTKRP, MM] split: the
     // plan carries an inter-term redistribution, and the term grids
-    // reduce over sub-grids (real allreduce traffic on the mp backend).
+    // reduce over sub-grids (real allreduce traffic on the distributed
+    // backends).
     let cfg = PlannerConfig { s_elements: 64.0, ..Default::default() };
     for p in [1, 4, 8] {
         pin_bitwise(
@@ -143,7 +157,7 @@ fn allreduce_and_redistribution_bitwise_across_backends() {
 fn degenerate_extents_bitwise_across_backends() {
     // Extent-1 and extent-0 blocks through staging, redistribution and
     // gather: the degenerate distributions the fuzzer generates, pinned
-    // on both backends at P=1 (trivial grids) and P ∈ {4, 8}.
+    // on every backend at P=1 (trivial grids) and P ∈ {4, 8}.
     for p in [1, 4, 8] {
         pin_bitwise(
             "ij,jk->ik",
@@ -152,7 +166,7 @@ fn degenerate_extents_bitwise_across_backends() {
             PlannerConfig::default(),
         );
         // Extent 0: accepted with an empty output, or rejected typed —
-        // but identically on both backends.
+        // but identically on every backend.
         if let Some(empty) = pin_bitwise_or_reject(
             "ij,jk->ik",
             &[vec![0, 4], vec![4, 3]],
@@ -174,7 +188,7 @@ fn degenerate_extents_bitwise_across_backends() {
 fn edge_rank_clipped_padding_survives_dirty_recycling() {
     // Prime-ish extents leave the edge ranks with clipped blocks whose
     // buffers carry zero padding; reruns recycle those buffers dirty, so
-    // the padding must be re-established every run on both backends.
+    // the padding must be re-established every run on every backend.
     let shapes = [vec![9, 7, 5], vec![7, 3], vec![5, 3]];
     let inputs: Vec<Tensor> = shapes
         .iter()
@@ -182,7 +196,7 @@ fn edge_rank_clipped_padding_survives_dirty_recycling() {
         .map(|(i, s)| Tensor::random(s, 42 + i as u64))
         .collect();
     let mut outputs: Vec<Tensor> = Vec::new();
-    for backend in [ExecBackend::Sim, ExecBackend::Mp] {
+    for backend in BACKENDS {
         let session =
             Session::builder().ranks(8).backend(backend).build().unwrap();
         let mut prog = session.compile("ijk,ja,ka->ia", &shapes).unwrap();
@@ -198,15 +212,17 @@ fn edge_rank_clipped_padding_survives_dirty_recycling() {
         }
         outputs.push(first);
     }
-    assert!(outputs[0].allclose(&outputs[1], 0.0, 0.0), "sim vs mp");
+    for (backend, out) in BACKENDS.iter().zip(&outputs).skip(1) {
+        assert!(outputs[0].allclose(out, 0.0, 0.0), "sim vs {}", backend.name());
+    }
 }
 
-#[test]
-fn mp_tensor_counters_stay_flat_across_reruns() {
-    // The mp backend is not zero-alloc asserted at the engine-pool level
-    // (rank kernels hit the shared pool concurrently), but its
-    // tensor-level counters — per-rank store destinations, compute
-    // outputs, local scratch — must go flat once warm, same as sim.
+/// Shared body of the counters pin: the distributed backends are not
+/// zero-alloc asserted at the engine-pool level (rank kernels hit the
+/// shared pool concurrently), but their tensor-level counters —
+/// per-rank store destinations, compute outputs, local scratch — must
+/// go flat once warm, same as sim.
+fn tensor_counters_stay_flat_on(backend: ExecBackend) {
     let cfg = PlannerConfig { s_elements: 64.0, ..Default::default() };
     let shapes = [vec![16, 16, 16], vec![16, 8], vec![16, 8], vec![8, 16]];
     let inputs: Vec<Tensor> = shapes
@@ -217,7 +233,7 @@ fn mp_tensor_counters_stay_flat_across_reruns() {
     let session = Session::builder()
         .ranks(8)
         .planner(cfg)
-        .backend(ExecBackend::Mp)
+        .backend(backend)
         .build()
         .unwrap();
     let mut prog = session.compile("ijk,ja,ka,al->il", &shapes).unwrap();
@@ -235,8 +251,100 @@ fn mp_tensor_counters_stay_flat_across_reruns() {
     assert_eq!(
         after.tensor_allocs(),
         warm.tensor_allocs(),
-        "warm mp reruns must not allocate store/scratch tensors ({warm:?} -> {after:?})"
+        "warm {} reruns must not allocate store/scratch tensors ({warm:?} -> {after:?})",
+        backend.name()
     );
     assert!(after.store.dest_reuses > warm.store.dest_reuses);
     assert!(after.store.out_reuses > warm.store.out_reuses);
+}
+
+#[test]
+fn mp_tensor_counters_stay_flat_across_reruns() {
+    tensor_counters_stay_flat_on(ExecBackend::Mp);
+}
+
+#[test]
+fn proc_tensor_counters_stay_flat_across_reruns() {
+    tensor_counters_stay_flat_on(ExecBackend::Proc);
+}
+
+/// Spawn one `deinsum rank-worker --listen 127.0.0.1:0` child via the
+/// real CLI and parse the `listening <addr>` line for its ephemeral
+/// port.
+fn spawn_listen_worker(listen: &str) -> (Child, String) {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_deinsum"))
+        .args(["rank-worker", "--listen", listen])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .expect("spawn rank-worker");
+    let stdout = child.stdout.take().expect("worker stdout");
+    let mut line = String::new();
+    BufReader::new(stdout).read_line(&mut line).expect("worker banner");
+    let addr = line
+        .trim()
+        .strip_prefix("listening ")
+        .unwrap_or_else(|| panic!("unexpected worker banner: {line:?}"))
+        .to_string();
+    (child, addr)
+}
+
+#[test]
+fn killed_rank_worker_is_typed_and_rebuild_reconnects() {
+    // Two real rank-worker processes in TCP listen mode.
+    let (child0, addr0) = spawn_listen_worker("127.0.0.1:0");
+    let (child1, addr1) = spawn_listen_worker("127.0.0.1:0");
+    let mut children = vec![child0, child1];
+    let session = Session::builder()
+        .ranks(2)
+        .backend(ExecBackend::Proc)
+        .rank_addrs(vec![addr0, addr1.clone()])
+        // Also bounds the dead-address reconnect below: that run fails
+        // only after the full connect window, so keep it short.
+        .peer_timeout(Duration::from_secs(2))
+        .build()
+        .unwrap();
+    let shapes = [vec![8, 6], vec![6, 4]];
+    let inputs: Vec<Tensor> = shapes
+        .iter()
+        .enumerate()
+        .map(|(i, s)| Tensor::random(s, 77 + i as u64))
+        .collect();
+    let mut prog = session.compile("ij,jk->ik", &shapes).unwrap();
+    let first = prog.run(&inputs).unwrap().output;
+
+    // Kill rank 1's process mid-life: the next run must surface a typed
+    // error under the peer deadline — no hang, no panic.
+    children[1].kill().expect("kill rank 1");
+    children[1].wait().expect("reap rank 1");
+    let err = prog.run(&inputs).unwrap_err();
+    assert!(
+        matches!(err, Error::Protocol { .. }),
+        "killed worker must be a typed protocol error, got: {err}"
+    );
+
+    // The poisoned executor is rebuilt on the next run; with rank 1
+    // still dead the reconnect itself fails typed (never hangs).
+    let err = prog.run(&inputs).unwrap_err();
+    assert!(
+        matches!(err, Error::Protocol { .. }),
+        "reconnect to a dead worker must stay typed, got: {err}"
+    );
+
+    // Revive rank 1 at its old address (SO_REUSEADDR lets the listener
+    // rebind immediately): the rebuild seam reconnects and the program
+    // completes bitwise-identically.
+    let (child1b, addr1b) = spawn_listen_worker(&addr1);
+    children[1] = child1b;
+    assert_eq!(addr1b, addr1, "revived worker must reuse the address");
+    let again = prog.run(&inputs).unwrap().output;
+    assert!(
+        first.allclose(&again, 0.0, 0.0),
+        "post-rebuild run must be bitwise identical"
+    );
+
+    for mut c in children {
+        let _ = c.kill();
+        let _ = c.wait();
+    }
 }
