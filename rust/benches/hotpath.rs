@@ -712,6 +712,71 @@ fn main() {
         }
     }
 
+    // --- serving throughput: fused same-key batching ---------------------------
+    //
+    // Single-key burst traffic into a single worker, submitted open-loop
+    // (all tickets in flight before the first wait) so the queue holds
+    // same-key neighbours and the drain coalesces them into fused
+    // `run_batch_into` executions: operands staged once per term,
+    // per-term configuration amortized over the whole batch.  Compare
+    // against `serve_throughput_1w` (same worker count, mixed keys, no
+    // fusion opportunity) for the batching win.
+    {
+        use deinsum::{ServeRequest, Server, Ticket};
+        let n = if tiny { 8 } else { 16 };
+        let r = 4usize;
+        let expr = "ijk,ja,ka->ia";
+        let shapes = vec![vec![n, n, n], vec![n, r], vec![n, r]];
+        let batch = if tiny { 16usize } else { 64 };
+        let inputs: Vec<std::sync::Arc<Vec<Tensor>>> = (0..batch)
+            .map(|q| {
+                std::sync::Arc::new(
+                    shapes
+                        .iter()
+                        .enumerate()
+                        .map(|(j, s)| Tensor::random(s, (131 + 5 * q + j) as u64))
+                        .collect::<Vec<_>>(),
+                )
+            })
+            .collect();
+        let shape = format!("1 key x {batch} reqs n={n}");
+        let session = Session::builder().ranks(8).kernel_config(cfg).build().unwrap();
+        let server =
+            Server::builder(session).workers(1).queue_capacity(batch + 1).build();
+        let mut dests: Vec<Option<Tensor>> = (0..batch)
+            .map(|_| Some(Tensor::zeros(&Server::output_dims(expr, &shapes).unwrap())))
+            .collect();
+        let drive = |dests: &mut Vec<Option<Tensor>>| {
+            let tickets: Vec<Ticket> = (0..batch)
+                .map(|q| {
+                    server
+                        .submit(ServeRequest {
+                            tenant: "bench-batched".into(),
+                            expr: expr.into(),
+                            shapes: shapes.clone(),
+                            inputs: std::sync::Arc::clone(&inputs[q]),
+                            dest: dests[q].take().unwrap(),
+                        })
+                        .unwrap()
+                })
+                .collect();
+            for (q, t) in tickets.into_iter().enumerate() {
+                dests[q] = Some(t.wait().unwrap().output);
+            }
+        };
+        drive(&mut dests); // warm the program + per-member batch buffers
+        let (med, _, _) = common::time_median(reps, || drive(&mut dests));
+        let rps = batch as f64 / med;
+        let st = server.stats();
+        println!(
+            "serve batched {shape} 1w: {} per burst ({rps:.0} req/s, {} fused members, p99 {:.6}s)",
+            common::fmt_s(med),
+            st.batched,
+            st.p99_latency_s,
+        );
+        record(&mut records, "serve_throughput_batched", &shape, med, None, None);
+    }
+
     // --- serving admission: try_submit + bounded wait round trip ---------------
     //
     // The 0.7.0 fault-tolerant admission path (dims validation against

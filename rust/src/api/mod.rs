@@ -89,7 +89,9 @@ use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::baseline::plan_baseline;
-use crate::coordinator::{run_plan, ExecState, LocalScratchStats, RunMetrics, RunReport};
+use crate::coordinator::{
+    run_plan, run_plan_batch, BatchRun, ExecState, LocalScratchStats, RunMetrics, RunReport,
+};
 use crate::einsum::EinsumSpec;
 use crate::error::Result;
 use crate::exec::{ExecBackend, ExecTuning};
@@ -516,6 +518,8 @@ impl Session {
             plan,
             state: ExecState::with_backend(self.backend, self.tuning.clone()),
             runs: 0,
+            batch_runs: 0,
+            batch_members: 0,
         }
     }
 }
@@ -529,8 +533,16 @@ impl Session {
 /// across reruns of a warm program.
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct RunStats {
-    /// Completed `run`/`run_into` calls of this program.
+    /// Completed executions of this program: every `run`/`run_into` call
+    /// plus every successful member of a `run_batch_into` batch.
     pub runs: u64,
+    /// Completed [`Program::run_batch_into`] invocations (one per fused
+    /// batch, regardless of member count).
+    pub batch_runs: u64,
+    /// Members executed across every completed batch invocation — the
+    /// counterpart of [`runs`](RunStats::runs) for sizing how much
+    /// traffic rode the fused path.
+    pub batch_members: u64,
     /// Staging/redistribution destination + compute-output counters of
     /// the program's persistent backend.
     pub store: StoreStats,
@@ -598,6 +610,8 @@ pub struct Program {
     plan: Arc<Plan>,
     state: ExecState,
     runs: u64,
+    batch_runs: u64,
+    batch_members: u64,
 }
 
 impl Program {
@@ -654,6 +668,63 @@ impl Program {
         Ok(metrics)
     }
 
+    /// Execute a whole coalesced batch through **one** staged pass:
+    /// every member's operands are staged into the persistent backend
+    /// under batch-member store names, per-term kernel configuration and
+    /// fault checks run once for the batch instead of once per member,
+    /// and program inputs that alias one underlying buffer across
+    /// members (requests sharing an `Arc<Vec<Tensor>>`) are staged
+    /// exactly once.  Each member's output is gathered through its own
+    /// [`BatchRun::dest`].
+    ///
+    /// Results are **bitwise identical** to calling
+    /// [`run_into`](Self::run_into) back-to-back for each member, at
+    /// every thread count and on every backend — each member executes
+    /// the exact same kernel-call sequence, just with the per-term setup
+    /// amortized.  Steady-state batches of a stable size perform zero
+    /// tensor allocations, the same counter-asserted invariant as the
+    /// serial path.
+    ///
+    /// The outer `Err` is a batch-level infrastructure failure (executor
+    /// build, protocol violation, injected fault): no member completed.
+    /// The inner per-member `Result`s carry individual admission
+    /// failures — a member with mismatched input or dest shapes fails
+    /// typed and is excluded without poisoning its batch-mates.
+    ///
+    /// ```
+    /// # use deinsum::{BatchRun, Session, Tensor};
+    /// # fn main() -> deinsum::Result<()> {
+    /// let session = Session::builder().ranks(4).build()?;
+    /// let shapes = vec![vec![8, 6], vec![6, 4]];
+    /// let mut program = session.compile("ij,jk->ik", &shapes)?;
+    /// let inputs = vec![Tensor::random(&[8, 6], 1), Tensor::random(&[6, 4], 2)];
+    /// let mut d0 = Tensor::zeros(&program.output_dims());
+    /// let mut d1 = Tensor::zeros(&program.output_dims());
+    /// let mut batch =
+    ///     vec![BatchRun::new(&inputs, &mut d0), BatchRun::new(&inputs, &mut d1)];
+    /// let results = program.run_batch_into(&mut batch)?;
+    /// assert!(results.iter().all(|r| r.is_ok()));
+    /// assert!(d0.allclose(&d1, 0.0, 0.0)); // same inputs, same bytes
+    /// # Ok(())
+    /// # }
+    /// ```
+    pub fn run_batch_into(
+        &mut self,
+        batch: &mut [BatchRun<'_>],
+    ) -> Result<Vec<Result<RunMetrics>>> {
+        let results = run_plan_batch(
+            &self.engine,
+            self.network,
+            &mut self.state,
+            &self.plan,
+            batch,
+        )?;
+        self.batch_runs += 1;
+        self.batch_members += batch.len() as u64;
+        self.runs += results.iter().filter(|r| r.is_ok()).count() as u64;
+        Ok(results)
+    }
+
     /// Render the generated schedule (the paper's §II-E "intermediate
     /// program": grids, distributions, compute, Allreduce, Redistribute).
     pub fn schedule(&self) -> String {
@@ -687,6 +758,8 @@ impl Program {
     pub fn stats(&self) -> RunStats {
         RunStats {
             runs: self.runs,
+            batch_runs: self.batch_runs,
+            batch_members: self.batch_members,
             store: self.state.store_stats(),
             local_scratch: self.state.local_scratch_stats(),
             engine_scratch: self.engine.scratch_stats(),
@@ -765,6 +838,114 @@ mod tests {
         // second run must keep reusing it (counters keep accumulating).
         prog.run(&inputs).unwrap();
         assert!(prog.stats().store.dest_reuses > 0);
+    }
+
+    #[test]
+    fn run_batch_into_is_bitwise_identical_to_serial_runs() {
+        // Two fresh sessions of identical config compile identical
+        // programs; one serves the members back-to-back with run_into,
+        // the other fuses them with run_batch_into.  Outputs must match
+        // bit for bit (allclose with zero tolerance).
+        let shapes = vec![vec![12, 10, 8], vec![10, 4], vec![8, 4]];
+        let member_inputs: Vec<Vec<Tensor>> = (0..3u64)
+            .map(|i| {
+                vec![
+                    Tensor::random(&[12, 10, 8], 100 + i),
+                    Tensor::random(&[10, 4], 200 + i),
+                    Tensor::random(&[8, 4], 300 + i),
+                ]
+            })
+            .collect();
+        let serial: Vec<Tensor> = {
+            let s = Session::builder().ranks(4).build().unwrap();
+            let mut p = s.compile("ijk,ja,ka->ia", &shapes).unwrap();
+            member_inputs
+                .iter()
+                .map(|inputs| {
+                    let mut d = Tensor::zeros(&p.output_dims());
+                    p.run_into(inputs, &mut d).unwrap();
+                    d
+                })
+                .collect()
+        };
+        let s = Session::builder().ranks(4).build().unwrap();
+        let mut p = s.compile("ijk,ja,ka->ia", &shapes).unwrap();
+        let mut dests: Vec<Tensor> =
+            (0..member_inputs.len()).map(|_| Tensor::zeros(&p.output_dims())).collect();
+        let results = {
+            let mut batch: Vec<BatchRun> = member_inputs
+                .iter()
+                .zip(dests.iter_mut())
+                .map(|(inputs, d)| BatchRun::new(inputs, d))
+                .collect();
+            p.run_batch_into(&mut batch).unwrap()
+        };
+        assert!(results.iter().all(|r| r.is_ok()));
+        for (got, want) in dests.iter().zip(&serial) {
+            assert!(got.allclose(want, 0.0, 0.0), "batched output diverged");
+        }
+        let st = p.stats();
+        assert_eq!((st.batch_runs, st.batch_members, st.runs), (1, 3, 3));
+        // Batch metrics are per member: each carries the full term list.
+        for r in &results {
+            assert!(!r.as_ref().unwrap().per_term.is_empty());
+        }
+    }
+
+    #[test]
+    fn run_batch_into_steady_state_allocates_nothing() {
+        let shapes = vec![vec![16, 12], vec![12, 8]];
+        let s = Session::builder().ranks(4).build().unwrap();
+        let mut p = s.compile("ij,jk->ik", &shapes).unwrap();
+        let inputs_a = vec![Tensor::random(&[16, 12], 1), Tensor::random(&[12, 8], 2)];
+        let inputs_b = vec![Tensor::random(&[16, 12], 3), Tensor::random(&[12, 8], 4)];
+        let mut d0 = Tensor::zeros(&p.output_dims());
+        let mut d1 = Tensor::zeros(&p.output_dims());
+        let run = |p: &mut Program, d0: &mut Tensor, d1: &mut Tensor| {
+            let mut batch =
+                vec![BatchRun::new(&inputs_a, d0), BatchRun::new(&inputs_b, d1)];
+            let results = p.run_batch_into(&mut batch).unwrap();
+            assert!(results.iter().all(|r| r.is_ok()));
+        };
+        run(&mut p, &mut d0, &mut d1); // warmup allocates the buffer sets
+        let warm = p.stats().tensor_allocs();
+        for _ in 0..4 {
+            run(&mut p, &mut d0, &mut d1);
+        }
+        let st = p.stats();
+        assert_eq!(st.tensor_allocs(), warm, "steady-state batch allocated: {st:?}");
+        assert_eq!(st.batch_runs, 5);
+    }
+
+    #[test]
+    fn run_batch_member_validation_is_per_member() {
+        // A shape-invalid member fails typed through its own inner
+        // Result; batch-mates execute and land correct bytes.
+        let shapes = vec![vec![8, 6], vec![6, 4]];
+        let s = Session::builder().ranks(2).build().unwrap();
+        let mut p = s.compile("ij,jk->ik", &shapes).unwrap();
+        let inputs = vec![Tensor::random(&[8, 6], 7), Tensor::random(&[6, 4], 8)];
+        let want = {
+            let s2 = Session::builder().ranks(2).build().unwrap();
+            let mut p2 = s2.compile("ij,jk->ik", &shapes).unwrap();
+            p2.run(&inputs).unwrap().output
+        };
+        let mut good = Tensor::zeros(&p.output_dims());
+        let mut bad = Tensor::zeros(&[3, 3]);
+        let results = {
+            let mut batch =
+                vec![BatchRun::new(&inputs, &mut good), BatchRun::new(&inputs, &mut bad)];
+            p.run_batch_into(&mut batch).unwrap()
+        };
+        assert!(results[0].is_ok());
+        assert!(
+            matches!(results[1], Err(crate::error::Error::Shape(_))),
+            "bad dest must fail typed: {:?}",
+            results[1]
+        );
+        assert!(good.allclose(&want, 0.0, 0.0), "batch-mate poisoned by invalid member");
+        let st = p.stats();
+        assert_eq!((st.batch_runs, st.batch_members, st.runs), (1, 2, 1));
     }
 
     #[test]

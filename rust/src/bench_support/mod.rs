@@ -181,13 +181,19 @@ pub fn suite(size_factor: usize) -> Vec<BenchDef> {
 /// Deinsum-vs-baseline measurement at one (benchmark, P) point.
 #[derive(Debug, Clone)]
 pub struct BenchPoint {
+    /// Benchmark name (Table IV row).
     pub name: String,
+    /// Rank count of this weak-scaling point.
     pub p: usize,
+    /// Deinsum's modeled compute/communication split.
     pub deinsum: TimeBreakdown,
+    /// The CTF-like baseline's split on the same inputs.
     pub baseline: TimeBreakdown,
     /// Exact communication volumes (bytes) for both schedulers.
     pub deinsum_comm_bytes: u128,
+    /// The baseline's exact communication volume in bytes.
     pub baseline_comm_bytes: u128,
+    /// Baseline total time over deinsum total time.
     pub speedup: f64,
 }
 

@@ -55,6 +55,7 @@ pub use crate::exec::LocalScratchStats;
 /// Per-term execution statistics.
 #[derive(Debug, Clone, Default)]
 pub struct TermStats {
+    /// The term's name in the schedule (e.g. `"T0"`).
     pub name: String,
     /// Max per-rank local compute seconds.
     pub compute: f64,
@@ -69,7 +70,7 @@ pub struct TermStats {
 /// Time/volume accounting of one run, without the gathered output — what
 /// [`crate::api::Program::run_into`] returns (the output lands in the
 /// caller's recycled tensor instead).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct RunMetrics {
     /// Total simulated time.
     pub time: TimeBreakdown,
@@ -372,6 +373,280 @@ fn run_plan_inner(
         per_term,
     };
     Ok((output, metrics))
+}
+
+/// One member of a fused batch execution: the member's program inputs
+/// plus the recycled destination its gathered output is written through.
+/// [`crate::api::Program::run_batch_into`] callers build one per
+/// coalesced request from disjoint per-request borrows.
+#[derive(Debug)]
+pub struct BatchRun<'a> {
+    /// Program inputs, one per operand in einsum order.
+    pub inputs: &'a [Tensor],
+    /// Output destination — dims must match the program's output dims;
+    /// overwritten on success.
+    pub dest: &'a mut Tensor,
+}
+
+impl<'a> BatchRun<'a> {
+    /// Pair one request's inputs with its recycled destination.
+    pub fn new(inputs: &'a [Tensor], dest: &'a mut Tensor) -> Self {
+        BatchRun { inputs, dest }
+    }
+}
+
+/// Per-member admission check (input count/dims, dest dims) — the same
+/// validation [`run_plan`] applies up front, but scoped to one member so
+/// a shape-invalid member fails typed without poisoning its batch-mates.
+fn validate_member(plan: &Plan, m: &BatchRun<'_>) -> Result<()> {
+    if m.inputs.len() != plan.path.n_inputs {
+        return Err(Error::plan(format!(
+            "plan needs {} inputs, got {}",
+            plan.path.n_inputs,
+            m.inputs.len()
+        )));
+    }
+    for (op, t) in plan.spec.inputs.iter().zip(m.inputs) {
+        let want: Vec<usize> = op.iter().map(|c| plan.spec.extents[c]).collect();
+        if t.dims() != want {
+            return Err(Error::shape(format!(
+                "input dims {:?} != spec {:?}",
+                t.dims(),
+                want
+            )));
+        }
+    }
+    let want: Vec<usize> = plan.spec.output.iter().map(|c| plan.spec.extents[c]).collect();
+    if m.dest.dims() != want {
+        return Err(Error::shape(format!(
+            "run_batch_into: dest dims {:?} != output dims {want:?}",
+            m.dest.dims()
+        )));
+    }
+    Ok(())
+}
+
+/// Store-name suffix for batch member `k`.  Member 0 uses the unsuffixed
+/// serial names, so a batch of one touches byte-for-byte the same store
+/// entries as [`run_plan`] and the two paths share warm buffers; members
+/// `k >= 1` get a stable `#b{k}` suffix, so same-shape batches recycle
+/// the same buffer sets run after run (the zero-steady-state-allocation
+/// invariant extends to the batched path).
+fn member_suffix(k: usize) -> String {
+    if k == 0 {
+        String::new()
+    } else {
+        format!("#b{k}")
+    }
+}
+
+/// Execute `plan` once for every member of a coalesced batch through one
+/// executor pass: per term, the engine is configured (and the fault site
+/// checked) **once**, then each member's operands are staged under
+/// member-suffixed store names and driven through the same
+/// [`ComputeStep`] interpreter as [`run_plan`] — so every member's
+/// kernel-call sequence, and therefore its output bytes, is identical to
+/// a serial back-to-back run on every backend and at every thread count.
+///
+/// Program inputs that share one underlying buffer across members (the
+/// serving layer's coalesced requests usually share one
+/// `Arc<Vec<Tensor>>`) are staged once and referenced by every member,
+/// which is where the batch's staging saving comes from.
+///
+/// The outer `Result` is a batch-level infrastructure failure (executor
+/// build, protocol violation, injected per-term fault): no member
+/// completed, and the caller retries or fails the batch as a unit.  The
+/// inner per-member `Result`s carry each member's own admission errors
+/// (excluded from execution, batch-mates unaffected) or its
+/// [`RunMetrics`] (time/comm attributed per member via counter deltas).
+pub(crate) fn run_plan_batch(
+    engine: &Arc<KernelEngine>,
+    network: NetworkModel,
+    state: &mut ExecState,
+    plan: &Plan,
+    members: &mut [BatchRun<'_>],
+) -> Result<Vec<Result<RunMetrics>>> {
+    struct ResetConfig<'e>(&'e KernelEngine);
+    impl Drop for ResetConfig<'_> {
+        fn drop(&mut self) {
+            self.0.reset_config();
+        }
+    }
+    let _reset = ResetConfig(engine);
+    run_plan_batch_inner(engine, network, state, plan, members)
+}
+
+fn run_plan_batch_inner(
+    engine: &Arc<KernelEngine>,
+    network: NetworkModel,
+    state: &mut ExecState,
+    plan: &Plan,
+    members: &mut [BatchRun<'_>],
+) -> Result<Vec<Result<RunMetrics>>> {
+    let mut results: Vec<Result<RunMetrics>> = members
+        .iter()
+        .map(|m| validate_member(plan, m).map(|()| RunMetrics::default()))
+        .collect();
+    let valid: Vec<usize> =
+        results.iter().enumerate().filter(|(_, r)| r.is_ok()).map(|(i, _)| i).collect();
+    if valid.is_empty() {
+        return Ok(results);
+    }
+
+    let backend = state.backend;
+    let rebuild = match state.exec.as_ref() {
+        Some(e) => e.ranks() != plan.p || e.backend() != backend || !e.healthy(),
+        None => true,
+    };
+    if rebuild {
+        state.exec =
+            Some(exec::make(backend, plan.p, network, Arc::clone(engine), &state.tuning));
+    }
+    let exec = state
+        .exec
+        .as_mut()
+        .ok_or_else(|| Error::plan("executor initialization failed"))?;
+    exec.begin_run()?;
+    let mut live_names: BTreeSet<String> = BTreeSet::new();
+    // Program inputs staged this term, keyed by (operand id, buffer
+    // address): a member whose operand aliases an already-staged buffer
+    // references that member's store entry instead of staging again.
+    let mut staged: std::collections::BTreeMap<(usize, usize), String> =
+        std::collections::BTreeMap::new();
+
+    for (ti, term) in plan.terms.iter().enumerate() {
+        // One per-term configuration + fault check for the whole batch —
+        // the amortization the batched entry point exists for.
+        engine.configure_for_term(term);
+        engine.faults().check(crate::fault::site::RUN_PLAN_TERM)?;
+        staged.clear();
+
+        for &k in &valid {
+            let time0 = exec.time();
+            let comm0 = exec.comm();
+            let sfx = member_suffix(k);
+            let mut stats = TermStats { name: term.name.clone(), ..Default::default() };
+
+            let mut in_names: Vec<String> = Vec::with_capacity(term.inputs.len());
+            for (slot, tin) in term.inputs.iter().enumerate() {
+                let name = if tin.id < plan.path.n_inputs {
+                    let input = &members[k].inputs[tin.id];
+                    let key = (tin.id, input.data().as_ptr() as usize);
+                    match staged.get(&key) {
+                        Some(n) => n.clone(),
+                        None => {
+                            let n = format!("t{}@{}{}", tin.id, term.name, sfx);
+                            exec.stage_blocks(&n, input, &tin.dist)?;
+                            staged.insert(key, n.clone());
+                            n
+                        }
+                    }
+                } else {
+                    let name = format!("t{}@{}{}", tin.id, term.name, sfx);
+                    let mv = plan
+                        .moves
+                        .iter()
+                        .find(|m| m.to_term == ti && m.to_slot == slot)
+                        .ok_or_else(|| {
+                            Error::malformed_plan(
+                                &term.name,
+                                format!("no move for t{} into slot {slot}", tin.id),
+                            )
+                        })?;
+                    let from = plan.terms.get(mv.from_term).ok_or_else(|| {
+                        Error::malformed_plan(
+                            &term.name,
+                            format!("move from_term {} out of range", mv.from_term),
+                        )
+                    })?;
+                    let src_name = format!("t{}@{}{}", tin.id, from.name, sfx);
+                    exec.redistribute(&src_name, &name, &mv.plan, &mv.src, &mv.dst)?;
+                    name
+                };
+                stats.local_in_bytes +=
+                    tin.dist.local_dims().iter().product::<usize>() * ELEM_BYTES;
+                live_names.insert(name.clone());
+                in_names.push(name);
+            }
+
+            let out_name = format!("t{}@{}{}", term.output_id, term.name, sfx);
+            live_names.insert(out_name.clone());
+            let step = ComputeStep::build(
+                term,
+                ti,
+                &in_names,
+                out_name.clone(),
+                engine.base_config(),
+            )?;
+            exec.compute_step_into(&step)?;
+            exec.end_step();
+            stats.local_out_bytes =
+                term.output_dist.local_dims().iter().product::<usize>() * ELEM_BYTES;
+
+            if !term.reduced_grid_dims.is_empty() {
+                let groups = reduction_groups(&term.grid, &term.reduced_grid_dims);
+                exec.allreduce_sum(&out_name, &groups)?;
+            }
+
+            let time1 = exec.time();
+            let comm1 = exec.comm();
+            stats.compute = time1.compute - time0.compute;
+            stats.comm = time1.comm - time0.comm;
+            if let Ok(m) = &mut results[k] {
+                m.time.compute += time1.compute - time0.compute;
+                m.time.comm += time1.comm - time0.comm;
+                add_comm_delta(&mut m.comm, &comm0, &comm1);
+                m.per_term.push(stats);
+            }
+        }
+    }
+
+    // --- gather each member's result --------------------------------------
+    let last = plan.terms.last().ok_or_else(|| Error::plan("empty plan"))?;
+    let dist = &last.output_dist;
+    let perm: Option<Vec<usize>> = if last.output_indices == plan.spec.output {
+        None
+    } else {
+        Some(
+            plan.spec
+                .output
+                .iter()
+                .map(|c| {
+                    last.output_indices.iter().position(|d| d == c).ok_or_else(|| {
+                        Error::malformed_plan(
+                            &last.name,
+                            format!("output index '{c}' missing"),
+                        )
+                    })
+                })
+                .collect::<Result<_>>()?,
+        )
+    };
+    for &k in &valid {
+        let time0 = exec.time();
+        let comm0 = exec.comm();
+        let out_name = format!("t{}@{}{}", last.output_id, last.name, member_suffix(k));
+        exec.gather_into(&out_name, dist, perm.as_deref(), members[k].dest)?;
+        let time1 = exec.time();
+        let comm1 = exec.comm();
+        if let Ok(m) = &mut results[k] {
+            m.time.compute += time1.compute - time0.compute;
+            m.time.comm += time1.comm - time0.comm;
+            add_comm_delta(&mut m.comm, &comm0, &comm1);
+        }
+    }
+
+    exec.end_run(&live_names)?;
+    Ok(results)
+}
+
+/// Accumulate the `before -> after` change of the executor's cumulative
+/// communication counters into one member's share.
+fn add_comm_delta(acc: &mut CommStats, before: &CommStats, after: &CommStats) {
+    acc.p2p_bytes += after.p2p_bytes - before.p2p_bytes;
+    acc.p2p_msgs += after.p2p_msgs - before.p2p_msgs;
+    acc.allreduce_bytes += after.allreduce_bytes - before.allreduce_bytes;
+    acc.allreduces += after.allreduces - before.allreduces;
 }
 
 /// Unary local op: permutation, possibly with summed-away indices

@@ -106,24 +106,34 @@ pub type Result<T> = std::result::Result<T, Error>;
 
 /// Shorthand constructors used across modules.
 impl Error {
+    /// An [`Error::Parse`]: the einsum expression is malformed.
     pub fn parse(m: impl Into<String>) -> Self {
         Error::Parse(m.into())
     }
+    /// An [`Error::Shape`]: operands or destinations disagree with
+    /// the spec's dimensions.
     pub fn shape(m: impl Into<String>) -> Self {
         Error::Shape(m.into())
     }
+    /// An [`Error::Plan`]: the planner cannot produce a schedule.
     pub fn plan(m: impl Into<String>) -> Self {
         Error::Plan(m.into())
     }
+    /// An [`Error::MalformedPlan`]: an internally inconsistent plan,
+    /// named by the offending term.
     pub fn malformed_plan(term: impl Into<String>, detail: impl Into<String>) -> Self {
         Error::MalformedPlan { term: term.into(), detail: detail.into() }
     }
+    /// An [`Error::Runtime`]: execution failed deterministically.
     pub fn runtime(m: impl Into<String>) -> Self {
         Error::Runtime(m.into())
     }
+    /// An [`Error::Transient`]: a retryable infrastructure failure.
     pub fn transient(m: impl Into<String>) -> Self {
         Error::Transient(m.into())
     }
+    /// An [`Error::WorkerLost`]: a serving worker died with this
+    /// request in flight (retryable).
     pub fn worker_lost(m: impl Into<String>) -> Self {
         Error::WorkerLost(m.into())
     }
@@ -144,6 +154,35 @@ impl Error {
         detail: impl Into<String>,
     ) -> Self {
         Error::Protocol { rank: rank.into(), instr: instr.into(), detail: detail.into() }
+    }
+
+    /// Duplicate an error so one batch-level failure can be fanned out
+    /// to every member of a coalesced batch (the serving layer fulfills
+    /// each ticket individually).  `Error` cannot be `Clone` because
+    /// [`Error::Io`] wraps a `std::io::Error`; that variant is
+    /// duplicated lossily (kind + message preserved, source chain
+    /// dropped), every other variant copies exactly.
+    pub(crate) fn duplicate(&self) -> Self {
+        match self {
+            Error::Parse(m) => Error::Parse(m.clone()),
+            Error::Shape(m) => Error::Shape(m.clone()),
+            Error::Plan(m) => Error::Plan(m.clone()),
+            Error::MalformedPlan { term, detail } => {
+                Error::MalformedPlan { term: term.clone(), detail: detail.clone() }
+            }
+            Error::Runtime(m) => Error::Runtime(m.clone()),
+            Error::Io(e) => Error::Io(std::io::Error::new(e.kind(), e.to_string())),
+            Error::Transient(m) => Error::Transient(m.clone()),
+            Error::WorkerLost(m) => Error::WorkerLost(m.clone()),
+            Error::QueueFull => Error::QueueFull,
+            Error::DeadlineExceeded => Error::DeadlineExceeded,
+            Error::ServerShutdown => Error::ServerShutdown,
+            Error::Protocol { rank, instr, detail } => Error::Protocol {
+                rank: *rank,
+                instr: instr.clone(),
+                detail: detail.clone(),
+            },
+        }
     }
 
     /// Whether resubmitting the same request can reasonably succeed.

@@ -3,6 +3,11 @@
 //! Reproduction of *Deinsum: Practically I/O Optimal Multilinear Algebra*
 //! (Ziogas et al., 2022) as a three-layer Rust + JAX + Pallas stack.
 //!
+//! For the end-to-end dataflow narrative (einsum → SOAP planning →
+//! Session/Program → execution backends → serving) see
+//! `docs/ARCHITECTURE.md` in the repository root; every environment
+//! knob is tabulated in `docs/TUNING.md` (completeness CI-enforced).
+//!
 //! The front door is two types ([`api`]): a [`Session`] owning the
 //! kernel engine and an LRU plan cache, and a [`Program`] — an einsum
 //! **compiled once** into an I/O-optimal distributed schedule, owning
@@ -235,9 +240,45 @@
 //! # }
 //! ```
 //!
+//! Since 0.9.0 a coalesced same-key batch is **fused into one batched
+//! execution**: the worker drains the head request plus queued
+//! same-key followers and drives them through
+//! [`Program::run_batch_into`] — per-term engine configuration done
+//! once for the whole batch, shared-`Arc` operands staged once, and
+//! per-member outputs written through each request's own recycled
+//! destination.  Batched results are **bitwise identical** to serving
+//! the same requests back-to-back (same plan, same accumulation
+//! orders — asserted on every backend in `tests/serving.rs`), replies
+//! are fulfilled per ticket, and a shape-invalid member fails typed
+//! without poisoning its batch-mates.  [`ServeStats::batched`] counts
+//! fused members.  The batch entry is a first-class `Program` surface,
+//! usable without a server:
+//!
+//! ```
+//! use deinsum::{BatchRun, Session, Tensor};
+//! # fn main() -> deinsum::Result<()> {
+//! let shapes = vec![vec![12, 10, 8], vec![10, 4], vec![8, 4]];
+//! let session = Session::builder().ranks(4).build()?;
+//! let mut program = session.compile("ijk,ja,ka->ia", &shapes)?;
+//! // Two requests' operands and recycled destinations, one fused run.
+//! let a: Vec<Tensor> =
+//!     shapes.iter().enumerate().map(|(i, s)| Tensor::random(s, i as u64)).collect();
+//! let b: Vec<Tensor> =
+//!     shapes.iter().enumerate().map(|(i, s)| Tensor::random(s, 10 + i as u64)).collect();
+//! let (mut out_a, mut out_b) =
+//!     (Tensor::zeros(&program.output_dims()), Tensor::zeros(&program.output_dims()));
+//! let mut members = vec![BatchRun::new(&a, &mut out_a), BatchRun::new(&b, &mut out_b)];
+//! let results = program.run_batch_into(&mut members)?;
+//! assert!(results.iter().all(|r| r.is_ok())); // one typed Result per member
+//! assert_eq!(program.stats().batch_members, 2);
+//! # Ok(())
+//! # }
+//! ```
+//!
 //! `cargo bench --bench hotpath` tracks serving throughput as
-//! `serve_throughput_1w` / `serve_throughput_8w`, and
-//! `examples/serving.rs` drives a closed-loop mixed MTTKRP/TTMc load.
+//! `serve_throughput_1w` / `serve_throughput_8w` plus the single-key
+//! fused leg `serve_throughput_batched`, and `examples/serving.rs`
+//! drives a closed-loop mixed MTTKRP/TTMc load.
 //!
 //! ## Robustness
 //!
@@ -334,6 +375,10 @@
 //! `tests/fuzz.rs` pins a 64-case corpus, rejection determinism, and
 //! the shrinker contract.
 
+// Every public item must carry documentation; CI's docs job promotes
+// this to a hard error (`RUSTDOCFLAGS: -D missing_docs`).
+#![warn(missing_docs)]
+
 pub mod api;
 pub mod baseline;
 pub mod bench_support;
@@ -356,7 +401,7 @@ mod sync;
 pub mod tensor;
 
 pub use api::{PlanCacheStats, Program, RunStats, Session, SessionBuilder};
-pub use coordinator::{RunMetrics, RunReport};
+pub use coordinator::{BatchRun, RunMetrics, RunReport};
 pub use error::{Error, Result};
 pub use exec::{rank_worker, ExecBackend, Executor};
 pub use fault::{FaultKind, FaultPlan};

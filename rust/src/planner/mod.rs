@@ -78,6 +78,7 @@ pub struct TermPlan {
     pub name: String,
     /// Term iteration indices (sorted) and extents.
     pub indices: Vec<char>,
+    /// Extent of each iteration index, in `indices` order.
     pub extents: Vec<usize>,
     /// The Cartesian process grid over `indices`.
     pub grid: ProcessGrid,
@@ -87,7 +88,9 @@ pub struct TermPlan {
     pub inputs: Vec<TermInput>,
     /// Output tensor id, index string, distribution.
     pub output_id: usize,
+    /// Output index letters, in storage order.
     pub output_indices: Vec<char>,
+    /// Output block distribution on this term's grid.
     pub output_dist: TensorDist,
     /// Grid dims over contracted indices (P_d > 1 ⇒ Allreduce needed).
     pub reduced_grid_dims: Vec<usize>,
@@ -154,16 +157,22 @@ pub struct Move {
     pub to_slot: usize,
     /// Message-matched plan (§V-C).
     pub plan: RedistPlan,
+    /// Distribution the tensor leaves the producing term with.
     pub src: TensorDist,
+    /// Distribution the consuming term expects.
     pub dst: TensorDist,
 }
 
 /// A complete distributed schedule.
 #[derive(Debug, Clone)]
 pub struct Plan {
+    /// The parsed, validated einsum specification.
     pub spec: EinsumSpec,
+    /// FLOP-minimal binary decomposition driving the term order.
     pub path: Path,
+    /// One scheduled term per fused group, in execution order.
     pub terms: Vec<TermPlan>,
+    /// Inter-term redistributions, message-matched.
     pub moves: Vec<Move>,
     /// Rank count.
     pub p: usize,

@@ -95,6 +95,7 @@ impl Message {
 /// the tensor's element count.
 #[derive(Debug, Clone)]
 pub struct RedistPlan {
+    /// Every point-to-point message, in deterministic rank order.
     pub messages: Vec<Message>,
     /// Total elements moved rank-to-rank (excluding src==dst local copies).
     pub remote_volume: usize,

@@ -12,33 +12,44 @@ use crate::error::{Error, Result};
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// JSON `null`.
     Null,
+    /// JSON `true`/`false`.
     Bool(bool),
+    /// JSON number (always carried as `f64`).
     Num(f64),
+    /// JSON string.
     Str(String),
+    /// JSON array.
     Arr(Vec<Value>),
+    /// JSON object (key-sorted for deterministic traversal).
     Obj(BTreeMap<String, Value>),
 }
 
 impl Value {
+    /// The string payload, if this is a [`Value::Str`].
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// The number as a `usize`, if this is a non-negative integral
+    /// [`Value::Num`].
     pub fn as_usize(&self) -> Option<usize> {
         match self {
             Value::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as usize),
             _ => None,
         }
     }
+    /// The elements, if this is a [`Value::Arr`].
     pub fn as_arr(&self) -> Option<&[Value]> {
         match self {
             Value::Arr(v) => Some(v),
             _ => None,
         }
     }
+    /// The key-value map, if this is a [`Value::Obj`].
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Value>> {
         match self {
             Value::Obj(m) => Some(m),

@@ -40,22 +40,38 @@ use crate::tensor::{contract, Tensor};
 /// One AOT-lowered kernel variant (an entry of `manifest.json`).
 #[derive(Debug, Clone)]
 pub struct Variant {
+    /// Unique variant name (dispatch key).
     pub name: String,
+    /// Kernel family (`"einsum2"`, `"mttkrp"`, ...).
     pub op: String,
+    /// Element dtype the artifact was lowered for (`"f32"`).
     pub dtype: String,
+    /// Artifact file name relative to the artifacts directory.
     pub file: String,
+    /// Content hash used to verify the artifact on load.
     pub sha256: String,
+    /// Exact input shapes the artifact was specialized to.
     pub inputs: Vec<Vec<usize>>,
+    /// Exact output shape.
     pub output: Vec<usize>,
     // op-specific metadata
+    /// Tensor extents (MTTKRP-family variants).
     pub dims: Option<Vec<usize>>,
+    /// Factor rank R (MTTKRP-family variants).
     pub r: Option<usize>,
+    /// GEMM rows M.
     pub m: Option<usize>,
+    /// GEMM shared dimension K.
     pub k: Option<usize>,
+    /// GEMM columns N.
     pub n: Option<usize>,
+    /// First free-index extent (einsum2 variants).
     pub i0: Option<usize>,
+    /// Second free-index extent (einsum2 variants).
     pub i1: Option<usize>,
+    /// Reduced-index extents (einsum2 variants).
     pub rs: Option<Vec<usize>>,
+    /// Contracted mode (MTTKRP-family variants).
     pub mode: Option<usize>,
 }
 
@@ -102,7 +118,9 @@ impl Variant {
 /// The artifact index written by `python -m compile.aot`.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Manifest schema tag (`"deinsum-aot-v1"`).
     pub format: String,
+    /// Every lowered kernel variant in the artifacts directory.
     pub variants: Vec<Variant>,
 }
 
@@ -171,10 +189,12 @@ impl Engine {
         })
     }
 
+    /// The loaded artifact index.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
+    /// Dispatch counters (PJRT vs native fallback executions).
     pub fn stats(&self) -> EngineStats {
         sync::lock(&self.stats).clone()
     }
@@ -375,6 +395,7 @@ impl KernelEngine {
         })
     }
 
+    /// Which local-kernel backend this engine dispatches to.
     pub fn backend(&self) -> Backend {
         self.backend
     }
@@ -454,6 +475,8 @@ impl KernelEngine {
         self.scratch.stats()
     }
 
+    /// Dispatch counters of the underlying PJRT engine (zeros when
+    /// running purely native).
     pub fn stats(&self) -> EngineStats {
         self.engine.as_ref().map(|e| e.stats()).unwrap_or_default()
     }

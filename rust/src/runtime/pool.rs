@@ -274,6 +274,7 @@ impl WorkerPool {
         }
     }
 
+    /// Lifetime counters (jobs, tasks, steals, workers) for the pool.
     pub fn stats(&self) -> PoolStats {
         let workers = sync::lock(&self.shared.state).workers;
         PoolStats {

@@ -21,8 +21,22 @@
 //!   tensor allocations, counter-asserted in `tests/serving.rs`);
 //! - queued requests with the *same* key are **coalesced**: the worker
 //!   pops the head of its queue plus every same-key request behind it
-//!   (up to [`COALESCE_MAX`]) and serves them back-to-back on the warm
-//!   program, amortizing per-program staging and term configuration;
+//!   (up to [`COALESCE_MAX`]);
+//! - a coalesced batch of two or more is then **fused into one batched
+//!   execution** through [`Program::run_batch_into`]: the whole batch
+//!   pays one per-term engine configuration (and one staging pass for
+//!   operands the members share — closed-loop clients submitting one
+//!   `Arc`'d input set stage it once for the entire batch) instead of
+//!   once per request.  Results are bitwise identical to serving the
+//!   batch back-to-back with `run_into`, on every backend and at every
+//!   thread count, because each member drives exactly the serial path's
+//!   kernel sequence against its own recycled buffer set.  Per-ticket
+//!   replies are still fulfilled individually: a member that fails
+//!   admission (e.g. a shape-invalid destination) gets its own typed
+//!   error while its batch-mates complete normally.  Every member of a
+//!   fused batch is counted in [`ServeStats::batched`]; ordering within
+//!   the batch is submission order, and the latency cost of riding in a
+//!   batch is bounded by [`COALESCE_MAX`];
 //! - each worker's queue is **bounded** ([`ServerBuilder::queue_capacity`]):
 //!   a full queue blocks [`Server::submit`] until the worker drains —
 //!   natural backpressure instead of unbounded memory growth;
@@ -109,7 +123,7 @@ use std::sync::{Arc, Condvar, Mutex, Weak};
 use std::time::{Duration, Instant};
 
 use crate::api::{Program, Session};
-use crate::coordinator::RunMetrics;
+use crate::coordinator::{BatchRun, RunMetrics};
 use crate::einsum::EinsumSpec;
 use crate::error::{Error, Result};
 use crate::fault::{self, Faults};
@@ -200,6 +214,12 @@ pub struct ServeStats {
     /// Requests served as part of a same-key batch behind a leader
     /// (each coalesced batch of `n` counts `n - 1`).
     pub coalesced: u64,
+    /// Requests executed through the fused batched path
+    /// ([`Program::run_batch_into`]) — every member of a fused batch
+    /// counts, the leader included, so a batch of `n` counts `n`.
+    /// Requests served one-at-a-time (no same-key follower was queued)
+    /// are not counted here even when they were marked `coalesced`.
+    pub batched: u64,
     /// Requests that found their program warm on the owning worker.
     pub program_hits: u64,
     /// Requests that had to construct (compile or re-instantiate) a
@@ -253,6 +273,7 @@ struct Acc {
     completed: u64,
     errors: u64,
     coalesced: u64,
+    batched: u64,
     program_hits: u64,
     program_misses: u64,
     shed: u64,
@@ -294,6 +315,7 @@ impl Acc {
             completed: self.completed,
             errors: self.errors,
             coalesced: self.coalesced,
+            batched: self.batched,
             program_hits: self.program_hits,
             program_misses: self.program_misses,
             shed: self.shed,
@@ -314,6 +336,7 @@ struct Frozen {
     completed: u64,
     errors: u64,
     coalesced: u64,
+    batched: u64,
     program_hits: u64,
     program_misses: u64,
     shed: u64,
@@ -349,6 +372,7 @@ impl Frozen {
             in_flight: self.submitted.saturating_sub(self.completed + self.errors),
             queue_depth,
             coalesced: self.coalesced,
+            batched: self.batched,
             program_hits: self.program_hits,
             program_misses: self.program_misses,
             shed: self.shed,
@@ -536,6 +560,8 @@ struct DoneNote {
     /// in a dying worker) so hit/miss accounting stays exact.
     lookup: Option<bool>,
     coalesced: bool,
+    /// Executed through the fused batched path (`run_batch_into`).
+    batched: bool,
     allocs: u64,
     reuses: u64,
     /// Also count a deadline expiry.
@@ -624,6 +650,9 @@ impl Shared {
             }
             if d.coalesced {
                 acc.coalesced += 1;
+            }
+            if d.batched {
+                acc.batched += 1;
             }
             if d.timeout {
                 acc.timeouts += 1;
@@ -1006,6 +1035,7 @@ fn triage_after_crash(shared: &Shared, w: usize, pending: &mut VecDeque<Request>
                     ok: false,
                     lookup: None,
                     coalesced: req.coalesced,
+                    batched: false,
                     allocs: 0,
                     reuses: 0,
                     timeout: false,
@@ -1041,7 +1071,14 @@ fn worker_serve(shared: &Shared, w: usize, pending: &mut VecDeque<Request>) {
         // this incarnation with requests in hand — exactly the scenario
         // supervision + triage exists for.
         shared.faults.check_abort(fault::site::SERVE_WORKER);
-        serve_front(shared, pending, &mut warm);
+        // `pending` only ever holds one coalesced same-key batch (refills
+        // happen strictly on empty), so two or more requests dispatch as
+        // one fused batched execution.
+        if pending.len() > 1 {
+            serve_batch(shared, pending, &mut warm);
+        } else {
+            serve_front(shared, pending, &mut warm);
+        }
     }
 }
 
@@ -1070,6 +1107,7 @@ fn serve_front(
                 ok: false,
                 lookup: None,
                 coalesced: req.coalesced,
+                batched: false,
                 allocs: 0,
                 reuses: 0,
                 timeout: true,
@@ -1080,52 +1118,29 @@ fn serve_front(
     }
 
     let key = pending.front().expect("checked above").key.clone();
-    // Warm lookup, else compile under containment: a planner panic (or
-    // the injector's `serve.compile` site) must cost one request a typed
-    // error, not the worker thread — and compile failures are
-    // deterministic, so they are NEVER retried.
-    let (mut prog, hit) = match warm.iter().position(|(k, _)| *k == key) {
-        Some(pos) => (warm.remove(pos).1, true),
-        None => {
-            let compiled = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                shared.faults.check(fault::site::SERVE_COMPILE)?;
-                shared.session.compile(&key.expr, &key.shapes)
-            }))
-            .unwrap_or_else(|_| {
-                Err(Error::runtime(format!("planning {} panicked", key.expr)))
-            });
-            match compiled {
-                Ok(program) => {
-                    let st = program.stats();
-                    let wp = WarmProgram {
-                        program,
-                        allocs_seen: st.tensor_allocs(),
-                        reuses_seen: st.tensor_reuses(),
-                    };
-                    (wp, false)
-                }
-                Err(e) => {
-                    let req = pending.pop_front().expect("checked above");
-                    let latency_s = req.submitted.elapsed().as_secs_f64();
-                    shared.note_done(
-                        &req.tenant,
-                        DoneNote {
-                            latency_s,
-                            ok: false,
-                            lookup: Some(false),
-                            coalesced: req.coalesced,
-                            allocs: 0,
-                            reuses: 0,
-                            timeout: false,
-                        },
-                    );
-                    // Deliver the planner's error as-is: clients match on
-                    // the typed variant (Shape vs Plan vs Runtime) to
-                    // tell bad requests from server faults.
-                    req.reply.fulfill(Err(e));
-                    return;
-                }
-            }
+    let (mut prog, hit) = match acquire_program(shared, warm, &key) {
+        Ok(p) => p,
+        Err(e) => {
+            let req = pending.pop_front().expect("checked above");
+            let latency_s = req.submitted.elapsed().as_secs_f64();
+            shared.note_done(
+                &req.tenant,
+                DoneNote {
+                    latency_s,
+                    ok: false,
+                    lookup: Some(false),
+                    coalesced: req.coalesced,
+                    batched: false,
+                    allocs: 0,
+                    reuses: 0,
+                    timeout: false,
+                },
+            );
+            // Deliver the planner's error as-is: clients match on the
+            // typed variant (Shape vs Plan vs Runtime) to tell bad
+            // requests from server faults.
+            req.reply.fulfill(Err(e));
+            return;
         }
     };
 
@@ -1168,6 +1183,7 @@ fn serve_front(
                             ok,
                             lookup: Some(hit),
                             coalesced: req.coalesced,
+                            batched: false,
                             allocs,
                             reuses,
                             timeout: false,
@@ -1204,6 +1220,7 @@ fn serve_front(
                         ok: false,
                         lookup: Some(hit),
                         coalesced: req.coalesced,
+                        batched: false,
                         allocs: 0,
                         reuses: 0,
                         timeout: false,
@@ -1216,6 +1233,272 @@ fn serve_front(
             }
         }
     }
+}
+
+/// Take the warm program for `key` out of the LRU, or compile one under
+/// containment: a planner panic (or the injector's `serve.compile` site)
+/// must cost the requester a typed error, not the worker thread — and
+/// compile failures are deterministic, so they are NEVER retried.
+/// Returns the program plus whether it was a warm hit.
+fn acquire_program(
+    shared: &Shared,
+    warm: &mut Vec<(ProgramKey, WarmProgram)>,
+    key: &ProgramKey,
+) -> Result<(WarmProgram, bool)> {
+    if let Some(pos) = warm.iter().position(|(k, _)| k == key) {
+        return Ok((warm.remove(pos).1, true));
+    }
+    let compiled = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        shared.faults.check(fault::site::SERVE_COMPILE)?;
+        shared.session.compile(&key.expr, &key.shapes)
+    }))
+    .unwrap_or_else(|_| Err(Error::runtime(format!("planning {} panicked", key.expr))));
+    compiled.map(|program| {
+        let st = program.stats();
+        let wp = WarmProgram {
+            program,
+            allocs_seen: st.tensor_allocs(),
+            reuses_seen: st.tensor_reuses(),
+        };
+        (wp, false)
+    })
+}
+
+/// Serve a coalesced same-key batch of two or more requests through one
+/// fused [`Program::run_batch_into`] execution.  Per-ticket semantics
+/// are unchanged from [`serve_front`]: every member's reply is fulfilled
+/// individually (its own [`RunMetrics`] on success, its own typed error
+/// on a per-member admission failure), deadline-expired members are
+/// failed before any work is spent, and a batch-level failure is retried
+/// against each member's own budget or fanned out typed.  The batch's
+/// whole-run allocation delta is attributed to its leader's
+/// [`DoneNote`], so the steady-state `tensor_allocs`-flat invariant is
+/// asserted across the batched path exactly as for serial serving.
+fn serve_batch(
+    shared: &Shared,
+    pending: &mut VecDeque<Request>,
+    warm: &mut Vec<(ProgramKey, WarmProgram)>,
+) {
+    // Deadline sweep first: don't stage operands for a request nobody is
+    // waiting for anymore (an expired member anywhere in the batch).
+    let now = Instant::now();
+    let mut i = 0;
+    while i < pending.len() {
+        if pending[i].deadline.is_some_and(|d| now >= d) {
+            let req = pending.remove(i).expect("index checked");
+            let latency_s = req.submitted.elapsed().as_secs_f64();
+            shared.note_done(
+                &req.tenant,
+                DoneNote {
+                    latency_s,
+                    ok: false,
+                    lookup: None,
+                    coalesced: req.coalesced,
+                    batched: false,
+                    allocs: 0,
+                    reuses: 0,
+                    timeout: true,
+                },
+            );
+            req.reply.fulfill(Err(Error::DeadlineExceeded));
+        } else {
+            i += 1;
+        }
+    }
+    if pending.len() <= 1 {
+        if !pending.is_empty() {
+            serve_front(shared, pending, warm);
+        }
+        return;
+    }
+
+    let key = pending.front().expect("length checked").key.clone();
+    debug_assert!(
+        pending.iter().all(|r| r.key == key),
+        "a worker's pending set must be one coalesced same-key batch"
+    );
+    let (mut prog, hit) = match acquire_program(shared, warm, &key) {
+        Ok(p) => p,
+        Err(e) => {
+            // A compile failure is deterministic for the whole same-key
+            // batch: fail every member typed, never retry any of them.
+            while let Some(req) = pending.pop_front() {
+                let latency_s = req.submitted.elapsed().as_secs_f64();
+                shared.note_done(
+                    &req.tenant,
+                    DoneNote {
+                        latency_s,
+                        ok: false,
+                        lookup: Some(false),
+                        coalesced: req.coalesced,
+                        batched: false,
+                        allocs: 0,
+                        reuses: 0,
+                        timeout: false,
+                    },
+                );
+                req.reply.fulfill(Err(e.duplicate()));
+            }
+            return;
+        }
+    };
+
+    // Run the fused batch under containment.  The requests stay in
+    // `pending` (served through disjoint `&mut` borrows), so an
+    // uncontained crash mid-batch still finds all of them for triage.
+    let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+        || -> Result<Vec<Result<RunMetrics>>> {
+            shared.faults.check(fault::site::SERVE_RUN)?;
+            let mut members: Vec<BatchRun<'_>> = pending
+                .iter_mut()
+                .map(|r| BatchRun::new(&r.inputs, &mut r.dest))
+                .collect();
+            prog.program.run_batch_into(&mut members)
+        },
+    ));
+    match run {
+        Ok(run_result) => {
+            // Typed result either way: the program's state is consistent,
+            // it goes back in the LRU.  The whole batch's alloc delta is
+            // attributed to the leader (member buffers are per-member,
+            // but staging dedup makes the split member-dependent —
+            // aggregate accounting is the honest number).
+            let st = prog.program.stats();
+            let allocs = st.tensor_allocs() - prog.allocs_seen;
+            let reuses = st.tensor_reuses() - prog.reuses_seen;
+            prog.allocs_seen = st.tensor_allocs();
+            prog.reuses_seen = st.tensor_reuses();
+            match run_result {
+                Ok(results) => {
+                    debug_assert_eq!(results.len(), pending.len());
+                    let mut first = true;
+                    for result in results {
+                        let Some(req) = pending.pop_front() else { break };
+                        let latency_s = req.submitted.elapsed().as_secs_f64();
+                        shared.note_done(
+                            &req.tenant,
+                            DoneNote {
+                                latency_s,
+                                ok: result.is_ok(),
+                                // Followers always find the program in
+                                // hand — their lookup is a hit.
+                                lookup: Some(if first { hit } else { true }),
+                                coalesced: req.coalesced,
+                                batched: true,
+                                allocs: if first { allocs } else { 0 },
+                                reuses: if first { reuses } else { 0 },
+                                timeout: false,
+                            },
+                        );
+                        first = false;
+                        match result {
+                            Ok(metrics) => req.reply.fulfill(Ok(ServeReply {
+                                output: req.dest,
+                                metrics,
+                                latency_s,
+                            })),
+                            // Per-member admission failure (e.g. a
+                            // shape-invalid dest): deterministic, typed,
+                            // batch-mates unaffected.
+                            Err(e) => req.reply.fulfill(Err(e)),
+                        }
+                    }
+                    reinsert_warm(shared, warm, key, prog);
+                }
+                Err(e) if e.is_retryable() => {
+                    // Batch-level positional failure: no member completed.
+                    // Members with retry budget stay queued; the rest fail
+                    // with a copy of the batch error.
+                    reinsert_warm(shared, warm, key, prog);
+                    let max_attempts =
+                        retry_or_fail_batch(shared, pending, hit, |_| e.duplicate());
+                    if max_attempts > 0 {
+                        retry_backoff(max_attempts);
+                    }
+                }
+                Err(e) => {
+                    // Deterministic batch-level failure: fan out typed.
+                    reinsert_warm(shared, warm, key, prog);
+                    let mut first = true;
+                    while let Some(req) = pending.pop_front() {
+                        let latency_s = req.submitted.elapsed().as_secs_f64();
+                        shared.note_done(
+                            &req.tenant,
+                            DoneNote {
+                                latency_s,
+                                ok: false,
+                                lookup: Some(if first { hit } else { true }),
+                                coalesced: req.coalesced,
+                                batched: true,
+                                allocs: if first { allocs } else { 0 },
+                                reuses: if first { reuses } else { 0 },
+                                timeout: false,
+                            },
+                        );
+                        first = false;
+                        req.reply.fulfill(Err(e.duplicate()));
+                    }
+                }
+            }
+        }
+        Err(_panic) => {
+            // Contained run panic mid-batch: the program may be
+            // inconsistent — drop it (the next attempt re-instantiates
+            // from the cached plan).  Positional failure: per-member
+            // retry budget, like serve_front.
+            let max_attempts = retry_or_fail_batch(shared, pending, hit, |_| {
+                Error::runtime(format!(
+                    "serving {} panicked; program state dropped, retry budget exhausted",
+                    key.expr
+                ))
+            });
+            if max_attempts > 0 {
+                retry_backoff(max_attempts);
+            }
+        }
+    }
+}
+
+/// Batch-level failure triage: every member with retry budget left stays
+/// queued with one more attempt consumed (and `retries` counted); the
+/// rest are failed with `err_for`'s typed error.  Returns the largest
+/// attempt count bumped (`0` when every member was failed) so the caller
+/// can back off before the re-attempt.
+fn retry_or_fail_batch(
+    shared: &Shared,
+    pending: &mut VecDeque<Request>,
+    hit: bool,
+    mut err_for: impl FnMut(&Request) -> Error,
+) -> u32 {
+    let mut max_attempts = 0;
+    let mut i = 0;
+    while i < pending.len() {
+        if pending[i].attempts < shared.max_retries {
+            pending[i].attempts += 1;
+            max_attempts = max_attempts.max(pending[i].attempts);
+            shared.note_retry(&pending[i].tenant);
+            i += 1;
+        } else {
+            let req = pending.remove(i).expect("index checked");
+            let latency_s = req.submitted.elapsed().as_secs_f64();
+            shared.note_done(
+                &req.tenant,
+                DoneNote {
+                    latency_s,
+                    ok: false,
+                    lookup: Some(hit),
+                    coalesced: req.coalesced,
+                    batched: true,
+                    allocs: 0,
+                    reuses: 0,
+                    timeout: false,
+                },
+            );
+            let e = err_for(&req);
+            req.reply.fulfill(Err(e));
+        }
+    }
+    max_attempts
 }
 
 /// Return a program to the warm LRU as MRU, evicting the LRU entry at

@@ -37,6 +37,7 @@ pub struct TimeBreakdown {
 }
 
 impl TimeBreakdown {
+    /// Compute plus communication seconds.
     pub fn total(&self) -> f64 {
         self.compute + self.comm
     }
@@ -94,6 +95,7 @@ pub struct Machine {
     store_stats: StoreStats,
     /// Totals.
     pub time: TimeBreakdown,
+    /// Cumulative communication-volume counters.
     pub comm: CommStats,
 }
 
@@ -111,10 +113,12 @@ impl Machine {
         }
     }
 
+    /// Number of simulated ranks.
     pub fn ranks(&self) -> usize {
         self.ranks
     }
 
+    /// The interconnect cost model collectives are priced with.
     pub fn network(&self) -> &NetworkModel {
         &self.net
     }

@@ -232,6 +232,7 @@ impl Default for ScratchPool {
 }
 
 impl ScratchPool {
+    /// An empty pool: every size class starts with no cached buffers.
     pub fn new() -> Self {
         ScratchPool {
             free: std::array::from_fn(|_| Mutex::new(Vec::new())),
@@ -285,6 +286,8 @@ impl ScratchPool {
         b
     }
 
+    /// Reuse counters: `allocs` must stay flat once warm (the
+    /// steady-state invariant tests and the bench gate assert).
     pub fn stats(&self) -> ScratchStats {
         ScratchStats {
             allocs: self.allocs.load(Ordering::Relaxed),
@@ -380,6 +383,76 @@ pub fn gemm_strided(
         serial_gemm(cfg, pool, a, lda, b, ldb, c, ldc, m, k, n);
     } else {
         shared_pack_gemm(cfg, pool, threads, a, lda, b, ldb, c, ldc, m, k, n);
+    }
+}
+
+/// One member of a shared-B batched GEMM: its `A` operand and the `C`
+/// buffer it accumulates into (row-major `m×k` / `m×n`, shapes shared by
+/// the whole batch).
+pub struct GemmBatchMember<'a> {
+    /// Row-major `A[m×k]`.
+    pub a: &'a [f32],
+    /// Row-major `C[m×n]`, accumulated into in place.
+    pub c: &'a mut [f32],
+}
+
+/// Batched `C_i += A_i · B` over one **shared** `B[k×n]`: each `KC×NC`
+/// panel of `B` is packed exactly once and reused by every batch member,
+/// so a batch of `B` members pays `1/B`-th of the back-to-back path's
+/// B-packing traffic.  This is the kernel-level lever behind the serving
+/// layer's fused same-key batches, applicable whenever the batch shares
+/// the stationary operand (coalesced serving requests submitting one
+/// `Arc`'d input set, CP-ALS sweeps re-contracting one factor).
+///
+/// Bitwise identical to calling [`gemm_into_with`] once per member: the
+/// macro-loop walk (`jc → pc → ic`, ascending), the packed panel bytes,
+/// and the full-`kcb` register accumulation are exactly the serial
+/// path's — and that path's per-element accumulation order is
+/// thread-count independent — so hoisting the B pack out of the member
+/// loop cannot change any member's bytes (pinned in tests).
+pub fn gemm_batch_shared_b_with(
+    cfg: &KernelConfig,
+    pool: &ScratchPool,
+    members: &mut [GemmBatchMember<'_>],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    if m == 0 || n == 0 || k == 0 || members.is_empty() {
+        return;
+    }
+    debug_assert!(b.len() >= k * n);
+    let cfg = cfg.normalized().clamp_to(m, k, n);
+    let mut apack = pool.take(cfg.mc * cfg.kc);
+    let mut bpack = pool.take(cfg.kc * cfg.nc);
+    let mut jc = 0usize;
+    while jc < n {
+        let ncb = cfg.nc.min(n - jc);
+        let mut pc = 0usize;
+        while pc < k {
+            let kcb = cfg.kc.min(k - pc);
+            // The batch's saving: one B pack serves every member.
+            pack_b_strips(b, n, pc, kcb, jc, ncb, 0, ncb.div_ceil(NR), &mut bpack);
+            for member in members.iter_mut() {
+                debug_assert!(member.a.len() >= m * k);
+                debug_assert!(member.c.len() >= m * n);
+                let cptr = member.c.as_mut_ptr();
+                let mut ic = 0usize;
+                while ic < m {
+                    let mcb = cfg.mc.min(m - ic);
+                    pack_a(member.a, k, ic, mcb, pc, kcb, &mut apack);
+                    // SAFETY: serial — this call exclusively owns all of
+                    // this member's C.
+                    unsafe {
+                        macro_tile(&apack, &bpack, cptr, n, ic, mcb, jc, kcb, 0, ncb);
+                    }
+                    ic += mcb;
+                }
+            }
+            pc += kcb;
+        }
+        jc += ncb;
     }
 }
 
@@ -800,6 +873,88 @@ mod tests {
         // Thread split changes which band a row falls into but not the
         // per-row reduction order, so results match to roundoff exactly.
         assert_eq!(c1, c4);
+    }
+
+    #[test]
+    fn batched_shared_b_matches_per_member_serial_bitwise() {
+        // The whole point of the batched entry: hoisting the B pack out
+        // of the member loop must not change a single bit of any member.
+        let pool = ScratchPool::new();
+        let cfg = KernelConfig { mc: 16, kc: 24, nc: 16, threads: 1 }.normalized();
+        for &(m, k, n) in &[(7usize, 5usize, 9usize), (17, 23, 9), (33, 65, 29)] {
+            let b = randv(k * n, 99);
+            let a_list: Vec<Vec<f32>> =
+                (0..3u64).map(|i| randv(m * k, 200 + i)).collect();
+            let want: Vec<Vec<f32>> = a_list
+                .iter()
+                .map(|a| {
+                    let mut c = vec![0.0f32; m * n];
+                    gemm_into_with(&cfg, &pool, a, &b, &mut c, m, k, n);
+                    c
+                })
+                .collect();
+            let mut c_list: Vec<Vec<f32>> = vec![vec![0.0f32; m * n]; a_list.len()];
+            let mut members: Vec<GemmBatchMember> = a_list
+                .iter()
+                .zip(c_list.iter_mut())
+                .map(|(a, c)| GemmBatchMember { a, c })
+                .collect();
+            gemm_batch_shared_b_with(&cfg, &pool, &mut members, &b, m, k, n);
+            drop(members);
+            assert_eq!(c_list, want, "({m},{k},{n}) batched != serial");
+        }
+    }
+
+    #[test]
+    fn batched_shared_b_accumulates_and_handles_degenerates() {
+        let pool = ScratchPool::new();
+        let cfg = KernelConfig::default().serial();
+        let a = vec![1.0f32; 4];
+        let b = vec![1.0f32; 4];
+        let mut c0 = vec![10.0f32; 4];
+        let mut c1 = vec![0.0f32; 4];
+        {
+            let mut members = vec![
+                GemmBatchMember { a: &a, c: &mut c0 },
+                GemmBatchMember { a: &a, c: &mut c1 },
+            ];
+            gemm_batch_shared_b_with(&cfg, &pool, &mut members, &b, 2, 2, 2);
+        }
+        assert_eq!(c0, vec![12.0; 4], "accumulates like gemm_into_with");
+        assert_eq!(c1, vec![2.0; 4]);
+        // Empty batches and degenerate dims are no-ops.
+        gemm_batch_shared_b_with(&cfg, &pool, &mut [], &b, 2, 2, 2);
+        let mut c = vec![1.0f32; 4];
+        {
+            let mut members = vec![GemmBatchMember { a: &a, c: &mut c }];
+            gemm_batch_shared_b_with(&cfg, &pool, &mut members, &b, 0, 2, 2);
+        }
+        assert_eq!(c, vec![1.0; 4]);
+    }
+
+    #[test]
+    fn batched_shared_b_steady_state_is_alloc_free() {
+        let pool = ScratchPool::new();
+        let cfg = KernelConfig { mc: 16, kc: 16, nc: 16, threads: 1 }.normalized();
+        let (m, k, n) = (24usize, 24usize, 24usize);
+        let b = randv(k * n, 5);
+        let a0 = randv(m * k, 6);
+        let a1 = randv(m * k, 7);
+        let mut c0 = vec![0.0f32; m * n];
+        let mut c1 = vec![0.0f32; m * n];
+        let run = |pool: &ScratchPool, c0: &mut [f32], c1: &mut [f32]| {
+            let mut members = vec![
+                GemmBatchMember { a: &a0, c: c0 },
+                GemmBatchMember { a: &a1, c: c1 },
+            ];
+            gemm_batch_shared_b_with(&cfg, pool, &mut members, &b, m, k, n);
+        };
+        run(&pool, &mut c0, &mut c1); // warmup populates the pool
+        let warm = pool.stats().allocs;
+        for _ in 0..5 {
+            run(&pool, &mut c0, &mut c1);
+        }
+        assert_eq!(pool.stats().allocs, warm, "batched gemm steady state allocated");
     }
 
     #[test]

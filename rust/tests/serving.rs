@@ -335,6 +335,226 @@ fn bounded_queue_applies_backpressure_without_losing_requests() {
 }
 
 #[test]
+fn coalesced_batch_is_bitwise_identical_to_serial_runs_with_flat_allocs() {
+    // The batched-serving acceptance pin: a single worker is pinned on a
+    // deliberately heavy "blocker" request while a burst of same-key
+    // requests (distinct inputs each) queues behind it, so the next
+    // drain coalesces the burst and serves it through the fused
+    // `run_batch_into` path.  Every reply must be bitwise identical to a
+    // serial `run_into` reference, the fused path must actually engage
+    // (`ServeStats::batched`), and once warm the batched path must
+    // perform zero tensor allocations per round.
+    let blocker_expr = "ij,jk,kl->il";
+    let blocker_shapes = vec![vec![192, 192], vec![192, 192], vec![192, 192]];
+    let expr = "ijk,ja,ka->ia";
+    let shapes = vec![vec![12, 10, 8], vec![10, 4], vec![8, 4]];
+    let burst = 8usize;
+    let rounds = 6usize;
+
+    // Per-member serial references (distinct inputs per member) from an
+    // independent, identically-configured session.
+    let member_inputs: Vec<Arc<Vec<Tensor>>> =
+        (0..burst).map(|k| inputs_for(&shapes, 9000 + 10 * k as u64)).collect();
+    let blocker_inputs = inputs_for(&blocker_shapes, 8700);
+    let reference: Vec<Tensor> = {
+        let s = Session::builder().ranks(4).build().unwrap();
+        let mut prog = s.compile(expr, &shapes).unwrap();
+        member_inputs
+            .iter()
+            .map(|ins| {
+                let mut out = Tensor::zeros(&prog.output_dims());
+                prog.run_into(ins, &mut out).unwrap();
+                out
+            })
+            .collect()
+    };
+
+    let session = Session::builder().ranks(4).build().unwrap();
+    let server = Server::builder(session).workers(1).queue_capacity(32).build();
+    let chaos = faults_active();
+    let wait_one = |ticket: deinsum::Ticket| -> Option<deinsum::ServeReply> {
+        match ticket.wait() {
+            Ok(reply) => Some(reply),
+            Err(e) if chaos && e.is_retryable() => None,
+            Err(e) => panic!("request failed outside injected-fault classes: {e}"),
+        }
+    };
+
+    let mut warm_allocs = None;
+    for round in 0..rounds {
+        // The blocker occupies the single worker; the burst submitted
+        // behind it lands in the queue together and coalesces.
+        let blocker = server
+            .submit(ServeRequest {
+                tenant: "batch".into(),
+                expr: blocker_expr.into(),
+                shapes: blocker_shapes.clone(),
+                inputs: Arc::clone(&blocker_inputs),
+                dest: Tensor::zeros(
+                    &Server::output_dims(blocker_expr, &blocker_shapes).unwrap(),
+                ),
+            })
+            .unwrap();
+        let tickets: Vec<deinsum::Ticket> = member_inputs
+            .iter()
+            .map(|ins| {
+                server
+                    .submit(ServeRequest {
+                        tenant: "batch".into(),
+                        expr: expr.into(),
+                        shapes: shapes.clone(),
+                        inputs: Arc::clone(ins),
+                        dest: Tensor::zeros(&Server::output_dims(expr, &shapes).unwrap()),
+                    })
+                    .unwrap()
+            })
+            .collect();
+        wait_one(blocker);
+        for (ticket, want) in tickets.into_iter().zip(&reference) {
+            if let Some(reply) = wait_one(ticket) {
+                assert!(
+                    reply.output.allclose(want, 0.0, 0.0),
+                    "round {round}: batched reply diverged from serial run_into reference"
+                );
+            }
+        }
+        // Allocation fixed point: batch-member buffer sets (`#b1`..) are
+        // sized by the largest batch seen, so once two consecutive
+        // rounds allocate nothing the steady state is reached and every
+        // later round must stay flat.
+        let allocs = server.stats().tensor_allocs;
+        if !chaos && round >= 2 {
+            match warm_allocs {
+                None => warm_allocs = Some(allocs),
+                Some(w) => assert_eq!(
+                    allocs, w,
+                    "round {round}: warm batched serving allocated tensors"
+                ),
+            }
+        }
+    }
+
+    let st = server.stats();
+    assert_eq!(st.submitted, (rounds * (burst + 1)) as u64);
+    assert_eq!(st.completed + st.errors, st.submitted, "zero lost tickets: {st:?}");
+    if !chaos {
+        assert_eq!(st.errors, 0);
+        assert!(
+            st.batched > 0,
+            "blocked same-key bursts never engaged the fused batch path: {st:?}"
+        );
+        assert!(st.coalesced > 0, "followers must be marked coalesced: {st:?}");
+    }
+}
+
+#[test]
+fn mixed_key_traffic_never_mis_batches() {
+    // Interleaved traffic over every key in the mixed workload through a
+    // single worker (maximum coalescing opportunity): fusion may only
+    // group same-key neighbours, so every reply must match its own key's
+    // serial reference — any cross-key grouping would either diverge
+    // bitwise or fail shape validation loudly.
+    let work = mixed_workload();
+    let inputs: Vec<Arc<Vec<Tensor>>> =
+        (0..work.len()).map(|i| inputs_for(&work[i].1, 4200 + 100 * i as u64)).collect();
+    let reference: Vec<Tensor> = {
+        let s = Session::builder().ranks(4).build().unwrap();
+        work.iter()
+            .zip(&inputs)
+            .map(|((expr, shapes), ins)| {
+                s.compile(expr, shapes).unwrap().run(ins).unwrap().output
+            })
+            .collect()
+    };
+
+    let session = Session::builder().ranks(4).build().unwrap();
+    let server = Server::builder(session).workers(1).queue_capacity(64).build();
+    let chaos = faults_active();
+    let mut tickets = Vec::new();
+    for round in 0..4 {
+        // Alternate keys request-by-request, plus doubled submissions on
+        // even rounds so same-key pairs sit adjacent in the queue and
+        // DO fuse — mis-batching would cross keys right next door.
+        for (i, ((expr, shapes), ins)) in work.iter().zip(&inputs).enumerate() {
+            let reps = if round % 2 == 0 { 2 } else { 1 };
+            for _ in 0..reps {
+                let ticket = server
+                    .submit(ServeRequest {
+                        tenant: "mixed".into(),
+                        expr: (*expr).into(),
+                        shapes: shapes.clone(),
+                        inputs: Arc::clone(ins),
+                        dest: Tensor::zeros(&Server::output_dims(expr, shapes).unwrap()),
+                    })
+                    .unwrap();
+                tickets.push((i, ticket));
+            }
+        }
+    }
+    for (i, ticket) in tickets {
+        match ticket.wait() {
+            Ok(reply) => assert!(
+                reply.output.allclose(&reference[i], 0.0, 0.0),
+                "{}: reply diverged from its own key's reference (mis-batch?)",
+                work[i].0
+            ),
+            Err(e) if chaos && e.is_retryable() => {}
+            Err(e) => panic!("request failed outside injected faults: {e}"),
+        }
+    }
+    let st = server.stats();
+    assert_eq!(st.completed + st.errors, st.submitted, "zero lost tickets: {st:?}");
+}
+
+#[test]
+fn shape_invalid_batch_member_fails_typed_without_poisoning_batch_mates() {
+    // Direct `Program::run_batch_into` with a poisoned member: the
+    // shape-invalid dest must fail with a typed `Error::Shape` while its
+    // batch-mates complete bitwise identical to serial references.
+    // (`Server::submit` rejects bad dests at admission, so this seam is
+    // only reachable through the API-level batch entry.)
+    let expr = "ijk,ja,ka->ia";
+    let shapes = vec![vec![12, 10, 8], vec![10, 4], vec![8, 4]];
+    let ins: Vec<Arc<Vec<Tensor>>> =
+        (0..3).map(|k| inputs_for(&shapes, 6400 + 10 * k as u64)).collect();
+    let reference: Vec<Tensor> = {
+        let s = Session::builder().ranks(4).build().unwrap();
+        let mut prog = s.compile(expr, &shapes).unwrap();
+        ins.iter()
+            .map(|i| {
+                let mut out = Tensor::zeros(&prog.output_dims());
+                prog.run_into(i, &mut out).unwrap();
+                out
+            })
+            .collect()
+    };
+
+    let session = Session::builder().ranks(4).build().unwrap();
+    let mut prog = session.compile(expr, &shapes).unwrap();
+    let mut d0 = Tensor::zeros(&prog.output_dims());
+    let mut bad = Tensor::zeros(&[3, 3]); // wrong dims on the middle member
+    let mut d2 = Tensor::zeros(&prog.output_dims());
+    let mut members = vec![
+        deinsum::BatchRun::new(&ins[0], &mut d0),
+        deinsum::BatchRun::new(&ins[1], &mut bad),
+        deinsum::BatchRun::new(&ins[2], &mut d2),
+    ];
+    let results = prog.run_batch_into(&mut members).unwrap();
+    drop(members);
+    assert!(results[0].is_ok());
+    assert!(
+        matches!(results[1], Err(deinsum::Error::Shape(_))),
+        "shape-invalid member must fail typed: {:?}",
+        results[1]
+    );
+    assert!(results[2].is_ok());
+    assert!(d0.allclose(&reference[0], 0.0, 0.0), "member 0 poisoned by invalid mate");
+    assert!(d2.allclose(&reference[2], 0.0, 0.0), "member 2 poisoned by invalid mate");
+    let st = prog.stats();
+    assert_eq!((st.batch_runs, st.batch_members), (1, 3), "{st:?}");
+}
+
+#[test]
 fn programs_can_move_across_threads() {
     // Program: Send — compile on one thread, run on another, hand the
     // result back.  (Compile-time guarantee exercised at runtime.)
